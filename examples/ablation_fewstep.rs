@@ -1,0 +1,58 @@
+//! Few-step ablation example (paper Table 2 shape): SADA under shrinking
+//! step budgets, showing the speedup/fidelity scaling.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example ablation_fewstep
+//! ```
+
+use sada::metrics::{psnr, LpipsRc};
+use sada::pipeline::{decode, GenRequest, NoAccel, Pipeline};
+use sada::runtime::{ModelBackend, Runtime};
+use sada::sada::Sada;
+use sada::solvers::SolverKind;
+use sada::workload::PromptBank;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    rt.preload_model("sd2_tiny")?;
+    let backend = rt.model_backend("sd2_tiny")?;
+    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let bank = PromptBank::load_or_synthetic(std::path::Path::new("artifacts"), rt.manifest.cond_dim);
+    let lpips = LpipsRc::new(3);
+
+    println!("steps | NFE      | speedup | PSNR  | LPIPS");
+    println!("------+----------+---------+-------+------");
+    for steps in [50usize, 25, 15] {
+        let mut sp = 0.0;
+        let mut ps = 0.0;
+        let mut lp = 0.0;
+        let mut nfe = 0;
+        let n = 4;
+        for p in 0..n {
+            let req = GenRequest {
+                cond: bank.get(p).clone(),
+                seed: bank.seed_for(p),
+                guidance: 3.0,
+                steps,
+                edge: None,
+            };
+            let base = pipe.generate(&req, &mut NoAccel)?;
+            let mut accel = Sada::with_default(backend.info(), steps);
+            let fast = pipe.generate(&req, &mut accel)?;
+            let b = decode::finalize(&base.image);
+            let f = decode::finalize(&fast.image);
+            sp += base.stats.wall_ms / fast.stats.wall_ms;
+            ps += psnr(&b, &f);
+            lp += lpips.distance(&b, &f);
+            nfe += fast.stats.nfe;
+        }
+        println!(
+            "{steps:5} | {:4.1}/{steps:<3} | {:6.2}x | {:5.2} | {:.4}",
+            nfe as f64 / n as f64,
+            sp / n as f64,
+            ps / n as f64,
+            lp / n as f64
+        );
+    }
+    Ok(())
+}

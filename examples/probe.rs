@@ -1,0 +1,74 @@
+//! Calibration probe: sweep baseline-method hyperparameters on the real
+//! artifacts to locate paper-shaped operating points (used to pin the
+//! defaults recorded in EXPERIMENTS.md "Method calibration").
+//!
+//! ```bash
+//! cargo run --release --example probe
+//! ```
+
+use sada::baselines::TeaCache;
+use sada::metrics::psnr;
+use sada::pipeline::{decode, GenRequest, NoAccel, Pipeline};
+use sada::runtime::{ModelBackend, Runtime};
+use sada::sada::Sada;
+use sada::solvers::SolverKind;
+use sada::workload::PromptBank;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    rt.preload_model("flux_tiny")?;
+    let backend = rt.model_backend("flux_tiny")?;
+    let pipe = Pipeline::new(&backend, SolverKind::Flow);
+    let bank = PromptBank::load_or_synthetic(std::path::Path::new("artifacts"), 32);
+    println!("== TeaCache tau sweep on flux_tiny (50 steps, 4 prompts) ==");
+    for tau in [0.02f64, 0.05, 0.1, 0.2, 0.4] {
+        let (mut ps, mut nfe, mut bms, mut mms) = (0.0, 0usize, 0.0, 0.0);
+        for p in 0..4 {
+            let req = GenRequest {
+                cond: bank.get(p).clone(),
+                seed: bank.seed_for(p),
+                guidance: 3.0,
+                steps: 50,
+                edge: None,
+            };
+            let base = pipe.generate(&req, &mut NoAccel)?;
+            let mut tc = TeaCache::new(tau);
+            let r = pipe.generate(&req, &mut tc)?;
+            ps += psnr(&decode::finalize(&base.image), &decode::finalize(&r.image));
+            nfe += r.stats.nfe;
+            bms += base.stats.wall_ms;
+            mms += r.stats.wall_ms;
+        }
+        println!(
+            "tau={tau:<5} psnr={:.2} nfe={:.1}/50 speedup={:.2}x",
+            ps / 4.0,
+            nfe as f64 / 4.0,
+            bms / mms
+        );
+    }
+    println!("== SADA reference point on flux_tiny ==");
+    let (mut ps, mut nfe, mut bms, mut mms) = (0.0, 0usize, 0.0, 0.0);
+    for p in 0..4 {
+        let req = GenRequest {
+            cond: bank.get(p).clone(),
+            seed: bank.seed_for(p),
+            guidance: 3.0,
+            steps: 50,
+            edge: None,
+        };
+        let base = pipe.generate(&req, &mut NoAccel)?;
+        let mut s = Sada::with_default(backend.info(), 50);
+        let r = pipe.generate(&req, &mut s)?;
+        ps += psnr(&decode::finalize(&base.image), &decode::finalize(&r.image));
+        nfe += r.stats.nfe;
+        bms += base.stats.wall_ms;
+        mms += r.stats.wall_ms;
+    }
+    println!(
+        "sada  psnr={:.2} nfe={:.1}/50 speedup={:.2}x",
+        ps / 4.0,
+        nfe as f64 / 4.0,
+        bms / mms
+    );
+    Ok(())
+}

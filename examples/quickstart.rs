@@ -1,0 +1,57 @@
+//! Quickstart: generate one sample with and without SADA and compare.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use sada::metrics::{psnr, LpipsRc};
+use sada::pipeline::{decode, GenRequest, NoAccel, Pipeline};
+use sada::runtime::{ModelBackend, Runtime};
+use sada::sada::Sada;
+use sada::solvers::SolverKind;
+use sada::workload::PromptBank;
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the artifact registry (compiled by `make artifacts`)
+    let rt = Runtime::open("artifacts")?;
+    rt.preload_model("sd2_tiny")?;
+    let backend = rt.model_backend("sd2_tiny")?;
+    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+
+    // 2. pick a prompt from the COCO-analog bank
+    let bank = PromptBank::load_or_synthetic(std::path::Path::new("artifacts"), rt.manifest.cond_dim);
+    let req = GenRequest {
+        cond: bank.get(7).clone(),
+        seed: bank.seed_for(7),
+        guidance: 3.0,
+        steps: 50,
+        edge: None,
+    };
+
+    // 3. baseline: 50 full model evaluations
+    let base = pipe.generate(&req, &mut NoAccel)?;
+
+    // 4. SADA: the stability criterion decides per step
+    let mut sada = Sada::with_default(backend.info(), req.steps);
+    let fast = pipe.generate(&req, &mut sada)?;
+
+    let b = decode::finalize(&base.image);
+    let f = decode::finalize(&fast.image);
+    let lpips = LpipsRc::new(3);
+    println!("baseline: NFE {}/50, {:.0} ms", base.stats.nfe, base.stats.wall_ms);
+    println!(
+        "SADA:     NFE {}/50, {:.0} ms  (modes: {})",
+        fast.stats.nfe,
+        fast.stats.wall_ms,
+        fast.stats.mode_trace()
+    );
+    println!(
+        "speedup {:.2}x | PSNR {:.2} dB | LPIPS-RC {:.4}",
+        base.stats.wall_ms / fast.stats.wall_ms,
+        psnr(&b, &f),
+        lpips.distance(&b, &f)
+    );
+    println!("\nbaseline sample:\n{}", decode::ascii_preview(&b, 16, 16));
+    println!("SADA sample:\n{}", decode::ascii_preview(&f, 16, 16));
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! End-to-end serving driver (the mandated E2E validation example).
+//!
+//! Starts the coordinator (router -> dynamic batcher -> PJRT engine), sends
+//! a Poisson request stream against the sd2_tiny model, and reports
+//! latency percentiles + throughput for baseline vs SADA under identical
+//! load. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_batch -- [n] [rate_rps] [steps]
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(3.0);
+    let steps: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(50);
+    sada::exp::serving::run("artifacts", "sd2_tiny", n, rate, steps)
+}

@@ -1,0 +1,255 @@
+"""AOT lowering: JAX model zoo -> HLO text artifacts + manifest.
+
+Runs ONCE at build time (`make artifacts`); python never appears on the
+request path. For every model x variant we close over the trained weights
+(they become HLO constants), lower with jax.jit(...).lower(...), convert the
+StableHLO module to an XlaComputation and dump **HLO text** — not
+`.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids
+which xla_extension 0.5.1 (the version the rust `xla` crate binds) rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Also exports:
+  artifacts/manifest.json   - machine-readable registry the rust runtime loads
+  artifacts/prompts.npy     - the 5000-entry COCO-analog conditioning bank
+  artifacts/music_prompts.npy, artifacts/control_edges.npy
+  artifacts/goldens/        - golden tensors for rust integration tests
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, kernels
+from .model import build_full_fn, build_prune_fn, build_shallow_fn
+from .specs import (
+    BATCH_BUCKETS,
+    BETA_END,
+    BETA_START,
+    COND_DIM,
+    PRUNE_BUCKETS,
+    SPECS,
+    TRAIN_T,
+    ModelSpec,
+)
+from .train import DEFAULT_STEPS, load_params, save_params, train_model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec_list(shapes):
+    return [jax.ShapeDtypeStruct(s, dt) for s, dt in shapes]
+
+
+def _io_entry(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _variant_io(spec: ModelSpec, variant: str, batch: int, n_keep: int = 0):
+    """Input/output signatures, in executable argument order."""
+    h, w, c = spec.img_h, spec.img_w, spec.channels
+    n, d, nb = spec.n_tokens, spec.d, spec.n_blocks
+    ins = [
+        _io_entry("x", (batch, h, w, c), "f32"),
+        _io_entry("t", (batch,), "f32"),
+        _io_entry("cond", (batch, spec.cond_dim), "f32"),
+    ]
+    if spec.has_control:
+        ins.append(_io_entry("edge", (batch, h, w, 1), "f32"))
+    ins.append(_io_entry("gs", (1,), "f32"))
+    outs = [_io_entry("out", (batch, h, w, c), "f32")]
+    if variant == "full":
+        outs.append(_io_entry("deep", (2 * batch, n, d), "f32"))
+        outs.append(_io_entry("caches", (nb, 2 * batch, n, d), "f32"))
+    elif variant == "shallow":
+        ins.append(_io_entry("deep", (2 * batch, n, d), "f32"))
+    elif variant.startswith("prune"):
+        ins.append(_io_entry("keep_idx", (n_keep,), "i32"))
+        ins.append(_io_entry("caches", (nb, 2 * batch, n, d), "f32"))
+        outs.append(_io_entry("caches", (nb, 2 * batch, n, d), "f32"))
+    else:
+        raise ValueError(variant)
+    return ins, outs
+
+
+def _example_args(ins):
+    shapes = []
+    for e in ins:
+        dt = F32 if e["dtype"] == "f32" else I32
+        shapes.append((tuple(e["shape"]), dt))
+    return _spec_list(shapes)
+
+
+def lower_variant(spec: ModelSpec, params, variant: str, batch: int, n_keep: int = 0):
+    if variant == "full":
+        fn = build_full_fn(spec, params, batch=batch)
+    elif variant == "shallow":
+        fn = build_shallow_fn(spec, params, batch=batch)
+    else:
+        fn = build_prune_fn(spec, params, n_keep, batch=batch)
+    ins, outs = _variant_io(spec, variant, batch, n_keep)
+    lowered = jax.jit(fn).lower(*_example_args(ins))
+    return to_hlo_text(lowered), ins, outs
+
+
+def build_model_artifacts(spec: ModelSpec, params, out_dir: str) -> dict:
+    """Lower all variants for one model; returns its manifest entry."""
+    entry = {
+        "style": spec.style,
+        "predict": spec.predict,
+        "img": [spec.img_h, spec.img_w, spec.channels],
+        "patch": spec.patch,
+        "d": spec.d,
+        "heads": spec.heads,
+        "n_tokens": spec.n_tokens,
+        "n_blocks": spec.n_blocks,
+        "has_control": spec.has_control,
+        "cond_dim": spec.cond_dim,
+        "variants": {},
+    }
+
+    def emit(vname: str, variant: str, batch: int, n_keep: int = 0):
+        text, ins, outs = lower_variant(spec, params, variant, batch, n_keep)
+        fname = f"{spec.name}_{vname}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry["variants"][vname] = {
+            "file": fname,
+            "kind": variant,
+            "batch": batch,
+            "n_keep": n_keep,
+            "inputs": ins,
+            "outputs": outs,
+        }
+        print(f"[aot] {fname}: {len(text)} chars", flush=True)
+
+    emit("full", "full", 1)
+    if spec.style == "unet":
+        emit("shallow", "shallow", 1)
+    for ratio in PRUNE_BUCKETS:
+        nk = spec.prune_keep(ratio)
+        emit(f"prune{int(ratio * 100)}", "prune", 1, n_keep=nk)
+    if spec.name == "sd2_tiny":
+        for b in BATCH_BUCKETS:
+            emit(f"full_b{b}", "full", b)
+    return entry
+
+
+def write_goldens(out_dir: str, manifest: dict, weights: dict):
+    """Golden tensors replayed by rust integration tests.
+
+    For each golden model we run one *jitted python* step (same function that
+    was lowered) at a fixed (x, t, cond, gs) and save input/output tensors:
+    the rust runtime must reproduce them through the compiled artifact.
+    """
+    gdir = os.path.join(out_dir, "goldens")
+    os.makedirs(gdir, exist_ok=True)
+    kernels.set_impl("pallas")
+    rng = np.random.RandomState(123)
+    meta = {}
+    for name in ("sd2_tiny", "flux_tiny"):
+        if name not in weights:
+            continue
+        spec = SPECS[name]
+        params = weights[name]
+        fn = jax.jit(build_full_fn(spec, params, batch=1))
+        x = rng.randn(1, spec.img_h, spec.img_w, spec.channels).astype(np.float32)
+        t = np.array([0.5], np.float32)
+        cond = corpus.prompt_bank(1, seed=99)[:1]
+        gs = np.array([3.0], np.float32)
+        out, deep, caches = fn(x, t, cond, gs)
+        np.save(os.path.join(gdir, f"{name}_x.npy"), x)
+        np.save(os.path.join(gdir, f"{name}_cond.npy"), cond.astype(np.float32))
+        np.save(os.path.join(gdir, f"{name}_out.npy"), np.asarray(out))
+        meta[name] = {
+            "t": 0.5,
+            "gs": 3.0,
+            "out_mean": float(np.mean(np.asarray(out))),
+            "out_std": float(np.std(np.asarray(out))),
+        }
+    # schedule table for rust schedule cross-check
+    from .sampler_ref import ABAR
+
+    np.save(os.path.join(gdir, "abar.npy"), ABAR.astype(np.float64))
+    with open(os.path.join(gdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"[aot] goldens -> {gdir}", flush=True)
+
+
+def write_banks(out_dir: str):
+    np.save(os.path.join(out_dir, "prompts.npy"), corpus.prompt_bank(5000).astype(np.float32))
+    np.save(
+        os.path.join(out_dir, "music_prompts.npy"),
+        corpus.prompt_bank(256, seed=17, kind="music").astype(np.float32),
+    )
+    rng = np.random.RandomState(31)
+    imgs, conds = corpus.image_batch(rng, 16)
+    edges = np.stack([corpus.edge_map(im) for im in imgs])
+    np.save(os.path.join(out_dir, "control_edges.npy"), edges.astype(np.float32))
+    np.save(os.path.join(out_dir, "control_conds.npy"), conds.astype(np.float32))
+    print("[aot] prompt banks written", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(SPECS))
+    ap.add_argument("--train-steps", type=int, default=DEFAULT_STEPS)
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    wdir = os.path.join(out_dir, "weights")
+
+    weights = {}
+    for name in args.models.split(","):
+        spec = SPECS[name]
+        wpath = os.path.join(wdir, f"{name}.npz")
+        if os.path.exists(wpath):
+            print(f"[aot] using cached weights {wpath}", flush=True)
+            weights[name] = load_params(wpath)
+        else:
+            params, _ = train_model(spec, steps=args.train_steps)
+            save_params(params, wpath)
+            weights[name] = params
+
+    kernels.set_impl("pallas")  # the request path runs the Pallas kernels
+    manifest = {
+        "version": 1,
+        "schedule": {
+            "train_t": TRAIN_T,
+            "beta_start": BETA_START,
+            "beta_end": BETA_END,
+        },
+        "cond_dim": COND_DIM,
+        "prune_buckets": list(PRUNE_BUCKETS),
+        "batch_buckets": list(BATCH_BUCKETS),
+        "models": {},
+    }
+    for name in args.models.split(","):
+        spec = SPECS[name]
+        manifest["models"][name] = build_model_artifacts(spec, weights[name], out_dir)
+
+    write_banks(out_dir)
+    write_goldens(out_dir, manifest, weights)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest -> {out_dir}/manifest.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

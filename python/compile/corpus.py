@@ -1,0 +1,132 @@
+"""Procedural training corpora + prompt-conditioning bank.
+
+Substitutes the paper's LAION-pretrained models / MS-COCO prompts (see
+DESIGN.md SS1): a deterministic generator of small structured images whose
+generating parameters are exposed to the model as the conditioning vector,
+so classifier-free guidance and prompt-dependent trajectories are real.
+
+Image corpus  : 16x16x3 in [-1, 1] - gradient background + rectangle +
+                gaussian blob (+ optional stripes), parameterized.
+Music corpus  : 16x64x1 "mel spectrograms" - harmonic stacks with tempo
+                gating, the 8-second-clip analog for the MusicLDM experiment.
+Edge maps     : Sobel magnitude of the image, the canny analog for the
+                ControlNet experiment.
+"""
+
+import numpy as np
+
+from .specs import COND_DIM
+
+_PROJ_SEED = 20250710
+
+
+def _param_projection(n_params: int) -> np.ndarray:
+    """Fixed random projection from generator params to the cond space."""
+    rng = np.random.RandomState(_PROJ_SEED + n_params)
+    return rng.randn(n_params, COND_DIM).astype(np.float32) / np.sqrt(n_params)
+
+
+N_IMG_PARAMS = 14
+_IMG_PROJ = _param_projection(N_IMG_PARAMS)
+N_MUSIC_PARAMS = 8
+_MUSIC_PROJ = _param_projection(N_MUSIC_PARAMS)
+
+
+def cond_from_params(params: np.ndarray, proj: np.ndarray) -> np.ndarray:
+    return np.tanh(params.astype(np.float32) @ proj)
+
+
+def make_image(rng: np.random.RandomState):
+    """One procedural image. Returns (img [16,16,3] in [-1,1], cond [COND_DIM])."""
+    h = w = 16
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+    yy, xx = yy / (h - 1), xx / (w - 1)
+
+    p = np.empty(N_IMG_PARAMS, np.float32)
+    p[0:3] = rng.uniform(-0.8, 0.8, 3)      # background base color
+    p[3] = rng.uniform(-1, 1)               # gradient direction mix
+    p[4:6] = rng.uniform(0.15, 0.85, 2)     # rect center
+    p[6] = rng.uniform(0.15, 0.45)          # rect half-size
+    p[7:10] = rng.uniform(-1, 1, 3)         # rect color
+    p[10:12] = rng.uniform(0.2, 0.8, 2)     # blob center
+    p[12] = rng.uniform(0.08, 0.3)          # blob sigma
+    p[13] = rng.uniform(0, 1)               # stripe strength
+
+    img = np.zeros((h, w, 3), np.float32)
+    grad = p[3] * (xx - 0.5) + (1 - abs(p[3])) * (yy - 0.5)
+    for c in range(3):
+        img[..., c] = p[c] + 0.6 * grad
+
+    ry, rx, rs = p[4], p[5], p[6]
+    mask = (np.abs(yy - ry) < rs) & (np.abs(xx - rx) < rs)
+    for c in range(3):
+        img[..., c] = np.where(mask, 0.7 * p[7 + c] + 0.3 * img[..., c], img[..., c])
+
+    by, bx, bs = p[10], p[11], p[12]
+    blob = np.exp(-((yy - by) ** 2 + (xx - bx) ** 2) / (2 * bs**2))
+    img += 0.8 * blob[..., None] * np.array([1.0, -0.5, 0.25], np.float32)
+
+    if p[13] > 0.5:
+        stripes = 0.3 * np.sin(2 * np.pi * 3 * xx)
+        img += (p[13] - 0.5) * stripes[..., None]
+
+    img = np.clip(img, -1.0, 1.0)
+    return img, cond_from_params(p, _IMG_PROJ)
+
+
+def make_music(rng: np.random.RandomState):
+    """One synthetic mel spectrogram. Returns (spec [16,64,1], cond)."""
+    f, t = 16, 64
+    p = np.empty(N_MUSIC_PARAMS, np.float32)
+    p[0] = rng.uniform(1.0, 5.0)       # base frequency bin
+    p[1] = rng.uniform(0.3, 0.9)       # harmonic decay
+    p[2] = rng.uniform(2.0, 8.0)       # tempo (beats over the clip)
+    p[3] = rng.uniform(0.0, 1.0)       # rhythm depth
+    p[4] = rng.uniform(-0.5, 0.5)      # pitch drift per clip
+    p[5] = rng.uniform(0.2, 1.0)       # overall gain
+    p[6] = rng.uniform(0.0, 0.4)       # noise floor
+    p[7] = rng.uniform(0.0, 1.0)       # vibrato depth
+
+    tt = np.arange(t, dtype=np.float32) / t
+    ff = np.arange(f, dtype=np.float32)[:, None]
+    base = p[0] + p[4] * 8.0 * tt[None, :] + p[7] * 1.5 * np.sin(2 * np.pi * 4 * tt)[None, :]
+    spec = np.zeros((f, t), np.float32)
+    for k in range(1, 5):
+        fk = base * k
+        amp = p[1] ** (k - 1)
+        spec += amp * np.exp(-((ff - fk) ** 2) / (2 * 0.6**2))
+    beat = 0.5 * (1 + np.cos(2 * np.pi * p[2] * tt))
+    gate = 1.0 - p[3] * beat
+    spec = p[5] * spec * gate[None, :]
+    spec += p[6] * 0.1
+    spec = np.clip(spec * 2.0 - 1.0, -1.0, 1.0)
+    return spec[..., None], cond_from_params(p, _MUSIC_PROJ)
+
+
+def edge_map(img: np.ndarray) -> np.ndarray:
+    """Sobel-magnitude edge map [H,W,1] in [0,1] - the canny analog."""
+    g = img.mean(axis=-1)
+    gx = np.zeros_like(g)
+    gy = np.zeros_like(g)
+    gx[:, 1:-1] = g[:, 2:] - g[:, :-2]
+    gy[1:-1, :] = g[2:, :] - g[:-2, :]
+    mag = np.sqrt(gx**2 + gy**2)
+    thr = max(1e-6, float(np.percentile(mag, 75)))
+    return (mag > thr).astype(np.float32)[..., None]
+
+
+def image_batch(rng: np.random.RandomState, n: int):
+    imgs, conds = zip(*(make_image(rng) for _ in range(n)))
+    return np.stack(imgs), np.stack(conds)
+
+
+def music_batch(rng: np.random.RandomState, n: int):
+    specs, conds = zip(*(make_music(rng) for _ in range(n)))
+    return np.stack(specs), np.stack(conds)
+
+
+def prompt_bank(n: int, seed: int = 7, kind: str = "image") -> np.ndarray:
+    """The COCO-val analog: `n` deterministic conditioning vectors."""
+    rng = np.random.RandomState(seed)
+    make = make_image if kind == "image" else make_music
+    return np.stack([make(rng)[1] for _ in range(n)])

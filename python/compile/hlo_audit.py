@@ -1,0 +1,118 @@
+"""L2 perf tooling: census of a lowered HLO module.
+
+Parses HLO text (the exact artifacts the rust runtime compiles) and reports
+op counts, fusion opportunities, parameter/constant byte totals and an
+estimated FLOP count — the evidence for DESIGN.md SS6's L2 targets ("no
+redundant recomputation, fused where XLA can fuse").
+
+Usage:
+    python -m compile.hlo_audit ../artifacts/sd2_tiny_full.hlo.txt
+"""
+
+import argparse
+import re
+import sys
+from collections import Counter
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?([%\w.\-]+)\s*=\s*((?:[a-z0-9]+)\[[^\]]*\](?:\{[^}]*\})?)\s*([a-z0-9\-]+)\("
+)
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_elems(shape_str: str):
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return None, 0
+    dtype, dims = m.groups()
+    if not dims:
+        return dtype, 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return dtype, n
+
+
+DTYPE_BYTES = {"f32": 4, "f64": 8, "f16": 2, "bf16": 2, "s32": 4, "s64": 8, "pred": 1, "u32": 4}
+
+
+def audit(text: str) -> dict:
+    ops = Counter()
+    dot_flops = 0
+    constant_bytes = 0
+    param_bytes = 0
+    # first pass: symbol table name -> shape string (operands are named,
+    # not shape-annotated, in HLO text)
+    shapes = {}
+    for line in text.splitlines():
+        m = _OP_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+    for line in text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        _name, shape_str, op = m.groups()
+        ops[op] += 1
+        dtype, n = _shape_elems(shape_str)
+        nbytes = n * DTYPE_BYTES.get(dtype, 4)
+        if op == "constant" and "{" in line:
+            constant_bytes += nbytes
+        elif op == "parameter":
+            param_bytes += nbytes
+        elif op == "dot":
+            # FLOPs = 2 * output_elems * contraction_len; resolve the lhs
+            # operand's shape through the symbol table and read the
+            # contracting dim from the attribute list.
+            mo = _OPERANDS_RE.search(line.split("dot", 1)[1])
+            k = 1
+            if mo:
+                lhs_name = mo.group(1).split(",")[0].strip()
+                lhs_shape = shapes.get(lhs_name, "")
+                cm = re.search(r"lhs_contracting_dims=\{(\d+)", line)
+                sm = _SHAPE_RE.match(lhs_shape)
+                if sm and sm.group(2):
+                    dims = [int(d) for d in sm.group(2).split(",")]
+                    ci = int(cm.group(1)) if cm else len(dims) - 1
+                    if 0 <= ci < len(dims):
+                        k = dims[ci]
+            dot_flops += 2 * n * k
+    return {
+        "ops": dict(ops),
+        "total_ops": sum(ops.values()),
+        "dot_count": ops.get("dot", 0),
+        "dot_flops": dot_flops,
+        "constant_bytes": constant_bytes,
+        "param_bytes": param_bytes,
+    }
+
+
+def audit_file(path: str) -> dict:
+    with open(path) as f:
+        return audit(f.read())
+
+
+def report(path: str) -> str:
+    a = audit_file(path)
+    lines = [f"== HLO audit: {path} =="]
+    lines.append(f"total instructions : {a['total_ops']}")
+    lines.append(f"dot ops            : {a['dot_count']}  (~{a['dot_flops']/1e6:.2f} MFLOP/call)")
+    lines.append(f"embedded constants : {a['constant_bytes']/1e6:.2f} MB")
+    lines.append(f"parameter bytes    : {a['param_bytes']/1e3:.1f} KB")
+    top = sorted(a["ops"].items(), key=lambda kv: -kv[1])[:12]
+    lines.append("top ops: " + ", ".join(f"{k}:{v}" for k, v in top))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+")
+    args = ap.parse_args()
+    for p in args.paths:
+        print(report(p))
+        print()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

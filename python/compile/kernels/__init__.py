@@ -1,0 +1,37 @@
+"""L1: Pallas kernels for the per-step compute hot spot.
+
+`mha` / `ln_mod` dispatch between the Pallas kernels (default — what
+aot.py lowers into the request-path HLO) and the pure-jnp references
+(used by the build-time training loop, where Pallas interpret-mode
+execution is needlessly slow). test_kernels.py pins the two
+implementations to each other, so the dispatch is numerics-preserving.
+"""
+
+from .attention import fused_mha
+from .layernorm import ln_modulate
+from .ref import ref_ln_modulate, ref_mha
+
+_IMPL = "pallas"
+
+
+def set_impl(name: str) -> None:
+    """Select kernel implementation: "pallas" (default) or "ref"."""
+    global _IMPL
+    if name not in ("pallas", "ref"):
+        raise ValueError(f"unknown kernel impl {name!r}")
+    _IMPL = name
+
+
+def get_impl() -> str:
+    return _IMPL
+
+
+def mha(q, k, v):
+    return fused_mha(q, k, v) if _IMPL == "pallas" else ref_mha(q, k, v)
+
+
+def ln_mod(x, scale, shift):
+    return ln_modulate(x, scale, shift) if _IMPL == "pallas" else ref_ln_modulate(x, scale, shift)
+
+
+__all__ = ["fused_mha", "ln_modulate", "mha", "ln_mod", "set_impl", "get_impl"]

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: fused multi-head attention.
+
+The per-step compute hot spot of every denoiser in the zoo. One kernel
+instance handles one (batch, head) tile: both matmuls (QK^T and PV) plus the
+numerically-stable softmax run back-to-back from VMEM, which is the TPU
+analogue of the paper's GPU attention path (threadblock/shared-memory
+scheduling becomes grid + BlockSpec; tensor-core WMMA becomes the MXU).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO ops. Correctness is
+pinned against the pure-jnp oracle in `ref.py` (pytest + hypothesis sweeps).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """One (batch, head) tile: softmax(q k^T * scale) v, fp32 accumulation."""
+    q = q_ref[0, 0].astype(jnp.float32)  # [N, dh]
+    k = k_ref[0, 0].astype(jnp.float32)  # [N, dh]
+    v = v_ref[0, 0].astype(jnp.float32)  # [N, dh]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.dot(p, v, preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def _mha_pallas(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    b, h, n, dh = q.shape
+    scale = 1.0 / (dh**0.5)
+    spec = pl.BlockSpec((1, 1, n, dh), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_mha_kernel, scale=scale),
+        grid=(b, h),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, n, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _mha_ref(q, k, v):
+    # mirror of ref.ref_mha (kept local to avoid a circular import)
+    dh = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    p = jax.nn.softmax(s * (1.0 / dh**0.5), axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@jax.custom_vjp
+def fused_mha(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Fused attention over [B, H, N, dh] tensors.
+
+    Grid is (B, H); each program owns the full [N, dh] tile of one head.
+    N is small (<=144) in this zoo so a head fits VMEM comfortably; see
+    DESIGN.md SSPerf for the footprint table.
+
+    The backward pass (used only by build-time training) is the VJP of the
+    jnp reference; the kernel and the reference are pinned to each other by
+    python/tests/test_kernels.py, so the pairing is numerically consistent.
+    """
+    b, h, n, dh = q.shape
+    if k.shape != (b, h, n, dh) or v.shape != (b, h, n, dh):
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} {k.shape} {v.shape}")
+    return _mha_pallas(q, k, v)
+
+
+def _mha_fwd(q, k, v):
+    return _mha_pallas(q, k, v), (q, k, v)
+
+
+def _mha_bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(_mha_ref, q, k, v)
+    return vjp(g)
+
+
+fused_mha.defvjp(_mha_fwd, _mha_bwd)

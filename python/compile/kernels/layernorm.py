@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: fused LayerNorm + AdaLN modulation.
+
+Computes `LN(x) * (1 + scale) + shift` in one pass. The gamma/beta of a
+conventional LayerNorm are folded into the per-sample (scale, shift) pair
+produced by the conditioning MLP (AdaLN), which is how every model in the
+zoo injects timestep + prompt conditioning.
+
+Grid is (B,): one program normalizes the full [N, d] token block of one
+sample, with its [d] modulation vectors resident in VMEM alongside.
+`interpret=True` for CPU-PJRT execution; oracle in `ref.py`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_mod_kernel(x_ref, sc_ref, sh_ref, o_ref, *, eps: float):
+    x = x_ref[0].astype(jnp.float32)  # [N, d]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + eps)
+    sc = sc_ref[0].astype(jnp.float32)[None, :]  # [1, d]
+    sh = sh_ref[0].astype(jnp.float32)[None, :]
+    o_ref[0] = (xn * (1.0 + sc) + sh).astype(o_ref.dtype)
+
+
+def _ln_mod_pallas(x, scale, shift, eps):
+    b, n, d = x.shape
+    x_spec = pl.BlockSpec((1, n, d), lambda i: (i, 0, 0))
+    m_spec = pl.BlockSpec((1, d), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_ln_mod_kernel, eps=eps),
+        grid=(b,),
+        in_specs=[x_spec, m_spec, m_spec],
+        out_specs=x_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n, d), x.dtype),
+        interpret=True,
+    )(x, scale, shift)
+
+
+def _ln_mod_ref(x, scale, shift, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    xn = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = xn * (1.0 + scale.astype(jnp.float32)[:, None, :]) + shift.astype(jnp.float32)[:, None, :]
+    return out.astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _ln_modulate_impl(x, scale, shift, eps):
+    return _ln_mod_pallas(x, scale, shift, eps)
+
+
+def _ln_mod_fwd(x, scale, shift, eps):
+    return _ln_mod_pallas(x, scale, shift, eps), (x, scale, shift)
+
+
+def _ln_mod_bwd(eps, res, g):
+    x, scale, shift = res
+    _, vjp = jax.vjp(lambda a, b, c: _ln_mod_ref(a, b, c, eps), x, scale, shift)
+    return vjp(g)
+
+
+_ln_modulate_impl.defvjp(_ln_mod_fwd, _ln_mod_bwd)
+
+
+def ln_modulate(x: jax.Array, scale: jax.Array, shift: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Fused LN + modulate over x [B, N, d] with per-sample scale/shift [B, d].
+
+    Backward (build-time training only) is the VJP of the jnp reference;
+    kernel and reference are pinned together by python/tests/test_kernels.py.
+    """
+    b, n, d = x.shape
+    if scale.shape != (b, d) or shift.shape != (b, d):
+        raise ValueError(f"scale/shift shape mismatch: {scale.shape} {shift.shape} vs {(b, d)}")
+    return _ln_modulate_impl(x, scale, shift, eps)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+asserts `assert_allclose(kernel(...), ref(...))` across hypothesis-driven
+shape/dtype sweeps, and the L2 model is built exclusively on the kernels so
+kernel==ref implies the lowered HLO computes the reference math.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_mha(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Reference multi-head attention over [B, H, N, dh]."""
+    dh = q.shape[-1]
+    scale = 1.0 / (dh**0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ref_ln_modulate(
+    x: jax.Array, scale: jax.Array, shift: jax.Array, eps: float = 1e-6
+) -> jax.Array:
+    """Reference LN + AdaLN modulate over x [B, N, d], scale/shift [B, d]."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    xn = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = xn * (1.0 + scale.astype(jnp.float32)[:, None, :]) + shift.astype(jnp.float32)[:, None, :]
+    return out.astype(x.dtype)

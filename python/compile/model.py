@@ -1,0 +1,368 @@
+"""L2: the denoiser model zoo (JAX, built exclusively on the L1 kernels).
+
+Every model is a token-space transformer over patchified images:
+
+* "unet" style (sd2/sdxl/music/control): down blocks push skip features,
+  up blocks fuse them back (UViT). The feature entering the last up block is
+  the `deep` feature that the DeepCache baseline caches: the `shallow`
+  variant recomputes only (down block 0 -> last up block -> head) around a
+  cached `deep`, reproducing DeepCache's shallow-recompute/deep-reuse split.
+* "dit" style (flux): a plain block stack with AdaLN conditioning and
+  velocity prediction (rectified-flow / flow matching).
+
+Token-wise sparsity (paper SS3.5) is compiled as fixed-shape variants: the
+attention input is gathered down to `keep_idx` (N' tokens), attention runs
+on N' tokens only (the Pallas kernel sees the reduced sequence), and the
+full-length attention output is reconstructed from the per-layer cache
+(Eqs. 18-20) carried as executable I/O.
+
+Classifier-free guidance runs inside the graph: the request-path wrappers
+(`build_*_fn`) duplicate the latent into a (cond, uncond) pair so one PJRT
+execution performs the full guided evaluation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .specs import ModelSpec
+
+# ---------------------------------------------------------------------------
+# patchify / unpatchify
+
+
+def patchify(x: jax.Array, patch: int) -> jax.Array:
+    """[B, H, W, C] -> [B, N, patch*patch*C] in row-major patch order."""
+    b, h, w, c = x.shape
+    gh, gw = h // patch, w // patch
+    x = x.reshape(b, gh, patch, gw, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, gh * gw, patch * patch * c)
+
+
+def unpatchify(tok: jax.Array, spec: ModelSpec) -> jax.Array:
+    """[B, N, patch*patch*C] -> [B, H, W, C]."""
+    b = tok.shape[0]
+    p, c = spec.patch, spec.channels
+    gh, gw = spec.img_h // p, spec.img_w // p
+    x = tok.reshape(b, gh, gw, p, p, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, spec.img_h, spec.img_w, c)
+
+
+# ---------------------------------------------------------------------------
+# parameter initialization
+
+
+def _dense_init(key, fan_in, fan_out, scale=1.0):
+    w = jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+    return w * (scale / (fan_in**0.5))
+
+
+def init_params(spec: ModelSpec, key: jax.Array) -> dict:
+    """Initialize the full parameter pytree for one model."""
+    keys = iter(jax.random.split(key, 16 + 10 * spec.n_blocks))
+    d, r = spec.d, spec.mlp_ratio
+    params = {
+        "w_patch": _dense_init(next(keys), spec.patch_dim, d),
+        "b_patch": jnp.zeros((d,)),
+        "pos": 0.02 * jax.random.normal(next(keys), (spec.n_tokens, d), jnp.float32),
+        "temb_w1": _dense_init(next(keys), d, d),
+        "temb_b1": jnp.zeros((d,)),
+        "temb_w2": _dense_init(next(keys), d, d),
+        "temb_b2": jnp.zeros((d,)),
+        "w_cond": _dense_init(next(keys), spec.cond_dim, d),
+        "b_cond": jnp.zeros((d,)),
+        # final AdaLN + linear head (head zero-init per DiT practice).
+        "w_mod_f": jnp.zeros((d, 2 * d)),
+        "b_mod_f": jnp.zeros((2 * d,)),
+        "w_head": jnp.zeros((d, spec.patch_dim)),
+        "b_head": jnp.zeros((spec.patch_dim,)),
+    }
+    if spec.has_control:
+        edge_dim = spec.patch * spec.patch  # single-channel edge map
+        params["ctrl_w1"] = _dense_init(next(keys), edge_dim, d)
+        params["ctrl_b1"] = jnp.zeros((d,))
+        params["ctrl_w2"] = jnp.zeros((d, d))  # zero-init: control starts as no-op
+        params["ctrl_b2"] = jnp.zeros((d,))
+    blocks = []
+    for _ in range(spec.n_blocks):
+        blocks.append(
+            {
+                # AdaLN modulation (zero-init => identity modulation, zero gates).
+                "w_mod": jnp.zeros((d, 6 * d)),
+                "b_mod": jnp.zeros((6 * d,)),
+                "w_qkv": _dense_init(next(keys), d, 3 * d),
+                "b_qkv": jnp.zeros((3 * d,)),
+                # adaLN-zero: the *gates* start at zero (w_mod above), but the
+                # projections must NOT also be zero or the branch never gets
+                # gradients (g * out == 0 and d/dw == 0 simultaneously).
+                "w_o": _dense_init(next(keys), d, d, scale=0.5),
+                "b_o": jnp.zeros((d,)),
+                "w_m1": _dense_init(next(keys), d, r * d),
+                "b_m1": jnp.zeros((r * d,)),
+                "w_m2": _dense_init(next(keys), r * d, d, scale=0.5),
+                "b_m2": jnp.zeros((d,)),
+            }
+        )
+    params["blocks"] = blocks
+    if spec.style == "unet":
+        fuses = []
+        for _ in range(spec.depth_up):
+            fuses.append({"w_f": jnp.eye(d) * 0.5, "b_f": jnp.zeros((d,))})
+        params["fuse"] = fuses
+    return params
+
+
+# ---------------------------------------------------------------------------
+# conditioning
+
+
+def timestep_embedding(t: jax.Array, d: int, max_period: float = 10000.0) -> jax.Array:
+    """Sinusoidal embedding of normalized t in [0, 1] (scaled by 1000)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = (t.astype(jnp.float32) * 1000.0)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def _cond_signal(spec: ModelSpec, params: dict, t: jax.Array, cond: jax.Array) -> jax.Array:
+    """Shared conditioning vector s [B, d] from timestep + prompt embedding."""
+    te = timestep_embedding(t, spec.d)
+    te = jax.nn.silu(te @ params["temb_w1"] + params["temb_b1"])
+    te = te @ params["temb_w2"] + params["temb_b2"]
+    ce = cond.astype(jnp.float32) @ params["w_cond"] + params["b_cond"]
+    return jax.nn.silu(te + ce)
+
+
+# ---------------------------------------------------------------------------
+# transformer block (with optional token pruning + cache reconstruction)
+
+
+def _block(spec: ModelSpec, bp: dict, x, s, keep_idx, cache_l):
+    """One transformer block.
+
+    x [B, N, d]; s [B, d] conditioning; keep_idx None or i32[N'];
+    cache_l None or [B, N, d] (previous attention output, paper Eq. 18).
+    Returns (x_out, new_cache_l [B, N, d]).
+    """
+    b, n, d = x.shape
+    mod = s @ bp["w_mod"] + bp["b_mod"]
+    sc1, sh1, g1, sc2, sh2, g2 = jnp.split(mod, 6, axis=-1)
+
+    a = kernels.ln_mod(x, sc1, sh1)
+    if keep_idx is not None:
+        a = jnp.take(a, keep_idx, axis=1)  # [B, N', d] gather (paper Eq. 6)
+    qkv = a @ bp["w_qkv"] + bp["b_qkv"]
+    nk = a.shape[1]
+    qkv = qkv.reshape(b, nk, 3, spec.heads, spec.head_dim)
+    q = qkv[:, :, 0].transpose(0, 2, 1, 3)
+    k = qkv[:, :, 1].transpose(0, 2, 1, 3)
+    v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+    att = kernels.mha(q, k, v)  # L1 Pallas kernel
+    att = att.transpose(0, 2, 1, 3).reshape(b, nk, d)
+    att = att @ bp["w_o"] + bp["b_o"]
+    if keep_idx is not None:
+        # Cache-assisted reconstruction (paper Eqs. 19-20): fresh tokens
+        # overwrite their cache slots; pruned tokens read the cache.
+        att_full = jnp.asarray(cache_l).at[:, jnp.asarray(keep_idx), :].set(att)
+    else:
+        att_full = att
+    new_cache = att_full
+    x = x + g1[:, None, :] * att_full
+
+    m = kernels.ln_mod(x, sc2, sh2)
+    h = jax.nn.silu(m @ bp["w_m1"] + bp["b_m1"]) @ bp["w_m2"] + bp["b_m2"]
+    x = x + g2[:, None, :] * h
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full forward
+
+
+def forward(
+    spec: ModelSpec,
+    params: dict,
+    x_img: jax.Array,
+    t: jax.Array,
+    cond: jax.Array,
+    edge=None,
+    keep_idx=None,
+    caches=None,
+):
+    """Full denoiser forward.
+
+    x_img [B, H, W, C]; t [B] normalized in [0,1]; cond [B, cond_dim];
+    edge [B, H, W, 1] for control models; keep_idx i32[N'] or None;
+    caches [L, B, N, d] or None (required when keep_idx is not None).
+
+    Returns (out_img [B, H, W, C], deep [B, N, d], new_caches [L, B, N, d]).
+    `deep` is the DeepCache cache point (feature entering the last up block);
+    for dit models it is the feature entering the last block.
+    """
+    s = _cond_signal(spec, params, t, cond)
+    x = patchify(x_img, spec.patch) @ params["w_patch"] + params["b_patch"]
+    x = x + params["pos"][None]
+    if spec.has_control:
+        if edge is None:
+            raise ValueError(f"{spec.name} requires an edge map input")
+        ep = patchify(edge, spec.patch)
+        ec = jax.nn.silu(ep @ params["ctrl_w1"] + params["ctrl_b1"])
+        x = x + ec @ params["ctrl_w2"] + params["ctrl_b2"]
+
+    new_caches = []
+    deep = None
+    if spec.style == "unet":
+        skips = []
+        bi = 0
+        for _ in range(spec.depth_down):
+            x, c = _block(spec, params["blocks"][bi], x, s,
+                          keep_idx, None if caches is None else caches[bi])
+            new_caches.append(c)
+            skips.append(x)
+            bi += 1
+        for _ in range(spec.depth_mid):
+            x, c = _block(spec, params["blocks"][bi], x, s,
+                          keep_idx, None if caches is None else caches[bi])
+            new_caches.append(c)
+            bi += 1
+        for ui in range(spec.depth_up):
+            if ui == spec.depth_up - 1:
+                deep = x  # DeepCache cache point
+            fp = params["fuse"][ui]
+            x = (x + skips.pop()) @ fp["w_f"] + fp["b_f"]
+            x, c = _block(spec, params["blocks"][bi], x, s,
+                          keep_idx, None if caches is None else caches[bi])
+            new_caches.append(c)
+            bi += 1
+    else:  # dit
+        for bi in range(spec.depth):
+            if bi == spec.depth - 1:
+                deep = x
+            x, c = _block(spec, params["blocks"][bi], x, s,
+                          keep_idx, None if caches is None else caches[bi])
+            new_caches.append(c)
+
+    mod_f = s @ params["w_mod_f"] + params["b_mod_f"]
+    sc_f, sh_f = jnp.split(mod_f, 2, axis=-1)
+    x = kernels.ln_mod(x, sc_f, sh_f)
+    out = x @ params["w_head"] + params["b_head"]
+    return unpatchify(out, spec), deep, jnp.stack(new_caches)
+
+
+def forward_shallow(
+    spec: ModelSpec,
+    params: dict,
+    x_img: jax.Array,
+    t: jax.Array,
+    cond: jax.Array,
+    deep: jax.Array,
+    edge=None,
+) -> jax.Array:
+    """DeepCache shallow path: down block 0 + cached deep + last up block + head.
+
+    Recomputes only the shallowest pair around the cached `deep` feature —
+    the exact reuse pattern of DeepCache (Ma et al., 2024b) mapped onto the
+    U-shaped transformer.
+    """
+    if spec.style != "unet":
+        raise ValueError("shallow path requires a unet-style model")
+    s = _cond_signal(spec, params, t, cond)
+    x = patchify(x_img, spec.patch) @ params["w_patch"] + params["b_patch"]
+    x = x + params["pos"][None]
+    if spec.has_control:
+        if edge is None:
+            raise ValueError(f"{spec.name} requires an edge map input")
+        ep = patchify(edge, spec.patch)
+        ec = jax.nn.silu(ep @ params["ctrl_w1"] + params["ctrl_b1"])
+        x = x + ec @ params["ctrl_w2"] + params["ctrl_b2"]
+    x, _ = _block(spec, params["blocks"][0], x, s, None, None)
+    skip0 = x
+    # jump to the deepest up block with the cached deep feature
+    ui = spec.depth_up - 1
+    fp = params["fuse"][ui]
+    x = (deep + skip0) @ fp["w_f"] + fp["b_f"]
+    bi = spec.n_blocks - 1
+    x, _ = _block(spec, params["blocks"][bi], x, s, None, None)
+    mod_f = s @ params["w_mod_f"] + params["b_mod_f"]
+    sc_f, sh_f = jnp.split(mod_f, 2, axis=-1)
+    x = kernels.ln_mod(x, sc_f, sh_f)
+    out = x @ params["w_head"] + params["b_head"]
+    return unpatchify(out, spec)
+
+
+# ---------------------------------------------------------------------------
+# request-path wrappers (what aot.py lowers): CFG pair inside the graph
+
+
+def _cfg_pair(x, cond, t):
+    """Duplicate a [B, ...] batch into the (cond, uncond) CFG pair."""
+    xx = jnp.concatenate([x, x], axis=0)
+    cc = jnp.concatenate([cond, jnp.zeros_like(cond)], axis=0)
+    tt = jnp.concatenate([t, t], axis=0)
+    return xx, cc, tt
+
+
+def _cfg_combine(out, gs, batch):
+    e_c, e_u = out[:batch], out[batch:]
+    g = gs.reshape(-1, 1, 1, 1)
+    return e_u + g * (e_c - e_u)
+
+
+def build_full_fn(spec: ModelSpec, params: dict, batch: int = 1):
+    """(x[b,H,W,C], t[b], cond[b,K], (edge[b,H,W,1]), gs[1])
+    -> (out[b,H,W,C], deep[2b,N,d], caches[L,2b,N,d])."""
+
+    if spec.has_control:
+        def f(x, t, cond, edge, gs):
+            xx, cc, tt = _cfg_pair(x, cond, t)
+            ee = jnp.concatenate([edge, edge], axis=0)
+            out, deep, caches = forward(spec, params, xx, tt, cc, edge=ee)
+            return _cfg_combine(out, gs, batch), deep, caches
+    else:
+        def f(x, t, cond, gs):
+            xx, cc, tt = _cfg_pair(x, cond, t)
+            out, deep, caches = forward(spec, params, xx, tt, cc)
+            return _cfg_combine(out, gs, batch), deep, caches
+    return f
+
+
+def build_shallow_fn(spec: ModelSpec, params: dict, batch: int = 1):
+    """(x, t, cond, (edge), gs, deep[2b,N,d]) -> out[b,H,W,C]."""
+
+    if spec.has_control:
+        def f(x, t, cond, edge, gs, deep):
+            xx, cc, tt = _cfg_pair(x, cond, t)
+            ee = jnp.concatenate([edge, edge], axis=0)
+            out = forward_shallow(spec, params, xx, tt, cc, deep, edge=ee)
+            return (_cfg_combine(out, gs, batch),)
+    else:
+        def f(x, t, cond, gs, deep):
+            xx, cc, tt = _cfg_pair(x, cond, t)
+            out = forward_shallow(spec, params, xx, tt, cc, deep)
+            return (_cfg_combine(out, gs, batch),)
+    return f
+
+
+def build_prune_fn(spec: ModelSpec, params: dict, n_keep: int, batch: int = 1):
+    """(x, t, cond, (edge), gs, keep_idx[i32 n_keep], caches[L,2b,N,d])
+    -> (out[b,H,W,C], caches[L,2b,N,d])."""
+    del n_keep  # shape is pinned by the example args at lowering time
+
+    if spec.has_control:
+        def f(x, t, cond, edge, gs, keep_idx, caches):
+            xx, cc, tt = _cfg_pair(x, cond, t)
+            ee = jnp.concatenate([edge, edge], axis=0)
+            out, _, new_caches = forward(
+                spec, params, xx, tt, cc, edge=ee, keep_idx=keep_idx, caches=caches
+            )
+            return _cfg_combine(out, gs, batch), new_caches
+    else:
+        def f(x, t, cond, gs, keep_idx, caches):
+            xx, cc, tt = _cfg_pair(x, cond, t)
+            out, _, new_caches = forward(
+                spec, params, xx, tt, cc, keep_idx=keep_idx, caches=caches
+            )
+            return _cfg_combine(out, gs, batch), new_caches
+    return f

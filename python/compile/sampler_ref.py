@@ -1,0 +1,147 @@
+"""Reference (unaccelerated) samplers in python.
+
+Mirrors rust/src/solvers/ exactly: the same timestep grids, the same
+Euler/DDIM, DPM-Solver++(2M) and flow-matching Euler updates. Used to
+
+* cross-check solver math in pytest (first-order DPM++ == DDIM identity,
+  order-of-convergence on the analytic Gaussian-mixture ODE), and
+* export golden end-state tensors that rust integration tests replay
+  through the actual PJRT artifacts (artifacts/goldens/).
+"""
+
+import numpy as np
+
+from .specs import TRAIN_T, alphas_cumprod
+
+# abar table indexed by integer grid point j in [0, TRAIN_T]; abar[0] = 1
+ABAR = np.concatenate([[1.0], np.asarray(alphas_cumprod(), np.float64)])
+
+
+def timestep_grid(steps: int, train_t: int = TRAIN_T) -> np.ndarray:
+    """Descending integer grid [t_0=train_t, ..., t_steps=0] (trailing spacing)."""
+    return np.linspace(train_t, 0, steps + 1).round().astype(np.int64)
+
+
+def alpha_sigma(j: int):
+    ab = ABAR[j]
+    return float(np.sqrt(ab)), float(np.sqrt(1.0 - ab))
+
+
+def x0_from_eps(x, eps, j):
+    a, s = alpha_sigma(j)
+    return (x - s * eps) / a
+
+
+def ode_coeffs(j: int, train_t: int = TRAIN_T):
+    """PF-ODE gradient coefficients at grid point j (paper Eq. 3).
+
+    y_t = dx/dt = c1 * x_t + c2 * eps_theta(x_t, t) with
+    c1 = f(t) = d/dt log sqrt(abar), c2 = g^2(t) / (2 sigma_t),
+    g^2 = d(sigma^2)/dt - 2 f sigma^2, evaluated by centered differences on
+    the discrete abar table in normalized time t = j / train_t.
+    Mirrors rust/src/solvers/ode.rs exactly.
+    """
+    j = int(np.clip(j, 1, train_t - 1))
+    lab = 0.5 * np.log(ABAR)
+    # d/dt with t = j/train_t -> dt = 1/train_t per index
+    f = (lab[j + 1] - lab[j - 1]) * train_t / 2.0
+    sig2 = 1.0 - ABAR
+    dsig2 = (sig2[j + 1] - sig2[j - 1]) * train_t / 2.0
+    g2 = dsig2 - 2.0 * f * sig2[j]
+    sigma = max(np.sqrt(sig2[j]), 1e-12)
+    return float(f), float(g2 / (2.0 * sigma))
+
+
+class EulerSolver:
+    """First-order ODE solver (DDIM form) for eps-prediction models."""
+
+    name = "euler"
+
+    def __init__(self):
+        pass
+
+    def step(self, x, eps, j_from, j_to):
+        x0 = x0_from_eps(x, eps, j_from)
+        a, s = alpha_sigma(j_to)
+        return a * x0 + s * eps, x0
+
+
+class DpmPP2MSolver:
+    """DPM-Solver++(2M): second-order multistep on the data prediction."""
+
+    name = "dpmpp"
+
+    def __init__(self):
+        self.prev_x0 = None
+        self.prev_h = None
+
+    @staticmethod
+    def _lam(j):
+        a, s = alpha_sigma(j)
+        s = max(s, 1e-12)
+        return np.log(a / s)
+
+    def step(self, x, eps, j_from, j_to):
+        x0 = x0_from_eps(x, eps, j_from)
+        a_t, s_t = alpha_sigma(j_from)
+        a_s, s_s = alpha_sigma(j_to)
+        if j_to == 0:
+            # final step: jump straight to the data prediction
+            self.prev_x0, self.prev_h = x0, None
+            return x0.copy(), x0
+        h = self._lam(j_to) - self._lam(j_from)
+        if self.prev_x0 is not None and self.prev_h is not None and h != 0.0:
+            r = self.prev_h / h
+            d = (1.0 + 1.0 / (2.0 * r)) * x0 - (1.0 / (2.0 * r)) * self.prev_x0
+        else:
+            d = x0
+        x_next = (s_s / s_t) * x - a_s * (np.expm1(-h)) * d
+        self.prev_x0, self.prev_h = x0, h
+        return x_next, x0
+
+    def inject_x0(self, x0, h):
+        """Feed an approximated x0 into the multistep history (SADA skips)."""
+        self.prev_x0, self.prev_h = x0, h
+
+
+def flow_grid(steps: int, t_min: float = 1e-3) -> np.ndarray:
+    """Descending continuous grid for flow matching: [1, ..., t_min]."""
+    return np.linspace(1.0, t_min, steps + 1)
+
+
+class FlowEulerSolver:
+    """Euler on dx/dt = v for rectified-flow models (t: 1 = noise -> 0 = data)."""
+
+    name = "flow"
+
+    def step(self, x, v, t_from, t_to):
+        x0 = x - t_from * v  # since x_t = (1-t) x0 + t eps and v = eps - x0
+        return x + (t_to - t_from) * v, x0
+
+
+def sample_baseline(model_fn, solver_name: str, steps: int, x_init, cond,
+                    gs: float = 3.0, edge=None):
+    """Full unaccelerated sampling loop; returns (x0_final, trajectory list).
+
+    model_fn(x[1,...], t_norm[1], cond[1,K], (edge), gs[1]) -> eps/v [1,...]
+    """
+    x = np.asarray(x_init, np.float64)
+    traj = [x.copy()]
+    if solver_name == "flow":
+        grid = flow_grid(steps)
+        solver = FlowEulerSolver()
+        for i in range(steps):
+            t_from, t_to = grid[i], grid[i + 1]
+            v = model_fn(x, t_from, cond, edge, gs)
+            x, _ = solver.step(x, v, t_from, t_to)
+            traj.append(x.copy())
+        return x, traj
+    grid = timestep_grid(steps)
+    solver = EulerSolver() if solver_name == "euler" else DpmPP2MSolver()
+    for i in range(steps):
+        j_from, j_to = int(grid[i]), int(grid[i + 1])
+        t_norm = j_from / TRAIN_T
+        eps = model_fn(x, t_norm, cond, edge, gs)
+        x, _ = solver.step(x, eps, j_from, j_to)
+        traj.append(x.copy())
+    return x, traj

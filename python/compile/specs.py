@@ -1,0 +1,121 @@
+"""Model zoo specifications and diffusion schedule constants.
+
+Single source of truth shared by model.py / train.py / aot.py and exported
+to the rust coordinator through artifacts/manifest.json. The zoo mirrors the
+paper's evaluation models at laptop scale (see DESIGN.md SS1 substitutions):
+
+  sd2_tiny     U-shaped transformer (UViT), eps-prediction   ~ SD-2
+  sdxl_tiny    larger U-shaped transformer, eps-prediction   ~ SDXL
+  flux_tiny    plain DiT stack, velocity (flow matching)     ~ Flux.1-dev
+  music_tiny   U-shaped transformer on 16x64 mel frames      ~ MusicLDM
+  control_tiny sd2_tiny + edge-conditioned control branch    ~ ControlNet
+"""
+
+import dataclasses
+import math
+
+COND_DIM = 32
+# DDPM schedule for the eps-prediction models (linear betas, T=1000).
+TRAIN_T = 1000
+BETA_START = 1e-4
+BETA_END = 2e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    img_h: int
+    img_w: int
+    channels: int
+    patch: int
+    d: int
+    heads: int
+    # unet style: depth_down + depth_mid + depth_up blocks with skips.
+    # dit style: `depth` blocks, no skips (depth_* fields unused).
+    style: str  # "unet" | "dit"
+    depth_down: int = 0
+    depth_mid: int = 0
+    depth_up: int = 0
+    depth: int = 0
+    predict: str = "eps"  # "eps" | "v"
+    mlp_ratio: int = 4
+    cond_dim: int = COND_DIM
+    has_control: bool = False
+
+    @property
+    def n_tokens(self) -> int:
+        return (self.img_h // self.patch) * (self.img_w // self.patch)
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+    @property
+    def n_blocks(self) -> int:
+        if self.style == "unet":
+            return self.depth_down + self.depth_mid + self.depth_up
+        return self.depth
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d % self.heads == 0
+        return self.d // self.heads
+
+    def prune_keep(self, ratio: float) -> int:
+        """Token count for a keep-ratio bucket, rounded to a multiple of 4."""
+        n = int(round(self.n_tokens * ratio))
+        return max(4, (n // 4) * 4)
+
+
+SPECS = {
+    "sd2_tiny": ModelSpec(
+        name="sd2_tiny", img_h=16, img_w=16, channels=3, patch=2, d=64, heads=4,
+        style="unet", depth_down=2, depth_mid=1, depth_up=2, predict="eps",
+    ),
+    "sdxl_tiny": ModelSpec(
+        name="sdxl_tiny", img_h=16, img_w=16, channels=3, patch=2, d=96, heads=6,
+        style="unet", depth_down=3, depth_mid=1, depth_up=3, predict="eps",
+    ),
+    "flux_tiny": ModelSpec(
+        name="flux_tiny", img_h=16, img_w=16, channels=3, patch=2, d=96, heads=6,
+        style="dit", depth=4, predict="v",
+    ),
+    "music_tiny": ModelSpec(
+        name="music_tiny", img_h=16, img_w=64, channels=1, patch=4, d=64, heads=4,
+        style="unet", depth_down=2, depth_mid=1, depth_up=2, predict="eps",
+    ),
+    "control_tiny": ModelSpec(
+        name="control_tiny", img_h=16, img_w=16, channels=3, patch=2, d=64, heads=4,
+        style="unet", depth_down=2, depth_mid=1, depth_up=2, predict="eps",
+        has_control=True,
+    ),
+}
+
+# Token keep-ratio buckets for the AOT-compiled pruned-attention variants.
+PRUNE_BUCKETS = (0.75, 0.50)
+# Serving batch buckets (compiled for sd2_tiny, used by the coordinator).
+BATCH_BUCKETS = (2, 4, 8)
+
+
+def betas() -> list:
+    """Linear beta schedule, matching rust/src/solvers/schedule.rs."""
+    return [
+        BETA_START + (BETA_END - BETA_START) * i / (TRAIN_T - 1) for i in range(TRAIN_T)
+    ]
+
+
+def alphas_cumprod() -> list:
+    out, acc = [], 1.0
+    for b in betas():
+        acc *= 1.0 - b
+        out.append(acc)
+    return out
+
+
+def sinusoidal_dim(d: int) -> int:
+    return d
+
+
+def timestep_embedding_freqs(d: int, max_period: float = 10000.0) -> list:
+    half = d // 2
+    return [math.exp(-math.log(max_period) * i / half) for i in range(half)]

@@ -1,0 +1,180 @@
+"""Build-time training of the model zoo (never on the request path).
+
+A hand-rolled Adam loop (optax is not available in this image) trains each
+tiny model on its procedural corpus with classifier-free-guidance dropout.
+Weights land in artifacts/weights/<model>.npz; aot.py folds them into the
+lowered HLO as constants, so the rust runtime never touches weight files.
+
+SADA itself stays training-free: this step only manufactures the smooth,
+converged denoisers the paper assumes as its starting point (DESIGN.md SS1).
+"""
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from . import kernels
+from .model import forward, init_params
+from .specs import SPECS, TRAIN_T, ModelSpec, alphas_cumprod
+
+DEFAULT_STEPS = int(os.environ.get("SADA_TRAIN_STEPS", "900"))
+BATCH = int(os.environ.get("SADA_TRAIN_BATCH", "48"))
+LR = 2e-3
+CFG_DROP = 0.1
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mhat = jax.tree_util.tree_map(lambda a: a / (1 - b1**step), m)
+    vhat = jax.tree_util.tree_map(lambda a: a / (1 - b2**step), v)
+    params = jax.tree_util.tree_map(
+        lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps), params, mhat, vhat
+    )
+    return params, m, v
+
+
+def _loss_fn(params, spec: ModelSpec, ab_table, x0, cond, edge, key):
+    b = x0.shape[0]
+    k_t, k_eps, k_drop = jax.random.split(key, 3)
+    eps = jax.random.normal(k_eps, x0.shape, jnp.float32)
+    drop = jax.random.uniform(k_drop, (b, 1)) < CFG_DROP
+    cond = jnp.where(drop, 0.0, cond)
+    if spec.predict == "eps":
+        t_idx = jax.random.randint(k_t, (b,), 1, TRAIN_T)
+        ab = ab_table[t_idx]
+        a = jnp.sqrt(ab)[:, None, None, None]
+        s = jnp.sqrt(1.0 - ab)[:, None, None, None]
+        x_t = a * x0 + s * eps
+        t_norm = t_idx.astype(jnp.float32) / TRAIN_T
+        target = eps
+    else:  # velocity / rectified flow: x_t = (1-t) x0 + t eps, v = eps - x0
+        t = jax.random.uniform(k_t, (b,), minval=1e-3, maxval=1.0 - 1e-3)
+        tb = t[:, None, None, None]
+        x_t = (1.0 - tb) * x0 + tb * eps
+        t_norm = t
+        target = eps - x0
+    pred, _, _ = forward(spec, params, x_t, t_norm, cond, edge=edge)
+    return jnp.mean(jnp.square(pred - target))
+
+
+def make_train_step(spec: ModelSpec, ab_table, lr):
+    @jax.jit
+    def step_fn(params, m, v, step, lr_now, x0, cond, edge, key):
+        loss, grads = jax.value_and_grad(_loss_fn)(
+            params, spec, ab_table, x0, cond, edge, key
+        )
+        params, m, v = adam_update(params, grads, m, v, step, lr_now)
+        return params, m, v, loss
+
+    return step_fn
+
+
+def _batch_for(spec: ModelSpec, rng: np.random.RandomState):
+    if spec.name == "music_tiny":
+        x0, cond = corpus.music_batch(rng, BATCH)
+        return x0, cond, None
+    x0, cond = corpus.image_batch(rng, BATCH)
+    edge = None
+    if spec.has_control:
+        edge = np.stack([corpus.edge_map(im) for im in x0])
+    return x0, cond, edge
+
+
+def train_model(spec: ModelSpec, steps: int = DEFAULT_STEPS, seed: int = 0, log_every=100):
+    """Train one model; returns (params, losses)."""
+    kernels.set_impl("ref")  # jnp kernels for fast differentiable training
+    key = jax.random.PRNGKey(seed)
+    params = init_params(spec, key)
+    m, v = adam_init(params)
+    ab_table = jnp.asarray(alphas_cumprod(), jnp.float32)
+    step_fn = make_train_step(spec, ab_table, LR)
+    rng = np.random.RandomState(seed + 1)
+    losses = []
+    t0 = time.time()
+    import math
+    for i in range(1, steps + 1):
+        x0, cond, edge = _batch_for(spec, rng)
+        key, sub = jax.random.split(key)
+        # cosine decay to 10% of the base LR
+        lr_now = LR * (0.1 + 0.9 * 0.5 * (1 + math.cos(math.pi * i / steps)))
+        params, m, v, loss = step_fn(params, m, v, i, lr_now, x0, cond, edge, sub)
+        if i % log_every == 0 or i == 1:
+            losses.append(float(loss))
+            print(f"[train {spec.name}] step {i:5d} loss {float(loss):.4f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    return params, losses
+
+
+def flatten_params(params, prefix=""):
+    """dict pytree -> flat {dotted.name: array} for npz storage."""
+    flat = {}
+    if isinstance(params, dict):
+        for k, val in params.items():
+            flat.update(flatten_params(val, f"{prefix}{k}."))
+    elif isinstance(params, (list, tuple)):
+        for i, val in enumerate(params):
+            flat.update(flatten_params(val, f"{prefix}{i}."))
+    else:
+        flat[prefix[:-1]] = np.asarray(params)
+    return flat
+
+
+def unflatten_params(flat: dict):
+    """Inverse of flatten_params (lists detected by integer keys)."""
+    tree = {}
+    for name, arr in flat.items():
+        parts = name.split(".")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(arr)
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(k.isdigit() for k in keys):
+            return [fix(node[k]) for k in sorted(keys, key=int)]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(tree)
+
+
+def save_params(params, path: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez(path, **flatten_params(params))
+
+
+def load_params(path: str):
+    with np.load(path) as z:
+        return unflatten_params({k: z[k] for k in z.files})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts/weights")
+    ap.add_argument("--steps", type=int, default=DEFAULT_STEPS)
+    ap.add_argument("--models", default=",".join(SPECS))
+    args = ap.parse_args()
+    for name in args.models.split(","):
+        spec = SPECS[name]
+        params, losses = train_model(spec, steps=args.steps)
+        path = os.path.join(args.out_dir, f"{name}.npz")
+        save_params(params, path)
+        print(f"[train] saved {path} (final loss {losses[-1]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

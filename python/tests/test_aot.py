@@ -1,0 +1,79 @@
+"""AOT pipeline: lowering produces loadable HLO text with full constants,
+correct I/O signatures, and numerics matching the jitted python function."""
+
+import numpy as np
+import jax
+import pytest
+
+from compile import kernels
+from compile.aot import _variant_io, lower_variant, to_hlo_text
+from compile.model import build_full_fn, init_params
+from compile.specs import SPECS
+
+
+@pytest.fixture(scope="module")
+def sd2():
+    kernels.set_impl("pallas")
+    spec = SPECS["sd2_tiny"]
+    params = init_params(spec, jax.random.PRNGKey(2))
+    return spec, params
+
+
+def test_hlo_text_contains_large_constants(sd2):
+    """Regression: as_hlo_text must NOT elide weights as '{...}' (that
+    parses back as zeros and produced all-zero executables)."""
+    spec, params = sd2
+    text, _, _ = lower_variant(spec, params, "full", 1)
+    assert "constant({...}" not in text, "large constants were elided"
+    assert "ENTRY" in text and "HloModule" in text
+
+
+def test_variant_io_signatures(sd2):
+    spec, _ = sd2
+    ins, outs = _variant_io(spec, "full", 1)
+    assert [e["name"] for e in ins] == ["x", "t", "cond", "gs"]
+    assert [e["name"] for e in outs] == ["out", "deep", "caches"]
+    ins, outs = _variant_io(spec, "prune", 1, n_keep=32)
+    assert "keep_idx" in [e["name"] for e in ins]
+    assert [e["dtype"] for e in ins if e["name"] == "keep_idx"] == ["i32"]
+    ins, outs = _variant_io(spec, "shallow", 1)
+    assert [e["name"] for e in ins][-1] == "deep"
+    with pytest.raises(ValueError):
+        _variant_io(spec, "bogus", 1)
+
+
+def test_control_variant_includes_edge():
+    spec = SPECS["control_tiny"]
+    ins, _ = _variant_io(spec, "full", 1)
+    assert "edge" in [e["name"] for e in ins]
+
+
+def test_lowering_shapes_respect_batch(sd2):
+    spec, params = sd2
+    text, ins, outs = lower_variant(spec, params, "full", 2)
+    assert ins[0]["shape"] == [2, 16, 16, 3]
+    assert outs[2]["shape"] == [spec.n_blocks, 4, spec.n_tokens, spec.d]
+    assert "f32[2,16,16,3]" in text
+
+
+def test_weights_are_embedded_verbatim(sd2):
+    """The trained weights must appear as dense constants in the HLO text
+    (numeric fidelity of the interchange format; the end-to-end replay is
+    asserted on the rust side in rust/tests/golden_replay.rs)."""
+    spec, params = sd2
+    text, _, _ = lower_variant(spec, params, "full", 1)
+    # a large weight matrix: its element count should show up as a dense
+    # constant payload with thousands of comma-separated values
+    d = spec.d
+    assert f"f32[{spec.patch_dim},{d}]" in text
+    n_commas = text.count(",")
+    # 5 blocks x (qkv 3d^2 + ...) >> 100k scalars when weights are embedded
+    assert n_commas > 100_000, f"only {n_commas} scalars serialized — weights missing"
+
+
+def test_cfg_pair_shape_doubling_in_hlo(sd2):
+    """The CFG (cond, uncond) pair must be evaluated inside the graph: the
+    lowered module contains 2x-batch intermediate shapes."""
+    spec, params = sd2
+    text, _, _ = lower_variant(spec, params, "full", 1)
+    assert f"f32[2,{spec.n_tokens},{spec.d}]" in text

@@ -1,0 +1,69 @@
+"""Procedural corpora: determinism, ranges, conditioning informativeness."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import corpus
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_image_ranges_and_shapes(seed):
+    rng = np.random.RandomState(seed)
+    img, cond = corpus.make_image(rng)
+    assert img.shape == (16, 16, 3)
+    assert cond.shape == (corpus.COND_DIM,)
+    assert np.all(img >= -1.0) and np.all(img <= 1.0)
+    assert np.all(np.abs(cond) <= 1.0)  # tanh-squashed
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_music_ranges_and_shapes(seed):
+    rng = np.random.RandomState(seed)
+    spec, cond = corpus.make_music(rng)
+    assert spec.shape == (16, 64, 1)
+    assert np.all(spec >= -1.0) and np.all(spec <= 1.0)
+    assert np.isfinite(cond).all()
+
+
+def test_determinism():
+    a = corpus.image_batch(np.random.RandomState(5), 4)
+    b = corpus.image_batch(np.random.RandomState(5), 4)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_images_are_diverse():
+    imgs, conds = corpus.image_batch(np.random.RandomState(1), 16)
+    # pairwise distances should be clearly nonzero
+    d = np.abs(imgs[0] - imgs[1]).mean()
+    assert d > 0.05
+    assert np.std(conds, axis=0).mean() > 0.05
+
+
+def test_cond_reflects_params():
+    """Images with different generator params get different conds."""
+    rng = np.random.RandomState(3)
+    _, c1 = corpus.make_image(rng)
+    _, c2 = corpus.make_image(rng)
+    assert not np.allclose(c1, c2)
+
+
+def test_edge_map_binary_and_marks_boundaries():
+    rng = np.random.RandomState(7)
+    img, _ = corpus.make_image(rng)
+    e = corpus.edge_map(img)
+    assert e.shape == (16, 16, 1)
+    assert set(np.unique(e)).issubset({0.0, 1.0})
+    assert 0.0 < e.mean() < 0.6  # edges are sparse but present
+
+
+def test_prompt_bank_deterministic_and_sized():
+    a = corpus.prompt_bank(32)
+    b = corpus.prompt_bank(32)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (32, corpus.COND_DIM)
+    m = corpus.prompt_bank(8, kind="music")
+    assert m.shape == (8, corpus.COND_DIM)

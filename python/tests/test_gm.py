@@ -1,0 +1,59 @@
+"""Analytic Gaussian-mixture oracle: score correctness & sampling sanity."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.gm import GaussianMixture
+
+
+def numeric_score(gm, x, a_t, sigma_t, eps=1e-5):
+    """Finite-difference gradient of log p_t(x)."""
+
+    def logp(z):
+        v = a_t**2 * gm.sigmas**2 + sigma_t**2
+        d = z.shape[-1]
+        diffs = z[None, :] - a_t * gm.means
+        comp = (
+            np.log(gm.weights)
+            - 0.5 * d * np.log(2 * np.pi * v)
+            - 0.5 * (diffs**2).sum(-1) / v
+        )
+        m = comp.max()
+        return m + np.log(np.exp(comp - m).sum())
+
+    g = np.zeros_like(x)
+    for i in range(len(x)):
+        e = np.zeros_like(x)
+        e[i] = eps
+        g[i] = (logp(x + e) - logp(x - e)) / (2 * eps)
+    return g
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_eps_star_matches_numeric_score(seed):
+    gm = GaussianMixture.default(dim=5, k=3, seed=seed % 7 + 1)
+    rng = np.random.RandomState(seed)
+    x = rng.randn(5) * 2
+    a_t, sigma_t = 0.8, 0.6
+    eps = gm.eps_star(x, a_t, sigma_t)
+    score = numeric_score(gm, x, a_t, sigma_t)
+    np.testing.assert_allclose(eps, -sigma_t * score, rtol=1e-4, atol=1e-6)
+
+
+def test_sample_x0_statistics():
+    gm = GaussianMixture.default(dim=4, k=2, seed=3)
+    rng = np.random.RandomState(0)
+    xs = gm.sample_x0(rng, 20_000)
+    want_mean = (gm.weights[:, None] * gm.means).sum(0)
+    np.testing.assert_allclose(xs.mean(0), want_mean, atol=0.05)
+
+
+def test_eps_star_at_high_noise_is_near_whitened_x():
+    """As a_t -> 0 the marginal is ~ N(0, sigma^2): eps* ~ x / sigma."""
+    gm = GaussianMixture.default(dim=6, k=3, seed=5)
+    rng = np.random.RandomState(2)
+    x = rng.randn(6)
+    eps = gm.eps_star(x, 1e-4, 1.0)
+    np.testing.assert_allclose(eps, x, rtol=0.05, atol=0.05)

@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The CORE correctness signal of the compile path: the models are built
+exclusively on these kernels, so kernel == ref implies the lowered HLO
+computes the reference math. Hypothesis sweeps shapes and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import fused_mha, ln_modulate
+from compile.kernels.ref import ref_ln_modulate, ref_mha
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------- MHA
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    h=st.sampled_from([1, 2, 4, 6]),
+    n=st.sampled_from([4, 16, 32, 48, 64]),
+    dh=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_mha_matches_ref(b, h, n, dh, seed):
+    q = _rand(seed, (b, h, n, dh), jnp.float32)
+    k = _rand(seed + 1, (b, h, n, dh), jnp.float32)
+    v = _rand(seed + 2, (b, h, n, dh), jnp.float32)
+    np.testing.assert_allclose(fused_mha(q, k, v), ref_mha(q, k, v), rtol=3e-5, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_mha_bf16(seed):
+    q = _rand(seed, (2, 4, 64, 16), jnp.bfloat16)
+    k = _rand(seed + 1, (2, 4, 64, 16), jnp.bfloat16)
+    v = _rand(seed + 2, (2, 4, 64, 16), jnp.bfloat16)
+    got = fused_mha(q, k, v).astype(jnp.float32)
+    want = ref_mha(q, k, v).astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_mha_shape_mismatch_raises():
+    q = jnp.zeros((1, 2, 16, 8))
+    k = jnp.zeros((1, 2, 8, 8))
+    with pytest.raises(ValueError):
+        fused_mha(q, k, q)
+
+
+def test_mha_softmax_rows_are_convex():
+    """Attention output of constant-V must be (numerically) constant."""
+    q = _rand(0, (1, 2, 32, 8), jnp.float32)
+    k = _rand(1, (1, 2, 32, 8), jnp.float32)
+    v = jnp.ones((1, 2, 32, 8), jnp.float32) * 3.25
+    out = fused_mha(q, k, v)
+    np.testing.assert_allclose(out, 3.25 * np.ones_like(out), rtol=1e-5)
+
+
+def test_mha_permutation_equivariance():
+    """Permuting tokens permutes outputs identically (no positional bias)."""
+    q = _rand(3, (1, 2, 16, 8), jnp.float32)
+    k = _rand(4, (1, 2, 16, 8), jnp.float32)
+    v = _rand(5, (1, 2, 16, 8), jnp.float32)
+    perm = np.random.RandomState(0).permutation(16)
+    out = np.asarray(fused_mha(q, k, v))
+    out_p = np.asarray(fused_mha(q[:, :, perm], k[:, :, perm], v[:, :, perm]))
+    np.testing.assert_allclose(out[:, :, perm], out_p, rtol=1e-5, atol=1e-5)
+
+
+def test_mha_extreme_logits_stable():
+    """Large-magnitude Q/K must not produce NaN (max-subtraction inside)."""
+    q = 60.0 * _rand(7, (1, 1, 16, 8), jnp.float32)
+    k = 60.0 * _rand(8, (1, 1, 16, 8), jnp.float32)
+    v = _rand(9, (1, 1, 16, 8), jnp.float32)
+    out = np.asarray(fused_mha(q, k, v))
+    assert np.isfinite(out).all()
+
+
+def test_mha_grad_matches_ref_grad():
+    """custom_vjp backward (used by build-time training) == ref VJP."""
+    q = _rand(10, (1, 2, 16, 8), jnp.float32)
+    k = _rand(11, (1, 2, 16, 8), jnp.float32)
+    v = _rand(12, (1, 2, 16, 8), jnp.float32)
+
+    g1 = jax.grad(lambda a, b, c: jnp.sum(fused_mha(a, b, c) ** 2), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda a, b, c: jnp.sum(ref_mha(a, b, c) ** 2), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------------- LN + mod
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    n=st.sampled_from([4, 16, 64, 144]),
+    d=st.sampled_from([16, 64, 96]),
+    seed=st.integers(0, 2**16),
+)
+def test_ln_modulate_matches_ref(b, n, d, seed):
+    x = _rand(seed, (b, n, d), jnp.float32)
+    sc = 0.5 * _rand(seed + 1, (b, d), jnp.float32)
+    sh = 0.5 * _rand(seed + 2, (b, d), jnp.float32)
+    np.testing.assert_allclose(
+        ln_modulate(x, sc, sh), ref_ln_modulate(x, sc, sh), rtol=3e-5, atol=3e-5
+    )
+
+
+def test_ln_modulate_zero_mod_is_plain_ln():
+    x = _rand(20, (2, 16, 32), jnp.float32)
+    z = jnp.zeros((2, 32))
+    out = np.asarray(ln_modulate(x, z, z))
+    np.testing.assert_allclose(out.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(-1), 1.0, atol=1e-3)
+
+
+def test_ln_modulate_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        ln_modulate(jnp.zeros((2, 16, 32)), jnp.zeros((3, 32)), jnp.zeros((2, 32)))
+
+
+def test_ln_modulate_constant_rows_no_nan():
+    """Zero-variance rows must stay finite thanks to the eps term."""
+    x = jnp.ones((1, 8, 16)) * 4.0
+    z = jnp.zeros((1, 16))
+    out = np.asarray(ln_modulate(x, z, z))
+    assert np.isfinite(out).all()
+
+
+def test_ln_modulate_grad_matches_ref_grad():
+    x = _rand(30, (2, 16, 32), jnp.float32)
+    sc = 0.3 * _rand(31, (2, 32), jnp.float32)
+    sh = 0.3 * _rand(32, (2, 32), jnp.float32)
+    g1 = jax.grad(lambda a, b, c: jnp.sum(ln_modulate(a, b, c) ** 2), argnums=(0, 1, 2))(x, sc, sh)
+    g2 = jax.grad(lambda a, b, c: jnp.sum(ref_ln_modulate(a, b, c) ** 2), argnums=(0, 1, 2))(
+        x, sc, sh
+    )
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,210 @@
+"""L2 model zoo: shapes, variants, CFG wrapper, pruning-cache semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import kernels
+from compile.model import (
+    build_full_fn,
+    build_prune_fn,
+    build_shallow_fn,
+    forward,
+    forward_shallow,
+    init_params,
+    patchify,
+    unpatchify,
+)
+from compile.specs import SPECS
+
+kernels.set_impl("ref")  # fast jnp kernels; kernel==ref pinned in test_kernels
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    return {
+        name: init_params(spec, jax.random.PRNGKey(i))
+        for i, (name, spec) in enumerate(SPECS.items())
+    }
+
+
+def _inputs(spec, batch=2, seed=0):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(batch, spec.img_h, spec.img_w, spec.channels).astype(np.float32)
+    t = rng.uniform(0.05, 0.95, batch).astype(np.float32)
+    cond = rng.randn(batch, spec.cond_dim).astype(np.float32)
+    edge = None
+    if spec.has_control:
+        edge = rng.rand(batch, spec.img_h, spec.img_w, 1).astype(np.float32)
+    return x, t, cond, edge
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    patch=st.sampled_from([1, 2, 4]),
+    hw=st.sampled_from([(8, 8), (16, 16), (16, 64)]),
+    c=st.sampled_from([1, 3]),
+)
+def test_patchify_roundtrip(seed, patch, hw, c):
+    h, w = hw
+    if h % patch or w % patch:
+        return
+    rng = np.random.RandomState(seed)
+    x = rng.randn(2, h, w, c).astype(np.float32)
+
+    class S:  # minimal spec-like for unpatchify
+        img_h, img_w, channels = h, w, c
+
+    S.patch = patch
+    tok = patchify(jnp.asarray(x), patch)
+    assert tok.shape == (2, (h // patch) * (w // patch), patch * patch * c)
+    back = unpatchify(tok, S)
+    np.testing.assert_allclose(back, x, rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", list(SPECS))
+def test_forward_shapes(zoo, name):
+    spec = SPECS[name]
+    x, t, cond, edge = _inputs(spec)
+    out, deep, caches = forward(spec, zoo[name], x, t, cond, edge=edge)
+    assert out.shape == x.shape
+    assert deep.shape == (2, spec.n_tokens, spec.d)
+    assert caches.shape == (spec.n_blocks, 2, spec.n_tokens, spec.d)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("name", list(SPECS))
+def test_forward_depends_on_t_and_cond(zoo, name):
+    spec = SPECS[name]
+    x, t, cond, edge = _inputs(spec)
+    base, _, _ = forward(spec, zoo[name], x, t, cond, edge=edge)
+    out_t, _, _ = forward(spec, zoo[name], x, t * 0.5, cond, edge=edge)
+    out_c, _, _ = forward(spec, zoo[name], x, t, cond * -1.0, edge=edge)
+    # zero-init output head means raw init gives all-zeros; perturb weights
+    # instead: with a trained or random head the outputs must differ. Here we
+    # only require that the *conditioning signal* flows (non-crash + shape),
+    # so assert arrays exist; value-level checks follow after head warmup.
+    p = jax.tree_util.tree_map(
+        lambda a: a + 0.01 * np.random.RandomState(0).randn(*a.shape).astype(np.float32),
+        zoo[name],
+    )
+    base, _, _ = forward(spec, p, x, t, cond, edge=edge)
+    out_t, _, _ = forward(spec, p, x, t * 0.5, cond, edge=edge)
+    out_c, _, _ = forward(spec, p, x, t, cond * -1.0, edge=edge)
+    assert not np.allclose(base, out_t)
+    assert not np.allclose(base, out_c)
+
+
+def test_prune_full_equivalence_when_keeping_all(zoo):
+    """keep_idx == identity must reproduce the full forward exactly."""
+    spec = SPECS["sd2_tiny"]
+    x, t, cond, _ = _inputs(spec)
+    params = zoo["sd2_tiny"]
+    out_full, _, caches_full = forward(spec, params, x, t, cond)
+    keep = jnp.arange(spec.n_tokens, dtype=jnp.int32)
+    caches0 = jnp.zeros_like(caches_full)
+    out_p, _, caches_p = forward(spec, params, x, t, cond, keep_idx=keep, caches=caches0)
+    np.testing.assert_allclose(out_p, out_full, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(caches_p, caches_full, rtol=1e-5, atol=1e-5)
+
+
+def test_prune_uses_cache_for_dropped_tokens(zoo):
+    """Dropped token slots of the new cache must equal the old cache."""
+    spec = SPECS["sd2_tiny"]
+    x, t, cond, _ = _inputs(spec)
+    params = zoo["sd2_tiny"]
+    _, _, caches = forward(spec, params, x, t, cond)
+    keep = jnp.arange(32, dtype=jnp.int32)  # keep the first 32 tokens
+    _, _, caches_new = forward(spec, params, x, t, cond, keep_idx=keep, caches=caches)
+    kept = np.asarray(caches_new)[:, :, :32, :]
+    dropped_new = np.asarray(caches_new)[:, :, 32:, :]
+    dropped_old = np.asarray(caches)[:, :, 32:, :]
+    np.testing.assert_allclose(dropped_new, dropped_old)  # untouched slots
+    assert not np.allclose(kept, np.asarray(caches)[:, :, :32, :])  # fresh slots
+
+
+def test_shallow_matches_full_when_deep_is_fresh(zoo):
+    """Shallow path with the *current* deep feature == full forward."""
+    spec = SPECS["sd2_tiny"]
+    x, t, cond, _ = _inputs(spec)
+    params = zoo["sd2_tiny"]
+    out_full, deep, _ = forward(spec, params, x, t, cond)
+    out_shallow = forward_shallow(spec, params, x, t, cond, deep)
+    np.testing.assert_allclose(out_shallow, out_full, rtol=1e-5, atol=1e-5)
+
+
+def test_cfg_wrapper_gs_zero_is_uncond(zoo):
+    """gs=0 must equal the unconditional branch; gs=1 the conditional one."""
+    spec = SPECS["sd2_tiny"]
+    params = zoo["sd2_tiny"]
+    fn = build_full_fn(spec, params, batch=1)
+    rng = np.random.RandomState(3)
+    x = rng.randn(1, 16, 16, 3).astype(np.float32)
+    t = np.array([0.4], np.float32)
+    cond = rng.randn(1, spec.cond_dim).astype(np.float32)
+    out0, _, _ = fn(x, t, cond, np.array([0.0], np.float32))
+    uncond, _, _ = forward(spec, params, x, t, np.zeros_like(cond))
+    np.testing.assert_allclose(out0, uncond, rtol=1e-5, atol=1e-5)
+    out1, _, _ = fn(x, t, cond, np.array([1.0], np.float32))
+    condo, _, _ = forward(spec, params, x, t, cond)
+    np.testing.assert_allclose(out1, condo, rtol=1e-5, atol=1e-5)
+
+
+def test_cfg_wrapper_linear_in_gs(zoo):
+    spec = SPECS["sd2_tiny"]
+    fn = build_full_fn(spec, zoo["sd2_tiny"], batch=1)
+    rng = np.random.RandomState(4)
+    x = rng.randn(1, 16, 16, 3).astype(np.float32)
+    t = np.array([0.6], np.float32)
+    cond = rng.randn(1, 32).astype(np.float32)
+    o0 = np.asarray(fn(x, t, cond, np.array([0.0], np.float32))[0])
+    o1 = np.asarray(fn(x, t, cond, np.array([1.0], np.float32))[0])
+    o3 = np.asarray(fn(x, t, cond, np.array([3.0], np.float32))[0])
+    np.testing.assert_allclose(o3, o0 + 3.0 * (o1 - o0), rtol=1e-4, atol=1e-5)
+
+
+def test_build_prune_fn_signature(zoo):
+    spec = SPECS["sd2_tiny"]
+    fn = build_prune_fn(spec, zoo["sd2_tiny"], n_keep=48, batch=1)
+    rng = np.random.RandomState(5)
+    x = rng.randn(1, 16, 16, 3).astype(np.float32)
+    caches = np.zeros((spec.n_blocks, 2, spec.n_tokens, spec.d), np.float32)
+    keep = np.arange(48, dtype=np.int32)
+    out, new_caches = fn(x, np.array([0.5], np.float32), rng.randn(1, 32).astype(np.float32),
+                         np.array([2.0], np.float32), keep, caches)
+    assert out.shape == (1, 16, 16, 3)
+    assert new_caches.shape == caches.shape
+
+
+def test_build_shallow_fn_signature(zoo):
+    spec = SPECS["sdxl_tiny"]
+    fn = build_shallow_fn(spec, zoo["sdxl_tiny"], batch=1)
+    rng = np.random.RandomState(6)
+    x = rng.randn(1, 16, 16, 3).astype(np.float32)
+    deep = rng.randn(2, spec.n_tokens, spec.d).astype(np.float32)
+    (out,) = fn(x, np.array([0.5], np.float32), rng.randn(1, 32).astype(np.float32),
+                np.array([2.0], np.float32), deep)
+    assert out.shape == (1, 16, 16, 3)
+
+
+def test_control_edge_changes_output(zoo):
+    spec = SPECS["control_tiny"]
+    params = jax.tree_util.tree_map(
+        lambda a: a + 0.01 * np.random.RandomState(1).randn(*a.shape).astype(np.float32),
+        zoo["control_tiny"],
+    )
+    x, t, cond, edge = _inputs(spec)
+    o1, _, _ = forward(spec, params, x, t, cond, edge=edge)
+    o2, _, _ = forward(spec, params, x, t, cond, edge=np.zeros_like(edge))
+    assert not np.allclose(o1, o2)
+
+
+def test_control_requires_edge(zoo):
+    spec = SPECS["control_tiny"]
+    x, t, cond, _ = _inputs(spec)
+    with pytest.raises(ValueError):
+        forward(spec, zoo["control_tiny"], x, t, cond)

@@ -1,0 +1,232 @@
+"""Solver math + SADA numerics on the analytic Gaussian-mixture ODE.
+
+These tests validate the *numerical* claims the paper relies on, with an
+exact ground truth (gm.py) and no learned component:
+
+* DDIM/Euler == first-order DPM++ identity,
+* DPM++(2M) converges with higher order than Euler on the PF-ODE,
+* AM-3 estimator (Thm 3.5) beats the plain 3rd-order FDM (paper Fig. 3),
+* Lagrange reconstruction (Thm 3.7) is exact on degree-k polynomials,
+* the AM-3 / FDM-3 coefficient identities of Prop. B.1.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.gm import GaussianMixture
+from compile.sampler_ref import (
+    ABAR,
+    ode_coeffs,
+    DpmPP2MSolver,
+    EulerSolver,
+    FlowEulerSolver,
+    alpha_sigma,
+    timestep_grid,
+    x0_from_eps,
+)
+from compile.specs import TRAIN_T
+
+
+def test_abar_table_monotone():
+    assert ABAR[0] == 1.0
+    assert np.all(np.diff(ABAR) < 0)
+    assert ABAR[-1] > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(steps=st.sampled_from([5, 10, 15, 25, 50]))
+def test_timestep_grid_properties(steps):
+    g = timestep_grid(steps)
+    assert g[0] == TRAIN_T and g[-1] == 0
+    assert len(g) == steps + 1
+    assert np.all(np.diff(g) < 0)
+
+
+def test_x0_eps_roundtrip():
+    rng = np.random.RandomState(0)
+    x0 = rng.randn(8)
+    eps = rng.randn(8)
+    j = 600
+    a, s = alpha_sigma(j)
+    x = a * x0 + s * eps
+    np.testing.assert_allclose(x0_from_eps(x, eps, j), x0, rtol=1e-9)
+
+
+def _gm_sample(solver_name, steps, gm, x_init, snap=None):
+    """Sample the GM PF-ODE with the exact eps predictor."""
+    grid = timestep_grid(steps)
+    solver = EulerSolver() if solver_name == "euler" else DpmPP2MSolver()
+    x = x_init.copy()
+    traj = [x.copy()]
+    for i in range(steps):
+        jf, jt = int(grid[i]), int(grid[i + 1])
+        a, s = alpha_sigma(jf)
+        eps = gm.eps_star(x, a, s)
+        x, _ = solver.step(x, eps, jf, jt)
+        traj.append(x.copy())
+    return x, traj
+
+
+def test_dpmpp_first_step_equals_euler():
+    """With no history, one DPM++(2M) step == one DDIM/Euler step."""
+    gm = GaussianMixture.default()
+    rng = np.random.RandomState(1)
+    x = rng.randn(8)
+    grid = timestep_grid(10)
+    jf, jt = int(grid[0]), int(grid[1])
+    a, s = alpha_sigma(jf)
+    eps = gm.eps_star(x, a, s)
+    xe, _ = EulerSolver().step(x, eps, jf, jt)
+    xd, _ = DpmPP2MSolver().step(x, eps, jf, jt)
+    np.testing.assert_allclose(xe, xd, rtol=1e-8, atol=1e-10)
+
+
+def test_solver_convergence_order():
+    """Both solvers converge to the fine-grid solution; DPM++ faster."""
+    gm = GaussianMixture.default()
+    rng = np.random.RandomState(2)
+    x = rng.randn(8)
+    ref, _ = _gm_sample("dpmpp", 400, gm, x)
+    err_e = np.linalg.norm(_gm_sample("euler", 25, gm, x)[0] - ref)
+    err_e2 = np.linalg.norm(_gm_sample("euler", 50, gm, x)[0] - ref)
+    err_d = np.linalg.norm(_gm_sample("dpmpp", 25, gm, x)[0] - ref)
+    err_d2 = np.linalg.norm(_gm_sample("dpmpp", 50, gm, x)[0] - ref)
+    assert err_e2 < err_e  # refinement helps
+    assert err_d2 < err_d
+    assert err_d < err_e  # higher order wins at equal budget
+    # halving the step should shrink euler error ~2x, dpm++ faster than 2x
+    assert err_e / err_e2 > 1.5
+    assert err_d / err_d2 > 2.0
+
+
+def test_flow_euler_exact_on_linear_field():
+    """Rectified-flow ODE with constant v is integrated exactly."""
+    s = FlowEulerSolver()
+    x = np.ones(4)
+    v = np.array([1.0, -2.0, 0.5, 0.0])
+    x1, x0 = s.step(x, v, 1.0, 0.4)
+    np.testing.assert_allclose(x1, x + (0.4 - 1.0) * v)
+    np.testing.assert_allclose(x0, x - 1.0 * v)
+
+
+# --------------------------------------------------------------- SADA math
+
+
+def am3_extrapolate(x_t, y_t, y_t1, y_t2, dt):
+    """Thm 3.5 estimator: x_{t-1} = x_t - 5dt/6 y_t - 5dt/6 y_{t+1} + 2dt/3 y_{t+2}."""
+    return x_t - (5 * dt / 6) * y_t - (5 * dt / 6) * y_t1 + (2 * dt / 3) * y_t2
+
+
+def fdm3_extrapolate(x_t, x_t1, x_t2):
+    """Plain 3rd-order backward finite difference: 3x_t - 3x_{t+1} + x_{t+2}."""
+    return 3 * x_t - 3 * x_t1 + x_t2
+
+
+def test_fdm3_exact_on_quadratics():
+    """Degree-2 polynomials are extrapolated exactly by the 3rd-order FDM."""
+    for coefs in [(1.0, 2.0, 3.0), (-0.5, 0.1, 0.0)]:
+        p = np.poly1d(coefs)
+        h = 0.1
+        t = 0.7
+        got = fdm3_extrapolate(p(t), p(t + h), p(t + 2 * h))
+        np.testing.assert_allclose(got, p(t - h), rtol=1e-10)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    a=st.floats(-2, 2), b=st.floats(-2, 2), c=st.floats(-2, 2),
+    h=st.floats(0.01, 0.3), t=st.floats(0.2, 0.8),
+)
+def test_am3_exact_on_quadratics(a, b, c, h, t):
+    """AM-3 with exact derivatives reproduces quadratics to O(h^2) or better."""
+    p = np.poly1d([a, b, c])
+    d = p.deriv()
+    # NOTE: our y-convention is dx/dt along *descending* t with step h.
+    got = am3_extrapolate(p(t), d(t), d(t + h), d(t + 2 * h), h)
+    err = abs(got - p(t - h))
+    # local truncation O(h^2): bound with a generous constant
+    assert err <= 10.0 * (abs(a) + 1e-12) * h**2 + 1e-9
+
+
+def test_am3_beats_fdm3_on_gm_trajectory():
+    """Paper Fig. 3 shape: AM-3 (exact ODE gradients, Thm 3.5) has lower
+    mean reconstruction error than the plain 3rd-order finite difference."""
+    gm = GaussianMixture.default()
+    rng = np.random.RandomState(3)
+    steps = 50
+    errs_am, errs_fd = [], []
+    for trial in range(10):
+        x = rng.randn(8)
+        _, traj = _gm_sample("dpmpp", steps, gm, x)
+        traj = np.array(traj)
+        grid = timestep_grid(steps)
+        # exact PF-ODE gradient y_i = c1 x_i + c2 eps*(x_i) at each grid point
+        ys = []
+        for i in range(steps):
+            jf = int(grid[i])
+            a, s = alpha_sigma(jf)
+            eps = gm.eps_star(traj[i], a, s)
+            c1, c2 = ode_coeffs(jf)
+            ys.append(c1 * traj[i] + c2 * eps)
+        h = 1.0 / steps
+        for i in range(3, 35):
+            am = traj[i] - (5 * h / 6) * ys[i] - (5 * h / 6) * ys[i - 1] + (2 * h / 3) * ys[i - 2]
+            fd = fdm3_extrapolate(traj[i], traj[i - 1], traj[i - 2])
+            errs_am.append(np.linalg.norm(am - traj[i + 1]))
+            errs_fd.append(np.linalg.norm(fd - traj[i + 1]))
+    assert np.mean(errs_am) < np.mean(errs_fd)
+
+
+def lagrange_reconstruct(ts, xs, t):
+    """Thm 3.7 interpolation."""
+    total = np.zeros_like(xs[0])
+    for i, ti in enumerate(ts):
+        w = 1.0
+        for j, tj in enumerate(ts):
+            if i != j:
+                w *= (t - tj) / (ti - tj)
+        total = total + w * xs[i]
+    return total
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), k=st.sampled_from([1, 2, 3]))
+def test_lagrange_exact_on_poly(seed, k):
+    """k+1 nodes reconstruct any degree-k polynomial exactly."""
+    rng = np.random.RandomState(seed)
+    coefs = rng.randn(k + 1)
+    p = np.poly1d(coefs)
+    ts = np.linspace(0.2, 0.8, k + 1)
+    xs = [np.array([p(t)]) for t in ts]
+    t_query = 0.55
+    got = lagrange_reconstruct(ts, xs, t_query)
+    np.testing.assert_allclose(got, [p(t_query)], rtol=1e-8, atol=1e-8)
+
+
+def test_lagrange_error_order():
+    """Interpolation error scales ~ h^{k+1} on a smooth function."""
+    f = np.cos
+    errs = []
+    for h in (0.2, 0.1, 0.05):
+        ts = np.array([0.5, 0.5 + h, 0.5 + 2 * h, 0.5 + 3 * h])
+        xs = [np.array([f(t)]) for t in ts]
+        got = lagrange_reconstruct(ts, xs, 0.5 + 1.5 * h)
+        errs.append(abs(got[0] - f(0.5 + 1.5 * h)))
+    # each halving of h should shrink error by ~2^4; require >= 8x
+    assert errs[0] / errs[1] > 8
+    assert errs[1] / errs[2] > 8
+
+
+def test_prop_b1_coefficients():
+    """Prop B.1: f(x-h) - sum alpha_i f(x+ih) == Delta^k f(x-h), k=3."""
+    rng = np.random.RandomState(5)
+    f = np.poly1d(rng.randn(6))  # any function; identity is algebraic
+    h, x = 0.13, 0.4
+    alphas = [3.0, -3.0, 1.0]  # (-1)^i C(3, i+1)
+    lhs = f(x - h) - sum(a * f(x + i * h) for i, a in enumerate(alphas))
+    delta3 = sum((-1) ** i * math.comb(3, i) * f(x - h + i * h) for i in range(4))
+    np.testing.assert_allclose(lhs, delta3, rtol=1e-9)

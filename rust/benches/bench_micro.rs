@@ -1,0 +1,134 @@
+//! Micro benchmarks of the L3 hot path (hand-rolled harness; the criterion
+//! crate is unavailable offline). Each entry reports ns/op over enough
+//! iterations for a stable mean. These are the SSPerf instrumentation:
+//! all host-side per-step costs must stay far below one model execution
+//! (~2.5 ms on this testbed).
+
+use std::time::Instant;
+
+use sada::rng::Rng;
+use sada::sada::{multistep::X0Buffer, stepwise};
+use sada::solvers::{ode, Schedule};
+use sada::tensor::{ops, Tensor};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    for _ in 0..iters.min(100) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{name:<42} {per:>12.0} ns/op   ({iters} iters)");
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let shape = [1usize, 16, 16, 3];
+    let x = Tensor::from_rng(&mut rng, &shape);
+    let y1 = Tensor::from_rng(&mut rng, &shape);
+    let y2 = Tensor::from_rng(&mut rng, &shape);
+    let y3 = Tensor::from_rng(&mut rng, &shape);
+    let schedule = Schedule::default_ddpm();
+
+    println!("== bench_micro: L3 per-step host costs (16x16x3 latents) ==");
+    bench("am3 extrapolation (Thm 3.5)", 200_000, || {
+        let _ = stepwise::am3(&x, &y1, &y2, &y3, 0.02);
+    });
+    bench("fdm3 extrapolation", 200_000, || {
+        let _ = stepwise::fdm3(&x, &y1, &y2);
+    });
+    bench("criterion dot + d2y (Crit 3.4)", 200_000, || {
+        let d2 = stepwise::d2y(&y1, &y2, &y3);
+        let _ = ops::dot(&x, &d2) < 0.0;
+    });
+    bench("token scores (64 tokens)", 100_000, || {
+        let _ = sada::sada::criterion::token_scores(&x, &y1, 16, 16, 3, 2);
+    });
+    bench("ode gradient y = c1 x + c2 eps", 200_000, || {
+        let _ = ode::gradient_eps(&schedule, 500, &x, &y1);
+    });
+    bench("lagrange reconstruct (4 nodes)", 100_000, || {
+        let mut buf = X0Buffer::new(4, 1e-9);
+        for (i, t) in [0.9, 0.8, 0.7, 0.6].iter().enumerate() {
+            let _ = i;
+            buf.push(*t, x.clone());
+        }
+        let _ = buf.reconstruct(0.55);
+    });
+    bench("dpm++ solver step", 100_000, || {
+        let mut s = sada::solvers::DpmPP2M::new(schedule.clone(), 50);
+        use sada::solvers::Solver;
+        let _ = s.step(&x, &y1, 10);
+    });
+
+    let lp = sada::metrics::LpipsRc::new(3);
+    bench("lpips-rc distance (16x16x3)", 2_000, || {
+        let _ = lp.distance(&x, &y1);
+    });
+    let fid = sada::metrics::FidRc::new(3);
+    bench("fid-rc feature extraction", 2_000, || {
+        let _ = fid.features(&x);
+    });
+
+    // batcher throughput
+    use sada::coordinator::DynamicBatcher;
+    bench("batcher push+poll (8 pending)", 50_000, || {
+        let mut b = DynamicBatcher::new(vec![2, 4, 8], 10.0);
+        for i in 0..8u64 {
+            let (tx, _rx) = std::sync::mpsc::channel();
+            b.push(
+                0.0,
+                sada::coordinator::ServeRequest {
+                    id: sada::coordinator::request::RequestId(i),
+                    model: "m".into(),
+                    cond: Tensor::zeros(&[1, 4]),
+                    seed: i,
+                    steps: 50,
+                    guidance: 3.0,
+                    accel: "sada".into(),
+                    submitted_at: std::time::Instant::now(),
+                    reply: tx,
+                },
+            );
+        }
+        let _ = b.poll(1.0);
+    });
+
+    // end-to-end PJRT execution if artifacts are present
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use sada::runtime::{ModelArgs, ModelBackend, Runtime};
+        let rt = Runtime::open("artifacts").expect("runtime");
+        rt.preload_model("sd2_tiny").expect("preload");
+        let backend = rt.model_backend("sd2_tiny").unwrap();
+        let args = ModelArgs {
+            x: Some(Tensor::zeros(&[1, 16, 16, 3])),
+            t: 0.5,
+            cond: Some(Tensor::zeros(&[1, 32])),
+            gs: 3.0,
+            ..Default::default()
+        };
+        bench("PJRT execute sd2_tiny/full", 200, || {
+            let _ = backend.run("full", &args).unwrap();
+        });
+        let prune_args = ModelArgs {
+            keep_idx: Some((0..32).collect()),
+            caches: Some(Tensor::zeros(&[5, 2, 64, 64])),
+            ..args.clone()
+        };
+        bench("PJRT execute sd2_tiny/prune50", 200, || {
+            let _ = backend.run("prune50", &prune_args).unwrap();
+        });
+        let shallow_args = ModelArgs {
+            deep: Some(Tensor::zeros(&[2, 64, 64])),
+            ..args.clone()
+        };
+        bench("PJRT execute sd2_tiny/shallow", 200, || {
+            let _ = backend.run("shallow", &shallow_args).unwrap();
+        });
+    } else {
+        println!("(artifacts/ missing: skipping PJRT execution benches)");
+    }
+}

@@ -1,0 +1,74 @@
+//! Timing-only regeneration of Table 1's speedup column: end-to-end
+//! per-sample latency for each method on each (model, solver) cell.
+//! Quality metrics come from `sada-serve table1`; this bench isolates the
+//! wall-clock claim with a smaller prompt set for quick iteration.
+
+use sada::baselines::{AdaptiveDiffusion, DeepCache, TeaCache};
+use sada::pipeline::{Accelerator, GenRequest, NoAccel, Pipeline};
+use sada::runtime::{ModelBackend, Runtime};
+use sada::sada::Sada;
+use sada::solvers::SolverKind;
+use sada::workload::PromptBank;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("artifacts/ missing: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::open("artifacts")?;
+    let bank = PromptBank::load_or_synthetic(std::path::Path::new("artifacts"), rt.manifest.cond_dim);
+    let steps = 50;
+    let n = 4;
+    println!("== bench_table1: end-to-end latency per method ({n} prompts, {steps} steps) ==");
+    println!("{:<11} {:<7} {:<18} {:>10} {:>9}", "model", "solver", "method", "ms/sample", "speedup");
+
+    let cells: [(&str, SolverKind); 5] = [
+        ("sd2_tiny", SolverKind::DpmPP),
+        ("sd2_tiny", SolverKind::Euler),
+        ("sdxl_tiny", SolverKind::DpmPP),
+        ("sdxl_tiny", SolverKind::Euler),
+        ("flux_tiny", SolverKind::Flow),
+    ];
+    for (model, solver) in cells {
+        rt.preload_model(model)?;
+        let backend = rt.model_backend(model)?;
+        let pipe = Pipeline::new(&backend, solver);
+        let run = |accel: &mut dyn Accelerator| -> anyhow::Result<f64> {
+            let mut total = 0.0;
+            for p in 0..n {
+                let req = GenRequest {
+                    cond: bank.get(p).clone(),
+                    seed: bank.seed_for(p),
+                    guidance: 3.0,
+                    steps,
+                    edge: None,
+                };
+                total += pipe.generate(&req, accel)?.stats.wall_ms;
+            }
+            Ok(total / n as f64)
+        };
+        let base_ms = run(&mut NoAccel)?;
+        println!("{model:<11} {:<7} {:<18} {base_ms:>10.1} {:>8.2}x", solver.name(), "baseline", 1.0);
+        let mut methods: Vec<(&str, Box<dyn Accelerator>)> = if model == "flux_tiny" {
+            vec![
+                ("teacache", Box::new(TeaCache::default())),
+                ("sada", Box::new(Sada::with_default(backend.info(), steps))),
+            ]
+        } else {
+            vec![
+                ("deepcache", Box::new(DeepCache::default())),
+                ("adaptive", Box::new(AdaptiveDiffusion::default())),
+                ("sada", Box::new(Sada::with_default(backend.info(), steps))),
+            ]
+        };
+        for (name, accel) in methods.iter_mut() {
+            let ms = run(accel.as_mut())?;
+            println!(
+                "{model:<11} {:<7} {name:<18} {ms:>10.1} {:>8.2}x",
+                solver.name(),
+                base_ms / ms
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Timing-only regeneration of Table 2's speedup column: SADA latency
+//! across step budgets {50, 25, 15} on sd2/sdxl x {dpmpp, euler}.
+
+use sada::pipeline::{GenRequest, NoAccel, Pipeline};
+use sada::runtime::{ModelBackend, Runtime};
+use sada::sada::Sada;
+use sada::solvers::SolverKind;
+use sada::workload::PromptBank;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("artifacts/ missing: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::open("artifacts")?;
+    let bank = PromptBank::load_or_synthetic(std::path::Path::new("artifacts"), rt.manifest.cond_dim);
+    let n = 4;
+    println!("== bench_table2: SADA few-step latency ({n} prompts) ==");
+    println!("{:<11} {:<7} {:>6} {:>11} {:>9} {:>8}", "model", "solver", "steps", "ms/sample", "speedup", "NFE");
+    for model in ["sd2_tiny", "sdxl_tiny"] {
+        rt.preload_model(model)?;
+        let backend = rt.model_backend(model)?;
+        for solver in [SolverKind::DpmPP, SolverKind::Euler] {
+            let pipe = Pipeline::new(&backend, solver);
+            for steps in [50usize, 25, 15] {
+                let mut base_ms = 0.0;
+                let mut sada_ms = 0.0;
+                let mut nfe = 0;
+                for p in 0..n {
+                    let req = GenRequest {
+                        cond: bank.get(p).clone(),
+                        seed: bank.seed_for(p),
+                        guidance: 3.0,
+                        steps,
+                        edge: None,
+                    };
+                    base_ms += pipe.generate(&req, &mut NoAccel)?.stats.wall_ms;
+                    let mut accel = Sada::with_default(backend.info(), steps);
+                    let r = pipe.generate(&req, &mut accel)?;
+                    sada_ms += r.stats.wall_ms;
+                    nfe += r.stats.nfe;
+                }
+                println!(
+                    "{model:<11} {:<7} {steps:>6} {:>11.1} {:>8.2}x {:>5.1}/{steps}",
+                    solver.name(),
+                    sada_ms / n as f64,
+                    base_ms / sada_ms,
+                    nfe as f64 / n as f64,
+                );
+            }
+        }
+    }
+    Ok(())
+}

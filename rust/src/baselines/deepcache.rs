@@ -1,0 +1,78 @@
+//! DeepCache (Ma et al., 2024b): fixed-interval deep-feature reuse.
+//!
+//! Every `interval`-th step runs the full model and refreshes the deep
+//! (mid U-Net) feature; the steps in between run only the shallow layers
+//! against the cached feature. Mapped onto our U-shaped transformer via the
+//! `shallow` executable variant (see python/compile/model.py).
+
+use crate::pipeline::{Accelerator, StepCtx, StepObs, StepPlan};
+
+pub struct DeepCache {
+    pub interval: usize,
+}
+
+impl DeepCache {
+    pub fn new(interval: usize) -> Self {
+        Self { interval: interval.max(1) }
+    }
+}
+
+impl Default for DeepCache {
+    fn default() -> Self {
+        Self::new(3)
+    }
+}
+
+impl Accelerator for DeepCache {
+    fn name(&self) -> String {
+        format!("deepcache-i{}", self.interval)
+    }
+
+    fn plan(&mut self, ctx: &StepCtx) -> StepPlan {
+        // last step fresh for a clean final prediction (standard practice)
+        if ctx.i % self.interval == 0 || ctx.i + 1 == ctx.n_steps {
+            StepPlan::Full
+        } else {
+            StepPlan::Shallow
+        }
+    }
+
+    fn observe(&mut self, _obs: &StepObs) {}
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{GenRequest, Pipeline, StepMode};
+    use crate::runtime::mock::GmBackend;
+    use crate::runtime::ModelBackend;
+    use crate::solvers::SolverKind;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn interval_pattern() {
+        let backend = GmBackend::new(1);
+        let pipe = Pipeline::new(&backend, SolverKind::Euler);
+        let mut rng = crate::rng::Rng::new(0);
+        let req = GenRequest {
+            cond: Tensor::from_rng(&mut rng, &[1, 32]),
+            seed: 3,
+            guidance: 1.0,
+            steps: 10,
+            edge: None,
+        };
+        let mut dc = DeepCache::new(3);
+        let res = pipe.generate(&req, &mut dc).unwrap();
+        let modes = &res.stats.modes;
+        assert_eq!(modes[0], StepMode::Full);
+        assert_eq!(modes[1], StepMode::Shallow);
+        assert_eq!(modes[2], StepMode::Shallow);
+        assert_eq!(modes[3], StepMode::Full);
+        assert_eq!(modes[9], StepMode::Full); // forced final fresh step
+        // every step still runs the model (shallow is a cheaper model call)
+        assert_eq!(res.stats.nfe, 10);
+        assert!(backend.nfe() >= 10);
+    }
+}

@@ -1,0 +1,18 @@
+//! Training-free acceleration baselines the paper compares against.
+//!
+//! All three implement [`crate::pipeline::Accelerator`], so the experiment
+//! harness swaps them against SADA under identical seeds and solvers:
+//!
+//! * [`DeepCache`]  — fixed-interval deep-feature caching (Ma et al., 2024b)
+//! * [`AdaptiveDiffusion`] — third-order-difference criterion + noise reuse
+//!   (Ye et al., 2024, paper Eq. 5)
+//! * [`TeaCache`]  — accumulated relative-L1 caching threshold
+//!   (Liu et al., 2025a), the Flux comparator
+
+pub mod adaptive;
+pub mod deepcache;
+pub mod teacache;
+
+pub use adaptive::AdaptiveDiffusion;
+pub use deepcache::DeepCache;
+pub use teacache::TeaCache;

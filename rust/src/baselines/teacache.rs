@@ -1,0 +1,127 @@
+//! TeaCache (Liu et al., 2025a): accumulated relative-L1 caching threshold.
+//!
+//! Accumulates a polynomially-rescaled relative L1 change of the latent
+//! between consecutive steps; while the accumulator stays below `tau` the
+//! model is skipped and the cached output reused; a fresh computation
+//! resets the accumulator. (The official implementation measures the
+//! timestep-embedding-modulated input; our models expose the latent itself,
+//! the same signal up to the learned modulation — noted in DESIGN.md.)
+
+use crate::pipeline::{Accelerator, StepCtx, StepObs, StepPlan};
+use crate::tensor::{ops, Tensor};
+
+pub struct TeaCache {
+    pub tau: f64,
+    /// Polynomial rescale coefficients (highest degree first), fitted by the
+    /// original method per model family; identity by default.
+    pub poly: Vec<f64>,
+    acc: f64,
+    last_fresh_x: Option<Tensor>,
+    pending_skip: bool,
+}
+
+impl TeaCache {
+    pub fn new(tau: f64) -> Self {
+        Self {
+            tau,
+            poly: vec![1.0, 0.0],
+            acc: 0.0,
+            last_fresh_x: None,
+            pending_skip: false,
+        }
+    }
+
+    fn rescale(&self, v: f64) -> f64 {
+        let mut acc = 0.0;
+        for c in &self.poly {
+            acc = acc * v + c;
+        }
+        acc * v / v.max(1e-12) // keep sign/zero behaviour sane for v ~ 0
+    }
+}
+
+impl Default for TeaCache {
+    fn default() -> Self {
+        // calibrated on this testbed to ~2.3x, the speedup SADA reaches on
+        // flux_tiny, so Table 1 compares fidelity at matched speed
+        Self::new(0.1)
+    }
+}
+
+impl Accelerator for TeaCache {
+    fn name(&self) -> String {
+        format!("teacache-tau{}", self.tau)
+    }
+
+    fn plan(&mut self, ctx: &StepCtx) -> StepPlan {
+        if ctx.i < 2 || ctx.i + 1 == ctx.n_steps {
+            return StepPlan::Full;
+        }
+        if self.pending_skip {
+            StepPlan::SkipReuse
+        } else {
+            StepPlan::Full
+        }
+    }
+
+    fn observe(&mut self, obs: &StepObs) {
+        if obs.fresh {
+            self.acc = 0.0;
+            self.last_fresh_x = Some(obs.x_prev.clone());
+        }
+        if let Some(anchor) = &self.last_fresh_x {
+            let delta = self.rescale(ops::rel_l1(obs.x_next, anchor));
+            self.acc += delta;
+        }
+        self.pending_skip = self.acc < self.tau;
+    }
+
+    fn reset(&mut self) {
+        self.acc = 0.0;
+        self.last_fresh_x = None;
+        self.pending_skip = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{GenRequest, Pipeline, StepMode};
+    use crate::runtime::mock::GmBackend;
+    use crate::solvers::SolverKind;
+
+    fn req(steps: usize) -> GenRequest {
+        let mut rng = crate::rng::Rng::new(5);
+        GenRequest {
+            cond: crate::tensor::Tensor::from_rng(&mut rng, &[1, 32]),
+            seed: 21,
+            guidance: 2.0,
+            steps,
+            edge: None,
+        }
+    }
+
+    #[test]
+    fn tau_controls_skip_count() {
+        let backend = GmBackend::new(10);
+        let pipe = Pipeline::new(&backend, SolverKind::Euler);
+        let mut tight = TeaCache::new(0.0);
+        let r0 = pipe.generate(&req(30), &mut tight).unwrap();
+        let mut loose = TeaCache::new(5.0);
+        let r1 = pipe.generate(&req(30), &mut loose).unwrap();
+        assert_eq!(r0.stats.count(StepMode::SkipReuse), 0);
+        assert!(r1.stats.count(StepMode::SkipReuse) > r0.stats.count(StepMode::SkipReuse));
+    }
+
+    #[test]
+    fn accumulator_forces_periodic_refresh() {
+        let backend = GmBackend::new(10);
+        let pipe = Pipeline::new(&backend, SolverKind::Euler);
+        let mut mid = TeaCache::new(0.35);
+        let r = pipe.generate(&req(40), &mut mid).unwrap();
+        let skips = r.stats.count(StepMode::SkipReuse);
+        // should both skip some steps and refresh some steps in the middle
+        assert!(skips > 0, "trace={}", r.stats.mode_trace());
+        assert!(r.stats.nfe > 2, "trace={}", r.stats.mode_trace());
+    }
+}

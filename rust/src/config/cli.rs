@@ -1,0 +1,81 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]... [positional]...`
+//! `--key=value` is also accepted. Parsed options land in a [`Config`]
+//! overlay so file config and CLI share one lookup path.
+
+use anyhow::{bail, Result};
+
+use super::Config;
+
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: Config,
+}
+
+/// Keys that are flags (no value argument).
+const FLAG_KEYS: &[&str] = &["help", "dump", "verbose", "quiet", "markdown", "bursty"];
+
+pub fn parse(args: &[String]) -> Result<Cli> {
+    let mut cli = Cli::default();
+    let mut it = args.iter().peekable();
+    while let Some(arg) = it.next() {
+        if let Some(stripped) = arg.strip_prefix("--") {
+            if let Some(eq) = stripped.find('=') {
+                let (k, v) = stripped.split_at(eq);
+                cli.options.set(k, &v[1..]);
+            } else if FLAG_KEYS.contains(&stripped) {
+                cli.options.set(stripped, "true");
+            } else {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => bail!("option --{stripped} expects a value"),
+                };
+                cli.options.set(stripped, &val);
+            }
+        } else if cli.subcommand.is_empty() {
+            cli.subcommand = arg.clone();
+        } else {
+            cli.positional.push(arg.clone());
+        }
+    }
+    Ok(cli)
+}
+
+pub fn parse_env() -> Result<Cli> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    parse(&args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_positional() {
+        let cli = parse(&s(&["table1", "--samples", "64", "--model=sd2_tiny", "extra"])).unwrap();
+        assert_eq!(cli.subcommand, "table1");
+        assert_eq!(cli.options.usize_or("samples", 0), 64);
+        assert_eq!(cli.options.str_or("model", ""), "sd2_tiny");
+        assert_eq!(cli.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn flags_take_no_value() {
+        let cli = parse(&s(&["x", "--dump", "--steps", "25"])).unwrap();
+        assert!(cli.options.bool_or("dump", false));
+        assert_eq!(cli.options.usize_or("steps", 0), 25);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&s(&["x", "--steps"])).is_err());
+        assert!(parse(&s(&["x", "--steps", "--other", "1"])).is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Configuration system: TOML-lite files + CLI overrides.
+//!
+//! `clap`/`serde` are unavailable offline, so this is a small but complete
+//! substrate: typed lookups with defaults, `key = value` / `[section]`
+//! files, and `--key value` / `--flag` command lines that override file
+//! values. Every binary in the repo (launcher, examples, benches) goes
+//! through [`Config`].
+
+pub mod cli;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse a TOML-lite file: `[section]` headers, `key = value`, `#`/`;`
+    /// comments, quoted or bare values. Section names prefix keys with dots.
+    pub fn from_str(src: &str) -> Result<Self> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            let mut val = line[eq + 1..].trim();
+            // strip trailing comment on unquoted values
+            if !val.starts_with('"') {
+                if let Some(h) = val.find('#') {
+                    val = val[..h].trim();
+                }
+            }
+            let val = val.trim_matches('"');
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            cfg.values.insert(full_key, val.to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let src = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_str(&src)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Merge `other` on top of `self` (other wins).
+    pub fn overlay(&mut self, other: &Config) {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") | Some("") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let cfg = Config::from_str(
+            "# comment\nsteps = 50\n[sada]\ntau = 0.02   # inline\nname = \"x y\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.usize_or("steps", 0), 50);
+        assert_eq!(cfg.f64_or("sada.tau", 0.0), 0.02);
+        assert_eq!(cfg.str_or("sada.name", ""), "x y");
+    }
+
+    #[test]
+    fn overlay_wins() {
+        let mut a = Config::from_str("x = 1\ny = 2").unwrap();
+        let b = Config::from_str("y = 3").unwrap();
+        a.overlay(&b);
+        assert_eq!(a.usize_or("x", 0), 1);
+        assert_eq!(a.usize_or("y", 0), 3);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let cfg = Config::from_str("flag = true\nbad = zzz").unwrap();
+        assert!(cfg.bool_or("flag", false));
+        assert!(!cfg.bool_or("missing", false));
+        assert_eq!(cfg.usize_or("bad", 7), 7);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::from_str("[broken\nx=1").is_err());
+        assert!(Config::from_str("no_equals_here").is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! Dynamic batcher: groups compatible requests into compiled batch buckets.
+//!
+//! Requests are compatible when they share (model, steps, guidance-class,
+//! accel). A batch is emitted when the largest bucket fills, or when the
+//! oldest pending request exceeds `max_wait_ms` (then the largest bucket
+//! <= queue length is used; 1 is always a valid bucket). Invariants
+//! (property-tested): no request is dropped or duplicated, FIFO order is
+//! preserved within a compatibility class, and no request waits more than
+//! max_wait once the batcher is polled.
+
+use std::collections::VecDeque;
+
+use super::request::ServeRequest;
+
+pub struct Batch {
+    pub requests: Vec<ServeRequest>,
+}
+
+pub struct DynamicBatcher {
+    /// Compiled batch sizes, ascending (1 implicitly allowed).
+    buckets: Vec<usize>,
+    pub max_wait_ms: f64,
+    queue: VecDeque<(f64, ServeRequest)>, // (enqueue time ms, request)
+}
+
+impl DynamicBatcher {
+    pub fn new(mut buckets: Vec<usize>, max_wait_ms: f64) -> Self {
+        buckets.retain(|b| *b > 1);
+        buckets.sort_unstable();
+        Self { buckets, max_wait_ms, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, now_ms: f64, req: ServeRequest) {
+        self.queue.push_back((now_ms, req));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn max_bucket(&self) -> usize {
+        self.buckets.last().copied().unwrap_or(1)
+    }
+
+    /// Largest compiled bucket <= n (falling back to 1).
+    fn bucket_for(&self, n: usize) -> usize {
+        self.buckets
+            .iter()
+            .rev()
+            .find(|b| **b <= n)
+            .copied()
+            .unwrap_or(1)
+    }
+
+    /// Compatibility: the engine runs one lockstep loop per batch, so the
+    /// grouped requests must agree on everything that shapes that loop.
+    fn compatible(a: &ServeRequest, b: &ServeRequest) -> bool {
+        a.model == b.model && a.steps == b.steps && a.accel == b.accel && a.guidance == b.guidance
+    }
+
+    /// Poll for a ready batch at `now_ms`. Head-of-line request defines the
+    /// compatibility class; only requests compatible with it are grouped
+    /// (FIFO within class, no reordering across the head).
+    pub fn poll(&mut self, now_ms: f64) -> Option<Batch> {
+        let (head_t, head) = self.queue.front()?;
+        let deadline_hit = now_ms - head_t >= self.max_wait_ms;
+        // count the head-compatible prefix-by-scan
+        let compat_idx: Vec<usize> = self
+            .queue
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, r))| Self::compatible(r, head))
+            .map(|(i, _)| i)
+            .collect();
+        let n_compat = compat_idx.len();
+        let want = if n_compat >= self.max_bucket() {
+            self.max_bucket()
+        } else if deadline_hit {
+            self.bucket_for(n_compat)
+        } else {
+            return None;
+        };
+        let take: Vec<usize> = compat_idx.into_iter().take(want).collect();
+        let mut requests = Vec::with_capacity(want);
+        // remove by index, descending so indices stay valid
+        for i in take.iter().rev() {
+            let (_, r) = self.queue.remove(*i).expect("index valid");
+            requests.push(r);
+        }
+        requests.reverse(); // restore FIFO order
+        Some(Batch { requests })
+    }
+
+    /// Milliseconds until the head request hits its deadline (None if empty).
+    pub fn next_deadline_in(&self, now_ms: f64) -> Option<f64> {
+        self.queue
+            .front()
+            .map(|(t, _)| (t + self.max_wait_ms - now_ms).max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{RequestId, ServeRequest};
+    use crate::tensor::Tensor;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(id: u64, model: &str, steps: usize) -> ServeRequest {
+        let (tx, _rx) = mpsc::channel();
+        ServeRequest {
+            id: RequestId(id),
+            model: model.into(),
+            cond: Tensor::zeros(&[1, 4]),
+            seed: id,
+            steps,
+            guidance: 2.0,
+            accel: "sada".into(),
+            submitted_at: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn fills_largest_bucket_immediately() {
+        let mut b = DynamicBatcher::new(vec![2, 4], 50.0);
+        for i in 0..5 {
+            b.push(0.0, req(i, "m", 50));
+        }
+        let batch = b.poll(1.0).expect("bucket full");
+        assert_eq!(batch.requests.len(), 4);
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]); // FIFO preserved
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn deadline_flushes_partial() {
+        let mut b = DynamicBatcher::new(vec![2, 4], 50.0);
+        b.push(0.0, req(0, "m", 50));
+        assert!(b.poll(10.0).is_none()); // not full, not expired
+        let batch = b.poll(51.0).expect("deadline hit");
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn deadline_uses_largest_fitting_bucket() {
+        let mut b = DynamicBatcher::new(vec![2, 4], 50.0);
+        for i in 0..3 {
+            b.push(0.0, req(i, "m", 50));
+        }
+        let batch = b.poll(60.0).unwrap();
+        assert_eq!(batch.requests.len(), 2); // bucket_for(3) = 2
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn incompatible_requests_not_mixed() {
+        let mut b = DynamicBatcher::new(vec![2], 50.0);
+        b.push(0.0, req(0, "m", 50));
+        b.push(0.0, req(1, "m", 25)); // different step count
+        b.push(0.0, req(2, "m", 50));
+        let batch = b.poll(0.0).expect("two compatible");
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![0, 2]);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn property_no_loss_no_duplication() {
+        // drive random pushes/polls; every request exits exactly once
+        use crate::testutil::{check, UsizeIn};
+        check(11, 30, &UsizeIn(1, 40), |n| {
+            let mut b = DynamicBatcher::new(vec![2, 4, 8], 20.0);
+            let mut seen = std::collections::BTreeSet::new();
+            let mut out = Vec::new();
+            let mut now = 0.0;
+            let mut rng = crate::rng::Rng::new(*n as u64);
+            for i in 0..*n {
+                b.push(now, req(i as u64, "m", 50));
+                seen.insert(i as u64);
+                now += rng.uniform_in(0.0, 10.0);
+                while let Some(batch) = b.poll(now) {
+                    out.extend(batch.requests.iter().map(|r| r.id.0));
+                }
+            }
+            // drain with advancing time
+            for _ in 0..100 {
+                now += 25.0;
+                while let Some(batch) = b.poll(now) {
+                    out.extend(batch.requests.iter().map(|r| r.id.0));
+                }
+                if out.len() == *n {
+                    break;
+                }
+            }
+            if out.len() != *n {
+                return Err(format!("lost requests: {} of {n}", out.len()));
+            }
+            let uniq: std::collections::BTreeSet<u64> = out.iter().cloned().collect();
+            if uniq.len() != *n {
+                return Err("duplicated requests".into());
+            }
+            if uniq != seen {
+                return Err("id set mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_bounded_wait() {
+        // once polled past the deadline, the head request always leaves
+        let mut b = DynamicBatcher::new(vec![8], 30.0);
+        b.push(0.0, req(0, "m", 50));
+        b.push(5.0, req(1, "other", 50));
+        let batch = b.poll(31.0).unwrap();
+        assert_eq!(batch.requests[0].id.0, 0);
+        // the second (incompatible) head now has its own deadline
+        let batch2 = b.poll(36.0).unwrap();
+        assert_eq!(batch2.requests[0].id.0, 1);
+    }
+}

@@ -1,0 +1,175 @@
+//! Serving metrics registry: counters, gauges, latency histograms with a
+//! text exposition format (the observability substrate a deployed
+//! coordinator needs; consumed by the serving harness and the perf pass).
+
+use std::collections::BTreeMap;
+
+/// Log-scaled latency histogram (bounded memory, ~8% bucket resolution).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// bucket upper bounds in ms, ascending; last bucket is +inf
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum_ms: f64,
+    n: u64,
+}
+
+impl Histogram {
+    pub fn latency_default() -> Self {
+        // 0.1ms .. ~100s, x1.5 per bucket
+        let mut bounds = Vec::new();
+        let mut b = 0.1;
+        while b < 100_000.0 {
+            bounds.push(b);
+            b *= 1.5;
+        }
+        let n = bounds.len() + 1;
+        Self { bounds, counts: vec![0; n], sum_ms: 0.0, n: 0 }
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| ms <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum_ms += ms;
+        self.n += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-quantile sample).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    f64::INFINITY
+                };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Registry keyed by metric name (+ optional model label).
+#[derive(Default)]
+pub struct MetricsLog {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn observe_ms(&mut self, name: &str, ms: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(Histogram::latency_default)
+            .record(ms);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Prometheus-style text exposition.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("sada_{k}_total {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("sada_{k} {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            out.push_str(&format!("sada_{k}_count {}\n", h.count()));
+            out.push_str(&format!("sada_{k}_mean_ms {:.3}\n", h.mean_ms()));
+            for q in [0.5, 0.95, 0.99] {
+                out.push_str(&format!(
+                    "sada_{k}_p{:02.0}_ms {:.3}\n",
+                    q * 100.0,
+                    h.quantile_ms(q)
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::latency_default();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_ms(0.5);
+        let p95 = h.quantile_ms(0.95);
+        let p99 = h.quantile_ms(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // log buckets give <= 50% relative error at this resolution
+        assert!(p50 > 300.0 && p50 < 800.0, "p50={p50}");
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let mut m = MetricsLog::new();
+        m.inc("requests", 3);
+        m.inc("requests", 2);
+        m.set_gauge("queue_depth", 7.0);
+        m.observe_ms("e2e_latency", 12.0);
+        m.observe_ms("e2e_latency", 20.0);
+        assert_eq!(m.counter("requests"), 5);
+        let text = m.render();
+        assert!(text.contains("sada_requests_total 5"));
+        assert!(text.contains("sada_queue_depth 7"));
+        assert!(text.contains("sada_e2e_latency_count 2"));
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::latency_default();
+        assert_eq!(h.quantile_ms(0.5), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+    }
+}

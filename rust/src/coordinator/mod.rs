@@ -1,0 +1,20 @@
+//! Serving coordinator: router + dynamic batcher + engine worker.
+//!
+//! The serving front-end of the framework (vLLM-router-style): requests
+//! enter through [`Coordinator::submit`], a router validates and assigns
+//! them to per-model queues, a dynamic batcher groups compatible requests
+//! into the compiled batch buckets under a max-wait deadline, and the
+//! engine thread (the exclusive owner of the PJRT runtime) executes each
+//! batch as one lockstep SADA-accelerated sampling run.
+
+pub mod batcher;
+pub mod metrics_log;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batch, DynamicBatcher};
+pub use metrics_log::MetricsLog;
+pub use request::{ServeRequest, ServeResponse};
+pub use router::Router;
+pub use server::{Coordinator, CoordinatorConfig};

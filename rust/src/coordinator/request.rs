@@ -1,0 +1,33 @@
+//! Serving request/response types.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::pipeline::RunStats;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+pub struct ServeRequest {
+    pub id: RequestId,
+    pub model: String,
+    pub cond: Tensor,
+    pub seed: u64,
+    pub steps: usize,
+    pub guidance: f32,
+    pub accel: String, // "sada" | "baseline" | "adaptive" | ...
+    pub submitted_at: Instant,
+    /// Completion channel (one response per request).
+    pub reply: Sender<ServeResponse>,
+}
+
+pub struct ServeResponse {
+    pub id: RequestId,
+    pub image: Tensor,
+    pub stats: RunStats,
+    /// Queueing + batching + execution latency, milliseconds.
+    pub latency_ms: f64,
+    /// Batch size this request was served in.
+    pub batch_size: usize,
+}

@@ -1,0 +1,86 @@
+//! Request router: validates requests and assigns them to model queues.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::request::ServeRequest;
+
+pub struct Router {
+    /// model name -> queue index
+    models: BTreeMap<String, usize>,
+}
+
+impl Router {
+    pub fn new(models: &[String]) -> Self {
+        let map = models
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (m.clone(), i))
+            .collect();
+        Self { models: map }
+    }
+
+    pub fn n_queues(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Validate and route. Deterministic: same request -> same queue.
+    pub fn route(&self, req: &ServeRequest) -> Result<usize> {
+        match self.models.get(&req.model) {
+            Some(ix) => {
+                if req.steps == 0 || req.steps > 1000 {
+                    bail!("invalid steps {}", req.steps);
+                }
+                Ok(*ix)
+            }
+            None => bail!("unknown model {:?}", req.model),
+        }
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestId;
+    use crate::tensor::Tensor;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(model: &str, steps: usize) -> ServeRequest {
+        let (tx, _rx) = mpsc::channel();
+        ServeRequest {
+            id: RequestId(0),
+            model: model.into(),
+            cond: Tensor::zeros(&[1, 4]),
+            seed: 0,
+            steps,
+            guidance: 1.0,
+            accel: "sada".into(),
+            submitted_at: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn routes_known_models() {
+        let r = Router::new(&["a".into(), "b".into()]);
+        assert_eq!(r.n_queues(), 2);
+        let qa = r.route(&req("a", 50)).unwrap();
+        let qb = r.route(&req("b", 50)).unwrap();
+        assert_ne!(qa, qb);
+        assert_eq!(qa, r.route(&req("a", 25)).unwrap()); // deterministic
+    }
+
+    #[test]
+    fn rejects_unknown_model_and_bad_steps() {
+        let r = Router::new(&["a".into()]);
+        assert!(r.route(&req("zzz", 50)).is_err());
+        assert!(r.route(&req("a", 0)).is_err());
+        assert!(r.route(&req("a", 5000)).is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! The coordinator: ingress channel -> router -> per-model dynamic batcher
+//! -> engine worker (exclusive owner of the PJRT runtime).
+//!
+//! Single engine thread by design: the PJRT CPU client is not Sync and this
+//! testbed has one core; the architecture still exercises the full serving
+//! shape (async ingress, bounded queues, deadline-driven batch formation,
+//! lockstep batched execution) and the engine loop is where a multi-device
+//! deployment would fan out.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use std::sync::{Arc, Mutex};
+
+use super::batcher::DynamicBatcher;
+use super::metrics_log::MetricsLog;
+use super::request::{ServeRequest, ServeResponse};
+use super::router::Router;
+use crate::baselines::{AdaptiveDiffusion, DeepCache, TeaCache};
+use crate::pipeline::{Accelerator, GenRequest, NoAccel, Pipeline};
+use crate::runtime::{ModelBackend, Runtime};
+use crate::sada::Sada;
+use crate::solvers::SolverKind;
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: String,
+    pub models: Vec<String>,
+    pub solver: SolverKind,
+    pub batch_buckets: Vec<usize>,
+    pub max_wait_ms: f64,
+    /// Ingress queue capacity (backpressure bound).
+    pub queue_cap: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            models: vec!["sd2_tiny".into()],
+            solver: SolverKind::DpmPP,
+            batch_buckets: vec![2, 4, 8],
+            max_wait_ms: 40.0,
+            queue_cap: 256,
+        }
+    }
+}
+
+pub struct Coordinator {
+    ingress: Option<SyncSender<ServeRequest>>,
+    worker: Option<JoinHandle<Result<()>>>,
+    metrics: Arc<Mutex<MetricsLog>>,
+}
+
+fn accel_for(name: &str, info: &crate::runtime::ModelInfo, steps: usize) -> Box<dyn Accelerator> {
+    match name {
+        "sada" => Box::new(Sada::with_default(info, steps)),
+        "deepcache" => Box::new(DeepCache::default()),
+        "adaptive" => Box::new(AdaptiveDiffusion::default()),
+        "teacache" => Box::new(TeaCache::default()),
+        _ => Box::new(NoAccel),
+    }
+}
+
+impl Coordinator {
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let (tx, rx) = mpsc::sync_channel::<ServeRequest>(cfg.queue_cap);
+        let metrics = Arc::new(Mutex::new(MetricsLog::new()));
+        let m2 = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name("sada-engine".into())
+            .spawn(move || engine_loop(cfg, rx, m2))
+            .context("spawning engine thread")?;
+        Ok(Coordinator { ingress: Some(tx), worker: Some(worker), metrics })
+    }
+
+    /// Snapshot of the serving metrics in text exposition format.
+    pub fn metrics_text(&self) -> String {
+        self.metrics.lock().expect("metrics lock").render()
+    }
+
+    /// Submit a request (blocks only when the ingress queue is full —
+    /// that is the backpressure contract).
+    pub fn submit(&self, req: ServeRequest) -> Result<()> {
+        self.ingress
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("coordinator is shut down"))?
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))
+    }
+
+    /// Graceful shutdown: drains the queue, then joins the engine.
+    pub fn shutdown(mut self) -> Result<()> {
+        drop(self.ingress.take());
+        if let Some(h) = self.worker.take() {
+            h.join().map_err(|_| anyhow::anyhow!("engine panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.ingress.take());
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn engine_loop(
+    cfg: CoordinatorConfig,
+    rx: Receiver<ServeRequest>,
+    metrics: Arc<Mutex<MetricsLog>>,
+) -> Result<()> {
+    // The engine thread owns the runtime exclusively (PJRT client is !Sync).
+    let rt = Runtime::open(&cfg.artifacts_dir)?;
+    let router = Router::new(&cfg.models);
+    let mut batchers: Vec<DynamicBatcher> = (0..router.n_queues())
+        .map(|_| DynamicBatcher::new(cfg.batch_buckets.clone(), cfg.max_wait_ms))
+        .collect();
+    let start = Instant::now();
+    let now_ms = |s: Instant| s.elapsed().as_secs_f64() * 1e3;
+    let mut open = true;
+
+    while open || batchers.iter().any(|b| b.pending() > 0) {
+        // 1) ingest with a deadline-aware timeout
+        let wait = batchers
+            .iter()
+            .filter_map(|b| b.next_deadline_in(now_ms(start)))
+            .fold(f64::INFINITY, f64::min);
+        let timeout = if wait.is_finite() {
+            Duration::from_secs_f64((wait / 1e3).clamp(0.0, 0.05))
+        } else {
+            Duration::from_millis(50)
+        };
+        if open {
+            match rx.recv_timeout(timeout) {
+                Ok(req) => match router.route(&req) {
+                    Ok(q) => {
+                        metrics.lock().unwrap().inc("requests_accepted", 1);
+                        batchers[q].push(now_ms(start), req)
+                    }
+                    Err(e) => {
+                        // reject: dropping the reply channel signals the error
+                        metrics.lock().unwrap().inc("requests_rejected", 1);
+                        eprintln!("[coordinator] rejected request: {e}");
+                        drop(req);
+                    }
+                },
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => open = false,
+            }
+            // opportunistically drain without blocking
+            while let Ok(req) = rx.try_recv() {
+                match router.route(&req) {
+                    Ok(q) => {
+                        metrics.lock().unwrap().inc("requests_accepted", 1);
+                        batchers[q].push(now_ms(start), req)
+                    }
+                    Err(e) => {
+                        metrics.lock().unwrap().inc("requests_rejected", 1);
+                        eprintln!("[coordinator] rejected request: {e}");
+                    }
+                }
+            }
+            metrics.lock().unwrap().set_gauge(
+                "queue_depth",
+                batchers.iter().map(|b| b.pending()).sum::<usize>() as f64,
+            );
+        }
+        // 2) execute ready batches
+        let t = now_ms(start);
+        for (q, model) in router.model_names().iter().enumerate() {
+            while let Some(batch) = batchers[q].poll(t) {
+                execute_batch(&rt, &cfg, model, batch.requests, &metrics)?;
+            }
+        }
+        if !open {
+            // when closed, force-flush remaining under expired deadlines
+            let t = now_ms(start) + cfg.max_wait_ms + 1.0;
+            for (q, model) in router.model_names().iter().enumerate() {
+                while let Some(batch) = batchers[q].poll(t) {
+                    execute_batch(&rt, &cfg, model, batch.requests, &metrics)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn execute_batch(
+    rt: &Runtime,
+    cfg: &CoordinatorConfig,
+    model: &str,
+    requests: Vec<ServeRequest>,
+    metrics: &Arc<Mutex<MetricsLog>>,
+) -> Result<()> {
+    let backend = rt.model_backend(model)?;
+    // flow-matching models require the flow solver regardless of the
+    // configured default (the manifest's predict field is authoritative)
+    let solver = if backend.info().predict == "v" {
+        SolverKind::Flow
+    } else {
+        cfg.solver
+    };
+    let pipe = Pipeline::new(&backend, solver);
+    let steps = requests[0].steps;
+    let mut accel = accel_for(&requests[0].accel, backend.info(), steps);
+    let gen_reqs: Vec<GenRequest> = requests
+        .iter()
+        .map(|r| GenRequest {
+            cond: r.cond.clone(),
+            seed: r.seed,
+            guidance: r.guidance,
+            steps: r.steps,
+            edge: None,
+        })
+        .collect();
+    // batched fast-path when a compiled bucket exists; otherwise sequential
+    let batched_ok = gen_reqs.len() > 1
+        && backend
+            .info()
+            .variants
+            .contains_key(&format!("full_b{}", gen_reqs.len()));
+    let results = if batched_ok {
+        pipe.generate_batch(&gen_reqs, accel.as_mut())?
+    } else {
+        let mut out = Vec::with_capacity(gen_reqs.len());
+        for gr in &gen_reqs {
+            out.push(pipe.generate(gr, accel.as_mut())?);
+        }
+        out
+    };
+    let bsz = requests.len();
+    {
+        let mut m = metrics.lock().unwrap();
+        m.inc("batches_executed", 1);
+        m.inc(&format!("batch_size_{bsz}"), 1);
+    }
+    for (req, res) in requests.into_iter().zip(results) {
+        let latency_ms = req.submitted_at.elapsed().as_secs_f64() * 1e3;
+        metrics.lock().unwrap().observe_ms("e2e_latency", latency_ms);
+        let _ = req.reply.send(ServeResponse {
+            id: req.id,
+            image: res.image,
+            stats: res.stats,
+            latency_ms,
+            batch_size: bsz,
+        });
+    }
+    Ok(())
+}

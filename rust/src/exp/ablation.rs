@@ -1,0 +1,82 @@
+//! SADA component ablations (DESIGN.md design-choice benches):
+//! full SADA vs {no multistep, no tokenwise, stepwise-only, FDM-3 instead
+//! of AM-3} under identical seeds, on one (model, solver) cell.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::common::{write_report, Harness, MethodRow};
+use crate::pipeline::Accelerator;
+use crate::report::table::{f2, f3, speedup};
+use crate::report::Table;
+use crate::runtime::ModelInfo;
+use crate::sada::{Sada, SadaConfig, SadaFdm};
+use crate::solvers::SolverKind;
+
+pub fn run(artifacts: &str, samples: usize, steps: usize) -> Result<()> {
+    let h = Harness::open(artifacts)?;
+    let model = "sd2_tiny";
+    let solver = SolverKind::DpmPP;
+    let base = h.baseline_set(model, solver, steps, samples, None)?;
+
+    let mk = |f: fn(usize) -> SadaConfig, steps: usize| {
+        move |info: &ModelInfo| Box::new(Sada::new(info, f(steps))) as Box<dyn Accelerator>
+    };
+    fn full_cfg(steps: usize) -> SadaConfig {
+        SadaConfig::default().for_steps(steps)
+    }
+    fn no_multistep(steps: usize) -> SadaConfig {
+        let mut c = full_cfg(steps);
+        c.enable_multistep = false;
+        c
+    }
+    fn no_tokenwise(steps: usize) -> SadaConfig {
+        let mut c = full_cfg(steps);
+        c.enable_tokenwise = false;
+        c
+    }
+    fn stepwise_only(steps: usize) -> SadaConfig {
+        let mut c = full_cfg(steps);
+        c.enable_multistep = false;
+        c.enable_tokenwise = false;
+        c
+    }
+
+    let mut table = Table::new(
+        &format!("SADA component ablation — {model} DPM++{steps}, n={samples}"),
+        &["Variant", "PSNR^", "LPIPSv", "FIDv", "Speedup", "NFEx", "Trace (last)"],
+    );
+    let mut cells: BTreeMap<String, Vec<MethodRow>> = BTreeMap::new();
+    let mut entries: Vec<(&str, Box<dyn FnMut(&ModelInfo) -> Box<dyn Accelerator>>)> = vec![
+        ("sada (full)", Box::new(mk(full_cfg, steps))),
+        ("- multistep", Box::new(mk(no_multistep, steps))),
+        ("- tokenwise", Box::new(mk(no_tokenwise, steps))),
+        ("stepwise only", Box::new(mk(stepwise_only, steps))),
+        (
+            "fdm3 extrapolation",
+            Box::new(move |info: &ModelInfo| {
+                Box::new(SadaFdm::new(info, SadaConfig::default().for_steps(steps))) as _
+            }),
+        ),
+    ];
+    for (name, factory) in entries.iter_mut() {
+        let row = h.eval_method(model, solver, steps, &base, factory.as_mut(), None)?;
+        table.row(vec![
+            (*name).into(),
+            f2(row.psnr),
+            f3(row.lpips),
+            f2(row.fid),
+            speedup(row.speedup),
+            speedup(row.nfe_ratio),
+            row.mode_trace.clone(),
+        ]);
+        cells
+            .entry("sd2_tiny/dpmpp".into())
+            .or_default()
+            .push(MethodRow { method: (*name).into(), ..row });
+    }
+    table.print();
+    write_report("ablation", &cells)?;
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Shared harness: baseline-vs-method evaluation over the prompt bank.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::metrics::fid::FeatureStats;
+use crate::metrics::{psnr, FidRc, LpipsRc};
+use crate::pipeline::{Accelerator, GenRequest, GenResult, NoAccel, Pipeline};
+use crate::runtime::{ModelBackend, ModelInfo, Runtime};
+use crate::solvers::SolverKind;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::workload::PromptBank;
+
+pub struct Harness {
+    pub rt: Runtime,
+    pub bank: PromptBank,
+    pub music_bank: PromptBank,
+}
+
+/// One table row: method metrics against the seed-matched baseline.
+#[derive(Clone, Debug)]
+pub struct MethodRow {
+    pub method: String,
+    pub psnr: f64,
+    pub lpips: f64,
+    pub fid: f64,
+    pub speedup: f64,
+    pub nfe_ratio: f64,
+    pub wall_ms_per_sample: f64,
+    pub mode_trace: String,
+}
+
+/// Baseline set reused across the methods of one (model, solver, steps) cell.
+pub struct BaselineSet {
+    pub images: Vec<Tensor>,
+    pub wall_ms: f64,
+    pub nfe: usize,
+}
+
+impl Harness {
+    pub fn open(artifacts_dir: &str) -> Result<Harness> {
+        let rt = Runtime::open(artifacts_dir)?;
+        let dir = Path::new(artifacts_dir);
+        let cond_dim = rt.manifest.cond_dim;
+        let bank = PromptBank::load_or_synthetic(dir, cond_dim);
+        let music_bank = PromptBank::load(dir.join("music_prompts.npy"))
+            .unwrap_or_else(|_| PromptBank::synthetic(256, cond_dim, 17));
+        Ok(Harness { rt, bank, music_bank })
+    }
+
+    pub fn request(&self, model: &ModelInfo, idx: usize, steps: usize) -> GenRequest {
+        let bank = if model.name == "music_tiny" { &self.music_bank } else { &self.bank };
+        GenRequest {
+            cond: bank.get(idx).clone(),
+            seed: bank.seed_for(idx),
+            guidance: 3.0,
+            steps,
+            edge: None,
+        }
+    }
+
+    /// Generate the baseline set for one cell (NoAccel, seed-matched).
+    pub fn baseline_set(
+        &self,
+        model: &str,
+        solver: SolverKind,
+        steps: usize,
+        n: usize,
+        edges: Option<&[Tensor]>,
+    ) -> Result<BaselineSet> {
+        self.rt.preload_model(model)?; // compile outside the timed region
+        let backend = self.rt.model_backend(model)?;
+        let pipe = Pipeline::new(&backend, solver);
+        let info = backend.info().clone();
+        let mut images = Vec::with_capacity(n);
+        let mut wall = 0.0;
+        let mut nfe = 0;
+        for i in 0..n {
+            let mut req = self.request(&info, i, steps);
+            if let Some(e) = edges {
+                req.edge = Some(e[i % e.len()].clone());
+            }
+            let res = pipe.generate(&req, &mut NoAccel)?;
+            wall += res.stats.wall_ms;
+            nfe += res.stats.nfe;
+            images.push(crate::pipeline::decode::finalize(&res.image));
+        }
+        Ok(BaselineSet { images, wall_ms: wall, nfe })
+    }
+
+    /// Evaluate one method against a baseline set.
+    pub fn eval_method(
+        &self,
+        model: &str,
+        solver: SolverKind,
+        steps: usize,
+        baseline: &BaselineSet,
+        make_accel: &mut dyn FnMut(&ModelInfo) -> Box<dyn Accelerator>,
+        edges: Option<&[Tensor]>,
+    ) -> Result<MethodRow> {
+        self.rt.preload_model(model)?; // compile outside the timed region
+        let backend = self.rt.model_backend(model)?;
+        let pipe = Pipeline::new(&backend, solver);
+        let info = backend.info().clone();
+        let channels = info.img[2];
+        let lpips = LpipsRc::new(channels);
+        let fid = FidRc::new(channels);
+        let n = baseline.images.len();
+
+        let mut accel = make_accel(&info);
+        let mut psnr_sum = 0.0;
+        let mut lpips_sum = 0.0;
+        let mut stats_base = FeatureStats::new();
+        let mut stats_method = FeatureStats::new();
+        let mut wall = 0.0;
+        let mut nfe = 0;
+        let mut last_trace = String::new();
+        for i in 0..n {
+            let mut req = self.request(&info, i, steps);
+            if let Some(e) = edges {
+                req.edge = Some(e[i % e.len()].clone());
+            }
+            let res: GenResult = pipe.generate(&req, accel.as_mut())?;
+            let img = crate::pipeline::decode::finalize(&res.image);
+            let base = &baseline.images[i];
+            psnr_sum += psnr(base, &img);
+            lpips_sum += lpips.distance(base, &img);
+            stats_base.push(fid.features(base));
+            stats_method.push(fid.features(&img));
+            wall += res.stats.wall_ms;
+            nfe += res.stats.nfe;
+            last_trace = res.stats.mode_trace();
+        }
+        Ok(MethodRow {
+            method: accel.name(),
+            psnr: psnr_sum / n as f64,
+            lpips: lpips_sum / n as f64,
+            fid: fid.fid(&stats_base, &stats_method),
+            speedup: baseline.wall_ms / wall.max(1e-9),
+            nfe_ratio: baseline.nfe as f64 / nfe.max(1) as f64,
+            wall_ms_per_sample: wall / n as f64,
+            mode_trace: last_trace,
+        })
+    }
+}
+
+/// Serialize rows to reports/<name>.json for EXPERIMENTS.md bookkeeping.
+pub fn write_report(name: &str, cells: &BTreeMap<String, Vec<MethodRow>>) -> Result<()> {
+    std::fs::create_dir_all("reports")?;
+    let mut obj = Vec::new();
+    for (cell, rows) in cells {
+        let arr = rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("method", Json::str(&r.method)),
+                    ("psnr", Json::num(r.psnr)),
+                    ("lpips", Json::num(r.lpips)),
+                    ("fid", Json::num(r.fid)),
+                    ("speedup", Json::num(r.speedup)),
+                    ("nfe_ratio", Json::num(r.nfe_ratio)),
+                    ("wall_ms_per_sample", Json::num(r.wall_ms_per_sample)),
+                    ("mode_trace", Json::str(&r.mode_trace)),
+                ])
+            })
+            .collect();
+        obj.push((cell.as_str(), Json::Arr(arr)));
+    }
+    let path = format!("reports/{name}.json");
+    std::fs::write(&path, Json::obj(obj).to_string())?;
+    println!("[report] wrote {path}");
+    Ok(())
+}

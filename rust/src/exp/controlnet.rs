@@ -1,0 +1,55 @@
+//! Fig. 7: ControlNet-analog — SADA applied unchanged to the
+//! edge-conditioned pipeline; fidelity + speedup vs baseline.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::common::{write_report, Harness};
+use crate::report::table::{f2, f3, speedup};
+use crate::report::Table;
+use crate::sada::Sada;
+use crate::solvers::SolverKind;
+use crate::tensor::Tensor;
+use crate::util::npy;
+
+/// Load the canny-analog edge maps exported by the compile path.
+pub fn load_edges(artifacts: &str) -> Result<Vec<Tensor>> {
+    let arr = npy::read_npy(format!("{artifacts}/control_edges.npy"))?;
+    anyhow::ensure!(arr.shape.len() == 4, "edges must be [n, h, w, 1]");
+    let [n, hh, ww, c] = [arr.shape[0], arr.shape[1], arr.shape[2], arr.shape[3]];
+    let plane = hh * ww * c;
+    Ok((0..n)
+        .map(|i| {
+            Tensor::new(arr.data[i * plane..(i + 1) * plane].to_vec(), &[1, hh, ww, c]).unwrap()
+        })
+        .collect())
+}
+
+pub fn run(artifacts: &str, samples: usize, steps: usize) -> Result<()> {
+    let h = Harness::open(artifacts)?;
+    let edges = load_edges(artifacts)?;
+    let solver = SolverKind::DpmPP;
+    let base = h.baseline_set("control_tiny", solver, steps, samples, Some(&edges))?;
+    let mut factory = |info: &crate::runtime::ModelInfo| {
+        Box::new(Sada::with_default(info, steps)) as Box<dyn crate::pipeline::Accelerator>
+    };
+    let row = h.eval_method("control_tiny", solver, steps, &base, &mut factory, Some(&edges))?;
+    let mut table = Table::new(
+        &format!("Fig 7 — ControlNet-analog ({steps} steps, n={samples}, canny-analog edges)"),
+        &["Method", "PSNR^", "LPIPSv", "FIDv", "Speedup", "NFEx"],
+    );
+    table.row(vec![
+        "SADA".into(),
+        f2(row.psnr),
+        f3(row.lpips),
+        f2(row.fid),
+        speedup(row.speedup),
+        speedup(row.nfe_ratio),
+    ]);
+    table.print();
+    let mut cells = BTreeMap::new();
+    cells.insert("control_tiny/dpmpp".to_string(), vec![row]);
+    write_report("fig7", &cells)?;
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Experiment harnesses: one entry point per paper table/figure.
+//!
+//! Every harness is invoked by `sada-serve <id>` (see main.rs) and prints
+//! the paper-shaped table plus a machine-readable JSON blob under
+//! `reports/`. DESIGN.md SS4 maps each id to the paper artifact.
+
+pub mod ablation;
+pub mod common;
+pub mod controlnet;
+pub mod figs;
+pub mod music;
+pub mod perf;
+pub mod serving;
+pub mod table1;
+pub mod table2;
+
+pub use common::Harness;

@@ -1,0 +1,39 @@
+//! Fig. 6: MusicLDM-analog acceleration — SADA on the mel-spectrogram
+//! diffusion model, spectrogram LPIPS + speedup vs the baseline.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::common::{write_report, Harness};
+use crate::report::table::{f2, f3, speedup};
+use crate::report::Table;
+use crate::sada::Sada;
+use crate::solvers::SolverKind;
+
+pub fn run(artifacts: &str, samples: usize, steps: usize) -> Result<()> {
+    let h = Harness::open(artifacts)?;
+    let solver = SolverKind::DpmPP;
+    let base = h.baseline_set("music_tiny", solver, steps, samples, None)?;
+    let mut factory = |info: &crate::runtime::ModelInfo| {
+        Box::new(Sada::with_default(info, steps)) as Box<dyn crate::pipeline::Accelerator>
+    };
+    let row = h.eval_method("music_tiny", solver, steps, &base, &mut factory, None)?;
+    let mut table = Table::new(
+        &format!("Fig 6 — MusicLDM-analog ({steps} steps, n={samples} clips)"),
+        &["Method", "Spec-PSNR^", "Spec-LPIPSv", "FIDv", "Speedup", "NFEx"],
+    );
+    table.row(vec![
+        "SADA".into(),
+        f2(row.psnr),
+        f3(row.lpips),
+        f2(row.fid),
+        speedup(row.speedup),
+        speedup(row.nfe_ratio),
+    ]);
+    table.print();
+    let mut cells = BTreeMap::new();
+    cells.insert("music_tiny/dpmpp".to_string(), vec![row]);
+    write_report("fig6", &cells)?;
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! §Perf harness: whole-stack profile of one accelerated generation.
+//!
+//! Breaks an end-to-end run into (a) PJRT executions per variant (count +
+//! mean ms, from the runtime's ExecStats), (b) host-side solver/SADA time
+//! (wall minus device time), and prints the before/after table the
+//! EXPERIMENTS.md §Perf log is built from.
+
+use anyhow::Result;
+
+use crate::pipeline::{GenRequest, NoAccel, Pipeline};
+use crate::report::Table;
+use crate::runtime::{ModelBackend, Runtime};
+use crate::sada::Sada;
+use crate::solvers::SolverKind;
+use crate::workload::PromptBank;
+
+pub fn run(artifacts: &str, model: &str, steps: usize, n: usize) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    rt.preload_model(model)?;
+    let backend = rt.model_backend(model)?;
+    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let bank = PromptBank::load_or_synthetic(std::path::Path::new(artifacts), rt.manifest.cond_dim);
+
+    for accel_name in ["baseline", "sada"] {
+        rt.reset_stats();
+        let mut wall = 0.0;
+        let mut nfe = 0;
+        for p in 0..n {
+            let req = GenRequest {
+                cond: bank.get(p).clone(),
+                seed: bank.seed_for(p),
+                guidance: 3.0,
+                steps,
+                edge: None,
+            };
+            let res = if accel_name == "baseline" {
+                pipe.generate(&req, &mut NoAccel)?
+            } else {
+                let mut s = Sada::with_default(backend.info(), steps);
+                pipe.generate(&req, &mut s)?
+            };
+            wall += res.stats.wall_ms;
+            nfe += res.stats.nfe;
+        }
+        let mut table = Table::new(
+            &format!("§Perf — {model} {accel_name}, {steps} steps x {n} runs"),
+            &["segment", "count", "total ms", "mean ms", "% of wall"],
+        );
+        let mut device_ms = 0.0;
+        let mut stats: Vec<(String, crate::runtime::ExecStats)> =
+            rt.stats().into_iter().collect();
+        stats.sort_by(|a, b| b.1.total_ms.partial_cmp(&a.1.total_ms).unwrap());
+        for (key, s) in &stats {
+            device_ms += s.total_ms;
+            table.row(vec![
+                key.clone(),
+                s.count.to_string(),
+                format!("{:.1}", s.total_ms),
+                format!("{:.2}", s.total_ms / s.count.max(1) as f64),
+                format!("{:.1}%", 100.0 * s.total_ms / wall),
+            ]);
+        }
+        let host_ms = (wall - device_ms).max(0.0);
+        table.row(vec![
+            "host (solver+sada+alloc)".into(),
+            "-".into(),
+            format!("{host_ms:.1}"),
+            format!("{:.3}", host_ms / (steps * n) as f64),
+            format!("{:.1}%", 100.0 * host_ms / wall),
+        ]);
+        table.row(vec![
+            "TOTAL wall".into(),
+            format!("{} NFE", nfe),
+            format!("{wall:.1}"),
+            format!("{:.2}", wall / n as f64),
+            "100%".into(),
+        ]);
+        table.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,200 @@
+//! End-to-end serving benchmark (the mandated E2E driver): Poisson load
+//! through the coordinator, reporting latency percentiles + throughput.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
+use crate::coordinator::request::RequestId;
+use crate::report::table::{f2, speedup};
+use crate::report::{LatencyStats, Table};
+use crate::solvers::SolverKind;
+use crate::workload::{PromptBank, TraceGen};
+
+pub struct ServingReport {
+    pub accel: String,
+    pub n: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub latency: LatencyStats,
+    pub mean_batch: f64,
+    pub mean_nfe: f64,
+}
+
+/// Drive `n` requests at `rate_rps` (open loop) with accelerator `accel`.
+pub fn drive(
+    artifacts: &str,
+    model: &str,
+    accel: &str,
+    n: usize,
+    rate_rps: f64,
+    steps: usize,
+    bursty: bool,
+) -> Result<ServingReport> {
+    let cfg = CoordinatorConfig {
+        artifacts_dir: artifacts.to_string(),
+        models: vec![model.to_string()],
+        solver: SolverKind::DpmPP,
+        batch_buckets: vec![2, 4, 8],
+        max_wait_ms: 30.0,
+        queue_cap: 512,
+    };
+    let coord = Coordinator::start(cfg)?;
+    let bank = PromptBank::load_or_synthetic(std::path::Path::new(artifacts), 32);
+    let gen = if bursty { TraceGen::bursty(rate_rps, 4.0) } else { TraceGen::poisson(rate_rps) };
+    let trace = gen.generate(n, 99);
+
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let t0 = Instant::now();
+    for (i, arr) in trace.iter().enumerate() {
+        // open-loop arrivals: sleep until the scheduled time
+        let target = Duration::from_secs_f64(arr.at_ms / 1e3);
+        if let Some(remaining) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(remaining);
+        }
+        coord.submit(ServeRequest {
+            id: RequestId(i as u64),
+            model: model.to_string(),
+            cond: bank.get(arr.prompt_idx).clone(),
+            seed: bank.seed_for(arr.prompt_idx),
+            steps,
+            guidance: 3.0,
+            accel: accel.to_string(),
+            submitted_at: Instant::now(),
+            reply: reply_tx.clone(),
+        })?;
+    }
+    drop(reply_tx);
+
+    let mut latency = LatencyStats::new();
+    let mut batch_sum = 0usize;
+    let mut nfe_sum = 0usize;
+    let mut got = 0usize;
+    while got < n {
+        let resp = reply_rx.recv()?;
+        latency.record_ms(resp.latency_ms);
+        batch_sum += resp.batch_size;
+        nfe_sum += resp.stats.nfe;
+        got += 1;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics_text = coord.metrics_text();
+    coord.shutdown()?;
+    if std::env::var("SADA_SERVE_METRICS").is_ok() {
+        println!("--- serving metrics ({accel}) ---\n{metrics_text}");
+    }
+    Ok(ServingReport {
+        accel: accel.to_string(),
+        n,
+        wall_s,
+        throughput_rps: n as f64 / wall_s,
+        latency,
+        mean_batch: batch_sum as f64 / n as f64,
+        mean_nfe: nfe_sum as f64 / n as f64,
+    })
+}
+
+/// Mixed-model serving: sd2 and flux requests interleaved through one
+/// coordinator (two router queues, separate batchers) — exercises routing
+/// isolation under load.
+pub fn drive_mixed(artifacts: &str, n: usize, rate_rps: f64, steps: usize) -> Result<ServingReport> {
+    let cfg = CoordinatorConfig {
+        artifacts_dir: artifacts.to_string(),
+        models: vec!["sd2_tiny".to_string(), "flux_tiny".to_string()],
+        solver: SolverKind::DpmPP,
+        batch_buckets: vec![2, 4, 8],
+        max_wait_ms: 30.0,
+        queue_cap: 512,
+    };
+    let coord = Coordinator::start(cfg)?;
+    let bank = PromptBank::load_or_synthetic(std::path::Path::new(artifacts), 32);
+    let trace = TraceGen::poisson(rate_rps).generate(n, 123);
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let t0 = Instant::now();
+    for (i, arr) in trace.iter().enumerate() {
+        let target = Duration::from_secs_f64(arr.at_ms / 1e3);
+        if let Some(remaining) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(remaining);
+        }
+        // the engine selects the flow solver for flux automatically
+        // (manifest predict == "v" is authoritative over cfg.solver)
+        let model = if i % 3 == 0 { "flux_tiny" } else { "sd2_tiny" };
+        coord.submit(ServeRequest {
+            id: RequestId(i as u64),
+            model: model.to_string(),
+            cond: bank.get(arr.prompt_idx).clone(),
+            seed: bank.seed_for(arr.prompt_idx),
+            steps,
+            guidance: 3.0,
+            accel: "sada".to_string(),
+            submitted_at: Instant::now(),
+            reply: reply_tx.clone(),
+        })?;
+    }
+    drop(reply_tx);
+    let mut latency = LatencyStats::new();
+    let mut batch_sum = 0usize;
+    let mut nfe_sum = 0usize;
+    let mut got = 0usize;
+    while got < n {
+        let resp = reply_rx.recv()?;
+        latency.record_ms(resp.latency_ms);
+        batch_sum += resp.batch_size;
+        nfe_sum += resp.stats.nfe;
+        got += 1;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    coord.shutdown()?;
+    Ok(ServingReport {
+        accel: "sada(mixed)".into(),
+        n,
+        wall_s,
+        throughput_rps: n as f64 / wall_s,
+        latency,
+        mean_batch: batch_sum as f64 / n as f64,
+        mean_nfe: nfe_sum as f64 / n as f64,
+    })
+}
+
+/// The `serve` subcommand / serve_batch example body: baseline vs SADA
+/// under identical load.
+pub fn run(artifacts: &str, model: &str, n: usize, rate_rps: f64, steps: usize) -> Result<()> {
+    run_with_load(artifacts, model, n, rate_rps, steps, false)
+}
+
+pub fn run_with_load(
+    artifacts: &str,
+    model: &str,
+    n: usize,
+    rate_rps: f64,
+    steps: usize,
+    bursty: bool,
+) -> Result<()> {
+    let load = if bursty { "bursty" } else { "Poisson" };
+    let mut table = Table::new(
+        &format!("E2E serving — {model}, {load} {rate_rps} rps, n={n}, {steps} steps"),
+        &["Accel", "Thrpt rps", "p50 ms", "p95 ms", "p99 ms", "Mean batch", "Mean NFE"],
+    );
+    let mut reports = Vec::new();
+    for accel in ["baseline", "sada"] {
+        let r = drive(artifacts, model, accel, n, rate_rps, steps, bursty)?;
+        table.row(vec![
+            r.accel.clone(),
+            f2(r.throughput_rps),
+            f2(r.latency.p50_ms()),
+            f2(r.latency.p95_ms()),
+            f2(r.latency.p99_ms()),
+            f2(r.mean_batch),
+            f2(r.mean_nfe),
+        ]);
+        reports.push(r);
+    }
+    table.print();
+    if reports.len() == 2 {
+        let speed = reports[0].latency.p50_ms() / reports[1].latency.p50_ms().max(1e-9);
+        println!("SADA p50 latency speedup under load: {}", speedup(speed));
+    }
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Table 1 (+ Fig. 1 headline numbers): main results on the prompt bank.
+//!
+//! {SD-2, SDXL} x {DPM++, Euler} x {DeepCache, AdaptiveDiffusion, SADA}
+//! plus Flux (flow matching) x {TeaCache, SADA} — PSNR / LPIPS / FID /
+//! speedup against the seed-matched unaccelerated baseline.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::common::{write_report, Harness, MethodRow};
+use crate::baselines::{AdaptiveDiffusion, DeepCache, TeaCache};
+use crate::pipeline::Accelerator;
+use crate::report::table::{f2, f3, speedup};
+use crate::report::Table;
+use crate::runtime::ModelInfo;
+use crate::sada::Sada;
+use crate::solvers::SolverKind;
+
+type AccelFactory<'f> = (&'static str, Box<dyn FnMut(&ModelInfo) -> Box<dyn Accelerator> + 'f>);
+
+pub fn run(artifacts: &str, samples: usize, steps: usize) -> Result<()> {
+    let h = Harness::open(artifacts)?;
+    let mut table = Table::new(
+        &format!("Table 1 — MS-COCO-analog prompt bank, {steps} steps, n={samples}"),
+        &["Model", "Scheduler", "Method", "PSNR^", "LPIPSv", "FIDv", "Speedup", "NFEx"],
+    );
+    let mut cells: BTreeMap<String, Vec<MethodRow>> = BTreeMap::new();
+
+    let unet_cells: [(&str, SolverKind); 4] = [
+        ("sd2_tiny", SolverKind::DpmPP),
+        ("sd2_tiny", SolverKind::Euler),
+        ("sdxl_tiny", SolverKind::DpmPP),
+        ("sdxl_tiny", SolverKind::Euler),
+    ];
+    for (model, solver) in unet_cells {
+        let base = h.baseline_set(model, solver, steps, samples, None)?;
+        let mut methods: Vec<AccelFactory> = vec![
+            ("DeepCache", Box::new(|_: &ModelInfo| Box::new(DeepCache::default()) as _)),
+            ("AdaptiveDiffusion", Box::new(|_: &ModelInfo| Box::new(AdaptiveDiffusion::default()) as _)),
+            ("SADA", Box::new(move |info: &ModelInfo| Box::new(Sada::with_default(info, steps)) as _)),
+        ];
+        for (label, factory) in methods.iter_mut() {
+            let row = h.eval_method(model, solver, steps, &base, factory.as_mut(), None)?;
+            table.row(vec![
+                model.into(),
+                solver.name().into(),
+                (*label).into(),
+                f2(row.psnr),
+                f3(row.lpips),
+                f2(row.fid),
+                speedup(row.speedup),
+                speedup(row.nfe_ratio),
+            ]);
+            cells
+                .entry(format!("{model}/{}", solver.name()))
+                .or_default()
+                .push(MethodRow { method: (*label).into(), ..row });
+        }
+    }
+
+    // Flux: flow matching, TeaCache comparator (paper Table 1 bottom block)
+    let base = h.baseline_set("flux_tiny", SolverKind::Flow, steps, samples, None)?;
+    let mut methods: Vec<AccelFactory> = vec![
+        ("TeaCache", Box::new(|_: &ModelInfo| Box::new(TeaCache::default()) as _)),
+        ("SADA", Box::new(move |info: &ModelInfo| Box::new(Sada::with_default(info, steps)) as _)),
+    ];
+    for (label, factory) in methods.iter_mut() {
+        let row = h.eval_method("flux_tiny", SolverKind::Flow, steps, &base, factory.as_mut(), None)?;
+        table.row(vec![
+            "flux_tiny".into(),
+            "flow".into(),
+            (*label).into(),
+            f2(row.psnr),
+            f3(row.lpips),
+            f2(row.fid),
+            speedup(row.speedup),
+            speedup(row.nfe_ratio),
+        ]);
+        cells
+            .entry("flux_tiny/flow".into())
+            .or_default()
+            .push(MethodRow { method: (*label).into(), ..row });
+    }
+
+    table.print();
+    write_report("table1", &cells)?;
+    Ok(())
+}

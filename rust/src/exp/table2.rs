@@ -1,0 +1,49 @@
+//! Table 2: few-step ablation — SADA under {50, 25, 15} steps on
+//! {SD-2, SDXL} x {DPM++, Euler}.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::common::{write_report, Harness, MethodRow};
+use crate::report::table::{f2, f3, speedup};
+use crate::report::Table;
+use crate::sada::Sada;
+use crate::solvers::SolverKind;
+
+pub fn run(artifacts: &str, samples: usize) -> Result<()> {
+    let h = Harness::open(artifacts)?;
+    let mut table = Table::new(
+        &format!("Table 2 — few-step ablation (SADA), n={samples}"),
+        &["Model", "Scheduler", "Steps", "PSNR^", "LPIPSv", "FIDv", "Speedup", "NFEx"],
+    );
+    let mut cells: BTreeMap<String, Vec<MethodRow>> = BTreeMap::new();
+    for model in ["sd2_tiny", "sdxl_tiny"] {
+        for solver in [SolverKind::DpmPP, SolverKind::Euler] {
+            for steps in [50usize, 25, 15] {
+                let base = h.baseline_set(model, solver, steps, samples, None)?;
+                let mut factory = |info: &crate::runtime::ModelInfo| {
+                    Box::new(Sada::with_default(info, steps)) as Box<dyn crate::pipeline::Accelerator>
+                };
+                let row = h.eval_method(model, solver, steps, &base, &mut factory, None)?;
+                table.row(vec![
+                    model.into(),
+                    solver.name().into(),
+                    steps.to_string(),
+                    f2(row.psnr),
+                    f3(row.lpips),
+                    f2(row.fid),
+                    speedup(row.speedup),
+                    speedup(row.nfe_ratio),
+                ]);
+                cells
+                    .entry(format!("{model}/{}/{steps}", solver.name()))
+                    .or_default()
+                    .push(row);
+            }
+        }
+    }
+    table.print();
+    write_report("table2", &cells)?;
+    Ok(())
+}

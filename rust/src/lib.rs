@@ -1,0 +1,38 @@
+//! SADA: Stability-guided Adaptive Diffusion Acceleration.
+//!
+//! A serving framework reproducing Jiang et al., ICML 2025 in the mandated
+//! three-layer architecture: this rust crate is Layer 3 (the request path:
+//! router, batcher, SADA scheduler, ODE solvers), executing Layer-2 JAX
+//! models (with Layer-1 Pallas kernels) that were AOT-lowered to HLO text
+//! under `artifacts/` by `make artifacts`. Python never runs at request time.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! * [`tensor`], [`rng`] — host tensor math + seeded PRNG substrate
+//! * [`runtime`] — PJRT client, artifact registry, executable wrappers
+//! * [`solvers`] — DDPM schedule, Euler/DDIM, DPM-Solver++(2M), flow Euler
+//! * [`sada`] — the paper's contribution: stability criterion, AM-3
+//!   step-wise pruning, multistep Lagrange reconstruction, token-wise masks
+//! * [`baselines`] — DeepCache / AdaptiveDiffusion / TeaCache comparators
+//! * [`pipeline`] — generation pipelines gluing model+solver+accelerator
+//! * [`metrics`] — PSNR / LPIPS-RC / FID-RC quality metrics
+//! * [`coordinator`] — serving front-end: router, dynamic batcher, engine
+//! * [`workload`] — prompt bank + arrival-trace generators
+//! * [`exp`] — experiment harnesses regenerating every paper table/figure
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod exp;
+pub mod metrics;
+pub mod pipeline;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod sada;
+pub mod solvers;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+pub mod workload;
+
+pub use tensor::Tensor;

@@ -1,0 +1,114 @@
+//! sada-serve: launcher CLI for the SADA serving framework.
+//!
+//! Subcommands map one-to-one onto the paper's tables/figures (DESIGN.md
+//! SS4) plus `generate` (single sample) and `serve` (the E2E driver).
+
+use anyhow::Result;
+
+use sada::config::cli;
+use sada::exp;
+use sada::pipeline::{NoAccel, Pipeline};
+use sada::runtime::{ModelBackend, Runtime};
+use sada::sada::Sada;
+use sada::solvers::SolverKind;
+
+const USAGE: &str = "sada-serve <command> [options]
+
+commands:
+  generate   generate one sample (--model sd2_tiny --steps 50 --prompt 0 --accel sada)
+  serve      E2E serving benchmark (--model sd2_tiny --n 32 --rate 2.0 --steps 50)
+  table1     main results table        (--samples 64 --steps 50)
+  table2     few-step ablation         (--samples 32)
+  ablate     SADA component ablation    (--samples 16 --steps 50)
+  fig2       LPIPS-vs-speedup scatter  (--samples 24 --steps 50)
+  fig3       AM-3 vs FDM-3 MSE curves  (--samples 50 --steps 50)
+  fig4       trajectory stability dump (--steps 50)
+  fig5       SADA step-mode trace      (--steps 50)
+  fig6       MusicLDM-analog           (--samples 32 --steps 50)
+  fig7       ControlNet-analog         (--samples 16 --steps 50)
+  figA3      base-step convergence     (--samples 8)
+  perf       whole-stack profile       (--model sd2_tiny --steps 50 --samples 4)
+
+common options:
+  --artifacts DIR   artifact directory (default: artifacts)
+";
+
+fn main() -> Result<()> {
+    let cli = cli::parse_env()?;
+    if cli.subcommand.is_empty() || cli.options.bool_or("help", false) {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let o = &cli.options;
+    let artifacts = o.str_or("artifacts", "artifacts").to_string();
+    let steps = o.usize_or("steps", 50);
+    match cli.subcommand.as_str() {
+        "generate" => generate(&artifacts, o)?,
+        "serve" => exp::serving::run_with_load(
+            &artifacts,
+            o.str_or("model", "sd2_tiny"),
+            o.usize_or("n", 24),
+            o.f64_or("rate", 2.0),
+            steps,
+            o.bool_or("bursty", false),
+        )?,
+        "table1" => exp::table1::run(&artifacts, o.usize_or("samples", 64), steps)?,
+        "table2" => exp::table2::run(&artifacts, o.usize_or("samples", 32))?,
+        "ablate" => exp::ablation::run(&artifacts, o.usize_or("samples", 16), steps)?,
+        "perf" => exp::perf::run(&artifacts, o.str_or("model", "sd2_tiny"), steps, o.usize_or("samples", 4))?,
+        "fig2" => exp::figs::fig2(&artifacts, o.usize_or("samples", 24), steps)?,
+        "fig3" => exp::figs::fig3(&artifacts, o.usize_or("samples", 50), steps)?,
+        "fig4" => exp::figs::fig4(&artifacts, steps)?,
+        "fig5" => exp::figs::fig5(&artifacts, steps)?,
+        "fig6" => exp::music::run(&artifacts, o.usize_or("samples", 32), steps)?,
+        "fig7" => exp::controlnet::run(&artifacts, o.usize_or("samples", 16), steps)?,
+        "figA3" | "figa3" => exp::figs::fig_a3(&artifacts, o.usize_or("samples", 8))?,
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn generate(artifacts: &str, o: &sada::config::Config) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    let model = o.str_or("model", "sd2_tiny");
+    let steps = o.usize_or("steps", 50);
+    let prompt = o.usize_or("prompt", 0);
+    let accel_name = o.str_or("accel", "sada");
+    let backend = rt.model_backend(model)?;
+    let bank = sada::workload::PromptBank::load_or_synthetic(
+        std::path::Path::new(artifacts),
+        rt.manifest.cond_dim,
+    );
+    let solver = SolverKind::parse(o.str_or("solver", "dpmpp"))
+        .ok_or_else(|| anyhow::anyhow!("unknown solver"))?;
+    let pipe = Pipeline::new(&backend, solver);
+    let req = sada::pipeline::GenRequest {
+        cond: bank.get(prompt).clone(),
+        seed: bank.seed_for(prompt),
+        guidance: o.f64_or("guidance", 3.0) as f32,
+        steps,
+        edge: None,
+    };
+    let res = if accel_name == "baseline" {
+        pipe.generate(&req, &mut NoAccel)?
+    } else {
+        let mut sada_accel = Sada::with_default(backend.info(), steps);
+        pipe.generate(&req, &mut sada_accel)?
+    };
+    let img = sada::pipeline::decode::finalize(&res.image);
+    println!(
+        "model={model} solver={} steps={steps} accel={accel_name}",
+        solver.name()
+    );
+    println!(
+        "nfe={}/{} wall={:.1}ms trace={}",
+        res.stats.nfe, steps, res.stats.wall_ms, res.stats.mode_trace()
+    );
+    let [h, w, _c] = backend.info().img;
+    println!("{}", sada::pipeline::decode::ascii_preview(&img, h, w));
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! FID-RC: Frechet distance between feature distributions.
+//!
+//! FID(P, Q) = ||mu_P - mu_Q||^2 + tr(C_P + C_Q - 2 (C_P C_Q)^{1/2}),
+//! computed over the 48-dim pooled random-conv features from
+//! [`super::LpipsRc`] (the Inception substitution, DESIGN.md SS1).
+
+use super::linalg::{trace_sqrt_product, SymMat};
+use super::lpips::LpipsRc;
+use crate::tensor::Tensor;
+
+/// Accumulates feature statistics for one sample set.
+#[derive(Clone, Debug, Default)]
+pub struct FeatureStats {
+    feats: Vec<Vec<f32>>,
+}
+
+impl FeatureStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, f: Vec<f32>) {
+        if let Some(first) = self.feats.first() {
+            assert_eq!(first.len(), f.len(), "feature dim mismatch");
+        }
+        self.feats.push(f);
+    }
+
+    pub fn count(&self) -> usize {
+        self.feats.len()
+    }
+
+    fn mean_cov(&self) -> (Vec<f64>, SymMat) {
+        let n = self.feats.len().max(1);
+        let d = self.feats.first().map(|f| f.len()).unwrap_or(0);
+        let mut mean = vec![0.0f64; d];
+        for f in &self.feats {
+            for (m, v) in mean.iter_mut().zip(f) {
+                *m += *v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        let mut cov = SymMat::zeros(d);
+        if n > 1 {
+            for f in &self.feats {
+                for i in 0..d {
+                    let di = f[i] as f64 - mean[i];
+                    for j in i..d {
+                        let dj = f[j] as f64 - mean[j];
+                        let v = cov.get(i, j) + di * dj;
+                        cov.set(i, j, v);
+                    }
+                }
+            }
+            for i in 0..d {
+                for j in i..d {
+                    let v = cov.get(i, j) / (n - 1) as f64;
+                    cov.set(i, j, v);
+                    cov.set(j, i, v);
+                }
+            }
+        }
+        (mean, cov)
+    }
+}
+
+pub struct FidRc {
+    extractor: LpipsRc,
+}
+
+impl FidRc {
+    pub fn new(channels: usize) -> Self {
+        Self { extractor: LpipsRc::new(channels) }
+    }
+
+    pub fn features(&self, img: &Tensor) -> Vec<f32> {
+        self.extractor.pooled_features(img)
+    }
+
+    /// Frechet distance between two accumulated sets.
+    pub fn fid(&self, a: &FeatureStats, b: &FeatureStats) -> f64 {
+        assert!(a.count() > 1 && b.count() > 1, "need >= 2 samples per set");
+        let (mu_a, cov_a) = a.mean_cov();
+        let (mu_b, cov_b) = b.mean_cov();
+        let mean_term: f64 = mu_a
+            .iter()
+            .zip(&mu_b)
+            .map(|(p, q)| (p - q) * (p - q))
+            .sum();
+        let tr_ab = trace_sqrt_product(&cov_a, &cov_b);
+        (mean_term + cov_a.trace() + cov_b.trace() - 2.0 * tr_ab).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn set(seed: u64, n: usize, shift: f32, fid: &FidRc) -> FeatureStats {
+        let mut rng = Rng::new(seed);
+        let mut s = FeatureStats::new();
+        for _ in 0..n {
+            let mut img = Tensor::from_rng(&mut rng, &[1, 16, 16, 3]);
+            for v in img.data_mut() {
+                *v = (*v * 0.3 + shift).clamp(-1.0, 1.0);
+            }
+            s.push(fid.features(&img));
+        }
+        s
+    }
+
+    #[test]
+    fn identical_sets_near_zero() {
+        let fid = FidRc::new(3);
+        let a = set(1, 24, 0.0, &fid);
+        let d = fid.fid(&a, &a.clone());
+        assert!(d < 1e-6, "fid(a,a) = {d}");
+    }
+
+    #[test]
+    fn same_distribution_small_distance() {
+        let fid = FidRc::new(3);
+        let a = set(2, 32, 0.0, &fid);
+        let b = set(3, 32, 0.0, &fid);
+        let same = fid.fid(&a, &b);
+        let c = set(4, 32, 0.6, &fid);
+        let diff = fid.fid(&a, &c);
+        assert!(same < diff, "same-dist {same} !< diff-dist {diff}");
+    }
+
+    #[test]
+    fn symmetric() {
+        let fid = FidRc::new(3);
+        let a = set(5, 16, 0.0, &fid);
+        let b = set(6, 16, 0.4, &fid);
+        let ab = fid.fid(&a, &b);
+        let ba = fid.fid(&b, &a);
+        assert!((ab - ba).abs() < 1e-6);
+    }
+}

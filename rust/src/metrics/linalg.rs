@@ -1,0 +1,227 @@
+//! Dense symmetric linear algebra for FID: Jacobi eigendecomposition and
+//! PSD matrix square roots. Matrices are small (48x48), so the classic
+//! cyclic Jacobi sweep is plenty fast and very robust.
+
+/// Column-major-agnostic dense symmetric matrix as row-major Vec.
+#[derive(Clone, Debug)]
+pub struct SymMat {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl SymMat {
+    pub fn zeros(n: usize) -> Self {
+        Self { n, a: vec![0.0; n * n] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+    }
+
+    pub fn matmul(&self, other: &SymMat) -> SymMat {
+        let n = self.n;
+        let mut out = SymMat::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let v = self.get(i, k);
+                if v == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.a[i * n + j] += v * other.get(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.n).map(|i| self.get(i, i)).sum()
+    }
+
+    /// Frobenius norm of the off-diagonal part.
+    fn offdiag_norm(&self) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j {
+                    s += self.get(i, j).powi(2);
+                }
+            }
+        }
+        s.sqrt()
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns (eigenvalues, eigenvectors as rows of V s.t. A = V^T diag(l) V).
+pub fn jacobi_eigen(m: &SymMat, max_sweeps: usize) -> (Vec<f64>, SymMat) {
+    let n = m.n;
+    let mut a = m.clone();
+    let mut v = SymMat::zeros(n);
+    for i in 0..n {
+        v.set(i, i, 1.0);
+    }
+    for _ in 0..max_sweeps {
+        if a.offdiag_norm() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a.get(p, q);
+                if apq.abs() < 1e-14 {
+                    continue;
+                }
+                let app = a.get(p, p);
+                let aqq = a.get(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of a
+                for k in 0..n {
+                    let akp = a.get(k, p);
+                    let akq = a.get(k, q);
+                    a.set(k, p, c * akp - s * akq);
+                    a.set(k, q, s * akp + c * akq);
+                }
+                for k in 0..n {
+                    let apk = a.get(p, k);
+                    let aqk = a.get(q, k);
+                    a.set(p, k, c * apk - s * aqk);
+                    a.set(q, k, s * apk + c * aqk);
+                }
+                for k in 0..n {
+                    let vpk = v.get(p, k);
+                    let vqk = v.get(q, k);
+                    v.set(p, k, c * vpk - s * vqk);
+                    v.set(q, k, s * vpk + c * vqk);
+                }
+            }
+        }
+    }
+    let eig = (0..n).map(|i| a.get(i, i)).collect();
+    (eig, v)
+}
+
+/// PSD square root via eigendecomposition: sqrt(A) = V^T diag(sqrt(l)) V.
+pub fn sqrt_psd(m: &SymMat) -> SymMat {
+    let (eig, v) = jacobi_eigen(m, 50);
+    let n = m.n;
+    let mut out = SymMat::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..n {
+                let l = eig[k].max(0.0).sqrt();
+                acc += v.get(k, i) * l * v.get(k, j);
+            }
+            out.set(i, j, acc);
+        }
+    }
+    out
+}
+
+/// trace((A B)^{1/2}) for symmetric PSD A, B via the similarity trick:
+/// tr((A B)^{1/2}) = tr((A^{1/2} B A^{1/2})^{1/2}) = sum sqrt(eig(...)).
+pub fn trace_sqrt_product(a: &SymMat, b: &SymMat) -> f64 {
+    let ra = sqrt_psd(a);
+    let inner = ra.matmul(b).matmul(&ra);
+    // symmetrize against round-off
+    let n = inner.n;
+    let mut sym = SymMat::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            sym.set(i, j, 0.5 * (inner.get(i, j) + inner.get(j, i)));
+        }
+    }
+    let (eig, _) = jacobi_eigen(&sym, 50);
+    eig.iter().map(|l| l.max(0.0).sqrt()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_psd(n: usize, seed: u64) -> SymMat {
+        let mut rng = Rng::new(seed);
+        let mut b = SymMat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                b.set(i, j, rng.gaussian());
+            }
+        }
+        // A = B B^T + eps I
+        let mut a = SymMat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += b.get(i, k) * b.get(j, k);
+                }
+                a.set(i, j, acc + if i == j { 1e-6 } else { 0.0 });
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn eigen_reconstructs_diagonal() {
+        let mut d = SymMat::zeros(3);
+        d.set(0, 0, 3.0);
+        d.set(1, 1, 1.0);
+        d.set(2, 2, -2.0);
+        let (mut eig, _) = jacobi_eigen(&d, 30);
+        eig.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((eig[0] + 2.0).abs() < 1e-10);
+        assert!((eig[1] - 1.0).abs() < 1e-10);
+        assert!((eig[2] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn eigen_trace_preserved() {
+        let a = random_psd(8, 1);
+        let (eig, _) = jacobi_eigen(&a, 50);
+        let sum: f64 = eig.iter().sum();
+        assert!((sum - a.trace()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        let a = random_psd(6, 2);
+        let r = sqrt_psd(&a);
+        let rr = r.matmul(&r);
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!(
+                    (rr.get(i, j) - a.get(i, j)).abs() < 1e-6,
+                    "mismatch at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trace_sqrt_product_identity() {
+        // A = B => tr((A A)^{1/2}) = tr(A)
+        let a = random_psd(5, 3);
+        let got = trace_sqrt_product(&a, &a);
+        assert!((got - a.trace()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn trace_sqrt_commutes() {
+        let a = random_psd(5, 4);
+        let b = random_psd(5, 5);
+        let ab = trace_sqrt_product(&a, &b);
+        let ba = trace_sqrt_product(&b, &a);
+        assert!((ab - ba).abs() < 1e-6);
+    }
+}

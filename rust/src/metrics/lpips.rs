@@ -1,0 +1,221 @@
+//! LPIPS-RC: perceptual distance over fixed-seed random-convolution features.
+//!
+//! Three conv stages (3x3 kernels, stride 1-2-2, leaky-relu), channel-wise
+//! unit-normalized activations, stage-wise MSE averaged — the LPIPS recipe
+//! (Zhang et al., 2018) with random filters substituted for AlexNet
+//! (DESIGN.md SS1). Weights derive from a fixed seed so the metric is a
+//! constant of the repo. Also exposes pooled features for FID-RC.
+
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+struct ConvLayer {
+    w: Vec<f32>, // [out_c, in_c, 3, 3]
+    in_c: usize,
+    out_c: usize,
+    stride: usize,
+}
+
+impl ConvLayer {
+    fn new(rng: &mut Rng, in_c: usize, out_c: usize, stride: usize) -> Self {
+        let n = out_c * in_c * 9;
+        let scale = (2.0 / (in_c as f64 * 9.0)).sqrt() as f32;
+        let w = rng.gaussian_vec(n).iter().map(|v| v * scale).collect();
+        Self { w, in_c, out_c, stride }
+    }
+
+    /// Input [h, w, in_c] (flattened row-major) -> output [h', w', out_c]
+    /// with leaky-relu, same padding.
+    fn apply(&self, x: &[f32], h: usize, w: usize) -> (Vec<f32>, usize, usize) {
+        let oh = h.div_ceil(self.stride);
+        let ow = w.div_ceil(self.stride);
+        let mut out = vec![0.0f32; oh * ow * self.out_c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let cy = (oy * self.stride) as isize;
+                let cx = (ox * self.stride) as isize;
+                for oc in 0..self.out_c {
+                    let mut acc = 0.0f32;
+                    for ky in -1..=1isize {
+                        let iy = cy + ky;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in -1..=1isize {
+                            let ix = cx + kx;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let ibase = (iy as usize * w + ix as usize) * self.in_c;
+                            let wbase =
+                                ((oc * self.in_c) * 9) + ((ky + 1) as usize * 3 + (kx + 1) as usize);
+                            for ic in 0..self.in_c {
+                                acc += x[ibase + ic] * self.w[wbase + ic * 9];
+                            }
+                        }
+                    }
+                    // leaky relu
+                    out[(oy * ow + ox) * self.out_c + oc] = if acc > 0.0 { acc } else { 0.1 * acc };
+                }
+            }
+        }
+        (out, oh, ow)
+    }
+}
+
+/// Channel-unit-normalize activations in place: each pixel's channel vector
+/// is scaled to unit L2 norm (the LPIPS normalization).
+fn unit_normalize(x: &mut [f32], c: usize) {
+    for px in x.chunks_mut(c) {
+        let n: f32 = px.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-8);
+        for v in px.iter_mut() {
+            *v /= n;
+        }
+    }
+}
+
+pub struct LpipsRc {
+    layers: Vec<ConvLayer>,
+    in_c: usize,
+}
+
+impl LpipsRc {
+    /// `in_c`: image channels (3 for RGB, 1 for spectrograms).
+    pub fn new(in_c: usize) -> Self {
+        let mut rng = Rng::new(0x5ADA_11C5 ^ in_c as u64);
+        let layers = vec![
+            ConvLayer::new(&mut rng, in_c, 8, 1),
+            ConvLayer::new(&mut rng, 8, 16, 2),
+            ConvLayer::new(&mut rng, 16, 24, 2),
+        ];
+        Self { layers, in_c }
+    }
+
+    fn stages(&self, img: &Tensor) -> Vec<(Vec<f32>, usize, usize, usize)> {
+        let shape = img.shape();
+        let (h, w) = match shape.len() {
+            4 => (shape[1], shape[2]),
+            3 => (shape[0], shape[1]),
+            _ => panic!("LPIPS expects [1,H,W,C] or [H,W,C], got {shape:?}"),
+        };
+        let mut cur = img.data().to_vec();
+        let (mut ch, mut cw) = (h, w);
+        let mut outs = Vec::new();
+        let mut c_in = self.in_c;
+        for layer in &self.layers {
+            assert_eq!(c_in, layer.in_c);
+            let (next, nh, nw) = layer.apply(&cur, ch, cw);
+            outs.push((next.clone(), nh, nw, layer.out_c));
+            cur = next;
+            ch = nh;
+            cw = nw;
+            c_in = layer.out_c;
+        }
+        outs
+    }
+
+    /// Perceptual distance between two same-shape images in [-1, 1].
+    pub fn distance(&self, a: &Tensor, b: &Tensor) -> f64 {
+        assert_eq!(a.shape(), b.shape(), "LPIPS shape mismatch");
+        let sa = self.stages(a);
+        let sb = self.stages(b);
+        let mut total = 0.0f64;
+        for ((mut fa, h, w, c), (mut fb, _, _, _)) in sa.into_iter().zip(sb) {
+            unit_normalize(&mut fa, c);
+            unit_normalize(&mut fb, c);
+            let mse: f64 = fa
+                .iter()
+                .zip(&fb)
+                .map(|(p, q)| {
+                    let d = (*p - *q) as f64;
+                    d * d
+                })
+                .sum::<f64>()
+                / (h * w * c) as f64;
+            total += mse;
+        }
+        total / self.layers.len() as f64
+    }
+
+    /// Pooled final-stage features (dim 24+16+8 = 48) for FID-RC.
+    pub fn pooled_features(&self, img: &Tensor) -> Vec<f32> {
+        let stages = self.stages(img);
+        let mut feats = Vec::with_capacity(48);
+        for (f, h, w, c) in stages {
+            let hw = (h * w) as f32;
+            for ch in 0..c {
+                let mut acc = 0.0f32;
+                for px in 0..(h * w) {
+                    acc += f[px * c + ch];
+                }
+                feats.push(acc / hw);
+            }
+        }
+        feats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn img(seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::from_rng(&mut rng, &[1, 16, 16, 3])
+    }
+
+    #[test]
+    fn zero_distance_to_self() {
+        let m = LpipsRc::new(3);
+        let a = img(1);
+        assert!(m.distance(&a, &a) < 1e-12);
+    }
+
+    #[test]
+    fn symmetric_and_positive() {
+        let m = LpipsRc::new(3);
+        let a = img(2);
+        let b = img(3);
+        let d1 = m.distance(&a, &b);
+        let d2 = m.distance(&b, &a);
+        assert!(d1 > 0.0);
+        assert!((d1 - d2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_perturbation() {
+        let m = LpipsRc::new(3);
+        let a = img(4);
+        let mut small = a.clone();
+        let mut large = a.clone();
+        let mut rng = Rng::new(5);
+        let noise: Vec<f32> = rng.gaussian_vec(a.len());
+        for (i, v) in small.data_mut().iter_mut().enumerate() {
+            *v += 0.02 * noise[i];
+        }
+        for (i, v) in large.data_mut().iter_mut().enumerate() {
+            *v += 0.3 * noise[i];
+        }
+        assert!(m.distance(&a, &small) < m.distance(&a, &large));
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a = img(6);
+        let b = img(7);
+        let d1 = LpipsRc::new(3).distance(&a, &b);
+        let d2 = LpipsRc::new(3).distance(&a, &b);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn pooled_features_dim() {
+        let m = LpipsRc::new(3);
+        assert_eq!(m.pooled_features(&img(8)).len(), 48);
+        // single channel variant (spectrograms)
+        let m1 = LpipsRc::new(1);
+        let mut rng = Rng::new(9);
+        let spec = Tensor::from_rng(&mut rng, &[1, 16, 64, 1]);
+        assert_eq!(m1.pooled_features(&spec).len(), 48);
+    }
+}

@@ -1,0 +1,16 @@
+//! Quality metrics: PSNR, LPIPS-RC, FID-RC.
+//!
+//! The paper evaluates faithfulness of accelerated samples *against the
+//! unmodified baseline of the same model and seed*; PSNR is exact, and the
+//! perceptual metrics substitute fixed-seed random-convolution features for
+//! AlexNet/Inception (DESIGN.md SS1) — standard at tiny image scale, and
+//! monotone in the structural deviations the tables measure.
+
+pub mod fid;
+pub mod linalg;
+pub mod lpips;
+pub mod psnr;
+
+pub use fid::FidRc;
+pub use lpips::LpipsRc;
+pub use psnr::psnr;

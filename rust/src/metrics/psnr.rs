@@ -1,0 +1,47 @@
+//! Peak Signal-to-Noise Ratio over [-1, 1] images (peak-to-peak 2.0).
+
+use crate::tensor::{ops, Tensor};
+
+pub fn psnr(a: &Tensor, b: &Tensor) -> f64 {
+    let mse = ops::mse(a, b);
+    if mse <= 1e-20 {
+        return 100.0; // identical images: conventional cap
+    }
+    let peak = 2.0f64; // [-1, 1] dynamic range
+    10.0 * ((peak * peak) / mse).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_images_cap() {
+        let t = Tensor::full(&[4, 4], 0.3);
+        assert_eq!(psnr(&t, &t), 100.0);
+    }
+
+    #[test]
+    fn known_value() {
+        // constant error 0.2 => mse 0.04 => psnr = 10 log10(4 / 0.04) = 20
+        let a = Tensor::full(&[8], 0.0);
+        let b = Tensor::full(&[8], 0.2);
+        assert!((psnr(&a, &b) - 20.0).abs() < 1e-5); // f32 storage rounding
+    }
+
+    #[test]
+    fn monotone_in_error() {
+        let a = Tensor::full(&[8], 0.0);
+        let small = Tensor::full(&[8], 0.05);
+        let large = Tensor::full(&[8], 0.5);
+        assert!(psnr(&a, &small) > psnr(&a, &large));
+    }
+
+    #[test]
+    fn symmetric() {
+        let mut rng = crate::rng::Rng::new(1);
+        let a = Tensor::from_rng(&mut rng, &[16]);
+        let b = Tensor::from_rng(&mut rng, &[16]);
+        assert!((psnr(&a, &b) - psnr(&b, &a)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,65 @@
+//! Sample post-processing: [-1,1] image tensors -> displayable/metric form.
+
+use crate::tensor::Tensor;
+
+/// Clamp to the training data range [-1, 1] (the "decode" step — our models
+/// work directly in pixel space; see DESIGN.md SS1).
+pub fn finalize(image: &Tensor) -> Tensor {
+    let data = image.data().iter().map(|v| v.clamp(-1.0, 1.0)).collect();
+    Tensor::new(data, image.shape()).expect("same shape")
+}
+
+/// Map [-1,1] to [0,1] for PSNR-style metrics.
+pub fn to_unit(image: &Tensor) -> Tensor {
+    let data = image
+        .data()
+        .iter()
+        .map(|v| (v.clamp(-1.0, 1.0) + 1.0) * 0.5)
+        .collect();
+    Tensor::new(data, image.shape()).expect("same shape")
+}
+
+/// Render a single-channel tensor as coarse ASCII art (debug/demo helper).
+pub fn ascii_preview(image: &Tensor, h: usize, w: usize) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let c: usize = image.len() / (h * w);
+    let mut out = String::new();
+    for r in 0..h {
+        for col in 0..w {
+            let mut v = 0.0f32;
+            for ch in 0..c {
+                v += image.data()[(r * w + col) * c + ch];
+            }
+            let v = ((v / c as f32).clamp(-1.0, 1.0) + 1.0) / 2.0;
+            let idx = ((v * (RAMP.len() - 1) as f32).round() as usize).min(RAMP.len() - 1);
+            out.push(RAMP[idx] as char);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finalize_clamps() {
+        let t = Tensor::new(vec![-3.0, 0.5, 2.0], &[3]).unwrap();
+        assert_eq!(finalize(&t).data(), &[-1.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn to_unit_range() {
+        let t = Tensor::new(vec![-1.0, 0.0, 1.0], &[3]).unwrap();
+        assert_eq!(to_unit(&t).data(), &[0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn ascii_preview_dims() {
+        let t = Tensor::zeros(&[1, 4, 4, 3]);
+        let s = ascii_preview(&t, 4, 4);
+        assert_eq!(s.lines().count(), 4);
+        assert!(s.lines().all(|l| l.len() == 4));
+    }
+}

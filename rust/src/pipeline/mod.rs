@@ -1,0 +1,546 @@
+//! Generation pipelines: model backend + ODE solver + accelerator.
+//!
+//! The pipeline owns the sampling loop and the accelerator protocol
+//! ([`Accelerator`], [`StepPlan`]): before every step the accelerator plans
+//! {full, shallow, pruned, skip}; after every step it observes the fresh
+//! trajectory state (including the PF-ODE gradient y_t) to drive the next
+//! decision. SADA and every baseline implement the same trait, so the
+//! experiment harnesses swap them freely.
+
+pub mod decode;
+pub mod stats;
+
+use anyhow::{Context, Result};
+
+pub use stats::{RunStats, StepMode};
+
+use crate::runtime::{ModelArgs, ModelBackend, ModelOut};
+use crate::solvers::{build_solver, Solver, SolverKind};
+use crate::tensor::Tensor;
+
+/// What to execute at one timestep.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StepPlan {
+    /// Run the full model.
+    Full,
+    /// Run a token-pruned variant with explicit keep indices (SADA SS3.5).
+    Prune { variant: String, keep_idx: Vec<i32> },
+    /// Run the DeepCache shallow path against the cached deep feature.
+    Shallow,
+    /// Skip the model; reuse the previous eps/velocity verbatim
+    /// (AdaptiveDiffusion / TeaCache).
+    SkipReuse,
+    /// Skip the model; SADA step-wise AM-3 extrapolation (Thm 3.5) with
+    /// noise reuse for the data prediction (Thm 3.6).
+    SkipExtrapolate,
+    /// Skip the model; SADA multistep-wise Lagrange reconstruction of x0
+    /// (Thm 3.7) from the rolling cache.
+    SkipLagrange,
+}
+
+/// Context available when planning step i.
+pub struct StepCtx<'a> {
+    pub i: usize,
+    pub n_steps: usize,
+    pub x: &'a Tensor,
+    pub t_norm: f64,
+    /// Whether per-layer attention caches exist (token pruning possible).
+    pub have_caches: bool,
+    /// Whether a deep feature is cached (shallow path possible).
+    pub have_deep: bool,
+}
+
+/// Everything observable after step i executed.
+pub struct StepObs<'a> {
+    pub i: usize,
+    pub n_steps: usize,
+    pub fresh: bool,
+    pub x_prev: &'a Tensor,
+    pub x_next: &'a Tensor,
+    pub model_out: &'a Tensor,
+    pub x0: &'a Tensor,
+    /// PF-ODE gradient y at node i (Eq. 3 / Eq. 4).
+    pub y: &'a Tensor,
+    pub dt: f64,
+    pub t_norm: f64,
+}
+
+pub trait Accelerator {
+    fn name(&self) -> String;
+    fn plan(&mut self, ctx: &StepCtx) -> StepPlan;
+    fn observe(&mut self, obs: &StepObs);
+    fn reset(&mut self);
+
+    /// For [`StepPlan::SkipExtrapolate`]: produce x_next from the current
+    /// state + gradient using internal history (SADA overrides with AM-3).
+    fn extrapolate(&self, _x: &Tensor, _y_now: &Tensor, _dt: f64) -> Option<Tensor> {
+        None
+    }
+
+    /// For [`StepPlan::SkipLagrange`]: reconstruct x0 at normalized time t
+    /// from the internal rolling cache (SADA overrides with Thm 3.7).
+    fn reconstruct_x0(&self, _t_norm: f64) -> Option<Tensor> {
+        None
+    }
+}
+
+/// The no-op accelerator: every step is a full model call (the baseline
+/// against which PSNR/LPIPS/FID and speedups are computed).
+#[derive(Default)]
+pub struct NoAccel;
+
+impl Accelerator for NoAccel {
+    fn name(&self) -> String {
+        "baseline".into()
+    }
+    fn plan(&mut self, _ctx: &StepCtx) -> StepPlan {
+        StepPlan::Full
+    }
+    fn observe(&mut self, _obs: &StepObs) {}
+    fn reset(&mut self) {}
+}
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub cond: Tensor,
+    pub seed: u64,
+    pub guidance: f32,
+    pub steps: usize,
+    pub edge: Option<Tensor>,
+}
+
+/// Pipeline output: the sample plus per-run accounting.
+#[derive(Debug)]
+pub struct GenResult {
+    pub image: Tensor,
+    pub stats: RunStats,
+}
+
+pub struct Pipeline<'a, B: ModelBackend> {
+    pub backend: &'a B,
+    pub solver_kind: SolverKind,
+}
+
+impl<'a, B: ModelBackend> Pipeline<'a, B> {
+    pub fn new(backend: &'a B, solver_kind: SolverKind) -> Self {
+        Self { backend, solver_kind }
+    }
+
+    fn schedule(&self) -> crate::solvers::Schedule {
+        // NOTE: the manifest schedule constants equal Schedule::default_ddpm;
+        // keep the construction manifest-driven so retrained artifacts with a
+        // different schedule stay consistent.
+        crate::solvers::Schedule::default_ddpm()
+    }
+
+    /// Run one request under `accel`, returning the sample and statistics.
+    pub fn generate(&self, req: &GenRequest, accel: &mut dyn Accelerator) -> Result<GenResult> {
+        let info = self.backend.info().clone();
+        let mut solver: Box<dyn Solver> = build_solver(self.solver_kind, &self.schedule(), req.steps);
+        solver.reset();
+        accel.reset();
+
+        let mut rng = crate::rng::Rng::new(req.seed);
+        let mut x = Tensor::from_rng(&mut rng, &[1, info.img[0], info.img[1], info.img[2]]);
+        let mut stats = RunStats::new(accel.name(), req.steps);
+        let timer = crate::report::Timer::start();
+
+        let mut last_out: Option<Tensor> = None;
+        let mut deep: Option<Tensor> = None;
+        let mut caches: Option<Tensor> = None;
+
+        for i in 0..req.steps {
+            let t_norm = solver.t_norm(i);
+            let ctx = StepCtx {
+                i,
+                n_steps: req.steps,
+                x: &x,
+                t_norm,
+                have_caches: caches.is_some(),
+                have_deep: deep.is_some(),
+            };
+            let mut plan = accel.plan(&ctx);
+            // structural fallbacks: degraded variants need their caches
+            plan = match plan {
+                StepPlan::Shallow if deep.is_none() => StepPlan::Full,
+                StepPlan::Prune { .. } if caches.is_none() => StepPlan::Full,
+                StepPlan::SkipReuse | StepPlan::SkipExtrapolate if last_out.is_none() => {
+                    StepPlan::Full
+                }
+                p => p,
+            };
+
+            let mut fresh = false;
+            let (model_out, x0, x_next) = match &plan {
+                StepPlan::Full => {
+                    let mo = self.run_model("full", &x, t_norm, req)?;
+                    fresh = true;
+                    if mo.deep.is_some() {
+                        deep = mo.deep.clone();
+                    }
+                    if mo.caches.is_some() {
+                        caches = mo.caches.clone();
+                    }
+                    let out = mo.out;
+                    let x0 = solver.x0_from_model(&x, &out, i);
+                    let xn = solver.step(&x, &x0, i);
+                    (out, x0, xn)
+                }
+                StepPlan::Shallow => {
+                    let mut args = self.base_args(&x, t_norm, req);
+                    args.deep = deep.clone();
+                    let mo = self.backend.run("shallow", &args)?;
+                    fresh = true;
+                    let out = mo.out;
+                    let x0 = solver.x0_from_model(&x, &out, i);
+                    let xn = solver.step(&x, &x0, i);
+                    (out, x0, xn)
+                }
+                StepPlan::Prune { variant, keep_idx } => {
+                    let mut args = self.base_args(&x, t_norm, req);
+                    args.keep_idx = Some(keep_idx.clone());
+                    args.caches = caches.clone();
+                    let mo = self.backend.run(variant, &args)?;
+                    fresh = true;
+                    if mo.caches.is_some() {
+                        caches = mo.caches.clone();
+                    }
+                    let out = mo.out;
+                    let x0 = solver.x0_from_model(&x, &out, i);
+                    let xn = solver.step(&x, &x0, i);
+                    (out, x0, xn)
+                }
+                StepPlan::SkipReuse => {
+                    let out = last_out.clone().context("SkipReuse without history")?;
+                    let x0 = solver.x0_from_model(&x, &out, i);
+                    let xn = solver.step(&x, &x0, i);
+                    (out, x0, xn)
+                }
+                StepPlan::SkipExtrapolate => {
+                    // SADA step-wise (Thm 3.5 + 3.6): x_{t-1} by AM-3 over the
+                    // gradient history; x0 from the reused noise, injected into
+                    // the solver's multistep history for consistency.
+                    let out = last_out.clone().context("SkipExtrapolate without history")?;
+                    let x0 = solver.x0_from_model(&x, &out, i);
+                    let y_now = solver.gradient(&x, &out, i);
+                    let dt = solver.dt(i);
+                    let xn = accel.extrapolate(&x, &y_now, dt).unwrap_or_else(|| {
+                        // first-order fallback when the gradient history is
+                        // too short for the AM-3 stencil
+                        crate::tensor::ops::lincomb2(1.0, &x, -(dt as f32), &y_now)
+                    });
+                    solver.inject_x0(&x0, i);
+                    (out, x0, xn)
+                }
+                StepPlan::SkipLagrange => {
+                    // SADA multistep-wise (Thm 3.7): x0 reconstructed by the
+                    // accelerator's rolling Lagrange buffer; the solver steps
+                    // on the reconstructed data prediction.
+                    let x0 = accel
+                        .reconstruct_x0(solver.t_norm(i))
+                        .context("SkipLagrange without a filled x0 buffer")?;
+                    let out = solver.model_out_from_x0(&x, &x0, i);
+                    let xn = solver.step(&x, &x0, i);
+                    (out, x0, xn)
+                }
+            };
+
+            let y = solver.gradient(&x, &model_out, i);
+            let obs = StepObs {
+                i,
+                n_steps: req.steps,
+                fresh,
+                x_prev: &x,
+                x_next: &x_next,
+                model_out: &model_out,
+                x0: &x0,
+                y: &y,
+                dt: solver.dt(i),
+                t_norm,
+            };
+            accel.observe(&obs);
+            stats.record_step(&plan, fresh);
+            last_out = Some(model_out);
+            x = x_next;
+        }
+
+        stats.wall_ms = timer.elapsed_ms();
+        stats.nfe = stats.fresh_steps;
+        Ok(GenResult { image: x, stats })
+    }
+
+    /// Lockstep batched generation for the serving path: all requests share
+    /// (steps, guidance); conds and initial noise are stacked on the batch
+    /// axis and executed through the `full_b{n}` variant. Degraded variants
+    /// are not compiled for batches, so plans fall back to Full/skip modes
+    /// (the coordinator's dynamic batcher relies on exactly this contract).
+    pub fn generate_batch(
+        &self,
+        reqs: &[GenRequest],
+        accel: &mut dyn Accelerator,
+    ) -> Result<Vec<GenResult>> {
+        let b = reqs.len();
+        anyhow::ensure!(b > 0, "empty batch");
+        if b == 1 {
+            return Ok(vec![self.generate(&reqs[0], accel)?]);
+        }
+        let info = self.backend.info().clone();
+        let variant = format!("full_b{b}");
+        info.variant(&variant)
+            .with_context(|| format!("no batched variant {variant} compiled"))?;
+        let steps = reqs[0].steps;
+        anyhow::ensure!(
+            reqs.iter().all(|r| r.steps == steps),
+            "batch must share step count"
+        );
+        let mut solver: Box<dyn Solver> =
+            build_solver(self.solver_kind, &self.schedule(), steps);
+        solver.reset();
+        accel.reset();
+
+        let [h, w, c] = info.img;
+        let mut xdata = Vec::with_capacity(b * h * w * c);
+        let mut cdata = Vec::with_capacity(b * info.cond_dim);
+        for r in reqs {
+            let mut rng = crate::rng::Rng::new(r.seed);
+            xdata.extend(rng.gaussian_vec(h * w * c));
+            cdata.extend_from_slice(r.cond.data());
+        }
+        let mut x = Tensor::new(xdata, &[b, h, w, c])?;
+        let cond = Tensor::new(cdata, &[b, info.cond_dim])?;
+        let gs = reqs[0].guidance;
+
+        let mut stats = RunStats::new(accel.name(), steps);
+        let timer = crate::report::Timer::start();
+        let mut last_out: Option<Tensor> = None;
+
+        for i in 0..steps {
+            let t_norm = solver.t_norm(i);
+            let ctx = StepCtx {
+                i,
+                n_steps: steps,
+                x: &x,
+                t_norm,
+                have_caches: false,
+                have_deep: false,
+            };
+            let mut plan = accel.plan(&ctx);
+            plan = match plan {
+                StepPlan::Shallow | StepPlan::Prune { .. } => StepPlan::Full,
+                StepPlan::SkipReuse | StepPlan::SkipExtrapolate if last_out.is_none() => {
+                    StepPlan::Full
+                }
+                p => p,
+            };
+            let mut fresh = false;
+            let (model_out, x0, x_next) = match &plan {
+                StepPlan::Full => {
+                    let args = ModelArgs {
+                        x: Some(x.clone()),
+                        t: t_norm as f32,
+                        cond: Some(cond.clone()),
+                        gs,
+                        ..Default::default()
+                    };
+                    let mo = self.backend.run(&variant, &args)?;
+                    fresh = true;
+                    let out = mo.out;
+                    let x0 = solver.x0_from_model(&x, &out, i);
+                    let xn = solver.step(&x, &x0, i);
+                    (out, x0, xn)
+                }
+                StepPlan::SkipReuse => {
+                    let out = last_out.clone().unwrap();
+                    let x0 = solver.x0_from_model(&x, &out, i);
+                    let xn = solver.step(&x, &x0, i);
+                    (out, x0, xn)
+                }
+                StepPlan::SkipExtrapolate => {
+                    let out = last_out.clone().unwrap();
+                    let x0 = solver.x0_from_model(&x, &out, i);
+                    let y_now = solver.gradient(&x, &out, i);
+                    let dt = solver.dt(i);
+                    let xn = accel.extrapolate(&x, &y_now, dt).unwrap_or_else(|| {
+                        crate::tensor::ops::lincomb2(1.0, &x, -(dt as f32), &y_now)
+                    });
+                    solver.inject_x0(&x0, i);
+                    (out, x0, xn)
+                }
+                StepPlan::SkipLagrange => {
+                    let x0 = accel
+                        .reconstruct_x0(solver.t_norm(i))
+                        .context("SkipLagrange without buffer")?;
+                    let out = solver.model_out_from_x0(&x, &x0, i);
+                    let xn = solver.step(&x, &x0, i);
+                    (out, x0, xn)
+                }
+                _ => unreachable!("fallbacks applied above"),
+            };
+            let y = solver.gradient(&x, &model_out, i);
+            let obs = StepObs {
+                i,
+                n_steps: steps,
+                fresh,
+                x_prev: &x,
+                x_next: &x_next,
+                model_out: &model_out,
+                x0: &x0,
+                y: &y,
+                dt: solver.dt(i),
+                t_norm,
+            };
+            accel.observe(&obs);
+            stats.record_step(&plan, fresh);
+            last_out = Some(model_out);
+            x = x_next;
+        }
+        stats.wall_ms = timer.elapsed_ms();
+        stats.nfe = stats.fresh_steps;
+
+        // split the batch back into per-request images
+        let plane = h * w * c;
+        let mut results = Vec::with_capacity(b);
+        for bi in 0..b {
+            let img =
+                Tensor::new(x.data()[bi * plane..(bi + 1) * plane].to_vec(), &[1, h, w, c])?;
+            results.push(GenResult { image: img, stats: stats.clone() });
+        }
+        Ok(results)
+    }
+
+    fn base_args(&self, x: &Tensor, t_norm: f64, req: &GenRequest) -> ModelArgs {
+        ModelArgs {
+            x: Some(x.clone()),
+            t: t_norm as f32,
+            cond: Some(req.cond.clone()),
+            gs: req.guidance,
+            edge: req.edge.clone(),
+            ..Default::default()
+        }
+    }
+
+    fn run_model(&self, variant: &str, x: &Tensor, t_norm: f64, req: &GenRequest) -> Result<ModelOut> {
+        let args = self.base_args(x, t_norm, req);
+        self.backend.run(variant, &args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::GmBackend;
+    use crate::runtime::ModelBackend;
+    use crate::tensor::ops;
+
+    fn req(seed: u64, steps: usize) -> GenRequest {
+        let mut rng = crate::rng::Rng::new(42);
+        GenRequest {
+            cond: Tensor::from_rng(&mut rng, &[1, 32]),
+            seed,
+            guidance: 2.0,
+            steps,
+            edge: None,
+        }
+    }
+
+    /// Accelerator that plans structurally-impossible actions; the pipeline
+    /// must fall back to Full instead of erroring.
+    struct BadPlanner;
+    impl Accelerator for BadPlanner {
+        fn name(&self) -> String {
+            "bad".into()
+        }
+        fn plan(&mut self, ctx: &StepCtx) -> StepPlan {
+            match ctx.i % 3 {
+                0 => StepPlan::SkipReuse,        // no history at i = 0
+                1 => StepPlan::Shallow,          // fine after first full
+                _ => StepPlan::Prune { variant: "prune50".into(), keep_idx: (0..8).collect() },
+            }
+        }
+        fn observe(&mut self, _o: &StepObs) {}
+        fn reset(&mut self) {}
+    }
+
+    #[test]
+    fn structural_fallbacks_never_error() {
+        let b = GmBackend::new(1);
+        let pipe = Pipeline::new(&b, SolverKind::Euler);
+        let r = pipe.generate(&req(1, 9), &mut BadPlanner).unwrap();
+        assert_eq!(r.stats.modes.len(), 9);
+        // step 0 must have been forced Full (no last_out yet)
+        assert_eq!(r.stats.modes[0], StepMode::Full);
+    }
+
+    #[test]
+    fn noaccel_runs_all_steps_fresh() {
+        let b = GmBackend::new(2);
+        let pipe = Pipeline::new(&b, SolverKind::DpmPP);
+        let r = pipe.generate(&req(2, 12), &mut NoAccel).unwrap();
+        assert_eq!(r.stats.nfe, 12);
+        assert!((r.stats.skip_fraction() - 0.0).abs() < 1e-12);
+        assert_eq!(b.nfe(), 12);
+    }
+
+    #[test]
+    fn different_seeds_different_images() {
+        let b = GmBackend::new(3);
+        let pipe = Pipeline::new(&b, SolverKind::Euler);
+        let r1 = pipe.generate(&req(10, 10), &mut NoAccel).unwrap();
+        let r2 = pipe.generate(&req(11, 10), &mut NoAccel).unwrap();
+        assert!(ops::mse(&r1.image, &r2.image) > 1e-6);
+    }
+
+    #[test]
+    fn guidance_changes_output() {
+        let b = GmBackend::new(4);
+        let pipe = Pipeline::new(&b, SolverKind::Euler);
+        let mut r_lo = req(5, 10);
+        r_lo.guidance = 0.0;
+        let mut r_hi = req(5, 10);
+        r_hi.guidance = 5.0;
+        let lo = pipe.generate(&r_lo, &mut NoAccel).unwrap();
+        let hi = pipe.generate(&r_hi, &mut NoAccel).unwrap();
+        assert!(ops::mse(&lo.image, &hi.image) > 1e-9);
+    }
+
+    #[test]
+    fn generate_batch_requires_compiled_bucket() {
+        // mock manifest has no full_b2 variant: batch > 1 must error clearly
+        let b = GmBackend::new(5);
+        let pipe = Pipeline::new(&b, SolverKind::Euler);
+        let reqs = vec![req(1, 5), req(2, 5)];
+        let err = pipe.generate_batch(&reqs, &mut NoAccel).unwrap_err();
+        assert!(format!("{err:#}").contains("full_b2"));
+    }
+
+    #[test]
+    fn generate_batch_of_one_delegates() {
+        let b = GmBackend::new(6);
+        let pipe = Pipeline::new(&b, SolverKind::Euler);
+        let r = pipe.generate_batch(&[req(3, 6)], &mut NoAccel).unwrap();
+        assert_eq!(r.len(), 1);
+        let solo = pipe.generate(&req(3, 6), &mut NoAccel).unwrap();
+        assert_eq!(r[0].image.data(), solo.image.data());
+    }
+
+    #[test]
+    fn mixed_step_batches_rejected() {
+        let b = GmBackend::new(7);
+        let pipe = Pipeline::new(&b, SolverKind::Euler);
+        let reqs = vec![req(1, 5), req(2, 7)];
+        assert!(pipe.generate_batch(&reqs, &mut NoAccel).is_err());
+    }
+
+    #[test]
+    fn trajectory_converges_toward_data_manifold() {
+        // with the exact GM denoiser, |x| must end near the mixture scale
+        // (not explode) — guards the solver/ode sign conventions
+        let b = GmBackend::new(8);
+        let pipe = Pipeline::new(&b, SolverKind::DpmPP);
+        let r = pipe.generate(&req(9, 40), &mut NoAccel).unwrap();
+        let rms = ops::norm2(&r.image) / (r.image.len() as f64).sqrt();
+        assert!(rms < 6.0, "trajectory exploded: rms={rms}");
+        assert!(rms > 0.05, "trajectory collapsed: rms={rms}");
+    }
+}

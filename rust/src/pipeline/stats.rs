@@ -1,0 +1,106 @@
+//! Per-run accounting: step modes, NFE, wall-clock.
+
+use super::StepPlan;
+
+/// Executed mode of one step (collapsed from [`StepPlan`] for reporting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepMode {
+    Full,
+    Prune,
+    Shallow,
+    SkipReuse,
+    SkipAm3,
+    SkipLagrange,
+}
+
+impl StepMode {
+    pub fn from_plan(plan: &StepPlan) -> StepMode {
+        match plan {
+            StepPlan::Full => StepMode::Full,
+            StepPlan::Prune { .. } => StepMode::Prune,
+            StepPlan::Shallow => StepMode::Shallow,
+            StepPlan::SkipReuse => StepMode::SkipReuse,
+            StepPlan::SkipExtrapolate => StepMode::SkipAm3,
+            StepPlan::SkipLagrange => StepMode::SkipLagrange,
+        }
+    }
+
+    pub fn glyph(&self) -> char {
+        match self {
+            StepMode::Full => 'F',
+            StepMode::Prune => 'P',
+            StepMode::Shallow => 's',
+            StepMode::SkipReuse => 'r',
+            StepMode::SkipAm3 => 'a',
+            StepMode::SkipLagrange => 'l',
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    pub accel: String,
+    pub n_steps: usize,
+    pub modes: Vec<StepMode>,
+    pub fresh_steps: usize,
+    /// Number of model executions (== fresh_steps; skips cost zero NFE).
+    pub nfe: usize,
+    pub wall_ms: f64,
+}
+
+impl RunStats {
+    pub fn new(accel: String, n_steps: usize) -> Self {
+        Self {
+            accel,
+            n_steps,
+            modes: Vec::with_capacity(n_steps),
+            fresh_steps: 0,
+            nfe: 0,
+            wall_ms: 0.0,
+        }
+    }
+
+    pub fn record_step(&mut self, plan: &StepPlan, fresh: bool) {
+        self.modes.push(StepMode::from_plan(plan));
+        if fresh {
+            self.fresh_steps += 1;
+        }
+    }
+
+    /// Compact trace like "FFFaFaFllllF" for logs and Fig-5-style dumps.
+    pub fn mode_trace(&self) -> String {
+        self.modes.iter().map(|m| m.glyph()).collect()
+    }
+
+    pub fn count(&self, mode: StepMode) -> usize {
+        self.modes.iter().filter(|m| **m == mode).count()
+    }
+
+    pub fn skip_fraction(&self) -> f64 {
+        if self.modes.is_empty() {
+            return 0.0;
+        }
+        1.0 - self.fresh_steps as f64 / self.modes.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_modes_and_nfe() {
+        let mut s = RunStats::new("sada".into(), 4);
+        s.record_step(&StepPlan::Full, true);
+        s.record_step(&StepPlan::SkipExtrapolate, false);
+        s.record_step(
+            &StepPlan::Prune { variant: "prune50".into(), keep_idx: vec![0] },
+            true,
+        );
+        s.record_step(&StepPlan::SkipLagrange, false);
+        assert_eq!(s.mode_trace(), "FaPl");
+        assert_eq!(s.fresh_steps, 2);
+        assert_eq!(s.count(StepMode::SkipLagrange), 1);
+        assert!((s.skip_fraction() - 0.5).abs() < 1e-12);
+    }
+}

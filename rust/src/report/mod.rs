@@ -1,0 +1,11 @@
+//! Reporting substrate: aligned tables, timers, latency statistics.
+//!
+//! The experiment harnesses print paper-style tables through [`Table`] and
+//! record wall-clock through [`Timer`]/[`LatencyStats`]; everything also
+//! serializes to JSON (util::json) for EXPERIMENTS.md bookkeeping.
+
+pub mod table;
+pub mod timer;
+
+pub use table::Table;
+pub use timer::{LatencyStats, Timer};

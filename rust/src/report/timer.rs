@@ -1,0 +1,117 @@
+//! Wall-clock timing + latency statistics (percentiles, throughput).
+
+use std::time::{Duration, Instant};
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Accumulates latency samples; reports mean / percentiles / throughput.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    /// Percentile via nearest-rank on the sorted samples (q in [0, 100]).
+    pub fn percentile_ms(&self, q: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((q / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.percentile_ms(50.0)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.percentile_ms(95.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.percentile_ms(99.0)
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.samples_ms.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.count(),
+            self.mean_ms(),
+            self.p50_ms(),
+            self.p95_ms(),
+            self.p99_ms(),
+            self.max_ms()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut s = LatencyStats::new();
+        for i in 1..=100 {
+            s.record_ms(i as f64);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean_ms() - 50.5).abs() < 1e-9);
+        assert!(s.p50_ms() <= s.p95_ms());
+        assert!(s.p95_ms() <= s.p99_ms());
+        assert!(s.p99_ms() <= s.max_ms());
+        assert_eq!(s.max_ms(), 100.0);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStats::new();
+        assert_eq!(s.mean_ms(), 0.0);
+        assert_eq!(s.p99_ms(), 0.0);
+    }
+}

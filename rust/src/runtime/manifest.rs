@@ -1,0 +1,284 @@
+//! Parsed form of `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the single contract between the compile path and the
+//! request path: model geometry, variant files, and exact executable I/O
+//! signatures (names, shapes, dtypes, argument order).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => bail!("unknown dtype {s:?}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct VariantInfo {
+    pub file: String,
+    pub kind: String, // "full" | "shallow" | "prune"
+    pub batch: usize,
+    pub n_keep: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub style: String,   // "unet" | "dit"
+    pub predict: String, // "eps" | "v"
+    pub img: [usize; 3], // H, W, C
+    pub patch: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub n_tokens: usize,
+    pub n_blocks: usize,
+    pub has_control: bool,
+    pub cond_dim: usize,
+    pub variants: BTreeMap<String, VariantInfo>,
+}
+
+impl ModelInfo {
+    pub fn img_numel(&self) -> usize {
+        self.img.iter().product()
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantInfo> {
+        self.variants
+            .get(name)
+            .with_context(|| format!("model {} has no variant {name:?}", self.name))
+    }
+
+    /// Keep-count for a prune bucket variant name like "prune50".
+    pub fn prune_variants(&self) -> Vec<(&str, usize)> {
+        self.variants
+            .iter()
+            .filter(|(_, v)| v.kind == "prune")
+            .map(|(k, v)| (k.as_str(), v.n_keep))
+            .collect()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ScheduleCfg {
+    pub train_t: usize,
+    pub beta_start: f64,
+    pub beta_end: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub schedule: ScheduleCfg,
+    pub cond_dim: usize,
+    pub prune_buckets: Vec<f64>,
+    pub batch_buckets: Vec<usize>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Manifest> {
+        let src = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading manifest {:?}", path.as_ref()))?;
+        Self::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src)?;
+        let sched = j.get("schedule")?;
+        let schedule = ScheduleCfg {
+            train_t: sched.get("train_t")?.as_usize()?,
+            beta_start: sched.get("beta_start")?.as_f64()?,
+            beta_end: sched.get("beta_end")?.as_f64()?,
+        };
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models")?.as_obj()? {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(Manifest {
+            schedule,
+            cond_dim: j.get("cond_dim")?.as_usize()?,
+            prune_buckets: j
+                .get("prune_buckets")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64())
+                .collect::<Result<_>>()?,
+            batch_buckets: j.get("batch_buckets")?.usize_vec()?,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .with_context(|| format!("manifest has no model {name:?}"))
+    }
+}
+
+fn parse_io(v: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        shape: v.get("shape")?.usize_vec()?,
+        dtype: Dtype::parse(v.get("dtype")?.as_str()?)?,
+    })
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
+    let img = m.get("img")?.usize_vec()?;
+    if img.len() != 3 {
+        bail!("model {name}: img must be [H, W, C]");
+    }
+    let mut variants = BTreeMap::new();
+    for (vname, v) in m.get("variants")?.as_obj()? {
+        variants.insert(
+            vname.clone(),
+            VariantInfo {
+                file: v.get("file")?.as_str()?.to_string(),
+                kind: v.get("kind")?.as_str()?.to_string(),
+                batch: v.get("batch")?.as_usize()?,
+                n_keep: v.get("n_keep")?.as_usize()?,
+                inputs: v
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<_>>()?,
+                outputs: v
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<_>>()?,
+            },
+        );
+    }
+    Ok(ModelInfo {
+        name: name.to_string(),
+        style: m.get("style")?.as_str()?.to_string(),
+        predict: m.get("predict")?.as_str()?.to_string(),
+        img: [img[0], img[1], img[2]],
+        patch: m.get("patch")?.as_usize()?,
+        d: m.get("d")?.as_usize()?,
+        heads: m.get("heads")?.as_usize()?,
+        n_tokens: m.get("n_tokens")?.as_usize()?,
+        n_blocks: m.get("n_blocks")?.as_usize()?,
+        has_control: m.get("has_control")?.as_bool()?,
+        cond_dim: m.get("cond_dim")?.as_usize()?,
+        variants,
+    })
+}
+
+#[cfg(test)]
+pub fn test_manifest() -> Manifest {
+    // A tiny synthetic manifest for unit tests that do not touch artifacts/.
+    let src = r#"{
+      "version": 1,
+      "schedule": {"train_t": 1000, "beta_start": 0.0001, "beta_end": 0.02},
+      "cond_dim": 32,
+      "prune_buckets": [0.75, 0.5],
+      "batch_buckets": [2, 4, 8],
+      "models": {
+        "mock_eps": {
+          "style": "unet", "predict": "eps", "img": [8, 8, 1], "patch": 2,
+          "d": 16, "heads": 2, "n_tokens": 16, "n_blocks": 3,
+          "has_control": false, "cond_dim": 32,
+          "variants": {
+            "full": {"file": "none", "kind": "full", "batch": 1, "n_keep": 0,
+              "inputs": [
+                {"name": "x", "shape": [1, 8, 8, 1], "dtype": "f32"},
+                {"name": "t", "shape": [1], "dtype": "f32"},
+                {"name": "cond", "shape": [1, 32], "dtype": "f32"},
+                {"name": "gs", "shape": [1], "dtype": "f32"}],
+              "outputs": [
+                {"name": "out", "shape": [1, 8, 8, 1], "dtype": "f32"},
+                {"name": "deep", "shape": [2, 16, 16], "dtype": "f32"},
+                {"name": "caches", "shape": [3, 2, 16, 16], "dtype": "f32"}]},
+            "shallow": {"file": "none", "kind": "shallow", "batch": 1, "n_keep": 0,
+              "inputs": [
+                {"name": "x", "shape": [1, 8, 8, 1], "dtype": "f32"},
+                {"name": "t", "shape": [1], "dtype": "f32"},
+                {"name": "cond", "shape": [1, 32], "dtype": "f32"},
+                {"name": "gs", "shape": [1], "dtype": "f32"},
+                {"name": "deep", "shape": [2, 16, 16], "dtype": "f32"}],
+              "outputs": [
+                {"name": "out", "shape": [1, 8, 8, 1], "dtype": "f32"}]},
+            "prune75": {"file": "none", "kind": "prune", "batch": 1, "n_keep": 12,
+              "inputs": [
+                {"name": "x", "shape": [1, 8, 8, 1], "dtype": "f32"},
+                {"name": "t", "shape": [1], "dtype": "f32"},
+                {"name": "cond", "shape": [1, 32], "dtype": "f32"},
+                {"name": "gs", "shape": [1], "dtype": "f32"},
+                {"name": "keep_idx", "shape": [12], "dtype": "i32"},
+                {"name": "caches", "shape": [3, 2, 16, 16], "dtype": "f32"}],
+              "outputs": [
+                {"name": "out", "shape": [1, 8, 8, 1], "dtype": "f32"},
+                {"name": "caches", "shape": [3, 2, 16, 16], "dtype": "f32"}]},
+            "prune50": {"file": "none", "kind": "prune", "batch": 1, "n_keep": 8,
+              "inputs": [
+                {"name": "x", "shape": [1, 8, 8, 1], "dtype": "f32"},
+                {"name": "t", "shape": [1], "dtype": "f32"},
+                {"name": "cond", "shape": [1, 32], "dtype": "f32"},
+                {"name": "gs", "shape": [1], "dtype": "f32"},
+                {"name": "keep_idx", "shape": [8], "dtype": "i32"},
+                {"name": "caches", "shape": [3, 2, 16, 16], "dtype": "f32"}],
+              "outputs": [
+                {"name": "out", "shape": [1, 8, 8, 1], "dtype": "f32"},
+                {"name": "caches", "shape": [3, 2, 16, 16], "dtype": "f32"}]}
+          }
+        }
+      }
+    }"#;
+    Manifest::parse(src).expect("test manifest parses")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_test_manifest() {
+        let m = test_manifest();
+        assert_eq!(m.schedule.train_t, 1000);
+        let mi = m.model("mock_eps").unwrap();
+        assert_eq!(mi.n_tokens, 16);
+        assert_eq!(mi.variant("full").unwrap().outputs.len(), 3);
+        assert_eq!(mi.prune_variants().len(), 2);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn io_spec_numel() {
+        let m = test_manifest();
+        let v = m.model("mock_eps").unwrap().variant("full").unwrap().clone();
+        assert_eq!(v.inputs[0].numel(), 64);
+        assert_eq!(v.outputs[2].numel(), 3 * 2 * 16 * 16);
+    }
+}

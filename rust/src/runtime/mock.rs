@@ -1,0 +1,233 @@
+//! Analytic mock backend: an exact Gaussian-mixture denoiser.
+//!
+//! For x0 ~ sum_k w_k N(mu_k, s_k^2 I) under the VP forward process, the
+//! optimal eps-predictor is available in closed form (mirrors
+//! python/compile/gm.py). This gives unit tests for the pipeline, SADA and
+//! the baselines *real smooth denoising trajectories* with zero learned
+//! components and no artifacts/ dependency. Conditioning shifts the mixture
+//! means so prompts genuinely change trajectories; guidance scales the
+//! conditional shift like CFG does.
+
+use std::cell::RefCell;
+
+use anyhow::{bail, Result};
+
+use super::manifest::{Manifest, ModelInfo};
+use super::{ModelArgs, ModelBackend, ModelOut};
+use crate::rng::Rng;
+use crate::solvers::Schedule;
+use crate::tensor::Tensor;
+
+pub struct GaussianMixture {
+    pub means: Vec<Vec<f32>>, // [K][D]
+    pub sigmas: Vec<f32>,     // [K]
+    pub weights: Vec<f32>,    // [K]
+}
+
+impl GaussianMixture {
+    pub fn seeded(dim: usize, k: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let means = (0..k)
+            .map(|_| rng.gaussian_vec(dim).iter().map(|v| v * 1.5).collect())
+            .collect();
+        let sigmas = (0..k).map(|_| rng.uniform_in(0.2, 0.5) as f32).collect();
+        let raw: Vec<f32> = (0..k).map(|_| rng.uniform_in(0.5, 1.5) as f32).collect();
+        let sum: f32 = raw.iter().sum();
+        let weights = raw.iter().map(|w| w / sum).collect();
+        Self { means, sigmas, weights }
+    }
+
+    /// Optimal eps prediction at x for VP coefficients (a_t, sigma_t), with
+    /// the mixture means shifted by `shift` (conditioning).
+    pub fn eps_star(&self, x: &[f32], a_t: f64, sigma_t: f64, shift: &[f32]) -> Vec<f32> {
+        let d = x.len();
+        let k = self.means.len();
+        let mut logp = vec![0.0f64; k];
+        for ki in 0..k {
+            let v = a_t * a_t * (self.sigmas[ki] as f64).powi(2) + sigma_t * sigma_t;
+            let mut sq = 0.0f64;
+            for i in 0..d {
+                let mu = (self.means[ki][i] + shift[i]) as f64;
+                let diff = x[i] as f64 - a_t * mu;
+                sq += diff * diff;
+            }
+            logp[ki] = (self.weights[ki] as f64).ln()
+                - 0.5 * d as f64 * (2.0 * std::f64::consts::PI * v).ln()
+                - 0.5 * sq / v;
+        }
+        let m = logp.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let r: Vec<f64> = logp.iter().map(|l| (l - m).exp()).collect();
+        let rs: f64 = r.iter().sum();
+        let mut score = vec![0.0f64; d];
+        for ki in 0..k {
+            let v = a_t * a_t * (self.sigmas[ki] as f64).powi(2) + sigma_t * sigma_t;
+            let w = r[ki] / rs / v;
+            for i in 0..d {
+                let mu = (self.means[ki][i] + shift[i]) as f64;
+                score[i] += w * (a_t * mu - x[i] as f64);
+            }
+        }
+        score.iter().map(|s| (-sigma_t * s) as f32).collect()
+    }
+}
+
+/// Manifest used by the mock backend (also handy for coordinator tests).
+pub fn mock_manifest() -> Manifest {
+    let src = r#"{
+      "version": 1,
+      "schedule": {"train_t": 1000, "beta_start": 0.0001, "beta_end": 0.02},
+      "cond_dim": 32,
+      "prune_buckets": [0.75, 0.5],
+      "batch_buckets": [2, 4, 8],
+      "models": {
+        "mock_eps": {
+          "style": "unet", "predict": "eps", "img": [8, 8, 1], "patch": 2,
+          "d": 16, "heads": 2, "n_tokens": 16, "n_blocks": 3,
+          "has_control": false, "cond_dim": 32,
+          "variants": {
+            "full": {"file": "none", "kind": "full", "batch": 1, "n_keep": 0,
+              "inputs": [], "outputs": []},
+            "shallow": {"file": "none", "kind": "shallow", "batch": 1, "n_keep": 0,
+              "inputs": [], "outputs": []},
+            "prune75": {"file": "none", "kind": "prune", "batch": 1, "n_keep": 12,
+              "inputs": [], "outputs": []},
+            "prune50": {"file": "none", "kind": "prune", "batch": 1, "n_keep": 8,
+              "inputs": [], "outputs": []}
+          }
+        }
+      }
+    }"#;
+    Manifest::parse(src).expect("mock manifest parses")
+}
+
+/// Exact-GM [`ModelBackend`]. Prune/shallow variants degrade the prediction
+/// slightly (simulating approximation error) so accelerator comparisons are
+/// non-trivial in tests.
+pub struct GmBackend {
+    pub info: ModelInfo,
+    pub gm: GaussianMixture,
+    schedule: Schedule,
+    nfe: RefCell<usize>,
+    /// eps-noise injected into non-full variants (approximation error model).
+    pub variant_noise: f32,
+}
+
+impl GmBackend {
+    pub fn new(seed: u64) -> Self {
+        let manifest = mock_manifest();
+        let info = manifest.model("mock_eps").unwrap().clone();
+        let dim = info.img_numel();
+        Self {
+            gm: GaussianMixture::seeded(dim, 3, seed),
+            schedule: Schedule::new(
+                manifest.schedule.train_t,
+                manifest.schedule.beta_start,
+                manifest.schedule.beta_end,
+            ),
+            info,
+            nfe: RefCell::new(0),
+            variant_noise: 0.01,
+        }
+    }
+
+    fn cond_shift(&self, cond: Option<&Tensor>, gs: f32) -> Vec<f32> {
+        let dim = self.info.img_numel();
+        let mut shift = vec![0.0f32; dim];
+        if let Some(c) = cond {
+            // deterministic projection of the cond vector into pixel space
+            let cd = c.data();
+            for (i, s) in shift.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (k, v) in cd.iter().enumerate() {
+                    let w = (((i * 31 + k * 17 + 7) % 13) as f32 - 6.0) / 24.0;
+                    acc += v * w;
+                }
+                *s = 0.3 * gs.max(0.0) * acc / (cd.len() as f32).sqrt();
+            }
+        }
+        shift
+    }
+}
+
+impl ModelBackend for GmBackend {
+    fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    fn run(&self, variant: &str, args: &ModelArgs) -> Result<ModelOut> {
+        let x = match &args.x {
+            Some(x) => x,
+            None => bail!("mock: args.x required"),
+        };
+        *self.nfe.borrow_mut() += 1;
+        let j = ((args.t as f64) * self.schedule.train_t as f64).round() as usize;
+        let j = j.min(self.schedule.train_t);
+        let (a, s) = self.schedule.alpha_sigma(j);
+        let shift = self.cond_shift(args.cond.as_ref(), args.gs);
+        let mut eps = self.gm.eps_star(x.data(), a, s.max(1e-6), &shift);
+        if variant != "full" {
+            // simulate the (small) approximation error of degraded variants
+            let mut rng = Rng::new(j as u64 * 7 + 13);
+            for e in eps.iter_mut() {
+                *e += self.variant_noise * rng.gaussian() as f32;
+            }
+        }
+        let n = self.info.n_tokens;
+        let d = self.info.d;
+        let nb = self.info.n_blocks;
+        Ok(ModelOut {
+            out: Tensor::new(eps, x.shape())?,
+            deep: Some(Tensor::zeros(&[2, n, d])),
+            caches: Some(Tensor::zeros(&[nb, 2, n, d])),
+        })
+    }
+
+    fn nfe(&self) -> usize {
+        *self.nfe.borrow()
+    }
+
+    fn reset_nfe(&self) {
+        *self.nfe.borrow_mut() = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eps_star_pulls_toward_means() {
+        let gm = GaussianMixture::seeded(4, 2, 1);
+        let x = vec![10.0f32; 4]; // far from all means
+        let eps = gm.eps_star(&x, 0.9, 0.43, &[0.0; 4]);
+        // x0_pred = (x - sigma eps)/alpha must move toward the means (< x)
+        for (i, e) in eps.iter().enumerate() {
+            let x0 = (x[i] - 0.43 * e) / 0.9;
+            assert!(x0 < x[i]);
+        }
+    }
+
+    #[test]
+    fn cond_changes_prediction() {
+        let b = GmBackend::new(3);
+        let x = Tensor::full(&[1, 8, 8, 1], 0.5);
+        let mut rng = Rng::new(9);
+        let cond = Tensor::from_rng(&mut rng, &[1, 32]);
+        let a1 = ModelArgs { x: Some(x.clone()), t: 0.5, cond: Some(cond), gs: 3.0, ..Default::default() };
+        let a2 = ModelArgs { x: Some(x), t: 0.5, cond: None, gs: 3.0, ..Default::default() };
+        let o1 = b.run("full", &a1).unwrap();
+        let o2 = b.run("full", &a2).unwrap();
+        assert_ne!(o1.out.data(), o2.out.data());
+        assert_eq!(b.nfe(), 2);
+    }
+
+    #[test]
+    fn variant_noise_applied() {
+        let b = GmBackend::new(3);
+        let x = Tensor::full(&[1, 8, 8, 1], 0.5);
+        let args = ModelArgs { x: Some(x), t: 0.5, gs: 0.0, ..Default::default() };
+        let full = b.run("full", &args).unwrap();
+        let shallow = b.run("shallow", &args).unwrap();
+        assert_ne!(full.out.data(), shallow.out.data());
+    }
+}

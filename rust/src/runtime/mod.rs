@@ -1,0 +1,283 @@
+//! Runtime: load AOT artifacts and execute them via the PJRT C API.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `PjRtClient::compile` -> `execute`.
+//! HLO *text* is the interchange format (see python/compile/aot.py).
+//!
+//! [`ModelBackend`] abstracts "execute one denoiser variant" so the
+//! pipeline, SADA and the baselines are unit-testable without artifacts via
+//! [`mock::GmBackend`] (an analytic Gaussian-mixture denoiser).
+
+pub mod manifest;
+pub mod mock;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{Dtype, IoSpec, Manifest, ModelInfo, VariantInfo};
+
+use crate::tensor::Tensor;
+
+/// Named arguments for one model execution; the runtime assembles the
+/// positional argument list from the variant's manifest signature.
+#[derive(Clone, Debug, Default)]
+pub struct ModelArgs {
+    pub x: Option<Tensor>,
+    pub t: f32,
+    pub cond: Option<Tensor>,
+    pub gs: f32,
+    pub edge: Option<Tensor>,
+    pub keep_idx: Option<Vec<i32>>,
+    pub deep: Option<Tensor>,
+    pub caches: Option<Tensor>,
+}
+
+/// Outputs of one model execution (by manifest output name).
+#[derive(Clone, Debug)]
+pub struct ModelOut {
+    /// eps (eps-models) or velocity (flow models), image-shaped.
+    pub out: Tensor,
+    /// DeepCache deep feature (full variants only).
+    pub deep: Option<Tensor>,
+    /// Per-layer attention caches (full + prune variants).
+    pub caches: Option<Tensor>,
+}
+
+/// One denoiser model with executable variants.
+pub trait ModelBackend {
+    fn info(&self) -> &ModelInfo;
+    fn run(&self, variant: &str, args: &ModelArgs) -> Result<ModelOut>;
+    /// Total model executions so far (the NFE counter).
+    fn nfe(&self) -> usize;
+    fn reset_nfe(&self);
+}
+
+/// Execution statistics per (model, variant).
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub count: usize,
+    pub total_ms: f64,
+}
+
+/// PJRT-backed runtime owning the client and all compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` (usually "artifacts") and create the
+    /// PJRT CPU client. Executables compile lazily on first use.
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch the cached) executable for model/variant.
+    fn ensure_loaded(&self, model: &str, variant: &str) -> Result<()> {
+        let key = format!("{model}/{variant}");
+        if self.exes.borrow().contains_key(&key) {
+            return Ok(());
+        }
+        let vi = self.manifest.model(model)?.variant(variant)?;
+        let path = self.dir.join(&vi.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        self.exes.borrow_mut().insert(key, exe);
+        Ok(())
+    }
+
+    /// Preload every variant of `model` (avoids first-request compile jitter).
+    pub fn preload_model(&self, model: &str) -> Result<()> {
+        let names: Vec<String> = self
+            .manifest
+            .model(model)?
+            .variants
+            .keys()
+            .cloned()
+            .collect();
+        for v in names {
+            self.ensure_loaded(model, &v)?;
+        }
+        Ok(())
+    }
+
+    fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape().iter().map(|d| *d as i64).collect();
+        Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+    }
+
+    fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+        let shape = l.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+        let data = l.to_vec::<f32>()?;
+        Tensor::new(data, &dims)
+    }
+
+    /// Assemble positional literals per the variant signature and execute.
+    pub fn execute(&self, model: &str, variant: &str, args: &ModelArgs) -> Result<Vec<Tensor>> {
+        self.ensure_loaded(model, variant)?;
+        let vi = self.manifest.model(model)?.variant(variant)?.clone();
+        let mut literals: Vec<xla::Literal> = Vec::with_capacity(vi.inputs.len());
+        for spec in &vi.inputs {
+            let lit = match (spec.name.as_str(), spec.dtype) {
+                ("x", Dtype::F32) => {
+                    let x = args.x.as_ref().context("args.x missing")?;
+                    check_shape(spec, x)?;
+                    Self::tensor_to_literal(x)?
+                }
+                ("t", Dtype::F32) => {
+                    let n = spec.numel();
+                    xla::Literal::vec1(&vec![args.t; n])
+                        .reshape(&spec.shape.iter().map(|d| *d as i64).collect::<Vec<_>>())?
+                }
+                ("cond", Dtype::F32) => {
+                    let c = args.cond.as_ref().context("args.cond missing")?;
+                    check_shape(spec, c)?;
+                    Self::tensor_to_literal(c)?
+                }
+                ("gs", Dtype::F32) => xla::Literal::vec1(&[args.gs]),
+                ("edge", Dtype::F32) => {
+                    let e = args.edge.as_ref().context("args.edge missing")?;
+                    check_shape(spec, e)?;
+                    Self::tensor_to_literal(e)?
+                }
+                ("deep", Dtype::F32) => {
+                    let d = args.deep.as_ref().context("args.deep missing")?;
+                    check_shape(spec, d)?;
+                    Self::tensor_to_literal(d)?
+                }
+                ("caches", Dtype::F32) => {
+                    let c = args.caches.as_ref().context("args.caches missing")?;
+                    check_shape(spec, c)?;
+                    Self::tensor_to_literal(c)?
+                }
+                ("keep_idx", Dtype::I32) => {
+                    let k = args.keep_idx.as_ref().context("args.keep_idx missing")?;
+                    if k.len() != spec.numel() {
+                        bail!(
+                            "keep_idx length {} != expected {}",
+                            k.len(),
+                            spec.numel()
+                        );
+                    }
+                    xla::Literal::vec1(k.as_slice())
+                }
+                (name, dt) => bail!("unhandled input {name:?} ({dt:?})"),
+            };
+            literals.push(lit);
+        }
+        let key = format!("{model}/{variant}");
+        let start = Instant::now();
+        let exes = self.exes.borrow();
+        let exe = exes.get(&key).expect("ensured above");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let elapsed = start.elapsed().as_secs_f64() * 1e3;
+        drop(exes);
+        {
+            let mut stats = self.stats.borrow_mut();
+            let e = stats.entry(key).or_default();
+            e.count += 1;
+            e.total_ms += elapsed;
+        }
+        // aot.py lowers with return_tuple=True: unwrap the tuple
+        let parts = result.to_tuple()?;
+        if parts.len() != vi.outputs.len() {
+            bail!(
+                "{model}/{variant}: expected {} outputs, got {}",
+                vi.outputs.len(),
+                parts.len()
+            );
+        }
+        parts.iter().map(Self::literal_to_tensor).collect()
+    }
+
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+
+    /// A [`ModelBackend`] view over one model of this runtime.
+    pub fn model_backend<'a>(&'a self, model: &str) -> Result<RuntimeModel<'a>> {
+        let info = self.manifest.model(model)?.clone();
+        Ok(RuntimeModel { rt: self, info, nfe: RefCell::new(0) })
+    }
+}
+
+fn check_shape(spec: &IoSpec, t: &Tensor) -> Result<()> {
+    if t.shape() != spec.shape.as_slice() {
+        bail!(
+            "input {:?}: shape {:?} != manifest {:?}",
+            spec.name,
+            t.shape(),
+            spec.shape
+        );
+    }
+    Ok(())
+}
+
+/// [`ModelBackend`] implementation over a [`Runtime`] model.
+pub struct RuntimeModel<'a> {
+    rt: &'a Runtime,
+    info: ModelInfo,
+    nfe: RefCell<usize>,
+}
+
+impl<'a> ModelBackend for RuntimeModel<'a> {
+    fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    fn run(&self, variant: &str, args: &ModelArgs) -> Result<ModelOut> {
+        let outs = self.rt.execute(&self.info.name, variant, args)?;
+        *self.nfe.borrow_mut() += 1;
+        let vi = self.info.variant(variant)?;
+        let mut out = None;
+        let mut deep = None;
+        let mut caches = None;
+        for (spec, t) in vi.outputs.iter().zip(outs) {
+            match spec.name.as_str() {
+                "out" => out = Some(t),
+                "deep" => deep = Some(t),
+                "caches" => caches = Some(t),
+                other => bail!("unknown output {other:?}"),
+            }
+        }
+        Ok(ModelOut { out: out.context("missing 'out' output")?, deep, caches })
+    }
+
+    fn nfe(&self) -> usize {
+        *self.nfe.borrow()
+    }
+
+    fn reset_nfe(&self) {
+        *self.nfe.borrow_mut() = 0;
+    }
+}

@@ -1,0 +1,86 @@
+//! SADA hyperparameters.
+//!
+//! The paper's selling point is that the core criterion is *sign-based*
+//! (Criterion 3.4 has no threshold); the few structural knobs below control
+//! warmup, the multistep regime, and the token-bucket quantization.
+
+#[derive(Clone, Debug)]
+pub struct SadaConfig {
+    /// Steps at the start that are always computed fully. The paper skips
+    /// the first steps (Assumption 1: Lipschitz blow-up near boundaries) and
+    /// the AM-3 / criterion stencils need 3 gradients of history.
+    pub warmup: usize,
+    /// Always compute the last `tail` steps fully (boundary condition).
+    pub tail: usize,
+    /// Consecutive stable criterion hits required to enter the multistep
+    /// (Lagrange) regime — the paper's "stable regime" detection.
+    pub multistep_streak: usize,
+    /// Fresh-compute interval inside the multistep regime (paper example: 4).
+    pub multistep_interval: usize,
+    /// Lagrange buffer size (k+1 nodes, paper Thm 3.7; 4 => cubic).
+    pub lagrange_nodes: usize,
+    /// Token keep-fraction above which token pruning is not worth it and the
+    /// step runs fully.
+    pub token_full_threshold: f64,
+    /// Earliest fraction of the schedule at which the multistep regime may
+    /// begin (the paper's stable regime lives in the later,
+    /// fidelity-improving stage of the trajectory — see Fig. 4).
+    pub multistep_after_frac: f64,
+    /// Disable token-wise pruning entirely (ablation switch).
+    pub enable_tokenwise: bool,
+    /// Disable the multistep regime (ablation switch).
+    pub enable_multistep: bool,
+}
+
+impl Default for SadaConfig {
+    fn default() -> Self {
+        Self {
+            warmup: 3,
+            tail: 1,
+            multistep_streak: 3,
+            multistep_interval: 3,
+            multistep_after_frac: 0.5,
+            lagrange_nodes: 4,
+            token_full_threshold: 0.85,
+            enable_tokenwise: true,
+            enable_multistep: true,
+        }
+    }
+}
+
+impl SadaConfig {
+    /// Scale the multistep parameters to short schedules (paper SS4.3 note:
+    /// "Lagrange interpolation parameters are slightly adjusted" for 15/25
+    /// step sampling).
+    pub fn for_steps(mut self, steps: usize) -> Self {
+        if steps <= 15 {
+            self.multistep_interval = 2;
+            self.multistep_streak = 4;
+            self.lagrange_nodes = 3;
+        } else if steps <= 25 {
+            self.multistep_interval = 3;
+            self.multistep_streak = 3;
+            self.lagrange_nodes = 3;
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_sane() {
+        let c = SadaConfig::default();
+        assert!(c.warmup >= 3); // AM-3 stencil needs 3 gradients
+        assert!(c.lagrange_nodes >= 2);
+    }
+
+    #[test]
+    fn few_step_scaling() {
+        let c15 = SadaConfig::default().for_steps(15);
+        let c50 = SadaConfig::default().for_steps(50);
+        assert!(c15.multistep_interval < c50.multistep_interval);
+    }
+}

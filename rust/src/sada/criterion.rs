@@ -1,0 +1,128 @@
+//! The stability criterion (paper Criterion 3.4).
+//!
+//! A timestep is *stable* — eligible for step-wise pruning — iff the
+//! extrapolation error is anti-aligned with the local gradient curvature:
+//!
+//! ```text
+//! < x_{t-1} - x_hat_{t-1} ,  Delta^2 y_t >  <  0.
+//! ```
+//!
+//! The same inner product evaluated per token (channel-wise dot within each
+//! patch) yields the token-stability scores that drive token-wise pruning.
+
+use crate::tensor::{ops, Tensor};
+
+/// Global criterion: stable iff dot(err, d2y) < 0.
+pub fn stable(err: &Tensor, d2y: &Tensor) -> bool {
+    ops::dot(err, d2y) < 0.0
+}
+
+/// Per-token criterion scores. Images are [1, H, W, C]; tokens are p x p
+/// patches in the same row-major order as python `patchify`. Returns one
+/// score per token: negative = stable (prunable), positive = unstable.
+pub fn token_scores(
+    err: &Tensor,
+    d2y: &Tensor,
+    h: usize,
+    w: usize,
+    c: usize,
+    patch: usize,
+) -> Vec<f64> {
+    debug_assert_eq!(err.len(), h * w * c);
+    let gh = h / patch;
+    let gw = w / patch;
+    let e = err.data();
+    let g = d2y.data();
+    let mut scores = vec![0.0f64; gh * gw];
+    for row in 0..h {
+        for col in 0..w {
+            let tok = (row / patch) * gw + (col / patch);
+            let base = (row * w + col) * c;
+            let mut acc = 0.0f64;
+            for ch in 0..c {
+                acc += e[base + ch] as f64 * g[base + ch] as f64;
+            }
+            scores[tok] += acc;
+        }
+    }
+    scores
+}
+
+/// Fraction of tokens with stable (negative) scores.
+pub fn stable_fraction(scores: &[f64]) -> f64 {
+    if scores.is_empty() {
+        return 0.0;
+    }
+    scores.iter().filter(|s| **s < 0.0).count() as f64 / scores.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::new(v.to_vec(), &[v.len()]).unwrap()
+    }
+
+    #[test]
+    fn sign_flip_flips_stability() {
+        let e = t(&[1.0, -0.5]);
+        let d = t(&[-1.0, 0.2]);
+        assert!(stable(&e, &d)); // dot = -1.1 < 0
+        let d_flipped = t(&[1.0, -0.2]);
+        assert!(!stable(&e, &d_flipped));
+    }
+
+    #[test]
+    fn zero_is_not_stable() {
+        // boundary: dot == 0 must NOT be treated as stable (strict <)
+        let e = t(&[0.0, 0.0]);
+        assert!(!stable(&e, &e));
+    }
+
+    #[test]
+    fn token_scores_partition_global_dot() {
+        // sum of token scores == global dot (consistency of granularities)
+        let h = 4;
+        let w = 4;
+        let c = 3;
+        let p = 2;
+        let mut rng = crate::rng::Rng::new(0);
+        let e = Tensor::from_rng(&mut rng, &[h * w * c]);
+        let d = Tensor::from_rng(&mut rng, &[h * w * c]);
+        let scores = token_scores(&e, &d, h, w, c, p);
+        assert_eq!(scores.len(), 4);
+        let total: f64 = scores.iter().sum();
+        assert!((total - ops::dot(&e, &d)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn token_order_matches_patchify() {
+        // construct err that is nonzero only inside patch (row 0..2, col 2..4)
+        // => only token index 1 (row-major patch order) gets a score
+        let h = 4;
+        let w = 4;
+        let c = 1;
+        let p = 2;
+        let mut e = vec![0.0f32; h * w];
+        let mut d = vec![0.0f32; h * w];
+        for row in 0..2 {
+            for col in 2..4 {
+                e[row * w + col] = 1.0;
+                d[row * w + col] = -1.0;
+            }
+        }
+        let scores = token_scores(&t(&e), &t(&d), h, w, c, p);
+        assert_eq!(scores.len(), 4);
+        assert!(scores[1] < 0.0);
+        assert_eq!(scores[0], 0.0);
+        assert_eq!(scores[2], 0.0);
+        assert_eq!(scores[3], 0.0);
+    }
+
+    #[test]
+    fn stable_fraction_counts() {
+        assert_eq!(stable_fraction(&[-1.0, 1.0, -2.0, 3.0]), 0.5);
+        assert_eq!(stable_fraction(&[]), 0.0);
+    }
+}

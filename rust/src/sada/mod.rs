@@ -1,0 +1,346 @@
+//! SADA: the paper's accelerator, implementing [`Accelerator`].
+//!
+//! State machine (paper Fig. 2): after every *fresh* step, Criterion 3.4 is
+//! evaluated from the trajectory history:
+//!
+//! * stable  -> the next step is pruned step-wise (AM-3 extrapolation,
+//!   Thm 3.5, with noise reuse for the data prediction, Thm 3.6); a streak
+//!   of stable steps enters the *multistep regime* where only every q-th
+//!   step is computed and the rest reconstruct x0 by Lagrange interpolation
+//!   over the rolling cache (Thm 3.7);
+//! * unstable -> the criterion is re-evaluated at token granularity and the
+//!   next step runs a token-pruned variant sized by the smallest compiled
+//!   keep-ratio bucket covering the unstable tokens (SS3.5).
+//!
+//! The criterion itself is sign-based — no fidelity threshold to tune.
+
+pub mod config;
+pub mod criterion;
+pub mod multistep;
+pub mod stepwise;
+pub mod tokenwise;
+
+pub use config::SadaConfig;
+pub use tokenwise::{PruneBucket, TokenDecision};
+
+use crate::pipeline::{Accelerator, StepCtx, StepObs, StepPlan};
+use crate::runtime::ModelInfo;
+use crate::tensor::{ops, Tensor};
+
+use multistep::X0Buffer;
+use stepwise::GradHistory;
+
+/// Per-step diagnostic record (drives Fig. 4/5-style dumps).
+#[derive(Clone, Debug)]
+pub struct StepDiag {
+    pub i: usize,
+    pub fresh: bool,
+    pub stable: Option<bool>,
+    pub stable_fraction: Option<f64>,
+    pub criterion_dot: Option<f64>,
+}
+
+pub struct Sada {
+    cfg: SadaConfig,
+    buckets: Vec<PruneBucket>,
+    img: [usize; 3],
+    patch: usize,
+    hist: GradHistory,
+    x0_buf: X0Buffer,
+    pending: StepPlan,
+    stable_streak: usize,
+    in_multistep: bool,
+    ms_anchor: usize,
+    spacing_set: bool,
+    pub diags: Vec<StepDiag>,
+}
+
+impl Sada {
+    pub fn new(info: &ModelInfo, cfg: SadaConfig) -> Self {
+        let mut buckets: Vec<PruneBucket> = info
+            .prune_variants()
+            .into_iter()
+            .map(|(v, n)| PruneBucket { variant: v.to_string(), n_keep: n })
+            .collect();
+        buckets.sort_by_key(|b| b.n_keep);
+        Self {
+            x0_buf: X0Buffer::new(cfg.lagrange_nodes, 0.0),
+            hist: GradHistory::new(4),
+            buckets,
+            img: info.img,
+            patch: info.patch,
+            cfg,
+            pending: StepPlan::Full,
+            stable_streak: 0,
+            in_multistep: false,
+            ms_anchor: 0,
+            spacing_set: false,
+            diags: Vec::new(),
+        }
+    }
+
+    pub fn with_default(info: &ModelInfo, steps: usize) -> Self {
+        Self::new(info, SadaConfig::default().for_steps(steps))
+    }
+
+    fn evaluate_criterion(&mut self, obs: &StepObs) -> Option<(bool, f64, Tensor, Tensor)> {
+        // Criterion 3.4 with the AM-3 extrapolation as x_hat (SS3.3): needs
+        // two prior gradients in history.
+        let x_hat = self.hist.am3_from(obs.x_prev, obs.y, obs.dt)?;
+        let d2y = self.hist.d2y_from(obs.y)?;
+        let err = ops::sub(obs.x_next, &x_hat);
+        let dot = ops::dot(&err, &d2y);
+        Some((dot < 0.0, dot, err, d2y))
+    }
+}
+
+impl Accelerator for Sada {
+    fn name(&self) -> String {
+        "sada".into()
+    }
+
+    fn plan(&mut self, ctx: &StepCtx) -> StepPlan {
+        // boundary steps are always computed fully (Assumption 1)
+        if ctx.i < self.cfg.warmup || ctx.i + self.cfg.tail >= ctx.n_steps {
+            return StepPlan::Full;
+        }
+        if self.in_multistep {
+            if (ctx.i - self.ms_anchor) % self.cfg.multistep_interval == 0 {
+                return StepPlan::Full;
+            }
+            if self.x0_buf.len() >= 2 {
+                return StepPlan::SkipLagrange;
+            }
+            return StepPlan::Full;
+        }
+        std::mem::replace(&mut self.pending, StepPlan::Full)
+    }
+
+    fn observe(&mut self, obs: &StepObs) {
+        if !self.spacing_set {
+            // dedup only near-identical nodes; fresh steps are naturally
+            // >= 1 grid step apart, and multistep-regime refreshes are
+            // `multistep_interval` apart
+            self.x0_buf = X0Buffer::new(self.cfg.lagrange_nodes, obs.dt * 0.5);
+            self.spacing_set = true;
+        }
+        let mut diag = StepDiag {
+            i: obs.i,
+            fresh: obs.fresh,
+            stable: None,
+            stable_fraction: None,
+            criterion_dot: None,
+        };
+        if obs.fresh {
+            self.x0_buf.push(obs.t_norm, obs.x0.clone());
+            if let Some((stable, dot, err, d2y)) = self.evaluate_criterion(obs) {
+                diag.stable = Some(stable);
+                diag.criterion_dot = Some(dot);
+                if stable {
+                    self.stable_streak += 1;
+                    let late_enough =
+                        obs.i as f64 >= self.cfg.multistep_after_frac * obs.n_steps as f64;
+                    if self.cfg.enable_multistep
+                        && !self.in_multistep
+                        && late_enough
+                        && self.stable_streak >= self.cfg.multistep_streak
+                        && self.x0_buf.len() >= 2
+                    {
+                        self.in_multistep = true;
+                        self.ms_anchor = obs.i;
+                        self.pending = StepPlan::Full; // plan() takes over
+                    } else if !self.in_multistep {
+                        self.pending = StepPlan::SkipExtrapolate;
+                    }
+                } else {
+                    self.stable_streak = 0;
+                    if self.in_multistep {
+                        // stable regime ended: fall back to per-step decisions
+                        self.in_multistep = false;
+                    }
+                    if self.cfg.enable_tokenwise && !self.buckets.is_empty() {
+                        let [h, w, c] = self.img;
+                        let scores = criterion::token_scores(&err, &d2y, h, w, c, self.patch);
+                        diag.stable_fraction = Some(criterion::stable_fraction(&scores));
+                        self.pending = match tokenwise::select_bucket(
+                            &scores,
+                            &self.buckets,
+                            self.cfg.token_full_threshold,
+                        ) {
+                            TokenDecision::Full => StepPlan::Full,
+                            TokenDecision::Prune { variant, keep_idx } => {
+                                StepPlan::Prune { variant, keep_idx }
+                            }
+                        };
+                    } else {
+                        self.pending = StepPlan::Full;
+                    }
+                }
+            } else {
+                self.pending = StepPlan::Full;
+            }
+        } else {
+            // after any skipped step, refresh before deciding again
+            if !self.in_multistep {
+                self.pending = StepPlan::Full;
+            }
+        }
+        // gradient history includes skipped steps: the criterion stencil
+        // operates on consecutive grid nodes (paper uses y_{t+1}, y_{t+2})
+        self.hist.push(obs.x_prev.clone(), obs.y.clone());
+        self.diags.push(diag);
+    }
+
+    fn reset(&mut self) {
+        self.hist.clear();
+        self.x0_buf.clear();
+        self.pending = StepPlan::Full;
+        self.stable_streak = 0;
+        self.in_multistep = false;
+        self.ms_anchor = 0;
+        self.spacing_set = false;
+        self.diags.clear();
+    }
+
+    fn extrapolate(&self, x: &Tensor, y_now: &Tensor, dt: f64) -> Option<Tensor> {
+        self.hist.am3_from(x, y_now, dt)
+    }
+
+    fn reconstruct_x0(&self, t_norm: f64) -> Option<Tensor> {
+        self.x0_buf.reconstruct(t_norm)
+    }
+}
+
+/// SADA ablation: step-wise only, using the *plain FDM-3* extrapolation
+/// instead of AM-3 (the Fig. 3 comparison arm).
+pub struct SadaFdm {
+    inner: Sada,
+}
+
+impl SadaFdm {
+    pub fn new(info: &ModelInfo, cfg: SadaConfig) -> Self {
+        let mut cfg = cfg;
+        cfg.enable_multistep = false;
+        cfg.enable_tokenwise = false;
+        Self { inner: Sada::new(info, cfg) }
+    }
+}
+
+impl Accelerator for SadaFdm {
+    fn name(&self) -> String {
+        "sada-fdm3".into()
+    }
+
+    fn plan(&mut self, ctx: &StepCtx) -> StepPlan {
+        self.inner.plan(ctx)
+    }
+
+    fn observe(&mut self, obs: &StepObs) {
+        self.inner.observe(obs);
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+
+    fn extrapolate(&self, x: &Tensor, _y_now: &Tensor, _dt: f64) -> Option<Tensor> {
+        let x1 = self.inner.hist.x(0)?;
+        let x2 = self.inner.hist.x(1)?;
+        Some(stepwise::fdm3(x, x1, x2))
+    }
+
+    fn reconstruct_x0(&self, t_norm: f64) -> Option<Tensor> {
+        self.inner.reconstruct_x0(t_norm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{GenRequest, NoAccel, Pipeline};
+    use crate::runtime::mock::GmBackend;
+    use crate::runtime::ModelBackend;
+    use crate::solvers::SolverKind;
+
+    fn request(seed: u64, steps: usize) -> GenRequest {
+        let mut rng = crate::rng::Rng::new(1234);
+        GenRequest {
+            cond: Tensor::from_rng(&mut rng, &[1, 32]),
+            seed,
+            guidance: 2.0,
+            steps,
+            edge: None,
+        }
+    }
+
+    #[test]
+    fn sada_skips_steps_on_smooth_trajectory() {
+        let backend = GmBackend::new(5);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let mut sada = Sada::with_default(backend.info(), 50);
+        let res = pipe.generate(&request(7, 50), &mut sada).unwrap();
+        assert_eq!(res.stats.modes.len(), 50);
+        assert!(
+            res.stats.nfe < 45,
+            "expected skips on the analytic GM trajectory, nfe={} trace={}",
+            res.stats.nfe,
+            res.stats.mode_trace()
+        );
+        // boundary steps always full
+        assert_eq!(res.stats.modes[0], crate::pipeline::StepMode::Full);
+        assert_eq!(res.stats.modes[49], crate::pipeline::StepMode::Full);
+    }
+
+    #[test]
+    fn sada_stays_close_to_baseline() {
+        let backend = GmBackend::new(6);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let req = request(9, 50);
+        let base = pipe.generate(&req, &mut NoAccel).unwrap();
+        let mut sada = Sada::with_default(backend.info(), 50);
+        let accel = pipe.generate(&req, &mut sada).unwrap();
+        let err = crate::tensor::ops::mse(&base.image, &accel.image).sqrt();
+        let scale = crate::tensor::ops::norm2(&base.image) / (base.image.len() as f64).sqrt();
+        assert!(
+            err < 0.35 * scale.max(0.1),
+            "sada drifted too far: rmse={err:.4}, scale={scale:.4}, trace={}",
+            accel.stats.mode_trace()
+        );
+        assert!(accel.stats.nfe < base.stats.nfe);
+    }
+
+    #[test]
+    fn reset_clears_state_between_requests() {
+        let backend = GmBackend::new(7);
+        let pipe = Pipeline::new(&backend, SolverKind::Euler);
+        let mut sada = Sada::with_default(backend.info(), 20);
+        let r1 = pipe.generate(&request(1, 20), &mut sada).unwrap();
+        let r2 = pipe.generate(&request(1, 20), &mut sada).unwrap();
+        // identical request after reset must produce identical trajectories
+        assert_eq!(r1.image.data(), r2.image.data());
+        assert_eq!(r1.stats.mode_trace(), r2.stats.mode_trace());
+    }
+
+    #[test]
+    fn ablation_switches_disable_modes() {
+        let backend = GmBackend::new(8);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let mut cfg = SadaConfig::default();
+        cfg.enable_multistep = false;
+        cfg.enable_tokenwise = false;
+        let mut sada = Sada::new(backend.info(), cfg);
+        let res = pipe.generate(&request(3, 50), &mut sada).unwrap();
+        assert_eq!(res.stats.count(crate::pipeline::StepMode::SkipLagrange), 0);
+        assert_eq!(res.stats.count(crate::pipeline::StepMode::Prune), 0);
+    }
+
+    #[test]
+    fn fdm_variant_runs() {
+        let backend = GmBackend::new(9);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let mut fdm = SadaFdm::new(backend.info(), SadaConfig::default());
+        let res = pipe.generate(&request(4, 30), &mut fdm).unwrap();
+        assert_eq!(res.stats.modes.len(), 30);
+        backend.reset_nfe();
+    }
+}

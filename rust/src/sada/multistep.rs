@@ -1,0 +1,130 @@
+//! Multistep-wise cache-assisted pruning (paper SS3.4, Thm 3.7).
+//!
+//! A rolling buffer of (t, x0) pairs cached at fresh steps; skipped steps in
+//! the stable regime reconstruct x0 by Lagrange interpolation over the
+//! buffer. With k+1 nodes the reconstruction error is O(h^{k+1}) for a
+//! (k+1)-times differentiable trajectory.
+
+use std::collections::VecDeque;
+
+use crate::tensor::Tensor;
+
+pub struct X0Buffer {
+    nodes: VecDeque<(f64, Tensor)>,
+    cap: usize,
+    /// Minimum |t| spacing between stored nodes (avoids ill-conditioned
+    /// interpolation from nearly-duplicate nodes).
+    min_spacing: f64,
+}
+
+impl X0Buffer {
+    pub fn new(cap: usize, min_spacing: f64) -> Self {
+        Self { nodes: VecDeque::new(), cap: cap.max(2), min_spacing }
+    }
+
+    pub fn clear(&mut self) {
+        self.nodes.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.nodes.len() >= self.cap
+    }
+
+    /// Store a fresh x0 at normalized time t (rolling, spacing-enforced).
+    pub fn push(&mut self, t: f64, x0: Tensor) {
+        if let Some((t_last, _)) = self.nodes.front() {
+            if (t_last - t).abs() < self.min_spacing {
+                // refresh the newest node instead of accumulating duplicates
+                self.nodes.pop_front();
+            }
+        }
+        self.nodes.push_front((t, x0));
+        while self.nodes.len() > self.cap {
+            self.nodes.pop_back();
+        }
+    }
+
+    /// Lagrange reconstruction of x0 at time t (paper Eq. 16). Returns None
+    /// until at least 2 nodes are buffered.
+    pub fn reconstruct(&self, t: f64) -> Option<Tensor> {
+        let n = self.nodes.len();
+        if n < 2 {
+            return None;
+        }
+        let ts: Vec<f64> = self.nodes.iter().map(|(ti, _)| *ti).collect();
+        let mut out = Tensor::zeros(self.nodes[0].1.shape());
+        for (i, (ti, xi)) in self.nodes.iter().enumerate() {
+            let mut w = 1.0f64;
+            for (j, tj) in ts.iter().enumerate() {
+                if i != j {
+                    w *= (t - tj) / (ti - tj);
+                }
+            }
+            crate::tensor::ops::axpy(w as f32, xi, &mut out);
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t1(v: f32) -> Tensor {
+        Tensor::new(vec![v], &[1]).unwrap()
+    }
+
+    #[test]
+    fn exact_on_cubic() {
+        // x0(t) = t^3 - t; 4 nodes reconstruct exactly anywhere
+        let f = |t: f64| (t * t * t - t) as f32;
+        let mut buf = X0Buffer::new(4, 1e-9);
+        for t in [0.9, 0.8, 0.7, 0.6] {
+            buf.push(t, t1(f(t)));
+        }
+        let got = buf.reconstruct(0.65).unwrap();
+        assert!((got.data()[0] - f(0.65)).abs() < 1e-5);
+        // extrapolation below the window is also the paper's use case
+        let got = buf.reconstruct(0.55).unwrap();
+        assert!((got.data()[0] - f(0.55)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rolling_cap() {
+        let mut buf = X0Buffer::new(3, 1e-9);
+        for i in 0..6 {
+            buf.push(1.0 - 0.1 * i as f64, t1(i as f32));
+        }
+        assert_eq!(buf.len(), 3);
+        // newest node value is 5
+        assert_eq!(buf.reconstruct(0.5).map(|t| t.data()[0].round()), Some(5.0));
+    }
+
+    #[test]
+    fn spacing_dedups() {
+        let mut buf = X0Buffer::new(4, 0.05);
+        buf.push(0.9, t1(1.0));
+        buf.push(0.89, t1(2.0)); // too close: replaces, not appends
+        assert_eq!(buf.len(), 1);
+        buf.push(0.8, t1(3.0));
+        assert_eq!(buf.len(), 2);
+    }
+
+    #[test]
+    fn needs_two_nodes() {
+        let mut buf = X0Buffer::new(4, 1e-9);
+        assert!(buf.reconstruct(0.5).is_none());
+        buf.push(0.9, t1(1.0));
+        assert!(buf.reconstruct(0.5).is_none());
+        buf.push(0.8, t1(2.0));
+        assert!(buf.reconstruct(0.5).is_some());
+    }
+}

@@ -1,0 +1,159 @@
+//! Step-wise approximation schemes (paper SS3.4).
+//!
+//! * [`am3`] — the third-order Adams–Moulton estimator of Thm 3.5:
+//!   `x_{t-1} = x_t - (5dt/6) y_t - (5dt/6) y_{t+1} + (2dt/3) y_{t+2}`,
+//!   local truncation O(dt^2) on the PF-ODE.
+//! * [`fdm3`] — the plain third-order backward finite difference
+//!   `3 x_t - 3 x_{t+1} + x_{t+2}` (the baseline SADA improves on; kept for
+//!   the Fig-3 comparison harness).
+//! * [`GradHistory`] — rolling window of the last gradients/states.
+
+use std::collections::VecDeque;
+
+use crate::tensor::{ops, Tensor};
+
+/// AM-3 extrapolation along the ODE trajectory (Thm 3.5). `y_hist` must hold
+/// the two gradients *before* the current one: (y_{t+1}, y_{t+2}).
+pub fn am3(x: &Tensor, y_now: &Tensor, y_prev: &Tensor, y_prev2: &Tensor, dt: f64) -> Tensor {
+    let c = dt as f32;
+    ops::lincomb4(
+        1.0,
+        x,
+        -5.0 * c / 6.0,
+        y_now,
+        -5.0 * c / 6.0,
+        y_prev,
+        2.0 * c / 3.0,
+        y_prev2,
+    )
+}
+
+/// Third-order backward finite difference extrapolation.
+pub fn fdm3(x: &Tensor, x_prev: &Tensor, x_prev2: &Tensor) -> Tensor {
+    ops::lincomb3(3.0, x, -3.0, x_prev, 1.0, x_prev2)
+}
+
+/// Second-order difference of the gradient: Delta^2 y = y - 2 y' + y''.
+pub fn d2y(y_now: &Tensor, y_prev: &Tensor, y_prev2: &Tensor) -> Tensor {
+    ops::lincomb3(1.0, y_now, -2.0, y_prev, 1.0, y_prev2)
+}
+
+/// Rolling history of the trajectory (gradients + states), newest first.
+#[derive(Default)]
+pub struct GradHistory {
+    ys: VecDeque<Tensor>,
+    xs: VecDeque<Tensor>,
+    cap: usize,
+}
+
+impl GradHistory {
+    pub fn new(cap: usize) -> Self {
+        Self { ys: VecDeque::new(), xs: VecDeque::new(), cap: cap.max(3) }
+    }
+
+    pub fn push(&mut self, x: Tensor, y: Tensor) {
+        self.xs.push_front(x);
+        self.ys.push_front(y);
+        while self.xs.len() > self.cap {
+            self.xs.pop_back();
+            self.ys.pop_back();
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.xs.clear();
+        self.ys.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.ys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ys.is_empty()
+    }
+
+    pub fn y(&self, back: usize) -> Option<&Tensor> {
+        self.ys.get(back)
+    }
+
+    pub fn x(&self, back: usize) -> Option<&Tensor> {
+        self.xs.get(back)
+    }
+
+    /// AM-3 prediction of the next state from the newest entry + current
+    /// gradient (the newest history gradient is y_{t+1} in paper indexing).
+    pub fn am3_from(&self, x: &Tensor, y_now: &Tensor, dt: f64) -> Option<Tensor> {
+        let y1 = self.ys.front()?;
+        let y2 = self.ys.get(1)?;
+        Some(am3(x, y_now, y1, y2, dt))
+    }
+
+    /// Delta^2 y using the current gradient + the two newest history entries.
+    pub fn d2y_from(&self, y_now: &Tensor) -> Option<Tensor> {
+        let y1 = self.ys.front()?;
+        let y2 = self.ys.get(1)?;
+        Some(d2y(y_now, y1, y2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::new(v.to_vec(), &[v.len()]).unwrap()
+    }
+
+    #[test]
+    fn am3_exact_on_constant_gradient() {
+        // dx/dt = const c along descending t: x(t - dt) = x - dt*c
+        let x = t(&[1.0, 2.0]);
+        let y = t(&[0.5, -1.0]);
+        let out = am3(&x, &y, &y, &y, 0.1);
+        assert!((out.data()[0] - (1.0 - 0.05)).abs() < 1e-6);
+        assert!((out.data()[1] - (2.0 + 0.1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn am3_matches_quadratic_to_second_order() {
+        // x(t) = t^2 => dx/dt = 2t; walk descending t from 0.7 with h = 0.1
+        let h = 0.1f64;
+        let tt = 0.7f64;
+        let x = t(&[(tt * tt) as f32]);
+        let y_now = t(&[(2.0 * tt) as f32]);
+        let y_p1 = t(&[(2.0 * (tt + h)) as f32]);
+        let y_p2 = t(&[(2.0 * (tt + 2.0 * h)) as f32]);
+        let got = am3(&x, &y_now, &y_p1, &y_p2, h);
+        let want = ((tt - h) * (tt - h)) as f32;
+        assert!((got.data()[0] - want).abs() < (10.0 * h * h) as f32);
+    }
+
+    #[test]
+    fn fdm3_exact_on_quadratic_sequence() {
+        // x_i = i^2 sampled at -1,0,1,2: fdm3 at (0,1,2) predicts (-1)^2 = 1
+        let got = fdm3(&t(&[0.0]), &t(&[1.0]), &t(&[4.0]));
+        assert!((got.data()[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn d2y_linear_is_zero() {
+        let got = d2y(&t(&[3.0]), &t(&[2.0]), &t(&[1.0]));
+        assert!(got.data()[0].abs() < 1e-6);
+    }
+
+    #[test]
+    fn history_rolls_and_caps() {
+        let mut h = GradHistory::new(3);
+        for i in 0..5 {
+            h.push(t(&[i as f32]), t(&[10.0 + i as f32]));
+        }
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.y(0).unwrap().data()[0], 14.0); // newest first
+        assert_eq!(h.x(2).unwrap().data()[0], 2.0);
+        assert!(h.am3_from(&t(&[0.0]), &t(&[1.0]), 0.1).is_some());
+        h.clear();
+        assert!(h.is_empty());
+        assert!(h.am3_from(&t(&[0.0]), &t(&[1.0]), 0.1).is_none());
+    }
+}

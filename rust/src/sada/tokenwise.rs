@@ -1,0 +1,122 @@
+//! Token-wise cache-assisted pruning decisions (paper SS3.5).
+//!
+//! Quantizes the per-token stability scores into one of the AOT-compiled
+//! keep-ratio buckets: XLA executables have fixed shapes, so the dynamic
+//! mask is mapped to the smallest compiled bucket that covers all unstable
+//! tokens (keeping the *most unstable* tokens when truncation is needed) —
+//! the fixed-shape discipline production serving systems use for dynamic
+//! sparsity on accelerators (DESIGN.md SS2).
+
+/// A compiled prune bucket: variant name + its keep count.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PruneBucket {
+    pub variant: String,
+    pub n_keep: usize,
+}
+
+/// Decision produced by [`select_bucket`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum TokenDecision {
+    /// Too many unstable tokens: run fully.
+    Full,
+    /// Run `variant` keeping `keep_idx` (ascending order).
+    Prune { variant: String, keep_idx: Vec<i32> },
+}
+
+/// Choose the smallest bucket with n_keep >= number of unstable tokens.
+/// `full_threshold` is the unstable-fraction above which we don't bother.
+/// Buckets must be sorted by n_keep ascending.
+pub fn select_bucket(
+    scores: &[f64],
+    buckets: &[PruneBucket],
+    full_threshold: f64,
+) -> TokenDecision {
+    let n = scores.len();
+    if n == 0 || buckets.is_empty() {
+        return TokenDecision::Full;
+    }
+    let n_unstable = scores.iter().filter(|s| **s >= 0.0).count();
+    if n_unstable as f64 / n as f64 > full_threshold {
+        return TokenDecision::Full;
+    }
+    let bucket = match buckets.iter().find(|b| b.n_keep >= n_unstable) {
+        Some(b) => b,
+        None => return TokenDecision::Full,
+    };
+    // order tokens by instability (descending score); keep the top n_keep
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|a, b| scores[*b].partial_cmp(&scores[*a]).unwrap());
+    let mut keep: Vec<i32> = order[..bucket.n_keep.min(n)]
+        .iter()
+        .map(|i| *i as i32)
+        .collect();
+    keep.sort_unstable();
+    TokenDecision::Prune { variant: bucket.variant.clone(), keep_idx: keep }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buckets() -> Vec<PruneBucket> {
+        vec![
+            PruneBucket { variant: "prune50".into(), n_keep: 8 },
+            PruneBucket { variant: "prune75".into(), n_keep: 12 },
+        ]
+    }
+
+    #[test]
+    fn few_unstable_picks_small_bucket() {
+        let mut scores = vec![-1.0f64; 16];
+        scores[3] = 2.0;
+        scores[9] = 1.0;
+        match select_bucket(&scores, &buckets(), 0.85) {
+            TokenDecision::Prune { variant, keep_idx } => {
+                assert_eq!(variant, "prune50");
+                assert_eq!(keep_idx.len(), 8);
+                assert!(keep_idx.contains(&3));
+                assert!(keep_idx.contains(&9));
+                // ascending order for deterministic gathers
+                let mut sorted = keep_idx.clone();
+                sorted.sort_unstable();
+                assert_eq!(keep_idx, sorted);
+            }
+            other => panic!("expected prune, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn many_unstable_picks_larger_bucket_or_full() {
+        let mut scores = vec![-1.0f64; 16];
+        for s in scores.iter_mut().take(10) {
+            *s = 1.0;
+        }
+        match select_bucket(&scores, &buckets(), 0.85) {
+            TokenDecision::Prune { variant, .. } => assert_eq!(variant, "prune75"),
+            other => panic!("expected prune75, got {other:?}"),
+        }
+        for s in scores.iter_mut().take(15) {
+            *s = 1.0;
+        }
+        assert_eq!(select_bucket(&scores, &buckets(), 0.85), TokenDecision::Full);
+    }
+
+    #[test]
+    fn all_stable_still_keeps_bucket_size() {
+        // even fully-stable steps keep n_keep tokens fresh (cache refresh)
+        let scores = vec![-1.0f64; 16];
+        match select_bucket(&scores, &buckets(), 0.85) {
+            TokenDecision::Prune { variant, keep_idx } => {
+                assert_eq!(variant, "prune50");
+                assert_eq!(keep_idx.len(), 8);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_full() {
+        assert_eq!(select_bucket(&[], &buckets(), 0.85), TokenDecision::Full);
+        assert_eq!(select_bucket(&[1.0], &[], 0.85), TokenDecision::Full);
+    }
+}

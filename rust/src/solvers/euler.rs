@@ -1,0 +1,115 @@
+//! First-order ODE solver in DDIM form (the paper's "Euler"/EDM column).
+//!
+//! x_{j'} = alpha_{j'} x0 + sigma_{j'} eps, with eps kept consistent with
+//! (x, x0) at the current node. Identical to sampler_ref.EulerSolver.
+
+use super::ode;
+use super::schedule::Schedule;
+use super::Solver;
+use crate::tensor::{ops, Tensor};
+
+pub struct EulerDdim {
+    schedule: Schedule,
+    grid: Vec<usize>,
+}
+
+impl EulerDdim {
+    pub fn new(schedule: Schedule, steps: usize) -> Self {
+        let grid = schedule.timestep_grid(steps);
+        Self { schedule, grid }
+    }
+
+    fn j(&self, i: usize) -> usize {
+        self.grid[i]
+    }
+}
+
+impl Solver for EulerDdim {
+    fn step(&mut self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
+        let j_from = self.j(i);
+        let j_to = self.j(i + 1);
+        let eps = self.model_out_from_x0(x, x0, i);
+        let (a, s) = self.schedule.alpha_sigma(j_to);
+        let _ = j_from;
+        ops::lincomb2(a as f32, x0, s as f32, &eps)
+    }
+
+    fn reset(&mut self) {}
+
+    fn n_nodes(&self) -> usize {
+        self.grid.len()
+    }
+
+    fn t_norm(&self, i: usize) -> f64 {
+        self.grid[i] as f64 / self.schedule.train_t as f64
+    }
+
+    fn x0_from_model(&self, x: &Tensor, eps: &Tensor, i: usize) -> Tensor {
+        let (a, s) = self.schedule.alpha_sigma(self.j(i));
+        ops::lincomb2((1.0 / a) as f32, x, (-s / a) as f32, eps)
+    }
+
+    fn model_out_from_x0(&self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
+        let (a, s) = self.schedule.alpha_sigma(self.j(i));
+        let s = s.max(1e-12);
+        ops::lincomb2((1.0 / s) as f32, x, (-a / s) as f32, x0)
+    }
+
+    fn gradient(&self, x: &Tensor, eps: &Tensor, i: usize) -> Tensor {
+        ode::gradient_eps(&self.schedule, self.j(i), x, eps)
+    }
+
+    fn dt(&self, i: usize) -> f64 {
+        (self.grid[i] - self.grid[i + 1]) as f64 / self.schedule.train_t as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn x0_eps_roundtrip() {
+        let s = Schedule::default_ddpm();
+        let mut solver = EulerDdim::new(s.clone(), 10);
+        let mut rng = Rng::new(0);
+        let x0 = Tensor::from_rng(&mut rng, &[8]);
+        let eps = Tensor::from_rng(&mut rng, &[8]);
+        let i = 3;
+        let (a, sg) = s.alpha_sigma(solver.j(i));
+        let x = ops::lincomb2(a as f32, &x0, sg as f32, &eps);
+        let x0_rec = solver.x0_from_model(&x, &eps, i);
+        for (p, q) in x0_rec.data().iter().zip(x0.data()) {
+            assert!((p - q).abs() < 1e-4);
+        }
+        let eps_rec = solver.model_out_from_x0(&x, &x0_rec, i);
+        for (p, q) in eps_rec.data().iter().zip(eps.data()) {
+            assert!((p - q).abs() < 1e-3);
+        }
+        let _ = solver.step(&x, &x0, i);
+    }
+
+    #[test]
+    fn final_step_returns_x0() {
+        // at j_to = 0: alpha = 1, sigma = 0 => x_next == x0
+        let s = Schedule::default_ddpm();
+        let steps = 10;
+        let mut solver = EulerDdim::new(s, steps);
+        let mut rng = Rng::new(1);
+        let x = Tensor::from_rng(&mut rng, &[8]);
+        let x0 = Tensor::from_rng(&mut rng, &[8]);
+        let out = solver.step(&x, &x0, steps - 1);
+        for (p, q) in out.data().iter().zip(x0.data()) {
+            assert!((p - q).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dt_positive_sums_to_one() {
+        let s = Schedule::default_ddpm();
+        let solver = EulerDdim::new(s, 50);
+        let total: f64 = (0..50).map(|i| solver.dt(i)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,112 @@
+//! Euler solver for rectified-flow / flow-matching models (Flux).
+//!
+//! Convention (matches train.py): x_t = (1 - t) x0 + t eps with t in
+//! [t_min, 1]; the model predicts the velocity v = dx/dt = eps - x0, so
+//! x0 = x - t v and the Euler update is x <- x + (t' - t) v.
+//! Mirrors sampler_ref.FlowEulerSolver / flow_grid.
+
+use super::Solver;
+use crate::tensor::{ops, Tensor};
+
+pub const T_MIN: f64 = 1e-3;
+
+pub struct FlowEuler {
+    grid: Vec<f64>,
+}
+
+impl FlowEuler {
+    pub fn new(steps: usize) -> Self {
+        let grid = (0..=steps)
+            .map(|i| 1.0 + (T_MIN - 1.0) * i as f64 / steps as f64)
+            .collect();
+        Self { grid }
+    }
+}
+
+impl Solver for FlowEuler {
+    fn step(&mut self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
+        let t = self.grid[i];
+        let t_next = self.grid[i + 1];
+        // v consistent with (x, x0): v = (x - x0) / t
+        let v = self.model_out_from_x0(x, x0, i);
+        ops::lincomb2(1.0, x, (t_next - t) as f32, &v)
+    }
+
+    fn reset(&mut self) {}
+
+    fn n_nodes(&self) -> usize {
+        self.grid.len()
+    }
+
+    fn t_norm(&self, i: usize) -> f64 {
+        self.grid[i]
+    }
+
+    fn x0_from_model(&self, x: &Tensor, v: &Tensor, i: usize) -> Tensor {
+        let t = self.grid[i];
+        ops::lincomb2(1.0, x, -t as f32, v)
+    }
+
+    fn model_out_from_x0(&self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
+        let t = self.grid[i].max(1e-9);
+        ops::lincomb2((1.0 / t) as f32, x, (-1.0 / t) as f32, x0)
+    }
+
+    fn gradient(&self, _x: &Tensor, v: &Tensor, _i: usize) -> Tensor {
+        // flow models predict dx/dt directly (paper Eq. 4)
+        v.clone()
+    }
+
+    fn dt(&self, i: usize) -> f64 {
+        self.grid[i] - self.grid[i + 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn grid_descends_from_one_to_tmin() {
+        let f = FlowEuler::new(50);
+        assert!((f.grid[0] - 1.0).abs() < 1e-12);
+        assert!((f.grid[50] - T_MIN).abs() < 1e-12);
+        for w in f.grid.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    #[test]
+    fn constant_velocity_integrated_exactly() {
+        let mut f = FlowEuler::new(10);
+        let mut rng = Rng::new(6);
+        let x0 = Tensor::from_rng(&mut rng, &[8]);
+        let eps = Tensor::from_rng(&mut rng, &[8]);
+        // x(t) = (1-t) x0 + t eps is linear in t => one Euler sweep is exact
+        let mut x = ops::lincomb2((1.0 - f.grid[0]) as f32, &x0, f.grid[0] as f32, &eps);
+        let v = ops::lincomb2(1.0, &eps, -1.0, &x0);
+        for i in 0..10 {
+            let x0_pred = f.x0_from_model(&x, &v, i);
+            x = f.step(&x, &x0_pred, i);
+        }
+        // at t = T_MIN, x should be (1 - T_MIN) x0 + T_MIN eps ~ x0
+        for (p, (a, b)) in x.data().iter().zip(x0.data().iter().zip(eps.data())) {
+            let want = (1.0 - T_MIN) as f32 * a + T_MIN as f32 * b;
+            assert!((p - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn x0_v_roundtrip() {
+        let f = FlowEuler::new(10);
+        let mut rng = Rng::new(7);
+        let x = Tensor::from_rng(&mut rng, &[8]);
+        let v = Tensor::from_rng(&mut rng, &[8]);
+        let x0 = f.x0_from_model(&x, &v, 3);
+        let v_rec = f.model_out_from_x0(&x, &x0, 3);
+        for (p, q) in v_rec.data().iter().zip(v.data()) {
+            assert!((p - q).abs() < 1e-4);
+        }
+    }
+}

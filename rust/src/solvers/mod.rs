@@ -1,0 +1,99 @@
+//! ODE solvers for diffusion / flow-matching sampling (Layer-3 host math).
+//!
+//! Mirrors `python/compile/sampler_ref.py` exactly (goldens cross-check the
+//! two). All solvers consume a *data prediction* `x0` plus the consistent
+//! noise/velocity and advance the state; this is the interface SADA's
+//! approximation schemes plug into (the paper's "DP" box in Fig. 2): a
+//! skipped step supplies an approximated `x0` instead of a model-fresh one.
+
+pub mod dpmpp;
+pub mod euler;
+pub mod flow;
+pub mod heun;
+pub mod ode;
+pub mod schedule;
+
+pub use dpmpp::DpmPP2M;
+pub use euler::EulerDdim;
+pub use flow::FlowEuler;
+pub use heun::HeunEdm;
+pub use schedule::Schedule;
+
+use crate::tensor::Tensor;
+
+/// Which solver to run (paper Table 1 columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    /// First-order ODE solver in DDIM form ("Euler"/EDM in the paper).
+    Euler,
+    /// DPM-Solver++(2M), second-order multistep on the data prediction.
+    DpmPP,
+    /// Euler on the rectified-flow ODE (Flux).
+    Flow,
+    /// Heun / EDM-style second-order predictor-corrector (extension).
+    Heun,
+}
+
+impl SolverKind {
+    pub fn parse(s: &str) -> Option<SolverKind> {
+        match s {
+            "euler" => Some(SolverKind::Euler),
+            "dpmpp" | "dpm++" => Some(SolverKind::DpmPP),
+            "flow" => Some(SolverKind::Flow),
+            "heun" => Some(SolverKind::Heun),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Euler => "euler",
+            SolverKind::DpmPP => "dpmpp",
+            SolverKind::Flow => "flow",
+            SolverKind::Heun => "heun",
+        }
+    }
+}
+
+/// A solver step advances x from grid node i to i+1 given the data
+/// prediction x0 (and the consistent eps/velocity at the current state).
+pub trait Solver {
+    /// Advance from grid index `i` (state `x`) using data prediction `x0`.
+    fn step(&mut self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor;
+
+    /// Inject an approximated x0 into multistep history without stepping
+    /// (used when SADA's multistep mode recomputes history consistency).
+    fn inject_x0(&mut self, _x0: &Tensor, _i: usize) {}
+
+    /// Reset multistep history (new request).
+    fn reset(&mut self);
+
+    /// Number of grid nodes (steps + 1).
+    fn n_nodes(&self) -> usize;
+
+    /// Normalized time t in [0, 1] at grid node i (1 = pure noise).
+    fn t_norm(&self, i: usize) -> f64;
+
+    /// Data prediction from the raw model output at grid node i.
+    /// For eps-models: x0 = (x - sigma eps) / alpha; for flow: x0 = x - t v.
+    fn x0_from_model(&self, x: &Tensor, model_out: &Tensor, i: usize) -> Tensor;
+
+    /// Consistent eps/velocity from (x, x0) at node i — the inverse of
+    /// `x0_from_model`, used when x0 was approximated rather than fresh.
+    fn model_out_from_x0(&self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor;
+
+    /// PF-ODE gradient y = dx/dt at node i (paper Eq. 3 / Eq. 4).
+    fn gradient(&self, x: &Tensor, model_out: &Tensor, i: usize) -> Tensor;
+
+    /// Normalized step size |dt| between node i and i+1.
+    fn dt(&self, i: usize) -> f64;
+}
+
+pub fn build_solver(kind: SolverKind, schedule: &Schedule, steps: usize) -> Box<dyn Solver> {
+    match kind {
+        SolverKind::Euler => Box::new(EulerDdim::new(schedule.clone(), steps)),
+        SolverKind::DpmPP => Box::new(DpmPP2M::new(schedule.clone(), steps)),
+        SolverKind::Flow => Box::new(FlowEuler::new(steps)),
+        SolverKind::Heun => Box::new(HeunEdm::new(schedule.clone(), steps)),
+    }
+}

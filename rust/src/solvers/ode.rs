@@ -1,0 +1,88 @@
+//! PF-ODE gradient coefficients (paper Eq. 3).
+//!
+//! y_t = dx/dt = f(t) x_t + g^2(t) / (2 sigma_t) * eps_theta(x_t, t), with
+//! f = d/dt log sqrt(abar) and g^2 = d(sigma^2)/dt - 2 f sigma^2, evaluated
+//! by centered differences on the discrete abar table in normalized time
+//! t = j / train_t. Mirrors `sampler_ref.ode_coeffs` exactly.
+
+use super::schedule::Schedule;
+use crate::tensor::{ops, Tensor};
+
+/// (c1, c2) such that y = c1 * x + c2 * eps at grid point j.
+pub fn ode_coeffs(schedule: &Schedule, j: usize) -> (f64, f64) {
+    let t = schedule.train_t;
+    let j = j.clamp(1, t - 1);
+    let lab = |k: usize| 0.5 * schedule.abar[k].ln();
+    let f = (lab(j + 1) - lab(j - 1)) * t as f64 / 2.0;
+    let sig2 = |k: usize| 1.0 - schedule.abar[k];
+    let dsig2 = (sig2(j + 1) - sig2(j - 1)) * t as f64 / 2.0;
+    let g2 = dsig2 - 2.0 * f * sig2(j);
+    let sigma = sig2(j).sqrt().max(1e-12);
+    (f, g2 / (2.0 * sigma))
+}
+
+/// y = c1 x + c2 eps as a tensor.
+pub fn gradient_eps(schedule: &Schedule, j: usize, x: &Tensor, eps: &Tensor) -> Tensor {
+    let (c1, c2) = ode_coeffs(schedule, j);
+    ops::lincomb2(c1 as f32, x, c2 as f32, eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f_negative_c2_positive_midrange() {
+        // abar decreases => log sqrt(abar) decreases in j; but t = j/T is the
+        // *noising* direction, so f = d/dt log alpha < 0 and the eps
+        // coefficient pushes mass toward noise (positive for the VP SDE).
+        let s = Schedule::default_ddpm();
+        for j in [100, 400, 800] {
+            let (c1, c2) = ode_coeffs(&s, j);
+            assert!(c1 < 0.0, "f(t) must be negative, got {c1} at {j}");
+            assert!(c2 > 0.0, "g^2/(2 sigma) must be positive, got {c2} at {j}");
+        }
+    }
+
+    #[test]
+    fn boundary_clamped() {
+        let s = Schedule::default_ddpm();
+        // j = 0 and j = train_t must not index out of bounds / produce NaN
+        let (a0, b0) = ode_coeffs(&s, 0);
+        let (a1, b1) = ode_coeffs(&s, 1000);
+        assert!(a0.is_finite() && b0.is_finite());
+        assert!(a1.is_finite() && b1.is_finite());
+    }
+
+    #[test]
+    fn gradient_matches_manual() {
+        let s = Schedule::default_ddpm();
+        let x = Tensor::new(vec![1.0, -2.0], &[2]).unwrap();
+        let e = Tensor::new(vec![0.5, 0.5], &[2]).unwrap();
+        let (c1, c2) = ode_coeffs(&s, 500);
+        let y = gradient_eps(&s, 500, &x, &e);
+        assert!((y.data()[0] as f64 - (c1 * 1.0 + c2 * 0.5)).abs() < 1e-5);
+        assert!((y.data()[1] as f64 - (c1 * -2.0 + c2 * 0.5)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn drift_integration_tracks_alpha_ratio() {
+        // For eps == 0 the PF-ODE reduces to dx/dt = f(t) x, whose exact
+        // solution scales with alpha(t): integrating from j=200 to j=800
+        // must reproduce alpha(800)/alpha(200) to first order.
+        let s = Schedule::default_ddpm();
+        let h = 1.0 / s.train_t as f64;
+        let mut x = 1.0f64;
+        for j in 200..800 {
+            let (c1, _) = ode_coeffs(&s, j);
+            x *= (c1 * h).exp();
+        }
+        let (a0, _) = s.alpha_sigma(200);
+        let (a1, _) = s.alpha_sigma(800);
+        let ratio_true = a1 / a0;
+        assert!(
+            (x - ratio_true).abs() / ratio_true < 1e-2,
+            "integrated {x} vs alpha ratio {ratio_true}"
+        );
+    }
+}

@@ -1,0 +1,103 @@
+//! DDPM noise schedule + inference timestep grids.
+//!
+//! Linear betas over `train_t` steps; `abar[j]` is indexed by grid point
+//! j in [0, train_t] with abar[0] = 1 (clean data), matching
+//! `python/compile/specs.py::alphas_cumprod` and `sampler_ref.ABAR`
+//! (cross-checked against `artifacts/goldens/abar.npy` in tests).
+
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub train_t: usize,
+    /// abar[j] for j in 0..=train_t; abar[0] = 1.
+    pub abar: Vec<f64>,
+}
+
+impl Schedule {
+    pub fn new(train_t: usize, beta_start: f64, beta_end: f64) -> Self {
+        let mut abar = Vec::with_capacity(train_t + 1);
+        abar.push(1.0);
+        let mut acc = 1.0;
+        for i in 0..train_t {
+            let beta = beta_start + (beta_end - beta_start) * i as f64 / (train_t - 1) as f64;
+            acc *= 1.0 - beta;
+            abar.push(acc);
+        }
+        Self { train_t, abar }
+    }
+
+    /// The paper's evaluation schedule (matches specs.py constants).
+    pub fn default_ddpm() -> Self {
+        Self::new(1000, 1e-4, 2e-2)
+    }
+
+    /// alpha_j = sqrt(abar_j), sigma_j = sqrt(1 - abar_j).
+    #[inline]
+    pub fn alpha_sigma(&self, j: usize) -> (f64, f64) {
+        let ab = self.abar[j];
+        (ab.sqrt(), (1.0 - ab).sqrt())
+    }
+
+    /// log-SNR half: lambda_j = log(alpha_j / sigma_j) (DPM-Solver's lambda).
+    pub fn lambda(&self, j: usize) -> f64 {
+        let (a, s) = self.alpha_sigma(j);
+        (a / s.max(1e-12)).ln()
+    }
+
+    /// Descending integer grid [train_t, ..., 0] with steps+1 nodes
+    /// (trailing spacing; matches sampler_ref.timestep_grid).
+    pub fn timestep_grid(&self, steps: usize) -> Vec<usize> {
+        (0..=steps)
+            .map(|i| {
+                let v = self.train_t as f64 * (1.0 - i as f64 / steps as f64);
+                v.round() as usize
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abar_monotone_and_bounded() {
+        let s = Schedule::default_ddpm();
+        assert_eq!(s.abar.len(), 1001);
+        assert_eq!(s.abar[0], 1.0);
+        for w in s.abar.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+        assert!(s.abar[1000] > 0.0 && s.abar[1000] < 1e-2);
+    }
+
+    #[test]
+    fn alpha_sigma_pythagorean() {
+        let s = Schedule::default_ddpm();
+        for j in [0, 1, 250, 500, 999, 1000] {
+            let (a, sg) = s.alpha_sigma(j);
+            assert!((a * a + sg * sg - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn lambda_decreasing_in_j() {
+        let s = Schedule::default_ddpm();
+        // higher noise (larger j) => lower log-SNR
+        assert!(s.lambda(100) > s.lambda(500));
+        assert!(s.lambda(500) > s.lambda(900));
+    }
+
+    #[test]
+    fn grid_endpoints_and_monotone() {
+        let s = Schedule::default_ddpm();
+        for steps in [5, 15, 25, 50] {
+            let g = s.timestep_grid(steps);
+            assert_eq!(g[0], 1000);
+            assert_eq!(*g.last().unwrap(), 0);
+            assert_eq!(g.len(), steps + 1);
+            for w in g.windows(2) {
+                assert!(w[1] < w[0]);
+            }
+        }
+    }
+}

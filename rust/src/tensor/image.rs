@@ -1,0 +1,131 @@
+//! Image utilities on [`Tensor`]s shaped [1, H, W, C] (or [H, W, C]).
+//!
+//! Mirrors python/compile/corpus.py where the two sides must agree
+//! (Sobel edge maps for the ControlNet pipeline) and provides the
+//! grayscale/resize helpers the demos and metrics use.
+
+use super::Tensor;
+
+fn hw(t: &Tensor) -> (usize, usize, usize) {
+    match *t.shape() {
+        [1, h, w, c] => (h, w, c),
+        [h, w, c] => (h, w, c),
+        _ => panic!("expected [1,H,W,C] or [H,W,C], got {:?}", t.shape()),
+    }
+}
+
+/// Channel-mean grayscale [H*W].
+pub fn grayscale(t: &Tensor) -> Vec<f32> {
+    let (h, w, c) = hw(t);
+    let d = t.data();
+    (0..h * w)
+        .map(|i| d[i * c..(i + 1) * c].iter().sum::<f32>() / c as f32)
+        .collect()
+}
+
+/// Sobel-magnitude edge map, thresholded at the 75th percentile —
+/// the exact recipe of corpus.edge_map (canny analog for ControlNet).
+pub fn edge_map(t: &Tensor) -> Tensor {
+    let (h, w, _c) = hw(t);
+    let g = grayscale(t);
+    let mut mag = vec![0.0f32; h * w];
+    for r in 0..h {
+        for col in 0..w {
+            let gx = if col >= 1 && col + 1 < w {
+                g[r * w + col + 1] - g[r * w + col - 1]
+            } else {
+                0.0
+            };
+            let gy = if r >= 1 && r + 1 < h {
+                g[(r + 1) * w + col] - g[(r - 1) * w + col]
+            } else {
+                0.0
+            };
+            mag[r * w + col] = (gx * gx + gy * gy).sqrt();
+        }
+    }
+    let mut sorted = mag.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let thr = sorted[(0.75 * (sorted.len() - 1) as f32) as usize].max(1e-6);
+    let data = mag.iter().map(|m| if *m > thr { 1.0 } else { 0.0 }).collect();
+    Tensor::new(data, &[1, h, w, 1]).expect("edge shape")
+}
+
+/// Nearest-neighbour resize to (nh, nw).
+pub fn resize_nearest(t: &Tensor, nh: usize, nw: usize) -> Tensor {
+    let (h, w, c) = hw(t);
+    let d = t.data();
+    let mut out = Vec::with_capacity(nh * nw * c);
+    for r in 0..nh {
+        let sr = (r * h / nh).min(h - 1);
+        for col in 0..nw {
+            let sc = (col * w / nw).min(w - 1);
+            out.extend_from_slice(&d[(sr * w + sc) * c..(sr * w + sc + 1) * c]);
+        }
+    }
+    Tensor::new(out, &[1, nh, nw, c]).expect("resize shape")
+}
+
+/// Global mean/std per channel (diagnostics).
+pub fn channel_stats(t: &Tensor) -> Vec<(f64, f64)> {
+    let (h, w, c) = hw(t);
+    let d = t.data();
+    (0..c)
+        .map(|ch| {
+            let vals: Vec<f64> = (0..h * w).map(|i| d[i * c + ch] as f64).collect();
+            let m = vals.iter().sum::<f64>() / vals.len() as f64;
+            let v = vals.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / vals.len() as f64;
+            (m, v.sqrt())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grayscale_averages_channels() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0], &[1, 1, 2, 3]).unwrap();
+        assert_eq!(grayscale(&t), vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn edge_map_finds_step_edge() {
+        // vertical step edge down the middle
+        let mut data = vec![0.0f32; 8 * 8];
+        for r in 0..8 {
+            for c in 4..8 {
+                data[r * 8 + c] = 1.0;
+            }
+        }
+        let t = Tensor::new(data, &[8, 8, 1]).unwrap();
+        let e = edge_map(&t);
+        assert_eq!(e.shape(), &[1, 8, 8, 1]);
+        let ed = e.data();
+        // columns 3..=4 border the step: should be marked in interior rows
+        let marked: usize = (1..7).map(|r| ed[r * 8 + 3] as usize + ed[r * 8 + 4] as usize).sum();
+        assert!(marked >= 6, "edge not detected: {marked}");
+        // far field stays unmarked
+        assert_eq!(ed[8 * 4], 0.0);
+    }
+
+    #[test]
+    fn resize_roundtrip_identity() {
+        let mut rng = crate::rng::Rng::new(1);
+        let t = Tensor::from_rng(&mut rng, &[1, 8, 8, 3]);
+        let same = resize_nearest(&t, 8, 8);
+        assert_eq!(same.data(), t.data());
+        let up = resize_nearest(&t, 16, 16);
+        assert_eq!(up.shape(), &[1, 16, 16, 3]);
+    }
+
+    #[test]
+    fn channel_stats_sane() {
+        let t = Tensor::full(&[1, 4, 4, 2], 0.5);
+        let s = channel_stats(&t);
+        assert_eq!(s.len(), 2);
+        assert!((s[0].0 - 0.5).abs() < 1e-9);
+        assert!(s[0].1 < 1e-9);
+    }
+}

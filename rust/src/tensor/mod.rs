@@ -1,0 +1,122 @@
+//! Shaped f32 host tensor + the dense ops the request path needs.
+//!
+//! Deliberately minimal (no ndarray offline): contiguous `Vec<f32>` with a
+//! shape vector. All SADA/solver math is elementwise or reductions, so this
+//! plus `ops` covers the entire L3 hot path. Heavy lifting (matmuls,
+//! attention) lives in the compiled HLO, never here.
+
+pub mod image;
+pub mod ops;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Self { data, shape: shape.to_vec() })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { data: vec![0.0; n], shape: shape.to_vec() }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Self { data: vec![v; n], shape: shape.to_vec() }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { data: vec![v], shape: vec![1] }
+    }
+
+    pub fn from_rng(rng: &mut crate::rng::Rng, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { data: rng.gaussian_vec(n), shape: shape.to_vec() }
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Row-major strides for the current shape.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn same_shape(&self, other: &Tensor) -> bool {
+        self.shape == other.shape
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![1.0; 6], &[2, 3]).is_ok());
+        assert!(Tensor::new(vec![1.0; 5], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn reshape_preserves_len() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        let t = t.reshape(&[6, 4]).unwrap();
+        assert_eq!(t.shape(), &[6, 4]);
+        assert!(t.reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+}

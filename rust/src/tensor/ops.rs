@@ -1,0 +1,195 @@
+//! Elementwise / reduction ops over [`Tensor`] used by solvers and SADA.
+//!
+//! These are the only host-side numeric kernels on the request path; they
+//! are O(pixels) per step (a 16x16x3 image is 768 floats) and benchmarked
+//! in `benches/bench_micro.rs` to stay well under one model execution.
+
+use super::Tensor;
+
+/// y <- a * x + y
+pub fn axpy(a: f32, x: &Tensor, y: &mut Tensor) {
+    debug_assert!(x.same_shape(y));
+    for (yi, xi) in y.data_mut().iter_mut().zip(x.data()) {
+        *yi += a * xi;
+    }
+}
+
+/// out = a*x + b*y (allocating)
+pub fn lincomb2(a: f32, x: &Tensor, b: f32, y: &Tensor) -> Tensor {
+    debug_assert!(x.same_shape(y));
+    let data = x
+        .data()
+        .iter()
+        .zip(y.data())
+        .map(|(xi, yi)| a * xi + b * yi)
+        .collect();
+    Tensor::new(data, x.shape()).expect("same shape")
+}
+
+/// out = a*x + b*y + c*z (allocating)
+pub fn lincomb3(a: f32, x: &Tensor, b: f32, y: &Tensor, c: f32, z: &Tensor) -> Tensor {
+    debug_assert!(x.same_shape(y) && y.same_shape(z));
+    let data = x
+        .data()
+        .iter()
+        .zip(y.data())
+        .zip(z.data())
+        .map(|((xi, yi), zi)| a * xi + b * yi + c * zi)
+        .collect();
+    Tensor::new(data, x.shape()).expect("same shape")
+}
+
+/// out = a*w + b*x + c*y + d*z (allocating) — the AM-3 update shape.
+pub fn lincomb4(
+    a: f32,
+    w: &Tensor,
+    b: f32,
+    x: &Tensor,
+    c: f32,
+    y: &Tensor,
+    d: f32,
+    z: &Tensor,
+) -> Tensor {
+    let data = w
+        .data()
+        .iter()
+        .zip(x.data())
+        .zip(y.data())
+        .zip(z.data())
+        .map(|(((wi, xi), yi), zi)| a * wi + b * xi + c * yi + d * zi)
+        .collect();
+    Tensor::new(data, w.shape()).expect("same shape")
+}
+
+pub fn scale(x: &Tensor, a: f32) -> Tensor {
+    let data = x.data().iter().map(|v| a * v).collect();
+    Tensor::new(data, x.shape()).expect("same shape")
+}
+
+pub fn add(x: &Tensor, y: &Tensor) -> Tensor {
+    lincomb2(1.0, x, 1.0, y)
+}
+
+pub fn sub(x: &Tensor, y: &Tensor) -> Tensor {
+    lincomb2(1.0, x, -1.0, y)
+}
+
+pub fn dot(x: &Tensor, y: &Tensor) -> f64 {
+    debug_assert!(x.same_shape(y));
+    x.data()
+        .iter()
+        .zip(y.data())
+        .map(|(a, b)| *a as f64 * *b as f64)
+        .sum()
+}
+
+pub fn norm2(x: &Tensor) -> f64 {
+    dot(x, x).sqrt()
+}
+
+pub fn l1(x: &Tensor) -> f64 {
+    x.data().iter().map(|v| v.abs() as f64).sum()
+}
+
+pub fn mean(x: &Tensor) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.data().iter().map(|v| *v as f64).sum::<f64>() / x.len() as f64
+}
+
+pub fn mse(x: &Tensor, y: &Tensor) -> f64 {
+    debug_assert!(x.same_shape(y));
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.data()
+        .iter()
+        .zip(y.data())
+        .map(|(a, b)| {
+            let d = (*a - *b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / x.len() as f64
+}
+
+/// Relative L1 change ||x - y||_1 / (||y||_1 + eps) — TeaCache's signal.
+pub fn rel_l1(x: &Tensor, y: &Tensor) -> f64 {
+    let num: f64 = x
+        .data()
+        .iter()
+        .zip(y.data())
+        .map(|(a, b)| (*a - *b).abs() as f64)
+        .sum();
+    num / (l1(y) + 1e-12)
+}
+
+/// Per-token dot products: x, y seen as [n_tokens, tok_len]; returns n dots.
+pub fn token_dots(x: &Tensor, y: &Tensor, n_tokens: usize) -> Vec<f64> {
+    debug_assert!(x.same_shape(y));
+    debug_assert_eq!(x.len() % n_tokens, 0);
+    let tl = x.len() / n_tokens;
+    let xd = x.data();
+    let yd = y.data();
+    (0..n_tokens)
+        .map(|i| {
+            let a = &xd[i * tl..(i + 1) * tl];
+            let b = &yd[i * tl..(i + 1) * tl];
+            a.iter().zip(b).map(|(p, q)| *p as f64 * *q as f64).sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::new(v.to_vec(), &[v.len()]).unwrap()
+    }
+
+    #[test]
+    fn axpy_matches_manual() {
+        let x = t(&[1.0, 2.0, 3.0]);
+        let mut y = t(&[10.0, 10.0, 10.0]);
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y.data(), &[12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn lincombs_agree() {
+        let a = t(&[1.0, -1.0]);
+        let b = t(&[0.5, 2.0]);
+        let c = t(&[3.0, 0.0]);
+        let d = t(&[1.0, 1.0]);
+        let r3 = lincomb3(2.0, &a, -1.0, &b, 0.5, &c);
+        assert_eq!(r3.data(), &[2.0 - 0.5 + 1.5, -2.0 - 2.0 + 0.0]);
+        let r4 = lincomb4(1.0, &a, 1.0, &b, 1.0, &c, 1.0, &d);
+        assert_eq!(r4.data(), &[5.5, 2.0]);
+    }
+
+    #[test]
+    fn norms_and_means() {
+        let x = t(&[3.0, 4.0]);
+        assert!((norm2(&x) - 5.0).abs() < 1e-12);
+        assert!((l1(&x) - 7.0).abs() < 1e-12);
+        assert!((mean(&x) - 3.5).abs() < 1e-12);
+        assert!((mse(&x, &t(&[3.0, 2.0])) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_l1_scale_free() {
+        let x = t(&[1.0, 1.0]);
+        let y = t(&[2.0, 2.0]);
+        assert!((rel_l1(&x, &y) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn token_dots_blocks() {
+        let x = Tensor::new(vec![1.0, 0.0, 2.0, 2.0], &[4]).unwrap();
+        let y = Tensor::new(vec![1.0, 1.0, -1.0, 1.0], &[4]).unwrap();
+        let d = token_dots(&x, &y, 2);
+        assert_eq!(d, vec![1.0, 0.0]);
+    }
+}

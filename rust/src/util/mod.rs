@@ -1,0 +1,4 @@
+//! Small substrates built from scratch (serde is unavailable offline).
+
+pub mod json;
+pub mod npy;

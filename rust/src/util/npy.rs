@@ -1,0 +1,167 @@
+//! Minimal .npy reader (numpy format v1/v2) for f32/f64/i32 arrays.
+//!
+//! Loads the prompt banks, golden tensors and edge maps the python compile
+//! path exports. Row-major (C-order) only, which is what numpy writes by
+//! default and all of our exporters use.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+pub fn read_npy<P: AsRef<Path>>(path: P) -> Result<NpyArray> {
+    let bytes = fs::read(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    parse_npy(&bytes)
+}
+
+pub fn read_npy_tensor<P: AsRef<Path>>(path: P) -> Result<Tensor> {
+    let arr = read_npy(path)?;
+    Tensor::new(arr.data, &arr.shape)
+}
+
+fn parse_npy(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[0..6] != b"\x93NUMPY" {
+        bail!("not an npy file");
+    }
+    let major = bytes[6];
+    let (header_len, header_start) = match major {
+        1 => (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10),
+        2 => (
+            u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+            12,
+        ),
+        v => bail!("unsupported npy version {v}"),
+    };
+    let header = std::str::from_utf8(&bytes[header_start..header_start + header_len])?;
+    let descr = extract_quoted(header, "descr").context("npy: missing descr")?;
+    if header.contains("'fortran_order': True") {
+        bail!("fortran-order npy not supported");
+    }
+    let shape = extract_shape(header)?;
+    let n: usize = shape.iter().product();
+    let data_start = header_start + header_len;
+    let body = &bytes[data_start..];
+    let data: Vec<f32> = match descr.as_str() {
+        "<f4" | "|f4" => {
+            if body.len() < n * 4 {
+                bail!("npy truncated: want {} f32, have {} bytes", n, body.len());
+            }
+            body.chunks_exact(4)
+                .take(n)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        }
+        "<f8" => {
+            if body.len() < n * 8 {
+                bail!("npy truncated");
+            }
+            body.chunks_exact(8)
+                .take(n)
+                .map(|c| {
+                    f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32
+                })
+                .collect()
+        }
+        "<i4" => body
+            .chunks_exact(4)
+            .take(n)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+            .collect(),
+        d => bail!("unsupported npy dtype {d:?}"),
+    };
+    if data.len() != n {
+        bail!("npy element count mismatch");
+    }
+    Ok(NpyArray { shape, data })
+}
+
+fn extract_quoted(header: &str, key: &str) -> Option<String> {
+    let pat = format!("'{key}':");
+    let at = header.find(&pat)? + pat.len();
+    let rest = header[at..].trim_start();
+    let quote = rest.chars().next()?;
+    if quote != '\'' && quote != '"' {
+        return None;
+    }
+    let rest = &rest[1..];
+    let end = rest.find(quote)?;
+    Some(rest[..end].to_string())
+}
+
+fn extract_shape(header: &str) -> Result<Vec<usize>> {
+    let at = header.find("'shape':").context("npy: missing shape")? + 8;
+    let rest = &header[at..];
+    let open = rest.find('(').context("npy: bad shape")?;
+    let close = rest.find(')').context("npy: bad shape")?;
+    let inner = &rest[open + 1..close];
+    let mut shape = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        shape.push(p.parse::<usize>().context("npy: bad dim")?);
+    }
+    if shape.is_empty() {
+        shape.push(1); // 0-d scalar
+    }
+    Ok(shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build a v1 npy byte stream.
+    fn build_npy(descr: &str, shape: &str, body: &[u8]) -> Vec<u8> {
+        let mut header = format!(
+            "{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape}, }}"
+        );
+        let pad = 64 - (10 + header.len() + 1) % 64;
+        header.push_str(&" ".repeat(pad % 64));
+        header.push('\n');
+        let mut out = b"\x93NUMPY\x01\x00".to_vec();
+        out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(body);
+        out
+    }
+
+    #[test]
+    fn parses_f32() {
+        let vals = [1.5f32, -2.0, 3.25, 0.0, 7.0, 8.0];
+        let body: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let npy = build_npy("<f4", "(2, 3)", &body);
+        let arr = parse_npy(&npy).unwrap();
+        assert_eq!(arr.shape, vec![2, 3]);
+        assert_eq!(arr.data, vals);
+    }
+
+    #[test]
+    fn parses_f64_downcast() {
+        let vals = [1.25f64, -0.5];
+        let body: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let npy = build_npy("<f8", "(2,)", &body);
+        let arr = parse_npy(&npy).unwrap();
+        assert_eq!(arr.data, vec![1.25f32, -0.5]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_npy(b"NOTNPYxxxxxx").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let npy = build_npy("<f4", "(4,)", &[0u8; 8]);
+        assert!(parse_npy(&npy).is_err());
+    }
+}

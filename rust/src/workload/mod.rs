@@ -1,0 +1,7 @@
+//! Workloads: the prompt bank (MS-COCO-val analog) and arrival traces.
+
+pub mod prompts;
+pub mod trace;
+
+pub use prompts::PromptBank;
+pub use trace::{ArrivalKind, TraceGen};

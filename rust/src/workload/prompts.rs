@@ -1,0 +1,102 @@
+//! Prompt bank: deterministic conditioning vectors standing in for the
+//! MS-COCO-2017 validation prompts (DESIGN.md SS1).
+//!
+//! Primary source is `artifacts/prompts.npy` (written by the compile path so
+//! the bank matches the training-time conditioning distribution exactly);
+//! tests without artifacts fall back to a seeded synthetic bank.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::util::npy;
+
+pub struct PromptBank {
+    conds: Vec<Tensor>,
+    pub cond_dim: usize,
+}
+
+impl PromptBank {
+    /// Load from an .npy file of shape [n, cond_dim].
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<PromptBank> {
+        let arr = npy::read_npy(path)?;
+        anyhow::ensure!(arr.shape.len() == 2, "prompt bank must be [n, d]");
+        let (n, d) = (arr.shape[0], arr.shape[1]);
+        let conds = (0..n)
+            .map(|i| Tensor::new(arr.data[i * d..(i + 1) * d].to_vec(), &[1, d]).unwrap())
+            .collect();
+        Ok(PromptBank { conds, cond_dim: d })
+    }
+
+    /// Synthetic fallback (unit-gaussian, tanh-squashed like the corpus).
+    pub fn synthetic(n: usize, cond_dim: usize, seed: u64) -> PromptBank {
+        let mut rng = Rng::new(seed);
+        let conds = (0..n)
+            .map(|_| {
+                let v: Vec<f32> = rng.gaussian_vec(cond_dim).iter().map(|x| x.tanh()).collect();
+                Tensor::new(v, &[1, cond_dim]).unwrap()
+            })
+            .collect();
+        PromptBank { conds, cond_dim }
+    }
+
+    /// artifacts/prompts.npy if present, else synthetic.
+    pub fn load_or_synthetic(dir: &Path, cond_dim: usize) -> PromptBank {
+        Self::load(dir.join("prompts.npy"))
+            .unwrap_or_else(|_| Self::synthetic(5000, cond_dim, 77))
+    }
+
+    pub fn len(&self) -> usize {
+        self.conds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.conds.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> &Tensor {
+        &self.conds[i % self.conds.len()]
+    }
+
+    /// Deterministic per-request seed derived from the prompt index.
+    pub fn seed_for(&self, i: usize) -> u64 {
+        0x5ADA_0000_0000 ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_bank_deterministic() {
+        let a = PromptBank::synthetic(10, 32, 1);
+        let b = PromptBank::synthetic(10, 32, 1);
+        assert_eq!(a.len(), 10);
+        assert_eq!(a.get(3).data(), b.get(3).data());
+        assert_ne!(a.get(3).data(), a.get(4).data());
+    }
+
+    #[test]
+    fn get_wraps_around() {
+        let a = PromptBank::synthetic(4, 8, 2);
+        assert_eq!(a.get(0).data(), a.get(4).data());
+    }
+
+    #[test]
+    fn seeds_are_distinct() {
+        let a = PromptBank::synthetic(4, 8, 3);
+        assert_ne!(a.seed_for(0), a.seed_for(1));
+        assert_eq!(a.seed_for(2), a.seed_for(2));
+    }
+
+    #[test]
+    fn values_squashed() {
+        let a = PromptBank::synthetic(16, 32, 4);
+        for i in 0..16 {
+            assert!(a.get(i).data().iter().all(|v| v.abs() <= 1.0));
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Arrival-trace generation for the serving benchmarks.
+//!
+//! Poisson (open-loop) and bursty (on/off modulated Poisson) arrival
+//! processes; each arrival carries a prompt index and request parameters.
+
+use crate::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Homogeneous Poisson at `rate_rps`.
+    Poisson,
+    /// On/off bursts: `burst_factor`x rate during bursts, idle otherwise.
+    Bursty,
+}
+
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    /// Offset from trace start, milliseconds.
+    pub at_ms: f64,
+    pub prompt_idx: usize,
+}
+
+pub struct TraceGen {
+    pub kind: ArrivalKind,
+    pub rate_rps: f64,
+    pub burst_factor: f64,
+    pub burst_period_s: f64,
+}
+
+impl TraceGen {
+    pub fn poisson(rate_rps: f64) -> Self {
+        Self { kind: ArrivalKind::Poisson, rate_rps, burst_factor: 4.0, burst_period_s: 5.0 }
+    }
+
+    pub fn bursty(rate_rps: f64, burst_factor: f64) -> Self {
+        Self { kind: ArrivalKind::Bursty, rate_rps, burst_factor, burst_period_s: 5.0 }
+    }
+
+    /// Generate `n` arrivals (sorted by time).
+    pub fn generate(&self, n: usize, seed: u64) -> Vec<Arrival> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(n);
+        let mut t_s = 0.0f64;
+        for i in 0..n {
+            let rate = match self.kind {
+                ArrivalKind::Poisson => self.rate_rps,
+                ArrivalKind::Bursty => {
+                    let phase = (t_s / self.burst_period_s).fract();
+                    if phase < 0.5 {
+                        self.rate_rps * self.burst_factor
+                    } else {
+                        self.rate_rps / self.burst_factor
+                    }
+                }
+            };
+            t_s += rng.exponential(rate.max(1e-9));
+            out.push(Arrival { at_ms: t_s * 1e3, prompt_idx: rng.below(5000) as usize });
+            let _ = i;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_approximately_respected() {
+        let g = TraceGen::poisson(10.0);
+        let tr = g.generate(2000, 1);
+        let total_s = tr.last().unwrap().at_ms / 1e3;
+        let rate = 2000.0 / total_s;
+        assert!((rate - 10.0).abs() < 1.0, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_sorted_and_deterministic() {
+        let g = TraceGen::poisson(5.0);
+        let a = g.generate(100, 7);
+        let b = g.generate(100, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_ms, y.at_ms);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].at_ms >= w[0].at_ms);
+        }
+    }
+
+    #[test]
+    fn bursty_has_higher_variance() {
+        let n = 3000;
+        let p = TraceGen::poisson(10.0).generate(n, 3);
+        let b = TraceGen::bursty(10.0, 6.0).generate(n, 3);
+        let var = |tr: &[Arrival]| {
+            let gaps: Vec<f64> = tr.windows(2).map(|w| w[1].at_ms - w[0].at_ms).collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>() / gaps.len() as f64
+        };
+        assert!(var(&b) > var(&p));
+    }
+}

@@ -1,0 +1,198 @@
+//! Integration: the serving coordinator end-to-end over real artifacts.
+//! Self-skips when artifacts/ has not been built.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use sada::coordinator::request::RequestId;
+use sada::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
+use sada::solvers::SolverKind;
+use sada::workload::PromptBank;
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("[skip] artifacts/ missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn submit_n(coord: &Coordinator, n: usize, steps: usize, accel: &str) -> mpsc::Receiver<sada::coordinator::ServeResponse> {
+    let bank = PromptBank::load_or_synthetic(std::path::Path::new("artifacts"), 32);
+    let (tx, rx) = mpsc::channel();
+    for i in 0..n {
+        coord
+            .submit(ServeRequest {
+                id: RequestId(i as u64),
+                model: "sd2_tiny".into(),
+                cond: bank.get(i).clone(),
+                seed: bank.seed_for(i),
+                steps,
+                guidance: 3.0,
+                accel: accel.into(),
+                submitted_at: Instant::now(),
+                reply: tx.clone(),
+            })
+            .unwrap();
+    }
+    rx
+}
+
+#[test]
+fn serves_all_requests_exactly_once() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(CoordinatorConfig {
+        models: vec!["sd2_tiny".into()],
+        solver: SolverKind::DpmPP,
+        max_wait_ms: 10.0,
+        ..Default::default()
+    })
+    .unwrap();
+    let n = 6;
+    let rx = submit_n(&coord, n, 10, "sada");
+    let mut ids: Vec<u64> = (0..n).map(|_| rx.recv().unwrap().id.0).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn batches_form_under_load() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(CoordinatorConfig {
+        models: vec!["sd2_tiny".into()],
+        solver: SolverKind::DpmPP,
+        max_wait_ms: 200.0,
+        ..Default::default()
+    })
+    .unwrap();
+    // burst of 8 identical-class baseline requests: must batch > 1
+    let rx = submit_n(&coord, 8, 10, "baseline");
+    let mut max_batch = 0;
+    for _ in 0..8 {
+        max_batch = max_batch.max(rx.recv().unwrap().batch_size);
+    }
+    assert!(max_batch > 1, "no batching happened (max batch {max_batch})");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn rejects_unknown_model_without_crashing() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(CoordinatorConfig {
+        models: vec!["sd2_tiny".into()],
+        solver: SolverKind::DpmPP,
+        max_wait_ms: 10.0,
+        ..Default::default()
+    })
+    .unwrap();
+    let (tx, rx) = mpsc::channel();
+    coord
+        .submit(ServeRequest {
+            id: RequestId(99),
+            model: "nope".into(),
+            cond: sada::Tensor::zeros(&[1, 32]),
+            seed: 0,
+            steps: 10,
+            guidance: 1.0,
+            accel: "sada".into(),
+            submitted_at: Instant::now(),
+            reply: tx,
+        })
+        .unwrap();
+    // rejected: the reply channel is dropped without a response
+    assert!(rx.recv().is_err());
+    // the coordinator still serves subsequent valid requests
+    let rx2 = submit_n(&coord, 2, 10, "baseline");
+    assert!(rx2.recv().is_ok());
+    assert!(rx2.recv().is_ok());
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn shutdown_drains_pending() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(CoordinatorConfig {
+        models: vec!["sd2_tiny".into()],
+        solver: SolverKind::DpmPP,
+        max_wait_ms: 500.0, // long deadline: requests are pending at shutdown
+        ..Default::default()
+    })
+    .unwrap();
+    let rx = submit_n(&coord, 3, 10, "baseline");
+    coord.shutdown().unwrap(); // must flush before joining
+    let mut got = 0;
+    while rx.recv().is_ok() {
+        got += 1;
+    }
+    assert_eq!(got, 3);
+}
+
+#[test]
+fn mixed_models_route_to_correct_solvers() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(CoordinatorConfig {
+        models: vec!["sd2_tiny".into(), "flux_tiny".into()],
+        solver: SolverKind::DpmPP,
+        max_wait_ms: 10.0,
+        ..Default::default()
+    })
+    .unwrap();
+    let bank = PromptBank::load_or_synthetic(std::path::Path::new("artifacts"), 32);
+    let (tx, rx) = mpsc::channel();
+    for (i, model) in ["sd2_tiny", "flux_tiny", "sd2_tiny"].iter().enumerate() {
+        coord
+            .submit(ServeRequest {
+                id: RequestId(i as u64),
+                model: model.to_string(),
+                cond: bank.get(i).clone(),
+                seed: bank.seed_for(i),
+                steps: 10,
+                guidance: 2.0,
+                accel: "baseline".into(),
+                submitted_at: Instant::now(),
+                reply: tx.clone(),
+            })
+            .unwrap();
+    }
+    drop(tx);
+    let mut got = 0;
+    while let Ok(resp) = rx.recv() {
+        assert!(resp.image.data().iter().all(|v| v.is_finite()));
+        got += 1;
+    }
+    assert_eq!(got, 3);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn metrics_reflect_served_requests() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(CoordinatorConfig {
+        models: vec!["sd2_tiny".into()],
+        solver: SolverKind::DpmPP,
+        max_wait_ms: 10.0,
+        ..Default::default()
+    })
+    .unwrap();
+    let rx = submit_n(&coord, 3, 10, "baseline");
+    for _ in 0..3 {
+        rx.recv().unwrap();
+    }
+    let text = coord.metrics_text();
+    assert!(text.contains("sada_requests_accepted_total 3"), "{text}");
+    assert!(text.contains("sada_e2e_latency_count 3"), "{text}");
+    coord.shutdown().unwrap();
+}

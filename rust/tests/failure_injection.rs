@@ -1,0 +1,132 @@
+//! Failure injection: the runtime and coordinator must fail loudly and
+//! cleanly on corrupted artifacts, wrong shapes and bad configuration —
+//! never with a segfault, hang, or silent wrong answer.
+
+use std::fs;
+
+use sada::runtime::{Manifest, ModelArgs, ModelBackend, Runtime};
+use sada::tensor::Tensor;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("sada_test_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_is_an_error() {
+    let d = tmpdir("nomanifest");
+    match Runtime::open(&d) {
+        Ok(_) => panic!("opening an empty dir must fail"),
+        Err(err) => assert!(format!("{err:#}").contains("manifest")),
+    }
+}
+
+#[test]
+fn corrupt_manifest_is_an_error() {
+    let d = tmpdir("badjson");
+    fs::write(d.join("manifest.json"), "{ not json").unwrap();
+    assert!(Runtime::open(&d).is_err());
+}
+
+#[test]
+fn manifest_missing_fields_is_an_error() {
+    assert!(Manifest::parse(r#"{"schedule": {}}"#).is_err());
+    assert!(Manifest::parse(r#"{"schedule": {"train_t": 10, "beta_start": 0.1, "beta_end": 0.2}}"#).is_err());
+}
+
+#[test]
+fn missing_hlo_file_is_an_error() {
+    let d = tmpdir("nohlo");
+    fs::write(
+        d.join("manifest.json"),
+        r#"{
+          "version": 1,
+          "schedule": {"train_t": 1000, "beta_start": 0.0001, "beta_end": 0.02},
+          "cond_dim": 32, "prune_buckets": [], "batch_buckets": [],
+          "models": {"m": {
+            "style": "unet", "predict": "eps", "img": [8,8,1], "patch": 2,
+            "d": 16, "heads": 2, "n_tokens": 16, "n_blocks": 1,
+            "has_control": false, "cond_dim": 32,
+            "variants": {"full": {"file": "missing.hlo.txt", "kind": "full",
+              "batch": 1, "n_keep": 0,
+              "inputs": [{"name": "x", "shape": [1,8,8,1], "dtype": "f32"}],
+              "outputs": [{"name": "out", "shape": [1,8,8,1], "dtype": "f32"}]}}
+          }}
+        }"#,
+    )
+    .unwrap();
+    let rt = Runtime::open(&d).unwrap();
+    let backend = rt.model_backend("m").unwrap();
+    let err = backend
+        .run("full", &ModelArgs { x: Some(Tensor::zeros(&[1, 8, 8, 1])), ..Default::default() })
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("missing.hlo.txt") || msg.contains("parsing"), "{msg}");
+}
+
+#[test]
+fn wrong_input_shape_is_rejected_before_execution() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("[skip] artifacts/ missing");
+        return;
+    }
+    let rt = Runtime::open("artifacts").unwrap();
+    let backend = rt.model_backend("sd2_tiny").unwrap();
+    // wrong image shape: must be caught by the manifest shape check
+    let err = backend
+        .run(
+            "full",
+            &ModelArgs {
+                x: Some(Tensor::zeros(&[1, 8, 8, 3])),
+                t: 0.5,
+                cond: Some(Tensor::zeros(&[1, 32])),
+                gs: 1.0,
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("shape"));
+    // wrong keep_idx length for the prune variant
+    let err = backend
+        .run(
+            "prune50",
+            &ModelArgs {
+                x: Some(Tensor::zeros(&[1, 16, 16, 3])),
+                t: 0.5,
+                cond: Some(Tensor::zeros(&[1, 32])),
+                gs: 1.0,
+                keep_idx: Some(vec![0, 1, 2]),
+                caches: Some(Tensor::zeros(&[5, 2, 64, 64])),
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("keep_idx"));
+}
+
+#[test]
+fn missing_named_arg_is_an_error() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("[skip] artifacts/ missing");
+        return;
+    }
+    let rt = Runtime::open("artifacts").unwrap();
+    let backend = rt.model_backend("sd2_tiny").unwrap();
+    let err = backend
+        .run("full", &ModelArgs { x: None, ..Default::default() })
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("args.x"));
+}
+
+#[test]
+fn unknown_variant_is_an_error() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("[skip] artifacts/ missing");
+        return;
+    }
+    let rt = Runtime::open("artifacts").unwrap();
+    let backend = rt.model_backend("sd2_tiny").unwrap();
+    assert!(backend.run("bogus_variant", &ModelArgs::default()).is_err());
+}

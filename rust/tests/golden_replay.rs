@@ -1,0 +1,118 @@
+//! Integration: rust runtime must reproduce the python-side goldens through
+//! the compiled artifacts (same HLO, same numbers), and the rust schedule
+//! must match the python abar table bit-for-bit (within f64 rounding).
+//!
+//! Skipped gracefully when artifacts/ has not been built.
+
+use sada::runtime::{ModelArgs, ModelBackend, Runtime};
+use sada::solvers::Schedule;
+use sada::tensor::Tensor;
+use sada::util::npy;
+
+fn artifacts() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("[skip] artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn schedule_matches_python_abar() {
+    let Some(dir) = artifacts() else { return };
+    let golden = npy::read_npy(format!("{dir}/goldens/abar.npy")).expect("abar golden");
+    let s = Schedule::default_ddpm();
+    assert_eq!(golden.data.len(), s.abar.len());
+    for (i, (g, r)) in golden.data.iter().zip(&s.abar).enumerate() {
+        assert!(
+            (*g as f64 - r).abs() < 1e-6,
+            "abar[{i}]: python {g} vs rust {r}"
+        );
+    }
+}
+
+fn replay_golden(model: &str) {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::open(dir).expect("runtime");
+    let x = npy::read_npy_tensor(format!("{dir}/goldens/{model}_x.npy")).unwrap();
+    let cond = npy::read_npy_tensor(format!("{dir}/goldens/{model}_cond.npy")).unwrap();
+    let want = npy::read_npy_tensor(format!("{dir}/goldens/{model}_out.npy")).unwrap();
+    let backend = rt.model_backend(model).unwrap();
+    let out = backend
+        .run(
+            "full",
+            &ModelArgs {
+                x: Some(x),
+                t: 0.5,
+                cond: Some(cond),
+                gs: 3.0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(out.out.shape(), want.shape());
+    let mut max_err = 0.0f32;
+    for (a, b) in out.out.data().iter().zip(want.data()) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(
+        max_err < 1e-3,
+        "{model}: max |rust - python| = {max_err} (HLO replay mismatch)"
+    );
+}
+
+#[test]
+fn sd2_golden_replay() {
+    replay_golden("sd2_tiny");
+}
+
+#[test]
+fn flux_golden_replay() {
+    replay_golden("flux_tiny");
+}
+
+#[test]
+fn manifest_lists_all_variant_files() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::open(dir).expect("runtime");
+    for (mname, m) in &rt.manifest.models {
+        for (vname, v) in &m.variants {
+            let p = std::path::Path::new(dir).join(&v.file);
+            assert!(p.exists(), "{mname}/{vname}: missing {p:?}");
+            assert!(!v.inputs.is_empty(), "{mname}/{vname}: empty inputs");
+            assert!(!v.outputs.is_empty(), "{mname}/{vname}: empty outputs");
+        }
+    }
+}
+
+#[test]
+fn deep_feature_and_caches_are_nonzero() {
+    // regression for the elided-constants bug: a zero-weight artifact
+    // produces all-zero outputs; real trained weights must not.
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::open(dir).expect("runtime");
+    let backend = rt.model_backend("sd2_tiny").unwrap();
+    let mut rng = sada::rng::Rng::new(3);
+    let out = backend
+        .run(
+            "full",
+            &ModelArgs {
+                x: Some(Tensor::from_rng(&mut rng, &[1, 16, 16, 3])),
+                t: 0.7,
+                cond: Some(Tensor::from_rng(&mut rng, &[1, 32])),
+                gs: 2.0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert!(sada::tensor::ops::norm2(&out.out) > 1e-3, "eps output ~ 0");
+    assert!(
+        sada::tensor::ops::norm2(out.caches.as_ref().unwrap()) > 1e-3,
+        "caches ~ 0"
+    );
+    assert!(
+        sada::tensor::ops::norm2(out.deep.as_ref().unwrap()) > 1e-3,
+        "deep ~ 0"
+    );
+}

@@ -1,0 +1,127 @@
+//! Property tests of the SADA accelerator over the analytic GM backend:
+//! randomized seeds/steps, invariants that must hold for every trajectory.
+
+use sada::pipeline::{GenRequest, NoAccel, Pipeline, StepMode};
+use sada::runtime::mock::GmBackend;
+use sada::runtime::ModelBackend;
+use sada::sada::{Sada, SadaConfig};
+use sada::solvers::SolverKind;
+use sada::tensor::{ops, Tensor};
+use sada::testutil::{check, Gen, UsizeIn};
+
+struct Case {
+    seed: u64,
+    steps: usize,
+    solver: SolverKind,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Case(seed={}, steps={}, solver={})", self.seed, self.steps, self.solver.name())
+    }
+}
+
+impl Clone for Case {
+    fn clone(&self) -> Self {
+        Case { seed: self.seed, steps: self.steps, solver: self.solver }
+    }
+}
+
+struct CaseGen;
+
+impl Gen for CaseGen {
+    type Value = Case;
+    fn generate(&self, rng: &mut sada::rng::Rng) -> Case {
+        let steps = UsizeIn(10, 60).generate(rng);
+        let solver = if rng.below(2) == 0 { SolverKind::Euler } else { SolverKind::DpmPP };
+        Case { seed: rng.next_u64(), steps, solver }
+    }
+}
+
+fn req(seed: u64, steps: usize) -> GenRequest {
+    let mut rng = sada::rng::Rng::new(seed ^ 0xABCD);
+    GenRequest {
+        cond: Tensor::from_rng(&mut rng, &[1, 32]),
+        seed,
+        guidance: 2.0,
+        steps,
+        edge: None,
+    }
+}
+
+#[test]
+fn prop_sada_invariants_hold_across_cases() {
+    let backend = GmBackend::new(17);
+    check(99, 25, &CaseGen, |case| {
+        let pipe = Pipeline::new(&backend, case.solver);
+        let r = req(case.seed, case.steps);
+        let base = pipe.generate(&r, &mut NoAccel).map_err(|e| e.to_string())?;
+        let mut accel = Sada::with_default(backend.info(), case.steps);
+        let fast = pipe.generate(&r, &mut accel).map_err(|e| e.to_string())?;
+
+        // 1. step accounting is exact
+        if fast.stats.modes.len() != case.steps {
+            return Err(format!("recorded {} modes for {} steps", fast.stats.modes.len(), case.steps));
+        }
+        // 2. boundary steps always full
+        if fast.stats.modes[0] != StepMode::Full || *fast.stats.modes.last().unwrap() != StepMode::Full {
+            return Err(format!("boundary not full: {}", fast.stats.mode_trace()));
+        }
+        // 3. NFE never exceeds the baseline
+        if fast.stats.nfe > base.stats.nfe {
+            return Err("sada used more NFE than baseline".into());
+        }
+        // 4. output finite and bounded relative to baseline scale
+        if !fast.image.data().iter().all(|v| v.is_finite()) {
+            return Err("non-finite output".into());
+        }
+        let rmse = ops::mse(&base.image, &fast.image).sqrt();
+        let scale = ops::norm2(&base.image) / (base.image.len() as f64).sqrt();
+        if rmse > 1.0 * scale.max(0.2) {
+            return Err(format!(
+                "diverged: rmse={rmse:.4} scale={scale:.4} trace={}",
+                fast.stats.mode_trace()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_warmup_respected_for_all_configs() {
+    let backend = GmBackend::new(23);
+    check(7, 15, &UsizeIn(1, 6), |warmup| {
+        let mut cfg = SadaConfig::default();
+        cfg.warmup = *warmup;
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let mut accel = Sada::new(backend.info(), cfg);
+        let r = req(5, 20);
+        let fast = pipe.generate(&r, &mut accel).map_err(|e| e.to_string())?;
+        for (i, m) in fast.stats.modes.iter().enumerate().take(*warmup.min(&20)) {
+            if *m != StepMode::Full {
+                return Err(format!("step {i} not full during warmup {warmup}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_determinism_across_repeats() {
+    let backend = GmBackend::new(29);
+    check(3, 10, &UsizeIn(10, 40), |steps| {
+        let pipe = Pipeline::new(&backend, SolverKind::Euler);
+        let r = req(11, *steps);
+        let mut a1 = Sada::with_default(backend.info(), *steps);
+        let mut a2 = Sada::with_default(backend.info(), *steps);
+        let r1 = pipe.generate(&r, &mut a1).map_err(|e| e.to_string())?;
+        let r2 = pipe.generate(&r, &mut a2).map_err(|e| e.to_string())?;
+        if r1.image.data() != r2.image.data() {
+            return Err("nondeterministic output".into());
+        }
+        if r1.stats.mode_trace() != r2.stats.mode_trace() {
+            return Err("nondeterministic mode trace".into());
+        }
+        Ok(())
+    });
+}
