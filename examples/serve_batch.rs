@@ -1,12 +1,15 @@
 //! End-to-end serving driver (the mandated E2E validation example).
 //!
-//! Starts the coordinator (router -> dynamic batcher -> PJRT engine), sends
-//! a Poisson request stream against the sd2_tiny model, and reports
-//! latency percentiles + throughput for baseline vs SADA under identical
-//! load. Results are recorded in EXPERIMENTS.md.
+//! Starts the coordinator (router -> dynamic batcher -> sharded engine
+//! pool), sends a Poisson request stream against the sd2_tiny model, and
+//! reports latency percentiles + throughput for baseline vs SADA under
+//! identical load. With `workers > 0` a single pool size is used; with
+//! `workers == 0` (the default) the engine pool is swept over {1, 2, 4}
+//! workers so the speedup table gains its scaling dimension. Results are
+//! recorded in EXPERIMENTS.md.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_batch -- [n] [rate_rps] [steps]
+//! make artifacts && cargo run --release --example serve_batch -- [n] [rate_rps] [steps] [workers]
 //! ```
 
 fn main() -> anyhow::Result<()> {
@@ -14,5 +17,10 @@ fn main() -> anyhow::Result<()> {
     let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
     let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(3.0);
     let steps: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(50);
-    sada::exp::serving::run("artifacts", "sd2_tiny", n, rate, steps)
+    let workers: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(0);
+    if workers == 0 {
+        sada::exp::serving::run_scaling("artifacts", "sd2_tiny", n, rate, steps, &[1, 2, 4], false)
+    } else {
+        sada::exp::serving::run_with_load("artifacts", "sd2_tiny", n, rate, steps, false, workers)
+    }
 }

@@ -1,0 +1,92 @@
+"""Deterministic stand-in for `hypothesis` used when the real package is
+unavailable (offline CI images). Only the surface the test-suite uses is
+implemented: `given`, `settings`, and `strategies.{integers,sampled_from,
+floats}`. Each `@given` test runs `max_examples` deterministic draws from a
+seeded PRNG, so the sweep is reproducible run-to-run.
+
+Activated by python/conftest.py via sys.modules injection; a real
+hypothesis install always takes precedence.
+"""
+
+import functools
+import inspect
+import random
+import types
+
+_DEFAULT_MAX_EXAMPLES = 10
+_SEED = 0x5ADA
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng):
+        return self._sampler(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements):
+    opts = list(elements)
+    if not opts:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def given(**strategies):
+    if not strategies:
+        raise TypeError("fallback @given supports keyword strategies only")
+
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        passthrough = [
+            p for name, p in sig.parameters.items() if name not in strategies
+        ]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest must see only the non-strategy parameters (fixtures);
+        # drop the __wrapped__ breadcrumb so signature introspection does
+        # not resurrect the strategy parameters.
+        wrapper.__signature__ = sig.replace(parameters=passthrough)
+        wrapper.__dict__.pop("__wrapped__", None)
+        return wrapper
+
+    return decorate
+
+
+def settings(*_args, **kwargs):
+    max_examples = kwargs.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def install(sys_modules):
+    """Register this module as `hypothesis` (+ `.strategies`) in sys.modules."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    strat = types.ModuleType("hypothesis.strategies")
+    strat.integers = integers
+    strat.sampled_from = sampled_from
+    strat.floats = floats
+    hyp.strategies = strat
+    sys_modules["hypothesis"] = hyp
+    sys_modules["hypothesis.strategies"] = strat

@@ -1,7 +1,16 @@
 """Make `pytest python/tests/` work from the repo root: the compile
-package lives in python/, so put that directory on sys.path."""
+package lives in python/, so put that directory on sys.path. When the
+real `hypothesis` package is missing (offline images), install the
+deterministic fallback before test modules import it."""
 
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install(sys.modules)

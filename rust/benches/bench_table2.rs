@@ -1,5 +1,7 @@
 //! Timing-only regeneration of Table 2's speedup column: SADA latency
-//! across step budgets {50, 25, 15} on sd2/sdxl x {dpmpp, euler}.
+//! across step budgets {50, 25, 15} on sd2/sdxl x {dpmpp, euler}, plus the
+//! serving-scaling dimension: coordinator throughput at {1, 2, 4} engine
+//! workers on a multi-request trace.
 
 use sada::pipeline::{GenRequest, NoAccel, Pipeline};
 use sada::runtime::{ModelBackend, Runtime};
@@ -50,5 +52,10 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
+
+    // scaling dimension: the same trace through 1, 2 and 4 engine workers
+    // (coordinator pool); throughput must not regress with workers
+    println!();
+    sada::exp::serving::run_scaling("artifacts", "sd2_tiny", 16, 50.0, 15, &[1, 2, 4], false)?;
     Ok(())
 }

@@ -16,7 +16,7 @@ pub struct Cli {
 }
 
 /// Keys that are flags (no value argument).
-const FLAG_KEYS: &[&str] = &["help", "dump", "verbose", "quiet", "markdown", "bursty"];
+const FLAG_KEYS: &[&str] = &["help", "dump", "verbose", "quiet", "markdown", "bursty", "scale"];
 
 pub fn parse(args: &[String]) -> Result<Cli> {
     let mut cli = Cli::default();
@@ -71,6 +71,13 @@ mod tests {
         let cli = parse(&s(&["x", "--dump", "--steps", "25"])).unwrap();
         assert!(cli.options.bool_or("dump", false));
         assert_eq!(cli.options.usize_or("steps", 0), 25);
+    }
+
+    #[test]
+    fn scale_flag_and_workers_value() {
+        let cli = parse(&s(&["serve", "--scale", "--workers", "4"])).unwrap();
+        assert!(cli.options.bool_or("scale", false));
+        assert_eq!(cli.options.usize_or("workers", 1), 4);
     }
 
     #[test]

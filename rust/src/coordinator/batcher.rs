@@ -64,15 +64,15 @@ impl DynamicBatcher {
     pub fn poll(&mut self, now_ms: f64) -> Option<Batch> {
         let (head_t, head) = self.queue.front()?;
         let deadline_hit = now_ms - head_t >= self.max_wait_ms;
-        // count the head-compatible prefix-by-scan
-        let compat_idx: Vec<usize> = self
+        // the head always counts as its own class even when self-comparison
+        // fails (NaN guidance): a batch is never empty and the head always
+        // exits, so a malformed request cannot livelock the queue
+        let n_compat = self
             .queue
             .iter()
-            .enumerate()
-            .filter(|(_, (_, r))| Self::compatible(r, head))
-            .map(|(i, _)| i)
-            .collect();
-        let n_compat = compat_idx.len();
+            .filter(|(_, r)| Self::compatible(r, head))
+            .count()
+            .max(1);
         let want = if n_compat >= self.max_bucket() {
             self.max_bucket()
         } else if deadline_hit {
@@ -80,14 +80,20 @@ impl DynamicBatcher {
         } else {
             return None;
         };
-        let take: Vec<usize> = compat_idx.into_iter().take(want).collect();
+        // head leads the batch (it defines the class); partition the rest in
+        // one O(n) pass, keeping non-members in arrival order
+        let (_, head) = self.queue.pop_front().expect("nonempty");
         let mut requests = Vec::with_capacity(want);
-        // remove by index, descending so indices stay valid
-        for i in take.iter().rev() {
-            let (_, r) = self.queue.remove(*i).expect("index valid");
-            requests.push(r);
+        requests.push(head);
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        for (t, r) in self.queue.drain(..) {
+            if requests.len() < want && Self::compatible(&r, &requests[0]) {
+                requests.push(r);
+            } else {
+                rest.push_back((t, r));
+            }
         }
-        requests.reverse(); // restore FIFO order
+        self.queue = rest;
         Some(Batch { requests })
     }
 
@@ -204,6 +210,76 @@ mod tests {
             }
             if uniq != seen {
                 return Err("id set mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nan_guidance_request_still_exits() {
+        // NaN guidance never matches any class (not even its own), but the
+        // head must still flush alone at its deadline — an empty batch here
+        // used to livelock the dispatcher poll loop
+        let mut b = DynamicBatcher::new(vec![2, 4], 50.0);
+        let mut r0 = req(0, "m", 50);
+        r0.guidance = f32::NAN;
+        b.push(0.0, r0);
+        b.push(0.0, req(1, "m", 50));
+        assert!(b.poll(10.0).is_none());
+        let batch = b.poll(60.0).expect("deadline flush");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.requests[0].id.0, 0);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn property_no_loss_no_duplication_large_mixed_classes() {
+        // the O(n) partition pass must preserve the invariants at larger n
+        // and with interleaved compatibility classes: every request exits
+        // exactly once and FIFO order holds within each class
+        use crate::testutil::{check, UsizeIn};
+        check(17, 8, &UsizeIn(100, 400), |n| {
+            let mut b = DynamicBatcher::new(vec![2, 4, 8], 20.0);
+            let mut now = 0.0;
+            let mut rng = crate::rng::Rng::new(*n as u64 + 1);
+            let mut out: Vec<u64> = Vec::new();
+            let steps_of = |i: usize| [25, 50, 75][i % 3];
+            for i in 0..*n {
+                b.push(now, req(i as u64, "m", steps_of(i)));
+                now += rng.uniform_in(0.0, 3.0);
+                while let Some(batch) = b.poll(now) {
+                    // batches are class-pure
+                    let s0 = batch.requests[0].steps;
+                    assert!(batch.requests.iter().all(|r| r.steps == s0));
+                    out.extend(batch.requests.iter().map(|r| r.id.0));
+                }
+            }
+            for _ in 0..200 {
+                now += 25.0;
+                while let Some(batch) = b.poll(now) {
+                    out.extend(batch.requests.iter().map(|r| r.id.0));
+                }
+                if out.len() == *n {
+                    break;
+                }
+            }
+            if out.len() != *n {
+                return Err(format!("lost requests: {} of {n}", out.len()));
+            }
+            let uniq: std::collections::BTreeSet<u64> = out.iter().cloned().collect();
+            if uniq.len() != *n {
+                return Err("duplicated requests".into());
+            }
+            // FIFO within each class: ids of one class leave in ascending order
+            for class in 0..3usize {
+                let ids: Vec<u64> = out
+                    .iter()
+                    .copied()
+                    .filter(|id| (*id as usize) % 3 == class)
+                    .collect();
+                if ids.windows(2).any(|w| w[0] > w[1]) {
+                    return Err(format!("class {class} left out of FIFO order: {ids:?}"));
+                }
             }
             Ok(())
         });

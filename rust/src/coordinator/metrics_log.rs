@@ -3,6 +3,15 @@
 //! coordinator needs; consumed by the serving harness and the perf pass).
 
 use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+
+/// Poison-tolerant metrics lock: a panic on one engine worker while it held
+/// the lock must not cascade into aborting every other worker that later
+/// records a metric. Counters/histograms stay valid after any partial
+/// update, so recovering the poisoned guard is safe.
+pub fn lock_metrics(m: &Mutex<MetricsLog>) -> MutexGuard<'_, MetricsLog> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Log-scaled latency histogram (bounded memory, ~8% bucket resolution).
 #[derive(Clone, Debug)]
@@ -104,6 +113,28 @@ impl MetricsLog {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// One engine worker finished one batch: bump its per-worker counter
+    /// (`worker_{i}_batches`) plus the pool-wide total.
+    pub fn record_worker_batch(&mut self, worker: usize) {
+        self.inc(&format!("worker_{worker}_batches"), 1);
+        self.inc("batches_executed", 1);
+    }
+
+    pub fn worker_batches(&self, worker: usize) -> u64 {
+        self.counter(&format!("worker_{worker}_batches"))
+    }
+
+    /// Time a ready batch sat in the shared work queue before a worker
+    /// picked it up (the dispatch-side half of end-to-end latency).
+    pub fn observe_queue_wait_ms(&mut self, ms: f64) {
+        self.observe_ms("batch_queue_wait", ms);
+    }
+
+    /// Pure execution time of one batch on a worker (the engine-side half).
+    pub fn observe_execute_ms(&mut self, ms: f64) {
+        self.observe_ms("batch_execute", ms);
+    }
+
     pub fn histogram(&self, name: &str) -> Option<&Histogram> {
         self.histograms.get(name)
     }
@@ -171,5 +202,40 @@ mod tests {
         let h = Histogram::latency_default();
         assert_eq!(h.quantile_ms(0.5), 0.0);
         assert_eq!(h.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn per_worker_counters_and_pool_total() {
+        let mut m = MetricsLog::new();
+        m.record_worker_batch(0);
+        m.record_worker_batch(2);
+        m.record_worker_batch(2);
+        assert_eq!(m.worker_batches(0), 1);
+        assert_eq!(m.worker_batches(1), 0);
+        assert_eq!(m.worker_batches(2), 2);
+        assert_eq!(m.counter("batches_executed"), 3);
+        m.observe_queue_wait_ms(1.5);
+        m.observe_execute_ms(12.0);
+        let text = m.render();
+        assert!(text.contains("sada_worker_0_batches_total 1"));
+        assert!(text.contains("sada_worker_2_batches_total 2"));
+        assert!(text.contains("sada_batch_queue_wait_count 1"));
+        assert!(text.contains("sada_batch_execute_count 1"));
+    }
+
+    #[test]
+    fn lock_metrics_recovers_from_poison() {
+        use std::sync::{Arc, Mutex};
+        let m = Arc::new(Mutex::new(MetricsLog::new()));
+        let m2 = m.clone();
+        // poison the lock: panic while holding the guard
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("injected panic while holding metrics lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock should be poisoned");
+        lock_metrics(&m).inc("after_poison", 1);
+        assert_eq!(lock_metrics(&m).counter("after_poison"), 1);
     }
 }

@@ -1,11 +1,12 @@
-//! Serving coordinator: router + dynamic batcher + engine worker.
+//! Serving coordinator: router + dynamic batcher + sharded engine pool.
 //!
 //! The serving front-end of the framework (vLLM-router-style): requests
 //! enter through [`Coordinator::submit`], a router validates and assigns
 //! them to per-model queues, a dynamic batcher groups compatible requests
-//! into the compiled batch buckets under a max-wait deadline, and the
-//! engine thread (the exclusive owner of the PJRT runtime) executes each
-//! batch as one lockstep SADA-accelerated sampling run.
+//! into the compiled batch buckets under a max-wait deadline, and a pool
+//! of `n_workers` engine workers — each the exclusive owner of its own
+//! PJRT runtime handle — pulls ready batches off a shared work queue and
+//! executes each as one lockstep SADA-accelerated sampling run.
 
 pub mod batcher;
 pub mod metrics_log;

@@ -32,14 +32,25 @@ impl Router {
                 if req.steps == 0 || req.steps > 1000 {
                     bail!("invalid steps {}", req.steps);
                 }
+                if !req.guidance.is_finite() {
+                    // NaN never equals itself, so a non-finite guidance can
+                    // never join a compatibility class — reject at ingress
+                    bail!("invalid guidance {}", req.guidance);
+                }
                 Ok(*ix)
             }
             None => bail!("unknown model {:?}", req.model),
         }
     }
 
+    /// Model names ordered by queue index, so `model_names()[route(req)?]`
+    /// is always the model the request was routed to.
     pub fn model_names(&self) -> Vec<String> {
-        self.models.keys().cloned().collect()
+        let mut names = vec![String::new(); self.models.len()];
+        for (name, ix) in &self.models {
+            names[*ix] = name.clone();
+        }
+        names
     }
 }
 
@@ -67,6 +78,16 @@ mod tests {
     }
 
     #[test]
+    fn rejects_non_finite_guidance() {
+        let r = Router::new(&["a".into()]);
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut rq = req("a", 50);
+            rq.guidance = bad;
+            assert!(r.route(&rq).is_err(), "guidance {bad} must be rejected");
+        }
+    }
+
+    #[test]
     fn routes_known_models() {
         let r = Router::new(&["a".into(), "b".into()]);
         assert_eq!(r.n_queues(), 2);
@@ -74,6 +95,19 @@ mod tests {
         let qb = r.route(&req("b", 50)).unwrap();
         assert_ne!(qa, qb);
         assert_eq!(qa, r.route(&req("a", 25)).unwrap()); // deterministic
+    }
+
+    #[test]
+    fn model_names_align_with_queue_indices() {
+        // regression: BTreeMap iteration order is alphabetical, not queue
+        // order — with ["sd2_tiny", "flux_tiny"] the dispatcher used to
+        // execute queue 0 (sd2_tiny) under the name "flux_tiny"
+        let r = Router::new(&["sd2_tiny".into(), "flux_tiny".into()]);
+        let names = r.model_names();
+        for model in ["sd2_tiny", "flux_tiny"] {
+            let q = r.route(&req(model, 50)).unwrap();
+            assert_eq!(names[q], model);
+        }
     }
 
     #[test]

@@ -1,22 +1,35 @@
 //! The coordinator: ingress channel -> router -> per-model dynamic batcher
-//! -> engine worker (exclusive owner of the PJRT runtime).
+//! -> sharded engine worker pool.
 //!
-//! Single engine thread by design: the PJRT CPU client is not Sync and this
-//! testbed has one core; the architecture still exercises the full serving
-//! shape (async ingress, bounded queues, deadline-driven batch formation,
-//! lockstep batched execution) and the engine loop is where a multi-device
-//! deployment would fan out.
+//! Ownership model (multi-worker by design):
+//!
+//! * a single **dispatcher** thread owns ingress, the [`Router`] and every
+//!   per-model [`DynamicBatcher`]; it never touches a runtime. Batch
+//!   formation therefore stays strictly FIFO within a compatibility class
+//!   regardless of how many engines execute.
+//! * `n_workers` **engine workers** each own their *own* [`Runtime`] handle
+//!   (the PJRT client is `!Sync`, so runtimes are never shared) and pull
+//!   ready batches from a shared work queue. Each worker keeps a
+//!   per-`(model, accel, steps)` accelerator reuse pool so `Sada`/baseline
+//!   state is recycled instead of re-boxed per batch.
+//!
+//! Invariants preserved from the single-engine design (property-tested in
+//! `tests/coordinator_integration.rs` at 1, 2 and 4 workers): FIFO batch
+//! formation within a compatibility class, bounded wait, and no request
+//! lost or duplicated. Shutdown drains: ingress closes, the dispatcher
+//! flushes every batcher under expired deadlines, closes the work queue,
+//! and the workers exit once the queue is empty.
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use std::sync::{Arc, Mutex};
-
 use super::batcher::DynamicBatcher;
-use super::metrics_log::MetricsLog;
+use super::metrics_log::{lock_metrics, MetricsLog};
 use super::request::{ServeRequest, ServeResponse};
 use super::router::Router;
 use crate::baselines::{AdaptiveDiffusion, DeepCache, TeaCache};
@@ -34,6 +47,9 @@ pub struct CoordinatorConfig {
     pub max_wait_ms: f64,
     /// Ingress queue capacity (backpressure bound).
     pub queue_cap: usize,
+    /// Engine workers in the pool; each owns its own `Runtime` handle.
+    /// Values < 1 are treated as 1.
+    pub n_workers: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -45,15 +61,116 @@ impl Default for CoordinatorConfig {
             batch_buckets: vec![2, 4, 8],
             max_wait_ms: 40.0,
             queue_cap: 256,
+            n_workers: 1,
+        }
+    }
+}
+
+/// One formed batch queued for execution.
+struct WorkItem {
+    model: String,
+    requests: Vec<ServeRequest>,
+    /// When the dispatcher enqueued the batch (queue-wait accounting).
+    ready_at: Instant,
+}
+
+/// Shared dispatcher -> worker-pool queue: FIFO, condvar-signalled, and
+/// **bounded** — a full queue blocks the dispatcher's push, which stops
+/// ingress draining, which fills the ingress `sync_channel`, which blocks
+/// `submit()`. That chain is the serving path's end-to-end backpressure.
+struct WorkQueue {
+    state: Mutex<WorkQueueState>,
+    /// Signalled when an item is pushed or the queue closes (pop side).
+    cv_ready: Condvar,
+    /// Signalled when an item is popped or the queue closes (push side).
+    cv_free: Condvar,
+    /// Maximum pending batches (in-flight bound).
+    cap: usize,
+}
+
+struct WorkQueueState {
+    items: VecDeque<WorkItem>,
+    closed: bool,
+    /// Workers still able to execute batches; see [`WorkQueue::worker_failed`].
+    alive: usize,
+}
+
+impl WorkQueue {
+    fn new(n_workers: usize, cap: usize) -> Self {
+        Self {
+            state: Mutex::new(WorkQueueState {
+                items: VecDeque::new(),
+                closed: false,
+                alive: n_workers,
+            }),
+            cv_ready: Condvar::new(),
+            cv_free: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, WorkQueueState> {
+        // a worker panicking mid-push/pop must not wedge its siblings
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Block until there is capacity, then enqueue. Pushing into a closed
+    /// queue drops the item instead: its reply channels fail fast.
+    fn push(&self, item: WorkItem) {
+        let mut st = self.lock();
+        while st.items.len() >= self.cap && !st.closed {
+            st = self.cv_free.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        if st.closed {
+            return;
+        }
+        st.items.push_back(item);
+        self.cv_ready.notify_one();
+    }
+
+    fn close(&self) {
+        self.lock().closed = true;
+        self.cv_ready.notify_all();
+        self.cv_free.notify_all();
+    }
+
+    /// A worker is exiting on a fatal error. Returns true when it was the
+    /// last live worker — the caller must then keep popping (and dropping)
+    /// items until close, so queued requests fail fast via their dropped
+    /// reply channels instead of leaving clients blocked forever.
+    fn worker_failed(&self) -> bool {
+        let mut st = self.lock();
+        st.alive = st.alive.saturating_sub(1);
+        st.alive == 0
+    }
+
+    /// Block until an item is available; `None` once closed and drained.
+    fn pop(&self) -> Option<WorkItem> {
+        let mut st = self.lock();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.cv_free.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv_ready.wait(st).unwrap_or_else(|p| p.into_inner());
         }
     }
 }
 
 pub struct Coordinator {
     ingress: Option<SyncSender<ServeRequest>>,
-    worker: Option<JoinHandle<Result<()>>>,
+    dispatcher: Option<JoinHandle<Result<()>>>,
+    workers: Vec<JoinHandle<Result<()>>>,
     metrics: Arc<Mutex<MetricsLog>>,
 }
+
+/// Accelerator reuse-pool key: one recycled accelerator per compatibility
+/// class a worker has seen. `Pipeline::generate*` resets the accelerator at
+/// the start of every run, so recycling is state-safe.
+type AccelKey = (String, String, usize); // (model, accel, steps)
 
 fn accel_for(name: &str, info: &crate::runtime::ModelInfo, steps: usize) -> Box<dyn Accelerator> {
     match name {
@@ -67,19 +184,57 @@ fn accel_for(name: &str, info: &crate::runtime::ModelInfo, steps: usize) -> Box<
 
 impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let n_workers = cfg.n_workers.max(1);
         let (tx, rx) = mpsc::sync_channel::<ServeRequest>(cfg.queue_cap);
         let metrics = Arc::new(Mutex::new(MetricsLog::new()));
+        lock_metrics(&metrics).set_gauge("workers", n_workers as f64);
+        // one executing + one queued batch per worker keeps the pool busy
+        // without letting in-flight work grow unboundedly
+        let queue = Arc::new(WorkQueue::new(n_workers, 2 * n_workers));
+
+        // on any spawn failure, close the queue before returning so
+        // already-spawned workers exit instead of blocking in pop() forever
+        let mut workers = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            let cfg_i = cfg.clone();
+            let queue_i = queue.clone();
+            let metrics_i = metrics.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("sada-engine-{i}"))
+                .spawn(move || worker_loop(i, cfg_i, queue_i, metrics_i));
+            match spawned {
+                Ok(handle) => workers.push(handle),
+                Err(e) => {
+                    queue.close();
+                    return Err(e).with_context(|| format!("spawning engine worker {i}"));
+                }
+            }
+        }
+
         let m2 = metrics.clone();
-        let worker = std::thread::Builder::new()
-            .name("sada-engine".into())
-            .spawn(move || engine_loop(cfg, rx, m2))
-            .context("spawning engine thread")?;
-        Ok(Coordinator { ingress: Some(tx), worker: Some(worker), metrics })
+        let q2 = queue.clone();
+        let dispatcher = match std::thread::Builder::new()
+            .name("sada-dispatch".into())
+            .spawn(move || dispatch_loop(cfg, rx, q2, m2))
+        {
+            Ok(handle) => handle,
+            Err(e) => {
+                queue.close();
+                return Err(e).context("spawning dispatcher thread");
+            }
+        };
+
+        Ok(Coordinator {
+            ingress: Some(tx),
+            dispatcher: Some(dispatcher),
+            workers,
+            metrics,
+        })
     }
 
     /// Snapshot of the serving metrics in text exposition format.
     pub fn metrics_text(&self) -> String {
-        self.metrics.lock().expect("metrics lock").render()
+        lock_metrics(&self.metrics).render()
     }
 
     /// Submit a request (blocks only when the ingress queue is full —
@@ -92,36 +247,85 @@ impl Coordinator {
             .map_err(|_| anyhow::anyhow!("coordinator is shut down"))
     }
 
-    /// Graceful shutdown: drains the queue, then joins the engine.
+    /// Graceful shutdown: drains ingress and every batcher, then joins the
+    /// dispatcher and all engine workers. Returns the first thread error.
     pub fn shutdown(mut self) -> Result<()> {
         drop(self.ingress.take());
-        if let Some(h) = self.worker.take() {
-            h.join().map_err(|_| anyhow::anyhow!("engine panicked"))??;
+        let mut first_err: Option<anyhow::Error> = None;
+        if let Some(h) = self.dispatcher.take() {
+            match h.join() {
+                Ok(Err(e)) => first_err = Some(e),
+                Err(_) => first_err = Some(anyhow::anyhow!("dispatcher panicked")),
+                Ok(Ok(())) => {}
+            }
         }
-        Ok(())
+        for (i, h) in self.workers.drain(..).enumerate() {
+            match h.join() {
+                Ok(Err(e)) if first_err.is_none() => first_err = Some(e),
+                Err(_) if first_err.is_none() => {
+                    first_err = Some(anyhow::anyhow!("engine worker {i} panicked"))
+                }
+                _ => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
         drop(self.ingress.take());
-        if let Some(h) = self.worker.take() {
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn engine_loop(
+/// Floor for the deadline-aware ingest timeout: an already-expired batch
+/// deadline must not degenerate into a zero-duration `recv_timeout` spin.
+pub(crate) const MIN_INGEST_TIMEOUT: Duration = Duration::from_micros(500);
+/// Idle-poll ceiling when no batch deadline is pending.
+pub(crate) const MAX_INGEST_TIMEOUT: Duration = Duration::from_millis(50);
+
+/// Timeout for the dispatcher's blocking ingest given the soonest batch
+/// deadline in milliseconds (`f64::INFINITY` when nothing is pending).
+pub(crate) fn ingest_timeout(next_deadline_ms: f64) -> Duration {
+    if next_deadline_ms.is_finite() {
+        Duration::from_secs_f64(next_deadline_ms.max(0.0) / 1e3)
+            .clamp(MIN_INGEST_TIMEOUT, MAX_INGEST_TIMEOUT)
+    } else {
+        MAX_INGEST_TIMEOUT
+    }
+}
+
+/// Dispatcher: owns ingress + batch formation; execution is the pool's job.
+fn dispatch_loop(
     cfg: CoordinatorConfig,
     rx: Receiver<ServeRequest>,
+    queue: Arc<WorkQueue>,
     metrics: Arc<Mutex<MetricsLog>>,
 ) -> Result<()> {
-    // The engine thread owns the runtime exclusively (PJRT client is !Sync).
-    let rt = Runtime::open(&cfg.artifacts_dir)?;
+    // close the queue on every exit path, including panic-unwind: workers
+    // blocked in pop() must never outlive the dispatcher
+    struct CloseGuard(Arc<WorkQueue>);
+    impl Drop for CloseGuard {
+        fn drop(&mut self) {
+            self.0.close();
+        }
+    }
+    let _close = CloseGuard(queue.clone());
+
     let router = Router::new(&cfg.models);
     let mut batchers: Vec<DynamicBatcher> = (0..router.n_queues())
         .map(|_| DynamicBatcher::new(cfg.batch_buckets.clone(), cfg.max_wait_ms))
         .collect();
+    let model_names = router.model_names();
     let start = Instant::now();
     let now_ms = |s: Instant| s.elapsed().as_secs_f64() * 1e3;
     let mut open = true;
@@ -132,73 +336,115 @@ fn engine_loop(
             .iter()
             .filter_map(|b| b.next_deadline_in(now_ms(start)))
             .fold(f64::INFINITY, f64::min);
-        let timeout = if wait.is_finite() {
-            Duration::from_secs_f64((wait / 1e3).clamp(0.0, 0.05))
-        } else {
-            Duration::from_millis(50)
-        };
         if open {
-            match rx.recv_timeout(timeout) {
-                Ok(req) => match router.route(&req) {
-                    Ok(q) => {
-                        metrics.lock().unwrap().inc("requests_accepted", 1);
-                        batchers[q].push(now_ms(start), req)
-                    }
-                    Err(e) => {
-                        // reject: dropping the reply channel signals the error
-                        metrics.lock().unwrap().inc("requests_rejected", 1);
-                        eprintln!("[coordinator] rejected request: {e}");
-                        drop(req);
-                    }
-                },
+            let mut ingest = |req: ServeRequest| match router.route(&req) {
+                Ok(q) => {
+                    lock_metrics(&metrics).inc("requests_accepted", 1);
+                    batchers[q].push(now_ms(start), req);
+                }
+                Err(e) => {
+                    // reject: dropping the reply channel signals the error
+                    lock_metrics(&metrics).inc("requests_rejected", 1);
+                    eprintln!("[coordinator] rejected request: {e}");
+                }
+            };
+            match rx.recv_timeout(ingest_timeout(wait)) {
+                Ok(req) => ingest(req),
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => open = false,
             }
             // opportunistically drain without blocking
             while let Ok(req) = rx.try_recv() {
-                match router.route(&req) {
-                    Ok(q) => {
-                        metrics.lock().unwrap().inc("requests_accepted", 1);
-                        batchers[q].push(now_ms(start), req)
-                    }
-                    Err(e) => {
-                        metrics.lock().unwrap().inc("requests_rejected", 1);
-                        eprintln!("[coordinator] rejected request: {e}");
-                    }
-                }
+                ingest(req);
             }
-            metrics.lock().unwrap().set_gauge(
+            lock_metrics(&metrics).set_gauge(
                 "queue_depth",
                 batchers.iter().map(|b| b.pending()).sum::<usize>() as f64,
             );
         }
-        // 2) execute ready batches
-        let t = now_ms(start);
-        for (q, model) in router.model_names().iter().enumerate() {
+        // 2) hand ready batches to the worker pool
+        let t = if open {
+            now_ms(start)
+        } else {
+            // closed: force-flush everything under expired deadlines
+            now_ms(start) + cfg.max_wait_ms + 1.0
+        };
+        for (q, model) in model_names.iter().enumerate() {
             while let Some(batch) = batchers[q].poll(t) {
-                execute_batch(&rt, &cfg, model, batch.requests, &metrics)?;
-            }
-        }
-        if !open {
-            // when closed, force-flush remaining under expired deadlines
-            let t = now_ms(start) + cfg.max_wait_ms + 1.0;
-            for (q, model) in router.model_names().iter().enumerate() {
-                while let Some(batch) = batchers[q].poll(t) {
-                    execute_batch(&rt, &cfg, model, batch.requests, &metrics)?;
-                }
+                queue.push(WorkItem {
+                    model: model.clone(),
+                    requests: batch.requests,
+                    ready_at: Instant::now(),
+                });
             }
         }
     }
     Ok(())
 }
 
+/// One engine worker: exclusive owner of its `Runtime`, recycling
+/// accelerators per compatibility class. A failed batch drops its reply
+/// channels (the per-request error signal) but never kills the worker.
+fn worker_loop(
+    worker: usize,
+    cfg: CoordinatorConfig,
+    queue: Arc<WorkQueue>,
+    metrics: Arc<Mutex<MetricsLog>>,
+) -> Result<()> {
+    // fires on fatal Err return AND panic-unwind: the last worker to die
+    // drains the queue (dropping items fails their requests fast via the
+    // reply channels) so clients are never left blocked on a batch that no
+    // live worker will ever pop
+    struct DeadWorkerGuard {
+        queue: Arc<WorkQueue>,
+        metrics: Arc<Mutex<MetricsLog>>,
+        disarmed: bool,
+    }
+    impl Drop for DeadWorkerGuard {
+        fn drop(&mut self) {
+            if self.disarmed {
+                return;
+            }
+            lock_metrics(&self.metrics).inc("worker_failures", 1);
+            if self.queue.worker_failed() {
+                while self.queue.pop().is_some() {}
+            }
+        }
+    }
+    let mut guard = DeadWorkerGuard {
+        queue: queue.clone(),
+        metrics: metrics.clone(),
+        disarmed: false,
+    };
+
+    let rt = Runtime::open(&cfg.artifacts_dir)
+        .with_context(|| format!("engine worker {worker}: opening runtime"))?;
+    let mut accel_pool: HashMap<AccelKey, Box<dyn Accelerator>> = HashMap::new();
+    while let Some(item) = queue.pop() {
+        lock_metrics(&metrics)
+            .observe_queue_wait_ms(item.ready_at.elapsed().as_secs_f64() * 1e3);
+        match execute_batch(&rt, &cfg, worker, item, &metrics, &mut accel_pool) {
+            Ok(()) => {}
+            Err(e) => {
+                eprintln!("[engine worker {worker}] batch failed: {e:#}");
+                lock_metrics(&metrics).inc("batches_failed", 1);
+            }
+        }
+    }
+    guard.disarmed = true;
+    Ok(())
+}
+
 fn execute_batch(
     rt: &Runtime,
     cfg: &CoordinatorConfig,
-    model: &str,
-    requests: Vec<ServeRequest>,
+    worker: usize,
+    item: WorkItem,
     metrics: &Arc<Mutex<MetricsLog>>,
+    accel_pool: &mut HashMap<AccelKey, Box<dyn Accelerator>>,
 ) -> Result<()> {
+    let WorkItem { model, requests, ready_at: _ } = item;
+    let model = model.as_str();
     let backend = rt.model_backend(model)?;
     // flow-matching models require the flow solver regardless of the
     // configured default (the manifest's predict field is authoritative)
@@ -209,7 +455,10 @@ fn execute_batch(
     };
     let pipe = Pipeline::new(&backend, solver);
     let steps = requests[0].steps;
-    let mut accel = accel_for(&requests[0].accel, backend.info(), steps);
+    let key: AccelKey = (model.to_string(), requests[0].accel.clone(), steps);
+    let accel = accel_pool
+        .entry(key)
+        .or_insert_with(|| accel_for(&requests[0].accel, backend.info(), steps));
     let gen_reqs: Vec<GenRequest> = requests
         .iter()
         .map(|r| GenRequest {
@@ -226,6 +475,7 @@ fn execute_batch(
             .info()
             .variants
             .contains_key(&format!("full_b{}", gen_reqs.len()));
+    let t0 = Instant::now();
     let results = if batched_ok {
         pipe.generate_batch(&gen_reqs, accel.as_mut())?
     } else {
@@ -236,14 +486,17 @@ fn execute_batch(
         out
     };
     let bsz = requests.len();
+    // record batch metrics BEFORE sending replies: a client that has seen
+    // every response must also see every batch accounted in the metrics
     {
-        let mut m = metrics.lock().unwrap();
-        m.inc("batches_executed", 1);
+        let mut m = lock_metrics(metrics);
+        m.observe_execute_ms(t0.elapsed().as_secs_f64() * 1e3);
+        m.record_worker_batch(worker);
         m.inc(&format!("batch_size_{bsz}"), 1);
     }
     for (req, res) in requests.into_iter().zip(results) {
         let latency_ms = req.submitted_at.elapsed().as_secs_f64() * 1e3;
-        metrics.lock().unwrap().observe_ms("e2e_latency", latency_ms);
+        lock_metrics(metrics).observe_ms("e2e_latency", latency_ms);
         let _ = req.reply.send(ServeResponse {
             id: req.id,
             image: res.image,
@@ -253,4 +506,88 @@ fn execute_batch(
         });
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ingest_timeout_has_positive_floor() {
+        // regression: an expired deadline used to yield a zero-duration
+        // recv_timeout, busy-spinning the engine loop
+        assert_eq!(ingest_timeout(0.0), MIN_INGEST_TIMEOUT);
+        assert_eq!(ingest_timeout(-25.0), MIN_INGEST_TIMEOUT);
+        assert!(ingest_timeout(0.1) >= MIN_INGEST_TIMEOUT);
+        assert!(ingest_timeout(0.0) > Duration::ZERO);
+    }
+
+    #[test]
+    fn ingest_timeout_tracks_deadline_and_caps() {
+        let d = ingest_timeout(10.0);
+        assert!(d >= Duration::from_millis(9) && d <= Duration::from_millis(11), "{d:?}");
+        assert_eq!(ingest_timeout(1e9), MAX_INGEST_TIMEOUT);
+        assert_eq!(ingest_timeout(f64::INFINITY), MAX_INGEST_TIMEOUT);
+    }
+
+    #[test]
+    fn work_queue_fifo_and_close_semantics() {
+        let q = WorkQueue::new(1, 8);
+        for i in 0..3u64 {
+            q.push(WorkItem {
+                model: format!("m{i}"),
+                requests: Vec::new(),
+                ready_at: Instant::now(),
+            });
+        }
+        assert_eq!(q.pop().unwrap().model, "m0");
+        assert_eq!(q.pop().unwrap().model, "m1");
+        q.close();
+        // closed but non-empty: remaining items still drain
+        assert_eq!(q.pop().unwrap().model, "m2");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn only_last_failed_worker_drains() {
+        let q = WorkQueue::new(2, 8);
+        assert!(!q.worker_failed(), "a live worker remains: no drain");
+        assert!(q.worker_failed(), "last worker down: caller must drain");
+    }
+
+    #[test]
+    fn work_queue_push_blocks_at_capacity_until_pop() {
+        let q = Arc::new(WorkQueue::new(1, 1));
+        let item = |m: &str| WorkItem {
+            model: m.into(),
+            requests: Vec::new(),
+            ready_at: Instant::now(),
+        };
+        q.push(item("a"));
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || {
+            q2.push(item("b")); // must block: capacity 1
+            true
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!pusher.is_finished(), "push past capacity must block");
+        assert_eq!(q.pop().unwrap().model, "a"); // frees a slot
+        assert!(pusher.join().unwrap());
+        assert_eq!(q.pop().unwrap().model, "b");
+    }
+
+    #[test]
+    fn work_queue_unblocks_waiters_on_close() {
+        let q = Arc::new(WorkQueue::new(1, 8));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop().is_none());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap(), "blocked pop must return None on close");
+    }
+
+    #[test]
+    fn default_config_is_single_worker() {
+        assert_eq!(CoordinatorConfig::default().n_workers, 1);
+    }
 }

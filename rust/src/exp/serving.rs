@@ -23,7 +23,9 @@ pub struct ServingReport {
     pub mean_nfe: f64,
 }
 
-/// Drive `n` requests at `rate_rps` (open loop) with accelerator `accel`.
+/// Drive `n` requests at `rate_rps` (open loop) with accelerator `accel`
+/// through a pool of `workers` engine workers.
+#[allow(clippy::too_many_arguments)]
 pub fn drive(
     artifacts: &str,
     model: &str,
@@ -32,6 +34,7 @@ pub fn drive(
     rate_rps: f64,
     steps: usize,
     bursty: bool,
+    workers: usize,
 ) -> Result<ServingReport> {
     let cfg = CoordinatorConfig {
         artifacts_dir: artifacts.to_string(),
@@ -40,6 +43,7 @@ pub fn drive(
         batch_buckets: vec![2, 4, 8],
         max_wait_ms: 30.0,
         queue_cap: 512,
+        n_workers: workers,
     };
     let coord = Coordinator::start(cfg)?;
     let bank = PromptBank::load_or_synthetic(std::path::Path::new(artifacts), 32);
@@ -99,7 +103,13 @@ pub fn drive(
 /// Mixed-model serving: sd2 and flux requests interleaved through one
 /// coordinator (two router queues, separate batchers) — exercises routing
 /// isolation under load.
-pub fn drive_mixed(artifacts: &str, n: usize, rate_rps: f64, steps: usize) -> Result<ServingReport> {
+pub fn drive_mixed(
+    artifacts: &str,
+    n: usize,
+    rate_rps: f64,
+    steps: usize,
+    workers: usize,
+) -> Result<ServingReport> {
     let cfg = CoordinatorConfig {
         artifacts_dir: artifacts.to_string(),
         models: vec!["sd2_tiny".to_string(), "flux_tiny".to_string()],
@@ -107,6 +117,7 @@ pub fn drive_mixed(artifacts: &str, n: usize, rate_rps: f64, steps: usize) -> Re
         batch_buckets: vec![2, 4, 8],
         max_wait_ms: 30.0,
         queue_cap: 512,
+        n_workers: workers,
     };
     let coord = Coordinator::start(cfg)?;
     let bank = PromptBank::load_or_synthetic(std::path::Path::new(artifacts), 32);
@@ -161,9 +172,10 @@ pub fn drive_mixed(artifacts: &str, n: usize, rate_rps: f64, steps: usize) -> Re
 /// The `serve` subcommand / serve_batch example body: baseline vs SADA
 /// under identical load.
 pub fn run(artifacts: &str, model: &str, n: usize, rate_rps: f64, steps: usize) -> Result<()> {
-    run_with_load(artifacts, model, n, rate_rps, steps, false)
+    run_with_load(artifacts, model, n, rate_rps, steps, false, 1)
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn run_with_load(
     artifacts: &str,
     model: &str,
@@ -171,15 +183,18 @@ pub fn run_with_load(
     rate_rps: f64,
     steps: usize,
     bursty: bool,
+    workers: usize,
 ) -> Result<()> {
     let load = if bursty { "bursty" } else { "Poisson" };
     let mut table = Table::new(
-        &format!("E2E serving — {model}, {load} {rate_rps} rps, n={n}, {steps} steps"),
+        &format!(
+            "E2E serving — {model}, {load} {rate_rps} rps, n={n}, {steps} steps, {workers} workers"
+        ),
         &["Accel", "Thrpt rps", "p50 ms", "p95 ms", "p99 ms", "Mean batch", "Mean NFE"],
     );
     let mut reports = Vec::new();
     for accel in ["baseline", "sada"] {
-        let r = drive(artifacts, model, accel, n, rate_rps, steps, bursty)?;
+        let r = drive(artifacts, model, accel, n, rate_rps, steps, bursty, workers)?;
         table.row(vec![
             r.accel.clone(),
             f2(r.throughput_rps),
@@ -196,5 +211,44 @@ pub fn run_with_load(
         let speed = reports[0].latency.p50_ms() / reports[1].latency.p50_ms().max(1e-9);
         println!("SADA p50 latency speedup under load: {}", speedup(speed));
     }
+    Ok(())
+}
+
+/// Worker-count scaling sweep: the speedup table's scaling dimension.
+/// Drives the same trace through pools of each size in `worker_counts` for
+/// baseline and SADA, reporting throughput and the scaling factor relative
+/// to the smallest pool of the same accelerator.
+#[allow(clippy::too_many_arguments)]
+pub fn run_scaling(
+    artifacts: &str,
+    model: &str,
+    n: usize,
+    rate_rps: f64,
+    steps: usize,
+    worker_counts: &[usize],
+    bursty: bool,
+) -> Result<()> {
+    let load = if bursty { "bursty" } else { "Poisson" };
+    let mut table = Table::new(
+        &format!("Serving scaling — {model}, {load} {rate_rps} rps, n={n}, {steps} steps"),
+        &["Accel", "Workers", "Thrpt rps", "Scaling", "p50 ms", "p99 ms", "Mean batch"],
+    );
+    for accel in ["baseline", "sada"] {
+        let mut base_rps: Option<f64> = None;
+        for &w in worker_counts {
+            let r = drive(artifacts, model, accel, n, rate_rps, steps, bursty, w)?;
+            let base = *base_rps.get_or_insert(r.throughput_rps);
+            table.row(vec![
+                r.accel.clone(),
+                format!("{w}"),
+                f2(r.throughput_rps),
+                speedup(r.throughput_rps / base.max(1e-9)),
+                f2(r.latency.p50_ms()),
+                f2(r.latency.p99_ms()),
+                f2(r.mean_batch),
+            ]);
+        }
+    }
+    table.print();
     Ok(())
 }

@@ -16,7 +16,9 @@ const USAGE: &str = "sada-serve <command> [options]
 
 commands:
   generate   generate one sample (--model sd2_tiny --steps 50 --prompt 0 --accel sada)
-  serve      E2E serving benchmark (--model sd2_tiny --n 32 --rate 2.0 --steps 50)
+  serve      E2E serving benchmark (--model sd2_tiny --n 32 --rate 2.0 --steps 50
+             --workers 2; --scale sweeps pool sizes in powers of two up to
+             --workers, default {1, 2, 4})
   table1     main results table        (--samples 64 --steps 50)
   table2     few-step ablation         (--samples 32)
   ablate     SADA component ablation    (--samples 16 --steps 50)
@@ -44,6 +46,26 @@ fn main() -> Result<()> {
     let steps = o.usize_or("steps", 50);
     match cli.subcommand.as_str() {
         "generate" => generate(&artifacts, o)?,
+        "serve" if o.bool_or("scale", false) => {
+            // sweep pool sizes in powers of two up to --workers (default 4)
+            let max_w = o.usize_or("workers", 4).max(1);
+            let mut counts = Vec::new();
+            let mut w = 1;
+            while w < max_w {
+                counts.push(w);
+                w *= 2;
+            }
+            counts.push(max_w);
+            exp::serving::run_scaling(
+                &artifacts,
+                o.str_or("model", "sd2_tiny"),
+                o.usize_or("n", 24),
+                o.f64_or("rate", 2.0),
+                steps,
+                &counts,
+                o.bool_or("bursty", false),
+            )?
+        }
         "serve" => exp::serving::run_with_load(
             &artifacts,
             o.str_or("model", "sd2_tiny"),
@@ -51,6 +73,7 @@ fn main() -> Result<()> {
             o.f64_or("rate", 2.0),
             steps,
             o.bool_or("bursty", false),
+            o.usize_or("workers", 1),
         )?,
         "table1" => exp::table1::run(&artifacts, o.usize_or("samples", 64), steps)?,
         "table2" => exp::table2::run(&artifacts, o.usize_or("samples", 32))?,

@@ -176,6 +176,111 @@ fn mixed_models_route_to_correct_solvers() {
 }
 
 #[test]
+fn pool_serves_all_requests_exactly_once_across_worker_counts() {
+    if !have_artifacts() {
+        return;
+    }
+    // the no-loss/no-duplication invariant must hold for every pool size
+    for workers in [1usize, 2, 4] {
+        let coord = Coordinator::start(CoordinatorConfig {
+            models: vec!["sd2_tiny".into()],
+            solver: SolverKind::DpmPP,
+            max_wait_ms: 10.0,
+            n_workers: workers,
+            ..Default::default()
+        })
+        .unwrap();
+        let n = 12;
+        let rx = submit_n(&coord, n, 10, "sada");
+        let mut ids: Vec<u64> = (0..n).map(|_| rx.recv().unwrap().id.0).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "workers={workers}");
+        coord.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn pool_attributes_every_batch_to_exactly_one_worker() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(CoordinatorConfig {
+        models: vec!["sd2_tiny".into()],
+        solver: SolverKind::DpmPP,
+        max_wait_ms: 10.0,
+        n_workers: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    let n = 16;
+    let rx = submit_n(&coord, n, 10, "baseline");
+    for _ in 0..n {
+        rx.recv().unwrap();
+    }
+    let text = coord.metrics_text();
+    let counter = |name: &str| -> u64 {
+        text.lines()
+            .find_map(|l| l.strip_prefix(&format!("sada_{name}_total ")))
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(0)
+    };
+    let total = counter("batches_executed");
+    assert!(total > 0, "{text}");
+    let per_worker: u64 = (0..4).map(|i| counter(&format!("worker_{i}_batches"))).sum();
+    assert_eq!(per_worker, total, "per-worker counters must sum to the pool total:\n{text}");
+    assert!(text.contains("sada_batch_queue_wait_count"), "{text}");
+    assert!(text.contains("sada_batch_execute_count"), "{text}");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn shutdown_drains_pending_with_multiworker_pool() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(CoordinatorConfig {
+        models: vec!["sd2_tiny".into()],
+        solver: SolverKind::DpmPP,
+        max_wait_ms: 500.0, // long deadline: requests are pending at shutdown
+        n_workers: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    let rx = submit_n(&coord, 5, 10, "baseline");
+    coord.shutdown().unwrap(); // must flush + drain the pool before joining
+    let mut got = 0;
+    while rx.recv().is_ok() {
+        got += 1;
+    }
+    assert_eq!(got, 5);
+}
+
+#[test]
+fn single_worker_completes_fifo_within_class() {
+    if !have_artifacts() {
+        return;
+    }
+    // with one engine worker, completion order within a compatibility
+    // class must equal submission order (FIFO formation + serial execution)
+    let coord = Coordinator::start(CoordinatorConfig {
+        models: vec!["sd2_tiny".into()],
+        solver: SolverKind::DpmPP,
+        max_wait_ms: 10.0,
+        n_workers: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let n = 10;
+    let rx = submit_n(&coord, n, 10, "baseline");
+    let ids: Vec<u64> = (0..n).map(|_| rx.recv().unwrap().id.0).collect();
+    assert!(
+        ids.windows(2).all(|w| w[0] < w[1]),
+        "single-worker completion must be FIFO: {ids:?}"
+    );
+    coord.shutdown().unwrap();
+}
+
+#[test]
 fn metrics_reflect_served_requests() {
     if !have_artifacts() {
         return;

@@ -72,6 +72,76 @@ fn flux_golden_replay() {
     replay_golden("flux_tiny");
 }
 
+/// Golden-replay determinism across the engine pool: the same request set
+/// submitted to a 1-worker and a 4-worker coordinator must produce
+/// byte-identical images per request id (the pool adds concurrency, never
+/// nondeterminism).
+#[test]
+fn serving_outputs_bit_identical_across_worker_counts() {
+    let Some(dir) = artifacts() else { return };
+    use sada::coordinator::request::RequestId;
+    use sada::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
+    use sada::solvers::SolverKind;
+    use sada::workload::PromptBank;
+    use std::collections::BTreeMap;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    let run = |workers: usize| -> BTreeMap<u64, Vec<f32>> {
+        let coord = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: dir.into(),
+            models: vec!["sd2_tiny".into()],
+            solver: SolverKind::DpmPP,
+            batch_buckets: vec![2, 4, 8],
+            max_wait_ms: 400.0,
+            queue_cap: 64,
+            n_workers: workers,
+        })
+        .unwrap();
+        let bank = PromptBank::load_or_synthetic(std::path::Path::new(dir), 32);
+        let (tx, rx) = mpsc::channel();
+        // 8 requests of one class (fills the largest bucket exactly) plus 4
+        // of a second class (flushed as one batch at its deadline): batch
+        // composition is identical for every pool size, so any output drift
+        // can only come from the workers themselves
+        for i in 0..12u64 {
+            let steps = if i < 8 { 10 } else { 8 };
+            coord
+                .submit(ServeRequest {
+                    id: RequestId(i),
+                    model: "sd2_tiny".into(),
+                    cond: bank.get(i as usize).clone(),
+                    seed: bank.seed_for(i as usize),
+                    steps,
+                    guidance: 3.0,
+                    accel: "sada".into(),
+                    submitted_at: Instant::now(),
+                    reply: tx.clone(),
+                })
+                .unwrap();
+        }
+        drop(tx);
+        let mut out = BTreeMap::new();
+        while let Ok(resp) = rx.recv() {
+            out.insert(resp.id.0, resp.image.data().to_vec());
+        }
+        coord.shutdown().unwrap();
+        out
+    };
+
+    let single = run(1);
+    let quad = run(4);
+    assert_eq!(single.len(), 12);
+    assert_eq!(quad.len(), 12);
+    for (id, img) in &single {
+        assert_eq!(
+            Some(img),
+            quad.get(id),
+            "request {id}: image differs between 1- and 4-worker pools"
+        );
+    }
+}
+
 #[test]
 fn manifest_lists_all_variant_files() {
     let Some(dir) = artifacts() else { return };
