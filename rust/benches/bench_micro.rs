@@ -50,6 +50,27 @@ fn main() {
     bench("ode gradient y = c1 x + c2 eps", 200_000, || {
         let _ = ode::gradient_eps(&schedule, 500, &x, &y1);
     });
+
+    // allocating vs in-place lincombs: the solver step loop now reuses
+    // scratch buffers via the _into variants — this pair shows the win
+    bench("lincomb3 (allocating)", 200_000, || {
+        let _ = ops::lincomb3(1.0, &x, -2.0, &y1, 1.0, &y2);
+    });
+    let mut buf = Tensor::zeros(&shape);
+    bench("lincomb3_into (buffer reuse)", 200_000, || {
+        ops::lincomb3_into(1.0, &x, -2.0, &y1, 1.0, &y2, &mut buf);
+    });
+    bench("lincomb4 (allocating)", 200_000, || {
+        let _ = ops::lincomb4(1.0, &x, -0.8, &y1, -0.8, &y2, 0.6, &y3);
+    });
+    bench("lincomb4_into (buffer reuse)", 200_000, || {
+        ops::lincomb4_into(1.0, &x, -0.8, &y1, -0.8, &y2, 0.6, &y3, &mut buf);
+    });
+    // lane engine gather/scatter primitives
+    bench("lane gather+scatter (4 lanes)", 50_000, || {
+        let s = ops::stack_rows(&[&x, &y1, &y2, &y3]);
+        let _ = ops::unstack_rows(&s);
+    });
     bench("lagrange reconstruct (4 nodes)", 100_000, || {
         let mut buf = X0Buffer::new(4, 1e-9);
         for (i, t) in [0.9, 0.8, 0.7, 0.6].iter().enumerate() {
@@ -63,6 +84,15 @@ fn main() {
         use sada::solvers::Solver;
         let _ = s.step(&x, &y1, 10);
     });
+    {
+        // warm solver: the 2M blend reuses its scratch buffer across steps
+        use sada::solvers::Solver;
+        let mut warm = sada::solvers::DpmPP2M::new(schedule.clone(), 50);
+        let _ = warm.step(&x, &y1, 10);
+        bench("dpm++ solver step (warm scratch)", 100_000, || {
+            let _ = warm.step(&x, &y1, 11);
+        });
+    }
 
     let lp = sada::metrics::LpipsRc::new(3);
     bench("lpips-rc distance (16x16x3)", 2_000, || {

@@ -32,7 +32,8 @@ fn main() -> anyhow::Result<()> {
     for (model, solver) in cells {
         rt.preload_model(model)?;
         let backend = rt.model_backend(model)?;
-        let pipe = Pipeline::new(&backend, solver);
+        let pipe =
+            Pipeline::with_schedule(&backend, solver, rt.manifest.schedule.to_schedule());
         let run = |accel: &mut dyn Accelerator| -> anyhow::Result<f64> {
             let mut total = 0.0;
             for p in 0..n {

@@ -23,7 +23,8 @@ fn main() -> anyhow::Result<()> {
         rt.preload_model(model)?;
         let backend = rt.model_backend(model)?;
         for solver in [SolverKind::DpmPP, SolverKind::Euler] {
-            let pipe = Pipeline::new(&backend, solver);
+            let pipe =
+                Pipeline::with_schedule(&backend, solver, rt.manifest.schedule.to_schedule());
             for steps in [50usize, 25, 15] {
                 let mut base_ms = 0.0;
                 let mut sada_ms = 0.0;
@@ -57,5 +58,11 @@ fn main() -> anyhow::Result<()> {
     // (coordinator pool); throughput must not regress with workers
     println!();
     sada::exp::serving::run_scaling("artifacts", "sd2_tiny", 16, 50.0, 15, &[1, 2, 4], false)?;
+
+    // per-lane vs lockstep: per-request NFE and skip-rate divergence on
+    // divergent-trajectory batches, including sizes (3, 5) with no exact
+    // compiled bucket
+    println!();
+    sada::exp::serving::run_lane_sweep("artifacts", "sd2_tiny", 25, &[2, 3, 5, 8])?;
     Ok(())
 }

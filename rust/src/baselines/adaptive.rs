@@ -82,6 +82,12 @@ impl Accelerator for AdaptiveDiffusion {
         self.skip_run = 0;
         self.pending_skip = false;
     }
+
+    fn clone_fresh(&self) -> Box<dyn Accelerator> {
+        let mut fresh = AdaptiveDiffusion::new(self.tau);
+        fresh.max_skip_run = self.max_skip_run;
+        Box::new(fresh)
+    }
 }
 
 #[cfg(test)]

@@ -40,6 +40,10 @@ impl Accelerator for DeepCache {
     fn observe(&mut self, _obs: &StepObs) {}
 
     fn reset(&mut self) {}
+
+    fn clone_fresh(&self) -> Box<dyn Accelerator> {
+        Box::new(DeepCache::new(self.interval))
+    }
 }
 
 #[cfg(test)]

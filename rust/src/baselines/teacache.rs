@@ -81,6 +81,12 @@ impl Accelerator for TeaCache {
         self.last_fresh_x = None;
         self.pending_skip = false;
     }
+
+    fn clone_fresh(&self) -> Box<dyn Accelerator> {
+        let mut fresh = TeaCache::new(self.tau);
+        fresh.poly = self.poly.clone();
+        Box::new(fresh)
+    }
 }
 
 #[cfg(test)]

@@ -1,12 +1,15 @@
 //! Dynamic batcher: groups compatible requests into compiled batch buckets.
 //!
-//! Requests are compatible when they share (model, steps, guidance-class,
-//! accel). A batch is emitted when the largest bucket fills, or when the
-//! oldest pending request exceeds `max_wait_ms` (then the largest bucket
-//! <= queue length is used; 1 is always a valid bucket). Invariants
-//! (property-tested): no request is dropped or duplicated, FIFO order is
-//! preserved within a compatibility class, and no request waits more than
-//! max_wait once the batcher is polled.
+//! Requests are compatible when they share (model, steps, accel) and have
+//! finite guidance — the per-lane engine sub-batches mixed guidance values
+//! itself, so guidance no longer partitions batches (non-finite guidance
+//! stays in its own class and flushes alone). A batch is emitted when the
+//! largest bucket fills, or when the oldest pending request exceeds
+//! `max_wait_ms` (then the largest bucket <= queue length is used; 1 is
+//! always a valid bucket). Invariants (property-tested): no request is
+//! dropped or duplicated, FIFO order is preserved within a compatibility
+//! class, and no request waits more than max_wait once the batcher is
+//! polled.
 
 use std::collections::VecDeque;
 
@@ -52,10 +55,20 @@ impl DynamicBatcher {
             .unwrap_or(1)
     }
 
-    /// Compatibility: the engine runs one lockstep loop per batch, so the
-    /// grouped requests must agree on everything that shapes that loop.
+    /// Compatibility: the per-lane engine shares one step loop per batch
+    /// (same model/steps/accel) but sub-batches guidance itself, so any
+    /// two *finite* guidance values may be grouped. Mixed-guidance lanes
+    /// never share a bucket launch, so the win here is batch formation
+    /// (unique-gs traffic stops waiting out max_wait alone), traded
+    /// against serializing those lanes on one worker. Non-finite guidance
+    /// never matches any class (not even its own): a malformed request
+    /// flushes alone at its deadline instead of contaminating a batch.
     fn compatible(a: &ServeRequest, b: &ServeRequest) -> bool {
-        a.model == b.model && a.steps == b.steps && a.accel == b.accel && a.guidance == b.guidance
+        a.model == b.model
+            && a.steps == b.steps
+            && a.accel == b.accel
+            && a.guidance.is_finite()
+            && b.guidance.is_finite()
     }
 
     /// Poll for a ready batch at `now_ms`. Head-of-line request defines the
@@ -213,6 +226,21 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn mixed_finite_guidance_now_batches_together() {
+        // the lane engine executes mixed-gs batches in per-guidance
+        // sub-batches, so the batcher no longer partitions on guidance
+        let mut b = DynamicBatcher::new(vec![2, 4], 50.0);
+        let mut r0 = req(0, "m", 50);
+        r0.guidance = 3.0;
+        let mut r1 = req(1, "m", 50);
+        r1.guidance = 7.5;
+        b.push(0.0, r0);
+        b.push(0.0, r1);
+        let batch = b.poll(0.0).expect("finite mixed-gs requests must group");
+        assert_eq!(batch.requests.len(), 2);
     }
 
     #[test]

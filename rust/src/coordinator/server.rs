@@ -10,8 +10,11 @@
 //! * `n_workers` **engine workers** each own their *own* [`Runtime`] handle
 //!   (the PJRT client is `!Sync`, so runtimes are never shared) and pull
 //!   ready batches from a shared work queue. Each worker keeps a
-//!   per-`(model, accel, steps)` accelerator reuse pool so `Sada`/baseline
-//!   state is recycled instead of re-boxed per batch.
+//!   per-`(model, accel, steps)` accelerator reuse pool; single requests
+//!   recycle the pooled instance directly, while multi-request batches use
+//!   it as the *prototype* for the per-lane engine
+//!   ([`Pipeline::generate_lanes`]), which clones one fresh accelerator per
+//!   lane so skip decisions stay per-trajectory.
 //!
 //! Invariants preserved from the single-engine design (property-tested in
 //! `tests/coordinator_integration.rs` at 1, 2 and 4 workers): FIFO batch
@@ -168,8 +171,9 @@ pub struct Coordinator {
 }
 
 /// Accelerator reuse-pool key: one recycled accelerator per compatibility
-/// class a worker has seen. `Pipeline::generate*` resets the accelerator at
-/// the start of every run, so recycling is state-safe.
+/// class a worker has seen. `Pipeline::generate` resets the accelerator at
+/// the start of every run and the lane engine only clones fresh instances
+/// off the pooled prototype, so recycling is state-safe.
 type AccelKey = (String, String, usize); // (model, accel, steps)
 
 fn accel_for(name: &str, info: &crate::runtime::ModelInfo, steps: usize) -> Box<dyn Accelerator> {
@@ -453,7 +457,7 @@ fn execute_batch(
     } else {
         cfg.solver
     };
-    let pipe = Pipeline::new(&backend, solver);
+    let pipe = Pipeline::with_schedule(&backend, solver, rt.manifest.schedule.to_schedule());
     let steps = requests[0].steps;
     let key: AccelKey = (model.to_string(), requests[0].accel.clone(), steps);
     let accel = accel_pool
@@ -469,21 +473,20 @@ fn execute_batch(
             edge: None,
         })
         .collect();
-    // batched fast-path when a compiled bucket exists; otherwise sequential
-    let batched_ok = gen_reqs.len() > 1
-        && backend
-            .info()
-            .variants
-            .contains_key(&format!("full_b{}", gen_reqs.len()));
+    // multi-request batches run through the per-lane engine: each request
+    // plans from a fresh clone of the pooled accelerator prototype (state
+    // is per-trajectory), executing lanes gather into whatever `full_b{n}`
+    // buckets are compiled — no bucket of the exact batch size required —
+    // and every result carries its own per-lane RunStats/NFE. Degraded
+    // variants (shallow/token-pruned) still execute as per-lane singles
+    // with lane-local aux features, so models without compiled buckets
+    // keep full sequential feature parity; only lanes refreshed through a
+    // bucketed launch lose their aux features until the next single run.
     let t0 = Instant::now();
-    let results = if batched_ok {
-        pipe.generate_batch(&gen_reqs, accel.as_mut())?
+    let results = if gen_reqs.len() > 1 {
+        pipe.generate_lanes(&gen_reqs, accel.as_ref())?
     } else {
-        let mut out = Vec::with_capacity(gen_reqs.len());
-        for gr in &gen_reqs {
-            out.push(pipe.generate(gr, accel.as_mut())?);
-        }
-        out
+        vec![pipe.generate(&gen_reqs[0], accel.as_mut())?]
     };
     let bsz = requests.len();
     // record batch metrics BEFORE sending replies: a client that has seen

@@ -51,6 +51,12 @@ impl Harness {
         Ok(Harness { rt, bank, music_bank })
     }
 
+    /// Pipeline wired to this runtime's manifest schedule (the schedule
+    /// constants are authoritative for retrained artifacts).
+    pub fn pipeline<'b, B: ModelBackend>(&self, backend: &'b B, solver: SolverKind) -> Pipeline<'b, B> {
+        Pipeline::with_schedule(backend, solver, self.rt.manifest.schedule.to_schedule())
+    }
+
     pub fn request(&self, model: &ModelInfo, idx: usize, steps: usize) -> GenRequest {
         let bank = if model.name == "music_tiny" { &self.music_bank } else { &self.bank };
         GenRequest {
@@ -73,7 +79,7 @@ impl Harness {
     ) -> Result<BaselineSet> {
         self.rt.preload_model(model)?; // compile outside the timed region
         let backend = self.rt.model_backend(model)?;
-        let pipe = Pipeline::new(&backend, solver);
+        let pipe = self.pipeline(&backend, solver);
         let info = backend.info().clone();
         let mut images = Vec::with_capacity(n);
         let mut wall = 0.0;
@@ -103,7 +109,7 @@ impl Harness {
     ) -> Result<MethodRow> {
         self.rt.preload_model(model)?; // compile outside the timed region
         let backend = self.rt.model_backend(model)?;
-        let pipe = Pipeline::new(&backend, solver);
+        let pipe = self.pipeline(&backend, solver);
         let info = backend.info().clone();
         let channels = info.img[2];
         let lpips = LpipsRc::new(channels);

@@ -46,6 +46,9 @@ impl Accelerator for RecordingAccel {
     fn reset(&mut self) {
         *self = Self::default();
     }
+    fn clone_fresh(&self) -> Box<dyn Accelerator> {
+        Box::new(Self::default())
+    }
 }
 
 /// Fig. 3: per-step reconstruction MSE of AM-3 vs FDM-3 over `samples`
@@ -53,7 +56,7 @@ impl Accelerator for RecordingAccel {
 pub fn fig3(artifacts: &str, samples: usize, steps: usize) -> Result<()> {
     let h = Harness::open(artifacts)?;
     let backend = h.rt.model_backend("sdxl_tiny")?;
-    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let pipe = h.pipeline(&backend, SolverKind::DpmPP);
     let info = backend.info().clone();
 
     let mut per_step_am: Vec<Vec<f64>> = vec![Vec::new(); steps];
@@ -146,7 +149,7 @@ pub fn fig2(artifacts: &str, samples: usize, steps: usize) -> Result<()> {
 pub fn fig4(artifacts: &str, steps: usize) -> Result<()> {
     let h = Harness::open(artifacts)?;
     let backend = h.rt.model_backend("sd2_tiny")?;
-    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let pipe = h.pipeline(&backend, SolverKind::DpmPP);
     let info = backend.info().clone();
     let req = h.request(&info, 0, steps);
     let mut rec = RecordingAccel::default();
@@ -179,7 +182,7 @@ pub fn fig4(artifacts: &str, steps: usize) -> Result<()> {
 pub fn fig5(artifacts: &str, steps: usize) -> Result<()> {
     let h = Harness::open(artifacts)?;
     let backend = h.rt.model_backend("sd2_tiny")?;
-    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let pipe = h.pipeline(&backend, SolverKind::DpmPP);
     let info = backend.info().clone();
     let req = h.request(&info, 1, steps);
     let mut sada = Sada::with_default(&info, steps);
@@ -210,7 +213,7 @@ pub fn fig5(artifacts: &str, steps: usize) -> Result<()> {
 pub fn fig_a3(artifacts: &str, samples: usize) -> Result<()> {
     let h = Harness::open(artifacts)?;
     let backend = h.rt.model_backend("sd2_tiny")?;
-    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let pipe = h.pipeline(&backend, SolverKind::DpmPP);
     let info = backend.info().clone();
     let lpips = LpipsRc::new(info.img[2]);
     let step_grid = [10usize, 15, 25, 50, 75, 100];

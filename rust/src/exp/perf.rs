@@ -18,7 +18,8 @@ pub fn run(artifacts: &str, model: &str, steps: usize, n: usize) -> Result<()> {
     let rt = Runtime::open(artifacts)?;
     rt.preload_model(model)?;
     let backend = rt.model_backend(model)?;
-    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let pipe =
+        Pipeline::with_schedule(&backend, SolverKind::DpmPP, rt.manifest.schedule.to_schedule());
     let bank = PromptBank::load_or_synthetic(std::path::Path::new(artifacts), rt.manifest.cond_dim);
 
     for accel_name in ["baseline", "sada"] {

@@ -8,8 +8,12 @@ use anyhow::Result;
 
 use crate::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
 use crate::coordinator::request::RequestId;
-use crate::report::table::{f2, speedup};
+use crate::pipeline::lanes::LaneMode;
+use crate::pipeline::{Accelerator, GenRequest, Pipeline};
+use crate::report::table::{f2, f3, speedup};
 use crate::report::{LatencyStats, Table};
+use crate::runtime::{ModelBackend, Runtime};
+use crate::sada::Sada;
 use crate::solvers::SolverKind;
 use crate::workload::{PromptBank, TraceGen};
 
@@ -211,6 +215,69 @@ pub fn run_with_load(
         let speed = reports[0].latency.p50_ms() / reports[1].latency.p50_ms().max(1e-9);
         println!("SADA p50 latency speedup under load: {}", speedup(speed));
     }
+    Ok(())
+}
+
+/// Per-lane vs lockstep sweep: the same divergent-trajectory batch run
+/// through the lane engine in both [`LaneMode`]s under SADA, reporting
+/// per-request NFE and skip-rate divergence (the lockstep arm models the
+/// global-decision regime — any lane fresh => all execute — see
+/// [`LaneMode::Lockstep`]). Batch sizes need no compiled bucket of the
+/// exact size — executing lanes split across whatever `full_b{n}` buckets
+/// the manifest provides, falling back to `full` singles — and guidance
+/// varies per lane (sub-batched by `gs`).
+pub fn run_lane_sweep(
+    artifacts: &str,
+    model: &str,
+    steps: usize,
+    batch_sizes: &[usize],
+) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    rt.preload_model(model)?;
+    let backend = rt.model_backend(model)?;
+    let pipe =
+        Pipeline::with_schedule(&backend, SolverKind::DpmPP, rt.manifest.schedule.to_schedule());
+    let bank = PromptBank::load_or_synthetic(std::path::Path::new(artifacts), rt.manifest.cond_dim);
+    let buckets = backend.info().full_batch_buckets();
+    let mut table = Table::new(
+        &format!("Per-lane vs lockstep — {model}, {steps} steps, compiled buckets {buckets:?}"),
+        &["Batch", "Mode", "Mean NFE", "Per-request NFE", "Skip spread", "Wall ms"],
+    );
+    for &b in batch_sizes {
+        // divergent-trajectory workload: distinct prompts + spread guidance.
+        // For b <= 4 every lane gets a unique gs, measuring the worst case
+        // of the batcher's finite-guidance merge (each lane its own
+        // sub-batch); larger b mixes repeated values so bucket gathering
+        // within gs groups is exercised too.
+        let reqs: Vec<GenRequest> = (0..b)
+            .map(|k| GenRequest {
+                cond: bank.get(k).clone(),
+                seed: bank.seed_for(k),
+                guidance: [1.0f32, 3.0, 6.0, 9.0][k % 4],
+                steps,
+                edge: None,
+            })
+            .collect();
+        let proto = Sada::with_default(backend.info(), steps);
+        let proto: &dyn Accelerator = &proto;
+        for (mode, name) in [(LaneMode::PerLane, "per-lane"), (LaneMode::Lockstep, "lockstep")] {
+            let res = pipe.generate_lanes_mode(&reqs, proto, mode)?;
+            let nfes: Vec<usize> = res.iter().map(|r| r.stats.nfe).collect();
+            let mean = nfes.iter().sum::<usize>() as f64 / b.max(1) as f64;
+            let skips: Vec<f64> = res.iter().map(|r| r.stats.skip_fraction()).collect();
+            let spread = skips.iter().cloned().fold(f64::MIN, f64::max)
+                - skips.iter().cloned().fold(f64::MAX, f64::min);
+            table.row(vec![
+                format!("{b}"),
+                name.into(),
+                f2(mean),
+                format!("{nfes:?}"),
+                f3(spread),
+                f2(res[0].stats.wall_ms),
+            ]);
+        }
+    }
+    table.print();
     Ok(())
 }
 

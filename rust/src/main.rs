@@ -19,6 +19,8 @@ commands:
   serve      E2E serving benchmark (--model sd2_tiny --n 32 --rate 2.0 --steps 50
              --workers 2; --scale sweeps pool sizes in powers of two up to
              --workers, default {1, 2, 4})
+  lanes      per-lane vs lockstep sweep (--model sd2_tiny --steps 50): per-request
+             NFE + skip-rate divergence at batch sizes with no exact compiled bucket
   table1     main results table        (--samples 64 --steps 50)
   table2     few-step ablation         (--samples 32)
   ablate     SADA component ablation    (--samples 16 --steps 50)
@@ -66,6 +68,12 @@ fn main() -> Result<()> {
                 o.bool_or("bursty", false),
             )?
         }
+        "lanes" => exp::serving::run_lane_sweep(
+            &artifacts,
+            o.str_or("model", "sd2_tiny"),
+            steps,
+            &[2, 3, 5, 8],
+        )?,
         "serve" => exp::serving::run_with_load(
             &artifacts,
             o.str_or("model", "sd2_tiny"),
@@ -108,7 +116,7 @@ fn generate(artifacts: &str, o: &sada::config::Config) -> Result<()> {
     );
     let solver = SolverKind::parse(o.str_or("solver", "dpmpp"))
         .ok_or_else(|| anyhow::anyhow!("unknown solver"))?;
-    let pipe = Pipeline::new(&backend, solver);
+    let pipe = Pipeline::with_schedule(&backend, solver, rt.manifest.schedule.to_schedule());
     let req = sada::pipeline::GenRequest {
         cond: bank.get(prompt).clone(),
         seed: bank.seed_for(prompt),

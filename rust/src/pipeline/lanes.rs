@@ -1,0 +1,624 @@
+//! Per-lane batched sampling engine.
+//!
+//! SADA's stability criterion is *per-trajectory* (Criterion 3.4): different
+//! prompts stabilize at different times, so a batched sampler that computes
+//! one criterion over the concatenated batch forces a single global
+//! skip/keep decision on every request — the failure mode AdaDiff attributes
+//! to fixed per-prompt budgets. This module replaces that lockstep loop with
+//! a **lane engine**: each request in a batch owns a *lane* with its own
+//! accelerator instance (via [`Accelerator::clone_fresh`]), its own solver
+//! multistep history, and its own [`RunStats`]. Every step:
+//!
+//! 1. each lane plans independently;
+//! 2. lanes planning [`StepPlan::Full`] are gathered on the batch axis
+//!    ([`crate::tensor::ops::stack_rows`]) and executed through the largest
+//!    fitting compiled `full_b{n}` bucket
+//!    ([`crate::runtime::manifest::split_into_buckets`]), grouped by
+//!    guidance scalar (a compiled variant takes one `gs` input); oversized
+//!    gathers split across several bucket launches plus `full` singles, so
+//!    **no compiled bucket of the exact batch size is ever required**;
+//! 3. model outputs are scattered back and every lane advances through its
+//!    own solver; skipping lanes extrapolate lane-locally (AM-3 /
+//!    Lagrange, Thm 3.5–3.7) at zero model cost — a skipping lane drops
+//!    out of the model call entirely, shrinking the executed batch.
+//!
+//! Degraded variants (Shallow/Prune) are compiled at batch 1 only, so
+//! lanes planning them execute as per-lane singles with lane-local
+//! deep/cache features — batching keeps their per-step discount instead of
+//! forcing Full. Aux features are captured only from *single* full
+//! executions (bucketed `full_b{n}` launches clear them: the batched
+//! artifacts' aux layouts are not per-lane sliceable), so on a backend
+//! with no compiled buckets the lane engine is feature-equivalent — and
+//! bit-identical — to per-request sequential generation, while bucketed
+//! lanes trade the degraded-variant discount for gather throughput.
+//!
+//! With [`super::NoAccel`] the engine is bit-identical to sequential
+//! [`Pipeline::generate`] per request (property-tested below): single-lane
+//! chunks share the exact code path, and bucketed chunks are pure
+//! gather/compute/scatter.
+
+use anyhow::{Context, Result};
+
+use super::{Accelerator, GenRequest, GenResult, Pipeline, RunStats, StepCtx, StepObs, StepPlan};
+use crate::runtime::manifest::split_into_buckets;
+use crate::runtime::{ModelArgs, ModelBackend, ModelInfo};
+use crate::solvers::{build_solver, Solver};
+use crate::tensor::{ops, Tensor};
+
+/// Makers of fresh per-lane accelerator instances.
+pub trait AcceleratorFactory {
+    /// Build the accelerator for lane index `lane`.
+    fn make(&self, lane: usize) -> Box<dyn Accelerator>;
+}
+
+/// Any accelerator prototype is the factory for its own lane copies.
+impl AcceleratorFactory for dyn Accelerator {
+    fn make(&self, _lane: usize) -> Box<dyn Accelerator> {
+        self.clone_fresh()
+    }
+}
+
+/// Adapter: build per-lane accelerators from a closure (heterogeneous
+/// lane configurations, test harnesses).
+pub struct FnFactory<F>(pub F);
+
+impl<F: Fn(usize) -> Box<dyn Accelerator>> AcceleratorFactory for FnFactory<F> {
+    fn make(&self, lane: usize) -> Box<dyn Accelerator> {
+        (self.0)(lane)
+    }
+}
+
+/// Execution discipline of the lane engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneMode {
+    /// Every lane plans and executes independently (the SADA-faithful
+    /// default).
+    PerLane,
+    /// Global-decision arm for per-lane-vs-lockstep sweeps: whenever any
+    /// lane needs a fresh execution, every lane executes. This models the
+    /// *regime* the legacy lockstep batch imposed — one skip/keep decision
+    /// for the whole batch — not its exact implementation (which evaluated
+    /// a single criterion over the concatenated tensor and required a
+    /// compiled bucket of the exact batch size).
+    Lockstep,
+}
+
+/// One request's private slice of the batch.
+struct Lane<'r> {
+    req: &'r GenRequest,
+    solver: Box<dyn Solver>,
+    accel: Box<dyn Accelerator>,
+    x: Tensor,
+    last_out: Option<Tensor>,
+    /// DeepCache deep feature from this lane's last *single* full run
+    /// (bucketed launches clear it — batched aux layouts are not
+    /// per-lane sliceable).
+    deep: Option<Tensor>,
+    /// Attention caches from this lane's last single full/prune run.
+    caches: Option<Tensor>,
+    stats: RunStats,
+}
+
+impl<'a, B: ModelBackend> Pipeline<'a, B> {
+    /// Run a batch of requests through the per-lane engine. Requests must
+    /// share a step count; seeds, conds, guidance and edges may differ
+    /// (mixed-guidance lanes execute in separate sub-batches).
+    pub fn generate_lanes<F: AcceleratorFactory + ?Sized>(
+        &self,
+        reqs: &[GenRequest],
+        factory: &F,
+    ) -> Result<Vec<GenResult>> {
+        self.generate_lanes_mode(reqs, factory, LaneMode::PerLane)
+    }
+
+    /// [`Pipeline::generate_lanes`] with an explicit [`LaneMode`].
+    pub fn generate_lanes_mode<F: AcceleratorFactory + ?Sized>(
+        &self,
+        reqs: &[GenRequest],
+        factory: &F,
+        mode: LaneMode,
+    ) -> Result<Vec<GenResult>> {
+        anyhow::ensure!(!reqs.is_empty(), "empty batch");
+        let steps = reqs[0].steps;
+        anyhow::ensure!(
+            reqs.iter().all(|r| r.steps == steps),
+            "lane batch must share step count"
+        );
+        let info = self.backend.info().clone();
+        let buckets = info.full_batch_buckets();
+        let [h, w, c] = info.img;
+
+        let mut lanes: Vec<Lane> = reqs
+            .iter()
+            .enumerate()
+            .map(|(li, req)| {
+                let mut solver = build_solver(self.solver_kind, self.schedule(), steps);
+                solver.reset();
+                let mut accel = factory.make(li);
+                accel.reset();
+                let mut rng = crate::rng::Rng::new(req.seed);
+                let x = Tensor::from_rng(&mut rng, &[1, h, w, c]);
+                let stats = RunStats::new(accel.name(), steps);
+                Lane { req, solver, accel, x, last_out: None, deep: None, caches: None, stats }
+            })
+            .collect();
+
+        let timer = crate::report::Timer::start();
+        for i in 0..steps {
+            // 1) every lane plans independently from its own history
+            let mut plans: Vec<StepPlan> = Vec::with_capacity(lanes.len());
+            for lane in lanes.iter_mut() {
+                let ctx = StepCtx {
+                    i,
+                    n_steps: steps,
+                    x: &lane.x,
+                    t_norm: lane.solver.t_norm(i),
+                    have_caches: lane.caches.is_some(),
+                    have_deep: lane.deep.is_some(),
+                };
+                let mut plan = lane.accel.plan(&ctx);
+                // structural fallbacks: same contract as Pipeline::generate
+                plan = match plan {
+                    StepPlan::Shallow if lane.deep.is_none() => StepPlan::Full,
+                    StepPlan::Prune { .. } if lane.caches.is_none() => StepPlan::Full,
+                    StepPlan::SkipReuse | StepPlan::SkipExtrapolate
+                        if lane.last_out.is_none() =>
+                    {
+                        StepPlan::Full
+                    }
+                    p => p,
+                };
+                plans.push(plan);
+            }
+            if mode == LaneMode::Lockstep
+                && plans.iter().any(|p| {
+                    !matches!(
+                        p,
+                        StepPlan::SkipReuse | StepPlan::SkipExtrapolate | StepPlan::SkipLagrange
+                    )
+                })
+            {
+                for p in plans.iter_mut() {
+                    *p = StepPlan::Full;
+                }
+            }
+
+            // 2) execute: degraded variants as per-lane singles, Full lanes
+            //    gathered bucket-aware
+            let mut fresh_out: Vec<Option<Tensor>> = (0..lanes.len()).map(|_| None).collect();
+            self.execute_planned_lanes(&mut lanes, &plans, &buckets, i, &mut fresh_out)?;
+
+            // 3) every lane advances through its own solver + accelerator.
+            // The arms below mirror Pipeline::generate's step body — keep
+            // the two in lockstep (the NoAccel/DeepCache bit-identity
+            // property tests pin the executed paths against drift).
+            for (l, lane) in lanes.iter_mut().enumerate() {
+                let plan = &plans[l];
+                let t_norm = lane.solver.t_norm(i);
+                let fresh = fresh_out[l].is_some();
+                let (model_out, x0, x_next) = match plan {
+                    StepPlan::Full | StepPlan::Shallow | StepPlan::Prune { .. } => {
+                        let out = fresh_out[l].take().context("executed lane lost its output")?;
+                        let x0 = lane.solver.x0_from_model(&lane.x, &out, i);
+                        let xn = lane.solver.step(&lane.x, &x0, i);
+                        (out, x0, xn)
+                    }
+                    StepPlan::SkipReuse => {
+                        let out = lane.last_out.clone().context("SkipReuse without history")?;
+                        let x0 = lane.solver.x0_from_model(&lane.x, &out, i);
+                        let xn = lane.solver.step(&lane.x, &x0, i);
+                        (out, x0, xn)
+                    }
+                    StepPlan::SkipExtrapolate => {
+                        let out = lane
+                            .last_out
+                            .clone()
+                            .context("SkipExtrapolate without history")?;
+                        let x0 = lane.solver.x0_from_model(&lane.x, &out, i);
+                        let y_now = lane.solver.gradient(&lane.x, &out, i);
+                        let dt = lane.solver.dt(i);
+                        let xn = lane
+                            .accel
+                            .extrapolate(&lane.x, &y_now, dt)
+                            .unwrap_or_else(|| {
+                                ops::lincomb2(1.0, &lane.x, -(dt as f32), &y_now)
+                            });
+                        lane.solver.inject_x0(&x0, i);
+                        (out, x0, xn)
+                    }
+                    StepPlan::SkipLagrange => {
+                        let x0 = lane
+                            .accel
+                            .reconstruct_x0(t_norm)
+                            .context("SkipLagrange without a filled x0 buffer")?;
+                        let out = lane.solver.model_out_from_x0(&lane.x, &x0, i);
+                        let xn = lane.solver.step(&lane.x, &x0, i);
+                        (out, x0, xn)
+                    }
+                };
+                let y = lane.solver.gradient(&lane.x, &model_out, i);
+                let obs = StepObs {
+                    i,
+                    n_steps: steps,
+                    fresh,
+                    x_prev: &lane.x,
+                    x_next: &x_next,
+                    model_out: &model_out,
+                    x0: &x0,
+                    y: &y,
+                    dt: lane.solver.dt(i),
+                    t_norm,
+                };
+                lane.accel.observe(&obs);
+                lane.stats.record_step(plan, fresh);
+                lane.last_out = Some(model_out);
+                lane.x = x_next;
+            }
+        }
+
+        let wall_ms = timer.elapsed_ms();
+        Ok(lanes
+            .into_iter()
+            .map(|mut lane| {
+                lane.stats.wall_ms = wall_ms;
+                lane.stats.nfe = lane.stats.fresh_steps;
+                GenResult { image: lane.x, stats: lane.stats }
+            })
+            .collect())
+    }
+
+    /// Execute every lane whose plan needs the model at step `i`, writing
+    /// outputs into `fresh_out`. Shallow/Prune lanes run as singles with
+    /// lane-local aux features (those variants are compiled at batch 1
+    /// only). Full lanes are grouped by guidance scalar (one `gs` input
+    /// per compiled variant), edge-conditioned lanes run as singles (edge
+    /// inputs are only compiled for batch-1 variants), and each group is
+    /// chunked across the compiled `full_b{n}` buckets.
+    fn execute_planned_lanes(
+        &self,
+        lanes: &mut [Lane],
+        plans: &[StepPlan],
+        buckets: &[usize],
+        i: usize,
+        fresh_out: &mut [Option<Tensor>],
+    ) -> Result<()> {
+        // degraded variants: per-lane singles, mirroring Pipeline::generate
+        for (l, plan) in plans.iter().enumerate() {
+            match plan {
+                StepPlan::Shallow => {
+                    let lane = &mut lanes[l];
+                    let mut args = self.base_args(&lane.x, lane.solver.t_norm(i), lane.req);
+                    args.deep = lane.deep.clone();
+                    fresh_out[l] = Some(self.backend.run("shallow", &args)?.out);
+                }
+                StepPlan::Prune { variant, keep_idx } => {
+                    let lane = &mut lanes[l];
+                    let mut args = self.base_args(&lane.x, lane.solver.t_norm(i), lane.req);
+                    args.keep_idx = Some(keep_idx.clone());
+                    args.caches = lane.caches.clone();
+                    let mo = self.backend.run(variant, &args)?;
+                    if mo.caches.is_some() {
+                        lane.caches = mo.caches;
+                    }
+                    fresh_out[l] = Some(mo.out);
+                }
+                _ => {}
+            }
+        }
+        // Full lanes: group by guidance bits, preserving lane order
+        let mut groups: Vec<(u32, Vec<usize>)> = Vec::new();
+        for (l, plan) in plans.iter().enumerate() {
+            if *plan != StepPlan::Full {
+                continue;
+            }
+            let key = lanes[l].req.guidance.to_bits();
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, members)) => members.push(l),
+                None => groups.push((key, vec![l])),
+            }
+        }
+        for (_, members) in &groups {
+            let (singles, batchable): (Vec<usize>, Vec<usize>) = members
+                .iter()
+                .copied()
+                .partition(|l| lanes[*l].req.edge.is_some());
+            for &l in &singles {
+                let out = self.run_lane_single(&mut lanes[l], i)?;
+                fresh_out[l] = Some(out);
+            }
+            let mut at = 0usize;
+            for chunk in split_into_buckets(batchable.len(), buckets) {
+                let sub = &batchable[at..at + chunk];
+                at += chunk;
+                if chunk == 1 {
+                    let out = self.run_lane_single(&mut lanes[sub[0]], i)?;
+                    fresh_out[sub[0]] = Some(out);
+                    continue;
+                }
+                let xs: Vec<&Tensor> = sub.iter().map(|l| &lanes[*l].x).collect();
+                let conds: Vec<&Tensor> = sub.iter().map(|l| &lanes[*l].req.cond).collect();
+                let t_norm = lanes[sub[0]].solver.t_norm(i);
+                let args = ModelArgs {
+                    x: Some(ops::stack_rows(&xs)),
+                    t: t_norm as f32,
+                    cond: Some(ops::stack_rows(&conds)),
+                    gs: lanes[sub[0]].req.guidance,
+                    ..Default::default()
+                };
+                let variant = ModelInfo::full_variant_for(chunk);
+                let mo = self.backend.run(&variant, &args)?;
+                let rows = ops::unstack_rows(&mo.out);
+                anyhow::ensure!(
+                    rows.len() == chunk,
+                    "variant {variant} returned {} rows for a {chunk}-lane sub-batch",
+                    rows.len()
+                );
+                for (row, &l) in rows.into_iter().zip(sub) {
+                    fresh_out[l] = Some(row);
+                    // batched aux layouts are not per-lane sliceable: drop
+                    // stale features rather than feed them to Shallow/Prune
+                    lanes[l].deep = None;
+                    lanes[l].caches = None;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Single-lane full execution: the same code path as the Full arm of
+    /// [`Pipeline::generate`] (including deep/caches capture), so a lane
+    /// executed alone is bit-identical to sequential generation.
+    fn run_lane_single(&self, lane: &mut Lane, i: usize) -> Result<Tensor> {
+        let t_norm = lane.solver.t_norm(i);
+        let mo = self.run_model("full", &lane.x, t_norm, lane.req)?;
+        if mo.deep.is_some() {
+            lane.deep = mo.deep;
+        }
+        if mo.caches.is_some() {
+            lane.caches = mo.caches;
+        }
+        Ok(mo.out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::NoAccel;
+    use crate::runtime::mock::GmBackend;
+    use crate::runtime::ModelBackend;
+    use crate::sada::Sada;
+    use crate::solvers::SolverKind;
+    use crate::testutil::{check, UsizeIn};
+
+    fn reqs_for(n: usize, steps: usize, seed: u64) -> Vec<GenRequest> {
+        let mut rng = crate::rng::Rng::new(seed);
+        (0..n)
+            .map(|k| GenRequest {
+                cond: Tensor::from_rng(&mut rng, &[1, 32]),
+                seed: rng.below(10_000),
+                guidance: [0.0f32, 2.0, 5.0][k % 3],
+                steps,
+                edge: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn property_noaccel_lanes_bit_identical_to_sequential() {
+        // any seed/batch mix, with and without compiled batch buckets
+        check(5, 10, &UsizeIn(1, 6), |b| {
+            for bucketed in [false, true] {
+                let backend = if bucketed {
+                    GmBackend::with_batch_buckets(3, &[2, 4])
+                } else {
+                    GmBackend::new(3)
+                };
+                let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+                let reqs = reqs_for(*b, 8, *b as u64 * 31 + 7);
+                let proto: &dyn Accelerator = &NoAccel;
+                let lanes = pipe
+                    .generate_lanes(&reqs, proto)
+                    .map_err(|e| format!("lane engine failed: {e:#}"))?;
+                for (k, (lane, req)) in lanes.iter().zip(&reqs).enumerate() {
+                    let solo = pipe
+                        .generate(req, &mut NoAccel)
+                        .map_err(|e| format!("sequential failed: {e:#}"))?;
+                    if lane.image.data() != solo.image.data() {
+                        return Err(format!(
+                            "lane {k} (bucketed={bucketed}, b={b}) not bit-identical"
+                        ));
+                    }
+                    if lane.stats.nfe != solo.stats.nfe {
+                        return Err(format!("lane {k} nfe {} != {}", lane.stats.nfe, solo.stats.nfe));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn no_exact_bucket_required_and_buckets_shrink_model_calls() {
+        // 5 lanes with only full_b2 compiled: chunks [2, 2, 1] per step
+        let backend = GmBackend::with_batch_buckets(4, &[2]);
+        let pipe = Pipeline::new(&backend, SolverKind::Euler);
+        let steps = 6;
+        let reqs: Vec<GenRequest> = reqs_for(5, steps, 11)
+            .into_iter()
+            .map(|mut r| {
+                r.guidance = 3.0; // one guidance group: maximal gathering
+                r
+            })
+            .collect();
+        backend.reset_nfe();
+        let proto: &dyn Accelerator = &NoAccel;
+        let out = pipe.generate_lanes(&reqs, proto).unwrap();
+        assert_eq!(out.len(), 5);
+        // 3 launches per step instead of 5 sequential calls
+        assert_eq!(backend.nfe(), steps * 3);
+        for lane in &out {
+            assert_eq!(lane.stats.nfe, steps);
+        }
+    }
+
+    #[test]
+    fn duplicate_lanes_are_deterministic_and_divergent_lanes_decide_independently() {
+        // two identical lanes must produce identical traces; across GM
+        // landscapes, a smooth (gs=0) and a strongly-guided (gs=8) lane
+        // must make different SADA skip decisions in the same batch
+        let steps = 50;
+        let mut any_diverged = false;
+        for seed in 0..12u64 {
+            let backend = GmBackend::with_batch_buckets(seed + 1, &[2]);
+            let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+            let mut rng = crate::rng::Rng::new(900 + seed);
+            let smooth = GenRequest {
+                cond: Tensor::zeros(&[1, 32]),
+                seed: 7,
+                guidance: 0.0,
+                steps,
+                edge: None,
+            };
+            let jagged = GenRequest {
+                cond: Tensor::from_rng(&mut rng, &[1, 32]),
+                seed: 8 + seed,
+                guidance: 8.0,
+                steps,
+                edge: None,
+            };
+            let proto = Sada::with_default(backend.info(), steps);
+            let proto: &dyn Accelerator = &proto;
+            let twin = pipe
+                .generate_lanes(&[smooth.clone(), smooth.clone()], proto)
+                .unwrap();
+            assert_eq!(
+                twin[0].stats.mode_trace(),
+                twin[1].stats.mode_trace(),
+                "identical lanes must decide identically"
+            );
+            assert_eq!(twin[0].image.data(), twin[1].image.data());
+            let pair = pipe.generate_lanes(&[smooth, jagged], proto).unwrap();
+            if pair[0].stats.mode_trace() != pair[1].stats.mode_trace() {
+                any_diverged = true;
+                break;
+            }
+        }
+        assert!(
+            any_diverged,
+            "divergent trajectories never produced different per-lane skip decisions (12 seeds)"
+        );
+    }
+
+    #[test]
+    fn per_lane_beats_lockstep_on_some_divergent_workload() {
+        // the serving claim in miniature: independent lanes skip more than
+        // a conservative global decision on at least one divergent batch
+        let steps = 50;
+        let mut found = false;
+        for seed in 0..12u64 {
+            let backend = GmBackend::with_batch_buckets(seed + 2, &[2, 4]);
+            let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+            let reqs = reqs_for(4, steps, 70 + seed);
+            let proto = Sada::with_default(backend.info(), steps);
+            let proto: &dyn Accelerator = &proto;
+            let per_lane = pipe.generate_lanes(&reqs, proto).unwrap();
+            let lockstep = pipe
+                .generate_lanes_mode(&reqs, proto, LaneMode::Lockstep)
+                .unwrap();
+            let nfe = |rs: &[GenResult]| rs.iter().map(|r| r.stats.nfe).sum::<usize>();
+            if nfe(&per_lane) < nfe(&lockstep) {
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "per-lane NFE never beat lockstep across 12 workloads");
+    }
+
+    #[test]
+    fn lane_batch_of_one_matches_generate() {
+        let backend = GmBackend::new(6);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let reqs = reqs_for(1, 9, 5);
+        let proto: &dyn Accelerator = &NoAccel;
+        let lane = pipe.generate_lanes(&reqs, proto).unwrap();
+        let solo = pipe.generate(&reqs[0], &mut NoAccel).unwrap();
+        assert_eq!(lane[0].image.data(), solo.image.data());
+        assert_eq!(lane[0].stats.mode_trace(), solo.stats.mode_trace());
+    }
+
+    #[test]
+    fn lane_engine_rejects_bad_batches() {
+        let backend = GmBackend::new(6);
+        let pipe = Pipeline::new(&backend, SolverKind::Euler);
+        let proto: &dyn Accelerator = &NoAccel;
+        assert!(pipe.generate_lanes(&[], proto).is_err());
+        let mut reqs = reqs_for(2, 5, 1);
+        reqs[1].steps = 9;
+        assert!(pipe.generate_lanes(&reqs, proto).is_err());
+    }
+
+    #[test]
+    fn mixed_guidance_lanes_execute_in_separate_sub_batches() {
+        // two guidance groups over full_b2: every lane still matches its
+        // own sequential run exactly
+        let backend = GmBackend::with_batch_buckets(8, &[2]);
+        let pipe = Pipeline::new(&backend, SolverKind::Euler);
+        let mut reqs = reqs_for(4, 7, 21);
+        reqs[0].guidance = 1.0;
+        reqs[1].guidance = 4.0;
+        reqs[2].guidance = 1.0;
+        reqs[3].guidance = 4.0;
+        let proto: &dyn Accelerator = &NoAccel;
+        let lanes = pipe.generate_lanes(&reqs, proto).unwrap();
+        for (lane, req) in lanes.iter().zip(&reqs) {
+            let solo = pipe.generate(req, &mut NoAccel).unwrap();
+            assert_eq!(lane.image.data(), solo.image.data());
+        }
+    }
+
+    #[test]
+    fn deepcache_lanes_keep_shallow_acceleration_without_buckets() {
+        // no compiled buckets: every full run is a single, so lanes track
+        // deep features lane-locally and the shallow path survives
+        // batching — bit-identical to per-request sequential generation
+        let backend = GmBackend::new(11);
+        let pipe = Pipeline::new(&backend, SolverKind::Euler);
+        let reqs = reqs_for(2, 12, 44);
+        let proto = crate::baselines::DeepCache::new(3);
+        let proto: &dyn Accelerator = &proto;
+        let lanes = pipe.generate_lanes(&reqs, proto).unwrap();
+        for (lane, req) in lanes.iter().zip(&reqs) {
+            assert!(
+                lane.stats.count(crate::pipeline::StepMode::Shallow) > 4,
+                "shallow discount lost under batching: trace={}",
+                lane.stats.mode_trace()
+            );
+            let solo = pipe
+                .generate(req, &mut crate::baselines::DeepCache::new(3))
+                .unwrap();
+            assert_eq!(lane.image.data(), solo.image.data());
+            assert_eq!(lane.stats.mode_trace(), solo.stats.mode_trace());
+        }
+    }
+
+    #[test]
+    fn fn_factory_builds_heterogeneous_lanes() {
+        let backend = GmBackend::new(9);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let steps = 30;
+        let reqs = reqs_for(2, steps, 33);
+        let info = backend.info().clone();
+        let factory = FnFactory(move |lane: usize| -> Box<dyn Accelerator> {
+            if lane == 0 {
+                Box::new(NoAccel)
+            } else {
+                Box::new(Sada::with_default(&info, steps))
+            }
+        });
+        let lanes = pipe.generate_lanes(&reqs, &factory).unwrap();
+        assert_eq!(lanes[0].stats.accel, "baseline");
+        assert_eq!(lanes[1].stats.accel, "sada");
+        assert_eq!(lanes[0].stats.nfe, steps);
+    }
+}

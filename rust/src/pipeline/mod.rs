@@ -8,14 +8,16 @@
 //! experiment harnesses swap them freely.
 
 pub mod decode;
+pub mod lanes;
 pub mod stats;
 
 use anyhow::{Context, Result};
 
+pub use lanes::{AcceleratorFactory, LaneMode};
 pub use stats::{RunStats, StepMode};
 
 use crate::runtime::{ModelArgs, ModelBackend, ModelOut};
-use crate::solvers::{build_solver, Solver, SolverKind};
+use crate::solvers::{build_solver, Schedule, Solver, SolverKind};
 use crate::tensor::Tensor;
 
 /// What to execute at one timestep.
@@ -71,6 +73,13 @@ pub trait Accelerator {
     fn observe(&mut self, obs: &StepObs);
     fn reset(&mut self);
 
+    /// A fresh instance with the same configuration but no trajectory
+    /// state. The lane engine ([`lanes`]) clones one per request so every
+    /// lane plans from its *own* history — SADA's criterion is
+    /// per-trajectory, so batched requests must not share accelerator
+    /// state (the prototype itself is never mutated).
+    fn clone_fresh(&self) -> Box<dyn Accelerator>;
+
     /// For [`StepPlan::SkipExtrapolate`]: produce x_next from the current
     /// state + gradient using internal history (SADA overrides with AM-3).
     fn extrapolate(&self, _x: &Tensor, _y_now: &Tensor, _dt: f64) -> Option<Tensor> {
@@ -98,6 +107,9 @@ impl Accelerator for NoAccel {
     }
     fn observe(&mut self, _obs: &StepObs) {}
     fn reset(&mut self) {}
+    fn clone_fresh(&self) -> Box<dyn Accelerator> {
+        Box::new(NoAccel)
+    }
 }
 
 /// One generation request.
@@ -120,24 +132,32 @@ pub struct GenResult {
 pub struct Pipeline<'a, B: ModelBackend> {
     pub backend: &'a B,
     pub solver_kind: SolverKind,
+    /// Noise schedule used to build solvers. Callers with a runtime pass
+    /// the manifest schedule via [`Pipeline::with_schedule`] so retrained
+    /// artifacts with different constants stay consistent end to end.
+    schedule: Schedule,
 }
 
 impl<'a, B: ModelBackend> Pipeline<'a, B> {
     pub fn new(backend: &'a B, solver_kind: SolverKind) -> Self {
-        Self { backend, solver_kind }
+        Self::with_schedule(backend, solver_kind, Schedule::default_ddpm())
     }
 
-    fn schedule(&self) -> crate::solvers::Schedule {
-        // NOTE: the manifest schedule constants equal Schedule::default_ddpm;
-        // keep the construction manifest-driven so retrained artifacts with a
-        // different schedule stay consistent.
-        crate::solvers::Schedule::default_ddpm()
+    /// Construct with an explicit (manifest-driven) schedule. Prefer this
+    /// over [`Pipeline::new`] whenever a `Manifest` is available:
+    /// `Pipeline::with_schedule(&backend, kind, manifest.schedule.to_schedule())`.
+    pub fn with_schedule(backend: &'a B, solver_kind: SolverKind, schedule: Schedule) -> Self {
+        Self { backend, solver_kind, schedule }
+    }
+
+    pub(crate) fn schedule(&self) -> &Schedule {
+        &self.schedule
     }
 
     /// Run one request under `accel`, returning the sample and statistics.
     pub fn generate(&self, req: &GenRequest, accel: &mut dyn Accelerator) -> Result<GenResult> {
         let info = self.backend.info().clone();
-        let mut solver: Box<dyn Solver> = build_solver(self.solver_kind, &self.schedule(), req.steps);
+        let mut solver: Box<dyn Solver> = build_solver(self.solver_kind, &self.schedule, req.steps);
         solver.reset();
         accel.reset();
 
@@ -172,6 +192,9 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             };
 
             let mut fresh = false;
+            // NOTE: the lane engine (lanes.rs) mirrors these arms for its
+            // per-lane step body — changes here must be applied there too
+            // (the lane bit-identity property tests pin the executed paths).
             let (model_out, x0, x_next) = match &plan {
                 StepPlan::Full => {
                     let mo = self.run_model("full", &x, t_norm, req)?;
@@ -294,8 +317,19 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             reqs.iter().all(|r| r.steps == steps),
             "batch must share step count"
         );
+        // lockstep batching runs one model call with a single `gs` scalar:
+        // silently applying reqs[0].guidance to every request would produce
+        // wrong images, so mixed guidance is a hard error here (the lane
+        // engine lifts the restriction by sub-batching per guidance value)
+        let gs = reqs[0].guidance;
+        anyhow::ensure!(
+            reqs.iter().all(|r| r.guidance == gs),
+            "lockstep batch requires uniform guidance, got {:?}; use \
+             Pipeline::generate_lanes for mixed-guidance batches",
+            reqs.iter().map(|r| r.guidance).collect::<Vec<_>>()
+        );
         let mut solver: Box<dyn Solver> =
-            build_solver(self.solver_kind, &self.schedule(), steps);
+            build_solver(self.solver_kind, &self.schedule, steps);
         solver.reset();
         accel.reset();
 
@@ -309,9 +343,12 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         }
         let mut x = Tensor::new(xdata, &[b, h, w, c])?;
         let cond = Tensor::new(cdata, &[b, info.cond_dim])?;
-        let gs = reqs[0].guidance;
 
-        let mut stats = RunStats::new(accel.name(), steps);
+        // per-request accounting: under lockstep every request experiences
+        // every executed step, but each result owns its stats (no shared
+        // clone) so downstream consumers can mutate/aggregate independently
+        let mut stats: Vec<RunStats> =
+            (0..b).map(|_| RunStats::new(accel.name(), steps)).collect();
         let timer = crate::report::Timer::start();
         let mut last_out: Option<Tensor> = None;
 
@@ -391,21 +428,24 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 t_norm,
             };
             accel.observe(&obs);
-            stats.record_step(&plan, fresh);
+            for s in stats.iter_mut() {
+                s.record_step(&plan, fresh);
+            }
             last_out = Some(model_out);
             x = x_next;
         }
-        stats.wall_ms = timer.elapsed_ms();
-        stats.nfe = stats.fresh_steps;
+        let wall_ms = timer.elapsed_ms();
+        for s in stats.iter_mut() {
+            s.wall_ms = wall_ms;
+            s.nfe = s.fresh_steps;
+        }
 
         // split the batch back into per-request images
-        let plane = h * w * c;
-        let mut results = Vec::with_capacity(b);
-        for bi in 0..b {
-            let img =
-                Tensor::new(x.data()[bi * plane..(bi + 1) * plane].to_vec(), &[1, h, w, c])?;
-            results.push(GenResult { image: img, stats: stats.clone() });
-        }
+        let results = crate::tensor::ops::unstack_rows(&x)
+            .into_iter()
+            .zip(stats)
+            .map(|(image, stats)| GenResult { image, stats })
+            .collect();
         Ok(results)
     }
 
@@ -460,6 +500,9 @@ mod tests {
         }
         fn observe(&mut self, _o: &StepObs) {}
         fn reset(&mut self) {}
+        fn clone_fresh(&self) -> Box<dyn Accelerator> {
+            Box::new(BadPlanner)
+        }
     }
 
     #[test]
@@ -530,6 +573,34 @@ mod tests {
         let pipe = Pipeline::new(&b, SolverKind::Euler);
         let reqs = vec![req(1, 5), req(2, 7)];
         assert!(pipe.generate_batch(&reqs, &mut NoAccel).is_err());
+    }
+
+    #[test]
+    fn mixed_guidance_batches_rejected_with_clear_error() {
+        // regression: reqs[0].guidance used to be silently applied batch-wide
+        let b = GmBackend::with_batch_buckets(7, &[2]);
+        let pipe = Pipeline::new(&b, SolverKind::Euler);
+        let mut r2 = req(2, 5);
+        r2.guidance = 7.5;
+        let err = pipe.generate_batch(&[req(1, 5), r2], &mut NoAccel).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("uniform guidance"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn manifest_schedule_overrides_default() {
+        // the solver schedule must be the constructor's, not default_ddpm
+        let b = GmBackend::new(9);
+        let default_pipe = Pipeline::new(&b, SolverKind::Euler);
+        let custom = crate::solvers::Schedule::new(400, 5e-4, 1e-2);
+        let custom_pipe = Pipeline::with_schedule(&b, SolverKind::Euler, custom.clone());
+        assert_eq!(custom_pipe.schedule().train_t, 400);
+        let base = default_pipe.generate(&req(4, 8), &mut NoAccel).unwrap();
+        let over = custom_pipe.generate(&req(4, 8), &mut NoAccel).unwrap();
+        assert!(
+            ops::mse(&base.image, &over.image) > 1e-9,
+            "custom schedule must change the trajectory"
+        );
     }
 
     #[test]

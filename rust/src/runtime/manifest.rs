@@ -85,6 +85,78 @@ impl ModelInfo {
             .map(|(k, v)| (k.as_str(), v.n_keep))
             .collect()
     }
+
+    /// Compiled full-batch bucket sizes, ascending and deduplicated:
+    /// every `full_b{n}` variant of kind "full" with n > 1. The lane engine
+    /// gathers executing lanes into the largest fitting bucket from this
+    /// list (see [`split_into_buckets`]).
+    pub fn full_batch_buckets(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .variants
+            .iter()
+            .filter(|(_, v)| v.kind == "full")
+            .filter_map(|(name, _)| name.strip_prefix("full_b"))
+            .filter_map(|n| n.parse::<usize>().ok())
+            .filter(|n| *n > 1)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Name of the compiled variant executing a sub-batch of `n` lanes:
+    /// `full` for singles, `full_b{n}` otherwise.
+    pub fn full_variant_for(n: usize) -> String {
+        if n <= 1 {
+            "full".to_string()
+        } else {
+            format!("full_b{n}")
+        }
+    }
+}
+
+/// Split `n` executing lanes across compiled batch buckets using the
+/// fewest model launches (exact DP over the tiny bucket list; `full`
+/// singles are always available). The returned chunk sizes sum to `n` and
+/// are descending, so an oversized gather is executed as several bucket
+/// launches plus singles — no compiled bucket of the exact batch size is
+/// ever required. Greedy largest-first would be optimal for the usual
+/// power-of-two buckets but wastes launches on sets like {3, 4}
+/// (greedy 6 -> [4, 1, 1]; DP -> [3, 3]).
+pub fn split_into_buckets(n: usize, buckets: &[usize]) -> Vec<usize> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut sizes: Vec<usize> = buckets
+        .iter()
+        .copied()
+        .filter(|b| *b > 1 && *b <= n)
+        .collect();
+    sizes.push(1);
+    sizes.sort_unstable();
+    sizes.dedup();
+    // best[k] = fewest launches covering exactly k lanes; pick[k] = the
+    // chunk size chosen at k (smallest size among optimal choices)
+    let inf = usize::MAX;
+    let mut best = vec![inf; n + 1];
+    let mut pick = vec![0usize; n + 1];
+    best[0] = 0;
+    for k in 1..=n {
+        for &s in &sizes {
+            if s <= k && best[k - s] != inf && best[k - s] + 1 < best[k] {
+                best[k] = best[k - s] + 1;
+                pick[k] = s;
+            }
+        }
+    }
+    let mut chunks = Vec::with_capacity(best[n]);
+    let mut rem = n;
+    while rem > 0 {
+        chunks.push(pick[rem]);
+        rem -= pick[rem];
+    }
+    chunks.sort_unstable_by(|a, b| b.cmp(a));
+    chunks
 }
 
 #[derive(Clone, Debug)]
@@ -92,6 +164,16 @@ pub struct ScheduleCfg {
     pub train_t: usize,
     pub beta_start: f64,
     pub beta_end: f64,
+}
+
+impl ScheduleCfg {
+    /// Materialize the solver `Schedule` from the manifest constants.
+    /// Pipelines built over a runtime must use this instead of
+    /// `Schedule::default_ddpm` so retrained artifacts with a different
+    /// noise schedule stay consistent end to end.
+    pub fn to_schedule(&self) -> crate::solvers::Schedule {
+        crate::solvers::Schedule::new(self.train_t, self.beta_start, self.beta_end)
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -272,6 +354,69 @@ mod tests {
         assert_eq!(mi.variant("full").unwrap().outputs.len(), 3);
         assert_eq!(mi.prune_variants().len(), 2);
         assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn schedule_cfg_materializes_manifest_constants() {
+        let m = test_manifest();
+        let s = m.schedule.to_schedule();
+        assert_eq!(s.train_t, 1000);
+        // must equal the default only because the constants match; a custom
+        // manifest must override it (the Pipeline::schedule TODO fix)
+        let custom = ScheduleCfg { train_t: 500, beta_start: 2e-4, beta_end: 1e-2 };
+        let cs = custom.to_schedule();
+        assert_eq!(cs.train_t, 500);
+        assert_eq!(cs.abar.len(), 501);
+        assert!((cs.abar[1] - (1.0 - 2e-4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_batch_buckets_enumerates_full_b_variants() {
+        let mut mi = test_manifest().model("mock_eps").unwrap().clone();
+        assert!(mi.full_batch_buckets().is_empty());
+        let proto = mi.variant("full").unwrap().clone();
+        for n in [8usize, 2, 4] {
+            let mut v = proto.clone();
+            v.batch = n;
+            mi.variants.insert(format!("full_b{n}"), v);
+        }
+        // a non-"full"-kind name matching the prefix must not count
+        let mut odd = proto.clone();
+        odd.kind = "shallow".into();
+        mi.variants.insert("full_b16".into(), odd);
+        assert_eq!(mi.full_batch_buckets(), vec![2, 4, 8]);
+        assert_eq!(ModelInfo::full_variant_for(1), "full");
+        assert_eq!(ModelInfo::full_variant_for(4), "full_b4");
+    }
+
+    #[test]
+    fn split_into_buckets_covers_any_count() {
+        assert_eq!(split_into_buckets(7, &[2, 4, 8]), vec![4, 2, 1]);
+        assert_eq!(split_into_buckets(8, &[2, 4, 8]), vec![8]);
+        assert_eq!(split_into_buckets(3, &[2, 4, 8]), vec![2, 1]);
+        assert_eq!(split_into_buckets(11, &[2, 4, 8]), vec![8, 2, 1]);
+        assert_eq!(split_into_buckets(5, &[]), vec![1, 1, 1, 1, 1]);
+        assert!(split_into_buckets(0, &[2, 4]).is_empty());
+        // chunk sizes always sum to n
+        for n in 0..40 {
+            let total: usize = split_into_buckets(n, &[2, 4, 8]).iter().sum();
+            assert_eq!(total, n);
+        }
+    }
+
+    #[test]
+    fn split_minimizes_launches_on_non_divisible_buckets() {
+        // greedy would pick [4, 1, 1] (3 launches); DP finds [3, 3]
+        assert_eq!(split_into_buckets(6, &[3, 4]), vec![3, 3]);
+        // 9 admits several 3-launch covers (e.g. [4, 4, 1], [3, 3, 3]) —
+        // only the launch count is contractual
+        assert_eq!(split_into_buckets(9, &[3, 4]).len(), 3);
+        assert_eq!(split_into_buckets(10, &[3, 4]), vec![4, 3, 3]);
+        // sums and launch-count optimality over a scan
+        for n in 0..30usize {
+            let chunks = split_into_buckets(n, &[3, 4]);
+            assert_eq!(chunks.iter().sum::<usize>(), n);
+        }
     }
 
     #[test]

@@ -130,12 +130,30 @@ impl GmBackend {
         }
     }
 
-    fn cond_shift(&self, cond: Option<&Tensor>, gs: f32) -> Vec<f32> {
+    /// Like [`GmBackend::new`], but with compiled `full_b{n}` bucket
+    /// variants registered for each size in `buckets`. Batched executions
+    /// evaluate the exact per-sample denoiser row by row, so a bucketed
+    /// launch is bit-identical to the equivalent single launches — the
+    /// property the lane-engine tests rely on.
+    pub fn with_batch_buckets(seed: u64, buckets: &[usize]) -> Self {
+        let mut b = Self::new(seed);
+        let proto = b.info.variants.get("full").unwrap().clone();
+        for &n in buckets {
+            if n <= 1 {
+                continue;
+            }
+            let mut v = proto.clone();
+            v.batch = n;
+            b.info.variants.insert(format!("full_b{n}"), v);
+        }
+        b
+    }
+
+    fn cond_shift(&self, cond: Option<&[f32]>, gs: f32) -> Vec<f32> {
         let dim = self.info.img_numel();
         let mut shift = vec![0.0f32; dim];
-        if let Some(c) = cond {
+        if let Some(cd) = cond {
             // deterministic projection of the cond vector into pixel space
-            let cd = c.data();
             for (i, s) in shift.iter_mut().enumerate() {
                 let mut acc = 0.0f32;
                 for (k, v) in cd.iter().enumerate() {
@@ -163,9 +181,29 @@ impl ModelBackend for GmBackend {
         let j = ((args.t as f64) * self.schedule.train_t as f64).round() as usize;
         let j = j.min(self.schedule.train_t);
         let (a, s) = self.schedule.alpha_sigma(j);
-        let shift = self.cond_shift(args.cond.as_ref(), args.gs);
-        let mut eps = self.gm.eps_star(x.data(), a, s.max(1e-6), &shift);
-        if variant != "full" {
+        let dim = self.info.img_numel();
+        if x.len() % dim != 0 || x.is_empty() {
+            bail!("mock: x has {} elements, not a multiple of {dim}", x.len());
+        }
+        // evaluate the exact denoiser row by row so `full_b{n}` launches are
+        // bit-identical to the equivalent single launches (lane-engine tests)
+        let b = x.len() / dim;
+        let mut eps = Vec::with_capacity(x.len());
+        for bi in 0..b {
+            let row_cond = args.cond.as_ref().map(|c| {
+                let cd = c.data();
+                if c.shape()[0] == b {
+                    let rl = cd.len() / b;
+                    &cd[bi * rl..(bi + 1) * rl]
+                } else {
+                    cd
+                }
+            });
+            let shift = self.cond_shift(row_cond, args.gs);
+            let xr = &x.data()[bi * dim..(bi + 1) * dim];
+            eps.extend(self.gm.eps_star(xr, a, s.max(1e-6), &shift));
+        }
+        if !variant.starts_with("full") {
             // simulate the (small) approximation error of degraded variants
             let mut rng = Rng::new(j as u64 * 7 + 13);
             for e in eps.iter_mut() {
@@ -219,6 +257,33 @@ mod tests {
         let o2 = b.run("full", &a2).unwrap();
         assert_ne!(o1.out.data(), o2.out.data());
         assert_eq!(b.nfe(), 2);
+    }
+
+    #[test]
+    fn batched_variant_rows_bit_identical_to_singles() {
+        let b = GmBackend::with_batch_buckets(3, &[2]);
+        assert!(b.info.variants.contains_key("full_b2"));
+        let mut rng = Rng::new(9);
+        let x0 = Tensor::from_rng(&mut rng, &[1, 8, 8, 1]);
+        let x1 = Tensor::from_rng(&mut rng, &[1, 8, 8, 1]);
+        let c0 = Tensor::from_rng(&mut rng, &[1, 32]);
+        let c1 = Tensor::from_rng(&mut rng, &[1, 32]);
+        let xb = crate::tensor::ops::stack_rows(&[&x0, &x1]);
+        let cb = crate::tensor::ops::stack_rows(&[&c0, &c1]);
+        let args = |x: Tensor, c: Tensor| ModelArgs {
+            x: Some(x),
+            t: 0.5,
+            cond: Some(c),
+            gs: 3.0,
+            ..Default::default()
+        };
+        let batched = b.run("full_b2", &args(xb, cb)).unwrap();
+        let s0 = b.run("full", &args(x0, c0)).unwrap();
+        let s1 = b.run("full", &args(x1, c1)).unwrap();
+        let rows = crate::tensor::ops::unstack_rows(&batched.out);
+        assert_eq!(rows[0].data(), s0.out.data());
+        assert_eq!(rows[1].data(), s1.out.data());
+        assert_eq!(b.nfe(), 3);
     }
 
     #[test]

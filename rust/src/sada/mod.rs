@@ -63,12 +63,19 @@ impl Sada {
             .map(|(v, n)| PruneBucket { variant: v.to_string(), n_keep: n })
             .collect();
         buckets.sort_by_key(|b| b.n_keep);
+        Self::from_parts(cfg, buckets, info.img, info.patch)
+    }
+
+    /// Single construction point for the zero-trajectory state: `new` and
+    /// `fresh` (per-lane clones) both go through here, so a new stateful
+    /// field only has to be initialized once.
+    fn from_parts(cfg: SadaConfig, buckets: Vec<PruneBucket>, img: [usize; 3], patch: usize) -> Self {
         Self {
             x0_buf: X0Buffer::new(cfg.lagrange_nodes, 0.0),
             hist: GradHistory::new(4),
             buckets,
-            img: info.img,
-            patch: info.patch,
+            img,
+            patch,
             cfg,
             pending: StepPlan::Full,
             stable_streak: 0,
@@ -81,6 +88,11 @@ impl Sada {
 
     pub fn with_default(info: &ModelInfo, steps: usize) -> Self {
         Self::new(info, SadaConfig::default().for_steps(steps))
+    }
+
+    /// Same configuration, no trajectory state (per-lane instances).
+    fn fresh(&self) -> Sada {
+        Self::from_parts(self.cfg.clone(), self.buckets.clone(), self.img, self.patch)
     }
 
     fn evaluate_criterion(&mut self, obs: &StepObs) -> Option<(bool, f64, Tensor, Tensor)> {
@@ -209,6 +221,10 @@ impl Accelerator for Sada {
     fn reconstruct_x0(&self, t_norm: f64) -> Option<Tensor> {
         self.x0_buf.reconstruct(t_norm)
     }
+
+    fn clone_fresh(&self) -> Box<dyn Accelerator> {
+        Box::new(self.fresh())
+    }
 }
 
 /// SADA ablation: step-wise only, using the *plain FDM-3* extrapolation
@@ -251,6 +267,10 @@ impl Accelerator for SadaFdm {
 
     fn reconstruct_x0(&self, t_norm: f64) -> Option<Tensor> {
         self.inner.reconstruct_x0(t_norm)
+    }
+
+    fn clone_fresh(&self) -> Box<dyn Accelerator> {
+        Box::new(SadaFdm { inner: self.inner.fresh() })
     }
 }
 

@@ -15,12 +15,15 @@ pub struct DpmPP2M {
     grid: Vec<usize>,
     prev_x0: Option<Tensor>,
     prev_h: Option<f64>,
+    /// Reused buffer for the 2M blend D (allocation-free step loop; see
+    /// `bench_micro` for the win).
+    scratch_d: Option<Tensor>,
 }
 
 impl DpmPP2M {
     pub fn new(schedule: Schedule, steps: usize) -> Self {
         let grid = schedule.timestep_grid(steps);
-        Self { schedule, grid, prev_x0: None, prev_h: None }
+        Self { schedule, grid, prev_x0: None, prev_h: None, scratch_d: None }
     }
 
     fn j(&self, i: usize) -> usize {
@@ -41,21 +44,28 @@ impl Solver for DpmPP2M {
         let (_a_t, s_t) = self.schedule.alpha_sigma(j_from);
         let (a_s, s_s) = self.schedule.alpha_sigma(j_to);
         let h = self.schedule.lambda(j_to) - self.schedule.lambda(j_from);
-        let d = match (&self.prev_x0, self.prev_h) {
+        let coef_x = (s_s / s_t.max(1e-12)) as f32;
+        let coef_d = (-a_s * ((-h).exp_m1())) as f32;
+        let out = match (&self.prev_x0, self.prev_h) {
             (Some(px0), Some(ph)) if h.abs() > 1e-12 => {
                 let r = ph / h;
-                ops::lincomb2(
+                // blend into the reused scratch buffer: the hot step loop
+                // allocates only the returned state
+                let d = self.scratch_d.get_or_insert_with(|| Tensor::zeros(x0.shape()));
+                if !d.same_shape(x0) {
+                    *d = Tensor::zeros(x0.shape());
+                }
+                ops::lincomb2_into(
                     (1.0 + 1.0 / (2.0 * r)) as f32,
                     x0,
                     (-1.0 / (2.0 * r)) as f32,
                     px0,
-                )
+                    d,
+                );
+                ops::lincomb2(coef_x, x, coef_d, d)
             }
-            _ => x0.clone(),
+            _ => ops::lincomb2(coef_x, x, coef_d, x0),
         };
-        let coef_x = (s_s / s_t.max(1e-12)) as f32;
-        let coef_d = (-a_s * ((-h).exp_m1())) as f32;
-        let out = ops::lincomb2(coef_x, x, coef_d, &d);
         self.prev_x0 = Some(x0.clone());
         self.prev_h = Some(h);
         out

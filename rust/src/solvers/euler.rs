@@ -11,12 +11,14 @@ use crate::tensor::{ops, Tensor};
 pub struct EulerDdim {
     schedule: Schedule,
     grid: Vec<usize>,
+    /// Reused buffer for the consistent eps (allocation-free step loop).
+    scratch_eps: Option<Tensor>,
 }
 
 impl EulerDdim {
     pub fn new(schedule: Schedule, steps: usize) -> Self {
         let grid = schedule.timestep_grid(steps);
-        Self { schedule, grid }
+        Self { schedule, grid, scratch_eps: None }
     }
 
     fn j(&self, i: usize) -> usize {
@@ -26,12 +28,16 @@ impl EulerDdim {
 
 impl Solver for EulerDdim {
     fn step(&mut self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
-        let j_from = self.j(i);
-        let j_to = self.j(i + 1);
-        let eps = self.model_out_from_x0(x, x0, i);
-        let (a, s) = self.schedule.alpha_sigma(j_to);
-        let _ = j_from;
-        ops::lincomb2(a as f32, x0, s as f32, &eps)
+        let (a_c, s_c) = self.schedule.alpha_sigma(self.j(i));
+        let s_c = s_c.max(1e-12);
+        let (a, s) = self.schedule.alpha_sigma(self.j(i + 1));
+        let eps = self.scratch_eps.get_or_insert_with(|| Tensor::zeros(x.shape()));
+        if !eps.same_shape(x) {
+            *eps = Tensor::zeros(x.shape());
+        }
+        // same formula as model_out_from_x0, into the reused buffer
+        ops::lincomb2_into((1.0 / s_c) as f32, x, (-a_c / s_c) as f32, x0, eps);
+        ops::lincomb2(a as f32, x0, s as f32, eps)
     }
 
     fn reset(&mut self) {}

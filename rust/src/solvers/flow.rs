@@ -12,6 +12,8 @@ pub const T_MIN: f64 = 1e-3;
 
 pub struct FlowEuler {
     grid: Vec<f64>,
+    /// Reused buffer for the consistent velocity (allocation-free step loop).
+    scratch_v: Option<Tensor>,
 }
 
 impl FlowEuler {
@@ -19,7 +21,7 @@ impl FlowEuler {
         let grid = (0..=steps)
             .map(|i| 1.0 + (T_MIN - 1.0) * i as f64 / steps as f64)
             .collect();
-        Self { grid }
+        Self { grid, scratch_v: None }
     }
 }
 
@@ -27,9 +29,14 @@ impl Solver for FlowEuler {
     fn step(&mut self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
         let t = self.grid[i];
         let t_next = self.grid[i + 1];
-        // v consistent with (x, x0): v = (x - x0) / t
-        let v = self.model_out_from_x0(x, x0, i);
-        ops::lincomb2(1.0, x, (t_next - t) as f32, &v)
+        let tc = t.max(1e-9);
+        let v = self.scratch_v.get_or_insert_with(|| Tensor::zeros(x.shape()));
+        if !v.same_shape(x) {
+            *v = Tensor::zeros(x.shape());
+        }
+        // v consistent with (x, x0): v = (x - x0) / t, into the reused buffer
+        ops::lincomb2_into((1.0 / tc) as f32, x, (-1.0 / tc) as f32, x0, v);
+        ops::lincomb2(1.0, x, (t_next - t) as f32, v)
     }
 
     fn reset(&mut self) {}

@@ -21,12 +21,14 @@ use crate::tensor::{ops, Tensor};
 pub struct HeunEdm {
     schedule: Schedule,
     grid: Vec<usize>,
+    /// Reused buffer for the consistent eps (allocation-free step loop).
+    scratch_eps: Option<Tensor>,
 }
 
 impl HeunEdm {
     pub fn new(schedule: Schedule, steps: usize) -> Self {
         let grid = schedule.timestep_grid(steps);
-        Self { schedule, grid }
+        Self { schedule, grid, scratch_eps: None }
     }
 
     fn j(&self, i: usize) -> usize {
@@ -36,24 +38,26 @@ impl HeunEdm {
 
 impl Solver for HeunEdm {
     fn step(&mut self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
-        let j_from = self.j(i);
         let j_to = self.j(i + 1);
-        let eps = self.model_out_from_x0(x, x0, i);
-        let (a_s, s_s) = self.schedule.alpha_sigma(j_to);
-        // predictor: DDIM to j_to
-        let x_pred = ops::lincomb2(a_s as f32, x0, s_s as f32, &eps);
         if j_to == 0 {
             return x0.clone();
         }
+        let (a_c, s_c) = self.schedule.alpha_sigma(self.j(i));
+        let s_c = s_c.max(1e-12);
+        let (a_s, s_s) = self.schedule.alpha_sigma(j_to);
+        let eps = self.scratch_eps.get_or_insert_with(|| Tensor::zeros(x.shape()));
+        if !eps.same_shape(x) {
+            *eps = Tensor::zeros(x.shape());
+        }
+        // same formula as model_out_from_x0, into the reused buffer
+        ops::lincomb2_into((1.0 / s_c) as f32, x, (-a_c / s_c) as f32, x0, eps);
+        // predictor: DDIM to j_to
+        let x_pred = ops::lincomb2(a_s as f32, x0, s_s as f32, eps);
         // corrector: average the data predictions at both endpoints using
         // the consistent eps at the predicted point
-        let x0_pred = {
-            let (a, s) = self.schedule.alpha_sigma(j_to);
-            ops::lincomb2((1.0 / a) as f32, &x_pred, (-s / a) as f32, &eps)
-        };
+        let x0_pred = ops::lincomb2((1.0 / a_s) as f32, &x_pred, (-s_s / a_s) as f32, eps);
         let x0_avg = ops::lincomb2(0.5, x0, 0.5, &x0_pred);
-        let _ = j_from;
-        ops::lincomb2(a_s as f32, &x0_avg, s_s as f32, &eps)
+        ops::lincomb2(a_s as f32, &x0_avg, s_s as f32, eps)
     }
 
     fn reset(&mut self) {}

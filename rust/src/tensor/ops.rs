@@ -26,6 +26,18 @@ pub fn lincomb2(a: f32, x: &Tensor, b: f32, y: &Tensor) -> Tensor {
     Tensor::new(data, x.shape()).expect("same shape")
 }
 
+/// out <- a*x + b*y, reusing `out`'s buffer (no allocation). `out` must
+/// already have the same shape; results are bitwise identical to
+/// [`lincomb2`] (same expression, same order).
+pub fn lincomb2_into(a: f32, x: &Tensor, b: f32, y: &Tensor, out: &mut Tensor) {
+    // hard assert (not debug_assert): a mismatched `out` would otherwise
+    // silently keep stale tail values in release builds
+    assert!(x.same_shape(y) && x.same_shape(out));
+    for ((oi, xi), yi) in out.data_mut().iter_mut().zip(x.data()).zip(y.data()) {
+        *oi = a * xi + b * yi;
+    }
+}
+
 /// out = a*x + b*y + c*z (allocating)
 pub fn lincomb3(a: f32, x: &Tensor, b: f32, y: &Tensor, c: f32, z: &Tensor) -> Tensor {
     debug_assert!(x.same_shape(y) && y.same_shape(z));
@@ -37,6 +49,20 @@ pub fn lincomb3(a: f32, x: &Tensor, b: f32, y: &Tensor, c: f32, z: &Tensor) -> T
         .map(|((xi, yi), zi)| a * xi + b * yi + c * zi)
         .collect();
     Tensor::new(data, x.shape()).expect("same shape")
+}
+
+/// out <- a*x + b*y + c*z, reusing `out`'s buffer (no allocation).
+pub fn lincomb3_into(a: f32, x: &Tensor, b: f32, y: &Tensor, c: f32, z: &Tensor, out: &mut Tensor) {
+    assert!(x.same_shape(y) && y.same_shape(z) && x.same_shape(out));
+    for (((oi, xi), yi), zi) in out
+        .data_mut()
+        .iter_mut()
+        .zip(x.data())
+        .zip(y.data())
+        .zip(z.data())
+    {
+        *oi = a * xi + b * yi + c * zi;
+    }
 }
 
 /// out = a*w + b*x + c*y + d*z (allocating) — the AM-3 update shape.
@@ -59,6 +85,68 @@ pub fn lincomb4(
         .map(|(((wi, xi), yi), zi)| a * wi + b * xi + c * yi + d * zi)
         .collect();
     Tensor::new(data, w.shape()).expect("same shape")
+}
+
+/// out <- a*w + b*x + c*y + d*z, reusing `out`'s buffer (no allocation).
+#[allow(clippy::too_many_arguments)]
+pub fn lincomb4_into(
+    a: f32,
+    w: &Tensor,
+    b: f32,
+    x: &Tensor,
+    c: f32,
+    y: &Tensor,
+    d: f32,
+    z: &Tensor,
+    out: &mut Tensor,
+) {
+    assert!(w.same_shape(x) && x.same_shape(y) && y.same_shape(z) && w.same_shape(out));
+    for ((((oi, wi), xi), yi), zi) in out
+        .data_mut()
+        .iter_mut()
+        .zip(w.data())
+        .zip(x.data())
+        .zip(y.data())
+        .zip(z.data())
+    {
+        *oi = a * wi + b * xi + c * yi + d * zi;
+    }
+}
+
+/// Batch-axis gather: stack `[1, ...]`-shaped (or generally `[b_i, ...]`)
+/// tensors along axis 0 into one `[sum b_i, ...]` tensor. All inputs must
+/// share the trailing dimensions. This is the lane engine's sub-batch
+/// assembly primitive (lanes planning Full are gathered into the largest
+/// fitting compiled bucket).
+pub fn stack_rows(xs: &[&Tensor]) -> Tensor {
+    assert!(!xs.is_empty(), "stack_rows of zero tensors");
+    let tail = &xs[0].shape()[1..];
+    let mut rows = 0usize;
+    let mut data = Vec::with_capacity(xs.iter().map(|x| x.len()).sum());
+    for x in xs {
+        debug_assert_eq!(&x.shape()[1..], tail, "stack_rows: trailing dims differ");
+        rows += x.shape()[0];
+        data.extend_from_slice(x.data());
+    }
+    let mut shape = vec![rows];
+    shape.extend_from_slice(tail);
+    Tensor::new(data, &shape).expect("consistent trailing dims")
+}
+
+/// Batch-axis scatter: split a `[b, ...]` tensor back into `b` tensors of
+/// shape `[1, ...]` (the inverse of [`stack_rows`] over unit rows).
+pub fn unstack_rows(x: &Tensor) -> Vec<Tensor> {
+    let b = x.shape()[0];
+    let tail = &x.shape()[1..];
+    let plane: usize = tail.iter().product();
+    let mut shape = vec![1usize];
+    shape.extend_from_slice(tail);
+    (0..b)
+        .map(|bi| {
+            Tensor::new(x.data()[bi * plane..(bi + 1) * plane].to_vec(), &shape)
+                .expect("row slice matches shape")
+        })
+        .collect()
 }
 
 pub fn scale(x: &Tensor, a: f32) -> Tensor {
@@ -167,6 +255,46 @@ mod tests {
         assert_eq!(r3.data(), &[2.0 - 0.5 + 1.5, -2.0 - 2.0 + 0.0]);
         let r4 = lincomb4(1.0, &a, 1.0, &b, 1.0, &c, 1.0, &d);
         assert_eq!(r4.data(), &[5.5, 2.0]);
+    }
+
+    #[test]
+    fn into_variants_match_allocating() {
+        let a = t(&[1.0, -1.0, 0.25]);
+        let b = t(&[0.5, 2.0, -4.0]);
+        let c = t(&[3.0, 0.0, 1.0]);
+        let d = t(&[1.0, 1.0, -2.0]);
+        let mut out = Tensor::zeros(&[3]);
+        lincomb2_into(2.0, &a, -0.5, &b, &mut out);
+        assert_eq!(out.data(), lincomb2(2.0, &a, -0.5, &b).data());
+        lincomb3_into(2.0, &a, -1.0, &b, 0.5, &c, &mut out);
+        assert_eq!(out.data(), lincomb3(2.0, &a, -1.0, &b, 0.5, &c).data());
+        lincomb4_into(1.0, &a, 1.0, &b, 1.0, &c, 1.0, &d, &mut out);
+        assert_eq!(out.data(), lincomb4(1.0, &a, 1.0, &b, 1.0, &c, 1.0, &d).data());
+    }
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let a = Tensor::new(vec![1.0, 2.0], &[1, 2]).unwrap();
+        let b = Tensor::new(vec![3.0, 4.0], &[1, 2]).unwrap();
+        let c = Tensor::new(vec![5.0, 6.0], &[1, 2]).unwrap();
+        let s = stack_rows(&[&a, &b, &c]);
+        assert_eq!(s.shape(), &[3, 2]);
+        assert_eq!(s.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let rows = unstack_rows(&s);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].data(), a.data());
+        assert_eq!(rows[1].data(), b.data());
+        assert_eq!(rows[2].data(), c.data());
+        assert_eq!(rows[2].shape(), &[1, 2]);
+    }
+
+    #[test]
+    fn stack_rows_concatenates_multi_row_inputs() {
+        let a = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let b = Tensor::new(vec![5.0, 6.0], &[1, 2]).unwrap();
+        let s = stack_rows(&[&a, &b]);
+        assert_eq!(s.shape(), &[3, 2]);
+        assert_eq!(s.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
     }
 
     #[test]

@@ -77,6 +77,9 @@ fn token_prune_variant_executes() {
         }
         fn observe(&mut self, _o: &StepObs) {}
         fn reset(&mut self) {}
+        fn clone_fresh(&self) -> Box<dyn Accelerator> {
+            Box::new(ForcePrune)
+        }
     }
     let base = pipe.generate(&req, &mut NoAccel).unwrap();
     let res = pipe.generate(&req, &mut ForcePrune).unwrap();
@@ -150,6 +153,56 @@ fn batched_variant_matches_sequential() {
         let solo = pipe.generate(r, &mut NoAccel).unwrap();
         let mse = ops::mse(&solo.image, &batched[i].image);
         assert!(mse < 1e-6, "request {i}: batched vs solo mse={mse}");
+    }
+}
+
+#[test]
+fn lane_engine_matches_sequential_without_exact_bucket() {
+    // batch of 3 has no compiled full_b3: the lane engine must split the
+    // gather across smaller buckets / singles and still match sequential
+    let Some(rt) = runtime() else { return };
+    let backend = rt.model_backend("sd2_tiny").unwrap();
+    let pipe = Pipeline::with_schedule(
+        &backend,
+        SolverKind::DpmPP,
+        rt.manifest.schedule.to_schedule(),
+    );
+    let reqs: Vec<GenRequest> = (0..3).map(|i| request(&rt, i, 10)).collect();
+    use sada::pipeline::Accelerator;
+    let proto: &dyn Accelerator = &NoAccel;
+    let lanes = pipe.generate_lanes(&reqs, proto).unwrap();
+    assert_eq!(lanes.len(), 3);
+    for (i, r) in reqs.iter().enumerate() {
+        let solo = pipe.generate(r, &mut NoAccel).unwrap();
+        let mse = ops::mse(&solo.image, &lanes[i].image);
+        assert!(mse < 1e-6, "lane {i}: lanes vs solo mse={mse}");
+        assert_eq!(lanes[i].stats.nfe, solo.stats.nfe, "lane {i} NFE");
+    }
+}
+
+#[test]
+fn lane_engine_sada_reports_per_lane_stats_on_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let backend = rt.model_backend("sd2_tiny").unwrap();
+    let pipe = Pipeline::with_schedule(
+        &backend,
+        SolverKind::DpmPP,
+        rt.manifest.schedule.to_schedule(),
+    );
+    let mut reqs: Vec<GenRequest> = (0..3).map(|i| request(&rt, i, 30)).collect();
+    // divergent guidance per lane: legal under the lane engine (sub-batched
+    // per gs), illegal under lockstep generate_batch
+    reqs[0].guidance = 1.0;
+    reqs[1].guidance = 4.0;
+    reqs[2].guidance = 8.0;
+    use sada::pipeline::Accelerator;
+    let proto = Sada::with_default(backend.info(), 30);
+    let proto: &dyn Accelerator = &proto;
+    let lanes = pipe.generate_lanes(&reqs, proto).unwrap();
+    for (i, lane) in lanes.iter().enumerate() {
+        assert_eq!(lane.stats.modes.len(), 30, "lane {i}");
+        assert_eq!(lane.stats.nfe, lane.stats.fresh_steps, "lane {i}");
+        assert!(lane.image.data().iter().all(|v| v.is_finite()), "lane {i}");
     }
 }
 
