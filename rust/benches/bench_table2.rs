@@ -64,5 +64,10 @@ fn main() -> anyhow::Result<()> {
     // compiled bucket
     println!();
     sada::exp::serving::run_lane_sweep("artifacts", "sd2_tiny", 25, &[2, 3, 5, 8])?;
+
+    // skip-plan cache: hit rate + NFE cut of speculative warm-start replay
+    // on a repeated-prompt trace (also refreshes BENCH_serving.json)
+    println!();
+    sada::exp::serving::run_plancache_sweep("artifacts", "sd2_tiny", 25, 32, 4)?;
     Ok(())
 }

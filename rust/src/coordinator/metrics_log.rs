@@ -135,6 +135,23 @@ impl MetricsLog {
         self.observe_ms("batch_execute", ms);
     }
 
+    /// Per-request plan-cache outcome (hit/miss/divergence counters plus a
+    /// divergence-step histogram); `Uncached` requests record nothing.
+    pub fn record_cache_outcome(&mut self, outcome: &crate::pipeline::CacheOutcome) {
+        use crate::pipeline::CacheOutcome;
+        match outcome {
+            CacheOutcome::Uncached => {}
+            CacheOutcome::Miss => self.inc("plancache_miss", 1),
+            CacheOutcome::Hit => self.inc("plancache_hit", 1),
+            CacheOutcome::Diverged { step } => {
+                self.inc("plancache_diverged", 1);
+                // histogram units are nominally ms; for this series the
+                // sample is the divergence step index
+                self.observe_ms("plancache_divergence_step", *step as f64);
+            }
+        }
+    }
+
     pub fn histogram(&self, name: &str) -> Option<&Histogram> {
         self.histograms.get(name)
     }
@@ -221,6 +238,25 @@ mod tests {
         assert!(text.contains("sada_worker_2_batches_total 2"));
         assert!(text.contains("sada_batch_queue_wait_count 1"));
         assert!(text.contains("sada_batch_execute_count 1"));
+    }
+
+    #[test]
+    fn cache_outcomes_surface_in_exposition() {
+        use crate::pipeline::CacheOutcome;
+        let mut m = MetricsLog::new();
+        m.record_cache_outcome(&CacheOutcome::Uncached);
+        m.record_cache_outcome(&CacheOutcome::Miss);
+        m.record_cache_outcome(&CacheOutcome::Hit);
+        m.record_cache_outcome(&CacheOutcome::Hit);
+        m.record_cache_outcome(&CacheOutcome::Diverged { step: 17 });
+        assert_eq!(m.counter("plancache_hit"), 2);
+        assert_eq!(m.counter("plancache_miss"), 1);
+        assert_eq!(m.counter("plancache_diverged"), 1);
+        let text = m.render();
+        assert!(text.contains("sada_plancache_hit_total 2"));
+        assert!(text.contains("sada_plancache_miss_total 1"));
+        assert!(text.contains("sada_plancache_diverged_total 1"));
+        assert!(text.contains("sada_plancache_divergence_step_count 1"));
     }
 
     #[test]

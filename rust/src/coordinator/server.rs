@@ -37,6 +37,7 @@ use super::request::{ServeRequest, ServeResponse};
 use super::router::Router;
 use crate::baselines::{AdaptiveDiffusion, DeepCache, TeaCache};
 use crate::pipeline::{Accelerator, GenRequest, NoAccel, Pipeline};
+use crate::plancache::{schedule_fingerprint, PlanStore, SpeculativeAccel};
 use crate::runtime::{ModelBackend, Runtime};
 use crate::sada::Sada;
 use crate::solvers::SolverKind;
@@ -53,6 +54,9 @@ pub struct CoordinatorConfig {
     /// Engine workers in the pool; each owns its own `Runtime` handle.
     /// Values < 1 are treated as 1.
     pub n_workers: usize,
+    /// Total skip-plan cache entries per model (shared across the whole
+    /// worker pool; "sada-cache" requests replay from it).
+    pub plan_cache_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -65,9 +69,14 @@ impl Default for CoordinatorConfig {
             max_wait_ms: 40.0,
             queue_cap: 256,
             n_workers: 1,
+            plan_cache_capacity: 256,
         }
     }
 }
+
+/// Per-model skip-plan caches, shared across all engine workers: a plan
+/// recorded by one worker warm-starts matching requests on every other.
+type PlanStores = Arc<HashMap<String, Arc<PlanStore>>>;
 
 /// One formed batch queued for execution.
 struct WorkItem {
@@ -176,9 +185,27 @@ pub struct Coordinator {
 /// off the pooled prototype, so recycling is state-safe.
 type AccelKey = (String, String, usize); // (model, accel, steps)
 
-fn accel_for(name: &str, info: &crate::runtime::ModelInfo, steps: usize) -> Box<dyn Accelerator> {
+fn accel_for(
+    name: &str,
+    info: &crate::runtime::ModelInfo,
+    steps: usize,
+    cache: Option<(Arc<PlanStore>, u64)>,
+) -> Box<dyn Accelerator> {
     match name {
         "sada" => Box::new(Sada::with_default(info, steps)),
+        // SADA behind the skip-plan cache: replays verified plans recorded
+        // by matching earlier requests, falling back to plain SADA on any
+        // criterion disagreement. Without a store (defensive) it degrades
+        // to plain SADA.
+        "sada-cache" => match cache {
+            Some((store, sched_fp)) => Box::new(SpeculativeAccel::new(
+                Sada::with_default(info, steps),
+                store,
+                &info.name,
+                sched_fp,
+            )),
+            None => Box::new(Sada::with_default(info, steps)),
+        },
         "deepcache" => Box::new(DeepCache::default()),
         "adaptive" => Box::new(AdaptiveDiffusion::default()),
         "teacache" => Box::new(TeaCache::default()),
@@ -195,6 +222,15 @@ impl Coordinator {
         // one executing + one queued batch per worker keeps the pool busy
         // without letting in-flight work grow unboundedly
         let queue = Arc::new(WorkQueue::new(n_workers, 2 * n_workers));
+        // one shared skip-plan cache per model, pool-wide
+        let stores: PlanStores = Arc::new(
+            cfg.models
+                .iter()
+                .map(|m| {
+                    (m.clone(), Arc::new(PlanStore::new(cfg.plan_cache_capacity.max(1))))
+                })
+                .collect(),
+        );
 
         // on any spawn failure, close the queue before returning so
         // already-spawned workers exit instead of blocking in pop() forever
@@ -203,9 +239,10 @@ impl Coordinator {
             let cfg_i = cfg.clone();
             let queue_i = queue.clone();
             let metrics_i = metrics.clone();
+            let stores_i = stores.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("sada-engine-{i}"))
-                .spawn(move || worker_loop(i, cfg_i, queue_i, metrics_i));
+                .spawn(move || worker_loop(i, cfg_i, queue_i, metrics_i, stores_i));
             match spawned {
                 Ok(handle) => workers.push(handle),
                 Err(e) => {
@@ -394,6 +431,7 @@ fn worker_loop(
     cfg: CoordinatorConfig,
     queue: Arc<WorkQueue>,
     metrics: Arc<Mutex<MetricsLog>>,
+    stores: PlanStores,
 ) -> Result<()> {
     // fires on fatal Err return AND panic-unwind: the last worker to die
     // drains the queue (dropping items fails their requests fast via the
@@ -427,7 +465,7 @@ fn worker_loop(
     while let Some(item) = queue.pop() {
         lock_metrics(&metrics)
             .observe_queue_wait_ms(item.ready_at.elapsed().as_secs_f64() * 1e3);
-        match execute_batch(&rt, &cfg, worker, item, &metrics, &mut accel_pool) {
+        match execute_batch(&rt, &cfg, worker, item, &metrics, &mut accel_pool, &stores) {
             Ok(()) => {}
             Err(e) => {
                 eprintln!("[engine worker {worker}] batch failed: {e:#}");
@@ -446,6 +484,7 @@ fn execute_batch(
     item: WorkItem,
     metrics: &Arc<Mutex<MetricsLog>>,
     accel_pool: &mut HashMap<AccelKey, Box<dyn Accelerator>>,
+    stores: &PlanStores,
 ) -> Result<()> {
     let WorkItem { model, requests, ready_at: _ } = item;
     let model = model.as_str();
@@ -457,12 +496,18 @@ fn execute_batch(
     } else {
         cfg.solver
     };
-    let pipe = Pipeline::with_schedule(&backend, solver, rt.manifest.schedule.to_schedule());
+    let schedule = rt.manifest.schedule.to_schedule();
+    let pipe = Pipeline::with_schedule(&backend, solver, schedule.clone());
     let steps = requests[0].steps;
     let key: AccelKey = (model.to_string(), requests[0].accel.clone(), steps);
+    // the plan signature pins (solver, schedule): a plan recorded under a
+    // different fingerprint can never replay
+    let cache = stores
+        .get(model)
+        .map(|s| (s.clone(), schedule_fingerprint(solver.name(), &schedule)));
     let accel = accel_pool
         .entry(key)
-        .or_insert_with(|| accel_for(&requests[0].accel, backend.info(), steps));
+        .or_insert_with(|| accel_for(&requests[0].accel, backend.info(), steps, cache));
     let gen_reqs: Vec<GenRequest> = requests
         .iter()
         .map(|r| GenRequest {
@@ -496,6 +541,12 @@ fn execute_batch(
         m.observe_execute_ms(t0.elapsed().as_secs_f64() * 1e3);
         m.record_worker_batch(worker);
         m.inc(&format!("batch_size_{bsz}"), 1);
+        for res in &results {
+            m.record_cache_outcome(&res.stats.outcome);
+        }
+        if let Some(store) = stores.get(model) {
+            m.set_gauge(&format!("plancache_{model}_entries"), store.len() as f64);
+        }
     }
     for (req, res) in requests.into_iter().zip(results) {
         let latency_ms = req.submitted_at.elapsed().as_secs_f64() * 1e3;
@@ -592,5 +643,19 @@ mod tests {
     #[test]
     fn default_config_is_single_worker() {
         assert_eq!(CoordinatorConfig::default().n_workers, 1);
+        assert!(CoordinatorConfig::default().plan_cache_capacity > 0);
+    }
+
+    #[test]
+    fn sada_cache_accel_wires_the_store_and_degrades_without_one() {
+        let manifest = crate::runtime::mock::mock_manifest();
+        let info = manifest.model("mock_eps").unwrap();
+        let store = Arc::new(crate::plancache::PlanStore::new(8));
+        let cached = accel_for("sada-cache", info, 20, Some((store, 7)));
+        assert_eq!(cached.name(), "sada-cache");
+        let bare = accel_for("sada-cache", info, 20, None);
+        assert_eq!(bare.name(), "sada");
+        let plain = accel_for("sada", info, 20, None);
+        assert_eq!(plain.name(), "sada");
     }
 }

@@ -9,12 +9,15 @@ use anyhow::Result;
 use crate::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
 use crate::coordinator::request::RequestId;
 use crate::pipeline::lanes::LaneMode;
-use crate::pipeline::{Accelerator, GenRequest, Pipeline};
+use crate::pipeline::{Accelerator, CacheOutcome, GenRequest, Pipeline};
+use crate::plancache::{schedule_fingerprint, PlanStore, SpeculativeAccel};
 use crate::report::table::{f2, f3, speedup};
-use crate::report::{LatencyStats, Table};
-use crate::runtime::{ModelBackend, Runtime};
+use crate::report::{BenchJson, LatencyStats, Table};
 use crate::sada::Sada;
+use crate::runtime::{ModelBackend, Runtime};
 use crate::solvers::SolverKind;
+use crate::tensor::{ops, Tensor};
+use crate::util::json::Json;
 use crate::workload::{PromptBank, TraceGen};
 
 pub struct ServingReport {
@@ -48,6 +51,7 @@ pub fn drive(
         max_wait_ms: 30.0,
         queue_cap: 512,
         n_workers: workers,
+        ..Default::default()
     };
     let coord = Coordinator::start(cfg)?;
     let bank = PromptBank::load_or_synthetic(std::path::Path::new(artifacts), 32);
@@ -122,6 +126,7 @@ pub fn drive_mixed(
         max_wait_ms: 30.0,
         queue_cap: 512,
         n_workers: workers,
+        ..Default::default()
     };
     let coord = Coordinator::start(cfg)?;
     let bank = PromptBank::load_or_synthetic(std::path::Path::new(artifacts), 32);
@@ -197,7 +202,9 @@ pub fn run_with_load(
         &["Accel", "Thrpt rps", "p50 ms", "p95 ms", "p99 ms", "Mean batch", "Mean NFE"],
     );
     let mut reports = Vec::new();
-    for accel in ["baseline", "sada"] {
+    // sada-cache: SADA behind the skip-plan cache — repeated prompts in the
+    // trace replay verified plans instead of re-running criterion detection
+    for accel in ["baseline", "sada", "sada-cache"] {
         let r = drive(artifacts, model, accel, n, rate_rps, steps, bursty, workers)?;
         table.row(vec![
             r.accel.clone(),
@@ -211,11 +218,42 @@ pub fn run_with_load(
         reports.push(r);
     }
     table.print();
-    if reports.len() == 2 {
+    if reports.len() >= 2 {
         let speed = reports[0].latency.p50_ms() / reports[1].latency.p50_ms().max(1e-9);
         println!("SADA p50 latency speedup under load: {}", speedup(speed));
     }
+    let mut bench = BenchJson::open_default();
+    bench.set_section(
+        "serve",
+        Json::obj(vec![
+            ("model", Json::str(model)),
+            ("n", Json::num(n as f64)),
+            ("rate_rps", Json::num(rate_rps)),
+            ("steps", Json::num(steps as f64)),
+            ("workers", Json::num(workers as f64)),
+            ("bursty", Json::Bool(bursty)),
+            (
+                "arms",
+                Json::Arr(reports.iter().map(ServingReport::to_json).collect()),
+            ),
+        ]),
+    );
+    bench.save_or_warn();
     Ok(())
+}
+
+impl ServingReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("accel", Json::str(&self.accel)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("p50_ms", Json::num(self.latency.p50_ms())),
+            ("p95_ms", Json::num(self.latency.p95_ms())),
+            ("p99_ms", Json::num(self.latency.p99_ms())),
+            ("mean_batch", Json::num(self.mean_batch)),
+            ("mean_nfe", Json::num(self.mean_nfe)),
+        ])
+    }
 }
 
 /// Per-lane vs lockstep sweep: the same divergent-trajectory batch run
@@ -243,6 +281,7 @@ pub fn run_lane_sweep(
         &format!("Per-lane vs lockstep — {model}, {steps} steps, compiled buckets {buckets:?}"),
         &["Batch", "Mode", "Mean NFE", "Per-request NFE", "Skip spread", "Wall ms"],
     );
+    let mut rows_json: Vec<Json> = Vec::new();
     for &b in batch_sizes {
         // divergent-trajectory workload: distinct prompts + spread guidance.
         // For b <= 4 every lane gets a unique gs, measuring the worst case
@@ -275,9 +314,166 @@ pub fn run_lane_sweep(
                 f3(spread),
                 f2(res[0].stats.wall_ms),
             ]);
+            rows_json.push(Json::obj(vec![
+                ("batch", Json::num(b as f64)),
+                ("mode", Json::str(name)),
+                ("mean_nfe", Json::num(mean)),
+                ("skip_spread", Json::num(spread)),
+                ("wall_ms", Json::num(res[0].stats.wall_ms)),
+            ]));
         }
     }
     table.print();
+    let mut bench = BenchJson::open_default();
+    bench.set_section(
+        "lanes",
+        Json::obj(vec![
+            ("model", Json::str(model)),
+            ("steps", Json::num(steps as f64)),
+            ("rows", Json::Arr(rows_json)),
+        ]),
+    );
+    bench.save_or_warn();
+    Ok(())
+}
+
+/// Skip-plan cache sweep over a repeated/near-duplicate prompt trace: the
+/// same arrival sequence (a hot set of `hot_prompts` prompts, from
+/// [`TraceGen::repeated`]) is driven through (a) cold SADA, (b) SADA behind
+/// the plan cache with exact repeats, and (c) the cache under
+/// near-duplicate conditioning (small deterministic jitter per request).
+/// Reports hit rates (overall + steady-state, i.e. excluding each prompt's
+/// first occurrence), divergences, and the NFE/latency reduction the
+/// warm-start replay buys over cold-start criterion detection.
+pub fn run_plancache_sweep(
+    artifacts: &str,
+    model: &str,
+    steps: usize,
+    n_requests: usize,
+    hot_prompts: usize,
+) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    rt.preload_model(model)?;
+    let backend = rt.model_backend(model)?;
+    let solver = if backend.info().predict == "v" {
+        SolverKind::Flow
+    } else {
+        SolverKind::DpmPP
+    };
+    let schedule = rt.manifest.schedule.to_schedule();
+    let pipe = Pipeline::with_schedule(&backend, solver, schedule.clone());
+    let bank =
+        PromptBank::load_or_synthetic(std::path::Path::new(artifacts), rt.manifest.cond_dim);
+    let trace = TraceGen::repeated(50.0, hot_prompts).generate(n_requests, 404);
+    let sched_fp = schedule_fingerprint(solver.name(), &schedule);
+
+    struct Arm {
+        name: &'static str,
+        jitter: f32,
+        cached: bool,
+    }
+    let arms = [
+        Arm { name: "sada (cold)", jitter: 0.0, cached: false },
+        Arm { name: "sada-cache", jitter: 0.0, cached: true },
+        Arm { name: "sada-cache (near-dup)", jitter: 2e-4, cached: true },
+    ];
+    let mut table = Table::new(
+        &format!(
+            "Skip-plan cache — {model}, {steps} steps, {n_requests} requests over \
+             {hot_prompts} hot prompts"
+        ),
+        &["Arm", "Hit%", "Steady hit%", "Div", "Mean NFE", "NFE cut", "Mean ms"],
+    );
+    let mut arms_json: Vec<Json> = Vec::new();
+    let mut cold_nfe = f64::NAN;
+    for arm in &arms {
+        let store = std::sync::Arc::new(PlanStore::new(256));
+        let mut sada = Sada::with_default(backend.info(), steps);
+        let mut spec = SpeculativeAccel::new(
+            Sada::with_default(backend.info(), steps),
+            store.clone(),
+            &backend.info().name,
+            sched_fp,
+        );
+        let mut seen = std::collections::HashSet::new();
+        let (mut hits, mut divs, mut repeats) = (0usize, 0usize, 0usize);
+        let mut nfe_sum = 0usize;
+        let mut wall_sum = 0.0f64;
+        for (i, arr) in trace.iter().enumerate() {
+            let mut cond = bank.get(arr.prompt_idx).clone();
+            if arm.jitter > 0.0 {
+                let mut jrng = crate::rng::Rng::new(9000 + i as u64);
+                let noise = Tensor::from_rng(&mut jrng, cond.shape());
+                cond = ops::lincomb2(1.0, &cond, arm.jitter, &noise);
+            }
+            let req = GenRequest {
+                cond,
+                seed: bank.seed_for(arr.prompt_idx),
+                guidance: 3.0,
+                steps,
+                edge: None,
+            };
+            let res = if arm.cached {
+                pipe.generate(&req, &mut spec)?
+            } else {
+                pipe.generate(&req, &mut sada)?
+            };
+            if !seen.insert(arr.prompt_idx) {
+                repeats += 1;
+            }
+            match res.stats.outcome {
+                CacheOutcome::Hit => hits += 1,
+                CacheOutcome::Diverged { .. } => divs += 1,
+                _ => {}
+            }
+            nfe_sum += res.stats.nfe;
+            wall_sum += res.stats.wall_ms;
+        }
+        let n = trace.len().max(1);
+        let mean_nfe = nfe_sum as f64 / n as f64;
+        if !arm.cached {
+            cold_nfe = mean_nfe;
+        }
+        let hit_rate = hits as f64 / n as f64;
+        let steady = if repeats > 0 { hits as f64 / repeats as f64 } else { 0.0 };
+        let cut = if cold_nfe.is_finite() && cold_nfe > 0.0 {
+            1.0 - mean_nfe / cold_nfe
+        } else {
+            0.0
+        };
+        table.row(vec![
+            arm.name.into(),
+            f2(hit_rate * 100.0),
+            f2(steady * 100.0),
+            format!("{divs}"),
+            f2(mean_nfe),
+            f2(cut * 100.0),
+            f2(wall_sum / n as f64),
+        ]);
+        arms_json.push(Json::obj(vec![
+            ("arm", Json::str(arm.name)),
+            ("hit_rate", Json::num(hit_rate)),
+            ("steady_hit_rate", Json::num(steady)),
+            ("divergences", Json::num(divs as f64)),
+            ("mean_nfe", Json::num(mean_nfe)),
+            ("nfe_cut", Json::num(cut)),
+            ("mean_wall_ms", Json::num(wall_sum / n as f64)),
+            ("store_entries", Json::num(store.len() as f64)),
+        ]));
+    }
+    table.print();
+    let mut bench = BenchJson::open_default();
+    bench.set_section(
+        "plancache",
+        Json::obj(vec![
+            ("model", Json::str(model)),
+            ("steps", Json::num(steps as f64)),
+            ("n", Json::num(n_requests as f64)),
+            ("hot_prompts", Json::num(hot_prompts as f64)),
+            ("arms", Json::Arr(arms_json)),
+        ]),
+    );
+    bench.save_or_warn();
     Ok(())
 }
 

@@ -14,6 +14,8 @@
 //!   step-wise pruning, multistep Lagrange reconstruction, token-wise masks
 //! * [`baselines`] — DeepCache / AdaptiveDiffusion / TeaCache comparators
 //! * [`pipeline`] — generation pipelines gluing model+solver+accelerator
+//! * [`plancache`] — skip-plan cache: trajectory signatures, sharded LRU
+//!   plan store, speculative warm-start replay with divergence fallback
 //! * [`metrics`] — PSNR / LPIPS-RC / FID-RC quality metrics
 //! * [`coordinator`] — serving front-end: router, dynamic batcher, engine
 //! * [`workload`] — prompt bank + arrival-trace generators
@@ -25,6 +27,7 @@ pub mod coordinator;
 pub mod exp;
 pub mod metrics;
 pub mod pipeline;
+pub mod plancache;
 pub mod report;
 pub mod rng;
 pub mod runtime;

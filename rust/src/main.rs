@@ -21,6 +21,10 @@ commands:
              --workers, default {1, 2, 4})
   lanes      per-lane vs lockstep sweep (--model sd2_tiny --steps 50): per-request
              NFE + skip-rate divergence at batch sizes with no exact compiled bucket
+  plancache  skip-plan cache sweep (--model sd2_tiny --steps 50 --n 48 --unique 6):
+             hit rate + NFE/latency cut of speculative warm-start replay on a
+             repeated/near-duplicate prompt trace (serve also takes accel
+             sada-cache); writes BENCH_serving.json
   table1     main results table        (--samples 64 --steps 50)
   table2     few-step ablation         (--samples 32)
   ablate     SADA component ablation    (--samples 16 --steps 50)
@@ -73,6 +77,13 @@ fn main() -> Result<()> {
             o.str_or("model", "sd2_tiny"),
             steps,
             &[2, 3, 5, 8],
+        )?,
+        "plancache" => exp::serving::run_plancache_sweep(
+            &artifacts,
+            o.str_or("model", "sd2_tiny"),
+            steps,
+            o.usize_or("n", 48),
+            o.usize_or("unique", 6),
         )?,
         "serve" => exp::serving::run_with_load(
             &artifacts,

@@ -136,6 +136,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 solver.reset();
                 let mut accel = factory.make(li);
                 accel.reset();
+                accel.begin_run(req);
                 let mut rng = crate::rng::Rng::new(req.seed);
                 let x = Tensor::from_rng(&mut rng, &[1, h, w, c]);
                 let stats = RunStats::new(accel.name(), steps);
@@ -262,6 +263,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             .map(|mut lane| {
                 lane.stats.wall_ms = wall_ms;
                 lane.stats.nfe = lane.stats.fresh_steps;
+                lane.stats.outcome = lane.accel.outcome();
                 GenResult { image: lane.x, stats: lane.stats }
             })
             .collect())
@@ -316,6 +318,16 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 Some((_, members)) => members.push(l),
                 None => groups.push((key, vec![l])),
             }
+        }
+        // co-schedule lanes replaying the same verified cached plan into
+        // the same bucket chunk: their fresh steps coincide for the rest of
+        // the run, so keeping them adjacent maximizes full-bucket gathers
+        // on later steps. Stable sort: unkeyed lanes keep lane order.
+        for (_, members) in groups.iter_mut() {
+            members.sort_by_key(|l| match lanes[*l].accel.plan_key() {
+                Some(k) => (0u8, k),
+                None => (1u8, 0),
+            });
         }
         for (_, members) in &groups {
             let (singles, batchable): (Vec<usize>, Vec<usize>) = members

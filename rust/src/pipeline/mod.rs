@@ -14,7 +14,7 @@ pub mod stats;
 use anyhow::{Context, Result};
 
 pub use lanes::{AcceleratorFactory, LaneMode};
-pub use stats::{RunStats, StepMode};
+pub use stats::{CacheOutcome, RunStats, StepMode};
 
 use crate::runtime::{ModelArgs, ModelBackend, ModelOut};
 use crate::solvers::{build_solver, Schedule, Solver, SolverKind};
@@ -72,6 +72,29 @@ pub trait Accelerator {
     fn plan(&mut self, ctx: &StepCtx) -> StepPlan;
     fn observe(&mut self, obs: &StepObs);
     fn reset(&mut self);
+
+    /// Called once per run, after [`Accelerator::reset`], with the request
+    /// about to be sampled. Request-aware accelerators (the plan cache's
+    /// `SpeculativeAccel`) derive their trajectory signature here; plain
+    /// accelerators ignore it. The lockstep batch path
+    /// ([`Pipeline::generate_batch`]) intentionally never calls this: one
+    /// shared accelerator cannot carry a per-request signature.
+    fn begin_run(&mut self, _req: &GenRequest) {}
+
+    /// Plan-cache outcome of the just-finished run, stamped into
+    /// [`RunStats::outcome`] by the pipelines. Cacheless accelerators
+    /// report [`CacheOutcome::Uncached`].
+    fn outcome(&self) -> CacheOutcome {
+        CacheOutcome::Uncached
+    }
+
+    /// Co-scheduling key for the lane engine: lanes replaying the same
+    /// cached plan return the same key and are gathered into the same
+    /// `full_b{n}` bucket chunk (their fresh steps coincide for the rest of
+    /// the run). `None` = no verified plan; no preference.
+    fn plan_key(&self) -> Option<u64> {
+        None
+    }
 
     /// A fresh instance with the same configuration but no trajectory
     /// state. The lane engine ([`lanes`]) clones one per request so every
@@ -160,6 +183,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         let mut solver: Box<dyn Solver> = build_solver(self.solver_kind, &self.schedule, req.steps);
         solver.reset();
         accel.reset();
+        accel.begin_run(req);
 
         let mut rng = crate::rng::Rng::new(req.seed);
         let mut x = Tensor::from_rng(&mut rng, &[1, info.img[0], info.img[1], info.img[2]]);
@@ -290,6 +314,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
 
         stats.wall_ms = timer.elapsed_ms();
         stats.nfe = stats.fresh_steps;
+        stats.outcome = accel.outcome();
         Ok(GenResult { image: x, stats })
     }
 
@@ -438,6 +463,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         for s in stats.iter_mut() {
             s.wall_ms = wall_ms;
             s.nfe = s.fresh_steps;
+            s.outcome = accel.outcome();
         }
 
         // split the batch back into per-request images

@@ -37,6 +37,24 @@ impl StepMode {
     }
 }
 
+/// Per-request plan-cache outcome, stamped by the pipelines from
+/// [`super::Accelerator::outcome`] — NFE counters alone cannot tell a warm
+/// replay from a cold run, so the serving stack carries this alongside.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// The accelerator has no plan cache attached (plain SADA, baselines),
+    /// or the run took a path that bypasses it (lockstep batches).
+    #[default]
+    Uncached,
+    /// Cache consulted, no matching plan: the run recorded a fresh one.
+    Miss,
+    /// A cached plan was verified and replayed to completion.
+    Hit,
+    /// Replay (or its lookup verification) disagreed with the live
+    /// stability criterion at `step`; plain SADA finished the run.
+    Diverged { step: usize },
+}
+
 #[derive(Clone, Debug)]
 pub struct RunStats {
     pub accel: String,
@@ -46,6 +64,9 @@ pub struct RunStats {
     /// Number of model executions (== fresh_steps; skips cost zero NFE).
     pub nfe: usize,
     pub wall_ms: f64,
+    /// Plan-cache outcome of this request (hit / divergence-step /
+    /// fallback), surfaced through coordinator metrics.
+    pub outcome: CacheOutcome,
 }
 
 impl RunStats {
@@ -57,6 +78,7 @@ impl RunStats {
             fresh_steps: 0,
             nfe: 0,
             wall_ms: 0.0,
+            outcome: CacheOutcome::default(),
         }
     }
 
@@ -102,5 +124,15 @@ mod tests {
         assert_eq!(s.fresh_steps, 2);
         assert_eq!(s.count(StepMode::SkipLagrange), 1);
         assert!((s.skip_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outcome_defaults_to_uncached() {
+        let s = RunStats::new("sada".into(), 4);
+        assert_eq!(s.outcome, CacheOutcome::Uncached);
+        let mut s = s;
+        s.outcome = CacheOutcome::Diverged { step: 7 };
+        assert_eq!(s.outcome, CacheOutcome::Diverged { step: 7 });
+        assert_ne!(s.outcome, CacheOutcome::Hit);
     }
 }

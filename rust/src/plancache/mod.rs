@@ -1,0 +1,34 @@
+//! Skip-plan cache with speculative warm-start replay.
+//!
+//! SADA's adaptive decisions are per-trajectory, but production traffic is
+//! full of repeated and near-duplicate requests whose trajectories — and
+//! therefore whose step-wise/token-wise sparsity decisions — coincide. This
+//! subsystem amortizes the criterion-evaluation trajectory across requests:
+//!
+//! * [`signature`] — quantized trajectory signatures: (model, steps,
+//!   solver/schedule fingerprint, guidance bucket, conditioning sketch)
+//!   hashed as the request key, verified against the signs of the first
+//!   criterion inner products;
+//! * [`store`] — a sharded, lock-striped LRU mapping signature → recorded
+//!   [`store::RecordedPlan`] with hit/divergence/outcome statistics, shared
+//!   across all coordinator engine workers per model;
+//! * [`speculative`] — [`SpeculativeAccel`], an
+//!   [`crate::pipeline::Accelerator`] that replays a cached plan while
+//!   re-evaluating the stability criterion at every fresh step, falls back
+//!   to the wrapped [`crate::sada::Sada`] the moment the criterion
+//!   disagrees (recording the divergence step), and inserts the freshly
+//!   observed plan on completion.
+//!
+//! Fidelity is never taken on faith: the paper's sign-based criterion is
+//! the online verifier, so a wrong plan costs one divergence, not a wrong
+//! image. In the lane engine, lanes replaying the same verified plan agree
+//! on which steps are fresh and are co-scheduled into the same `full_b{n}`
+//! bucket (see `pipeline::lanes`).
+
+pub mod signature;
+pub mod speculative;
+pub mod store;
+
+pub use signature::{schedule_fingerprint, RequestKey};
+pub use speculative::SpeculativeAccel;
+pub use store::{Directive, Lookup, PlanStore, RecordedPlan, StoreStats};

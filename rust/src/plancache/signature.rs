@@ -1,0 +1,208 @@
+//! Quantized trajectory signatures for the skip-plan cache.
+//!
+//! SADA's observation — "different prompts correspond to varying denoising
+//! trajectories" — has a serving-side converse: *similar* requests trace
+//! similar trajectories and admit the same sparsity decisions. A signature
+//! captures "similar" cheaply and deterministically:
+//!
+//! * **request key** (known before step 0): model name, step count, a
+//!   fingerprint of (solver, noise schedule), the guidance scale quantized
+//!   into buckets, and a coarse locality-preserving sketch of the
+//!   conditioning vector — near-duplicate prompts land in the same cell
+//!   with high probability;
+//! * **early criterion dots** (known after the first few fresh steps): the
+//!   signs of the first stability-criterion inner products. Two requests
+//!   with the same key but differently-shaped trajectories disagree here,
+//!   so a matching key is *verified* against the recorded signs before any
+//!   cached decision is replayed.
+//!
+//! Everything below is a pure function of its inputs (fixed FNV constants
+//! and the crate's seeded [`SplitMix64`], no process-dependent hashing), so
+//! keys are stable across workers and across runs.
+
+use crate::rng::SplitMix64;
+use crate::solvers::Schedule;
+
+/// Guidance scales within one bucket of this width share a key.
+pub const GUIDANCE_BUCKET_WIDTH: f32 = 0.25;
+/// Number of projection planes in the conditioning sketch.
+const SKETCH_PLANES: usize = 8;
+/// Quantization cell width of each normalized projection.
+const SKETCH_CELL: f64 = 0.5;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// The hashable, request-level part of a trajectory signature.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct RequestKey {
+    pub model: String,
+    pub steps: usize,
+    /// Fingerprint of (solver kind, noise schedule) — see
+    /// [`schedule_fingerprint`].
+    pub sched_fp: u64,
+    pub guidance_bucket: i32,
+    pub cond_sketch: u64,
+}
+
+impl RequestKey {
+    pub fn new(model: &str, sched_fp: u64, steps: usize, guidance: f32, cond: &[f32]) -> Self {
+        Self {
+            model: model.to_string(),
+            steps,
+            sched_fp,
+            guidance_bucket: guidance_bucket(guidance),
+            cond_sketch: cond_sketch(cond),
+        }
+    }
+
+    /// Stable 64-bit digest: shard selection in the store and the lane
+    /// engine's co-scheduling key.
+    pub fn hash64(&self) -> u64 {
+        let mut h = fnv(FNV_OFFSET, self.model.as_bytes());
+        h = fnv_u64(h, self.steps as u64);
+        h = fnv_u64(h, self.sched_fp);
+        h = fnv_u64(h, self.guidance_bucket as i64 as u64);
+        h = fnv_u64(h, self.cond_sketch);
+        h
+    }
+}
+
+fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn fnv_u64(h: u64, v: u64) -> u64 {
+    fnv(h, &v.to_le_bytes())
+}
+
+/// Quantize a guidance scale into [`GUIDANCE_BUCKET_WIDTH`]-wide buckets.
+/// Non-finite guidance (the batcher isolates NaN) gets its own bucket.
+pub fn guidance_bucket(gs: f32) -> i32 {
+    if !gs.is_finite() {
+        return i32::MIN;
+    }
+    (gs / GUIDANCE_BUCKET_WIDTH).round() as i32
+}
+
+/// Coarse locality-preserving sketch of a conditioning vector: project onto
+/// [`SKETCH_PLANES`] deterministic ±1 directions, normalize by sqrt(dim),
+/// and quantize each projection to [`SKETCH_CELL`]-wide cells. Small
+/// perturbations move each projection by O(eps), so near-duplicate prompts
+/// land in the same cells (a boundary-straddling prompt just misses — the
+/// cache degrades to cold SADA, never to wrong output).
+pub fn cond_sketch(cond: &[f32]) -> u64 {
+    let norm = (cond.len().max(1) as f64).sqrt() * SKETCH_CELL;
+    let mut out = 0u64;
+    for k in 0..SKETCH_PLANES {
+        let mut sm = SplitMix64::new(0x5ada_5eed ^ (k as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let mut acc = 0.0f64;
+        for v in cond {
+            let w = if sm.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+            acc += *v as f64 * w;
+        }
+        let cell = (acc / norm).round() as i64;
+        out = fnv_u64(out, cell as u64);
+    }
+    out
+}
+
+/// Fingerprint of the sampling dynamics a plan was recorded under: solver
+/// kind plus the noise-schedule constants. Plans recorded under a different
+/// solver or a retrained schedule must never replay.
+pub fn schedule_fingerprint(solver: &str, schedule: &Schedule) -> u64 {
+    let mut h = fnv(FNV_OFFSET, solver.as_bytes());
+    h = fnv_u64(h, schedule.train_t as u64);
+    if let Some(a) = schedule.abar.get(1) {
+        h = fnv_u64(h, a.to_bits());
+    }
+    if let Some(a) = schedule.abar.last() {
+        h = fnv_u64(h, a.to_bits());
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn key(gs: f32, cond: &[f32]) -> RequestKey {
+        RequestKey::new("sd2_tiny", 7, 50, gs, cond)
+    }
+
+    #[test]
+    fn identical_requests_share_a_key() {
+        let mut rng = Rng::new(1);
+        let cond = rng.gaussian_vec(32);
+        assert_eq!(key(3.0, &cond), key(3.0, &cond));
+        assert_eq!(key(3.0, &cond).hash64(), key(3.0, &cond).hash64());
+    }
+
+    #[test]
+    fn near_duplicate_conds_usually_share_a_sketch() {
+        // a prompt sitting exactly on a cell boundary may legitimately
+        // flip (it just misses the cache), so assert the overwhelming
+        // majority of jittered prompts keep their cell, not all of them
+        let mut rng = Rng::new(2);
+        let mut same = 0;
+        let cases = 20;
+        for case in 0..cases {
+            let mut jrng = Rng::new(100 + case);
+            let cond = rng.gaussian_vec(32);
+            let jittered: Vec<f32> = cond
+                .iter()
+                .map(|v| v + 1e-4 * jrng.gaussian() as f32)
+                .collect();
+            if cond_sketch(&cond) == cond_sketch(&jittered) {
+                same += 1;
+            }
+        }
+        assert!(same >= cases - 2, "only {same}/{cases} near-duplicates kept their sketch");
+    }
+
+    #[test]
+    fn distinct_prompts_get_distinct_sketches() {
+        let mut rng = Rng::new(3);
+        let a = rng.gaussian_vec(32);
+        let b = rng.gaussian_vec(32);
+        assert_ne!(cond_sketch(&a), cond_sketch(&b));
+    }
+
+    #[test]
+    fn guidance_buckets_quantize() {
+        assert_eq!(guidance_bucket(3.0), guidance_bucket(3.05));
+        assert_ne!(guidance_bucket(3.0), guidance_bucket(3.5));
+        assert_eq!(guidance_bucket(f32::NAN), i32::MIN);
+        assert_eq!(guidance_bucket(f32::INFINITY), i32::MIN);
+    }
+
+    #[test]
+    fn key_components_all_matter() {
+        let mut rng = Rng::new(4);
+        let cond = rng.gaussian_vec(32);
+        let base = key(3.0, &cond);
+        let mut other = base.clone();
+        other.steps = 25;
+        assert_ne!(base.hash64(), other.hash64());
+        let mut other = base.clone();
+        other.model = "flux_tiny".into();
+        assert_ne!(base.hash64(), other.hash64());
+        let mut other = base.clone();
+        other.sched_fp = 8;
+        assert_ne!(base.hash64(), other.hash64());
+    }
+
+    #[test]
+    fn schedule_fingerprint_separates_dynamics() {
+        let a = Schedule::default_ddpm();
+        let b = Schedule::new(400, 5e-4, 1e-2);
+        assert_ne!(schedule_fingerprint("dpmpp", &a), schedule_fingerprint("dpmpp", &b));
+        assert_ne!(schedule_fingerprint("dpmpp", &a), schedule_fingerprint("euler", &a));
+        assert_eq!(schedule_fingerprint("dpmpp", &a), schedule_fingerprint("dpmpp", &a));
+    }
+}

@@ -1,0 +1,574 @@
+//! Speculative warm-start replay of cached skip plans.
+//!
+//! [`SpeculativeAccel`] wraps a [`Sada`] instance and a shared
+//! [`PlanStore`]. Per run:
+//!
+//! 1. **Warming** — until the first [`EARLY_DOTS`] criterion evaluations,
+//!    the wrapper is a pure passthrough: it returns the inner SADA plans
+//!    verbatim, so a run that never leaves this phase is bit-identical to
+//!    plain SADA.
+//! 2. **Lookup** — the request key (from [`Accelerator::begin_run`]) plus
+//!    the observed early dot signs probe the store. Miss → keep passing
+//!    through, record, and insert the freshly observed plan on completion.
+//!    Stale (key matched, early signs contradict the recorded trajectory)
+//!    → divergence at the lookup step; plain SADA continues.
+//! 3. **Replay** — on a verified hit, the recorded directives drive the
+//!    steps while the inner SADA keeps observing the *actual* trajectory.
+//!    Every fresh step re-evaluates the stability criterion (the paper's
+//!    sign test, no threshold to tune): a skip directive is only honored
+//!    when the latest verdict is *stable*, and a fresh verdict that
+//!    contradicts the recorded expectation diverges immediately — from
+//!    that step on the warm inner SADA plans as if it had been in charge
+//!    all along, and the completed run's plan replaces the stale entry.
+//!
+//! Replay is where the NFE saving comes from: a cold SADA run pays the
+//! detection pattern — fresh/skip alternation plus the multistep streak
+//! gate — before it can skip at the multistep cadence; a verified replay
+//! applies the recorded stable regions at that cadence from their first
+//! step, with the criterion still checked at every refresh.
+
+use std::sync::Arc;
+
+use crate::pipeline::{Accelerator, CacheOutcome, GenRequest, StepCtx, StepObs, StepPlan};
+use crate::sada::{Sada, SadaConfig};
+use crate::tensor::Tensor;
+
+use super::signature::RequestKey;
+use super::store::{Directive, Lookup, PlanStore, RecordedPlan};
+
+/// Criterion evaluations collected before the cache is consulted.
+pub const EARLY_DOTS: usize = 2;
+
+enum Mode {
+    /// No request key (e.g. the lockstep batch path skips `begin_run`):
+    /// permanent passthrough, no recording.
+    Passthrough,
+    /// Collecting early criterion dots before the lookup.
+    Warming,
+    /// Cache miss: passthrough + record for insertion on completion.
+    Recording,
+    /// Verified hit: replaying the cached directives.
+    Replaying { plan: Arc<RecordedPlan> },
+    /// Diverged (or stale at lookup): inner SADA plans; still recording.
+    Fallback,
+}
+
+pub struct SpeculativeAccel {
+    inner: Sada,
+    store: Arc<PlanStore>,
+    model: String,
+    sched_fp: u64,
+    // ---- per-run state (cleared by reset) ----
+    mode: Mode,
+    key: Option<RequestKey>,
+    n_steps: usize,
+    /// (step, dot) of the first [`EARLY_DOTS`] criterion evaluations.
+    dots: Vec<(usize, f64)>,
+    /// Per-step criterion verdicts of this run (index == step).
+    verdicts: Vec<Option<bool>>,
+    /// Verdict of the most recent fresh criterion evaluation.
+    verified_stable: Option<bool>,
+    outcome: CacheOutcome,
+}
+
+impl SpeculativeAccel {
+    /// `sched_fp` must come from
+    /// [`super::signature::schedule_fingerprint`] over the solver/schedule
+    /// this accelerator will run under.
+    pub fn new(inner: Sada, store: Arc<PlanStore>, model: &str, sched_fp: u64) -> Self {
+        Self {
+            inner,
+            store,
+            model: model.to_string(),
+            sched_fp,
+            mode: Mode::Passthrough,
+            key: None,
+            n_steps: 0,
+            dots: Vec::new(),
+            verdicts: Vec::new(),
+            verified_stable: None,
+            outcome: CacheOutcome::Uncached,
+        }
+    }
+
+    pub fn store(&self) -> &Arc<PlanStore> {
+        &self.store
+    }
+
+    /// The request key this run computed in `begin_run` (tests/metrics).
+    pub fn request_key(&self) -> Option<&RequestKey> {
+        self.key.as_ref()
+    }
+
+    fn observed_signs(&self) -> Vec<(usize, bool)> {
+        self.dots.iter().map(|(i, d)| (*i, *d >= 0.0)).collect()
+    }
+
+    fn lookup(&mut self, step: usize) {
+        let key = match &self.key {
+            Some(k) => k.clone(),
+            None => return,
+        };
+        let signs = self.observed_signs();
+        match self.store.lookup(&key, &signs) {
+            Lookup::Hit(plan) if plan.n_steps == self.n_steps => {
+                self.outcome = CacheOutcome::Hit;
+                self.mode = Mode::Replaying { plan };
+            }
+            Lookup::Hit(_) | Lookup::Miss => {
+                self.outcome = CacheOutcome::Miss;
+                self.mode = Mode::Recording;
+            }
+            Lookup::Stale => {
+                self.store.record_divergence(&key, step);
+                self.outcome = CacheOutcome::Diverged { step };
+                self.mode = Mode::Fallback;
+            }
+        }
+    }
+
+    fn diverge(&mut self, step: usize) {
+        if let Some(key) = &self.key {
+            self.store.record_divergence(key, step);
+        }
+        self.outcome = CacheOutcome::Diverged { step };
+        self.mode = Mode::Fallback;
+    }
+
+    /// Insert the freshly observed plan on completion of a miss/diverged
+    /// run (verified hits leave the stored plan untouched).
+    fn finish(&mut self) {
+        if !matches!(self.mode, Mode::Recording | Mode::Fallback) || self.dots.is_empty() {
+            return;
+        }
+        if let Some(key) = self.key.clone() {
+            let directives = build_directives(self.n_steps, self.inner.config(), &self.verdicts);
+            let nfe = directives.iter().filter(|d| **d == Directive::Full).count();
+            let plan = RecordedPlan {
+                n_steps: self.n_steps,
+                directives,
+                verdicts: self.verdicts.clone(),
+                early_signs: self.observed_signs(),
+                nfe,
+            };
+            self.store.insert(key, plan);
+        }
+    }
+}
+
+impl Accelerator for SpeculativeAccel {
+    fn name(&self) -> String {
+        "sada-cache".into()
+    }
+
+    fn begin_run(&mut self, req: &GenRequest) {
+        self.key = Some(RequestKey::new(
+            &self.model,
+            self.sched_fp,
+            req.steps,
+            req.guidance,
+            req.cond.data(),
+        ));
+        self.n_steps = req.steps;
+        self.mode = Mode::Warming;
+    }
+
+    fn plan(&mut self, ctx: &StepCtx) -> StepPlan {
+        // always tick the inner state machine so a divergence hands over to
+        // a SADA that has been planning (virtually) all along
+        let inner_plan = self.inner.plan(ctx);
+        let replay = match &self.mode {
+            Mode::Replaying { plan } => Some(plan.clone()),
+            _ => None,
+        };
+        match replay {
+            None => inner_plan,
+            Some(plan) => {
+                let d = plan.directives.get(ctx.i).copied().unwrap_or(Directive::Full);
+                match d {
+                    Directive::Full => StepPlan::Full,
+                    Directive::SkipAm3 | Directive::SkipLagrange
+                        if self.verified_stable != Some(true) =>
+                    {
+                        // the live criterion refuses the recorded skip
+                        self.diverge(ctx.i);
+                        inner_plan
+                    }
+                    Directive::SkipAm3 => StepPlan::SkipExtrapolate,
+                    Directive::SkipLagrange => {
+                        if self.inner.can_reconstruct() {
+                            StepPlan::SkipLagrange
+                        } else {
+                            StepPlan::Full
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn observe(&mut self, obs: &StepObs) {
+        self.inner.observe(obs);
+        if self.key.is_none() {
+            return;
+        }
+        let (verdict, dot) = match self.inner.diags.last() {
+            Some(d) if d.i == obs.i => (d.stable, d.criterion_dot),
+            _ => (None, None),
+        };
+        if obs.fresh {
+            if let Some(v) = verdict {
+                self.verified_stable = Some(v);
+            }
+        }
+        self.verdicts.push(verdict);
+        let warming = matches!(self.mode, Mode::Warming);
+        let replaying = match &self.mode {
+            Mode::Replaying { plan } => Some(plan.clone()),
+            _ => None,
+        };
+        if warming {
+            if obs.fresh && self.dots.len() < EARLY_DOTS {
+                if let Some(d) = dot {
+                    self.dots.push((obs.i, d));
+                }
+            }
+            if self.dots.len() >= EARLY_DOTS {
+                self.lookup(obs.i);
+            }
+        } else if let Some(plan) = replaying {
+            if obs.fresh {
+                if let Some(v) = verdict {
+                    // expected verdict: the recorded one at this step, or
+                    // "stable" when the plan skips the next step
+                    let expected = plan.verdicts.get(obs.i).copied().flatten().or(
+                        match plan.directives.get(obs.i + 1) {
+                            Some(Directive::Full) | None => None,
+                            Some(_) => Some(true),
+                        },
+                    );
+                    if let Some(exp) = expected {
+                        if exp != v {
+                            self.diverge(obs.i);
+                        }
+                    }
+                }
+            }
+        }
+        if obs.i + 1 == obs.n_steps {
+            self.finish();
+        }
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+        self.mode = Mode::Passthrough;
+        self.key = None;
+        self.n_steps = 0;
+        self.dots.clear();
+        self.verdicts.clear();
+        self.verified_stable = None;
+        self.outcome = CacheOutcome::Uncached;
+    }
+
+    fn outcome(&self) -> CacheOutcome {
+        self.outcome
+    }
+
+    fn plan_key(&self) -> Option<u64> {
+        match (&self.mode, &self.key) {
+            (Mode::Replaying { .. }, Some(key)) => Some(key.hash64()),
+            _ => None,
+        }
+    }
+
+    fn extrapolate(&self, x: &Tensor, y_now: &Tensor, dt: f64) -> Option<Tensor> {
+        self.inner.extrapolate(x, y_now, dt)
+    }
+
+    fn reconstruct_x0(&self, t_norm: f64) -> Option<Tensor> {
+        self.inner.reconstruct_x0(t_norm)
+    }
+
+    fn clone_fresh(&self) -> Box<dyn Accelerator> {
+        Box::new(SpeculativeAccel::new(
+            self.inner.fresh(),
+            self.store.clone(),
+            &self.model,
+            self.sched_fp,
+        ))
+    }
+}
+
+/// Compact the observed per-step criterion verdicts into a replayable
+/// directive sequence: boundary steps stay Full; maximal runs between
+/// consecutive *stable* evaluations (extended past the final stable
+/// evaluation — replay re-verifies online) are rewritten at the multistep
+/// cadence (fresh every `multistep_interval` steps, Lagrange reconstruction
+/// in between; AM-3 alternation when the multistep regime is ablated);
+/// everything else is Full. Token-pruned and shallow steps are never
+/// replayed: they depend on lane-local caches a warm-started request does
+/// not have, so they degrade to Full.
+pub(crate) fn build_directives(
+    n: usize,
+    cfg: &SadaConfig,
+    verdicts: &[Option<bool>],
+) -> Vec<Directive> {
+    let mut out = vec![Directive::Full; n];
+    if n == 0 {
+        return out;
+    }
+    let evals: Vec<(usize, bool)> = verdicts
+        .iter()
+        .enumerate()
+        .take(n)
+        .filter_map(|(i, v)| v.map(|s| (i, s)))
+        .collect();
+    let mut covered = vec![false; n];
+    for w in evals.windows(2) {
+        let ((a, va), (b, vb)) = (w[0], w[1]);
+        if va && vb {
+            for c in covered[a..=b].iter_mut() {
+                *c = true;
+            }
+        }
+    }
+    if let Some(&(last, v)) = evals.last() {
+        if v {
+            for c in covered[last..].iter_mut() {
+                *c = true;
+            }
+        }
+    }
+    let (q, skip) = if cfg.enable_multistep {
+        (cfg.multistep_interval.max(2), Directive::SkipLagrange)
+    } else {
+        (2, Directive::SkipAm3)
+    };
+    // criterion + AM-3 stencils need history: never skip before warmup + 1
+    let lo = cfg.warmup.max(2) + 1;
+    let hi = n.saturating_sub(cfg.tail.max(1));
+    let mut i = lo;
+    while i < hi {
+        if !covered[i] {
+            i += 1;
+            continue;
+        }
+        let mut end = i;
+        while end + 1 < hi && covered[end + 1] {
+            end += 1;
+        }
+        for (off, slot) in out[i..=end].iter_mut().enumerate() {
+            *slot = if off % q == 0 { Directive::Full } else { skip };
+        }
+        i = end + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{NoAccel, Pipeline};
+    use crate::plancache::signature::schedule_fingerprint;
+    use crate::runtime::mock::GmBackend;
+    use crate::runtime::ModelBackend;
+    use crate::solvers::{Schedule, SolverKind};
+    use crate::tensor::ops;
+
+    fn nfe_of(d: &[Directive]) -> usize {
+        d.iter().filter(|x| **x == Directive::Full).count()
+    }
+
+    #[test]
+    fn directives_all_full_when_never_stable() {
+        let cfg = SadaConfig::default();
+        let v = vec![Some(false); 50];
+        let d = build_directives(50, &cfg, &v);
+        assert!(d.iter().all(|x| *x == Directive::Full));
+    }
+
+    #[test]
+    fn directives_compact_stable_spans_to_multistep_cadence() {
+        let cfg = SadaConfig::default(); // warmup 3, tail 1, interval 3
+        let mut v: Vec<Option<bool>> = vec![None; 50];
+        for i in (4..48).step_by(2) {
+            v[i] = Some(true); // stable at every other step, like cold SADA
+        }
+        let d = build_directives(50, &cfg, &v);
+        // boundaries stay full
+        for (i, di) in d.iter().enumerate().take(4) {
+            assert_eq!(*di, Directive::Full, "step {i}");
+        }
+        assert_eq!(d[49], Directive::Full);
+        // interior follows the F l l cadence
+        assert_eq!(d[4], Directive::Full);
+        assert_eq!(d[5], Directive::SkipLagrange);
+        assert_eq!(d[6], Directive::SkipLagrange);
+        assert_eq!(d[7], Directive::Full);
+        // replay NFE well below the cold detection pattern
+        assert!(nfe_of(&d) < 25, "nfe={}", nfe_of(&d));
+    }
+
+    #[test]
+    fn directives_respect_unstable_gaps_and_ablation() {
+        let mut cfg = SadaConfig::default();
+        let mut v: Vec<Option<bool>> = vec![None; 40];
+        for i in (4..18).step_by(2) {
+            v[i] = Some(true);
+        }
+        v[20] = Some(false); // breaks the span
+        for i in (22..38).step_by(2) {
+            v[i] = Some(true);
+        }
+        let d = build_directives(40, &cfg, &v);
+        assert_eq!(d[20], Directive::Full);
+        assert_eq!(d[21], Directive::Full, "gap between spans stays full");
+        cfg.enable_multistep = false;
+        let d = build_directives(40, &cfg, &v);
+        assert!(d.iter().all(|x| *x != Directive::SkipLagrange));
+        assert!(d.iter().any(|x| *x == Directive::SkipAm3));
+    }
+
+    fn request(seed: u64, steps: usize, guidance: f32) -> GenRequest {
+        let mut rng = crate::rng::Rng::new(1234);
+        GenRequest {
+            cond: Tensor::from_rng(&mut rng, &[1, 32]),
+            seed,
+            guidance,
+            steps,
+            edge: None,
+        }
+    }
+
+    fn spec_for(backend: &GmBackend, steps: usize, store: Arc<PlanStore>) -> SpeculativeAccel {
+        let fp = schedule_fingerprint(SolverKind::DpmPP.name(), &Schedule::default_ddpm());
+        SpeculativeAccel::new(
+            Sada::with_default(backend.info(), steps),
+            store,
+            &backend.info().name,
+            fp,
+        )
+    }
+
+    #[test]
+    fn cold_run_is_a_miss_and_inserts() {
+        let backend = GmBackend::new(5);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let store = Arc::new(PlanStore::new(64));
+        let mut spec = spec_for(&backend, 50, store.clone());
+        let res = pipe.generate(&request(7, 50, 2.0), &mut spec).unwrap();
+        assert_eq!(res.stats.outcome, CacheOutcome::Miss);
+        assert_eq!(store.len(), 1);
+        let key = spec.request_key().unwrap().clone();
+        let plan = store.get(&key).unwrap();
+        assert_eq!(plan.n_steps, 50);
+        assert!(plan.nfe < 50);
+    }
+
+    #[test]
+    fn warm_rerun_hits_and_reduces_nfe() {
+        let backend = GmBackend::new(5);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let store = Arc::new(PlanStore::new(64));
+        let req = request(7, 50, 2.0);
+        let mut spec = spec_for(&backend, 50, store.clone());
+        let cold = pipe.generate(&req, &mut spec).unwrap();
+        let warm = pipe.generate(&req, &mut spec).unwrap();
+        assert_eq!(warm.stats.outcome, CacheOutcome::Hit);
+        assert!(
+            warm.stats.nfe < cold.stats.nfe,
+            "warm replay must skip the detection pattern: warm={} cold={} trace={}",
+            warm.stats.nfe,
+            cold.stats.nfe,
+            warm.stats.mode_trace()
+        );
+        // fidelity stays in the band plain SADA is held to
+        let base = pipe.generate(&req, &mut NoAccel).unwrap();
+        let err = ops::mse(&base.image, &warm.image).sqrt();
+        let scale = ops::norm2(&base.image) / (base.image.len() as f64).sqrt();
+        assert!(
+            err < 0.35 * scale.max(0.1),
+            "warm replay drifted: rmse={err:.4}, scale={scale:.4}, trace={}",
+            warm.stats.mode_trace()
+        );
+    }
+
+    #[test]
+    fn near_duplicate_request_still_hits() {
+        let backend = GmBackend::new(6);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let store = Arc::new(PlanStore::new(64));
+        let req = request(9, 50, 3.0);
+        let mut spec = spec_for(&backend, 50, store.clone());
+        pipe.generate(&req, &mut spec).unwrap();
+        let mut near = req.clone();
+        let mut jrng = crate::rng::Rng::new(77);
+        let jitter: Vec<f32> = near
+            .cond
+            .data()
+            .iter()
+            .map(|v| v + 2e-5 * jrng.gaussian() as f32)
+            .collect();
+        near.cond = Tensor::new(jitter, &[1, 32]).unwrap();
+        let res = pipe.generate(&near, &mut spec).unwrap();
+        assert_eq!(res.stats.outcome, CacheOutcome::Hit);
+    }
+
+    #[test]
+    fn stale_early_signs_diverge_at_lookup_and_fall_back_bit_identically() {
+        let backend = GmBackend::new(8);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let req = request(3, 50, 2.0);
+        // discover the honest plan (and key) on a scratch store
+        let scratch = Arc::new(PlanStore::new(64));
+        let mut probe = spec_for(&backend, 50, scratch.clone());
+        pipe.generate(&req, &mut probe).unwrap();
+        let key = probe.request_key().unwrap().clone();
+        let honest = scratch.get(&key).unwrap();
+        // poison a fresh store: same key, flipped early signs, greedy skips
+        let store = Arc::new(PlanStore::new(64));
+        let poisoned = RecordedPlan {
+            n_steps: honest.n_steps,
+            directives: vec![Directive::SkipLagrange; honest.n_steps],
+            verdicts: vec![None; honest.n_steps],
+            early_signs: honest.early_signs.iter().map(|(i, s)| (*i, !*s)).collect(),
+            nfe: 0,
+        };
+        store.insert(key.clone(), poisoned);
+        let mut spec = spec_for(&backend, 50, store.clone());
+        let res = pipe.generate(&req, &mut spec).unwrap();
+        match res.stats.outcome {
+            CacheOutcome::Diverged { .. } => {}
+            other => panic!("expected divergence at lookup, got {other:?}"),
+        }
+        // fallback is bit-identical to plain SADA
+        let mut sada = Sada::with_default(backend.info(), 50);
+        let plain = pipe.generate(&req, &mut sada).unwrap();
+        assert_eq!(res.image.data(), plain.image.data());
+        assert_eq!(res.stats.nfe, plain.stats.nfe);
+        assert_eq!(res.stats.mode_trace(), plain.stats.mode_trace());
+        // and the completed run replaced the poisoned entry
+        let replaced = store.get(&key).unwrap();
+        assert!(replaced.nfe > 0);
+        assert_eq!(replaced.early_signs, honest.early_signs);
+    }
+
+    #[test]
+    fn lockstep_batch_path_bypasses_the_cache() {
+        // generate_batch never calls begin_run (one shared accelerator
+        // cannot carry a per-request signature): the wrapper stays inert
+        let backend = GmBackend::with_batch_buckets(9, &[2]);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let store = Arc::new(PlanStore::new(64));
+        let mut spec = spec_for(&backend, 20, store.clone());
+        let reqs = vec![request(4, 20, 2.0), request(5, 20, 2.0)];
+        let res = pipe.generate_batch(&reqs, &mut spec).unwrap();
+        assert_eq!(res.len(), 2);
+        for r in &res {
+            assert_eq!(r.stats.outcome, CacheOutcome::Uncached);
+        }
+        assert_eq!(store.stats().lookups, 0);
+        assert!(store.is_empty());
+    }
+}

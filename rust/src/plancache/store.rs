@@ -1,0 +1,355 @@
+//! Sharded, lock-striped LRU store mapping trajectory signatures to
+//! recorded step plans.
+//!
+//! One store is shared per model across every coordinator engine worker
+//! (`Arc<PlanStore>`): a plan recorded on worker 0 warm-starts a matching
+//! request on worker 3. Keys are striped across [`N_SHARDS`] mutexes by the
+//! key's stable digest, so concurrent lookups/inserts from the pool contend
+//! only within a shard. Aggregate hit/miss/stale/divergence counters are
+//! lock-free atomics.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::signature::RequestKey;
+
+/// Number of lock stripes (power of two, small: plan entries are tiny).
+pub const N_SHARDS: usize = 8;
+
+/// One replayable step directive. Recorded plans never prescribe
+/// token-pruned or shallow steps — those depend on lane-local caches that a
+/// warm-started request does not have — so replay degrades them to Full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Directive {
+    /// Execute the model.
+    Full,
+    /// SADA step-wise AM-3 extrapolation (Thm 3.5/3.6).
+    SkipAm3,
+    /// SADA multistep Lagrange reconstruction (Thm 3.7).
+    SkipLagrange,
+}
+
+/// A recorded (and compacted) plan for one trajectory class.
+#[derive(Clone, Debug)]
+pub struct RecordedPlan {
+    pub n_steps: usize,
+    /// Per-step directive; boundary steps are always [`Directive::Full`].
+    pub directives: Vec<Directive>,
+    /// Stability-criterion verdicts of the recorded run, per step (`None`
+    /// where the criterion was not evaluated). Replay cross-checks fresh
+    /// verdicts against these.
+    pub verdicts: Vec<Option<bool>>,
+    /// Signs of the first criterion dots, as (step, dot >= 0) pairs — the
+    /// verification half of the signature (see `signature` module docs).
+    pub early_signs: Vec<(usize, bool)>,
+    /// Model executions this plan prescribes (count of Full directives).
+    pub nfe: usize,
+}
+
+impl RecordedPlan {
+    /// True when the observed early dot signs are consistent with this
+    /// plan's recorded trajectory (compared step-by-step where both runs
+    /// evaluated the criterion).
+    pub fn early_signs_match(&self, observed: &[(usize, bool)]) -> bool {
+        observed.iter().all(|(step, sign)| {
+            self.early_signs
+                .iter()
+                .find(|(s, _)| s == step)
+                .map_or(true, |(_, recorded)| recorded == sign)
+        })
+    }
+}
+
+/// Outcome of a cache probe.
+pub enum Lookup {
+    /// Key present and early criterion signs verified.
+    Hit(Arc<RecordedPlan>),
+    /// Key present but the observed early signs contradict the recorded
+    /// trajectory — treat as a divergence at the lookup step.
+    Stale,
+    /// Key absent.
+    Miss,
+}
+
+struct Entry {
+    plan: Arc<RecordedPlan>,
+    last_used: u64,
+    hits: u64,
+    divergences: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<RequestKey, Entry>,
+    tick: u64,
+}
+
+impl Shard {
+    fn touch(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+}
+
+/// Aggregate counters (snapshot via [`PlanStore::stats`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// Key matched but early criterion signs did not.
+    pub stale: u64,
+    pub insertions: u64,
+    pub divergences: u64,
+    pub evictions: u64,
+}
+
+pub struct PlanStore {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_cap: usize,
+    lookups: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stale: AtomicU64,
+    insertions: AtomicU64,
+    divergences: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlanStore {
+    /// `capacity` is the total entry budget across shards (min 1/shard).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            shards: (0..N_SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            per_shard_cap: (capacity / N_SHARDS).max(1),
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            stale: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            divergences: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &RequestKey) -> MutexGuard<'_, Shard> {
+        let idx = (key.hash64() % N_SHARDS as u64) as usize;
+        // a panicking holder cannot corrupt the map beyond a lost update
+        self.shards[idx].lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Probe for a plan matching `key` whose recorded early criterion signs
+    /// are consistent with `observed_signs`.
+    pub fn lookup(&self, key: &RequestKey, observed_signs: &[(usize, bool)]) -> Lookup {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let mut shard = self.shard(key);
+        let tick = shard.touch();
+        match shard.map.get_mut(key) {
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Lookup::Miss
+            }
+            Some(entry) => {
+                if entry.plan.early_signs_match(observed_signs) {
+                    entry.hits += 1;
+                    entry.last_used = tick;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    Lookup::Hit(entry.plan.clone())
+                } else {
+                    self.stale.fetch_add(1, Ordering::Relaxed);
+                    Lookup::Stale
+                }
+            }
+        }
+    }
+
+    /// Insert (or replace) the plan for `key`, evicting the least recently
+    /// used entry of the shard when it is full.
+    pub fn insert(&self, key: RequestKey, plan: RecordedPlan) {
+        let mut shard = self.shard(&key);
+        let tick = shard.touch();
+        if !shard.map.contains_key(&key) && shard.map.len() >= self.per_shard_cap {
+            let victim = shard
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            if let Some(victim) = victim {
+                shard.map.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        shard.map.insert(
+            key,
+            Entry { plan: Arc::new(plan), last_used: tick, hits: 0, divergences: 0 },
+        );
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record that a replay of `key`'s plan diverged at `step` (the entry
+    /// stays until the observing run completes and replaces it).
+    pub fn record_divergence(&self, key: &RequestKey, _step: usize) {
+        self.divergences.fetch_add(1, Ordering::Relaxed);
+        let mut shard = self.shard(key);
+        if let Some(entry) = shard.map.get_mut(key) {
+            entry.divergences += 1;
+        }
+    }
+
+    /// Stored plan for `key`, ignoring verification (tests, introspection).
+    pub fn get(&self, key: &RequestKey) -> Option<Arc<RecordedPlan>> {
+        self.shard(key).map.get(key).map(|e| e.plan.clone())
+    }
+
+    /// (hits, divergences) recorded against `key`'s current entry.
+    pub fn entry_stats(&self, key: &RequestKey) -> Option<(u64, u64)> {
+        self.shard(key).map.get(key).map(|e| (e.hits, e.divergences))
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(|p| p.into_inner()).map.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            lookups: self.lookups.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stale: self.stale.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            divergences: self.divergences.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(i: u64) -> RequestKey {
+        RequestKey {
+            model: "m".into(),
+            steps: 50,
+            sched_fp: 1,
+            guidance_bucket: 12,
+            cond_sketch: i,
+        }
+    }
+
+    fn plan(signs: &[(usize, bool)]) -> RecordedPlan {
+        RecordedPlan {
+            n_steps: 50,
+            directives: vec![Directive::Full; 50],
+            verdicts: vec![None; 50],
+            early_signs: signs.to_vec(),
+            nfe: 50,
+        }
+    }
+
+    #[test]
+    fn miss_then_hit_roundtrip() {
+        let store = PlanStore::new(64);
+        let signs = [(2usize, false), (4usize, false)];
+        assert!(matches!(store.lookup(&key(1), &signs), Lookup::Miss));
+        store.insert(key(1), plan(&signs));
+        match store.lookup(&key(1), &signs) {
+            Lookup::Hit(p) => assert_eq!(p.n_steps, 50),
+            _ => panic!("expected hit"),
+        }
+        let s = store.stats();
+        assert_eq!((s.lookups, s.hits, s.misses, s.insertions), (2, 1, 1, 1));
+    }
+
+    #[test]
+    fn mismatched_early_signs_are_stale_not_hits() {
+        let store = PlanStore::new(64);
+        store.insert(key(1), plan(&[(2, false)]));
+        assert!(matches!(store.lookup(&key(1), &[(2, true)]), Lookup::Stale));
+        // a step the recorded run never evaluated cannot contradict
+        assert!(matches!(store.lookup(&key(1), &[(9, true)]), Lookup::Hit(_)));
+        assert_eq!(store.stats().stale, 1);
+    }
+
+    #[test]
+    fn lru_evicts_within_shard_capacity() {
+        let store = PlanStore::new(N_SHARDS); // 1 entry per shard
+        // find two keys in the same shard
+        let mut same: Vec<u64> = Vec::new();
+        let shard_of = |i: u64| key(i).hash64() % N_SHARDS as u64;
+        let target = shard_of(0);
+        for i in 0..256u64 {
+            if shard_of(i) == target {
+                same.push(i);
+            }
+            if same.len() == 3 {
+                break;
+            }
+        }
+        assert_eq!(same.len(), 3, "expected 3 keys in one shard among 256");
+        store.insert(key(same[0]), plan(&[]));
+        store.insert(key(same[1]), plan(&[])); // evicts same[0]
+        assert!(store.get(&key(same[0])).is_none());
+        assert!(store.get(&key(same[1])).is_some());
+        // inserting same[2] into the full shard evicts the LRU (same[1])
+        assert!(matches!(store.lookup(&key(same[1]), &[]), Lookup::Hit(_)));
+        store.insert(key(same[2]), plan(&[]));
+        assert!(store.get(&key(same[2])).is_some());
+        assert!(store.get(&key(same[1])).is_none());
+        assert_eq!(store.stats().evictions, 2);
+    }
+
+    #[test]
+    fn reinserting_a_present_key_replaces_without_eviction() {
+        let store = PlanStore::new(N_SHARDS);
+        store.insert(key(5), plan(&[(2, true)]));
+        store.insert(key(5), plan(&[(2, false)]));
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.stats().evictions, 0);
+        assert_eq!(store.get(&key(5)).unwrap().early_signs, vec![(2, false)]);
+    }
+
+    #[test]
+    fn divergences_counted_globally_and_per_entry() {
+        let store = PlanStore::new(64);
+        store.insert(key(1), plan(&[]));
+        let _ = store.lookup(&key(1), &[]);
+        store.record_divergence(&key(1), 17);
+        store.record_divergence(&key(2), 3); // absent key: counter only
+        assert_eq!(store.stats().divergences, 2);
+        assert_eq!(store.entry_stats(&key(1)), Some((1, 1)));
+        assert_eq!(store.entry_stats(&key(2)), None);
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let store = Arc::new(PlanStore::new(128));
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                let store = store.clone();
+                std::thread::spawn(move || {
+                    for i in 0..200u64 {
+                        let k = key(t * 1000 + (i % 32));
+                        store.insert(k.clone(), plan(&[(2, true)]));
+                        let _ = store.lookup(&k, &[(2, true)]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = store.stats();
+        assert_eq!(s.lookups, 800);
+        assert_eq!(s.insertions, 800);
+        assert!(store.len() <= 128);
+    }
+}

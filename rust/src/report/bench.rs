@@ -1,0 +1,107 @@
+//! Machine-readable bench output: `BENCH_serving.json`.
+//!
+//! The serving sweeps (`serve`, `lanes`, `plancache`) each write one named
+//! section into a single JSON file so the perf trajectory is diffable
+//! across PRs without scraping stdout tables. Sections are merged into the
+//! existing file (a `lanes` run does not clobber the last `serve` run);
+//! the path is overridable via `SADA_BENCH_JSON`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub const DEFAULT_BENCH_PATH: &str = "BENCH_serving.json";
+
+pub struct BenchJson {
+    path: PathBuf,
+    root: Json,
+}
+
+impl BenchJson {
+    /// `SADA_BENCH_JSON` if set, else [`DEFAULT_BENCH_PATH`] in the cwd.
+    pub fn open_default() -> BenchJson {
+        let path = std::env::var("SADA_BENCH_JSON").unwrap_or_else(|_| DEFAULT_BENCH_PATH.into());
+        Self::open(path)
+    }
+
+    /// Load the file at `path` when it parses as a JSON object; otherwise
+    /// start from an empty object (first run, or a corrupt file).
+    pub fn open<P: AsRef<Path>>(path: P) -> BenchJson {
+        let path = path.as_ref().to_path_buf();
+        let root = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|src| Json::parse(&src).ok())
+            .filter(|j| matches!(j, Json::Obj(_)))
+            .unwrap_or_else(|| Json::Obj(Default::default()));
+        BenchJson { path, root }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Insert or replace one named section.
+    pub fn set_section(&mut self, name: &str, value: Json) {
+        if let Json::Obj(map) = &mut self.root {
+            map.insert(name.to_string(), value);
+        }
+    }
+
+    pub fn section(&self, name: &str) -> Option<&Json> {
+        self.root.opt(name)
+    }
+
+    pub fn save(&self) -> Result<()> {
+        std::fs::write(&self.path, self.root.to_string())
+            .with_context(|| format!("writing bench json {:?}", self.path))
+    }
+
+    /// Save, demoting failures to a warning: a read-only working directory
+    /// must not fail the bench itself.
+    pub fn save_or_warn(&self) {
+        if let Err(e) = self.save() {
+            eprintln!("[bench] could not write {:?}: {e:#}", self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("sada_bench_{name}_{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn sections_merge_across_opens() {
+        let path = tmp("merge");
+        let _ = std::fs::remove_file(&path);
+        let mut b = BenchJson::open(&path);
+        b.set_section("serve", Json::obj(vec![("p50_ms", Json::num(12.5))]));
+        b.save().unwrap();
+        let mut b2 = BenchJson::open(&path);
+        b2.set_section("lanes", Json::obj(vec![("mean_nfe", Json::num(20.0))]));
+        b2.save().unwrap();
+        let b3 = BenchJson::open(&path);
+        assert!(b3.section("serve").is_some(), "serve section must survive");
+        assert!(b3.section("lanes").is_some());
+        let p50 = b3.section("serve").unwrap().get("p50_ms").unwrap().as_f64().unwrap();
+        assert!((p50 - 12.5).abs() < 1e-12);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_file_restarts_from_empty() {
+        let path = tmp("corrupt");
+        std::fs::write(&path, "not json at all").unwrap();
+        let mut b = BenchJson::open(&path);
+        b.set_section("plancache", Json::obj(vec![("hit_rate", Json::num(0.9))]));
+        b.save().unwrap();
+        let b2 = BenchJson::open(&path);
+        assert!(b2.section("plancache").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -4,8 +4,10 @@
 //! record wall-clock through [`Timer`]/[`LatencyStats`]; everything also
 //! serializes to JSON (util::json) for EXPERIMENTS.md bookkeeping.
 
+pub mod bench;
 pub mod table;
 pub mod timer;
 
+pub use bench::BenchJson;
 pub use table::Table;
 pub use timer::{LatencyStats, Timer};

@@ -90,9 +90,23 @@ impl Sada {
         Self::new(info, SadaConfig::default().for_steps(steps))
     }
 
-    /// Same configuration, no trajectory state (per-lane instances).
-    fn fresh(&self) -> Sada {
+    /// Same configuration, no trajectory state (per-lane instances, and
+    /// the plan cache's speculative wrapper cloning its inner SADA).
+    pub fn fresh(&self) -> Sada {
         Self::from_parts(self.cfg.clone(), self.buckets.clone(), self.img, self.patch)
+    }
+
+    /// The structural configuration this instance plans under (the plan
+    /// cache compacts recorded runs with the same knobs).
+    pub fn config(&self) -> &SadaConfig {
+        &self.cfg
+    }
+
+    /// Whether [`Accelerator::reconstruct_x0`] would currently succeed
+    /// (>= 2 Lagrange nodes buffered) — cheap structural guard for
+    /// planning a [`StepPlan::SkipLagrange`] step.
+    pub fn can_reconstruct(&self) -> bool {
+        self.x0_buf.len() >= 2
     }
 
     fn evaluate_criterion(&mut self, obs: &StepObs) -> Option<(bool, f64, Tensor, Tensor)> {

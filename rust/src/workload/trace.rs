@@ -20,28 +20,57 @@ pub struct Arrival {
     pub prompt_idx: usize,
 }
 
+/// Prompt-index span the default traces draw from (the full bank).
+const FULL_PROMPT_SPAN: usize = 5000;
+
 pub struct TraceGen {
     pub kind: ArrivalKind,
     pub rate_rps: f64,
     pub burst_factor: f64,
     pub burst_period_s: f64,
+    /// When > 0, arrivals draw prompt indices from a hot set of this size
+    /// instead of the full bank — the repeated/near-duplicate traffic shape
+    /// (production prompt distributions are heavy-tailed) that the skip-plan
+    /// cache amortizes across.
+    pub hot_prompts: usize,
 }
 
 impl TraceGen {
     pub fn poisson(rate_rps: f64) -> Self {
-        Self { kind: ArrivalKind::Poisson, rate_rps, burst_factor: 4.0, burst_period_s: 5.0 }
+        Self {
+            kind: ArrivalKind::Poisson,
+            rate_rps,
+            burst_factor: 4.0,
+            burst_period_s: 5.0,
+            hot_prompts: 0,
+        }
     }
 
     pub fn bursty(rate_rps: f64, burst_factor: f64) -> Self {
-        Self { kind: ArrivalKind::Bursty, rate_rps, burst_factor, burst_period_s: 5.0 }
+        Self {
+            kind: ArrivalKind::Bursty,
+            rate_rps,
+            burst_factor,
+            burst_period_s: 5.0,
+            hot_prompts: 0,
+        }
+    }
+
+    /// Poisson arrivals over a hot set of `hot_prompts` repeated prompts
+    /// (the plan-cache sweep's workload).
+    pub fn repeated(rate_rps: f64, hot_prompts: usize) -> Self {
+        let mut g = Self::poisson(rate_rps);
+        g.hot_prompts = hot_prompts.max(1);
+        g
     }
 
     /// Generate `n` arrivals (sorted by time).
     pub fn generate(&self, n: usize, seed: u64) -> Vec<Arrival> {
         let mut rng = Rng::new(seed);
+        let span = if self.hot_prompts > 0 { self.hot_prompts } else { FULL_PROMPT_SPAN };
         let mut out = Vec::with_capacity(n);
         let mut t_s = 0.0f64;
-        for i in 0..n {
+        for _ in 0..n {
             let rate = match self.kind {
                 ArrivalKind::Poisson => self.rate_rps,
                 ArrivalKind::Bursty => {
@@ -54,8 +83,7 @@ impl TraceGen {
                 }
             };
             t_s += rng.exponential(rate.max(1e-9));
-            out.push(Arrival { at_ms: t_s * 1e3, prompt_idx: rng.below(5000) as usize });
-            let _ = i;
+            out.push(Arrival { at_ms: t_s * 1e3, prompt_idx: rng.below(span as u64) as usize });
         }
         out
     }
@@ -84,6 +112,24 @@ mod tests {
         }
         for w in a.windows(2) {
             assert!(w[1].at_ms >= w[0].at_ms);
+        }
+    }
+
+    #[test]
+    fn repeated_trace_draws_from_the_hot_set() {
+        let g = TraceGen::repeated(20.0, 4);
+        let tr = g.generate(400, 9);
+        assert!(tr.iter().all(|a| a.prompt_idx < 4));
+        // every hot prompt recurs — the cache's steady state is reachable
+        for p in 0..4 {
+            let count = tr.iter().filter(|a| a.prompt_idx == p).count();
+            assert!(count > 10, "prompt {p} drawn only {count} times");
+        }
+        // deterministic like the other traces
+        let again = g.generate(400, 9);
+        for (a, b) in tr.iter().zip(&again) {
+            assert_eq!(a.prompt_idx, b.prompt_idx);
+            assert_eq!(a.at_ms, b.at_ms);
         }
     }
 

@@ -96,6 +96,7 @@ fn serving_outputs_bit_identical_across_worker_counts() {
             max_wait_ms: 400.0,
             queue_cap: 64,
             n_workers: workers,
+            ..Default::default()
         })
         .unwrap();
         let bank = PromptBank::load_or_synthetic(std::path::Path::new(dir), 32);

@@ -1,0 +1,272 @@
+//! Skip-plan cache invariants (no artifacts needed: analytic GM backend).
+//!
+//! The load-bearing contract: speculative warm-start replay may only ever
+//! *save* work, never change what a cacheless run would have produced —
+//! an empty cache and an always-diverging cache are both bit-identical to
+//! plain SADA (same images, same NFE), and on a repeated-prompt trace the
+//! steady-state hit rate clears the serving bar with a real NFE cut.
+
+use std::sync::Arc;
+
+use sada::pipeline::{Accelerator, CacheOutcome, GenRequest, Pipeline};
+use sada::plancache::{
+    schedule_fingerprint, Directive, PlanStore, RecordedPlan, SpeculativeAccel,
+};
+use sada::runtime::mock::GmBackend;
+use sada::runtime::ModelBackend;
+use sada::sada::Sada;
+use sada::solvers::{Schedule, SolverKind};
+use sada::testutil::{check, Pair, UsizeIn};
+use sada::workload::{PromptBank, TraceGen};
+use sada::Tensor;
+
+fn dpmpp_fp() -> u64 {
+    schedule_fingerprint(SolverKind::DpmPP.name(), &Schedule::default_ddpm())
+}
+
+fn spec_for(backend: &GmBackend, steps: usize, store: Arc<PlanStore>) -> SpeculativeAccel {
+    SpeculativeAccel::new(
+        Sada::with_default(backend.info(), steps),
+        store,
+        &backend.info().name,
+        dpmpp_fp(),
+    )
+}
+
+fn request(case: u64, steps: usize, guidance: f32) -> GenRequest {
+    let mut rng = sada::rng::Rng::new(1000 + case);
+    GenRequest {
+        cond: Tensor::from_rng(&mut rng, &[1, 32]),
+        seed: 31 * case + 7,
+        guidance,
+        steps,
+        edge: None,
+    }
+}
+
+#[test]
+fn property_empty_cache_is_bit_identical_to_plain_sada() {
+    // over random seeds, step counts and guidance scales: a SpeculativeAccel
+    // over an empty store produces the same images and the same NFE as the
+    // Sada it wraps (the cold path is pure passthrough + recording)
+    let gen = Pair(UsizeIn(0, 400), Pair(UsizeIn(8, 40), UsizeIn(0, 12)));
+    check(11, 8, &gen, |(case, (steps, gs_half))| {
+        let guidance = *gs_half as f32 * 0.5;
+        let backend = GmBackend::new(3 + (*case as u64 % 5));
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let req = request(*case as u64, *steps, guidance);
+        let mut plain = Sada::with_default(backend.info(), *steps);
+        let base = pipe
+            .generate(&req, &mut plain)
+            .map_err(|e| format!("plain sada failed: {e:#}"))?;
+        let store = Arc::new(PlanStore::new(64));
+        let mut spec = spec_for(&backend, *steps, store.clone());
+        let res = pipe
+            .generate(&req, &mut spec)
+            .map_err(|e| format!("speculative failed: {e:#}"))?;
+        if res.image.data() != base.image.data() {
+            return Err(format!("images differ (steps={steps}, gs={guidance})"));
+        }
+        if res.stats.nfe != base.stats.nfe {
+            return Err(format!("nfe {} != {}", res.stats.nfe, base.stats.nfe));
+        }
+        if res.stats.mode_trace() != base.stats.mode_trace() {
+            return Err(format!(
+                "traces differ: {} vs {}",
+                res.stats.mode_trace(),
+                base.stats.mode_trace()
+            ));
+        }
+        match res.stats.outcome {
+            CacheOutcome::Miss | CacheOutcome::Uncached => Ok(()),
+            other => Err(format!("empty cache produced outcome {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn property_always_diverging_cache_is_bit_identical_to_plain_sada() {
+    // a cache whose entries always fail early-sign verification must fall
+    // back to plain SADA before replaying a single directive
+    let gen = Pair(UsizeIn(0, 400), UsizeIn(12, 40));
+    check(13, 6, &gen, |(case, steps)| {
+        let backend = GmBackend::new(4 + (*case as u64 % 5));
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let req = request(*case as u64, *steps, 2.0);
+        // discover the honest key + early signs on a scratch store
+        let scratch = Arc::new(PlanStore::new(64));
+        let mut probe = spec_for(&backend, *steps, scratch.clone());
+        pipe.generate(&req, &mut probe)
+            .map_err(|e| format!("probe failed: {e:#}"))?;
+        let key = match probe.request_key() {
+            Some(k) => k.clone(),
+            // run too short to ever consult the cache: nothing to poison
+            None => return Ok(()),
+        };
+        let honest = match scratch.get(&key) {
+            Some(p) => p,
+            None => return Ok(()), // no insertion (no early dots): inert
+        };
+        let store = Arc::new(PlanStore::new(64));
+        store.insert(
+            key,
+            RecordedPlan {
+                n_steps: honest.n_steps,
+                directives: vec![Directive::SkipLagrange; honest.n_steps],
+                verdicts: vec![None; honest.n_steps],
+                early_signs: honest.early_signs.iter().map(|(i, s)| (*i, !*s)).collect(),
+                nfe: 0,
+            },
+        );
+        let mut plain = Sada::with_default(backend.info(), *steps);
+        let base = pipe
+            .generate(&req, &mut plain)
+            .map_err(|e| format!("plain sada failed: {e:#}"))?;
+        let mut spec = spec_for(&backend, *steps, store.clone());
+        let res = pipe
+            .generate(&req, &mut spec)
+            .map_err(|e| format!("speculative failed: {e:#}"))?;
+        if res.image.data() != base.image.data() {
+            return Err("diverging cache changed the image".into());
+        }
+        if res.stats.nfe != base.stats.nfe {
+            return Err(format!("nfe {} != {}", res.stats.nfe, base.stats.nfe));
+        }
+        if honest.early_signs.is_empty() {
+            return Ok(()); // nothing could mismatch: lookup was a hit/miss
+        }
+        match res.stats.outcome {
+            CacheOutcome::Diverged { .. } => Ok(()),
+            other => Err(format!("expected divergence, got {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn steady_state_hit_rate_clears_the_serving_bar_with_an_nfe_cut() {
+    // the acceptance workload in miniature: a repeated-prompt trace must
+    // reach >= 80% steady-state hit rate and a measurably lower mean NFE
+    // than cold-start SADA
+    let backend = GmBackend::new(5);
+    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let steps = 40;
+    let hot = 4usize;
+    let bank = PromptBank::synthetic(hot, 32, 21);
+    let trace = TraceGen::repeated(50.0, hot).generate(36, 7);
+    let req_for = |idx: usize| GenRequest {
+        cond: bank.get(idx).clone(),
+        seed: bank.seed_for(idx),
+        guidance: 3.0,
+        steps,
+        edge: None,
+    };
+
+    let mut cold = Sada::with_default(backend.info(), steps);
+    let mut cold_nfe = 0usize;
+    for arr in &trace {
+        cold_nfe += pipe.generate(&req_for(arr.prompt_idx), &mut cold).unwrap().stats.nfe;
+    }
+
+    let store = Arc::new(PlanStore::new(64));
+    let mut spec = spec_for(&backend, steps, store.clone());
+    let mut seen = std::collections::HashSet::new();
+    let (mut hits, mut repeats) = (0usize, 0usize);
+    let mut warm_nfe = 0usize;
+    for arr in &trace {
+        let res = pipe.generate(&req_for(arr.prompt_idx), &mut spec).unwrap();
+        if !seen.insert(arr.prompt_idx) {
+            repeats += 1;
+        }
+        if res.stats.outcome == CacheOutcome::Hit {
+            hits += 1;
+        }
+        warm_nfe += res.stats.nfe;
+    }
+    assert!(repeats > 20, "trace too short to measure steady state");
+    let steady = hits as f64 / repeats as f64;
+    assert!(
+        steady >= 0.8,
+        "steady-state hit rate {steady:.2} below the 0.8 bar \
+         ({hits} hits / {repeats} repeats; store stats {:?})",
+        store.stats()
+    );
+    assert!(
+        warm_nfe < cold_nfe,
+        "warm-start replay must cut NFE: warm={warm_nfe} cold={cold_nfe}"
+    );
+}
+
+#[test]
+fn replaying_lanes_co_schedule_into_full_buckets() {
+    // two lanes replaying the same verified plan agree on every fresh step:
+    // the lane engine gathers them into one full_b2 launch per fresh step
+    let backend = GmBackend::with_batch_buckets(5, &[2]);
+    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let steps = 50;
+    let store = Arc::new(PlanStore::new(64));
+    let proto = spec_for(&backend, steps, store.clone());
+    let proto: &dyn Accelerator = &proto;
+    let req = request(7, steps, 2.0);
+    let reqs = vec![req.clone(), req];
+    let cold = pipe.generate_lanes(&reqs, proto).unwrap();
+    for r in &cold {
+        assert_eq!(r.stats.outcome, CacheOutcome::Miss);
+    }
+    backend.reset_nfe();
+    let warm = pipe.generate_lanes(&reqs, proto).unwrap();
+    for r in &warm {
+        assert_eq!(r.stats.outcome, CacheOutcome::Hit);
+    }
+    // co-scheduled replay: one bucketed launch per fresh step, not two
+    assert_eq!(
+        backend.nfe(),
+        warm[0].stats.nfe,
+        "fresh steps must share full_b2 launches (trace={})",
+        warm[0].stats.mode_trace()
+    );
+    assert!(
+        warm[0].stats.nfe < cold[0].stats.nfe,
+        "replay must skip the detection pattern: warm={} cold={}",
+        warm[0].stats.nfe,
+        cold[0].stats.nfe
+    );
+}
+
+#[test]
+fn mixed_cached_and_plain_lanes_do_not_interfere() {
+    // a replaying lane next to a NoAccel lane: the NoAccel lane stays
+    // bit-identical to its sequential run, replay or not
+    use sada::pipeline::lanes::FnFactory;
+    use sada::pipeline::NoAccel;
+    let backend = GmBackend::with_batch_buckets(5, &[2]);
+    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let steps = 30;
+    let store = Arc::new(PlanStore::new(64));
+    let cached = request(9, steps, 2.0);
+    let plain = request(10, steps, 4.0);
+    // warm the cache for the cached lane's request
+    {
+        let mut spec = spec_for(&backend, steps, store.clone());
+        pipe.generate(&cached, &mut spec).unwrap();
+    }
+    let info = backend.info().clone();
+    let store_f = store.clone();
+    let factory = FnFactory(move |lane: usize| -> Box<dyn Accelerator> {
+        if lane == 0 {
+            Box::new(SpeculativeAccel::new(
+                Sada::with_default(&info, steps),
+                store_f.clone(),
+                &info.name,
+                dpmpp_fp(),
+            ))
+        } else {
+            Box::new(NoAccel)
+        }
+    });
+    let lanes = pipe.generate_lanes(&[cached, plain.clone()], &factory).unwrap();
+    assert_eq!(lanes[0].stats.outcome, CacheOutcome::Hit);
+    assert_eq!(lanes[1].stats.outcome, CacheOutcome::Uncached);
+    let solo = pipe.generate(&plain, &mut NoAccel).unwrap();
+    assert_eq!(lanes[1].image.data(), solo.image.data());
+    assert_eq!(lanes[1].stats.nfe, solo.stats.nfe);
+}
