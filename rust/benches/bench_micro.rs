@@ -3,15 +3,25 @@
 //! iterations for a stable mean. These are the SSPerf instrumentation:
 //! all host-side per-step costs must stay far below one model execution
 //! (~2.5 ms on this testbed).
+//!
+//! Key results (ns/op plus the lane-engine steps/s and per-step arena
+//! counters) are stamped into the `micro` section of `BENCH_serving.json`
+//! so the zero-copy hot path's trajectory is diffable across PRs.
 
 use std::time::Instant;
 
+use sada::pipeline::{Accelerator, GenRequest, NoAccel, Pipeline};
+use sada::report::BenchJson;
 use sada::rng::Rng;
-use sada::sada::{multistep::X0Buffer, stepwise};
-use sada::solvers::{ode, Schedule};
-use sada::tensor::{ops, Tensor};
+use sada::runtime::mock::GmBackend;
+use sada::runtime::ModelBackend;
+use sada::sada::{multistep::X0Buffer, stepwise, Sada};
+use sada::solvers::{ode, Schedule, SolverKind};
+use sada::tensor::arena::TensorArena;
+use sada::tensor::{ops, view, Tensor};
+use sada::util::json::Json;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     // warmup
     for _ in 0..iters.min(100) {
         f();
@@ -22,6 +32,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     }
     let per = t0.elapsed().as_nanos() as f64 / iters as f64;
     println!("{name:<42} {per:>12.0} ns/op   ({iters} iters)");
+    per
 }
 
 fn main() {
@@ -32,6 +43,10 @@ fn main() {
     let y2 = Tensor::from_rng(&mut rng, &shape);
     let y3 = Tensor::from_rng(&mut rng, &shape);
     let schedule = Schedule::default_ddpm();
+    let mut micro: Vec<(String, Json)> = Vec::new();
+    let record = |k: &str, ns: f64, micro: &mut Vec<(String, Json)>| {
+        micro.push((k.to_string(), Json::num(ns)));
+    };
 
     println!("== bench_micro: L3 per-step host costs (16x16x3 latents) ==");
     bench("am3 extrapolation (Thm 3.5)", 200_000, || {
@@ -51,8 +66,8 @@ fn main() {
         let _ = ode::gradient_eps(&schedule, 500, &x, &y1);
     });
 
-    // allocating vs in-place lincombs: the solver step loop now reuses
-    // scratch buffers via the _into variants — this pair shows the win
+    // allocating vs in-place lincombs: the solver step loop reuses scratch
+    // buffers via the _into variants — this pair shows the win
     bench("lincomb3 (allocating)", 200_000, || {
         let _ = ops::lincomb3(1.0, &x, -2.0, &y1, 1.0, &y2);
     });
@@ -66,11 +81,50 @@ fn main() {
     bench("lincomb4_into (buffer reuse)", 200_000, || {
         ops::lincomb4_into(1.0, &x, -0.8, &y1, -0.8, &y2, 0.6, &y3, &mut buf);
     });
-    // lane engine gather/scatter primitives
-    bench("lane gather+scatter (4 lanes)", 50_000, || {
+
+    // lane-engine gather/scatter: the allocating stack/unstack pair vs the
+    // zero-copy row views writing into a reused bucket buffer
+    let ns = bench("stack+unstack rows (allocating, 4 lanes)", 50_000, || {
         let s = ops::stack_rows(&[&x, &y1, &y2, &y3]);
         let _ = ops::unstack_rows(&s);
     });
+    record("stack_unstack_ns", ns, &mut micro);
+    {
+        let mut bucket = Tensor::zeros(&[4, 16, 16, 3]);
+        let mut outs = [
+            Tensor::zeros(&shape),
+            Tensor::zeros(&shape),
+            Tensor::zeros(&shape),
+            Tensor::zeros(&shape),
+        ];
+        let ns = bench("gather_into+scatter_from (views, 4 lanes)", 50_000, || {
+            ops::gather_into(&[&x, &y1, &y2, &y3], &mut bucket);
+            ops::scatter_from(&bucket, &mut outs);
+        });
+        record("gather_scatter_views_ns", ns, &mut micro);
+        // per-row scatter (the lane engine's form) costs the same bytes
+        let ns = bench("copy_from_row scatter (4 lanes)", 50_000, || {
+            for (k, o) in outs.iter_mut().enumerate() {
+                view::copy_from_row(o, &bucket, k);
+            }
+        });
+        record("row_scatter_ns", ns, &mut micro);
+    }
+
+    // arena checkout/release vs a fresh zeroed allocation per step
+    let ns = bench("Tensor::zeros [4,16,16,3] (allocating)", 100_000, || {
+        let _ = Tensor::zeros(&[4, 16, 16, 3]);
+    });
+    record("alloc_zeros_ns", ns, &mut micro);
+    {
+        let arena = TensorArena::new();
+        let ns = bench("arena checkout+release [4,16,16,3]", 100_000, || {
+            let t = arena.checkout(&[4, 16, 16, 3]);
+            arena.release(t);
+        });
+        record("arena_roundtrip_ns", ns, &mut micro);
+    }
+
     bench("lagrange reconstruct (4 nodes)", 100_000, || {
         let mut buf = X0Buffer::new(4, 1e-9);
         for (i, t) in [0.9, 0.8, 0.7, 0.6].iter().enumerate() {
@@ -79,19 +133,23 @@ fn main() {
         }
         let _ = buf.reconstruct(0.55);
     });
-    bench("dpm++ solver step", 100_000, || {
+    let ns = bench("dpm++ solver step (allocating)", 100_000, || {
         let mut s = sada::solvers::DpmPP2M::new(schedule.clone(), 50);
         use sada::solvers::Solver;
         let _ = s.step(&x, &y1, 10);
     });
+    record("solver_step_alloc_ns", ns, &mut micro);
     {
-        // warm solver: the 2M blend reuses its scratch buffer across steps
+        // pooled solver step: warm scratch + step_into a reused buffer —
+        // the shape of the lane engine's steady state
         use sada::solvers::Solver;
         let mut warm = sada::solvers::DpmPP2M::new(schedule.clone(), 50);
-        let _ = warm.step(&x, &y1, 10);
-        bench("dpm++ solver step (warm scratch)", 100_000, || {
-            let _ = warm.step(&x, &y1, 11);
+        let mut out = Tensor::zeros(&shape);
+        warm.step_into(&x, &y1, 10, &mut out);
+        let ns = bench("dpm++ solver step_into (pooled)", 100_000, || {
+            warm.step_into(&x, &y1, 11, &mut out);
         });
+        record("solver_step_into_ns", ns, &mut micro);
     }
 
     let lp = sada::metrics::LpipsRc::new(3);
@@ -127,9 +185,67 @@ fn main() {
         let _ = b.poll(1.0);
     });
 
+    // end-to-end lane-engine throughput on the analytic GM backend:
+    // steps/s at batch 8 plus the per-step arena counters — the headline
+    // numbers for the zero-copy hot path, tracked across PRs
+    {
+        let backend = GmBackend::with_batch_buckets(3, &[2, 4, 8]);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let steps = 25usize;
+        let batch = 8usize;
+        let mut prng = Rng::new(42);
+        let reqs: Vec<GenRequest> = (0..batch)
+            .map(|_| GenRequest {
+                cond: Tensor::from_rng(&mut prng, &[1, 32]),
+                seed: prng.below(100_000),
+                guidance: 3.0,
+                steps,
+                edge: None,
+            })
+            .collect();
+        for (accel_name, proto) in [
+            ("baseline", Box::new(NoAccel) as Box<dyn Accelerator>),
+            (
+                "sada",
+                Box::new(Sada::with_default(backend.info(), steps)) as Box<dyn Accelerator>,
+            ),
+        ] {
+            // warm pools, then measure
+            pipe.generate_lanes(&reqs, proto.as_ref()).expect("lane warmup");
+            let before = pipe.arena_stats();
+            let t0 = Instant::now();
+            let rounds = 20usize;
+            for _ in 0..rounds {
+                pipe.generate_lanes(&reqs, proto.as_ref()).expect("lane bench");
+            }
+            let wall_s = t0.elapsed().as_secs_f64();
+            let after = pipe.arena_stats();
+            let total_steps = (rounds * steps * batch) as f64;
+            let steps_per_s = total_steps / wall_s.max(1e-9);
+            let misses = (after.misses - before.misses) as f64;
+            let checkouts = (after.checkouts - before.checkouts).max(1) as f64;
+            println!(
+                "lane engine b{batch} ({accel_name:<8})  {steps_per_s:>12.0} steps/s   \
+                 arena hit-rate {:.4}  allocs/step {:.5}",
+                1.0 - misses / checkouts,
+                misses / total_steps,
+            );
+            micro.push((format!("lanes_b8_{accel_name}_steps_per_s"), Json::num(steps_per_s)));
+            micro.push((
+                format!("lanes_b8_{accel_name}_arena_allocs_per_step"),
+                Json::num(misses / total_steps),
+            ));
+        }
+    }
+
+    let mut bench_json = BenchJson::open_default();
+    let entries: Vec<(&str, Json)> = micro.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    bench_json.set_section("micro", Json::obj(entries));
+    bench_json.save_or_warn();
+
     // end-to-end PJRT execution if artifacts are present
     if std::path::Path::new("artifacts/manifest.json").exists() {
-        use sada::runtime::{ModelArgs, ModelBackend, Runtime};
+        use sada::runtime::{ModelArgs, Runtime};
         let rt = Runtime::open("artifacts").expect("runtime");
         rt.preload_model("sd2_tiny").expect("preload");
         let backend = rt.model_backend("sd2_tiny").unwrap();

@@ -6,7 +6,8 @@
 //! into the compiled batch buckets under a max-wait deadline, and a pool
 //! of `n_workers` engine workers — each the exclusive owner of its own
 //! PJRT runtime handle — pulls ready batches off a shared work queue and
-//! executes each as one lockstep SADA-accelerated sampling run.
+//! executes each through the per-lane batched sampling engine (the only
+//! batched execution path; single requests run `Pipeline::generate`).
 
 pub mod batcher;
 pub mod metrics_log;

@@ -279,7 +279,7 @@ pub fn run_lane_sweep(
     let buckets = backend.info().full_batch_buckets();
     let mut table = Table::new(
         &format!("Per-lane vs lockstep — {model}, {steps} steps, compiled buckets {buckets:?}"),
-        &["Batch", "Mode", "Mean NFE", "Per-request NFE", "Skip spread", "Wall ms"],
+        &["Batch", "Mode", "Mean NFE", "Per-request NFE", "Skip spread", "Wall ms", "Steps/s"],
     );
     let mut rows_json: Vec<Json> = Vec::new();
     for &b in batch_sizes {
@@ -306,6 +306,10 @@ pub fn run_lane_sweep(
             let skips: Vec<f64> = res.iter().map(|r| r.stats.skip_fraction()).collect();
             let spread = skips.iter().cloned().fold(f64::MIN, f64::max)
                 - skips.iter().cloned().fold(f64::MAX, f64::min);
+            // host-side throughput of the zero-copy step loop: scheduled
+            // lane-steps per wall second (the perf-trajectory headline for
+            // the arena/view hot path, compared across PRs at batch 8)
+            let steps_per_s = (b * steps) as f64 / (res[0].stats.wall_ms / 1e3).max(1e-9);
             table.row(vec![
                 format!("{b}"),
                 name.into(),
@@ -313,6 +317,7 @@ pub fn run_lane_sweep(
                 format!("{nfes:?}"),
                 f3(spread),
                 f2(res[0].stats.wall_ms),
+                f2(steps_per_s),
             ]);
             rows_json.push(Json::obj(vec![
                 ("batch", Json::num(b as f64)),
@@ -320,10 +325,14 @@ pub fn run_lane_sweep(
                 ("mean_nfe", Json::num(mean)),
                 ("skip_spread", Json::num(spread)),
                 ("wall_ms", Json::num(res[0].stats.wall_ms)),
+                ("steps_per_s", Json::num(steps_per_s)),
             ]));
         }
     }
     table.print();
+    // arena counters over the whole sweep: steady-state misses == 0 is the
+    // zero-allocation claim, surfaced machine-readably next to the rows
+    let arena = pipe.arena_stats();
     let mut bench = BenchJson::open_default();
     bench.set_section(
         "lanes",
@@ -331,6 +340,14 @@ pub fn run_lane_sweep(
             ("model", Json::str(model)),
             ("steps", Json::num(steps as f64)),
             ("rows", Json::Arr(rows_json)),
+            (
+                "arena",
+                Json::obj(vec![
+                    ("checkouts", Json::num(arena.checkouts as f64)),
+                    ("hits", Json::num(arena.hits as f64)),
+                    ("misses", Json::num(arena.misses as f64)),
+                ]),
+            ),
         ]),
     );
     bench.save_or_warn();

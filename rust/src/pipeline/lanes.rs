@@ -10,9 +10,10 @@
 //! multistep history, and its own [`RunStats`]. Every step:
 //!
 //! 1. each lane plans independently;
-//! 2. lanes planning [`StepPlan::Full`] are gathered on the batch axis
-//!    ([`crate::tensor::ops::stack_rows`]) and executed through the largest
-//!    fitting compiled `full_b{n}` bucket
+//! 2. lanes planning [`StepPlan::Full`] are gathered row-wise
+//!    ([`crate::tensor::view::copy_into_row`]) into arena-pooled bucket
+//!    buffers and executed through the largest fitting compiled
+//!    `full_b{n}` bucket
 //!    ([`crate::runtime::manifest::split_into_buckets`]), grouped by
 //!    guidance scalar (a compiled variant takes one `gs` input); oversized
 //!    gathers split across several bucket launches plus `full` singles, so
@@ -36,14 +37,23 @@
 //! [`Pipeline::generate`] per request (property-tested below): single-lane
 //! chunks share the exact code path, and bucketed chunks are pure
 //! gather/compute/scatter.
+//!
+//! **Memory discipline.** The step loop is zero-allocation at steady
+//! state (pinned by `tests/zero_alloc.rs`): every lane owns reusable step
+//! buffers (state, model output, data prediction, gradient) written
+//! through the solvers' `_into` kernels and [`ModelBackend::run_into`];
+//! bucket gathers write lane rows directly into buffers checked out from
+//! the pipeline's [`crate::tensor::arena::TensorArena`] (released after
+//! the scatter); and the per-step bookkeeping (plans, guidance groups,
+//! bucket splits) lives in vectors allocated once before the loop.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::{Accelerator, GenRequest, GenResult, Pipeline, RunStats, StepCtx, StepObs, StepPlan};
 use crate::runtime::manifest::split_into_buckets;
 use crate::runtime::{ModelArgs, ModelBackend, ModelInfo};
 use crate::solvers::{build_solver, Solver};
-use crate::tensor::{ops, Tensor};
+use crate::tensor::{view, Tensor};
 
 /// Makers of fresh per-lane accelerator instances.
 pub trait AcceleratorFactory {
@@ -76,20 +86,35 @@ pub enum LaneMode {
     PerLane,
     /// Global-decision arm for per-lane-vs-lockstep sweeps: whenever any
     /// lane needs a fresh execution, every lane executes. This models the
-    /// *regime* the legacy lockstep batch imposed — one skip/keep decision
-    /// for the whole batch — not its exact implementation (which evaluated
-    /// a single criterion over the concatenated tensor and required a
-    /// compiled bucket of the exact batch size).
+    /// *regime* the retired lockstep batch path imposed — one skip/keep
+    /// decision for the whole batch — not its exact implementation (which
+    /// evaluated a single criterion over the concatenated tensor and
+    /// required a compiled bucket of the exact batch size).
     Lockstep,
 }
 
-/// One request's private slice of the batch.
+/// One request's private slice of the batch, with its reusable step
+/// buffers (the zero-allocation discipline: buffers are written in place
+/// every step and swapped, never reallocated).
 struct Lane<'r> {
     req: &'r GenRequest,
     solver: Box<dyn Solver>,
     accel: Box<dyn Accelerator>,
+    wants_obs: bool,
+    /// Current state x_i (swapped with `x_next` after every step).
     x: Tensor,
-    last_out: Option<Tensor>,
+    x_next: Tensor,
+    /// This step's model output (swapped with `last_out` after the step).
+    m_out: Tensor,
+    last_out: Tensor,
+    has_last: bool,
+    /// Whether `m_out` holds a fresh execution for the current step.
+    executed: bool,
+    x0: Tensor,
+    y: Tensor,
+    /// Persistent model args: `x` slot copied in place per call, cond/edge
+    /// cloned once at lane init.
+    args: ModelArgs,
     /// DeepCache deep feature from this lane's last *single* full run
     /// (bucketed launches clear it — batched aux layouts are not
     /// per-lane sliceable).
@@ -97,6 +122,26 @@ struct Lane<'r> {
     /// Attention caches from this lane's last single full/prune run.
     caches: Option<Tensor>,
     stats: RunStats,
+}
+
+/// Step-loop bookkeeping allocated once per `generate_lanes` call and
+/// reused every step (cleared, never reallocated at steady state).
+struct LaneScratch {
+    /// Per-step plans, lane-indexed.
+    plans: Vec<StepPlan>,
+    /// Guidance groups: parallel key/member vectors in first-appearance
+    /// order; member vectors are recycled across steps.
+    group_keys: Vec<u32>,
+    group_members: Vec<Vec<usize>>,
+    /// Per-group partition of members into edge-conditioned singles and
+    /// batchable lanes.
+    singles: Vec<usize>,
+    batchable: Vec<usize>,
+    /// `splits[n]` = fewest-launches chunk plan for an n-lane gather
+    /// (precomputed for every possible gather size).
+    splits: Vec<Vec<usize>>,
+    /// Compiled `full_b{n}` variant names, built once.
+    bucket_variants: Vec<(usize, String)>,
 }
 
 impl<'a, B: ModelBackend> Pipeline<'a, B> {
@@ -127,6 +172,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         let info = self.backend.info().clone();
         let buckets = info.full_batch_buckets();
         let [h, w, c] = info.img;
+        let shape = [1, h, w, c];
 
         let mut lanes: Vec<Lane> = reqs
             .iter()
@@ -138,16 +184,55 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 accel.reset();
                 accel.begin_run(req);
                 let mut rng = crate::rng::Rng::new(req.seed);
-                let x = Tensor::from_rng(&mut rng, &[1, h, w, c]);
+                let x = Tensor::from_rng(&mut rng, &shape);
                 let stats = RunStats::new(accel.name(), steps);
-                Lane { req, solver, accel, x, last_out: None, deep: None, caches: None, stats }
+                let wants_obs = accel.wants_obs();
+                Lane {
+                    req,
+                    solver,
+                    wants_obs,
+                    accel,
+                    x,
+                    x_next: Tensor::zeros(&shape),
+                    m_out: Tensor::zeros(&shape),
+                    last_out: Tensor::zeros(&shape),
+                    has_last: false,
+                    executed: false,
+                    x0: Tensor::zeros(&shape),
+                    y: Tensor::zeros(&shape),
+                    args: ModelArgs {
+                        x: Some(Tensor::zeros(&shape)),
+                        t: 0.0,
+                        cond: Some(req.cond.clone()),
+                        gs: req.guidance,
+                        edge: req.edge.clone(),
+                        ..Default::default()
+                    },
+                    deep: None,
+                    caches: None,
+                    stats,
+                }
             })
             .collect();
+
+        // step-loop bookkeeping, allocated once (steady-state steps reuse)
+        let mut sc = LaneScratch {
+            plans: Vec::with_capacity(lanes.len()),
+            group_keys: Vec::with_capacity(lanes.len()),
+            group_members: Vec::new(),
+            singles: Vec::with_capacity(lanes.len()),
+            batchable: Vec::with_capacity(lanes.len()),
+            splits: (0..=lanes.len()).map(|n| split_into_buckets(n, &buckets)).collect(),
+            bucket_variants: buckets
+                .iter()
+                .map(|&n| (n, ModelInfo::full_variant_for(n)))
+                .collect(),
+        };
 
         let timer = crate::report::Timer::start();
         for i in 0..steps {
             // 1) every lane plans independently from its own history
-            let mut plans: Vec<StepPlan> = Vec::with_capacity(lanes.len());
+            sc.plans.clear();
             for lane in lanes.iter_mut() {
                 let ctx = StepCtx {
                     i,
@@ -162,98 +247,103 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 plan = match plan {
                     StepPlan::Shallow if lane.deep.is_none() => StepPlan::Full,
                     StepPlan::Prune { .. } if lane.caches.is_none() => StepPlan::Full,
-                    StepPlan::SkipReuse | StepPlan::SkipExtrapolate
-                        if lane.last_out.is_none() =>
-                    {
+                    StepPlan::SkipReuse | StepPlan::SkipExtrapolate if !lane.has_last => {
                         StepPlan::Full
                     }
                     p => p,
                 };
-                plans.push(plan);
+                sc.plans.push(plan);
             }
             if mode == LaneMode::Lockstep
-                && plans.iter().any(|p| {
+                && sc.plans.iter().any(|p| {
                     !matches!(
                         p,
                         StepPlan::SkipReuse | StepPlan::SkipExtrapolate | StepPlan::SkipLagrange
                     )
                 })
             {
-                for p in plans.iter_mut() {
+                for p in sc.plans.iter_mut() {
                     *p = StepPlan::Full;
                 }
             }
 
             // 2) execute: degraded variants as per-lane singles, Full lanes
-            //    gathered bucket-aware
-            let mut fresh_out: Vec<Option<Tensor>> = (0..lanes.len()).map(|_| None).collect();
-            self.execute_planned_lanes(&mut lanes, &plans, &buckets, i, &mut fresh_out)?;
+            //    gathered bucket-aware into arena buffers
+            for lane in lanes.iter_mut() {
+                lane.executed = false;
+            }
+            self.execute_planned_lanes(&mut lanes, i, &mut sc)?;
 
             // 3) every lane advances through its own solver + accelerator.
             // The arms below mirror Pipeline::generate's step body — keep
             // the two in lockstep (the NoAccel/DeepCache bit-identity
             // property tests pin the executed paths against drift).
             for (l, lane) in lanes.iter_mut().enumerate() {
-                let plan = &plans[l];
+                let plan = &sc.plans[l];
                 let t_norm = lane.solver.t_norm(i);
-                let fresh = fresh_out[l].is_some();
-                let (model_out, x0, x_next) = match plan {
+                let fresh = lane.executed;
+                match plan {
                     StepPlan::Full | StepPlan::Shallow | StepPlan::Prune { .. } => {
-                        let out = fresh_out[l].take().context("executed lane lost its output")?;
-                        let x0 = lane.solver.x0_from_model(&lane.x, &out, i);
-                        let xn = lane.solver.step(&lane.x, &x0, i);
-                        (out, x0, xn)
+                        anyhow::ensure!(lane.executed, "executed lane lost its output");
+                        lane.solver.x0_from_model_into(&lane.x, &lane.m_out, i, &mut lane.x0);
+                        lane.solver.step_into(&lane.x, &lane.x0, i, &mut lane.x_next);
                     }
                     StepPlan::SkipReuse => {
-                        let out = lane.last_out.clone().context("SkipReuse without history")?;
-                        let x0 = lane.solver.x0_from_model(&lane.x, &out, i);
-                        let xn = lane.solver.step(&lane.x, &x0, i);
-                        (out, x0, xn)
+                        anyhow::ensure!(lane.has_last, "SkipReuse without history");
+                        lane.m_out.copy_from(&lane.last_out);
+                        lane.solver.x0_from_model_into(&lane.x, &lane.m_out, i, &mut lane.x0);
+                        lane.solver.step_into(&lane.x, &lane.x0, i, &mut lane.x_next);
                     }
                     StepPlan::SkipExtrapolate => {
-                        let out = lane
-                            .last_out
-                            .clone()
-                            .context("SkipExtrapolate without history")?;
-                        let x0 = lane.solver.x0_from_model(&lane.x, &out, i);
-                        let y_now = lane.solver.gradient(&lane.x, &out, i);
+                        anyhow::ensure!(lane.has_last, "SkipExtrapolate without history");
+                        lane.m_out.copy_from(&lane.last_out);
+                        lane.solver.x0_from_model_into(&lane.x, &lane.m_out, i, &mut lane.x0);
+                        lane.solver.gradient_into(&lane.x, &lane.m_out, i, &mut lane.y);
                         let dt = lane.solver.dt(i);
-                        let xn = lane
-                            .accel
-                            .extrapolate(&lane.x, &y_now, dt)
-                            .unwrap_or_else(|| {
-                                ops::lincomb2(1.0, &lane.x, -(dt as f32), &y_now)
-                            });
-                        lane.solver.inject_x0(&x0, i);
-                        (out, x0, xn)
+                        if !lane.accel.extrapolate_into(&lane.x, &lane.y, dt, &mut lane.x_next) {
+                            crate::tensor::ops::lincomb2_into(
+                                1.0,
+                                &lane.x,
+                                -(dt as f32),
+                                &lane.y,
+                                &mut lane.x_next,
+                            );
+                        }
+                        lane.solver.inject_x0(&lane.x0, i);
                     }
                     StepPlan::SkipLagrange => {
-                        let x0 = lane
-                            .accel
-                            .reconstruct_x0(t_norm)
-                            .context("SkipLagrange without a filled x0 buffer")?;
-                        let out = lane.solver.model_out_from_x0(&lane.x, &x0, i);
-                        let xn = lane.solver.step(&lane.x, &x0, i);
-                        (out, x0, xn)
+                        anyhow::ensure!(
+                            lane.accel.reconstruct_x0_into(t_norm, &mut lane.x0),
+                            "SkipLagrange without a filled x0 buffer"
+                        );
+                        lane.solver.model_out_from_x0_into(&lane.x, &lane.x0, i, &mut lane.m_out);
+                        lane.solver.step_into(&lane.x, &lane.x0, i, &mut lane.x_next);
                     }
-                };
-                let y = lane.solver.gradient(&lane.x, &model_out, i);
-                let obs = StepObs {
-                    i,
-                    n_steps: steps,
-                    fresh,
-                    x_prev: &lane.x,
-                    x_next: &x_next,
-                    model_out: &model_out,
-                    x0: &x0,
-                    y: &y,
-                    dt: lane.solver.dt(i),
-                    t_norm,
-                };
-                lane.accel.observe(&obs);
+                }
+                if lane.wants_obs {
+                    // the SkipExtrapolate arm already computed this
+                    // gradient from the same inputs
+                    if !matches!(plan, StepPlan::SkipExtrapolate) {
+                        lane.solver.gradient_into(&lane.x, &lane.m_out, i, &mut lane.y);
+                    }
+                    let obs = StepObs {
+                        i,
+                        n_steps: steps,
+                        fresh,
+                        x_prev: &lane.x,
+                        x_next: &lane.x_next,
+                        model_out: &lane.m_out,
+                        x0: &lane.x0,
+                        y: &lane.y,
+                        dt: lane.solver.dt(i),
+                        t_norm,
+                    };
+                    lane.accel.observe(&obs);
+                }
                 lane.stats.record_step(plan, fresh);
-                lane.last_out = Some(model_out);
-                lane.x = x_next;
+                std::mem::swap(&mut lane.m_out, &mut lane.last_out);
+                lane.has_last = true;
+                std::mem::swap(&mut lane.x, &mut lane.x_next);
             }
         }
 
@@ -270,108 +360,116 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
     }
 
     /// Execute every lane whose plan needs the model at step `i`, writing
-    /// outputs into `fresh_out`. Shallow/Prune lanes run as singles with
-    /// lane-local aux features (those variants are compiled at batch 1
-    /// only). Full lanes are grouped by guidance scalar (one `gs` input
-    /// per compiled variant), edge-conditioned lanes run as singles (edge
-    /// inputs are only compiled for batch-1 variants), and each group is
-    /// chunked across the compiled `full_b{n}` buckets.
-    fn execute_planned_lanes(
-        &self,
-        lanes: &mut [Lane],
-        plans: &[StepPlan],
-        buckets: &[usize],
-        i: usize,
-        fresh_out: &mut [Option<Tensor>],
-    ) -> Result<()> {
+    /// outputs into each lane's `m_out` buffer (`executed` marks success).
+    /// Shallow/Prune lanes run as singles with lane-local aux features
+    /// (those variants are compiled at batch 1 only). Full lanes are
+    /// grouped by guidance scalar (one `gs` input per compiled variant),
+    /// edge-conditioned lanes run as singles (edge inputs are only
+    /// compiled for batch-1 variants), and each group is chunked across
+    /// the compiled `full_b{n}` buckets through arena-pooled gather
+    /// buffers.
+    fn execute_planned_lanes(&self, lanes: &mut [Lane], i: usize, sc: &mut LaneScratch) -> Result<()> {
         // degraded variants: per-lane singles, mirroring Pipeline::generate
-        for (l, plan) in plans.iter().enumerate() {
+        for (l, plan) in sc.plans.iter().enumerate() {
             match plan {
                 StepPlan::Shallow => {
                     let lane = &mut lanes[l];
-                    let mut args = self.base_args(&lane.x, lane.solver.t_norm(i), lane.req);
-                    args.deep = lane.deep.clone();
-                    fresh_out[l] = Some(self.backend.run("shallow", &args)?.out);
+                    let t_norm = lane.solver.t_norm(i);
+                    lane.args.x.as_mut().expect("persistent x slot").copy_from(&lane.x);
+                    lane.args.t = t_norm as f32;
+                    // move (not clone) the deep feature into the args and
+                    // back: the shallow variant reads it but emits none
+                    lane.args.deep = lane.deep.take();
+                    let run = self.backend.run_into("shallow", &lane.args, &mut lane.m_out, None, None);
+                    lane.deep = lane.args.deep.take();
+                    run?;
+                    lane.executed = true;
                 }
                 StepPlan::Prune { variant, keep_idx } => {
                     let lane = &mut lanes[l];
-                    let mut args = self.base_args(&lane.x, lane.solver.t_norm(i), lane.req);
-                    args.keep_idx = Some(keep_idx.clone());
-                    args.caches = lane.caches.clone();
-                    let mo = self.backend.run(variant, &args)?;
-                    if mo.caches.is_some() {
-                        lane.caches = mo.caches;
+                    let t_norm = lane.solver.t_norm(i);
+                    lane.args.x.as_mut().expect("persistent x slot").copy_from(&lane.x);
+                    lane.args.t = t_norm as f32;
+                    lane.args.keep_idx = Some(keep_idx.clone());
+                    // input caches move into the args; refreshed caches (if
+                    // emitted) land in the slot, else the input moves back
+                    lane.args.caches = lane.caches.take();
+                    let run = self.backend.run_into(
+                        variant,
+                        &lane.args,
+                        &mut lane.m_out,
+                        None,
+                        Some(&mut lane.caches),
+                    );
+                    if lane.caches.is_none() {
+                        lane.caches = lane.args.caches.take();
+                    } else {
+                        lane.args.caches = None;
                     }
-                    fresh_out[l] = Some(mo.out);
+                    lane.args.keep_idx = None;
+                    run?;
+                    lane.executed = true;
                 }
                 _ => {}
             }
         }
         // Full lanes: group by guidance bits, preserving lane order
-        let mut groups: Vec<(u32, Vec<usize>)> = Vec::new();
-        for (l, plan) in plans.iter().enumerate() {
+        // (reused key/member vectors — no per-step allocation once every
+        // distinct guidance value has appeared)
+        sc.group_keys.clear();
+        for members in sc.group_members.iter_mut() {
+            members.clear();
+        }
+        for (l, plan) in sc.plans.iter().enumerate() {
             if *plan != StepPlan::Full {
                 continue;
             }
             let key = lanes[l].req.guidance.to_bits();
-            match groups.iter_mut().find(|(k, _)| *k == key) {
-                Some((_, members)) => members.push(l),
-                None => groups.push((key, vec![l])),
-            }
+            let gi = match sc.group_keys.iter().position(|k| *k == key) {
+                Some(gi) => gi,
+                None => {
+                    sc.group_keys.push(key);
+                    if sc.group_members.len() < sc.group_keys.len() {
+                        sc.group_members.push(Vec::new());
+                    }
+                    sc.group_keys.len() - 1
+                }
+            };
+            sc.group_members[gi].push(l);
         }
-        // co-schedule lanes replaying the same verified cached plan into
-        // the same bucket chunk: their fresh steps coincide for the rest of
-        // the run, so keeping them adjacent maximizes full-bucket gathers
-        // on later steps. Stable sort: unkeyed lanes keep lane order.
-        for (_, members) in groups.iter_mut() {
-            members.sort_by_key(|l| match lanes[*l].accel.plan_key() {
+        for gi in 0..sc.group_keys.len() {
+            // co-schedule lanes replaying the same verified cached plan
+            // into the same bucket chunk: their fresh steps coincide for
+            // the rest of the run, so keeping them adjacent maximizes
+            // full-bucket gathers on later steps. Stable sort: unkeyed
+            // lanes keep lane order (slices this short sort in place).
+            sc.group_members[gi].sort_by_key(|l| match lanes[*l].accel.plan_key() {
                 Some(k) => (0u8, k),
                 None => (1u8, 0),
             });
-        }
-        for (_, members) in &groups {
-            let (singles, batchable): (Vec<usize>, Vec<usize>) = members
-                .iter()
-                .copied()
-                .partition(|l| lanes[*l].req.edge.is_some());
-            for &l in &singles {
-                let out = self.run_lane_single(&mut lanes[l], i)?;
-                fresh_out[l] = Some(out);
+            sc.singles.clear();
+            sc.batchable.clear();
+            for &l in &sc.group_members[gi] {
+                if lanes[l].req.edge.is_some() {
+                    sc.singles.push(l);
+                } else {
+                    sc.batchable.push(l);
+                }
+            }
+            for &l in &sc.singles {
+                self.run_lane_single(&mut lanes[l], i)?;
             }
             let mut at = 0usize;
-            for chunk in split_into_buckets(batchable.len(), buckets) {
-                let sub = &batchable[at..at + chunk];
-                at += chunk;
+            for &chunk in &sc.splits[sc.batchable.len()] {
                 if chunk == 1 {
-                    let out = self.run_lane_single(&mut lanes[sub[0]], i)?;
-                    fresh_out[sub[0]] = Some(out);
+                    let l = sc.batchable[at];
+                    at += 1;
+                    self.run_lane_single(&mut lanes[l], i)?;
                     continue;
                 }
-                let xs: Vec<&Tensor> = sub.iter().map(|l| &lanes[*l].x).collect();
-                let conds: Vec<&Tensor> = sub.iter().map(|l| &lanes[*l].req.cond).collect();
-                let t_norm = lanes[sub[0]].solver.t_norm(i);
-                let args = ModelArgs {
-                    x: Some(ops::stack_rows(&xs)),
-                    t: t_norm as f32,
-                    cond: Some(ops::stack_rows(&conds)),
-                    gs: lanes[sub[0]].req.guidance,
-                    ..Default::default()
-                };
-                let variant = ModelInfo::full_variant_for(chunk);
-                let mo = self.backend.run(&variant, &args)?;
-                let rows = ops::unstack_rows(&mo.out);
-                anyhow::ensure!(
-                    rows.len() == chunk,
-                    "variant {variant} returned {} rows for a {chunk}-lane sub-batch",
-                    rows.len()
-                );
-                for (row, &l) in rows.into_iter().zip(sub) {
-                    fresh_out[l] = Some(row);
-                    // batched aux layouts are not per-lane sliceable: drop
-                    // stale features rather than feed them to Shallow/Prune
-                    lanes[l].deep = None;
-                    lanes[l].caches = None;
-                }
+                let lo = at;
+                at += chunk;
+                self.run_lane_bucket(lanes, &sc.batchable[lo..at], i, &sc.bucket_variants)?;
             }
         }
         Ok(())
@@ -380,16 +478,83 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
     /// Single-lane full execution: the same code path as the Full arm of
     /// [`Pipeline::generate`] (including deep/caches capture), so a lane
     /// executed alone is bit-identical to sequential generation.
-    fn run_lane_single(&self, lane: &mut Lane, i: usize) -> Result<Tensor> {
+    fn run_lane_single(&self, lane: &mut Lane, i: usize) -> Result<()> {
         let t_norm = lane.solver.t_norm(i);
-        let mo = self.run_model("full", &lane.x, t_norm, lane.req)?;
-        if mo.deep.is_some() {
-            lane.deep = mo.deep;
+        lane.args.x.as_mut().expect("persistent x slot").copy_from(&lane.x);
+        lane.args.t = t_norm as f32;
+        self.backend.run_into(
+            "full",
+            &lane.args,
+            &mut lane.m_out,
+            Some(&mut lane.deep),
+            Some(&mut lane.caches),
+        )?;
+        lane.executed = true;
+        Ok(())
+    }
+
+    /// Bucketed full execution of `sub` (>= 2 lanes, one guidance value):
+    /// lane states and conds are gathered row-wise into arena-pooled
+    /// `[chunk, ...]` buffers, the compiled `full_b{chunk}` variant runs
+    /// into a pooled output buffer, and rows scatter back into each lane's
+    /// `m_out` in place. All three buffers return to the arena, so the
+    /// steady state allocates nothing.
+    fn run_lane_bucket(
+        &self,
+        lanes: &mut [Lane],
+        sub: &[usize],
+        i: usize,
+        bucket_variants: &[(usize, String)],
+    ) -> Result<()> {
+        let chunk = sub.len();
+        let info = self.backend.info();
+        let [h, w, c] = info.img;
+        let t_norm = lanes[sub[0]].solver.t_norm(i);
+        let gs = lanes[sub[0]].req.guidance;
+        let variant = bucket_variants
+            .iter()
+            .find(|(n, _)| *n == chunk)
+            .map(|(_, v)| v.as_str());
+        let variant = match variant {
+            Some(v) => v,
+            None => anyhow::bail!("no compiled bucket variant for a {chunk}-lane chunk"),
+        };
+        let mut xb = self.arena.checkout(&[chunk, h, w, c]);
+        let mut cb = self.arena.checkout(&[chunk, info.cond_dim]);
+        for (k, &l) in sub.iter().enumerate() {
+            view::copy_into_row(&mut xb, k, &lanes[l].x);
+            view::copy_into_row(&mut cb, k, &lanes[l].req.cond);
         }
-        if mo.caches.is_some() {
-            lane.caches = mo.caches;
+        let mut out_b = self.arena.checkout(&[chunk, h, w, c]);
+        let mut args = ModelArgs {
+            x: Some(xb),
+            t: t_norm as f32,
+            cond: Some(cb),
+            gs,
+            ..Default::default()
+        };
+        let run = self.backend.run_into(variant, &args, &mut out_b, None, None);
+        // gather buffers go back to the pool whatever happened
+        self.arena.release_opt(args.x.take());
+        self.arena.release_opt(args.cond.take());
+        match run {
+            Ok(()) => {}
+            Err(e) => {
+                self.arena.release(out_b);
+                return Err(e);
+            }
         }
-        Ok(mo.out)
+        for (k, &l) in sub.iter().enumerate() {
+            let lane = &mut lanes[l];
+            view::copy_from_row(&mut lane.m_out, &out_b, k);
+            lane.executed = true;
+            // batched aux layouts are not per-lane sliceable: drop stale
+            // features rather than feed them to Shallow/Prune
+            lane.deep = None;
+            lane.caches = None;
+        }
+        self.arena.release(out_b);
+        Ok(())
     }
 }
 

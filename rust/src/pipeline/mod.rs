@@ -11,12 +11,12 @@ pub mod decode;
 pub mod lanes;
 pub mod stats;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 pub use lanes::{AcceleratorFactory, LaneMode};
 pub use stats::{CacheOutcome, RunStats, StepMode};
 
-use crate::runtime::{ModelArgs, ModelBackend, ModelOut};
+use crate::runtime::{ModelArgs, ModelBackend};
 use crate::solvers::{build_solver, Schedule, Solver, SolverKind};
 use crate::tensor::Tensor;
 
@@ -76,10 +76,17 @@ pub trait Accelerator {
     /// Called once per run, after [`Accelerator::reset`], with the request
     /// about to be sampled. Request-aware accelerators (the plan cache's
     /// `SpeculativeAccel`) derive their trajectory signature here; plain
-    /// accelerators ignore it. The lockstep batch path
-    /// ([`Pipeline::generate_batch`]) intentionally never calls this: one
-    /// shared accelerator cannot carry a per-request signature.
+    /// accelerators ignore it. Both execution paths (`generate` and the
+    /// lane engine) call this — every run carries its request.
     fn begin_run(&mut self, _req: &GenRequest) {}
+
+    /// Whether this accelerator consumes step observations. Passthrough
+    /// accelerators ([`NoAccel`]) return false and the pipelines skip
+    /// assembling [`StepObs`] entirely — including the PF-ODE gradient it
+    /// carries, which exists only for observation on non-skip steps.
+    fn wants_obs(&self) -> bool {
+        true
+    }
 
     /// Plan-cache outcome of the just-finished run, stamped into
     /// [`RunStats::outcome`] by the pipelines. Cacheless accelerators
@@ -109,10 +116,37 @@ pub trait Accelerator {
         None
     }
 
+    /// [`Accelerator::extrapolate`] into a reused buffer; false when no
+    /// internal history is available. SADA overrides this with the
+    /// in-place AM-3 stencil so skip steps allocate nothing; the default
+    /// delegates (allocate + copy, bitwise-identical values).
+    fn extrapolate_into(&self, x: &Tensor, y_now: &Tensor, dt: f64, out: &mut Tensor) -> bool {
+        match self.extrapolate(x, y_now, dt) {
+            Some(r) => {
+                out.copy_from(&r);
+                true
+            }
+            None => false,
+        }
+    }
+
     /// For [`StepPlan::SkipLagrange`]: reconstruct x0 at normalized time t
     /// from the internal rolling cache (SADA overrides with Thm 3.7).
     fn reconstruct_x0(&self, _t_norm: f64) -> Option<Tensor> {
         None
+    }
+
+    /// [`Accelerator::reconstruct_x0`] into a reused buffer; false when
+    /// the rolling cache is not filled. SADA overrides with the in-place
+    /// Lagrange accumulation; the default delegates.
+    fn reconstruct_x0_into(&self, t_norm: f64, out: &mut Tensor) -> bool {
+        match self.reconstruct_x0(t_norm) {
+            Some(r) => {
+                out.copy_from(&r);
+                true
+            }
+            None => false,
+        }
     }
 }
 
@@ -129,6 +163,11 @@ impl Accelerator for NoAccel {
         StepPlan::Full
     }
     fn observe(&mut self, _obs: &StepObs) {}
+    /// Pure passthrough: the pipelines skip observation assembly entirely
+    /// (no gradient computation, no [`StepObs`]) for baseline runs.
+    fn wants_obs(&self) -> bool {
+        false
+    }
     fn reset(&mut self) {}
     fn clone_fresh(&self) -> Box<dyn Accelerator> {
         Box::new(NoAccel)
@@ -159,6 +198,11 @@ pub struct Pipeline<'a, B: ModelBackend> {
     /// the manifest schedule via [`Pipeline::with_schedule`] so retrained
     /// artifacts with different constants stay consistent end to end.
     schedule: Schedule,
+    /// Pooled buffers for the lane engine's bucket gathers (and any other
+    /// transient batch-shaped tensors). Per-pipeline and lock-free: each
+    /// engine worker owns its own `Pipeline`, matching the coordinator's
+    /// one-runtime-per-worker design.
+    pub(crate) arena: crate::tensor::arena::TensorArena,
 }
 
 impl<'a, B: ModelBackend> Pipeline<'a, B> {
@@ -170,14 +214,32 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
     /// over [`Pipeline::new`] whenever a `Manifest` is available:
     /// `Pipeline::with_schedule(&backend, kind, manifest.schedule.to_schedule())`.
     pub fn with_schedule(backend: &'a B, solver_kind: SolverKind, schedule: Schedule) -> Self {
-        Self { backend, solver_kind, schedule }
+        Self {
+            backend,
+            solver_kind,
+            schedule,
+            arena: crate::tensor::arena::TensorArena::new(),
+        }
     }
 
     pub(crate) fn schedule(&self) -> &Schedule {
         &self.schedule
     }
 
+    /// Snapshot of the bucket-buffer arena counters (perf telemetry: the
+    /// lanes sweep and `bench_micro` stamp these into `BENCH_serving.json`).
+    pub fn arena_stats(&self) -> crate::tensor::arena::ArenaStats {
+        self.arena.stats()
+    }
+
     /// Run one request under `accel`, returning the sample and statistics.
+    ///
+    /// The step loop is zero-copy: every per-step tensor (model output,
+    /// data prediction, gradient, next state) lives in a reused buffer and
+    /// the model executes through [`ModelBackend::run_into`] straight into
+    /// them — steady-state steps allocate nothing (`tests/zero_alloc.rs`),
+    /// and results are bitwise-identical to the allocating formulation
+    /// this replaced (the `_into` kernels are the same expressions).
     pub fn generate(&self, req: &GenRequest, accel: &mut dyn Accelerator) -> Result<GenResult> {
         let info = self.backend.info().clone();
         let mut solver: Box<dyn Solver> = build_solver(self.solver_kind, &self.schedule, req.steps);
@@ -186,13 +248,33 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         accel.begin_run(req);
 
         let mut rng = crate::rng::Rng::new(req.seed);
-        let mut x = Tensor::from_rng(&mut rng, &[1, info.img[0], info.img[1], info.img[2]]);
+        let shape = [1, info.img[0], info.img[1], info.img[2]];
+        let mut x = Tensor::from_rng(&mut rng, &shape);
         let mut stats = RunStats::new(accel.name(), req.steps);
         let timer = crate::report::Timer::start();
 
-        let mut last_out: Option<Tensor> = None;
+        // reusable step buffers (the lane engine mirrors this layout —
+        // keep the two step bodies in lockstep; the lane bit-identity
+        // property tests pin the executed paths against drift)
+        let mut m_out = Tensor::zeros(&shape);
+        let mut last_out = Tensor::zeros(&shape);
+        let mut has_last = false;
+        let mut x0 = Tensor::zeros(&shape);
+        let mut x_next = Tensor::zeros(&shape);
+        let mut y = Tensor::zeros(&shape);
         let mut deep: Option<Tensor> = None;
         let mut caches: Option<Tensor> = None;
+        // persistent model args: x is copied in place per call; cond/edge
+        // cloned once per run
+        let mut args = ModelArgs {
+            x: Some(Tensor::zeros(&shape)),
+            t: 0.0,
+            cond: Some(req.cond.clone()),
+            gs: req.guidance,
+            edge: req.edge.clone(),
+            ..Default::default()
+        };
+        let wants_obs = accel.wants_obs();
 
         for i in 0..req.steps {
             let t_norm = solver.t_norm(i);
@@ -209,286 +291,121 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             plan = match plan {
                 StepPlan::Shallow if deep.is_none() => StepPlan::Full,
                 StepPlan::Prune { .. } if caches.is_none() => StepPlan::Full,
-                StepPlan::SkipReuse | StepPlan::SkipExtrapolate if last_out.is_none() => {
-                    StepPlan::Full
-                }
+                StepPlan::SkipReuse | StepPlan::SkipExtrapolate if !has_last => StepPlan::Full,
                 p => p,
             };
 
             let mut fresh = false;
-            // NOTE: the lane engine (lanes.rs) mirrors these arms for its
-            // per-lane step body — changes here must be applied there too
-            // (the lane bit-identity property tests pin the executed paths).
-            let (model_out, x0, x_next) = match &plan {
+            match &plan {
                 StepPlan::Full => {
-                    let mo = self.run_model("full", &x, t_norm, req)?;
+                    args.x.as_mut().expect("persistent x slot").copy_from(&x);
+                    args.t = t_norm as f32;
+                    self.backend
+                        .run_into("full", &args, &mut m_out, Some(&mut deep), Some(&mut caches))?;
                     fresh = true;
-                    if mo.deep.is_some() {
-                        deep = mo.deep.clone();
-                    }
-                    if mo.caches.is_some() {
-                        caches = mo.caches.clone();
-                    }
-                    let out = mo.out;
-                    let x0 = solver.x0_from_model(&x, &out, i);
-                    let xn = solver.step(&x, &x0, i);
-                    (out, x0, xn)
+                    solver.x0_from_model_into(&x, &m_out, i, &mut x0);
+                    solver.step_into(&x, &x0, i, &mut x_next);
                 }
                 StepPlan::Shallow => {
-                    let mut args = self.base_args(&x, t_norm, req);
-                    args.deep = deep.clone();
-                    let mo = self.backend.run("shallow", &args)?;
+                    args.x.as_mut().expect("persistent x slot").copy_from(&x);
+                    args.t = t_norm as f32;
+                    // move (not clone) the deep feature into the args and
+                    // back: the shallow variant reads it but emits none
+                    args.deep = deep.take();
+                    let run = self.backend.run_into("shallow", &args, &mut m_out, None, None);
+                    deep = args.deep.take();
+                    run?;
                     fresh = true;
-                    let out = mo.out;
-                    let x0 = solver.x0_from_model(&x, &out, i);
-                    let xn = solver.step(&x, &x0, i);
-                    (out, x0, xn)
+                    solver.x0_from_model_into(&x, &m_out, i, &mut x0);
+                    solver.step_into(&x, &x0, i, &mut x_next);
                 }
                 StepPlan::Prune { variant, keep_idx } => {
-                    let mut args = self.base_args(&x, t_norm, req);
+                    args.x.as_mut().expect("persistent x slot").copy_from(&x);
+                    args.t = t_norm as f32;
                     args.keep_idx = Some(keep_idx.clone());
-                    args.caches = caches.clone();
-                    let mo = self.backend.run(variant, &args)?;
-                    fresh = true;
-                    if mo.caches.is_some() {
-                        caches = mo.caches.clone();
+                    // input caches move into the args; the refreshed caches
+                    // (if the variant emits them) land in the slot, else the
+                    // input moves back untouched
+                    args.caches = caches.take();
+                    let run =
+                        self.backend
+                            .run_into(variant, &args, &mut m_out, None, Some(&mut caches));
+                    if caches.is_none() {
+                        caches = args.caches.take();
+                    } else {
+                        args.caches = None;
                     }
-                    let out = mo.out;
-                    let x0 = solver.x0_from_model(&x, &out, i);
-                    let xn = solver.step(&x, &x0, i);
-                    (out, x0, xn)
+                    args.keep_idx = None;
+                    run?;
+                    fresh = true;
+                    solver.x0_from_model_into(&x, &m_out, i, &mut x0);
+                    solver.step_into(&x, &x0, i, &mut x_next);
                 }
                 StepPlan::SkipReuse => {
-                    let out = last_out.clone().context("SkipReuse without history")?;
-                    let x0 = solver.x0_from_model(&x, &out, i);
-                    let xn = solver.step(&x, &x0, i);
-                    (out, x0, xn)
+                    anyhow::ensure!(has_last, "SkipReuse without history");
+                    m_out.copy_from(&last_out);
+                    solver.x0_from_model_into(&x, &m_out, i, &mut x0);
+                    solver.step_into(&x, &x0, i, &mut x_next);
                 }
                 StepPlan::SkipExtrapolate => {
                     // SADA step-wise (Thm 3.5 + 3.6): x_{t-1} by AM-3 over the
                     // gradient history; x0 from the reused noise, injected into
                     // the solver's multistep history for consistency.
-                    let out = last_out.clone().context("SkipExtrapolate without history")?;
-                    let x0 = solver.x0_from_model(&x, &out, i);
-                    let y_now = solver.gradient(&x, &out, i);
+                    anyhow::ensure!(has_last, "SkipExtrapolate without history");
+                    m_out.copy_from(&last_out);
+                    solver.x0_from_model_into(&x, &m_out, i, &mut x0);
+                    solver.gradient_into(&x, &m_out, i, &mut y);
                     let dt = solver.dt(i);
-                    let xn = accel.extrapolate(&x, &y_now, dt).unwrap_or_else(|| {
+                    if !accel.extrapolate_into(&x, &y, dt, &mut x_next) {
                         // first-order fallback when the gradient history is
                         // too short for the AM-3 stencil
-                        crate::tensor::ops::lincomb2(1.0, &x, -(dt as f32), &y_now)
-                    });
+                        crate::tensor::ops::lincomb2_into(1.0, &x, -(dt as f32), &y, &mut x_next);
+                    }
                     solver.inject_x0(&x0, i);
-                    (out, x0, xn)
                 }
                 StepPlan::SkipLagrange => {
                     // SADA multistep-wise (Thm 3.7): x0 reconstructed by the
                     // accelerator's rolling Lagrange buffer; the solver steps
                     // on the reconstructed data prediction.
-                    let x0 = accel
-                        .reconstruct_x0(solver.t_norm(i))
-                        .context("SkipLagrange without a filled x0 buffer")?;
-                    let out = solver.model_out_from_x0(&x, &x0, i);
-                    let xn = solver.step(&x, &x0, i);
-                    (out, x0, xn)
+                    anyhow::ensure!(
+                        accel.reconstruct_x0_into(solver.t_norm(i), &mut x0),
+                        "SkipLagrange without a filled x0 buffer"
+                    );
+                    solver.model_out_from_x0_into(&x, &x0, i, &mut m_out);
+                    solver.step_into(&x, &x0, i, &mut x_next);
                 }
-            };
+            }
 
-            let y = solver.gradient(&x, &model_out, i);
-            let obs = StepObs {
-                i,
-                n_steps: req.steps,
-                fresh,
-                x_prev: &x,
-                x_next: &x_next,
-                model_out: &model_out,
-                x0: &x0,
-                y: &y,
-                dt: solver.dt(i),
-                t_norm,
-            };
-            accel.observe(&obs);
+            if wants_obs {
+                // the SkipExtrapolate arm already computed this gradient
+                // from the same inputs
+                if !matches!(plan, StepPlan::SkipExtrapolate) {
+                    solver.gradient_into(&x, &m_out, i, &mut y);
+                }
+                let obs = StepObs {
+                    i,
+                    n_steps: req.steps,
+                    fresh,
+                    x_prev: &x,
+                    x_next: &x_next,
+                    model_out: &m_out,
+                    x0: &x0,
+                    y: &y,
+                    dt: solver.dt(i),
+                    t_norm,
+                };
+                accel.observe(&obs);
+            }
             stats.record_step(&plan, fresh);
-            last_out = Some(model_out);
-            x = x_next;
+            std::mem::swap(&mut last_out, &mut m_out);
+            has_last = true;
+            std::mem::swap(&mut x, &mut x_next);
         }
 
         stats.wall_ms = timer.elapsed_ms();
         stats.nfe = stats.fresh_steps;
         stats.outcome = accel.outcome();
         Ok(GenResult { image: x, stats })
-    }
-
-    /// Lockstep batched generation for the serving path: all requests share
-    /// (steps, guidance); conds and initial noise are stacked on the batch
-    /// axis and executed through the `full_b{n}` variant. Degraded variants
-    /// are not compiled for batches, so plans fall back to Full/skip modes
-    /// (the coordinator's dynamic batcher relies on exactly this contract).
-    pub fn generate_batch(
-        &self,
-        reqs: &[GenRequest],
-        accel: &mut dyn Accelerator,
-    ) -> Result<Vec<GenResult>> {
-        let b = reqs.len();
-        anyhow::ensure!(b > 0, "empty batch");
-        if b == 1 {
-            return Ok(vec![self.generate(&reqs[0], accel)?]);
-        }
-        let info = self.backend.info().clone();
-        let variant = format!("full_b{b}");
-        info.variant(&variant)
-            .with_context(|| format!("no batched variant {variant} compiled"))?;
-        let steps = reqs[0].steps;
-        anyhow::ensure!(
-            reqs.iter().all(|r| r.steps == steps),
-            "batch must share step count"
-        );
-        // lockstep batching runs one model call with a single `gs` scalar:
-        // silently applying reqs[0].guidance to every request would produce
-        // wrong images, so mixed guidance is a hard error here (the lane
-        // engine lifts the restriction by sub-batching per guidance value)
-        let gs = reqs[0].guidance;
-        anyhow::ensure!(
-            reqs.iter().all(|r| r.guidance == gs),
-            "lockstep batch requires uniform guidance, got {:?}; use \
-             Pipeline::generate_lanes for mixed-guidance batches",
-            reqs.iter().map(|r| r.guidance).collect::<Vec<_>>()
-        );
-        let mut solver: Box<dyn Solver> =
-            build_solver(self.solver_kind, &self.schedule, steps);
-        solver.reset();
-        accel.reset();
-
-        let [h, w, c] = info.img;
-        let mut xdata = Vec::with_capacity(b * h * w * c);
-        let mut cdata = Vec::with_capacity(b * info.cond_dim);
-        for r in reqs {
-            let mut rng = crate::rng::Rng::new(r.seed);
-            xdata.extend(rng.gaussian_vec(h * w * c));
-            cdata.extend_from_slice(r.cond.data());
-        }
-        let mut x = Tensor::new(xdata, &[b, h, w, c])?;
-        let cond = Tensor::new(cdata, &[b, info.cond_dim])?;
-
-        // per-request accounting: under lockstep every request experiences
-        // every executed step, but each result owns its stats (no shared
-        // clone) so downstream consumers can mutate/aggregate independently
-        let mut stats: Vec<RunStats> =
-            (0..b).map(|_| RunStats::new(accel.name(), steps)).collect();
-        let timer = crate::report::Timer::start();
-        let mut last_out: Option<Tensor> = None;
-
-        for i in 0..steps {
-            let t_norm = solver.t_norm(i);
-            let ctx = StepCtx {
-                i,
-                n_steps: steps,
-                x: &x,
-                t_norm,
-                have_caches: false,
-                have_deep: false,
-            };
-            let mut plan = accel.plan(&ctx);
-            plan = match plan {
-                StepPlan::Shallow | StepPlan::Prune { .. } => StepPlan::Full,
-                StepPlan::SkipReuse | StepPlan::SkipExtrapolate if last_out.is_none() => {
-                    StepPlan::Full
-                }
-                p => p,
-            };
-            let mut fresh = false;
-            let (model_out, x0, x_next) = match &plan {
-                StepPlan::Full => {
-                    let args = ModelArgs {
-                        x: Some(x.clone()),
-                        t: t_norm as f32,
-                        cond: Some(cond.clone()),
-                        gs,
-                        ..Default::default()
-                    };
-                    let mo = self.backend.run(&variant, &args)?;
-                    fresh = true;
-                    let out = mo.out;
-                    let x0 = solver.x0_from_model(&x, &out, i);
-                    let xn = solver.step(&x, &x0, i);
-                    (out, x0, xn)
-                }
-                StepPlan::SkipReuse => {
-                    let out = last_out.clone().unwrap();
-                    let x0 = solver.x0_from_model(&x, &out, i);
-                    let xn = solver.step(&x, &x0, i);
-                    (out, x0, xn)
-                }
-                StepPlan::SkipExtrapolate => {
-                    let out = last_out.clone().unwrap();
-                    let x0 = solver.x0_from_model(&x, &out, i);
-                    let y_now = solver.gradient(&x, &out, i);
-                    let dt = solver.dt(i);
-                    let xn = accel.extrapolate(&x, &y_now, dt).unwrap_or_else(|| {
-                        crate::tensor::ops::lincomb2(1.0, &x, -(dt as f32), &y_now)
-                    });
-                    solver.inject_x0(&x0, i);
-                    (out, x0, xn)
-                }
-                StepPlan::SkipLagrange => {
-                    let x0 = accel
-                        .reconstruct_x0(solver.t_norm(i))
-                        .context("SkipLagrange without buffer")?;
-                    let out = solver.model_out_from_x0(&x, &x0, i);
-                    let xn = solver.step(&x, &x0, i);
-                    (out, x0, xn)
-                }
-                _ => unreachable!("fallbacks applied above"),
-            };
-            let y = solver.gradient(&x, &model_out, i);
-            let obs = StepObs {
-                i,
-                n_steps: steps,
-                fresh,
-                x_prev: &x,
-                x_next: &x_next,
-                model_out: &model_out,
-                x0: &x0,
-                y: &y,
-                dt: solver.dt(i),
-                t_norm,
-            };
-            accel.observe(&obs);
-            for s in stats.iter_mut() {
-                s.record_step(&plan, fresh);
-            }
-            last_out = Some(model_out);
-            x = x_next;
-        }
-        let wall_ms = timer.elapsed_ms();
-        for s in stats.iter_mut() {
-            s.wall_ms = wall_ms;
-            s.nfe = s.fresh_steps;
-            s.outcome = accel.outcome();
-        }
-
-        // split the batch back into per-request images
-        let results = crate::tensor::ops::unstack_rows(&x)
-            .into_iter()
-            .zip(stats)
-            .map(|(image, stats)| GenResult { image, stats })
-            .collect();
-        Ok(results)
-    }
-
-    fn base_args(&self, x: &Tensor, t_norm: f64, req: &GenRequest) -> ModelArgs {
-        ModelArgs {
-            x: Some(x.clone()),
-            t: t_norm as f32,
-            cond: Some(req.cond.clone()),
-            gs: req.guidance,
-            edge: req.edge.clone(),
-            ..Default::default()
-        }
-    }
-
-    fn run_model(&self, variant: &str, x: &Tensor, t_norm: f64, req: &GenRequest) -> Result<ModelOut> {
-        let args = self.base_args(x, t_norm, req);
-        self.backend.run(variant, &args)
     }
 }
 
@@ -573,44 +490,64 @@ mod tests {
         assert!(ops::mse(&lo.image, &hi.image) > 1e-9);
     }
 
+    /// Accelerator that opts out of observations but would panic if the
+    /// pipeline assembled one anyway — pins the `wants_obs` gating.
+    struct ObsRefuser;
+    impl Accelerator for ObsRefuser {
+        fn name(&self) -> String {
+            "obs-refuser".into()
+        }
+        fn plan(&mut self, _ctx: &StepCtx) -> StepPlan {
+            StepPlan::Full
+        }
+        fn observe(&mut self, _o: &StepObs) {
+            panic!("observe called on an accelerator with wants_obs == false");
+        }
+        fn wants_obs(&self) -> bool {
+            false
+        }
+        fn reset(&mut self) {}
+        fn clone_fresh(&self) -> Box<dyn Accelerator> {
+            Box::new(ObsRefuser)
+        }
+    }
+
+    /// Observing passthrough: consumes every StepObs (wants_obs default
+    /// true) but plans like the baseline — the ungated reference arm.
+    struct NullObserver {
+        observed: usize,
+    }
+    impl Accelerator for NullObserver {
+        fn name(&self) -> String {
+            "null-observer".into()
+        }
+        fn plan(&mut self, _ctx: &StepCtx) -> StepPlan {
+            StepPlan::Full
+        }
+        fn observe(&mut self, _o: &StepObs) {
+            self.observed += 1;
+        }
+        fn reset(&mut self) {
+            self.observed = 0;
+        }
+        fn clone_fresh(&self) -> Box<dyn Accelerator> {
+            Box::new(NullObserver { observed: 0 })
+        }
+    }
+
     #[test]
-    fn generate_batch_requires_compiled_bucket() {
-        // mock manifest has no full_b2 variant: batch > 1 must error clearly
+    fn observation_assembly_is_gated_on_wants_obs() {
+        // the gated (no StepObs, no gradient) path must be bitwise-identical
+        // to the fully-observed path, and only opted-in accelerators observe
         let b = GmBackend::new(5);
-        let pipe = Pipeline::new(&b, SolverKind::Euler);
-        let reqs = vec![req(1, 5), req(2, 5)];
-        let err = pipe.generate_batch(&reqs, &mut NoAccel).unwrap_err();
-        assert!(format!("{err:#}").contains("full_b2"));
-    }
-
-    #[test]
-    fn generate_batch_of_one_delegates() {
-        let b = GmBackend::new(6);
-        let pipe = Pipeline::new(&b, SolverKind::Euler);
-        let r = pipe.generate_batch(&[req(3, 6)], &mut NoAccel).unwrap();
-        assert_eq!(r.len(), 1);
-        let solo = pipe.generate(&req(3, 6), &mut NoAccel).unwrap();
-        assert_eq!(r[0].image.data(), solo.image.data());
-    }
-
-    #[test]
-    fn mixed_step_batches_rejected() {
-        let b = GmBackend::new(7);
-        let pipe = Pipeline::new(&b, SolverKind::Euler);
-        let reqs = vec![req(1, 5), req(2, 7)];
-        assert!(pipe.generate_batch(&reqs, &mut NoAccel).is_err());
-    }
-
-    #[test]
-    fn mixed_guidance_batches_rejected_with_clear_error() {
-        // regression: reqs[0].guidance used to be silently applied batch-wide
-        let b = GmBackend::with_batch_buckets(7, &[2]);
-        let pipe = Pipeline::new(&b, SolverKind::Euler);
-        let mut r2 = req(2, 5);
-        r2.guidance = 7.5;
-        let err = pipe.generate_batch(&[req(1, 5), r2], &mut NoAccel).unwrap_err();
-        let msg = format!("{err:#}");
-        assert!(msg.contains("uniform guidance"), "unhelpful error: {msg}");
+        let pipe = Pipeline::new(&b, SolverKind::DpmPP);
+        let gated = pipe.generate(&req(4, 9), &mut ObsRefuser).unwrap();
+        let mut observer = NullObserver { observed: 0 };
+        let observed = pipe.generate(&req(4, 9), &mut observer).unwrap();
+        assert_eq!(observer.observed, 9, "wants_obs=true must see every step");
+        assert_eq!(gated.image.data(), observed.image.data());
+        assert_eq!(gated.stats.nfe, 9);
+        assert_eq!(observed.stats.nfe, 9);
     }
 
     #[test]

@@ -42,8 +42,7 @@ impl StepMode {
 /// replay from a cold run, so the serving stack carries this alongside.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum CacheOutcome {
-    /// The accelerator has no plan cache attached (plain SADA, baselines),
-    /// or the run took a path that bypasses it (lockstep batches).
+    /// The accelerator has no plan cache attached (plain SADA, baselines).
     #[default]
     Uncached,
     /// Cache consulted, no matching plan: the run recorded a fresh one.

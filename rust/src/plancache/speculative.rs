@@ -40,7 +40,7 @@ use super::store::{Directive, Lookup, PlanStore, RecordedPlan};
 pub const EARLY_DOTS: usize = 2;
 
 enum Mode {
-    /// No request key (e.g. the lockstep batch path skips `begin_run`):
+    /// No request key (a caller that never invoked `begin_run`):
     /// permanent passthrough, no recording.
     Passthrough,
     /// Collecting early criterion dots before the lookup.
@@ -162,6 +162,7 @@ impl Accelerator for SpeculativeAccel {
     }
 
     fn begin_run(&mut self, req: &GenRequest) {
+        self.inner.begin_run(req);
         self.key = Some(RequestKey::new(
             &self.model,
             self.sched_fp,
@@ -171,6 +172,10 @@ impl Accelerator for SpeculativeAccel {
         ));
         self.n_steps = req.steps;
         self.mode = Mode::Warming;
+        // pre-size the per-run logs: the observe path must not grow Vecs
+        // mid-run (steady-state steps stay allocation-free)
+        self.verdicts.reserve(req.steps);
+        self.dots.reserve(EARLY_DOTS);
     }
 
     fn plan(&mut self, ctx: &StepCtx) -> StepPlan {
@@ -286,8 +291,16 @@ impl Accelerator for SpeculativeAccel {
         self.inner.extrapolate(x, y_now, dt)
     }
 
+    fn extrapolate_into(&self, x: &Tensor, y_now: &Tensor, dt: f64, out: &mut Tensor) -> bool {
+        self.inner.extrapolate_into(x, y_now, dt, out)
+    }
+
     fn reconstruct_x0(&self, t_norm: f64) -> Option<Tensor> {
         self.inner.reconstruct_x0(t_norm)
+    }
+
+    fn reconstruct_x0_into(&self, t_norm: f64, out: &mut Tensor) -> bool {
+        self.inner.reconstruct_x0_into(t_norm, out)
     }
 
     fn clone_fresh(&self) -> Box<dyn Accelerator> {
@@ -555,20 +568,40 @@ mod tests {
     }
 
     #[test]
-    fn lockstep_batch_path_bypasses_the_cache() {
-        // generate_batch never calls begin_run (one shared accelerator
-        // cannot carry a per-request signature): the wrapper stays inert
-        let backend = GmBackend::with_batch_buckets(9, &[2]);
+    fn lane_batches_engage_the_cache_per_lane() {
+        // the lane engine (now the only batched path) calls begin_run on
+        // every per-lane clone, so batched requests record and replay
+        // plans through the shared store — unlike the retired lockstep
+        // path, which bypassed the cache by design
+        // lane 0 mirrors warm_rerun_hits (a known-replayable request);
+        // lane 1 differs in guidance, so the two lanes carry distinct keys
+        let backend = GmBackend::with_batch_buckets(5, &[2]);
         let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
         let store = Arc::new(PlanStore::new(64));
-        let mut spec = spec_for(&backend, 20, store.clone());
-        let reqs = vec![request(4, 20, 2.0), request(5, 20, 2.0)];
-        let res = pipe.generate_batch(&reqs, &mut spec).unwrap();
-        assert_eq!(res.len(), 2);
-        for r in &res {
-            assert_eq!(r.stats.outcome, CacheOutcome::Uncached);
+        let proto = spec_for(&backend, 50, store.clone());
+        let proto: &dyn crate::pipeline::Accelerator = &proto;
+        let reqs = vec![request(7, 50, 2.0), request(7, 50, 5.0)];
+        let cold = pipe.generate_lanes(&reqs, proto).unwrap();
+        assert_eq!(cold.len(), 2);
+        for r in &cold {
+            assert_eq!(r.stats.outcome, CacheOutcome::Miss, "cold lanes record");
         }
-        assert_eq!(store.stats().lookups, 0);
-        assert!(store.is_empty());
+        assert_eq!(store.len(), 2, "one recorded plan per lane");
+        let warm = pipe.generate_lanes(&reqs, proto).unwrap();
+        for (k, r) in warm.iter().enumerate() {
+            // every lane consulted the cache: hit (or, at worst, a verified
+            // divergence) — never the inert Uncached of the retired path
+            assert_ne!(
+                r.stats.outcome,
+                CacheOutcome::Uncached,
+                "lane {k} must engage the cache, got {:?}",
+                r.stats.outcome
+            );
+        }
+        assert!(
+            warm.iter().any(|r| r.stats.outcome == CacheOutcome::Hit),
+            "no warm lane replayed: {:?}",
+            warm.iter().map(|r| r.stats.outcome).collect::<Vec<_>>()
+        );
     }
 }

@@ -38,11 +38,35 @@ impl GaussianMixture {
     }
 
     /// Optimal eps prediction at x for VP coefficients (a_t, sigma_t), with
-    /// the mixture means shifted by `shift` (conditioning).
+    /// the mixture means shifted by `shift` (conditioning). Allocating
+    /// wrapper around [`GaussianMixture::eps_star_into`].
     pub fn eps_star(&self, x: &[f32], a_t: f64, sigma_t: f64, shift: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; x.len()];
+        let (mut logp, mut resp, mut score) = (Vec::new(), Vec::new(), Vec::new());
+        self.eps_star_into(x, a_t, sigma_t, shift, &mut out, &mut logp, &mut resp, &mut score);
+        out
+    }
+
+    /// [`GaussianMixture::eps_star`] into caller buffers: `out` receives
+    /// the eps row; `logp`/`resp`/`score` are reused f64 accumulators
+    /// (resized in place — zero allocations once warm). Bitwise identical
+    /// to the allocating form (same expressions, same order).
+    #[allow(clippy::too_many_arguments)]
+    pub fn eps_star_into(
+        &self,
+        x: &[f32],
+        a_t: f64,
+        sigma_t: f64,
+        shift: &[f32],
+        out: &mut [f32],
+        logp: &mut Vec<f64>,
+        resp: &mut Vec<f64>,
+        score: &mut Vec<f64>,
+    ) {
         let d = x.len();
         let k = self.means.len();
-        let mut logp = vec![0.0f64; k];
+        debug_assert_eq!(out.len(), d);
+        logp.resize(k, 0.0);
         for ki in 0..k {
             let v = a_t * a_t * (self.sigmas[ki] as f64).powi(2) + sigma_t * sigma_t;
             let mut sq = 0.0f64;
@@ -56,19 +80,37 @@ impl GaussianMixture {
                 - 0.5 * sq / v;
         }
         let m = logp.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let r: Vec<f64> = logp.iter().map(|l| (l - m).exp()).collect();
-        let rs: f64 = r.iter().sum();
-        let mut score = vec![0.0f64; d];
+        resp.resize(k, 0.0);
+        for ki in 0..k {
+            resp[ki] = (logp[ki] - m).exp();
+        }
+        let rs: f64 = resp.iter().sum();
+        score.resize(d, 0.0);
+        score.fill(0.0);
         for ki in 0..k {
             let v = a_t * a_t * (self.sigmas[ki] as f64).powi(2) + sigma_t * sigma_t;
-            let w = r[ki] / rs / v;
+            let w = resp[ki] / rs / v;
             for i in 0..d {
                 let mu = (self.means[ki][i] + shift[i]) as f64;
                 score[i] += w * (a_t * mu - x[i] as f64);
             }
         }
-        score.iter().map(|s| (-sigma_t * s) as f32).collect()
+        for (o, s) in out.iter_mut().zip(score.iter()) {
+            *o = (-sigma_t * *s) as f32;
+        }
     }
+}
+
+/// Reused f64 accumulators for [`GaussianMixture::eps_star_into`] plus the
+/// conditioning shift row — one set per backend, shared across all rows of
+/// a batched call (rows are evaluated through the same scratch, so a
+/// `full_b{n}` launch allocates nothing once warm).
+#[derive(Default)]
+pub struct GmScratch {
+    logp: Vec<f64>,
+    resp: Vec<f64>,
+    score: Vec<f64>,
+    shift: Vec<f32>,
 }
 
 /// Manifest used by the mock backend (also handy for coordinator tests).
@@ -108,6 +150,9 @@ pub struct GmBackend {
     pub gm: GaussianMixture,
     schedule: Schedule,
     nfe: RefCell<usize>,
+    /// Reused per-row accumulators (batched calls evaluate every row
+    /// through this one scratch — zero allocations once warm).
+    scratch: RefCell<GmScratch>,
     /// eps-noise injected into non-full variants (approximation error model).
     pub variant_noise: f32,
 }
@@ -126,6 +171,7 @@ impl GmBackend {
             ),
             info,
             nfe: RefCell::new(0),
+            scratch: RefCell::new(GmScratch::default()),
             variant_noise: 0.01,
         }
     }
@@ -149,30 +195,31 @@ impl GmBackend {
         b
     }
 
-    fn cond_shift(&self, cond: Option<&[f32]>, gs: f32) -> Vec<f32> {
-        let dim = self.info.img_numel();
-        let mut shift = vec![0.0f32; dim];
-        if let Some(cd) = cond {
-            // deterministic projection of the cond vector into pixel space
-            for (i, s) in shift.iter_mut().enumerate() {
-                let mut acc = 0.0f32;
-                for (k, v) in cd.iter().enumerate() {
-                    let w = (((i * 31 + k * 17 + 7) % 13) as f32 - 6.0) / 24.0;
-                    acc += v * w;
+    /// Deterministic projection of the cond vector into pixel space,
+    /// written into the reused `shift` buffer (every element assigned).
+    fn cond_shift_into(dim: usize, cond: Option<&[f32]>, gs: f32, shift: &mut Vec<f32>) {
+        shift.resize(dim, 0.0);
+        match cond {
+            Some(cd) => {
+                for (i, s) in shift.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for (k, v) in cd.iter().enumerate() {
+                        let w = (((i * 31 + k * 17 + 7) % 13) as f32 - 6.0) / 24.0;
+                        acc += v * w;
+                    }
+                    *s = 0.3 * gs.max(0.0) * acc / (cd.len() as f32).sqrt();
                 }
-                *s = 0.3 * gs.max(0.0) * acc / (cd.len() as f32).sqrt();
             }
+            None => shift.fill(0.0),
         }
-        shift
-    }
-}
-
-impl ModelBackend for GmBackend {
-    fn info(&self) -> &ModelInfo {
-        &self.info
     }
 
-    fn run(&self, variant: &str, args: &ModelArgs) -> Result<ModelOut> {
+    /// The shared eps core of [`GmBackend::run`] / `run_into`: evaluates
+    /// the exact per-sample denoiser row by row into `out` — one reused
+    /// scratch for every row, so batched `full_b{n}` launches are both
+    /// bit-identical to the equivalent single launches *and*
+    /// allocation-free once warm.
+    fn eps_into(&self, variant: &str, args: &ModelArgs, out: &mut [f32]) -> Result<()> {
         let x = match &args.x {
             Some(x) => x,
             None => bail!("mock: args.x required"),
@@ -185,10 +232,12 @@ impl ModelBackend for GmBackend {
         if x.len() % dim != 0 || x.is_empty() {
             bail!("mock: x has {} elements, not a multiple of {dim}", x.len());
         }
-        // evaluate the exact denoiser row by row so `full_b{n}` launches are
-        // bit-identical to the equivalent single launches (lane-engine tests)
+        if out.len() != x.len() {
+            bail!("mock: out has {} elements, x has {}", out.len(), x.len());
+        }
         let b = x.len() / dim;
-        let mut eps = Vec::with_capacity(x.len());
+        let mut scratch = self.scratch.borrow_mut();
+        let GmScratch { logp, resp, score, shift } = &mut *scratch;
         for bi in 0..b {
             let row_cond = args.cond.as_ref().map(|c| {
                 let cd = c.data();
@@ -199,25 +248,86 @@ impl ModelBackend for GmBackend {
                     cd
                 }
             });
-            let shift = self.cond_shift(row_cond, args.gs);
+            Self::cond_shift_into(dim, row_cond, args.gs, shift);
             let xr = &x.data()[bi * dim..(bi + 1) * dim];
-            eps.extend(self.gm.eps_star(xr, a, s.max(1e-6), &shift));
+            let or = &mut out[bi * dim..(bi + 1) * dim];
+            self.gm.eps_star_into(xr, a, s.max(1e-6), shift, or, logp, resp, score);
         }
         if !variant.starts_with("full") {
             // simulate the (small) approximation error of degraded variants
             let mut rng = Rng::new(j as u64 * 7 + 13);
-            for e in eps.iter_mut() {
+            for e in out.iter_mut() {
                 *e += self.variant_noise * rng.gaussian() as f32;
             }
         }
+        Ok(())
+    }
+
+    /// Zero-fill an aux slot of `shape` in place, allocating only when the
+    /// slot is absent or mis-shaped (matches `run`'s `Tensor::zeros` aux
+    /// outputs bitwise).
+    fn aux_zeros_into(slot: &mut Option<Tensor>, shape: &[usize]) {
+        match slot {
+            Some(t) if t.shape() == shape => t.fill(0.0),
+            other => *other = Some(Tensor::zeros(shape)),
+        }
+    }
+}
+
+impl ModelBackend for GmBackend {
+    fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    fn run(&self, variant: &str, args: &ModelArgs) -> Result<ModelOut> {
+        let shape = match &args.x {
+            Some(x) => x.shape().to_vec(),
+            None => bail!("mock: args.x required"),
+        };
+        let mut out = Tensor::zeros(&shape);
+        self.eps_into(variant, args, out.data_mut())?;
         let n = self.info.n_tokens;
         let d = self.info.d;
         let nb = self.info.n_blocks;
         Ok(ModelOut {
-            out: Tensor::new(eps, x.shape())?,
+            out,
             deep: Some(Tensor::zeros(&[2, n, d])),
             caches: Some(Tensor::zeros(&[nb, 2, n, d])),
         })
+    }
+
+    /// Zero-allocation execution path: eps is written straight into the
+    /// caller's `out` buffer (rows through the shared scratch) and the
+    /// requested aux slots are zero-filled in place — the backend half of
+    /// the lane engine's allocation-free steady state.
+    fn run_into(
+        &self,
+        variant: &str,
+        args: &ModelArgs,
+        out: &mut Tensor,
+        deep: Option<&mut Option<Tensor>>,
+        caches: Option<&mut Option<Tensor>>,
+    ) -> Result<()> {
+        if let Some(x) = &args.x {
+            if !out.same_shape(x) {
+                bail!(
+                    "mock: out shape {:?} != x shape {:?}",
+                    out.shape(),
+                    x.shape()
+                );
+            }
+        }
+        self.eps_into(variant, args, out.data_mut())?;
+        let n = self.info.n_tokens;
+        let d = self.info.d;
+        let nb = self.info.n_blocks;
+        if let Some(slot) = deep {
+            Self::aux_zeros_into(slot, &[2, n, d]);
+        }
+        if let Some(slot) = caches {
+            Self::aux_zeros_into(slot, &[nb, 2, n, d]);
+        }
+        Ok(())
     }
 
     fn nfe(&self) -> usize {
@@ -284,6 +394,53 @@ mod tests {
         assert_eq!(rows[0].data(), s0.out.data());
         assert_eq!(rows[1].data(), s1.out.data());
         assert_eq!(b.nfe(), 3);
+    }
+
+    #[test]
+    fn run_into_matches_run_bitwise_and_fills_aux_slots() {
+        let b = GmBackend::with_batch_buckets(4, &[2]);
+        let mut rng = Rng::new(11);
+        let x0 = Tensor::from_rng(&mut rng, &[1, 8, 8, 1]);
+        let x1 = Tensor::from_rng(&mut rng, &[1, 8, 8, 1]);
+        let cb = Tensor::from_rng(&mut rng, &[2, 32]);
+        let xb = crate::tensor::ops::stack_rows(&[&x0, &x1]);
+        let args = ModelArgs {
+            x: Some(xb),
+            t: 0.4,
+            cond: Some(cb),
+            gs: 2.0,
+            ..Default::default()
+        };
+        let alloc = b.run("full_b2", &args).unwrap();
+        let mut out = Tensor::full(&[2, 8, 8, 1], 9.0); // stale contents
+        let mut deep: Option<Tensor> = None;
+        let mut caches: Option<Tensor> = Some(Tensor::full(&[3, 2, 16, 16], 5.0));
+        b.run_into("full_b2", &args, &mut out, Some(&mut deep), Some(&mut caches))
+            .unwrap();
+        assert_eq!(out.data(), alloc.out.data(), "run_into must match run bitwise");
+        assert_eq!(deep.unwrap().data(), alloc.deep.unwrap().data());
+        // the stale caches slot was reused in place and zero-filled
+        let c = caches.unwrap();
+        assert_eq!(c.data(), alloc.caches.unwrap().data());
+        // shape-mismatched out is rejected, not silently resized
+        let mut bad = Tensor::zeros(&[1, 8, 8, 1]);
+        assert!(b.run_into("full_b2", &args, &mut bad, None, None).is_err());
+    }
+
+    #[test]
+    fn eps_star_into_matches_allocating() {
+        let gm = GaussianMixture::seeded(6, 3, 2);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = rng.gaussian_vec(6);
+        let shift = vec![0.1f32; 6];
+        let want = gm.eps_star(&x, 0.8, 0.6, &shift);
+        let mut out = vec![7.0f32; 6]; // stale
+        let (mut l, mut r, mut s) = (Vec::new(), Vec::new(), Vec::new());
+        gm.eps_star_into(&x, 0.8, 0.6, &shift, &mut out, &mut l, &mut r, &mut s);
+        assert_eq!(out, want);
+        // scratch reuse across calls stays bitwise-identical
+        gm.eps_star_into(&x, 0.5, 0.9, &shift, &mut out, &mut l, &mut r, &mut s);
+        assert_eq!(out, gm.eps_star(&x, 0.5, 0.9, &shift));
     }
 
     #[test]

@@ -51,6 +51,43 @@ pub struct ModelOut {
 pub trait ModelBackend {
     fn info(&self) -> &ModelInfo;
     fn run(&self, variant: &str, args: &ModelArgs) -> Result<ModelOut>;
+
+    /// Execute `variant`, writing the primary output into the caller's
+    /// `out` buffer (same shape as the input `x`) and refreshed aux
+    /// features into the provided slots. Slot semantics mirror the
+    /// pipelines' capture rules: a slot is only overwritten when the
+    /// variant actually emits that feature; pass `None` to discard a
+    /// feature the caller does not track (e.g. bucketed lane launches,
+    /// whose batched aux layouts are not per-lane sliceable).
+    ///
+    /// The default delegates to [`ModelBackend::run`] and copies —
+    /// correct for any backend. Host-math backends override it to write
+    /// directly into the caller buffers (zero allocations per call once
+    /// warm; see [`mock::GmBackend`]), which is what makes the lane
+    /// engine's steady-state step allocation-free.
+    fn run_into(
+        &self,
+        variant: &str,
+        args: &ModelArgs,
+        out: &mut Tensor,
+        deep: Option<&mut Option<Tensor>>,
+        caches: Option<&mut Option<Tensor>>,
+    ) -> Result<()> {
+        let mo = self.run(variant, args)?;
+        out.copy_from(&mo.out);
+        if let Some(slot) = deep {
+            if mo.deep.is_some() {
+                *slot = mo.deep;
+            }
+        }
+        if let Some(slot) = caches {
+            if mo.caches.is_some() {
+                *slot = mo.caches;
+            }
+        }
+        Ok(())
+    }
+
     /// Total model executions so far (the NFE counter).
     fn nfe(&self) -> usize;
     fn reset_nfe(&self);

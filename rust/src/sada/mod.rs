@@ -23,7 +23,7 @@ pub mod tokenwise;
 pub use config::SadaConfig;
 pub use tokenwise::{PruneBucket, TokenDecision};
 
-use crate::pipeline::{Accelerator, StepCtx, StepObs, StepPlan};
+use crate::pipeline::{Accelerator, GenRequest, StepCtx, StepObs, StepPlan};
 use crate::runtime::ModelInfo;
 use crate::tensor::{ops, Tensor};
 
@@ -52,6 +52,12 @@ pub struct Sada {
     in_multistep: bool,
     ms_anchor: usize,
     spacing_set: bool,
+    // criterion scratch, reused across steps (the per-step AM-3 prediction,
+    // curvature and error tensors are computed in place — no allocation on
+    // the steady-state observe path)
+    scratch_xhat: Option<Tensor>,
+    scratch_d2y: Option<Tensor>,
+    scratch_err: Option<Tensor>,
     pub diags: Vec<StepDiag>,
 }
 
@@ -82,6 +88,9 @@ impl Sada {
             in_multistep: false,
             ms_anchor: 0,
             spacing_set: false,
+            scratch_xhat: None,
+            scratch_d2y: None,
+            scratch_err: None,
             diags: Vec::new(),
         }
     }
@@ -109,20 +118,37 @@ impl Sada {
         self.x0_buf.len() >= 2
     }
 
-    fn evaluate_criterion(&mut self, obs: &StepObs) -> Option<(bool, f64, Tensor, Tensor)> {
-        // Criterion 3.4 with the AM-3 extrapolation as x_hat (SS3.3): needs
-        // two prior gradients in history.
-        let x_hat = self.hist.am3_from(obs.x_prev, obs.y, obs.dt)?;
-        let d2y = self.hist.d2y_from(obs.y)?;
-        let err = ops::sub(obs.x_next, &x_hat);
-        let dot = ops::dot(&err, &d2y);
-        Some((dot < 0.0, dot, err, d2y))
+    /// Criterion 3.4 with the AM-3 extrapolation as x_hat (SS3.3): needs
+    /// two prior gradients in history. Computes entirely into the reused
+    /// scratch buffers (`scratch_err` / `scratch_d2y` keep the per-token
+    /// inputs for the token-wise refinement); bitwise-identical to the
+    /// allocating formulation it replaced (same kernels, same order).
+    fn evaluate_criterion(&mut self, obs: &StepObs) -> Option<(bool, f64)> {
+        let xhat = Tensor::scratch_like(&mut self.scratch_xhat, obs.x_next);
+        if !self.hist.am3_from_into(obs.x_prev, obs.y, obs.dt, xhat) {
+            return None;
+        }
+        let d2y = Tensor::scratch_like(&mut self.scratch_d2y, obs.y);
+        if !self.hist.d2y_from_into(obs.y, d2y) {
+            return None;
+        }
+        let err = Tensor::scratch_like(&mut self.scratch_err, obs.x_next);
+        // err = x_next - x_hat (the lincomb2 form ops::sub lowers to)
+        ops::lincomb2_into(1.0, obs.x_next, -1.0, xhat, err);
+        let dot = ops::dot(err, d2y);
+        Some((dot < 0.0, dot))
     }
 }
 
 impl Accelerator for Sada {
     fn name(&self) -> String {
         "sada".into()
+    }
+
+    fn begin_run(&mut self, req: &GenRequest) {
+        // pre-size the diagnostics log so the observe path never grows a
+        // Vec mid-run (steady-state steps stay allocation-free)
+        self.diags.reserve(req.steps);
     }
 
     fn plan(&mut self, ctx: &StepCtx) -> StepPlan {
@@ -158,8 +184,8 @@ impl Accelerator for Sada {
             criterion_dot: None,
         };
         if obs.fresh {
-            self.x0_buf.push(obs.t_norm, obs.x0.clone());
-            if let Some((stable, dot, err, d2y)) = self.evaluate_criterion(obs) {
+            self.x0_buf.push_copy(obs.t_norm, obs.x0);
+            if let Some((stable, dot)) = self.evaluate_criterion(obs) {
                 diag.stable = Some(stable);
                 diag.criterion_dot = Some(dot);
                 if stable {
@@ -186,7 +212,10 @@ impl Accelerator for Sada {
                     }
                     if self.cfg.enable_tokenwise && !self.buckets.is_empty() {
                         let [h, w, c] = self.img;
-                        let scores = criterion::token_scores(&err, &d2y, h, w, c, self.patch);
+                        // err/d2y were left in the criterion scratch
+                        let err = self.scratch_err.as_ref().expect("criterion just ran");
+                        let d2y = self.scratch_d2y.as_ref().expect("criterion just ran");
+                        let scores = criterion::token_scores(err, d2y, h, w, c, self.patch);
                         diag.stable_fraction = Some(criterion::stable_fraction(&scores));
                         self.pending = match tokenwise::select_bucket(
                             &scores,
@@ -212,8 +241,9 @@ impl Accelerator for Sada {
             }
         }
         // gradient history includes skipped steps: the criterion stencil
-        // operates on consecutive grid nodes (paper uses y_{t+1}, y_{t+2})
-        self.hist.push(obs.x_prev.clone(), obs.y.clone());
+        // operates on consecutive grid nodes (paper uses y_{t+1}, y_{t+2});
+        // push_copy recycles the evicted entries' buffers
+        self.hist.push_copy(obs.x_prev, obs.y);
         self.diags.push(diag);
     }
 
@@ -232,8 +262,16 @@ impl Accelerator for Sada {
         self.hist.am3_from(x, y_now, dt)
     }
 
+    fn extrapolate_into(&self, x: &Tensor, y_now: &Tensor, dt: f64, out: &mut Tensor) -> bool {
+        self.hist.am3_from_into(x, y_now, dt, out)
+    }
+
     fn reconstruct_x0(&self, t_norm: f64) -> Option<Tensor> {
         self.x0_buf.reconstruct(t_norm)
+    }
+
+    fn reconstruct_x0_into(&self, t_norm: f64, out: &mut Tensor) -> bool {
+        self.x0_buf.reconstruct_into(t_norm, out)
     }
 
     fn clone_fresh(&self) -> Box<dyn Accelerator> {
@@ -259,6 +297,10 @@ impl SadaFdm {
 impl Accelerator for SadaFdm {
     fn name(&self) -> String {
         "sada-fdm3".into()
+    }
+
+    fn begin_run(&mut self, req: &GenRequest) {
+        self.inner.begin_run(req);
     }
 
     fn plan(&mut self, ctx: &StepCtx) -> StepPlan {

@@ -52,25 +52,60 @@ impl X0Buffer {
         }
     }
 
+    /// [`X0Buffer::push`] by copy, recycling the evicted node's buffer
+    /// (the deduped newest node, or the rolled-off oldest): at capacity —
+    /// the steady state — this allocates nothing.
+    pub fn push_copy(&mut self, t: f64, x0: &Tensor) {
+        let mut spare: Option<Tensor> = None;
+        if let Some((t_last, _)) = self.nodes.front() {
+            if (t_last - t).abs() < self.min_spacing {
+                spare = self.nodes.pop_front().map(|(_, b)| b);
+            }
+        }
+        if spare.is_none() && self.nodes.len() >= self.cap {
+            spare = self.nodes.pop_back().map(|(_, b)| b);
+        }
+        self.nodes.push_front((t, Tensor::recycled_from(spare, x0)));
+        while self.nodes.len() > self.cap {
+            self.nodes.pop_back();
+        }
+    }
+
     /// Lagrange reconstruction of x0 at time t (paper Eq. 16). Returns None
     /// until at least 2 nodes are buffered.
     pub fn reconstruct(&self, t: f64) -> Option<Tensor> {
-        let n = self.nodes.len();
-        if n < 2 {
+        if self.nodes.len() < 2 {
             return None;
         }
-        let ts: Vec<f64> = self.nodes.iter().map(|(ti, _)| *ti).collect();
         let mut out = Tensor::zeros(self.nodes[0].1.shape());
+        self.reconstruct_into(t, &mut out);
+        Some(out)
+    }
+
+    /// [`X0Buffer::reconstruct`] into a reused buffer (no allocation,
+    /// bitwise-identical accumulation order); false when fewer than 2
+    /// nodes are buffered.
+    pub fn reconstruct_into(&self, t: f64, out: &mut Tensor) -> bool {
+        if self.nodes.len() < 2 {
+            return false;
+        }
+        assert!(
+            out.same_shape(&self.nodes[0].1),
+            "reconstruct_into: out shape {:?} != node shape {:?}",
+            out.shape(),
+            self.nodes[0].1.shape()
+        );
+        out.fill(0.0);
         for (i, (ti, xi)) in self.nodes.iter().enumerate() {
             let mut w = 1.0f64;
-            for (j, tj) in ts.iter().enumerate() {
+            for (j, (tj, _)) in self.nodes.iter().enumerate() {
                 if i != j {
-                    w *= (t - tj) / (ti - tj);
+                    w *= (t - *tj) / (ti - *tj);
                 }
             }
-            crate::tensor::ops::axpy(w as f32, xi, &mut out);
+            crate::tensor::ops::axpy(w as f32, xi, out);
         }
-        Some(out)
+        true
     }
 }
 
@@ -116,6 +151,42 @@ mod tests {
         assert_eq!(buf.len(), 1);
         buf.push(0.8, t1(3.0));
         assert_eq!(buf.len(), 2);
+    }
+
+    #[test]
+    fn push_copy_matches_push_including_dedup_and_rolloff() {
+        let mut a = X0Buffer::new(3, 0.05);
+        let mut b = X0Buffer::new(3, 0.05);
+        let seq = [
+            (0.9, 1.0),
+            (0.89, 2.0), // dedups the newest node
+            (0.8, 3.0),
+            (0.7, 4.0),
+            (0.6, 5.0), // rolls the oldest off
+        ];
+        for (t, v) in seq {
+            a.push(t, t1(v));
+            b.push_copy(t, &t1(v));
+        }
+        assert_eq!(a.len(), b.len());
+        for probe in [0.85, 0.65, 0.5] {
+            assert_eq!(
+                a.reconstruct(probe).unwrap().data(),
+                b.reconstruct(probe).unwrap().data()
+            );
+        }
+    }
+
+    #[test]
+    fn reconstruct_into_matches_allocating() {
+        let mut buf = X0Buffer::new(4, 1e-9);
+        let mut out = t1(0.0);
+        assert!(!buf.reconstruct_into(0.5, &mut out));
+        for t in [0.9, 0.8, 0.7, 0.6] {
+            buf.push(t, t1((t * t) as f32));
+        }
+        assert!(buf.reconstruct_into(0.65, &mut out));
+        assert_eq!(out.data(), buf.reconstruct(0.65).unwrap().data());
     }
 
     #[test]

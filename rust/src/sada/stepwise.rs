@@ -28,6 +28,29 @@ pub fn am3(x: &Tensor, y_now: &Tensor, y_prev: &Tensor, y_prev2: &Tensor, dt: f6
     )
 }
 
+/// [`am3`] into a reused buffer (no allocation, bitwise-identical).
+pub fn am3_into(
+    x: &Tensor,
+    y_now: &Tensor,
+    y_prev: &Tensor,
+    y_prev2: &Tensor,
+    dt: f64,
+    out: &mut Tensor,
+) {
+    let c = dt as f32;
+    ops::lincomb4_into(
+        1.0,
+        x,
+        -5.0 * c / 6.0,
+        y_now,
+        -5.0 * c / 6.0,
+        y_prev,
+        2.0 * c / 3.0,
+        y_prev2,
+        out,
+    );
+}
+
 /// Third-order backward finite difference extrapolation.
 pub fn fdm3(x: &Tensor, x_prev: &Tensor, x_prev2: &Tensor) -> Tensor {
     ops::lincomb3(3.0, x, -3.0, x_prev, 1.0, x_prev2)
@@ -36,6 +59,11 @@ pub fn fdm3(x: &Tensor, x_prev: &Tensor, x_prev2: &Tensor) -> Tensor {
 /// Second-order difference of the gradient: Delta^2 y = y - 2 y' + y''.
 pub fn d2y(y_now: &Tensor, y_prev: &Tensor, y_prev2: &Tensor) -> Tensor {
     ops::lincomb3(1.0, y_now, -2.0, y_prev, 1.0, y_prev2)
+}
+
+/// [`d2y`] into a reused buffer (no allocation, bitwise-identical).
+pub fn d2y_into(y_now: &Tensor, y_prev: &Tensor, y_prev2: &Tensor, out: &mut Tensor) {
+    ops::lincomb3_into(1.0, y_now, -2.0, y_prev, 1.0, y_prev2, out);
 }
 
 /// Rolling history of the trajectory (gradients + states), newest first.
@@ -58,6 +86,18 @@ impl GradHistory {
             self.xs.pop_back();
             self.ys.pop_back();
         }
+    }
+
+    /// [`GradHistory::push`] by copy, recycling the evicted entries'
+    /// buffers: at capacity (the steady state) this allocates nothing.
+    pub fn push_copy(&mut self, x: &Tensor, y: &Tensor) {
+        let (sx, sy) = if self.xs.len() >= self.cap {
+            (self.xs.pop_back(), self.ys.pop_back())
+        } else {
+            (None, None)
+        };
+        self.xs.push_front(Tensor::recycled_from(sx, x));
+        self.ys.push_front(Tensor::recycled_from(sy, y));
     }
 
     pub fn clear(&mut self) {
@@ -94,6 +134,30 @@ impl GradHistory {
         let y1 = self.ys.front()?;
         let y2 = self.ys.get(1)?;
         Some(d2y(y_now, y1, y2))
+    }
+
+    /// [`GradHistory::am3_from`] into a reused buffer; false when the
+    /// history is too short for the stencil.
+    pub fn am3_from_into(&self, x: &Tensor, y_now: &Tensor, dt: f64, out: &mut Tensor) -> bool {
+        match (self.ys.front(), self.ys.get(1)) {
+            (Some(y1), Some(y2)) => {
+                am3_into(x, y_now, y1, y2, dt, out);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// [`GradHistory::d2y_from`] into a reused buffer; false when the
+    /// history is too short for the stencil.
+    pub fn d2y_from_into(&self, y_now: &Tensor, out: &mut Tensor) -> bool {
+        match (self.ys.front(), self.ys.get(1)) {
+            (Some(y1), Some(y2)) => {
+                d2y_into(y_now, y1, y2, out);
+                true
+            }
+            _ => false,
+        }
     }
 }
 
@@ -140,6 +204,39 @@ mod tests {
     fn d2y_linear_is_zero() {
         let got = d2y(&t(&[3.0]), &t(&[2.0]), &t(&[1.0]));
         assert!(got.data()[0].abs() < 1e-6);
+    }
+
+    #[test]
+    fn push_copy_matches_push_and_recycles() {
+        let mut a = GradHistory::new(3);
+        let mut b = GradHistory::new(3);
+        for i in 0..6 {
+            let x = t(&[i as f32, -1.0]);
+            let y = t(&[10.0 + i as f32, 0.5]);
+            a.push(x.clone(), y.clone());
+            b.push_copy(&x, &y);
+        }
+        for back in 0..3 {
+            assert_eq!(a.x(back).unwrap().data(), b.x(back).unwrap().data());
+            assert_eq!(a.y(back).unwrap().data(), b.y(back).unwrap().data());
+        }
+    }
+
+    #[test]
+    fn into_stencils_match_allocating() {
+        let mut h = GradHistory::new(4);
+        let mut out = t(&[0.0, 0.0]);
+        assert!(!h.am3_from_into(&t(&[0.0, 0.0]), &t(&[1.0, 1.0]), 0.1, &mut out));
+        assert!(!h.d2y_from_into(&t(&[1.0, 1.0]), &mut out));
+        for i in 0..3 {
+            h.push(t(&[i as f32, 0.0]), t(&[1.0 + i as f32, -2.0]));
+        }
+        let x = t(&[0.5, 0.25]);
+        let y = t(&[3.0, -1.0]);
+        assert!(h.am3_from_into(&x, &y, 0.07, &mut out));
+        assert_eq!(out.data(), h.am3_from(&x, &y, 0.07).unwrap().data());
+        assert!(h.d2y_from_into(&y, &mut out));
+        assert_eq!(out.data(), h.d2y_from(&y).unwrap().data());
     }
 
     #[test]

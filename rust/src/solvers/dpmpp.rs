@@ -29,32 +29,47 @@ impl DpmPP2M {
     fn j(&self, i: usize) -> usize {
         self.grid[i]
     }
+
+    /// Store `x0` as the multistep history, recycling the previous buffer
+    /// when shapes match (no steady-state allocation).
+    fn remember_x0(&mut self, x0: &Tensor) {
+        match &mut self.prev_x0 {
+            Some(p) if p.same_shape(x0) => p.copy_from(x0),
+            slot => *slot = Some(x0.clone()),
+        }
+    }
 }
 
 impl Solver for DpmPP2M {
+    // the `_into` methods are the real kernels; the allocating methods are
+    // wrappers, so both families are bitwise-identical by construction
     fn step(&mut self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
+        let mut out = Tensor::zeros(x.shape());
+        self.step_into(x, x0, i, &mut out);
+        out
+    }
+
+    fn step_into(&mut self, x: &Tensor, x0: &Tensor, i: usize, out: &mut Tensor) {
         let j_from = self.j(i);
         let j_to = self.j(i + 1);
         if j_to == 0 {
             // final step: jump to the data prediction (sigma_0 = 0)
-            self.prev_x0 = Some(x0.clone());
+            out.copy_from(x0);
+            self.remember_x0(x0);
             self.prev_h = None;
-            return x0.clone();
+            return;
         }
         let (_a_t, s_t) = self.schedule.alpha_sigma(j_from);
         let (a_s, s_s) = self.schedule.alpha_sigma(j_to);
         let h = self.schedule.lambda(j_to) - self.schedule.lambda(j_from);
         let coef_x = (s_s / s_t.max(1e-12)) as f32;
         let coef_d = (-a_s * ((-h).exp_m1())) as f32;
-        let out = match (&self.prev_x0, self.prev_h) {
+        match (&self.prev_x0, self.prev_h) {
             (Some(px0), Some(ph)) if h.abs() > 1e-12 => {
                 let r = ph / h;
                 // blend into the reused scratch buffer: the hot step loop
-                // allocates only the returned state
-                let d = self.scratch_d.get_or_insert_with(|| Tensor::zeros(x0.shape()));
-                if !d.same_shape(x0) {
-                    *d = Tensor::zeros(x0.shape());
-                }
+                // allocates nothing
+                let d = Tensor::scratch_like(&mut self.scratch_d, x0);
                 ops::lincomb2_into(
                     (1.0 + 1.0 / (2.0 * r)) as f32,
                     x0,
@@ -62,13 +77,12 @@ impl Solver for DpmPP2M {
                     px0,
                     d,
                 );
-                ops::lincomb2(coef_x, x, coef_d, d)
+                ops::lincomb2_into(coef_x, x, coef_d, d, out);
             }
-            _ => ops::lincomb2(coef_x, x, coef_d, x0),
-        };
-        self.prev_x0 = Some(x0.clone());
+            _ => ops::lincomb2_into(coef_x, x, coef_d, x0, out),
+        }
+        self.remember_x0(x0);
         self.prev_h = Some(h);
-        out
     }
 
     fn inject_x0(&mut self, x0: &Tensor, i: usize) {
@@ -79,7 +93,7 @@ impl Solver for DpmPP2M {
         } else {
             self.schedule.lambda(j_to) - self.schedule.lambda(j_from)
         };
-        self.prev_x0 = Some(x0.clone());
+        self.remember_x0(x0);
         self.prev_h = Some(h);
     }
 
@@ -97,18 +111,34 @@ impl Solver for DpmPP2M {
     }
 
     fn x0_from_model(&self, x: &Tensor, eps: &Tensor, i: usize) -> Tensor {
+        let mut out = Tensor::zeros(x.shape());
+        self.x0_from_model_into(x, eps, i, &mut out);
+        out
+    }
+
+    fn x0_from_model_into(&self, x: &Tensor, eps: &Tensor, i: usize, out: &mut Tensor) {
         let (a, s) = self.schedule.alpha_sigma(self.j(i));
-        ops::lincomb2((1.0 / a) as f32, x, (-s / a) as f32, eps)
+        ops::lincomb2_into((1.0 / a) as f32, x, (-s / a) as f32, eps, out);
     }
 
     fn model_out_from_x0(&self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
+        let mut out = Tensor::zeros(x.shape());
+        self.model_out_from_x0_into(x, x0, i, &mut out);
+        out
+    }
+
+    fn model_out_from_x0_into(&self, x: &Tensor, x0: &Tensor, i: usize, out: &mut Tensor) {
         let (a, s) = self.schedule.alpha_sigma(self.j(i));
         let s = s.max(1e-12);
-        ops::lincomb2((1.0 / s) as f32, x, (-a / s) as f32, x0)
+        ops::lincomb2_into((1.0 / s) as f32, x, (-a / s) as f32, x0, out);
     }
 
     fn gradient(&self, x: &Tensor, eps: &Tensor, i: usize) -> Tensor {
         ode::gradient_eps(&self.schedule, self.j(i), x, eps)
+    }
+
+    fn gradient_into(&self, x: &Tensor, eps: &Tensor, i: usize, out: &mut Tensor) {
+        ode::gradient_eps_into(&self.schedule, self.j(i), x, eps, out);
     }
 
     fn dt(&self, i: usize) -> f64 {
@@ -157,6 +187,25 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .sum();
         assert!(diff > 1e-4);
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_across_history() {
+        // two solvers fed the same sequence: one through the allocating
+        // step, one through step_into — multistep history must stay
+        // bitwise-identical
+        let s = Schedule::default_ddpm();
+        let mut a = DpmPP2M::new(s.clone(), 10);
+        let mut b = DpmPP2M::new(s, 10);
+        let mut rng = Rng::new(7);
+        let mut out = Tensor::zeros(&[8]);
+        for i in 0..10 {
+            let x = Tensor::from_rng(&mut rng, &[8]);
+            let x0 = Tensor::from_rng(&mut rng, &[8]);
+            let alloc = a.step(&x, &x0, i);
+            b.step_into(&x, &x0, i, &mut out);
+            assert_eq!(alloc.data(), out.data(), "step {i}");
+        }
     }
 
     #[test]

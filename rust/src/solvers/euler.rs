@@ -27,17 +27,22 @@ impl EulerDdim {
 }
 
 impl Solver for EulerDdim {
+    // the `_into` methods are the real kernels; the allocating methods are
+    // wrappers, so both families are bitwise-identical by construction
     fn step(&mut self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
+        let mut out = Tensor::zeros(x.shape());
+        self.step_into(x, x0, i, &mut out);
+        out
+    }
+
+    fn step_into(&mut self, x: &Tensor, x0: &Tensor, i: usize, out: &mut Tensor) {
         let (a_c, s_c) = self.schedule.alpha_sigma(self.j(i));
         let s_c = s_c.max(1e-12);
         let (a, s) = self.schedule.alpha_sigma(self.j(i + 1));
-        let eps = self.scratch_eps.get_or_insert_with(|| Tensor::zeros(x.shape()));
-        if !eps.same_shape(x) {
-            *eps = Tensor::zeros(x.shape());
-        }
+        let eps = Tensor::scratch_like(&mut self.scratch_eps, x);
         // same formula as model_out_from_x0, into the reused buffer
         ops::lincomb2_into((1.0 / s_c) as f32, x, (-a_c / s_c) as f32, x0, eps);
-        ops::lincomb2(a as f32, x0, s as f32, eps)
+        ops::lincomb2_into(a as f32, x0, s as f32, eps, out);
     }
 
     fn reset(&mut self) {}
@@ -51,18 +56,34 @@ impl Solver for EulerDdim {
     }
 
     fn x0_from_model(&self, x: &Tensor, eps: &Tensor, i: usize) -> Tensor {
+        let mut out = Tensor::zeros(x.shape());
+        self.x0_from_model_into(x, eps, i, &mut out);
+        out
+    }
+
+    fn x0_from_model_into(&self, x: &Tensor, eps: &Tensor, i: usize, out: &mut Tensor) {
         let (a, s) = self.schedule.alpha_sigma(self.j(i));
-        ops::lincomb2((1.0 / a) as f32, x, (-s / a) as f32, eps)
+        ops::lincomb2_into((1.0 / a) as f32, x, (-s / a) as f32, eps, out);
     }
 
     fn model_out_from_x0(&self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
+        let mut out = Tensor::zeros(x.shape());
+        self.model_out_from_x0_into(x, x0, i, &mut out);
+        out
+    }
+
+    fn model_out_from_x0_into(&self, x: &Tensor, x0: &Tensor, i: usize, out: &mut Tensor) {
         let (a, s) = self.schedule.alpha_sigma(self.j(i));
         let s = s.max(1e-12);
-        ops::lincomb2((1.0 / s) as f32, x, (-a / s) as f32, x0)
+        ops::lincomb2_into((1.0 / s) as f32, x, (-a / s) as f32, x0, out);
     }
 
     fn gradient(&self, x: &Tensor, eps: &Tensor, i: usize) -> Tensor {
         ode::gradient_eps(&self.schedule, self.j(i), x, eps)
+    }
+
+    fn gradient_into(&self, x: &Tensor, eps: &Tensor, i: usize, out: &mut Tensor) {
+        ode::gradient_eps_into(&self.schedule, self.j(i), x, eps, out);
     }
 
     fn dt(&self, i: usize) -> f64 {
@@ -108,6 +129,26 @@ mod tests {
         let out = solver.step(&x, &x0, steps - 1);
         for (p, q) in out.data().iter().zip(x0.data()) {
             assert!((p - q).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating() {
+        let s = Schedule::default_ddpm();
+        let mut solver = EulerDdim::new(s, 10);
+        let mut rng = Rng::new(3);
+        let x = Tensor::from_rng(&mut rng, &[8]);
+        let x0 = Tensor::from_rng(&mut rng, &[8]);
+        let mut out = Tensor::zeros(&[8]);
+        for i in [0usize, 4, 9] {
+            solver.x0_from_model_into(&x, &x0, i, &mut out);
+            assert_eq!(out.data(), solver.x0_from_model(&x, &x0, i).data());
+            solver.model_out_from_x0_into(&x, &x0, i, &mut out);
+            assert_eq!(out.data(), solver.model_out_from_x0(&x, &x0, i).data());
+            solver.gradient_into(&x, &x0, i, &mut out);
+            assert_eq!(out.data(), solver.gradient(&x, &x0, i).data());
+            solver.step_into(&x, &x0, i, &mut out);
+            assert_eq!(out.data(), solver.step(&x, &x0, i).data());
         }
     }
 

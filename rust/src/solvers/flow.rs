@@ -26,17 +26,22 @@ impl FlowEuler {
 }
 
 impl Solver for FlowEuler {
+    // the `_into` methods are the real kernels; the allocating methods are
+    // wrappers, so both families are bitwise-identical by construction
     fn step(&mut self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
+        let mut out = Tensor::zeros(x.shape());
+        self.step_into(x, x0, i, &mut out);
+        out
+    }
+
+    fn step_into(&mut self, x: &Tensor, x0: &Tensor, i: usize, out: &mut Tensor) {
         let t = self.grid[i];
         let t_next = self.grid[i + 1];
         let tc = t.max(1e-9);
-        let v = self.scratch_v.get_or_insert_with(|| Tensor::zeros(x.shape()));
-        if !v.same_shape(x) {
-            *v = Tensor::zeros(x.shape());
-        }
+        let v = Tensor::scratch_like(&mut self.scratch_v, x);
         // v consistent with (x, x0): v = (x - x0) / t, into the reused buffer
         ops::lincomb2_into((1.0 / tc) as f32, x, (-1.0 / tc) as f32, x0, v);
-        ops::lincomb2(1.0, x, (t_next - t) as f32, v)
+        ops::lincomb2_into(1.0, x, (t_next - t) as f32, v, out);
     }
 
     fn reset(&mut self) {}
@@ -50,18 +55,34 @@ impl Solver for FlowEuler {
     }
 
     fn x0_from_model(&self, x: &Tensor, v: &Tensor, i: usize) -> Tensor {
+        let mut out = Tensor::zeros(x.shape());
+        self.x0_from_model_into(x, v, i, &mut out);
+        out
+    }
+
+    fn x0_from_model_into(&self, x: &Tensor, v: &Tensor, i: usize, out: &mut Tensor) {
         let t = self.grid[i];
-        ops::lincomb2(1.0, x, -t as f32, v)
+        ops::lincomb2_into(1.0, x, -t as f32, v, out);
     }
 
     fn model_out_from_x0(&self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
+        let mut out = Tensor::zeros(x.shape());
+        self.model_out_from_x0_into(x, x0, i, &mut out);
+        out
+    }
+
+    fn model_out_from_x0_into(&self, x: &Tensor, x0: &Tensor, i: usize, out: &mut Tensor) {
         let t = self.grid[i].max(1e-9);
-        ops::lincomb2((1.0 / t) as f32, x, (-1.0 / t) as f32, x0)
+        ops::lincomb2_into((1.0 / t) as f32, x, (-1.0 / t) as f32, x0, out);
     }
 
     fn gradient(&self, _x: &Tensor, v: &Tensor, _i: usize) -> Tensor {
         // flow models predict dx/dt directly (paper Eq. 4)
         v.clone()
+    }
+
+    fn gradient_into(&self, _x: &Tensor, v: &Tensor, _i: usize, out: &mut Tensor) {
+        out.copy_from(v);
     }
 
     fn dt(&self, i: usize) -> f64 {

@@ -23,12 +23,16 @@ pub struct HeunEdm {
     grid: Vec<usize>,
     /// Reused buffer for the consistent eps (allocation-free step loop).
     scratch_eps: Option<Tensor>,
+    /// Reused predictor buffer (x_pred, then reused for x0_avg).
+    scratch_p: Option<Tensor>,
+    /// Reused corrector buffer (x0_pred).
+    scratch_q: Option<Tensor>,
 }
 
 impl HeunEdm {
     pub fn new(schedule: Schedule, steps: usize) -> Self {
         let grid = schedule.timestep_grid(steps);
-        Self { schedule, grid, scratch_eps: None }
+        Self { schedule, grid, scratch_eps: None, scratch_p: None, scratch_q: None }
     }
 
     fn j(&self, i: usize) -> usize {
@@ -37,27 +41,38 @@ impl HeunEdm {
 }
 
 impl Solver for HeunEdm {
+    // the `_into` methods are the real kernels; the allocating methods are
+    // wrappers, so both families are bitwise-identical by construction
     fn step(&mut self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
+        let mut out = Tensor::zeros(x.shape());
+        self.step_into(x, x0, i, &mut out);
+        out
+    }
+
+    fn step_into(&mut self, x: &Tensor, x0: &Tensor, i: usize, out: &mut Tensor) {
         let j_to = self.j(i + 1);
         if j_to == 0 {
-            return x0.clone();
+            out.copy_from(x0);
+            return;
         }
         let (a_c, s_c) = self.schedule.alpha_sigma(self.j(i));
         let s_c = s_c.max(1e-12);
         let (a_s, s_s) = self.schedule.alpha_sigma(j_to);
-        let eps = self.scratch_eps.get_or_insert_with(|| Tensor::zeros(x.shape()));
-        if !eps.same_shape(x) {
-            *eps = Tensor::zeros(x.shape());
-        }
+        // disjoint scratch fields: one mutable borrow each for the whole
+        // predictor/corrector sequence
+        let eps = Tensor::scratch_like(&mut self.scratch_eps, x);
+        let p = Tensor::scratch_like(&mut self.scratch_p, x);
+        let q = Tensor::scratch_like(&mut self.scratch_q, x);
         // same formula as model_out_from_x0, into the reused buffer
         ops::lincomb2_into((1.0 / s_c) as f32, x, (-a_c / s_c) as f32, x0, eps);
         // predictor: DDIM to j_to
-        let x_pred = ops::lincomb2(a_s as f32, x0, s_s as f32, eps);
+        ops::lincomb2_into(a_s as f32, x0, s_s as f32, eps, p);
         // corrector: average the data predictions at both endpoints using
         // the consistent eps at the predicted point
-        let x0_pred = ops::lincomb2((1.0 / a_s) as f32, &x_pred, (-s_s / a_s) as f32, eps);
-        let x0_avg = ops::lincomb2(0.5, x0, 0.5, &x0_pred);
-        ops::lincomb2(a_s as f32, &x0_avg, s_s as f32, eps)
+        ops::lincomb2_into((1.0 / a_s) as f32, p, (-s_s / a_s) as f32, eps, q);
+        // x_pred is no longer needed: its buffer holds x0_avg from here on
+        ops::lincomb2_into(0.5, x0, 0.5, q, p);
+        ops::lincomb2_into(a_s as f32, p, s_s as f32, eps, out);
     }
 
     fn reset(&mut self) {}
@@ -71,18 +86,34 @@ impl Solver for HeunEdm {
     }
 
     fn x0_from_model(&self, x: &Tensor, eps: &Tensor, i: usize) -> Tensor {
+        let mut out = Tensor::zeros(x.shape());
+        self.x0_from_model_into(x, eps, i, &mut out);
+        out
+    }
+
+    fn x0_from_model_into(&self, x: &Tensor, eps: &Tensor, i: usize, out: &mut Tensor) {
         let (a, s) = self.schedule.alpha_sigma(self.j(i));
-        ops::lincomb2((1.0 / a) as f32, x, (-s / a) as f32, eps)
+        ops::lincomb2_into((1.0 / a) as f32, x, (-s / a) as f32, eps, out);
     }
 
     fn model_out_from_x0(&self, x: &Tensor, x0: &Tensor, i: usize) -> Tensor {
+        let mut out = Tensor::zeros(x.shape());
+        self.model_out_from_x0_into(x, x0, i, &mut out);
+        out
+    }
+
+    fn model_out_from_x0_into(&self, x: &Tensor, x0: &Tensor, i: usize, out: &mut Tensor) {
         let (a, s) = self.schedule.alpha_sigma(self.j(i));
         let s = s.max(1e-12);
-        ops::lincomb2((1.0 / s) as f32, x, (-a / s) as f32, x0)
+        ops::lincomb2_into((1.0 / s) as f32, x, (-a / s) as f32, x0, out);
     }
 
     fn gradient(&self, x: &Tensor, eps: &Tensor, i: usize) -> Tensor {
         ode::gradient_eps(&self.schedule, self.j(i), x, eps)
+    }
+
+    fn gradient_into(&self, x: &Tensor, eps: &Tensor, i: usize, out: &mut Tensor) {
+        ode::gradient_eps_into(&self.schedule, self.j(i), x, eps, out);
     }
 
     fn dt(&self, i: usize) -> f64 {
@@ -118,6 +149,24 @@ mod tests {
         let rec = h.x0_from_model(&x, &eps, 3);
         for (p, q) in rec.data().iter().zip(x0.data()) {
             assert!((p - q).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating() {
+        let s = Schedule::default_ddpm();
+        let mut h = HeunEdm::new(s, 8);
+        let mut rng = Rng::new(5);
+        let x = Tensor::from_rng(&mut rng, &[8]);
+        let x0 = Tensor::from_rng(&mut rng, &[8]);
+        let mut out = Tensor::zeros(&[8]);
+        for i in [0usize, 3, 7] {
+            h.step_into(&x, &x0, i, &mut out);
+            assert_eq!(out.data(), h.step(&x, &x0, i).data());
+            h.x0_from_model_into(&x, &x0, i, &mut out);
+            assert_eq!(out.data(), h.x0_from_model(&x, &x0, i).data());
+            h.gradient_into(&x, &x0, i, &mut out);
+            assert_eq!(out.data(), h.gradient(&x, &x0, i).data());
         }
     }
 

@@ -87,6 +87,39 @@ pub trait Solver {
 
     /// Normalized step size |dt| between node i and i+1.
     fn dt(&self, i: usize) -> f64;
+
+    // ---- in-place variants -------------------------------------------
+    //
+    // The pipelines' steady-state step loop writes every per-step tensor
+    // into reused buffers (zero allocations; pinned by
+    // `tests/zero_alloc.rs`). The shipped solvers implement these as the
+    // real kernels and express the allocating methods as wrappers, so the
+    // two families are bitwise-identical by construction. The defaults
+    // below keep third-party `Solver` impls working (allocate + copy).
+
+    /// [`Solver::step`] into a reused buffer (same shape as `x`).
+    fn step_into(&mut self, x: &Tensor, x0: &Tensor, i: usize, out: &mut Tensor) {
+        let r = self.step(x, x0, i);
+        out.copy_from(&r);
+    }
+
+    /// [`Solver::x0_from_model`] into a reused buffer.
+    fn x0_from_model_into(&self, x: &Tensor, model_out: &Tensor, i: usize, out: &mut Tensor) {
+        let r = self.x0_from_model(x, model_out, i);
+        out.copy_from(&r);
+    }
+
+    /// [`Solver::model_out_from_x0`] into a reused buffer.
+    fn model_out_from_x0_into(&self, x: &Tensor, x0: &Tensor, i: usize, out: &mut Tensor) {
+        let r = self.model_out_from_x0(x, x0, i);
+        out.copy_from(&r);
+    }
+
+    /// [`Solver::gradient`] into a reused buffer.
+    fn gradient_into(&self, x: &Tensor, model_out: &Tensor, i: usize, out: &mut Tensor) {
+        let r = self.gradient(x, model_out, i);
+        out.copy_from(&r);
+    }
 }
 
 pub fn build_solver(kind: SolverKind, schedule: &Schedule, steps: usize) -> Box<dyn Solver> {

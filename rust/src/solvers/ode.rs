@@ -27,6 +27,13 @@ pub fn gradient_eps(schedule: &Schedule, j: usize, x: &Tensor, eps: &Tensor) -> 
     ops::lincomb2(c1 as f32, x, c2 as f32, eps)
 }
 
+/// [`gradient_eps`] into a reused buffer (no allocation, bitwise-identical
+/// result — same expression through `lincomb2_into`).
+pub fn gradient_eps_into(schedule: &Schedule, j: usize, x: &Tensor, eps: &Tensor, out: &mut Tensor) {
+    let (c1, c2) = ode_coeffs(schedule, j);
+    ops::lincomb2_into(c1 as f32, x, c2 as f32, eps, out);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

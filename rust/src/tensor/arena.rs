@@ -1,0 +1,184 @@
+//! Pooled, shape-tagged tensor buffers with checkout/release semantics.
+//!
+//! The lane engine's hot loop needs fresh `[b, ...]` bucket buffers every
+//! step; allocating them per step makes host-side cost grow with batch
+//! size. A [`TensorArena`] keeps released buffers in per-shape pools so a
+//! steady-state step checks out the same buffers it released on the
+//! previous step — zero heap traffic once the pools are warm (pinned by
+//! `tests/zero_alloc.rs`).
+//!
+//! Ownership rules (the "memory discipline" contract, see README):
+//!
+//! 1. `checkout(shape)` transfers ownership of a buffer to the caller.
+//!    **Contents are unspecified** (stale data from a previous checkout):
+//!    the caller must fully overwrite before reading, or use
+//!    [`TensorArena::checkout_zeroed`].
+//! 2. `release(t)` transfers ownership back. Releasing is optional —
+//!    a dropped tensor is simply an arena miss later — but the hot path
+//!    should always release what it checked out.
+//! 3. Pools are bounded per shape ([`MAX_POOLED_PER_SHAPE`]); surplus
+//!    releases drop the buffer, so a burst of odd shapes cannot pin
+//!    unbounded memory.
+//!
+//! The arena is deliberately `!Sync` (plain `RefCell`, no locks): each
+//! engine worker thread owns its own `Pipeline` and therefore its own
+//! arena, matching the coordinator's one-runtime-per-worker design.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use super::Tensor;
+
+/// Maximum buffers retained per distinct shape.
+pub const MAX_POOLED_PER_SHAPE: usize = 64;
+
+/// Cumulative arena counters (cheap `Copy` snapshot via
+/// [`TensorArena::stats`]); `misses` after warmup is the per-run
+/// allocation count the zero-alloc regression tracks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    pub checkouts: usize,
+    pub hits: usize,
+    pub misses: usize,
+    pub released: usize,
+    pub dropped: usize,
+}
+
+#[derive(Default)]
+pub struct TensorArena {
+    pools: RefCell<HashMap<Vec<usize>, Vec<Tensor>>>,
+    stats: RefCell<ArenaStats>,
+}
+
+impl TensorArena {
+    pub fn new() -> TensorArena {
+        TensorArena::default()
+    }
+
+    /// Checkout a buffer of `shape`. Contents are **unspecified** — the
+    /// caller owns the tensor and must fully overwrite it before reading.
+    pub fn checkout(&self, shape: &[usize]) -> Tensor {
+        let mut stats = self.stats.borrow_mut();
+        stats.checkouts += 1;
+        if let Some(pool) = self.pools.borrow_mut().get_mut(shape) {
+            if let Some(t) = pool.pop() {
+                stats.hits += 1;
+                return t;
+            }
+        }
+        stats.misses += 1;
+        Tensor::zeros(shape)
+    }
+
+    /// Checkout with contents reset to zero (a `fill`, never a fresh
+    /// allocation when the pool is warm).
+    pub fn checkout_zeroed(&self, shape: &[usize]) -> Tensor {
+        let mut t = self.checkout(shape);
+        t.fill(0.0);
+        t
+    }
+
+    /// Return a buffer to its shape pool (bounded; surplus is dropped).
+    pub fn release(&self, t: Tensor) {
+        let mut pools = self.pools.borrow_mut();
+        let mut stats = self.stats.borrow_mut();
+        if let Some(pool) = pools.get_mut(t.shape()) {
+            if pool.len() < MAX_POOLED_PER_SHAPE {
+                pool.push(t);
+                stats.released += 1;
+            } else {
+                stats.dropped += 1;
+            }
+            return;
+        }
+        // first release of this shape: the key allocation is one-time
+        pools.insert(t.shape().to_vec(), vec![t]);
+        stats.released += 1;
+    }
+
+    /// Release a slot-style optional buffer.
+    pub fn release_opt(&self, t: Option<Tensor>) {
+        if let Some(t) = t {
+            self.release(t);
+        }
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        *self.stats.borrow()
+    }
+
+    /// Total buffers currently pooled across all shapes.
+    pub fn pooled(&self) -> usize {
+        self.pools.borrow().values().map(Vec::len).sum()
+    }
+
+    /// Drop every pooled buffer (memory-pressure relief between runs;
+    /// counters are preserved).
+    pub fn clear(&self) {
+        self.pools.borrow_mut().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_release_roundtrip_reuses_buffers() {
+        let arena = TensorArena::new();
+        let a = arena.checkout(&[2, 3]);
+        assert_eq!(a.shape(), &[2, 3]);
+        arena.release(a);
+        assert_eq!(arena.pooled(), 1);
+        let b = arena.checkout(&[2, 3]);
+        assert_eq!(b.shape(), &[2, 3]);
+        assert_eq!(arena.pooled(), 0);
+        let s = arena.stats();
+        assert_eq!(s.checkouts, 2);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.released, 1);
+    }
+
+    #[test]
+    fn shapes_are_segregated() {
+        let arena = TensorArena::new();
+        arena.release(Tensor::zeros(&[4]));
+        let t = arena.checkout(&[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        // the [4] buffer must not have been handed out for [2, 2]
+        assert_eq!(arena.stats().misses, 1);
+        assert_eq!(arena.pooled(), 1);
+    }
+
+    #[test]
+    fn checkout_zeroed_resets_stale_contents() {
+        let arena = TensorArena::new();
+        arena.release(Tensor::full(&[3], 7.5));
+        let t = arena.checkout_zeroed(&[3]);
+        assert_eq!(t.data(), &[0.0, 0.0, 0.0]);
+        assert_eq!(arena.stats().hits, 1, "zeroed checkout still pools");
+    }
+
+    #[test]
+    fn pool_is_bounded_per_shape() {
+        let arena = TensorArena::new();
+        for _ in 0..MAX_POOLED_PER_SHAPE + 5 {
+            arena.release(Tensor::zeros(&[2]));
+        }
+        assert_eq!(arena.pooled(), MAX_POOLED_PER_SHAPE);
+        assert_eq!(arena.stats().dropped, 5);
+    }
+
+    #[test]
+    fn clear_drops_buffers_but_keeps_counters() {
+        let arena = TensorArena::new();
+        arena.release(Tensor::zeros(&[2]));
+        arena.clear();
+        assert_eq!(arena.pooled(), 0);
+        assert_eq!(arena.stats().released, 1);
+        arena.release_opt(None);
+        arena.release_opt(Some(Tensor::zeros(&[2])));
+        assert_eq!(arena.pooled(), 1);
+    }
+}

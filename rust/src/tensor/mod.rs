@@ -5,8 +5,10 @@
 //! plus `ops` covers the entire L3 hot path. Heavy lifting (matmuls,
 //! attention) lives in the compiled HLO, never here.
 
+pub mod arena;
 pub mod image;
 pub mod ops;
+pub mod view;
 
 use anyhow::{bail, Result};
 
@@ -94,6 +96,51 @@ impl Tensor {
     pub fn same_shape(&self, other: &Tensor) -> bool {
         self.shape == other.shape
     }
+
+    /// Overwrite this tensor's contents with `src`'s (same shape required).
+    /// A plain memcpy: never allocates — the primitive behind buffer reuse
+    /// in the solvers, SADA history, and the lane engine.
+    #[inline]
+    pub fn copy_from(&mut self, src: &Tensor) {
+        assert!(
+            self.shape == src.shape,
+            "copy_from: shape {:?} != {:?}",
+            self.shape,
+            src.shape
+        );
+        self.data.copy_from_slice(&src.data);
+    }
+
+    /// Set every element to `v` in place (no allocation).
+    #[inline]
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// Recycle `buf` as a copy of `src` when the shapes match (no
+    /// allocation); otherwise clone `src`. Used by rolling history buffers
+    /// to reuse evicted entries instead of cloning every push.
+    pub fn recycled_from(buf: Option<Tensor>, src: &Tensor) -> Tensor {
+        match buf {
+            Some(mut b) if b.same_shape(src) => {
+                b.copy_from(src);
+                b
+            }
+            _ => src.clone(),
+        }
+    }
+
+    /// Ensure `slot` holds a buffer of `like`'s shape (reusing the one
+    /// already there when it fits — contents are then stale and must be
+    /// overwritten) and return it for in-place writes. The single home of
+    /// the lazily-sized-scratch invariant used by the solvers and SADA.
+    pub fn scratch_like<'s>(slot: &'s mut Option<Tensor>, like: &Tensor) -> &'s mut Tensor {
+        let fits = matches!(slot, Some(t) if t.same_shape(like));
+        if !fits {
+            *slot = Some(Tensor::zeros(like.shape()));
+        }
+        slot.as_mut().expect("scratch slot just ensured")
+    }
 }
 
 #[cfg(test)]
@@ -118,5 +165,42 @@ mod tests {
     fn strides_row_major() {
         let t = Tensor::zeros(&[2, 3, 4]);
         assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn copy_from_and_fill_overwrite_in_place() {
+        let src = Tensor::new(vec![1.0, 2.0, 3.0], &[3]).unwrap();
+        let mut dst = Tensor::zeros(&[3]);
+        dst.copy_from(&src);
+        assert_eq!(dst.data(), src.data());
+        dst.fill(-1.5);
+        assert_eq!(dst.data(), &[-1.5, -1.5, -1.5]);
+    }
+
+    #[test]
+    fn scratch_like_reuses_fitting_slots() {
+        let like = Tensor::zeros(&[2, 3]);
+        let mut slot: Option<Tensor> = None;
+        Tensor::scratch_like(&mut slot, &like).fill(4.0);
+        assert_eq!(slot.as_ref().unwrap().shape(), &[2, 3]);
+        // fitting slot is reused (stale contents preserved until overwrite)
+        let buf = Tensor::scratch_like(&mut slot, &like);
+        assert_eq!(buf.data()[0], 4.0);
+        // mis-shaped slot is replaced
+        let other = Tensor::zeros(&[4]);
+        let buf = Tensor::scratch_like(&mut slot, &other);
+        assert_eq!(buf.shape(), &[4]);
+    }
+
+    #[test]
+    fn recycled_from_reuses_matching_buffers() {
+        let src = Tensor::new(vec![4.0, 5.0], &[2]).unwrap();
+        let reused = Tensor::recycled_from(Some(Tensor::zeros(&[2])), &src);
+        assert_eq!(reused.data(), src.data());
+        let fresh = Tensor::recycled_from(Some(Tensor::zeros(&[3])), &src);
+        assert_eq!(fresh.data(), src.data());
+        assert_eq!(fresh.shape(), &[2]);
+        let cloned = Tensor::recycled_from(None, &src);
+        assert_eq!(cloned.data(), src.data());
     }
 }

@@ -113,11 +113,51 @@ pub fn lincomb4_into(
     }
 }
 
+/// Batch-axis gather into a preallocated `[sum b_i, ...]` buffer: the
+/// zero-allocation sibling of [`stack_rows`] (bitwise-identical layout)
+/// for callers that already hold a tensor list. The lane engine itself
+/// gathers per row via [`crate::tensor::view::copy_into_row`], which
+/// needs no slice-of-refs; both write the identical bytes
+/// (`bench_micro` compares them against stack/unstack).
+pub fn gather_into(xs: &[&Tensor], out: &mut Tensor) {
+    assert!(!xs.is_empty(), "gather_into of zero tensors");
+    let total: usize = xs.iter().map(|x| x.len()).sum();
+    assert_eq!(
+        total,
+        out.len(),
+        "gather_into: inputs hold {total} elements, out holds {}",
+        out.len()
+    );
+    let od = out.data_mut();
+    let mut at = 0usize;
+    for x in xs {
+        od[at..at + x.len()].copy_from_slice(x.data());
+        at += x.len();
+    }
+}
+
+/// Batch-axis scatter into preallocated unit-row buffers: the
+/// zero-allocation sibling of [`unstack_rows`]. Row `i` of `src` is copied
+/// into `dsts[i]` in place.
+pub fn scatter_from(src: &Tensor, dsts: &mut [Tensor]) {
+    let b = src.shape()[0];
+    assert_eq!(b, dsts.len(), "scatter_from: {b} rows for {} dsts", dsts.len());
+    let plane: usize = src.shape()[1..].iter().product();
+    for (bi, d) in dsts.iter_mut().enumerate() {
+        assert_eq!(
+            d.len(),
+            plane,
+            "scatter_from: dst {bi} holds {} elements, row holds {plane}",
+            d.len()
+        );
+        d.data_mut().copy_from_slice(&src.data()[bi * plane..(bi + 1) * plane]);
+    }
+}
+
 /// Batch-axis gather: stack `[1, ...]`-shaped (or generally `[b_i, ...]`)
 /// tensors along axis 0 into one `[sum b_i, ...]` tensor. All inputs must
-/// share the trailing dimensions. This is the lane engine's sub-batch
-/// assembly primitive (lanes planning Full are gathered into the largest
-/// fitting compiled bucket).
+/// share the trailing dimensions. Allocating reference semantics — the
+/// hot path uses [`gather_into`] / row views instead.
 pub fn stack_rows(xs: &[&Tensor]) -> Tensor {
     assert!(!xs.is_empty(), "stack_rows of zero tensors");
     let tail = &xs[0].shape()[1..];
@@ -162,13 +202,18 @@ pub fn sub(x: &Tensor, y: &Tensor) -> Tensor {
     lincomb2(1.0, x, -1.0, y)
 }
 
+/// Dot product over raw slices — the view-level kernel behind [`dot`],
+/// [`token_dots`] and [`crate::tensor::view::RowsView::row_dot`] (same
+/// expression, same accumulation order: bitwise-identical results).
+#[inline]
+pub fn dot_slices(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(p, q)| *p as f64 * *q as f64).sum()
+}
+
 pub fn dot(x: &Tensor, y: &Tensor) -> f64 {
     debug_assert!(x.same_shape(y));
-    x.data()
-        .iter()
-        .zip(y.data())
-        .map(|(a, b)| *a as f64 * *b as f64)
-        .sum()
+    dot_slices(x.data(), y.data())
 }
 
 pub fn norm2(x: &Tensor) -> f64 {
@@ -215,18 +260,23 @@ pub fn rel_l1(x: &Tensor, y: &Tensor) -> f64 {
 
 /// Per-token dot products: x, y seen as [n_tokens, tok_len]; returns n dots.
 pub fn token_dots(x: &Tensor, y: &Tensor, n_tokens: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(n_tokens);
+    token_dots_into(x, y, n_tokens, &mut out);
+    out
+}
+
+/// [`token_dots`] into a reused output vector (cleared, then filled; only
+/// allocates when `out`'s capacity is insufficient).
+pub fn token_dots_into(x: &Tensor, y: &Tensor, n_tokens: usize, out: &mut Vec<f64>) {
     debug_assert!(x.same_shape(y));
     debug_assert_eq!(x.len() % n_tokens, 0);
     let tl = x.len() / n_tokens;
     let xd = x.data();
     let yd = y.data();
-    (0..n_tokens)
-        .map(|i| {
-            let a = &xd[i * tl..(i + 1) * tl];
-            let b = &yd[i * tl..(i + 1) * tl];
-            a.iter().zip(b).map(|(p, q)| *p as f64 * *q as f64).sum()
-        })
-        .collect()
+    out.clear();
+    out.extend((0..n_tokens).map(|i| {
+        dot_slices(&xd[i * tl..(i + 1) * tl], &yd[i * tl..(i + 1) * tl])
+    }));
 }
 
 #[cfg(test)]
@@ -295,6 +345,38 @@ mod tests {
         let s = stack_rows(&[&a, &b]);
         assert_eq!(s.shape(), &[3, 2]);
         assert_eq!(s.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn gather_into_matches_stack_rows() {
+        let a = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let b = Tensor::new(vec![5.0, 6.0], &[1, 2]).unwrap();
+        let mut out = Tensor::zeros(&[3, 2]);
+        gather_into(&[&a, &b], &mut out);
+        assert_eq!(out.data(), stack_rows(&[&a, &b]).data());
+    }
+
+    #[test]
+    fn scatter_from_matches_unstack_rows() {
+        let s = Tensor::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[3, 2]).unwrap();
+        let mut dsts = vec![Tensor::zeros(&[1, 2]), Tensor::zeros(&[1, 2]), Tensor::zeros(&[1, 2])];
+        scatter_from(&s, &mut dsts);
+        for (d, r) in dsts.iter().zip(unstack_rows(&s)) {
+            assert_eq!(d.data(), r.data());
+        }
+    }
+
+    #[test]
+    fn slice_kernels_match_tensor_kernels() {
+        let x = Tensor::new(vec![1.0, 0.5, -2.0, 4.0], &[4]).unwrap();
+        let y = Tensor::new(vec![2.0, -1.0, 0.25, 1.5], &[4]).unwrap();
+        assert_eq!(dot_slices(x.data(), y.data()), dot(&x, &y));
+        let mut buf = Vec::new();
+        token_dots_into(&x, &y, 2, &mut buf);
+        assert_eq!(buf, token_dots(&x, &y, 2));
+        // reuse must clear previous contents
+        token_dots_into(&x, &y, 4, &mut buf);
+        assert_eq!(buf.len(), 4);
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! Borrowed row views over batched tensors + in-place row copies.
+//!
+//! A `[b, ...]` tensor is `b` contiguous rows of equal length. The lane
+//! engine's bucket gathers write lane states directly into row `k` of a
+//! preallocated bucket buffer ([`copy_into_row`]) and scatter model
+//! outputs back per row ([`copy_from_row`]) — no intermediate `Vec`, no
+//! per-row `Tensor` allocation (contrast `ops::stack_rows` /
+//! `ops::unstack_rows`, which allocate on every call and remain only for
+//! cold paths and as the reference semantics in tests).
+//!
+//! [`RowsView`] is the read-only counterpart: a borrowed rows-of-a-batch
+//! addressing scheme for consumers that inspect batched outputs without
+//! splitting them (per-row dots, future batched-criterion work). It is
+//! not on the lane engine's write path — the two copy functions are.
+
+use super::ops;
+use super::Tensor;
+
+/// Immutable view of a tensor as `shape[0]` rows of equal length.
+pub struct RowsView<'a> {
+    data: &'a [f32],
+    rows: usize,
+    row_len: usize,
+}
+
+impl<'a> RowsView<'a> {
+    pub fn of(t: &'a Tensor) -> RowsView<'a> {
+        let rows = t.shape().first().copied().unwrap_or(1).max(1);
+        debug_assert_eq!(t.len() % rows, 0);
+        RowsView { data: t.data(), rows, row_len: t.len() / rows }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// Borrow row `i` (no copy).
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.row_len..(i + 1) * self.row_len]
+    }
+
+    /// Dot product of row `i` against the matching row of `other`.
+    pub fn row_dot(&self, other: &RowsView, i: usize) -> f64 {
+        ops::dot_slices(self.row(i), other.row(i))
+    }
+}
+
+/// Number of elements in one row of `t` (product of trailing dims).
+#[inline]
+pub fn row_numel(t: &Tensor) -> usize {
+    let rows = t.shape().first().copied().unwrap_or(1).max(1);
+    t.len() / rows
+}
+
+/// Copy `src` (one row's worth of elements, e.g. a `[1, ...]` lane tensor)
+/// into row `row` of `dst`, in place.
+pub fn copy_into_row(dst: &mut Tensor, row: usize, src: &Tensor) {
+    let plane = row_numel(dst);
+    let rows = dst.len() / plane.max(1);
+    assert!(row < rows, "copy_into_row: row {row} out of {rows}");
+    assert_eq!(
+        src.len(),
+        plane,
+        "copy_into_row: src has {} elements, row holds {plane}",
+        src.len()
+    );
+    dst.data_mut()[row * plane..(row + 1) * plane].copy_from_slice(src.data());
+}
+
+/// Copy row `row` of `src` into `dst` (the scatter inverse of
+/// [`copy_into_row`]), in place.
+pub fn copy_from_row(dst: &mut Tensor, src: &Tensor, row: usize) {
+    let plane = row_numel(src);
+    let rows = src.len() / plane.max(1);
+    assert!(row < rows, "copy_from_row: row {row} out of {rows}");
+    assert_eq!(
+        dst.len(),
+        plane,
+        "copy_from_row: dst has {} elements, row holds {plane}",
+        dst.len()
+    );
+    dst.data_mut().copy_from_slice(&src.data()[row * plane..(row + 1) * plane]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_view_splits_batch_axis() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[3, 2]).unwrap();
+        let v = RowsView::of(&t);
+        assert_eq!(v.rows(), 3);
+        assert_eq!(v.row_len(), 2);
+        assert_eq!(v.row(0), &[1.0, 2.0]);
+        assert_eq!(v.row(2), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn row_dot_matches_ops_dot() {
+        let a = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let b = Tensor::new(vec![5.0, 6.0, 7.0, 8.0], &[2, 2]).unwrap();
+        let va = RowsView::of(&a);
+        let vb = RowsView::of(&b);
+        assert_eq!(va.row_dot(&vb, 0), 1.0 * 5.0 + 2.0 * 6.0);
+        assert_eq!(va.row_dot(&vb, 1), 3.0 * 7.0 + 4.0 * 8.0);
+    }
+
+    #[test]
+    fn row_copies_roundtrip_and_match_stack_semantics() {
+        let a = Tensor::new(vec![1.0, 2.0], &[1, 2]).unwrap();
+        let b = Tensor::new(vec![3.0, 4.0], &[1, 2]).unwrap();
+        let mut bucket = Tensor::zeros(&[2, 2]);
+        copy_into_row(&mut bucket, 0, &a);
+        copy_into_row(&mut bucket, 1, &b);
+        assert_eq!(bucket.data(), ops::stack_rows(&[&a, &b]).data());
+        let mut out = Tensor::zeros(&[1, 2]);
+        copy_from_row(&mut out, &bucket, 1);
+        assert_eq!(out.data(), b.data());
+    }
+
+    #[test]
+    #[should_panic(expected = "copy_into_row")]
+    fn row_copy_rejects_mismatched_rows() {
+        let src = Tensor::zeros(&[1, 3]);
+        let mut dst = Tensor::zeros(&[2, 2]);
+        copy_into_row(&mut dst, 0, &src);
+    }
+}

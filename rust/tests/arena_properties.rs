@@ -1,0 +1,180 @@
+//! Arena/view execution is bit-identical to sequential generation.
+//!
+//! The zero-copy hot path (reused step buffers, `_into` solver kernels,
+//! arena-pooled bucket gathers, `run_into` backends) must produce exactly
+//! the bytes the allocating seed path produced. The referee is
+//! per-request [`Pipeline::generate`] — itself pinned by the golden
+//! suites — compared against the lane engine over random seeds, step
+//! counts, guidance values and mixed-lane batches, for every accelerator
+//! (including `sada-cache` lanes over an empty store, which behave as
+//! recording passthroughs).
+
+use std::sync::Arc;
+
+use sada::baselines::{AdaptiveDiffusion, DeepCache, TeaCache};
+use sada::pipeline::lanes::FnFactory;
+use sada::pipeline::{Accelerator, GenRequest, NoAccel, Pipeline};
+use sada::plancache::{schedule_fingerprint, PlanStore, SpeculativeAccel};
+use sada::runtime::mock::GmBackend;
+use sada::runtime::ModelBackend;
+use sada::sada::Sada;
+use sada::solvers::{Schedule, SolverKind};
+use sada::tensor::Tensor;
+
+/// Every accelerator: bit-identical on unbucketed backends, where all
+/// full executions are singles and aux features (deep/caches) survive.
+const ACCELS: &[&str] = &["baseline", "sada", "sada-cache", "deepcache", "adaptive", "teacache"];
+
+/// Aux-independent accelerators (plan only Full/skip modes): bit-identical
+/// under bucketed execution too. Aux-dependent ones (DeepCache's shallow
+/// path, SADA's token pruning) intentionally trade their degraded-variant
+/// discount for gather throughput when bucketed launches clear lane aux
+/// features, so bucketed runs legitimately diverge from sequential for
+/// them (see the lane-engine module docs).
+const BUCKET_SAFE_ACCELS: &[&str] = &["baseline", "adaptive", "teacache"];
+
+fn accel_for(name: &str, backend: &GmBackend, steps: usize) -> Box<dyn Accelerator> {
+    match name {
+        "sada" => Box::new(Sada::with_default(backend.info(), steps)),
+        "sada-cache" => {
+            // fresh empty store per construction: lanes all miss (plans are
+            // only inserted at run completion), matching a sequential run
+            // against an empty store bit for bit
+            let fp = schedule_fingerprint(SolverKind::DpmPP.name(), &Schedule::default_ddpm());
+            Box::new(SpeculativeAccel::new(
+                Sada::with_default(backend.info(), steps),
+                Arc::new(PlanStore::new(64)),
+                &backend.info().name,
+                fp,
+            ))
+        }
+        "deepcache" => Box::new(DeepCache::new(3)),
+        "adaptive" => Box::new(AdaptiveDiffusion::default()),
+        "teacache" => Box::new(TeaCache::default()),
+        _ => Box::new(NoAccel),
+    }
+}
+
+fn reqs_for(n: usize, steps: usize, seed: u64) -> Vec<GenRequest> {
+    let mut rng = sada::rng::Rng::new(seed);
+    (0..n)
+        .map(|k| GenRequest {
+            cond: Tensor::from_rng(&mut rng, &[1, 32]),
+            seed: rng.below(100_000),
+            guidance: [0.0f32, 2.0, 3.5, 5.0][k % 4],
+            steps,
+            edge: None,
+        })
+        .collect()
+}
+
+/// Lane results must match per-request sequential generation bitwise:
+/// same image bytes, same NFE, same mode trace.
+fn assert_lanes_match_sequential(
+    backend: &GmBackend,
+    accel: &str,
+    reqs: &[GenRequest],
+    ctx: &str,
+) {
+    let pipe = Pipeline::new(backend, SolverKind::DpmPP);
+    let steps = reqs[0].steps;
+    let proto = accel_for(accel, backend, steps);
+    let lanes = pipe
+        .generate_lanes(reqs, proto.as_ref())
+        .unwrap_or_else(|e| panic!("{ctx}: lane engine failed: {e:#}"));
+    for (k, (lane, req)) in lanes.iter().zip(reqs).enumerate() {
+        let mut solo = accel_for(accel, backend, steps);
+        let seq = pipe
+            .generate(req, solo.as_mut())
+            .unwrap_or_else(|e| panic!("{ctx}: sequential failed: {e:#}"));
+        assert_eq!(
+            lane.image.data(),
+            seq.image.data(),
+            "{ctx}: lane {k} ({accel}) not bit-identical to sequential"
+        );
+        assert_eq!(lane.stats.nfe, seq.stats.nfe, "{ctx}: lane {k} ({accel}) NFE");
+        assert_eq!(
+            lane.stats.mode_trace(),
+            seq.stats.mode_trace(),
+            "{ctx}: lane {k} ({accel}) mode trace"
+        );
+    }
+}
+
+#[test]
+fn property_every_accel_lane_batch_is_bit_identical_to_sequential() {
+    for (round, &(seed, steps, batch)) in [
+        (11u64, 9usize, 1usize),
+        (23, 21, 3),
+        (37, 34, 5),
+        (53, 13, 4),
+    ]
+    .iter()
+    .enumerate()
+    {
+        for bucketed in [false, true] {
+            let backend = if bucketed {
+                GmBackend::with_batch_buckets(seed, &[2, 4])
+            } else {
+                GmBackend::new(seed)
+            };
+            let reqs = reqs_for(batch, steps, seed * 17 + round as u64);
+            let accels = if bucketed { BUCKET_SAFE_ACCELS } else { ACCELS };
+            for accel in accels {
+                let ctx = format!(
+                    "round {round} (seed {seed}, steps {steps}, b {batch}, bucketed {bucketed})"
+                );
+                assert_lanes_match_sequential(&backend, accel, &reqs, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_accelerator_lanes_stay_bit_identical() {
+    // heterogeneous batch: every lane runs a different accelerator. No
+    // compiled buckets, so every execution is a single and even the
+    // aux-dependent accelerators must match their solo runs exactly.
+    let backend = GmBackend::new(7);
+    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let steps = 30;
+    let mut reqs = reqs_for(4, steps, 99);
+    // one guidance group (exercises the grouped scheduling bookkeeping)
+    for r in reqs.iter_mut() {
+        r.guidance = 3.0;
+    }
+    let kinds = ["baseline", "sada", "deepcache", "sada-cache"];
+    let b2 = &backend;
+    let factory = FnFactory(move |lane: usize| accel_for(kinds[lane], b2, steps));
+    let lanes = pipe.generate_lanes(&reqs, &factory).unwrap();
+    for (k, (lane, req)) in lanes.iter().zip(&reqs).enumerate() {
+        let mut solo = accel_for(kinds[k], &backend, steps);
+        let seq = pipe.generate(req, solo.as_mut()).unwrap();
+        assert_eq!(
+            lane.image.data(),
+            seq.image.data(),
+            "mixed lane {k} ({}) not bit-identical",
+            kinds[k]
+        );
+        assert_eq!(lane.stats.mode_trace(), seq.stats.mode_trace(), "mixed lane {k}");
+    }
+}
+
+#[test]
+fn guidance_values_keep_their_own_sub_batches() {
+    // two guidance groups over buckets (regression net for the grouped
+    // gather bookkeeping rewrite): results still match per-request
+    // sequential runs exactly. `adaptive` is aux-independent, so bucketed
+    // execution must be bit-identical; its skip decisions also vary the
+    // executed-batch composition step to step.
+    let backend = GmBackend::with_batch_buckets(13, &[2]);
+    let mut reqs = reqs_for(4, 25, 5);
+    reqs[0].guidance = 1.0;
+    reqs[1].guidance = 6.0;
+    reqs[2].guidance = 1.0;
+    reqs[3].guidance = 6.0;
+    assert_lanes_match_sequential(&backend, "adaptive", &reqs, "two-group adaptive batch");
+    // and the same shape without buckets for the aux-dependent planner
+    let backend = GmBackend::new(13);
+    assert_lanes_match_sequential(&backend, "sada", &reqs, "two-group sada batch");
+}

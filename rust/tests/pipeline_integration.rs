@@ -143,12 +143,16 @@ fn music_and_control_models_generate() {
 
 #[test]
 fn batched_variant_matches_sequential() {
-    // full_b4 on stacked requests must equal 4 independent full runs
+    // a 4-lane batch gathers into full_b4 (uniform guidance, one group)
+    // and must equal 4 independent full runs — the lane engine is the
+    // only batched execution path (lockstep generate_batch is retired)
     let Some(rt) = runtime() else { return };
     let backend = rt.model_backend("sd2_tiny").unwrap();
     let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
     let reqs: Vec<GenRequest> = (0..4).map(|i| request(&rt, i, 10)).collect();
-    let batched = pipe.generate_batch(&reqs, &mut NoAccel).unwrap();
+    use sada::pipeline::Accelerator;
+    let proto: &dyn Accelerator = &NoAccel;
+    let batched = pipe.generate_lanes(&reqs, proto).unwrap();
     for (i, r) in reqs.iter().enumerate() {
         let solo = pipe.generate(r, &mut NoAccel).unwrap();
         let mse = ops::mse(&solo.image, &batched[i].image);
@@ -190,8 +194,8 @@ fn lane_engine_sada_reports_per_lane_stats_on_artifacts() {
         rt.manifest.schedule.to_schedule(),
     );
     let mut reqs: Vec<GenRequest> = (0..3).map(|i| request(&rt, i, 30)).collect();
-    // divergent guidance per lane: legal under the lane engine (sub-batched
-    // per gs), illegal under lockstep generate_batch
+    // divergent guidance per lane: the lane engine sub-batches per gs
+    // (the retired lockstep path required uniform guidance)
     reqs[0].guidance = 1.0;
     reqs[1].guidance = 4.0;
     reqs[2].guidance = 8.0;
