@@ -260,7 +260,10 @@ fn main() {
             let _ = backend.run("full", &args).unwrap();
         });
         let prune_args = ModelArgs {
-            keep_idx: Some((0..32).collect()),
+            keep_idx: Some(std::sync::Arc::new(sada::runtime::KeepMask {
+                variant: "prune50".into(),
+                keep_idx: (0..32).collect(),
+            })),
             caches: Some(Tensor::zeros(&[5, 2, 64, 64])),
             ..args.clone()
         };

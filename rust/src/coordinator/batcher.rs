@@ -6,12 +6,26 @@
 //! stays in its own class and flushes alone). A batch is emitted when the
 //! largest bucket fills, or when the oldest pending request exceeds
 //! `max_wait_ms` (then the largest bucket <= queue length is used; 1 is
-//! always a valid bucket). Invariants (property-tested): no request is
-//! dropped or duplicated, FIFO order is preserved within a compatibility
-//! class, and no request waits more than max_wait once the batcher is
-//! polled.
+//! always a valid bucket).
+//!
+//! **Replay-aware grouping.** Within the head's compatibility class, batch
+//! slots are filled *same-plan-signature first*: requests carrying the
+//! plan-cache key components known at batching time (guidance bucket +
+//! conditioning sketch, see [`crate::plancache::signature`]) probe the same
+//! `PlanStore` entry, so lanes formed from them replay the same verified
+//! plan and share `full_b{n}` bucket launches on every fresh step for the
+//! rest of the run. Remaining slots fall back to any compatible request
+//! (today's class grouping), so affinity never delays batch formation.
+//!
+//! Invariants (property-tested): no request is dropped or duplicated, the
+//! head of the queue is always served first and FIFO order is preserved
+//! within a plan signature (affinity may only promote same-signature
+//! requests past *different-signature* classmates), and no request waits
+//! more than max_wait once the batcher is polled.
 
 use std::collections::VecDeque;
+
+use crate::plancache::signature::RequestKey;
 
 use super::request::ServeRequest;
 
@@ -19,11 +33,27 @@ pub struct Batch {
     pub requests: Vec<ServeRequest>,
 }
 
+/// Replay-affinity signature of a request: the plan-cache key components
+/// known at batching time (model, steps, accel, guidance bucket, cond
+/// sketch). The solver/schedule fingerprint is per-model configuration —
+/// constant within a compatibility class — so it is elided here; the
+/// accelerator string is folded in because only same-accel requests can
+/// share a plan store entry (and they must share a batch anyway).
+fn plan_affinity(req: &ServeRequest) -> u64 {
+    let key = RequestKey::new(&req.model, 0, req.steps, req.guidance, req.cond.data());
+    // fold the accel in with the same FNV discipline as the key digest
+    req.accel
+        .bytes()
+        .fold(key.hash64(), |h, b| (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3))
+}
+
 pub struct DynamicBatcher {
     /// Compiled batch sizes, ascending (1 implicitly allowed).
     buckets: Vec<usize>,
     pub max_wait_ms: f64,
-    queue: VecDeque<(f64, ServeRequest)>, // (enqueue time ms, request)
+    /// (enqueue time ms, plan-affinity signature, request) — the signature
+    /// is computed once at push time, not per poll.
+    queue: VecDeque<(f64, u64, ServeRequest)>,
 }
 
 impl DynamicBatcher {
@@ -34,7 +64,8 @@ impl DynamicBatcher {
     }
 
     pub fn push(&mut self, now_ms: f64, req: ServeRequest) {
-        self.queue.push_back((now_ms, req));
+        let sig = plan_affinity(&req);
+        self.queue.push_back((now_ms, sig, req));
     }
 
     pub fn pending(&self) -> usize {
@@ -72,10 +103,13 @@ impl DynamicBatcher {
     }
 
     /// Poll for a ready batch at `now_ms`. Head-of-line request defines the
-    /// compatibility class; only requests compatible with it are grouped
-    /// (FIFO within class, no reordering across the head).
+    /// compatibility class; only requests compatible with it are grouped,
+    /// same-plan-signature requests first (they will share buckets every
+    /// step of the run), then any compatible classmate. The head always
+    /// leads and leftovers keep arrival order.
     pub fn poll(&mut self, now_ms: f64) -> Option<Batch> {
-        let (head_t, head) = self.queue.front()?;
+        let (head_t, head_sig, head) = self.queue.front()?;
+        let head_sig = *head_sig;
         let deadline_hit = now_ms - head_t >= self.max_wait_ms;
         // the head always counts as its own class even when self-comparison
         // fails (NaN guidance): a batch is never empty and the head always
@@ -83,7 +117,7 @@ impl DynamicBatcher {
         let n_compat = self
             .queue
             .iter()
-            .filter(|(_, r)| Self::compatible(r, head))
+            .filter(|(_, _, r)| Self::compatible(r, head))
             .count()
             .max(1);
         let want = if n_compat >= self.max_bucket() {
@@ -93,17 +127,37 @@ impl DynamicBatcher {
         } else {
             return None;
         };
-        // head leads the batch (it defines the class); partition the rest in
-        // one O(n) pass, keeping non-members in arrival order
-        let (_, head) = self.queue.pop_front().expect("nonempty");
+        // head leads the batch (it defines the class); two marking passes —
+        // replay affinity first, then class fallback — followed by one
+        // partition pass that keeps both batch and leftovers in arrival
+        // order. O(n) per pass.
+        let (_, _, head) = self.queue.pop_front().expect("nonempty");
         let mut requests = Vec::with_capacity(want);
         requests.push(head);
-        let mut rest = VecDeque::with_capacity(self.queue.len());
-        for (t, r) in self.queue.drain(..) {
-            if requests.len() < want && Self::compatible(&r, &requests[0]) {
-                requests.push(r);
+        let drained: Vec<(f64, u64, ServeRequest)> = self.queue.drain(..).collect();
+        let mut chosen = vec![false; drained.len()];
+        let mut n_chosen = 0usize; // excludes the head
+        for same_sig_pass in [true, false] {
+            for (k, (_, sig, r)) in drained.iter().enumerate() {
+                if n_chosen + 1 >= want {
+                    break;
+                }
+                if chosen[k]
+                    || (same_sig_pass && *sig != head_sig)
+                    || !Self::compatible(r, &requests[0])
+                {
+                    continue;
+                }
+                chosen[k] = true;
+                n_chosen += 1;
+            }
+        }
+        let mut rest = VecDeque::with_capacity(drained.len());
+        for (k, item) in drained.into_iter().enumerate() {
+            if chosen[k] {
+                requests.push(item.2);
             } else {
-                rest.push_back((t, r));
+                rest.push_back(item);
             }
         }
         self.queue = rest;
@@ -114,7 +168,7 @@ impl DynamicBatcher {
     pub fn next_deadline_in(&self, now_ms: f64) -> Option<f64> {
         self.queue
             .front()
-            .map(|(t, _)| (t + self.max_wait_ms - now_ms).max(0.0))
+            .map(|(t, _, _)| (t + self.max_wait_ms - now_ms).max(0.0))
     }
 }
 
@@ -226,6 +280,69 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn replay_affinity_prefers_same_signature_requests() {
+        // head (sig A), one different-signature classmate (sig B: other
+        // guidance bucket), one later same-signature request (sig A): the
+        // bucket-2 batch must pair the head with its replay twin, not the
+        // earlier classmate
+        let mut b = DynamicBatcher::new(vec![2], 50.0);
+        let mut r0 = req(0, "m", 50);
+        r0.guidance = 3.0;
+        let mut r1 = req(1, "m", 50);
+        r1.guidance = 7.0; // different guidance bucket => different plan key
+        let mut r2 = req(2, "m", 50);
+        r2.guidance = 3.0; // same signature as the head
+        b.push(0.0, r0);
+        b.push(0.0, r1);
+        b.push(0.0, r2);
+        let batch = b.poll(0.0).expect("bucket fillable");
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![0, 2], "same-plan-signature requests group first");
+        // the passed-over classmate is next in line, not lost
+        let batch = b.poll(60.0).expect("deadline flush");
+        assert_eq!(batch.requests[0].id.0, 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn replay_affinity_falls_back_to_class_grouping() {
+        // no same-signature partner available: the batch still fills from
+        // the compatibility class (affinity never shrinks a batch)
+        let mut b = DynamicBatcher::new(vec![2], 50.0);
+        let mut r0 = req(0, "m", 50);
+        r0.guidance = 3.0;
+        let mut r1 = req(1, "m", 50);
+        r1.guidance = 7.0;
+        b.push(0.0, r0);
+        b.push(0.0, r1);
+        let batch = b.poll(0.0).expect("class grouping fallback");
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn replay_affinity_distinguishes_conditioning() {
+        // same guidance but a genuinely different prompt sketches apart;
+        // identical prompts sketch together
+        let mut rng = crate::rng::Rng::new(9);
+        let cond_a = Tensor::from_rng(&mut rng, &[1, 32]);
+        let cond_b = Tensor::from_rng(&mut rng, &[1, 32]);
+        let with_cond = |id: u64, cond: &Tensor| {
+            let mut r = req(id, "m", 50);
+            r.cond = cond.clone();
+            r
+        };
+        let sig = |r: &ServeRequest| super::plan_affinity(r);
+        assert_eq!(sig(&with_cond(0, &cond_a)), sig(&with_cond(1, &cond_a)));
+        assert_ne!(sig(&with_cond(0, &cond_a)), sig(&with_cond(1, &cond_b)));
+        // accel participates: a sada-cache and a baseline request never
+        // share a plan entry (they cannot share a batch either)
+        let mut other_accel = with_cond(2, &cond_a);
+        other_accel.accel = "baseline".into();
+        assert_ne!(sig(&with_cond(0, &cond_a)), sig(&other_accel));
     }
 
     #[test]

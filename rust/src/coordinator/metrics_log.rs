@@ -152,6 +152,39 @@ impl MetricsLog {
         }
     }
 
+    /// Per-outcome step-mode histogram plus degradation counters: how many
+    /// steps of this run executed in each [`crate::pipeline::StepMode`],
+    /// keyed by the run's cache-outcome class
+    /// (`steps_{mode}_{hit|miss|diverged|uncached}`), and how many steps
+    /// were structurally degraded to Full
+    /// (`steps_degraded_{prune|shallow|skip}`). The token-replay health
+    /// signal is `steps_prune_hit` rising while `steps_degraded_prune`
+    /// stays flat: cache hits replay recorded token directives natively.
+    pub fn record_step_modes(&mut self, stats: &crate::pipeline::RunStats) {
+        use crate::pipeline::{CacheOutcome, StepMode};
+        let class = match stats.outcome {
+            CacheOutcome::Hit => "hit",
+            CacheOutcome::Miss => "miss",
+            CacheOutcome::Diverged { .. } => "diverged",
+            CacheOutcome::Uncached => "uncached",
+        };
+        for mode in StepMode::ALL {
+            let n = stats.count(mode);
+            if n > 0 {
+                self.inc(&format!("steps_{}_{class}", mode.name()), n as u64);
+            }
+        }
+        if stats.degraded.prune > 0 {
+            self.inc("steps_degraded_prune", stats.degraded.prune as u64);
+        }
+        if stats.degraded.shallow > 0 {
+            self.inc("steps_degraded_shallow", stats.degraded.shallow as u64);
+        }
+        if stats.degraded.skip > 0 {
+            self.inc("steps_degraded_skip", stats.degraded.skip as u64);
+        }
+    }
+
     pub fn histogram(&self, name: &str) -> Option<&Histogram> {
         self.histograms.get(name)
     }
@@ -257,6 +290,41 @@ mod tests {
         assert!(text.contains("sada_plancache_miss_total 1"));
         assert!(text.contains("sada_plancache_diverged_total 1"));
         assert!(text.contains("sada_plancache_divergence_step_count 1"));
+    }
+
+    #[test]
+    fn step_modes_bucket_by_outcome_with_degradations() {
+        use crate::pipeline::{CacheOutcome, StepMode, StepPlan};
+        let mut m = MetricsLog::new();
+        let mask = std::sync::Arc::new(crate::runtime::KeepMask {
+            variant: "prune50".into(),
+            keep_idx: vec![0],
+        });
+        // a hit run that replayed two prune steps natively
+        let mut hit = crate::pipeline::RunStats::new("sada-cache".into(), 5);
+        hit.record_step(&StepPlan::Full, true);
+        hit.record_step(&StepPlan::Prune { mask: mask.clone() }, true);
+        hit.record_step(&StepPlan::SkipLagrange, false);
+        hit.record_step(&StepPlan::Prune { mask }, true);
+        hit.record_step(&StepPlan::Full, true);
+        hit.outcome = CacheOutcome::Hit;
+        m.record_step_modes(&hit);
+        // a miss run that had one prune degraded by cold caches
+        let mut miss = crate::pipeline::RunStats::new("sada-cache".into(), 2);
+        miss.record_step(&StepPlan::Full, true);
+        miss.record_step(&StepPlan::Full, true);
+        miss.record_degraded(StepMode::Prune);
+        miss.outcome = CacheOutcome::Miss;
+        m.record_step_modes(&miss);
+        assert_eq!(m.counter("steps_prune_hit"), 2);
+        assert_eq!(m.counter("steps_full_hit"), 2);
+        assert_eq!(m.counter("steps_skip_lagrange_hit"), 1);
+        assert_eq!(m.counter("steps_full_miss"), 2);
+        assert_eq!(m.counter("steps_prune_miss"), 0);
+        assert_eq!(m.counter("steps_degraded_prune"), 1);
+        let text = m.render();
+        assert!(text.contains("sada_steps_prune_hit_total 2"));
+        assert!(text.contains("sada_steps_degraded_prune_total 1"));
     }
 
     #[test]

@@ -5,8 +5,11 @@
 //!
 //! * a single **dispatcher** thread owns ingress, the [`Router`] and every
 //!   per-model [`DynamicBatcher`]; it never touches a runtime. Batch
-//!   formation therefore stays strictly FIFO within a compatibility class
-//!   regardless of how many engines execute.
+//!   formation is deterministic regardless of how many engines execute:
+//!   the head of the queue is always served first and order is FIFO
+//!   within a *plan signature* (replay-affinity slot filling may promote
+//!   a same-signature request past different-signature classmates — see
+//!   `batcher.rs`).
 //! * `n_workers` **engine workers** each own their *own* [`Runtime`] handle
 //!   (the PJRT client is `!Sync`, so runtimes are never shared) and pull
 //!   ready batches from a shared work queue. Each worker keeps a
@@ -17,9 +20,9 @@
 //!   lane so skip decisions stay per-trajectory.
 //!
 //! Invariants preserved from the single-engine design (property-tested in
-//! `tests/coordinator_integration.rs` at 1, 2 and 4 workers): FIFO batch
-//! formation within a compatibility class, bounded wait, and no request
-//! lost or duplicated. Shutdown drains: ingress closes, the dispatcher
+//! `tests/coordinator_integration.rs` at 1, 2 and 4 workers): head-first
+//! batch formation with FIFO order per plan signature, bounded wait, and
+//! no request lost or duplicated. Shutdown drains: ingress closes, the dispatcher
 //! flushes every batcher under expired deadlines, closes the work queue,
 //! and the workers exit once the queue is empty.
 
@@ -543,6 +546,9 @@ fn execute_batch(
         m.inc(&format!("batch_size_{bsz}"), 1);
         for res in &results {
             m.record_cache_outcome(&res.stats.outcome);
+            // per-outcome step-mode histogram: replayed-prune vs degraded
+            // is the token-wise replay health signal
+            m.record_step_modes(&res.stats);
         }
         if let Some(store) = stores.get(model) {
             m.set_gauge(&format!("plancache_{model}_entries"), store.len() as f64);

@@ -388,26 +388,47 @@ pub fn run_plancache_sweep(
         name: &'static str,
         jitter: f32,
         cached: bool,
+        /// Ablate the multistep regime so recorded plans are dominated by
+        /// step-wise skips and **token-pruned** directives — the
+        /// token-replay arm measuring how much of the prune NFE discount
+        /// survives the cache (replayed-prune vs degraded counts).
+        tokenwise_only: bool,
     }
     let arms = [
-        Arm { name: "sada (cold)", jitter: 0.0, cached: false },
-        Arm { name: "sada-cache", jitter: 0.0, cached: true },
-        Arm { name: "sada-cache (near-dup)", jitter: 2e-4, cached: true },
+        Arm { name: "sada (cold)", jitter: 0.0, cached: false, tokenwise_only: false },
+        Arm { name: "sada-cache", jitter: 0.0, cached: true, tokenwise_only: false },
+        Arm { name: "sada-cache (near-dup)", jitter: 2e-4, cached: true, tokenwise_only: false },
+        Arm { name: "sada-cache (token-replay)", jitter: 0.0, cached: true, tokenwise_only: true },
     ];
     let mut table = Table::new(
         &format!(
             "Skip-plan cache — {model}, {steps} steps, {n_requests} requests over \
              {hot_prompts} hot prompts"
         ),
-        &["Arm", "Hit%", "Steady hit%", "Div", "Mean NFE", "NFE cut", "Mean ms"],
+        &[
+            "Arm",
+            "Hit%",
+            "Steady hit%",
+            "Div",
+            "Mean NFE",
+            "NFE cut",
+            "Replay P",
+            "Degr P",
+            "Mean ms",
+        ],
     );
     let mut arms_json: Vec<Json> = Vec::new();
     let mut cold_nfe = f64::NAN;
     for arm in &arms {
         let store = std::sync::Arc::new(PlanStore::new(256));
-        let mut sada = Sada::with_default(backend.info(), steps);
+        let sada_for = |info: &crate::runtime::ModelInfo| {
+            let mut cfg = crate::sada::SadaConfig::default().for_steps(steps);
+            cfg.enable_multistep = !arm.tokenwise_only;
+            Sada::new(info, cfg)
+        };
+        let mut sada = sada_for(backend.info());
         let mut spec = SpeculativeAccel::new(
-            Sada::with_default(backend.info(), steps),
+            sada_for(backend.info()),
             store.clone(),
             &backend.info().name,
             sched_fp,
@@ -416,6 +437,9 @@ pub fn run_plancache_sweep(
         let (mut hits, mut divs, mut repeats) = (0usize, 0usize, 0usize);
         let mut nfe_sum = 0usize;
         let mut wall_sum = 0.0f64;
+        // token-replay accounting: prune steps executed natively on hits
+        // vs prune directives degraded to Full for missing caches
+        let (mut replayed_prune, mut degraded_prune) = (0usize, 0usize);
         for (i, arr) in trace.iter().enumerate() {
             let mut cond = bank.get(arr.prompt_idx).clone();
             if arm.jitter > 0.0 {
@@ -439,10 +463,14 @@ pub fn run_plancache_sweep(
                 repeats += 1;
             }
             match res.stats.outcome {
-                CacheOutcome::Hit => hits += 1,
+                CacheOutcome::Hit => {
+                    hits += 1;
+                    replayed_prune += res.stats.count(crate::pipeline::StepMode::Prune);
+                }
                 CacheOutcome::Diverged { .. } => divs += 1,
                 _ => {}
             }
+            degraded_prune += res.stats.degraded.prune;
             nfe_sum += res.stats.nfe;
             wall_sum += res.stats.wall_ms;
         }
@@ -451,13 +479,35 @@ pub fn run_plancache_sweep(
         if !arm.cached {
             cold_nfe = mean_nfe;
         }
+        // the NFE cut must isolate the *cache* effect: the ablated
+        // token-replay arm is measured against an equally-ablated cold
+        // reference, not the multistep-enabled cold arm (whose extra
+        // Lagrange savings would read as a spurious cache regression)
+        let cold_ref = if arm.tokenwise_only {
+            let mut cold = sada_for(backend.info());
+            let mut cold_sum = 0usize;
+            for arr in &trace {
+                let req = GenRequest {
+                    cond: bank.get(arr.prompt_idx).clone(),
+                    seed: bank.seed_for(arr.prompt_idx),
+                    guidance: 3.0,
+                    steps,
+                    edge: None,
+                };
+                cold_sum += pipe.generate(&req, &mut cold)?.stats.nfe;
+            }
+            cold_sum as f64 / n as f64
+        } else {
+            cold_nfe
+        };
         let hit_rate = hits as f64 / n as f64;
         let steady = if repeats > 0 { hits as f64 / repeats as f64 } else { 0.0 };
-        let cut = if cold_nfe.is_finite() && cold_nfe > 0.0 {
-            1.0 - mean_nfe / cold_nfe
+        let cut = if cold_ref.is_finite() && cold_ref > 0.0 {
+            1.0 - mean_nfe / cold_ref
         } else {
             0.0
         };
+        let replayed_prune_rate = if hits > 0 { replayed_prune as f64 / hits as f64 } else { 0.0 };
         table.row(vec![
             arm.name.into(),
             f2(hit_rate * 100.0),
@@ -465,6 +515,8 @@ pub fn run_plancache_sweep(
             format!("{divs}"),
             f2(mean_nfe),
             f2(cut * 100.0),
+            format!("{replayed_prune}"),
+            format!("{degraded_prune}"),
             f2(wall_sum / n as f64),
         ]);
         arms_json.push(Json::obj(vec![
@@ -474,6 +526,10 @@ pub fn run_plancache_sweep(
             ("divergences", Json::num(divs as f64)),
             ("mean_nfe", Json::num(mean_nfe)),
             ("nfe_cut", Json::num(cut)),
+            ("replayed_prune_steps", Json::num(replayed_prune as f64)),
+            ("replayed_prune_per_hit", Json::num(replayed_prune_rate)),
+            ("degraded_prune_steps", Json::num(degraded_prune as f64)),
+            ("steps_per_s", Json::num(steps as f64 * n as f64 / (wall_sum / 1e3).max(1e-9))),
             ("mean_wall_ms", Json::num(wall_sum / n as f64)),
             ("store_entries", Json::num(store.len() as f64)),
         ]));

@@ -27,11 +27,22 @@
 //! lanes planning them execute as per-lane singles with lane-local
 //! deep/cache features — batching keeps their per-step discount instead of
 //! forcing Full. Aux features are captured only from *single* full
-//! executions (bucketed `full_b{n}` launches clear them: the batched
+//! executions (bucketed `full_b{n}` launches invalidate them: the batched
 //! artifacts' aux layouts are not per-lane sliceable), so on a backend
 //! with no compiled buckets the lane engine is feature-equivalent — and
 //! bit-identical — to per-request sequential generation, while bucketed
 //! lanes trade the degraded-variant discount for gather throughput.
+//!
+//! **CacheWarm lanes.** A lane replaying a verified cached plan with
+//! token-pruned (or shallow) directives signals the fresh step feeding
+//! those directives via [`Accelerator::wants_aux_capture`]; the engine
+//! runs that execution as a *single* so the attention caches land in the
+//! lane's retained [`crate::tensor::arena::AuxSlot`]s, after which Prune
+//! directives replay natively — no `caches`-missing degradation — with
+//! each pruned step refreshing its own caches through an arena-pooled
+//! buffer. Every other full step of the replay still gathers into
+//! buckets, so warm replays keep both the NFE cut *and* the co-scheduled
+//! bucket throughput.
 //!
 //! With [`super::NoAccel`] the engine is bit-identical to sequential
 //! [`Pipeline::generate`] per request (property-tested below): single-lane
@@ -49,10 +60,14 @@
 
 use anyhow::Result;
 
-use super::{Accelerator, GenRequest, GenResult, Pipeline, RunStats, StepCtx, StepObs, StepPlan};
+use super::{
+    apply_structural_fallbacks, Accelerator, GenRequest, GenResult, Pipeline, RunStats, StepCtx,
+    StepObs, StepPlan,
+};
 use crate::runtime::manifest::split_into_buckets;
 use crate::runtime::{ModelArgs, ModelBackend, ModelInfo};
 use crate::solvers::{build_solver, Solver};
+use crate::tensor::arena::AuxSlot;
 use crate::tensor::{view, Tensor};
 
 /// Makers of fresh per-lane accelerator instances.
@@ -115,12 +130,14 @@ struct Lane<'r> {
     /// Persistent model args: `x` slot copied in place per call, cond/edge
     /// cloned once at lane init.
     args: ModelArgs,
-    /// DeepCache deep feature from this lane's last *single* full run
-    /// (bucketed launches clear it — batched aux layouts are not
-    /// per-lane sliceable).
-    deep: Option<Tensor>,
-    /// Attention caches from this lane's last single full/prune run.
-    caches: Option<Tensor>,
+    /// DeepCache deep feature from this lane's last *single* full run.
+    /// Bucketed launches *invalidate* it (batched aux layouts are not
+    /// per-lane sliceable) but retain the buffer — sourced from the
+    /// pipeline arena — for in-place refill by the next single.
+    deep: AuxSlot,
+    /// Attention caches from this lane's last single full/prune run
+    /// (same retained-slot discipline).
+    caches: AuxSlot,
     stats: RunStats,
 }
 
@@ -187,6 +204,12 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 let x = Tensor::from_rng(&mut rng, &shape);
                 let stats = RunStats::new(accel.name(), steps);
                 let wants_obs = accel.wants_obs();
+                // aux slots hold arena buffers for the whole run (retired
+                // at the end), so single captures refill in place
+                let mut deep = AuxSlot::new();
+                let mut caches = AuxSlot::new();
+                deep.ensure(&self.arena, &info.deep_shape());
+                caches.ensure(&self.arena, &info.caches_shape());
                 Lane {
                     req,
                     solver,
@@ -208,8 +231,8 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                         edge: req.edge.clone(),
                         ..Default::default()
                     },
-                    deep: None,
-                    caches: None,
+                    deep,
+                    caches,
                     stats,
                 }
             })
@@ -239,19 +262,21 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                     n_steps: steps,
                     x: &lane.x,
                     t_norm: lane.solver.t_norm(i),
-                    have_caches: lane.caches.is_some(),
-                    have_deep: lane.deep.is_some(),
+                    have_caches: lane.caches.is_valid(),
+                    have_deep: lane.deep.is_valid(),
                 };
-                let mut plan = lane.accel.plan(&ctx);
-                // structural fallbacks: same contract as Pipeline::generate
-                plan = match plan {
-                    StepPlan::Shallow if lane.deep.is_none() => StepPlan::Full,
-                    StepPlan::Prune { .. } if lane.caches.is_none() => StepPlan::Full,
-                    StepPlan::SkipReuse | StepPlan::SkipExtrapolate if !lane.has_last => {
-                        StepPlan::Full
-                    }
-                    p => p,
-                };
+                let planned = lane.accel.plan(&ctx);
+                // structural fallbacks: the shared rule owns the warm/cold
+                // decision (same contract as Pipeline::generate)
+                let (plan, degraded) = apply_structural_fallbacks(
+                    planned,
+                    lane.deep.is_valid(),
+                    lane.caches.is_valid(),
+                    lane.has_last,
+                );
+                if let Some(mode) = degraded {
+                    lane.stats.record_degraded(mode);
+                }
                 sc.plans.push(plan);
             }
             if mode == LaneMode::Lockstep
@@ -348,12 +373,18 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         }
 
         let wall_ms = timer.elapsed_ms();
+        // aux buffers go back to the pool for the next batch's lanes
+        for lane in lanes.iter_mut() {
+            lane.deep.retire(&self.arena);
+            lane.caches.retire(&self.arena);
+        }
         Ok(lanes
             .into_iter()
             .map(|mut lane| {
                 lane.stats.wall_ms = wall_ms;
                 lane.stats.nfe = lane.stats.fresh_steps;
                 lane.stats.outcome = lane.accel.outcome();
+                lane.stats.degraded.add(&lane.accel.planned_degradations());
                 GenResult { image: lane.x, stats: lane.stats }
             })
             .collect())
@@ -381,33 +412,25 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                     // back: the shallow variant reads it but emits none
                     lane.args.deep = lane.deep.take();
                     let run = self.backend.run_into("shallow", &lane.args, &mut lane.m_out, None, None);
-                    lane.deep = lane.args.deep.take();
+                    if let Some(d) = lane.args.deep.take() {
+                        lane.deep.install(d);
+                    }
                     run?;
                     lane.executed = true;
                 }
-                StepPlan::Prune { variant, keep_idx } => {
+                StepPlan::Prune { mask } => {
+                    // shared prune discipline (arena-cycled caches refresh):
+                    // the same single owner Pipeline::generate executes
                     let lane = &mut lanes[l];
                     let t_norm = lane.solver.t_norm(i);
-                    lane.args.x.as_mut().expect("persistent x slot").copy_from(&lane.x);
-                    lane.args.t = t_norm as f32;
-                    lane.args.keep_idx = Some(keep_idx.clone());
-                    // input caches move into the args; refreshed caches (if
-                    // emitted) land in the slot, else the input moves back
-                    lane.args.caches = lane.caches.take();
-                    let run = self.backend.run_into(
-                        variant,
-                        &lane.args,
+                    self.run_prune_into(
+                        &mut lane.args,
+                        mask,
+                        &lane.x,
+                        t_norm,
                         &mut lane.m_out,
-                        None,
-                        Some(&mut lane.caches),
-                    );
-                    if lane.caches.is_none() {
-                        lane.caches = lane.args.caches.take();
-                    } else {
-                        lane.args.caches = None;
-                    }
-                    lane.args.keep_idx = None;
-                    run?;
+                        &mut lane.caches,
+                    )?;
                     lane.executed = true;
                 }
                 _ => {}
@@ -450,7 +473,12 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             sc.singles.clear();
             sc.batchable.clear();
             for &l in &sc.group_members[gi] {
-                if lanes[l].req.edge.is_some() {
+                // singles: edge-conditioned lanes (edge inputs are only
+                // compiled at batch 1) and CacheWarm capture lanes — a
+                // replay whose next fresh directive is token-pruned or
+                // shallow needs this execution's aux features, which
+                // bucketed launches cannot slice per lane
+                if lanes[l].req.edge.is_some() || lanes[l].accel.wants_aux_capture(i) {
                     sc.singles.push(l);
                 } else {
                     sc.batchable.push(l);
@@ -486,9 +514,19 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             "full",
             &lane.args,
             &mut lane.m_out,
-            Some(&mut lane.deep),
-            Some(&mut lane.caches),
+            Some(lane.deep.slot()),
+            Some(lane.caches.slot()),
         )?;
+        // single full executions refresh the aux features their signature
+        // declares (empty signatures follow the run_into contract: full
+        // emits both); an unemitted slot keeps its previous validity
+        let info = self.backend.info();
+        if info.emits_output("full", "deep") {
+            lane.deep.mark_valid();
+        }
+        if info.emits_output("full", "caches") {
+            lane.caches.mark_valid();
+        }
         lane.executed = true;
         Ok(())
     }
@@ -548,10 +586,11 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             let lane = &mut lanes[l];
             view::copy_from_row(&mut lane.m_out, &out_b, k);
             lane.executed = true;
-            // batched aux layouts are not per-lane sliceable: drop stale
-            // features rather than feed them to Shallow/Prune
-            lane.deep = None;
-            lane.caches = None;
+            // batched aux layouts are not per-lane sliceable: mark the
+            // features stale rather than feed them to Shallow/Prune — the
+            // buffers stay retained for the next single's in-place refill
+            lane.deep.invalidate();
+            lane.caches.invalidate();
         }
         self.arena.release(out_b);
         Ok(())

@@ -11,13 +11,17 @@ pub mod decode;
 pub mod lanes;
 pub mod stats;
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 pub use lanes::{AcceleratorFactory, LaneMode};
-pub use stats::{CacheOutcome, RunStats, StepMode};
+pub use stats::{CacheOutcome, DegradedCounts, RunStats, StepMode};
 
+pub use crate::runtime::KeepMask;
 use crate::runtime::{ModelArgs, ModelBackend};
 use crate::solvers::{build_solver, Schedule, Solver, SolverKind};
+use crate::tensor::arena::AuxSlot;
 use crate::tensor::Tensor;
 
 /// What to execute at one timestep.
@@ -25,8 +29,11 @@ use crate::tensor::Tensor;
 pub enum StepPlan {
     /// Run the full model.
     Full,
-    /// Run a token-pruned variant with explicit keep indices (SADA SS3.5).
-    Prune { variant: String, keep_idx: Vec<i32> },
+    /// Run a token-pruned variant with an explicit keep-mask (SADA SS3.5).
+    /// The mask is `Arc`-shared with the planner (and, on replays, with
+    /// the plan cache's interned directive table), so planning and
+    /// executing a pruned step never clones the index vector.
+    Prune { mask: Arc<KeepMask> },
     /// Run the DeepCache shallow path against the cached deep feature.
     Shallow,
     /// Skip the model; reuse the previous eps/velocity verbatim
@@ -103,6 +110,29 @@ pub trait Accelerator {
         None
     }
 
+    /// Degradations the accelerator itself applied while planning this
+    /// run — e.g. a replayed keep-mask refused by the live token dots
+    /// executes Full without ever reaching the pipelines' structural
+    /// fallback. Merged into [`RunStats::degraded`] at end of run, so the
+    /// replayed-prune vs degraded telemetry sees *every* token directive
+    /// that failed to execute natively, whichever layer refused it.
+    fn planned_degradations(&self) -> DegradedCounts {
+        DegradedCounts::default()
+    }
+
+    /// Whether the full execution planned for step `i` must capture aux
+    /// features (attention caches / deep feature) for a later directive of
+    /// a verified replay — the *CacheWarm* signal. The lane engine
+    /// excludes such executions from bucketed gathers (batched aux layouts
+    /// are not per-lane sliceable), so the features land in the lane's
+    /// retained [`crate::tensor::arena::AuxSlot`]s and the upcoming
+    /// token-pruned / shallow directive replays without degradation.
+    /// Sequential [`Pipeline::generate`] captures on every single full
+    /// execution and ignores this.
+    fn wants_aux_capture(&self, _i: usize) -> bool {
+        false
+    }
+
     /// A fresh instance with the same configuration but no trajectory
     /// state. The lane engine ([`lanes`]) clones one per request so every
     /// lane plans from its *own* history — SADA's criterion is
@@ -174,6 +204,28 @@ impl Accelerator for NoAccel {
     }
 }
 
+/// Structural fallbacks shared by both execution paths — the **single
+/// owner of the warm/cold decision**: degraded variants need their aux
+/// features *valid* (shallow reads the deep feature, token pruning reads
+/// the attention caches), skip modes need a previous model output. Returns
+/// the executable plan plus the originally-planned mode whenever the plan
+/// had to degrade to Full, so the pipelines can account degradations
+/// (replayed-prune vs degraded telemetry) without re-deriving the rule.
+pub(crate) fn apply_structural_fallbacks(
+    plan: StepPlan,
+    have_deep: bool,
+    have_caches: bool,
+    has_last: bool,
+) -> (StepPlan, Option<StepMode>) {
+    match plan {
+        StepPlan::Shallow if !have_deep => (StepPlan::Full, Some(StepMode::Shallow)),
+        StepPlan::Prune { .. } if !have_caches => (StepPlan::Full, Some(StepMode::Prune)),
+        StepPlan::SkipReuse if !has_last => (StepPlan::Full, Some(StepMode::SkipReuse)),
+        StepPlan::SkipExtrapolate if !has_last => (StepPlan::Full, Some(StepMode::SkipAm3)),
+        p => (p, None),
+    }
+}
+
 /// One generation request.
 #[derive(Clone, Debug)]
 pub struct GenRequest {
@@ -232,6 +284,59 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         self.arena.stats()
     }
 
+    /// Execute one token-pruned step — the single owner of the prune-arm
+    /// execution discipline shared by [`Pipeline::generate`] and the lane
+    /// engine: the keep-mask handoff is an `Arc` bump, the input caches
+    /// move into the args, and the refreshed caches are written in place
+    /// into an arena buffer while the input buffer retires to the pool.
+    /// Backends whose prune variant *declares* a signature without a
+    /// `caches` output keep the input caches untouched instead (the
+    /// pre-arena fallback), so a never-written buffer is never marked
+    /// valid.
+    pub(crate) fn run_prune_into(
+        &self,
+        args: &mut ModelArgs,
+        mask: &std::sync::Arc<KeepMask>,
+        x: &Tensor,
+        t_norm: f64,
+        m_out: &mut Tensor,
+        caches: &mut AuxSlot,
+    ) -> Result<()> {
+        args.x.as_mut().expect("persistent x slot").copy_from(x);
+        args.t = t_norm as f32;
+        args.keep_idx = Some(mask.clone());
+        args.caches = caches.take();
+        let info = self.backend.info();
+        if info.emits_output(&mask.variant, "caches") {
+            let shape = info.caches_shape();
+            let mut refreshed = Some(self.arena.checkout(&shape));
+            let run = self.backend.run_into(&mask.variant, args, m_out, None, Some(&mut refreshed));
+            self.arena.release_opt(args.caches.take());
+            args.keep_idx = None;
+            match run {
+                Ok(()) => {
+                    if let Some(c) = refreshed.take() {
+                        caches.install(c);
+                    }
+                    Ok(())
+                }
+                Err(e) => {
+                    self.arena.release_opt(refreshed.take());
+                    Err(e)
+                }
+            }
+        } else {
+            // declared signature without a caches output: the input caches
+            // move back untouched, still valid
+            let run = self.backend.run_into(&mask.variant, args, m_out, None, None);
+            if let Some(c) = args.caches.take() {
+                caches.install(c);
+            }
+            args.keep_idx = None;
+            run
+        }
+    }
+
     /// Run one request under `accel`, returning the sample and statistics.
     ///
     /// The step loop is zero-copy: every per-step tensor (model output,
@@ -262,8 +367,15 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         let mut x0 = Tensor::zeros(&shape);
         let mut x_next = Tensor::zeros(&shape);
         let mut y = Tensor::zeros(&shape);
-        let mut deep: Option<Tensor> = None;
-        let mut caches: Option<Tensor> = None;
+        // aux-feature slots routed through the pipeline arena: buffers are
+        // checked out here, refilled in place by the backend, and retired
+        // back to the pool at the end of the run
+        let mut deep = AuxSlot::new();
+        let mut caches = AuxSlot::new();
+        deep.ensure(&self.arena, &info.deep_shape());
+        caches.ensure(&self.arena, &info.caches_shape());
+        let full_emits_deep = info.emits_output("full", "deep");
+        let full_emits_caches = info.emits_output("full", "caches");
         // persistent model args: x is copied in place per call; cond/edge
         // cloned once per run
         let mut args = ModelArgs {
@@ -283,25 +395,38 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 n_steps: req.steps,
                 x: &x,
                 t_norm,
-                have_caches: caches.is_some(),
-                have_deep: deep.is_some(),
+                have_caches: caches.is_valid(),
+                have_deep: deep.is_valid(),
             };
-            let mut plan = accel.plan(&ctx);
-            // structural fallbacks: degraded variants need their caches
-            plan = match plan {
-                StepPlan::Shallow if deep.is_none() => StepPlan::Full,
-                StepPlan::Prune { .. } if caches.is_none() => StepPlan::Full,
-                StepPlan::SkipReuse | StepPlan::SkipExtrapolate if !has_last => StepPlan::Full,
-                p => p,
-            };
+            let planned = accel.plan(&ctx);
+            let (plan, degraded) =
+                apply_structural_fallbacks(planned, deep.is_valid(), caches.is_valid(), has_last);
+            if let Some(mode) = degraded {
+                stats.record_degraded(mode);
+            }
 
             let mut fresh = false;
             match &plan {
                 StepPlan::Full => {
                     args.x.as_mut().expect("persistent x slot").copy_from(&x);
                     args.t = t_norm as f32;
-                    self.backend
-                        .run_into("full", &args, &mut m_out, Some(&mut deep), Some(&mut caches))?;
+                    self.backend.run_into(
+                        "full",
+                        &args,
+                        &mut m_out,
+                        Some(deep.slot()),
+                        Some(caches.slot()),
+                    )?;
+                    // single full executions refresh the aux features their
+                    // signature declares (empty signatures follow the
+                    // run_into contract: full emits both); an unemitted
+                    // slot keeps its previous validity, never gaining one
+                    if full_emits_deep {
+                        deep.mark_valid();
+                    }
+                    if full_emits_caches {
+                        caches.mark_valid();
+                    }
                     fresh = true;
                     solver.x0_from_model_into(&x, &m_out, i, &mut x0);
                     solver.step_into(&x, &x0, i, &mut x_next);
@@ -313,30 +438,16 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                     // back: the shallow variant reads it but emits none
                     args.deep = deep.take();
                     let run = self.backend.run_into("shallow", &args, &mut m_out, None, None);
-                    deep = args.deep.take();
+                    if let Some(d) = args.deep.take() {
+                        deep.install(d);
+                    }
                     run?;
                     fresh = true;
                     solver.x0_from_model_into(&x, &m_out, i, &mut x0);
                     solver.step_into(&x, &x0, i, &mut x_next);
                 }
-                StepPlan::Prune { variant, keep_idx } => {
-                    args.x.as_mut().expect("persistent x slot").copy_from(&x);
-                    args.t = t_norm as f32;
-                    args.keep_idx = Some(keep_idx.clone());
-                    // input caches move into the args; the refreshed caches
-                    // (if the variant emits them) land in the slot, else the
-                    // input moves back untouched
-                    args.caches = caches.take();
-                    let run =
-                        self.backend
-                            .run_into(variant, &args, &mut m_out, None, Some(&mut caches));
-                    if caches.is_none() {
-                        caches = args.caches.take();
-                    } else {
-                        args.caches = None;
-                    }
-                    args.keep_idx = None;
-                    run?;
+                StepPlan::Prune { mask } => {
+                    self.run_prune_into(&mut args, mask, &x, t_norm, &mut m_out, &mut caches)?;
                     fresh = true;
                     solver.x0_from_model_into(&x, &m_out, i, &mut x0);
                     solver.step_into(&x, &x0, i, &mut x_next);
@@ -402,9 +513,13 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             std::mem::swap(&mut x, &mut x_next);
         }
 
+        // aux buffers go back to the pool for the next run's slots
+        deep.retire(&self.arena);
+        caches.retire(&self.arena);
         stats.wall_ms = timer.elapsed_ms();
         stats.nfe = stats.fresh_steps;
         stats.outcome = accel.outcome();
+        stats.degraded.add(&accel.planned_degradations());
         Ok(GenResult { image: x, stats })
     }
 }
@@ -436,9 +551,14 @@ mod tests {
         }
         fn plan(&mut self, ctx: &StepCtx) -> StepPlan {
             match ctx.i % 3 {
-                0 => StepPlan::SkipReuse,        // no history at i = 0
-                1 => StepPlan::Shallow,          // fine after first full
-                _ => StepPlan::Prune { variant: "prune50".into(), keep_idx: (0..8).collect() },
+                0 => StepPlan::SkipReuse, // no history at i = 0
+                1 => StepPlan::Shallow,   // fine after first full
+                _ => StepPlan::Prune {
+                    mask: Arc::new(KeepMask {
+                        variant: "prune50".into(),
+                        keep_idx: (0..8).collect(),
+                    }),
+                },
             }
         }
         fn observe(&mut self, _o: &StepObs) {}
@@ -456,6 +576,27 @@ mod tests {
         assert_eq!(r.stats.modes.len(), 9);
         // step 0 must have been forced Full (no last_out yet)
         assert_eq!(r.stats.modes[0], StepMode::Full);
+        // and the degradation was accounted against the planned mode
+        assert_eq!(r.stats.degraded.skip, 1, "SkipReuse at step 0 degraded");
+        assert_eq!(r.stats.degraded.prune, 0, "caches valid after step 0: prune ran natively");
+        assert!(r.stats.count(StepMode::Prune) > 0);
+    }
+
+    #[test]
+    fn shared_fallback_helper_owns_the_warm_cold_rule() {
+        let mask = Arc::new(KeepMask { variant: "prune50".into(), keep_idx: vec![0] });
+        let prune = StepPlan::Prune { mask };
+        // cold caches degrade with accounting; warm caches pass through
+        let (p, d) = apply_structural_fallbacks(prune.clone(), false, false, true);
+        assert_eq!((p, d), (StepPlan::Full, Some(StepMode::Prune)));
+        let (p, d) = apply_structural_fallbacks(prune.clone(), false, true, true);
+        assert_eq!((p, d), (prune, None));
+        let (p, d) = apply_structural_fallbacks(StepPlan::Shallow, false, true, true);
+        assert_eq!((p, d), (StepPlan::Full, Some(StepMode::Shallow)));
+        let (p, d) = apply_structural_fallbacks(StepPlan::SkipExtrapolate, false, false, false);
+        assert_eq!((p, d), (StepPlan::Full, Some(StepMode::SkipAm3)));
+        let (p, d) = apply_structural_fallbacks(StepPlan::Full, false, false, false);
+        assert_eq!((p, d), (StepPlan::Full, None));
     }
 
     #[test]

@@ -35,6 +35,55 @@ impl StepMode {
             StepMode::SkipLagrange => 'l',
         }
     }
+
+    /// Every mode, in glyph order (metric exposition iterates this).
+    pub const ALL: [StepMode; 6] = [
+        StepMode::Full,
+        StepMode::Prune,
+        StepMode::Shallow,
+        StepMode::SkipReuse,
+        StepMode::SkipAm3,
+        StepMode::SkipLagrange,
+    ];
+
+    /// Stable lowercase name for metric keys.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepMode::Full => "full",
+            StepMode::Prune => "prune",
+            StepMode::Shallow => "shallow",
+            StepMode::SkipReuse => "skip_reuse",
+            StepMode::SkipAm3 => "skip_am3",
+            StepMode::SkipLagrange => "skip_lagrange",
+        }
+    }
+}
+
+/// Steps structurally degraded to Full, keyed by the mode that was
+/// planned: a Prune directive whose lane had no valid attention caches, a
+/// Shallow plan without a deep feature, a skip without history. The
+/// token-wise replay acceptance bar is `prune == 0` on warmed-up cache
+/// hits — every recorded Prune step replays natively.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DegradedCounts {
+    pub prune: usize,
+    pub shallow: usize,
+    pub skip: usize,
+}
+
+impl DegradedCounts {
+    pub fn total(&self) -> usize {
+        self.prune + self.shallow + self.skip
+    }
+
+    /// Fold another set of counts in (the pipelines merge the
+    /// accelerator-reported planning degradations into the structural ones
+    /// they recorded themselves).
+    pub fn add(&mut self, other: &DegradedCounts) {
+        self.prune += other.prune;
+        self.shallow += other.shallow;
+        self.skip += other.skip;
+    }
 }
 
 /// Per-request plan-cache outcome, stamped by the pipelines from
@@ -66,6 +115,9 @@ pub struct RunStats {
     /// Plan-cache outcome of this request (hit / divergence-step /
     /// fallback), surfaced through coordinator metrics.
     pub outcome: CacheOutcome,
+    /// Structural degradations of this run (planned mode → Full), recorded
+    /// by the shared fallback rule in both execution paths.
+    pub degraded: DegradedCounts,
 }
 
 impl RunStats {
@@ -78,6 +130,7 @@ impl RunStats {
             nfe: 0,
             wall_ms: 0.0,
             outcome: CacheOutcome::default(),
+            degraded: DegradedCounts::default(),
         }
     }
 
@@ -85,6 +138,19 @@ impl RunStats {
         self.modes.push(StepMode::from_plan(plan));
         if fresh {
             self.fresh_steps += 1;
+        }
+    }
+
+    /// Account a structural degradation (the shared fallback rule rewrote
+    /// `planned` to Full for this step).
+    pub fn record_degraded(&mut self, planned: StepMode) {
+        match planned {
+            StepMode::Prune => self.degraded.prune += 1,
+            StepMode::Shallow => self.degraded.shallow += 1,
+            StepMode::SkipReuse | StepMode::SkipAm3 | StepMode::SkipLagrange => {
+                self.degraded.skip += 1
+            }
+            StepMode::Full => {}
         }
     }
 
@@ -114,15 +180,39 @@ mod tests {
         let mut s = RunStats::new("sada".into(), 4);
         s.record_step(&StepPlan::Full, true);
         s.record_step(&StepPlan::SkipExtrapolate, false);
-        s.record_step(
-            &StepPlan::Prune { variant: "prune50".into(), keep_idx: vec![0] },
-            true,
-        );
+        let mask = std::sync::Arc::new(crate::runtime::KeepMask {
+            variant: "prune50".into(),
+            keep_idx: vec![0],
+        });
+        s.record_step(&StepPlan::Prune { mask }, true);
         s.record_step(&StepPlan::SkipLagrange, false);
         assert_eq!(s.mode_trace(), "FaPl");
         assert_eq!(s.fresh_steps, 2);
         assert_eq!(s.count(StepMode::SkipLagrange), 1);
         assert!((s.skip_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degraded_counts_bucket_by_planned_mode() {
+        let mut s = RunStats::new("sada-cache".into(), 8);
+        assert_eq!(s.degraded, DegradedCounts::default());
+        s.record_degraded(StepMode::Prune);
+        s.record_degraded(StepMode::Prune);
+        s.record_degraded(StepMode::Shallow);
+        s.record_degraded(StepMode::SkipLagrange);
+        s.record_degraded(StepMode::Full); // no-op bucket
+        assert_eq!(s.degraded, DegradedCounts { prune: 2, shallow: 1, skip: 1 });
+        assert_eq!(s.degraded.total(), 4);
+    }
+
+    #[test]
+    fn mode_names_are_stable_metric_keys() {
+        for m in StepMode::ALL {
+            assert!(!m.name().is_empty());
+            assert_eq!(m.name(), m.name().to_lowercase());
+        }
+        assert_eq!(StepMode::ALL.len(), 6);
+        assert_eq!(StepMode::Prune.name(), "prune");
     }
 
     #[test]

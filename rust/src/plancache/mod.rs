@@ -17,7 +17,11 @@
 //!   re-evaluating the stability criterion at every fresh step, falls back
 //!   to the wrapped [`crate::sada::Sada`] the moment the criterion
 //!   disagrees (recording the divergence step), and inserts the freshly
-//!   observed plan on completion.
+//!   observed plan on completion. Replay is full fidelity: step-wise and
+//!   multistep-wise skips *and* token-pruned / shallow steps, the latter
+//!   carrying interned keep-masks re-verified against the live criterion's
+//!   token dots (CacheWarm lanes prefetch the attention caches they need —
+//!   see `pipeline::lanes`).
 //!
 //! Fidelity is never taken on faith: the paper's sign-based criterion is
 //! the online verifier, so a wrong plan costs one divergence, not a wrong

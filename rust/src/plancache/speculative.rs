@@ -21,6 +21,19 @@
 //!    that step on the warm inner SADA plans as if it had been in charge
 //!    all along, and the completed run's plan replaces the stale entry.
 //!
+//! Replayed plans are **full fidelity**: they carry SADA's step-wise
+//! (AM-3), multistep-wise (Lagrange) *and* token-wise sparsity. A
+//! token-pruned directive references an interned [`KeepMask`] in the
+//! stored plan ([`super::store::RecordedPlan::masks`]), and is re-verified
+//! on every fresh step against the live criterion's **token dots**: if the
+//! recorded mask fails to cover a currently-unstable token, that directive
+//! executes Full instead (a safe local substitute — unlike a wrongly
+//! honored skip, a refused prune costs one NFE, not trajectory
+//! corruption, so the rest of the plan keeps replaying). The lane engine's
+//! *CacheWarm* machinery ([`Accelerator::wants_aux_capture`]) routes the
+//! fresh step feeding a token directive to a single execution so the
+//! attention caches are captured into the lane's retained aux slots.
+//!
 //! Replay is where the NFE saving comes from: a cold SADA run pays the
 //! detection pattern — fresh/skip alternation plus the multistep streak
 //! gate — before it can skip at the multistep cadence; a verified replay
@@ -29,7 +42,9 @@
 
 use std::sync::Arc;
 
-use crate::pipeline::{Accelerator, CacheOutcome, GenRequest, StepCtx, StepObs, StepPlan};
+use crate::pipeline::{
+    Accelerator, CacheOutcome, DegradedCounts, GenRequest, KeepMask, StepCtx, StepObs, StepPlan,
+};
 use crate::sada::{Sada, SadaConfig};
 use crate::tensor::Tensor;
 
@@ -53,6 +68,13 @@ enum Mode {
     Fallback,
 }
 
+/// First fresh (model-executing) directive strictly after step `i` —
+/// skip directives execute nothing, so the features captured at step `i`
+/// are exactly what that directive will consume.
+fn next_fresh_directive(directives: &[Directive], i: usize) -> Option<Directive> {
+    directives.iter().skip(i + 1).copied().find(Directive::is_fresh)
+}
+
 pub struct SpeculativeAccel {
     inner: Sada,
     store: Arc<PlanStore>,
@@ -66,8 +88,22 @@ pub struct SpeculativeAccel {
     dots: Vec<(usize, f64)>,
     /// Per-step criterion verdicts of this run (index == step).
     verdicts: Vec<Option<bool>>,
+    /// Per-step plans this wrapper returned (index == step) — the
+    /// *pre-degradation* intent, so a run recorded through bucketed lanes
+    /// (whose Prune steps degrade for lack of caches) still records the
+    /// token directives a CacheWarm replay can honor.
+    planned: Vec<StepPlan>,
     /// Verdict of the most recent fresh criterion evaluation.
     verified_stable: Option<bool>,
+    /// Whether the next token-pruned directive's keep-mask covered the
+    /// live token dots at the latest fresh step (re-verified every fresh
+    /// step; a refused mask degrades that directive to Full).
+    prune_ok: bool,
+    /// Directives this wrapper itself degraded while planning (refused or
+    /// malformed keep-masks) — reported through
+    /// [`Accelerator::planned_degradations`] so the replayed-prune vs
+    /// degraded telemetry never loses a failed token directive.
+    refused: DegradedCounts,
     outcome: CacheOutcome,
 }
 
@@ -86,7 +122,10 @@ impl SpeculativeAccel {
             n_steps: 0,
             dots: Vec::new(),
             verdicts: Vec::new(),
+            planned: Vec::new(),
             verified_stable: None,
+            prune_ok: true,
+            refused: DegradedCounts::default(),
             outcome: CacheOutcome::Uncached,
         }
     }
@@ -113,6 +152,9 @@ impl SpeculativeAccel {
         match self.store.lookup(&key, &signs) {
             Lookup::Hit(plan) if plan.n_steps == self.n_steps => {
                 self.outcome = CacheOutcome::Hit;
+                // no live token verification has happened yet: a token
+                // directive before the first in-replay fresh step runs Full
+                self.prune_ok = false;
                 self.mode = Mode::Replaying { plan };
             }
             Lookup::Hit(_) | Lookup::Miss => {
@@ -142,11 +184,13 @@ impl SpeculativeAccel {
             return;
         }
         if let Some(key) = self.key.clone() {
-            let directives = build_directives(self.n_steps, self.inner.config(), &self.verdicts);
-            let nfe = directives.iter().filter(|d| **d == Directive::Full).count();
+            let (directives, masks) =
+                build_directives(self.n_steps, self.inner.config(), &self.verdicts, &self.planned);
+            let nfe = directives.iter().filter(|d| d.is_fresh()).count();
             let plan = RecordedPlan {
                 n_steps: self.n_steps,
                 directives,
+                masks,
                 verdicts: self.verdicts.clone(),
                 early_signs: self.observed_signs(),
                 nfe,
@@ -172,9 +216,10 @@ impl Accelerator for SpeculativeAccel {
         ));
         self.n_steps = req.steps;
         self.mode = Mode::Warming;
-        // pre-size the per-run logs: the observe path must not grow Vecs
-        // mid-run (steady-state steps stay allocation-free)
+        // pre-size the per-run logs: the observe/plan paths must not grow
+        // Vecs mid-run (steady-state steps stay allocation-free)
         self.verdicts.reserve(req.steps);
+        self.planned.reserve(req.steps);
         self.dots.reserve(EARLY_DOTS);
     }
 
@@ -186,7 +231,7 @@ impl Accelerator for SpeculativeAccel {
             Mode::Replaying { plan } => Some(plan.clone()),
             _ => None,
         };
-        match replay {
+        let out = match replay {
             None => inner_plan,
             Some(plan) => {
                 let d = plan.directives.get(ctx.i).copied().unwrap_or(Directive::Full);
@@ -207,9 +252,32 @@ impl Accelerator for SpeculativeAccel {
                             StepPlan::Full
                         }
                     }
+                    Directive::Shallow => StepPlan::Shallow,
+                    Directive::Prune { mask } => {
+                        if !self.prune_ok {
+                            // the live token dots refused the recorded mask
+                            // at the preceding fresh step: one Full step is
+                            // the safe substitute, the plan keeps replaying
+                            self.refused.prune += 1;
+                            StepPlan::Full
+                        } else {
+                            match plan.masks.get(mask as usize) {
+                                Some(m) => StepPlan::Prune { mask: m.clone() },
+                                None => {
+                                    // malformed entry: degrade, and count it
+                                    self.refused.prune += 1;
+                                    StepPlan::Full
+                                }
+                            }
+                        }
+                    }
                 }
             }
+        };
+        if self.key.is_some() {
+            self.planned.push(out.clone());
         }
+        out
     }
 
     fn observe(&mut self, obs: &StepObs) {
@@ -245,17 +313,34 @@ impl Accelerator for SpeculativeAccel {
             if obs.fresh {
                 if let Some(v) = verdict {
                     // expected verdict: the recorded one at this step, or
-                    // "stable" when the plan skips the next step
+                    // "stable" when the plan skips the next step (a skip
+                    // directive is only ever compacted out of a stable span)
                     let expected = plan.verdicts.get(obs.i).copied().flatten().or(
                         match plan.directives.get(obs.i + 1) {
-                            Some(Directive::Full) | None => None,
-                            Some(_) => Some(true),
+                            Some(Directive::SkipAm3) | Some(Directive::SkipLagrange) => Some(true),
+                            _ => None,
                         },
                     );
                     if let Some(exp) = expected {
                         if exp != v {
                             self.diverge(obs.i);
                         }
+                    }
+                }
+                // token-wise re-verification (only while still replaying):
+                // when the next fresh directive is token-pruned, the
+                // recorded keep-mask must cover every token the live
+                // criterion scores unstable at this step
+                if matches!(self.mode, Mode::Replaying { .. }) {
+                    if let Some(Directive::Prune { mask }) =
+                        next_fresh_directive(&plan.directives, obs.i)
+                    {
+                        self.prune_ok = dot.is_some()
+                            && plan
+                                .masks
+                                .get(mask as usize)
+                                .map(|m| self.inner.keep_mask_covers(m, obs.i) == Some(true))
+                                .unwrap_or(false);
                     }
                 }
             }
@@ -272,7 +357,10 @@ impl Accelerator for SpeculativeAccel {
         self.n_steps = 0;
         self.dots.clear();
         self.verdicts.clear();
+        self.planned.clear();
         self.verified_stable = None;
+        self.prune_ok = true;
+        self.refused = DegradedCounts::default();
         self.outcome = CacheOutcome::Uncached;
     }
 
@@ -280,10 +368,27 @@ impl Accelerator for SpeculativeAccel {
         self.outcome
     }
 
+    fn planned_degradations(&self) -> DegradedCounts {
+        self.refused
+    }
+
     fn plan_key(&self) -> Option<u64> {
         match (&self.mode, &self.key) {
             (Mode::Replaying { .. }, Some(key)) => Some(key.hash64()),
             _ => None,
+        }
+    }
+
+    fn wants_aux_capture(&self, i: usize) -> bool {
+        // CacheWarm: the fresh step feeding a token-pruned (or shallow)
+        // directive must run as a single so its aux features land in the
+        // lane's retained slots
+        match &self.mode {
+            Mode::Replaying { plan } => matches!(
+                next_fresh_directive(&plan.directives, i),
+                Some(Directive::Prune { .. }) | Some(Directive::Shallow)
+            ),
+            _ => false,
         }
     }
 
@@ -313,23 +418,42 @@ impl Accelerator for SpeculativeAccel {
     }
 }
 
-/// Compact the observed per-step criterion verdicts into a replayable
-/// directive sequence: boundary steps stay Full; maximal runs between
-/// consecutive *stable* evaluations (extended past the final stable
-/// evaluation — replay re-verifies online) are rewritten at the multistep
-/// cadence (fresh every `multistep_interval` steps, Lagrange reconstruction
-/// in between; AM-3 alternation when the multistep regime is ablated);
-/// everything else is Full. Token-pruned and shallow steps are never
-/// replayed: they depend on lane-local caches a warm-started request does
-/// not have, so they degrade to Full.
+/// Intern `mask` into the plan's mask table, returning its directive
+/// index. `None` only when the table would overflow `u16` (the caller
+/// degrades that step to Full).
+fn intern_mask(masks: &mut Vec<Arc<KeepMask>>, mask: &Arc<KeepMask>) -> Option<u16> {
+    if let Some(pos) = masks.iter().position(|m| Arc::ptr_eq(m, mask) || **m == **mask) {
+        return Some(pos as u16);
+    }
+    if masks.len() > u16::MAX as usize {
+        return None;
+    }
+    masks.push(mask.clone());
+    Some((masks.len() - 1) as u16)
+}
+
+/// Compact the observed run into a replayable directive sequence plus its
+/// interned keep-mask table: boundary steps stay Full; maximal runs
+/// between consecutive *stable* evaluations (extended past the final
+/// stable evaluation — replay re-verifies online) are rewritten at the
+/// multistep cadence (fresh every `multistep_interval` steps, Lagrange
+/// reconstruction in between; AM-3 alternation when the multistep regime
+/// is ablated). Uncovered interior steps replay the run's *planned* modes
+/// at full fidelity: token-pruned steps become [`Directive::Prune`] with
+/// their keep-masks interned (deduplicated by value), shallow steps become
+/// [`Directive::Shallow`] — recorded from the pre-degradation intent, so a
+/// CacheWarm replay recovers the token-wise NFE savings even when the
+/// recording run's own prune steps were degraded by cold caches.
 pub(crate) fn build_directives(
     n: usize,
     cfg: &SadaConfig,
     verdicts: &[Option<bool>],
-) -> Vec<Directive> {
+    planned: &[StepPlan],
+) -> (Vec<Directive>, Vec<Arc<KeepMask>>) {
     let mut out = vec![Directive::Full; n];
+    let mut masks: Vec<Arc<KeepMask>> = Vec::new();
     if n == 0 {
-        return out;
+        return (out, masks);
     }
     let evals: Vec<(usize, bool)> = verdicts
         .iter()
@@ -376,7 +500,25 @@ pub(crate) fn build_directives(
         }
         i = end + 1;
     }
-    out
+    // token-wise / shallow fidelity: uncovered interior steps keep the
+    // recorded degraded variants (boundary steps stay Full — the planner
+    // never degrades there, but clamp anyway against malformed inputs)
+    let t_lo = cfg.warmup.max(1);
+    for (i, slot) in out.iter_mut().enumerate().take(hi.max(t_lo)).skip(t_lo) {
+        if covered.get(i).copied().unwrap_or(false) {
+            continue;
+        }
+        match planned.get(i) {
+            Some(StepPlan::Prune { mask }) => {
+                if let Some(idx) = intern_mask(&mut masks, mask) {
+                    *slot = Directive::Prune { mask: idx };
+                }
+            }
+            Some(StepPlan::Shallow) => *slot = Directive::Shallow,
+            _ => {}
+        }
+    }
+    (out, masks)
 }
 
 #[cfg(test)]
@@ -390,15 +532,16 @@ mod tests {
     use crate::tensor::ops;
 
     fn nfe_of(d: &[Directive]) -> usize {
-        d.iter().filter(|x| **x == Directive::Full).count()
+        d.iter().filter(|x| x.is_fresh()).count()
     }
 
     #[test]
     fn directives_all_full_when_never_stable() {
         let cfg = SadaConfig::default();
         let v = vec![Some(false); 50];
-        let d = build_directives(50, &cfg, &v);
+        let (d, masks) = build_directives(50, &cfg, &v, &[]);
         assert!(d.iter().all(|x| *x == Directive::Full));
+        assert!(masks.is_empty());
     }
 
     #[test]
@@ -408,7 +551,7 @@ mod tests {
         for i in (4..48).step_by(2) {
             v[i] = Some(true); // stable at every other step, like cold SADA
         }
-        let d = build_directives(50, &cfg, &v);
+        let (d, _) = build_directives(50, &cfg, &v, &[]);
         // boundaries stay full
         for (i, di) in d.iter().enumerate().take(4) {
             assert_eq!(*di, Directive::Full, "step {i}");
@@ -434,13 +577,59 @@ mod tests {
         for i in (22..38).step_by(2) {
             v[i] = Some(true);
         }
-        let d = build_directives(40, &cfg, &v);
+        let (d, _) = build_directives(40, &cfg, &v, &[]);
         assert_eq!(d[20], Directive::Full);
         assert_eq!(d[21], Directive::Full, "gap between spans stays full");
         cfg.enable_multistep = false;
-        let d = build_directives(40, &cfg, &v);
+        let (d, _) = build_directives(40, &cfg, &v, &[]);
         assert!(d.iter().all(|x| *x != Directive::SkipLagrange));
         assert!(d.iter().any(|x| *x == Directive::SkipAm3));
+    }
+
+    #[test]
+    fn directives_keep_recorded_token_steps_with_interned_masks() {
+        let cfg = SadaConfig::default(); // warmup 3, tail 1
+        let n = 20;
+        let v: Vec<Option<bool>> = vec![Some(false); n]; // nothing covered
+        let mask_a = Arc::new(KeepMask { variant: "prune50".into(), keep_idx: vec![0, 3] });
+        // same value, different allocation: must intern to one entry
+        let mask_a2 = Arc::new(KeepMask { variant: "prune50".into(), keep_idx: vec![0, 3] });
+        let mask_b = Arc::new(KeepMask { variant: "prune75".into(), keep_idx: vec![1] });
+        let mut planned = vec![StepPlan::Full; n];
+        planned[6] = StepPlan::Prune { mask: mask_a.clone() };
+        planned[9] = StepPlan::Prune { mask: mask_a2 };
+        planned[12] = StepPlan::Prune { mask: mask_b.clone() };
+        planned[14] = StepPlan::Shallow;
+        planned[0] = StepPlan::Prune { mask: mask_b.clone() }; // boundary: clamped
+        planned[n - 1] = StepPlan::Prune { mask: mask_b }; // tail: clamped
+        let (d, masks) = build_directives(n, &cfg, &v, &planned);
+        assert_eq!(d[6], Directive::Prune { mask: 0 });
+        assert_eq!(d[9], Directive::Prune { mask: 0 }, "value-equal masks intern once");
+        assert_eq!(d[12], Directive::Prune { mask: 1 });
+        assert_eq!(d[14], Directive::Shallow);
+        assert_eq!(d[0], Directive::Full, "warmup boundary stays Full");
+        assert_eq!(d[n - 1], Directive::Full, "tail boundary stays Full");
+        assert_eq!(masks.len(), 2);
+        assert_eq!(masks[0].as_ref(), mask_a.as_ref());
+        assert_eq!(nfe_of(&d), n, "a skip-free plan is all fresh: prune/shallow count as NFE");
+    }
+
+    #[test]
+    fn stable_spans_win_over_recorded_prunes() {
+        // a step inside a compacted stable span keeps its cadence skip even
+        // if the recorded run pruned there (the span evidence is stronger)
+        let cfg = SadaConfig::default(); // interval 3 => F l l
+        let n = 30;
+        let mut v: Vec<Option<bool>> = vec![None; n];
+        for i in (4..28).step_by(2) {
+            v[i] = Some(true);
+        }
+        let mask = Arc::new(KeepMask { variant: "prune50".into(), keep_idx: vec![2] });
+        let mut planned = vec![StepPlan::Full; n];
+        planned[5] = StepPlan::Prune { mask };
+        let (d, masks) = build_directives(n, &cfg, &v, &planned);
+        assert_eq!(d[5], Directive::SkipLagrange);
+        assert!(masks.is_empty(), "covered prune never interns its mask");
     }
 
     fn request(seed: u64, steps: usize, guidance: f32) -> GenRequest {
@@ -477,6 +666,12 @@ mod tests {
         let plan = store.get(&key).unwrap();
         assert_eq!(plan.n_steps, 50);
         assert!(plan.nfe < 50);
+        // every recorded token directive's mask index resolves
+        for d in &plan.directives {
+            if let Directive::Prune { mask } = d {
+                assert!((*mask as usize) < plan.masks.len(), "dangling mask index");
+            }
+        }
     }
 
     #[test]
@@ -544,6 +739,7 @@ mod tests {
         let poisoned = RecordedPlan {
             n_steps: honest.n_steps,
             directives: vec![Directive::SkipLagrange; honest.n_steps],
+            masks: Vec::new(),
             verdicts: vec![None; honest.n_steps],
             early_signs: honest.early_signs.iter().map(|(i, s)| (*i, !*s)).collect(),
             nfe: 0,

@@ -12,22 +12,43 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
+use crate::runtime::KeepMask;
+
 use super::signature::RequestKey;
 
 /// Number of lock stripes (power of two, small: plan entries are tiny).
 pub const N_SHARDS: usize = 8;
 
-/// One replayable step directive. Recorded plans never prescribe
-/// token-pruned or shallow steps — those depend on lane-local caches that a
-/// warm-started request does not have — so replay degrades them to Full.
+/// One replayable step directive — the *full* recorded plan, covering
+/// SADA's step-wise, multistep-wise and token-wise sparsity. Token-pruned
+/// steps carry an index into the plan's interned keep-mask table
+/// ([`RecordedPlan::masks`]) so the directive stays `Copy` and replaying
+/// lanes share one `Arc<KeepMask>` per distinct mask instead of cloning
+/// index vectors per lane per step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Directive {
-    /// Execute the model.
+    /// Execute the full model.
     Full,
     /// SADA step-wise AM-3 extrapolation (Thm 3.5/3.6).
     SkipAm3,
     /// SADA multistep Lagrange reconstruction (Thm 3.7).
     SkipLagrange,
+    /// DeepCache-style shallow execution against the cached deep feature
+    /// (requires a CacheWarm lane; degrades to Full when the deep feature
+    /// is invalid).
+    Shallow,
+    /// Token-pruned execution (SS3.5): `mask` indexes
+    /// [`RecordedPlan::masks`]. Replay re-verifies the mask against the
+    /// live criterion's token dots at the preceding fresh step and
+    /// diverges when a currently-unstable token is not covered.
+    Prune { mask: u16 },
+}
+
+impl Directive {
+    /// Whether this directive executes the model (costs one NFE).
+    pub fn is_fresh(&self) -> bool {
+        matches!(self, Directive::Full | Directive::Shallow | Directive::Prune { .. })
+    }
 }
 
 /// A recorded (and compacted) plan for one trajectory class.
@@ -36,6 +57,10 @@ pub struct RecordedPlan {
     pub n_steps: usize,
     /// Per-step directive; boundary steps are always [`Directive::Full`].
     pub directives: Vec<Directive>,
+    /// Interned keep-masks referenced by [`Directive::Prune`] — one entry
+    /// per *distinct* mask of the recorded run, shared by `Arc` with every
+    /// replaying lane and its `ModelArgs`.
+    pub masks: Vec<Arc<KeepMask>>,
     /// Stability-criterion verdicts of the recorded run, per step (`None`
     /// where the criterion was not evaluated). Replay cross-checks fresh
     /// verdicts against these.
@@ -43,7 +68,8 @@ pub struct RecordedPlan {
     /// Signs of the first criterion dots, as (step, dot >= 0) pairs — the
     /// verification half of the signature (see `signature` module docs).
     pub early_signs: Vec<(usize, bool)>,
-    /// Model executions this plan prescribes (count of Full directives).
+    /// Model executions this plan prescribes (count of fresh directives:
+    /// Full, Shallow and Prune).
     pub nfe: usize,
 }
 
@@ -249,10 +275,20 @@ mod tests {
         RecordedPlan {
             n_steps: 50,
             directives: vec![Directive::Full; 50],
+            masks: Vec::new(),
             verdicts: vec![None; 50],
             early_signs: signs.to_vec(),
             nfe: 50,
         }
+    }
+
+    #[test]
+    fn fresh_directives_are_the_nfe_carriers() {
+        assert!(Directive::Full.is_fresh());
+        assert!(Directive::Shallow.is_fresh());
+        assert!(Directive::Prune { mask: 0 }.is_fresh());
+        assert!(!Directive::SkipAm3.is_fresh());
+        assert!(!Directive::SkipLagrange.is_fresh());
     }
 
     #[test]

@@ -77,6 +77,34 @@ impl ModelInfo {
             .with_context(|| format!("model {} has no variant {name:?}", self.name))
     }
 
+    /// Shape of the DeepCache deep-feature aux output of a single full
+    /// run: `[2, n_tokens, d]` (the K/V pair of the deep block).
+    pub fn deep_shape(&self) -> [usize; 3] {
+        [2, self.n_tokens, self.d]
+    }
+
+    /// Shape of the per-layer attention-caches aux output of a single
+    /// full/prune run: `[n_blocks, 2, n_tokens, d]`. The pipelines size
+    /// their arena-pooled cache slots from this, so a backend's in-place
+    /// refresh hits the retained buffer instead of allocating.
+    pub fn caches_shape(&self) -> [usize; 4] {
+        [self.n_blocks, 2, self.n_tokens, self.d]
+    }
+
+    /// Whether `variant` declares `name` among its outputs. Variants with
+    /// an *empty* outputs list (the mock's minimal manifest entries) are
+    /// trusted to follow the `run_into` emission contract — absence of
+    /// signature information never disables a feature — while a variant
+    /// with a declared signature that omits the feature is known not to
+    /// emit it, so the pipelines keep their aux-slot validity honest
+    /// instead of marking a never-written buffer live.
+    pub fn emits_output(&self, variant: &str, name: &str) -> bool {
+        match self.variants.get(variant) {
+            Some(v) if !v.outputs.is_empty() => v.outputs.iter().any(|o| o.name == name),
+            _ => true,
+        }
+    }
+
     /// Keep-count for a prune bucket variant name like "prune50".
     pub fn prune_variants(&self) -> Vec<(&str, usize)> {
         self.variants
@@ -354,6 +382,22 @@ mod tests {
         assert_eq!(mi.variant("full").unwrap().outputs.len(), 3);
         assert_eq!(mi.prune_variants().len(), 2);
         assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn emits_output_reads_declared_signatures_and_trusts_empty_ones() {
+        let m = test_manifest();
+        let mi = m.model("mock_eps").unwrap();
+        // declared signatures are authoritative
+        assert!(mi.emits_output("full", "deep"));
+        assert!(mi.emits_output("full", "caches"));
+        assert!(mi.emits_output("prune75", "caches"));
+        assert!(!mi.emits_output("prune75", "deep"));
+        assert!(!mi.emits_output("shallow", "caches"));
+        // unknown variants and empty output lists follow the contract
+        assert!(mi.emits_output("nope", "caches"));
+        assert_eq!(mi.deep_shape(), [2, 16, 16]);
+        assert_eq!(mi.caches_shape(), [3, 2, 16, 16]);
     }
 
     #[test]

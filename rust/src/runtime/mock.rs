@@ -286,13 +286,10 @@ impl ModelBackend for GmBackend {
         };
         let mut out = Tensor::zeros(&shape);
         self.eps_into(variant, args, out.data_mut())?;
-        let n = self.info.n_tokens;
-        let d = self.info.d;
-        let nb = self.info.n_blocks;
         Ok(ModelOut {
             out,
-            deep: Some(Tensor::zeros(&[2, n, d])),
-            caches: Some(Tensor::zeros(&[nb, 2, n, d])),
+            deep: Some(Tensor::zeros(&self.info.deep_shape())),
+            caches: Some(Tensor::zeros(&self.info.caches_shape())),
         })
     }
 
@@ -318,14 +315,11 @@ impl ModelBackend for GmBackend {
             }
         }
         self.eps_into(variant, args, out.data_mut())?;
-        let n = self.info.n_tokens;
-        let d = self.info.d;
-        let nb = self.info.n_blocks;
         if let Some(slot) = deep {
-            Self::aux_zeros_into(slot, &[2, n, d]);
+            Self::aux_zeros_into(slot, &self.info.deep_shape());
         }
         if let Some(slot) = caches {
-            Self::aux_zeros_into(slot, &[nb, 2, n, d]);
+            Self::aux_zeros_into(slot, &self.info.caches_shape());
         }
         Ok(())
     }

@@ -14,6 +14,7 @@ pub mod mock;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -21,6 +22,20 @@ use anyhow::{bail, Context, Result};
 pub use manifest::{Dtype, IoSpec, Manifest, ModelInfo, VariantInfo};
 
 use crate::tensor::Tensor;
+
+/// A token keep-mask for a compiled prune variant: the variant name plus
+/// the kept token indices (ascending, length == the variant's `n_keep`).
+///
+/// Masks are shared by `Arc` between the planner ([`crate::sada`]), the
+/// plan cache's recorded directives (interned per stored plan), the
+/// pipelines' [`crate::pipeline::StepPlan::Prune`] and [`ModelArgs`], so a
+/// replaying lane never clones the index vector per step — handing a mask
+/// to the runtime is a reference-count bump.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KeepMask {
+    pub variant: String,
+    pub keep_idx: Vec<i32>,
+}
 
 /// Named arguments for one model execution; the runtime assembles the
 /// positional argument list from the variant's manifest signature.
@@ -31,7 +46,7 @@ pub struct ModelArgs {
     pub cond: Option<Tensor>,
     pub gs: f32,
     pub edge: Option<Tensor>,
-    pub keep_idx: Option<Vec<i32>>,
+    pub keep_idx: Option<Arc<KeepMask>>,
     pub deep: Option<Tensor>,
     pub caches: Option<Tensor>,
 }
@@ -59,6 +74,14 @@ pub trait ModelBackend {
     /// variant actually emits that feature; pass `None` to discard a
     /// feature the caller does not track (e.g. bucketed lane launches,
     /// whose batched aux layouts are not per-lane sliceable).
+    ///
+    /// Emission contract the pipelines' aux-slot validity bits rely on
+    /// (see `pipeline` / `tensor::arena::AuxSlot`): `full` singles refresh
+    /// **both** `deep` and `caches`; `prune` variants refresh `caches`
+    /// (SS3.5's cache-assisted pruning rewrites the kept tokens' caches);
+    /// `shallow` emits neither. A backend may write into a slot's retained
+    /// buffer in place when its shape already matches — the caller treats
+    /// a passed slot as fully refreshed on success.
     ///
     /// The default delegates to [`ModelBackend::run`] and copies —
     /// correct for any backend. Host-math backends override it to write
@@ -215,14 +238,14 @@ impl Runtime {
                 }
                 ("keep_idx", Dtype::I32) => {
                     let k = args.keep_idx.as_ref().context("args.keep_idx missing")?;
-                    if k.len() != spec.numel() {
+                    if k.keep_idx.len() != spec.numel() {
                         bail!(
                             "keep_idx length {} != expected {}",
-                            k.len(),
+                            k.keep_idx.len(),
                             spec.numel()
                         );
                     }
-                    xla::Literal::vec1(k.as_slice())
+                    xla::Literal::vec1(k.keep_idx.as_slice())
                 }
                 (name, dt) => bail!("unhandled input {name:?} ({dt:?})"),
             };

@@ -20,6 +20,7 @@ pub fn stable(err: &Tensor, d2y: &Tensor) -> bool {
 /// Per-token criterion scores. Images are [1, H, W, C]; tokens are p x p
 /// patches in the same row-major order as python `patchify`. Returns one
 /// score per token: negative = stable (prunable), positive = unstable.
+/// Allocating wrapper around [`token_scores_into`].
 pub fn token_scores(
     err: &Tensor,
     d2y: &Tensor,
@@ -28,12 +29,31 @@ pub fn token_scores(
     c: usize,
     patch: usize,
 ) -> Vec<f64> {
+    let mut scores = Vec::new();
+    token_scores_into(err, d2y, h, w, c, patch, &mut scores);
+    scores
+}
+
+/// [`token_scores`] into a reused accumulator (resized in place — no
+/// allocation once warm): the form SADA's observe path and the plan
+/// cache's per-step keep-mask re-verification both use, so token-wise
+/// checks stay off the allocator on steady-state steps.
+pub fn token_scores_into(
+    err: &Tensor,
+    d2y: &Tensor,
+    h: usize,
+    w: usize,
+    c: usize,
+    patch: usize,
+    scores: &mut Vec<f64>,
+) {
     debug_assert_eq!(err.len(), h * w * c);
     let gh = h / patch;
     let gw = w / patch;
     let e = err.data();
     let g = d2y.data();
-    let mut scores = vec![0.0f64; gh * gw];
+    scores.resize(gh * gw, 0.0);
+    scores.fill(0.0);
     for row in 0..h {
         for col in 0..w {
             let tok = (row / patch) * gw + (col / patch);
@@ -45,7 +65,6 @@ pub fn token_scores(
             scores[tok] += acc;
         }
     }
-    scores
 }
 
 /// Fraction of tokens with stable (negative) scores.
@@ -118,6 +137,20 @@ mod tests {
         assert_eq!(scores[0], 0.0);
         assert_eq!(scores[2], 0.0);
         assert_eq!(scores[3], 0.0);
+    }
+
+    #[test]
+    fn token_scores_into_reuses_and_matches() {
+        let mut rng = crate::rng::Rng::new(4);
+        let e = Tensor::from_rng(&mut rng, &[4 * 4 * 3]);
+        let d = Tensor::from_rng(&mut rng, &[4 * 4 * 3]);
+        let want = token_scores(&e, &d, 4, 4, 3, 2);
+        let mut scratch = vec![99.0f64; 1]; // wrong size + stale contents
+        token_scores_into(&e, &d, 4, 4, 3, 2, &mut scratch);
+        assert_eq!(scratch, want);
+        // second pass through the same (now right-sized) scratch
+        token_scores_into(&e, &d, 4, 4, 3, 2, &mut scratch);
+        assert_eq!(scratch, want);
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod stepwise;
 pub mod tokenwise;
 
 pub use config::SadaConfig;
-pub use tokenwise::{PruneBucket, TokenDecision};
+pub use tokenwise::{KeepMask, PruneBucket, TokenDecision};
 
 use crate::pipeline::{Accelerator, GenRequest, StepCtx, StepObs, StepPlan};
 use crate::runtime::ModelInfo;
@@ -58,6 +58,13 @@ pub struct Sada {
     scratch_xhat: Option<Tensor>,
     scratch_d2y: Option<Tensor>,
     scratch_err: Option<Tensor>,
+    /// Per-token criterion scores of the latest fresh evaluation, reused
+    /// across steps (token-wise refinement + replay keep-mask checks).
+    scratch_scores: Vec<f64>,
+    /// Step index `scratch_scores` currently holds scores for, so the
+    /// replay-side keep-mask check can reuse the pass the observe path
+    /// already ran instead of recomputing it.
+    scores_step: Option<usize>,
     pub diags: Vec<StepDiag>,
 }
 
@@ -91,6 +98,8 @@ impl Sada {
             scratch_xhat: None,
             scratch_d2y: None,
             scratch_err: None,
+            scratch_scores: Vec::new(),
+            scores_step: None,
             diags: Vec::new(),
         }
     }
@@ -137,6 +146,33 @@ impl Sada {
         ops::lincomb2_into(1.0, obs.x_next, -1.0, xhat, err);
         let dot = ops::dot(err, d2y);
         Some((dot < 0.0, dot))
+    }
+
+    /// Whether `mask` covers every token the fresh criterion evaluation at
+    /// `step` scored unstable (score >= 0) — the replay-side validity
+    /// check for a recorded token-prune directive: a keep-mask that misses
+    /// a currently-unstable token would freeze exactly the tokens the
+    /// criterion says must refresh. Only meaningful immediately after a
+    /// fresh step whose criterion ran (the caller gates on the step's
+    /// diagnostic); `None` when no criterion scratch is available. Reuses
+    /// the token scores the observe path already computed for `step` when
+    /// available (the unstable-verdict token-wise refinement), else runs
+    /// the scoring pass once into the shared scratch.
+    pub fn keep_mask_covers(&mut self, mask: &KeepMask, step: usize) -> Option<bool> {
+        if self.scores_step != Some(step) {
+            let err = self.scratch_err.as_ref()?;
+            let d2y = self.scratch_d2y.as_ref()?;
+            let [h, w, c] = self.img;
+            criterion::token_scores_into(err, d2y, h, w, c, self.patch, &mut self.scratch_scores);
+            self.scores_step = Some(step);
+        }
+        Some(
+            self.scratch_scores
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| **s >= 0.0)
+                .all(|(t, _)| mask.keep_idx.binary_search(&(t as i32)).is_ok()),
+        )
     }
 }
 
@@ -212,20 +248,27 @@ impl Accelerator for Sada {
                     }
                     if self.cfg.enable_tokenwise && !self.buckets.is_empty() {
                         let [h, w, c] = self.img;
-                        // err/d2y were left in the criterion scratch
-                        let err = self.scratch_err.as_ref().expect("criterion just ran");
-                        let d2y = self.scratch_d2y.as_ref().expect("criterion just ran");
-                        let scores = criterion::token_scores(err, d2y, h, w, c, self.patch);
-                        diag.stable_fraction = Some(criterion::stable_fraction(&scores));
+                        // err/d2y were left in the criterion scratch; the
+                        // token scores land in their own reused scratch
+                        criterion::token_scores_into(
+                            self.scratch_err.as_ref().expect("criterion just ran"),
+                            self.scratch_d2y.as_ref().expect("criterion just ran"),
+                            h,
+                            w,
+                            c,
+                            self.patch,
+                            &mut self.scratch_scores,
+                        );
+                        self.scores_step = Some(obs.i);
+                        diag.stable_fraction =
+                            Some(criterion::stable_fraction(&self.scratch_scores));
                         self.pending = match tokenwise::select_bucket(
-                            &scores,
+                            &self.scratch_scores,
                             &self.buckets,
                             self.cfg.token_full_threshold,
                         ) {
                             TokenDecision::Full => StepPlan::Full,
-                            TokenDecision::Prune { variant, keep_idx } => {
-                                StepPlan::Prune { variant, keep_idx }
-                            }
+                            TokenDecision::Prune(mask) => StepPlan::Prune { mask },
                         };
                     } else {
                         self.pending = StepPlan::Full;
@@ -255,6 +298,7 @@ impl Accelerator for Sada {
         self.in_multistep = false;
         self.ms_anchor = 0;
         self.spacing_set = false;
+        self.scores_step = None;
         self.diags.clear();
     }
 

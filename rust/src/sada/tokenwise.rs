@@ -6,6 +6,16 @@
 //! tokens (keeping the *most unstable* tokens when truncation is needed) —
 //! the fixed-shape discipline production serving systems use for dynamic
 //! sparsity on accelerators (DESIGN.md SS2).
+//!
+//! Decisions are emitted as `Arc`-shared [`KeepMask`]s: the same mask
+//! object flows from the planner through [`crate::pipeline::StepPlan`]
+//! into [`crate::runtime::ModelArgs`] (and, when recorded, into the plan
+//! cache's interned directive table) without ever cloning the index
+//! vector.
+
+use std::sync::Arc;
+
+pub use crate::runtime::KeepMask;
 
 /// A compiled prune bucket: variant name + its keep count.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -19,8 +29,8 @@ pub struct PruneBucket {
 pub enum TokenDecision {
     /// Too many unstable tokens: run fully.
     Full,
-    /// Run `variant` keeping `keep_idx` (ascending order).
-    Prune { variant: String, keep_idx: Vec<i32> },
+    /// Run the mask's variant keeping `keep_idx` (ascending order).
+    Prune(Arc<KeepMask>),
 }
 
 /// Choose the smallest bucket with n_keep >= number of unstable tokens.
@@ -51,7 +61,7 @@ pub fn select_bucket(
         .map(|i| *i as i32)
         .collect();
     keep.sort_unstable();
-    TokenDecision::Prune { variant: bucket.variant.clone(), keep_idx: keep }
+    TokenDecision::Prune(Arc::new(KeepMask { variant: bucket.variant.clone(), keep_idx: keep }))
 }
 
 #[cfg(test)]
@@ -71,15 +81,15 @@ mod tests {
         scores[3] = 2.0;
         scores[9] = 1.0;
         match select_bucket(&scores, &buckets(), 0.85) {
-            TokenDecision::Prune { variant, keep_idx } => {
-                assert_eq!(variant, "prune50");
-                assert_eq!(keep_idx.len(), 8);
-                assert!(keep_idx.contains(&3));
-                assert!(keep_idx.contains(&9));
+            TokenDecision::Prune(mask) => {
+                assert_eq!(mask.variant, "prune50");
+                assert_eq!(mask.keep_idx.len(), 8);
+                assert!(mask.keep_idx.contains(&3));
+                assert!(mask.keep_idx.contains(&9));
                 // ascending order for deterministic gathers
-                let mut sorted = keep_idx.clone();
+                let mut sorted = mask.keep_idx.clone();
                 sorted.sort_unstable();
-                assert_eq!(keep_idx, sorted);
+                assert_eq!(mask.keep_idx, sorted);
             }
             other => panic!("expected prune, got {other:?}"),
         }
@@ -92,7 +102,7 @@ mod tests {
             *s = 1.0;
         }
         match select_bucket(&scores, &buckets(), 0.85) {
-            TokenDecision::Prune { variant, .. } => assert_eq!(variant, "prune75"),
+            TokenDecision::Prune(mask) => assert_eq!(mask.variant, "prune75"),
             other => panic!("expected prune75, got {other:?}"),
         }
         for s in scores.iter_mut().take(15) {
@@ -106,9 +116,9 @@ mod tests {
         // even fully-stable steps keep n_keep tokens fresh (cache refresh)
         let scores = vec![-1.0f64; 16];
         match select_bucket(&scores, &buckets(), 0.85) {
-            TokenDecision::Prune { variant, keep_idx } => {
-                assert_eq!(variant, "prune50");
-                assert_eq!(keep_idx.len(), 8);
+            TokenDecision::Prune(mask) => {
+                assert_eq!(mask.variant, "prune50");
+                assert_eq!(mask.keep_idx.len(), 8);
             }
             other => panic!("{other:?}"),
         }

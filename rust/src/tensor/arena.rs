@@ -119,6 +119,85 @@ impl TensorArena {
     }
 }
 
+/// A retained auxiliary-feature slot (DeepCache deep feature, per-layer
+/// attention caches): an optional buffer plus a **validity bit**.
+///
+/// The bit is what lets the pipelines keep a lane's aux buffer alive
+/// across executions that cannot refresh it — a bucketed `full_b{n}`
+/// launch [`AuxSlot::invalidate`]s the slot (batched aux layouts are not
+/// per-lane sliceable) instead of dropping the buffer, so the next single
+/// execution refills the same memory in place through
+/// [`crate::runtime::ModelBackend::run_into`]. Buffers are sourced from
+/// and retired to the owning pipeline's [`TensorArena`], closing the
+/// aux-slot allocation churn in mixed single/bucket and token-pruned
+/// schedules.
+#[derive(Default)]
+pub struct AuxSlot {
+    buf: Option<Tensor>,
+    valid: bool,
+}
+
+impl AuxSlot {
+    pub fn new() -> AuxSlot {
+        AuxSlot::default()
+    }
+
+    /// Whether the buffer holds a live feature (the pipelines' former
+    /// `Option::is_some` warm/cold signal).
+    pub fn is_valid(&self) -> bool {
+        self.valid && self.buf.is_some()
+    }
+
+    /// Mark contents stale, retaining the buffer for in-place refill.
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+
+    /// The raw slot for [`crate::runtime::ModelBackend::run_into`]; call
+    /// [`AuxSlot::mark_valid`] after a successful run of a variant that
+    /// emits this feature.
+    pub fn slot(&mut self) -> &mut Option<Tensor> {
+        &mut self.buf
+    }
+
+    /// Declare the buffer refreshed by the backend (valid iff present).
+    pub fn mark_valid(&mut self) {
+        self.valid = self.buf.is_some();
+    }
+
+    /// Move the buffer out (model-args input); the slot becomes invalid.
+    pub fn take(&mut self) -> Option<Tensor> {
+        self.valid = false;
+        self.buf.take()
+    }
+
+    /// Install a freshly written buffer; the slot becomes valid.
+    pub fn install(&mut self, t: Tensor) {
+        self.buf = Some(t);
+        self.valid = true;
+    }
+
+    /// Ensure a buffer of `shape` is present (checked out from `arena`
+    /// when absent or mis-shaped); contents stay stale/invalid.
+    pub fn ensure(&mut self, arena: &TensorArena, shape: &[usize]) {
+        let fits = matches!(&self.buf, Some(t) if t.shape() == shape);
+        if !fits {
+            if let Some(old) = self.buf.take() {
+                arena.release(old);
+            }
+            self.buf = Some(arena.checkout(shape));
+        }
+        self.valid = false;
+    }
+
+    /// Release the buffer back to `arena` and clear validity (end of a
+    /// run: the next run's lanes check the same buffers out again).
+    pub fn retire(&mut self, arena: &TensorArena) {
+        self.valid = false;
+        arena.release_opt(self.buf.take());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +247,41 @@ mod tests {
         }
         assert_eq!(arena.pooled(), MAX_POOLED_PER_SHAPE);
         assert_eq!(arena.stats().dropped, 5);
+    }
+
+    #[test]
+    fn aux_slot_validity_lifecycle() {
+        let arena = TensorArena::new();
+        let mut slot = AuxSlot::new();
+        assert!(!slot.is_valid());
+        slot.ensure(&arena, &[2, 3]);
+        assert!(!slot.is_valid(), "ensure provides a buffer, not validity");
+        assert!(slot.slot().is_some());
+        slot.mark_valid();
+        assert!(slot.is_valid());
+        // invalidate retains the buffer for in-place refill
+        slot.invalidate();
+        assert!(!slot.is_valid());
+        assert!(slot.slot().is_some());
+        // ensure with a matching shape keeps the same buffer (no checkout)
+        let before = arena.stats().checkouts;
+        slot.ensure(&arena, &[2, 3]);
+        assert_eq!(arena.stats().checkouts, before);
+        // take moves the buffer out and drops validity
+        slot.mark_valid();
+        let t = slot.take().unwrap();
+        assert!(!slot.is_valid());
+        slot.install(t);
+        assert!(slot.is_valid());
+        // retire returns the buffer to the arena pool
+        slot.retire(&arena);
+        assert!(!slot.is_valid());
+        assert_eq!(arena.pooled(), 1);
+        // a mis-shaped ensure swaps the retained buffer through the arena
+        slot.ensure(&arena, &[4]);
+        slot.ensure(&arena, &[2, 3]);
+        assert_eq!(slot.slot().as_ref().unwrap().shape(), &[2, 3]);
+        assert_eq!(arena.pooled(), 1, "the [4] buffer went back to the pool");
     }
 
     #[test]

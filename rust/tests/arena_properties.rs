@@ -13,8 +13,10 @@ use std::sync::Arc;
 
 use sada::baselines::{AdaptiveDiffusion, DeepCache, TeaCache};
 use sada::pipeline::lanes::FnFactory;
-use sada::pipeline::{Accelerator, GenRequest, NoAccel, Pipeline};
-use sada::plancache::{schedule_fingerprint, PlanStore, SpeculativeAccel};
+use sada::pipeline::{Accelerator, GenRequest, KeepMask, NoAccel, Pipeline};
+use sada::plancache::{
+    schedule_fingerprint, Directive, PlanStore, RecordedPlan, SpeculativeAccel,
+};
 use sada::runtime::mock::GmBackend;
 use sada::runtime::ModelBackend;
 use sada::sada::Sada;
@@ -157,6 +159,85 @@ fn mixed_accelerator_lanes_stay_bit_identical() {
             kinds[k]
         );
         assert_eq!(lane.stats.mode_trace(), seq.stats.mode_trace(), "mixed lane {k}");
+    }
+}
+
+#[test]
+fn always_diverging_prune_heavy_plans_fall_back_bit_identically() {
+    // a poisoned store whose entries carry token-pruned + Lagrange
+    // directives but contradictory early signs: every lane diverges at
+    // lookup, and the fallback must be bit-identical to plain SADA — a
+    // wrong prune-heavy plan can never corrupt output, it only costs the
+    // replay. Unbucketed backend: plain-SADA lanes are bit-identical to
+    // sequential there, so the referee is exact.
+    let backend = GmBackend::new(21);
+    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let steps = 30;
+    let reqs = reqs_for(3, steps, 71);
+    let fp = schedule_fingerprint(SolverKind::DpmPP.name(), &Schedule::default_ddpm());
+    let poisoned = Arc::new(PlanStore::new(64));
+    let mask = Arc::new(KeepMask { variant: "prune50".into(), keep_idx: (0..8).collect() });
+    for req in &reqs {
+        // discover the honest key + early signs on a scratch store
+        let scratch = Arc::new(PlanStore::new(64));
+        let mut probe = SpeculativeAccel::new(
+            Sada::with_default(backend.info(), steps),
+            scratch.clone(),
+            &backend.info().name,
+            fp,
+        );
+        pipe.generate(req, &mut probe).unwrap();
+        let key = probe.request_key().unwrap().clone();
+        let honest = match scratch.get(&key) {
+            Some(p) => p,
+            None => continue, // run never consulted the cache: inert
+        };
+        let mut directives = vec![Directive::Full; steps];
+        for (i, d) in directives.iter_mut().enumerate().take(steps - 2).skip(6) {
+            *d = if i % 2 == 0 {
+                Directive::Prune { mask: 0 }
+            } else {
+                Directive::SkipLagrange
+            };
+        }
+        poisoned.insert(
+            key,
+            RecordedPlan {
+                n_steps: steps,
+                directives,
+                masks: vec![mask.clone()],
+                verdicts: vec![None; steps],
+                early_signs: honest.early_signs.iter().map(|(i, s)| (*i, !*s)).collect(),
+                nfe: 0,
+            },
+        );
+    }
+    let store_f = poisoned.clone();
+    let info = backend.info().clone();
+    let factory = FnFactory(move |_lane: usize| -> Box<dyn Accelerator> {
+        Box::new(SpeculativeAccel::new(
+            Sada::with_default(&info, steps),
+            store_f.clone(),
+            &info.name,
+            fp,
+        ))
+    });
+    let lanes = pipe.generate_lanes(&reqs, &factory).unwrap();
+    for (k, (lane, req)) in lanes.iter().zip(&reqs).enumerate() {
+        assert_ne!(
+            lane.stats.outcome,
+            sada::pipeline::CacheOutcome::Hit,
+            "lane {k} must not replay contradicted early signs"
+        );
+        let mut plain = Sada::with_default(backend.info(), steps);
+        let solo = pipe.generate(req, &mut plain).unwrap();
+        assert_eq!(
+            lane.image.data(),
+            solo.image.data(),
+            "lane {k}: a diverging prune-heavy cache changed the image"
+        );
+        assert_eq!(lane.stats.nfe, solo.stats.nfe, "lane {k} NFE");
+        assert_eq!(lane.stats.mode_trace(), solo.stats.mode_trace(), "lane {k} trace");
     }
 }
 

@@ -97,7 +97,10 @@ fn wrong_input_shape_is_rejected_before_execution() {
                 t: 0.5,
                 cond: Some(Tensor::zeros(&[1, 32])),
                 gs: 1.0,
-                keep_idx: Some(vec![0, 1, 2]),
+                keep_idx: Some(std::sync::Arc::new(sada::runtime::KeepMask {
+                    variant: "prune50".into(),
+                    keep_idx: vec![0, 1, 2],
+                })),
                 caches: Some(Tensor::zeros(&[5, 2, 64, 64])),
                 ..Default::default()
             },

@@ -62,7 +62,7 @@ fn token_prune_variant_executes() {
     let backend = rt.model_backend("sd2_tiny").unwrap();
     let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
     let req = request(&rt, 2, 30);
-    use sada::pipeline::{Accelerator, StepCtx, StepObs, StepPlan};
+    use sada::pipeline::{Accelerator, KeepMask, StepCtx, StepObs, StepPlan};
     struct ForcePrune;
     impl Accelerator for ForcePrune {
         fn name(&self) -> String {
@@ -70,7 +70,12 @@ fn token_prune_variant_executes() {
         }
         fn plan(&mut self, ctx: &StepCtx) -> StepPlan {
             if ctx.i % 2 == 1 && ctx.have_caches {
-                StepPlan::Prune { variant: "prune50".into(), keep_idx: (0..32).collect() }
+                StepPlan::Prune {
+                    mask: std::sync::Arc::new(KeepMask {
+                        variant: "prune50".into(),
+                        keep_idx: (0..32).collect(),
+                    }),
+                }
             } else {
                 StepPlan::Full
             }
