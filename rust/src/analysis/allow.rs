@@ -1,0 +1,187 @@
+//! `// xtask: allow(cat)` directive coverage.
+//!
+//! Four scopes, resolved purely from lines and token structure:
+//! * **line** — the directive's own line and the next one;
+//! * **statement** — a directive inside a function body covers through the
+//!   end of the statement that follows it (its terminating `;` or `,` at
+//!   the starting nesting depth), so one annotation covers a multi-line
+//!   call;
+//! * **fn-header** — a directive within a function's signature span (or up
+//!   to two lines above the `fn`) covers the whole body;
+//! * **region** — `allow(cat, begin)` ... `allow(cat, end)` covers every
+//!   line in between (init blocks, results assembly).
+//!
+//! Coverage is per `(file, category)`; the alloc pass additionally treats
+//! covered lines as call-graph gates (see `graph::reachable`).
+
+use std::collections::{HashMap, HashSet};
+
+use super::lexer::{AllowDirective, AllowKind, Tok, TokKind};
+use super::parser::FnItem;
+
+pub type Cover = HashMap<(String, String), HashSet<u32>>;
+
+fn opens(t: &Tok) -> bool {
+    t.punct("(") || t.punct("[") || t.punct("{")
+}
+
+fn closes(t: &Tok) -> bool {
+    t.punct(")") || t.punct("]") || t.punct("}")
+}
+
+/// Lines covered by a statement-scope allow inside `f`.
+fn stmt_cover(f: &FnItem, allow_line: u32) -> Vec<u32> {
+    let toks: Vec<&Tok> = f.body.iter().filter(|t| t.kind != TokKind::Chr).collect();
+    let start = match toks.iter().position(|t| t.line > allow_line) {
+        Some(s) => s,
+        None => return vec![allow_line, allow_line + 1],
+    };
+    let mut depth = 0i32;
+    let mut last = toks[start].line;
+    for t in &toks[start..] {
+        last = last.max(t.line);
+        if opens(t) {
+            depth += 1;
+        } else if closes(t) {
+            depth -= 1;
+            if depth < 0 {
+                break;
+            }
+        } else if (t.punct(";") || t.punct(",")) && depth == 0 {
+            break;
+        }
+    }
+    (allow_line..=last).collect()
+}
+
+/// Build `(file, cat) -> covered lines` from all four allow scopes.
+pub fn build_cover(
+    functions: &[FnItem],
+    allows: &HashMap<String, Vec<AllowDirective>>,
+) -> Cover {
+    let mut cover: Cover = HashMap::new();
+    let mut fn_spans: HashMap<&str, Vec<(&FnItem, u32, u32)>> = HashMap::new();
+    for f in functions {
+        let lines: Vec<u32> = f.body.iter().map(|t| t.line).collect();
+        let lo = lines.iter().copied().min().unwrap_or(f.sig_open_line);
+        let hi = lines.iter().copied().max().unwrap_or(f.sig_open_line);
+        fn_spans.entry(f.file.as_str()).or_default().push((f, lo, hi));
+    }
+    for (file, al) in allows {
+        let mut stack: HashMap<&str, Vec<u32>> = HashMap::new();
+        for d in al {
+            let key = (file.clone(), d.cat.clone());
+            match d.kind {
+                AllowKind::Begin => stack.entry(d.cat.as_str()).or_default().push(d.line),
+                AllowKind::End => {
+                    if let Some(b) = stack.entry(d.cat.as_str()).or_default().pop() {
+                        cover.entry(key).or_default().extend(b..=d.line);
+                    }
+                }
+                AllowKind::Line => {
+                    let set = cover.entry(key).or_default();
+                    set.insert(d.line);
+                    set.insert(d.line + 1);
+                    for (f, lo, hi) in fn_spans.get(file.as_str()).into_iter().flatten() {
+                        // fn-header scope: over the signature (or up to two
+                        // lines above `fn`) covers the whole body
+                        if f.line.saturating_sub(2) <= d.line
+                            && d.line <= f.sig_open_line
+                            && d.line < *lo
+                        {
+                            set.extend(f.line..=*hi);
+                        } else if *lo <= d.line && d.line <= *hi {
+                            // statement scope inside the body
+                            set.extend(stmt_cover(f, d.line));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    cover
+}
+
+/// Count allow directives of `cat` (regions count once, via their `begin`).
+pub fn count_allows(allows: &HashMap<String, Vec<AllowDirective>>, cat: &str) -> usize {
+    allows
+        .values()
+        .flatten()
+        .filter(|d| d.cat == cat && d.kind != AllowKind::End)
+        .count()
+}
+
+pub fn covered(cover: &Cover, file: &str, cat: &str, line: u32) -> bool {
+    cover
+        .get(&(file.to_string(), cat.to_string()))
+        .is_some_and(|s| s.contains(&line))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::super::parser::parse_items;
+    use super::*;
+
+    fn build(src: &str) -> (Vec<FnItem>, HashMap<String, Vec<AllowDirective>>) {
+        let (toks, al) = lex(src);
+        let mut fns = Vec::new();
+        parse_items(&toks, "demo/sample.rs", &mut fns);
+        let mut allows = HashMap::new();
+        allows.insert("demo/sample.rs".to_string(), al);
+        (fns, allows)
+    }
+
+    #[test]
+    fn statement_scope_covers_a_multiline_call() {
+        let (fns, allows) = build(
+            "fn f() {\n\
+             \x20   // xtask: allow(panic): both scratches are Some here\n\
+             \x20   g(\n\
+             \x20       a.expect(\"x\"),\n\
+             \x20       b.expect(\"y\"),\n\
+             \x20   );\n\
+             \x20   late();\n\
+             }",
+        );
+        let cover = build_cover(&fns, &allows);
+        for ln in 2..=6 {
+            assert!(covered(&cover, "demo/sample.rs", "panic", ln), "line {ln}");
+        }
+        assert!(!covered(&cover, "demo/sample.rs", "panic", 7));
+    }
+
+    #[test]
+    fn fn_header_scope_covers_whole_body() {
+        let (fns, allows) = build(
+            "// xtask: allow(alloc): end-of-run recording\n\
+             fn finish() {\n\
+             \x20   let v = data.to_vec();\n\
+             \x20   keep(v);\n\
+             }\n\
+             fn other() { nope(); }",
+        );
+        let cover = build_cover(&fns, &allows);
+        assert!(covered(&cover, "demo/sample.rs", "alloc", 3));
+        assert!(covered(&cover, "demo/sample.rs", "alloc", 4));
+        assert!(!covered(&cover, "demo/sample.rs", "alloc", 6));
+    }
+
+    #[test]
+    fn regions_cover_between_begin_and_end() {
+        let (fns, allows) = build(
+            "fn f() {\n\
+             \x20   // xtask: allow(alloc, begin): per-run init\n\
+             \x20   let a = Vec::new();\n\
+             \x20   let b = Vec::new();\n\
+             \x20   // xtask: allow(alloc, end)\n\
+             \x20   let c = Vec::new();\n\
+             }",
+        );
+        let cover = build_cover(&fns, &allows);
+        assert!(covered(&cover, "demo/sample.rs", "alloc", 3));
+        assert!(covered(&cover, "demo/sample.rs", "alloc", 4));
+        assert!(!covered(&cover, "demo/sample.rs", "alloc", 6));
+        assert_eq!(count_allows(&allows, "alloc"), 1);
+    }
+}

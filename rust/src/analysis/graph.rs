@@ -1,0 +1,270 @@
+//! Name-based, over-approximating call graph + reachability.
+//!
+//! Edges are resolved by bare name (method calls and free calls) or by
+//! `Qual::name` for qualified paths (`Self::` maps to the caller's own impl
+//! type). Over-approximation is deliberate: a lint that misses a real
+//! hot-path allocation because the graph was too precise is worse than one
+//! that needs an `// xtask: allow(...)` on a false edge. Two carve-outs keep
+//! the noise tractable:
+//! * method calls spelled like std alloc/panic constructs (`.clone()`,
+//!   `.unwrap()`, ...) never create edges to same-named in-crate functions —
+//!   they are reported as constructs by the passes instead;
+//! * edges launched from allow-covered lines can be gated off (so an
+//!   annotated init region does not pull its callees into the hot cone).
+
+use std::collections::{HashMap, HashSet};
+
+use super::lexer::{Tok, TokKind};
+use super::parser::{is_keyword, FnItem};
+use super::passes::{ALLOC_METHODS, PANIC_METHODS};
+
+/// Control-flow idents that look like calls when followed by `(`.
+const CTRL: &[&str] = &["if", "while", "for", "match", "return", "loop", "in", "else", "let", "move", "fn"];
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum EventKind {
+    Call,
+    Macro,
+    Index,
+}
+
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub kind: EventKind,
+    pub name: String,
+    pub line: u32,
+    pub qual: Option<String>,
+    pub is_method: bool,
+}
+
+/// Extract call / macro / slice-index events from a function body.
+pub fn body_events(body: &[Tok]) -> Vec<Event> {
+    let toks: Vec<&Tok> = body.iter().filter(|t| t.kind != TokKind::Chr).collect();
+    let mut out = Vec::new();
+    for (idx, t) in toks.iter().enumerate() {
+        if t.punct("(") && idx > 0 {
+            let p = toks[idx - 1];
+            if p.kind == TokKind::Ident && !CTRL.contains(&p.text.as_str()) {
+                let mut qual = None;
+                let mut is_method = false;
+                if idx >= 2 && toks[idx - 2].punct(".") {
+                    is_method = true;
+                } else if idx >= 4 && toks[idx - 2].punct(":") && toks[idx - 3].punct(":") {
+                    let q = toks[idx - 4];
+                    if q.kind == TokKind::Ident {
+                        qual = Some(q.text.clone());
+                    }
+                }
+                out.push(Event {
+                    kind: EventKind::Call,
+                    name: p.text.clone(),
+                    line: t.line,
+                    qual,
+                    is_method,
+                });
+            }
+        } else if t.punct("!") && idx > 0 && toks[idx - 1].kind == TokKind::Ident {
+            if let Some(nxt) = toks.get(idx + 1) {
+                if nxt.punct("(") || nxt.punct("[") || nxt.punct("{") {
+                    out.push(Event {
+                        kind: EventKind::Macro,
+                        name: toks[idx - 1].text.clone(),
+                        line: t.line,
+                        qual: None,
+                        is_method: false,
+                    });
+                }
+            }
+        } else if t.punct("[") && idx > 0 {
+            let p = toks[idx - 1];
+            let exprish = (p.kind == TokKind::Ident && !is_keyword(&p.text))
+                || p.punct(")")
+                || p.punct("]");
+            if exprish {
+                out.push(Event {
+                    kind: EventKind::Index,
+                    name: String::new(),
+                    line: t.line,
+                    qual: None,
+                    is_method: false,
+                });
+            }
+        }
+    }
+    out
+}
+
+pub struct Indexes {
+    pub by_name: HashMap<String, Vec<usize>>,
+    pub by_qname: HashMap<String, Vec<usize>>,
+}
+
+pub fn index_functions(functions: &[FnItem]) -> Indexes {
+    let mut by_name: HashMap<String, Vec<usize>> = HashMap::new();
+    let mut by_qname: HashMap<String, Vec<usize>> = HashMap::new();
+    for (ix, f) in functions.iter().enumerate() {
+        by_name.entry(f.name.clone()).or_default().push(ix);
+        by_qname.entry(f.qname.clone()).or_default().push(ix);
+    }
+    Indexes { by_name, by_qname }
+}
+
+/// Resolve `f`'s outgoing edges to `(callee index, call line)` pairs.
+pub fn resolve_calls(f: &FnItem, idx: &Indexes) -> Vec<(usize, u32)> {
+    let mut out = Vec::new();
+    let own_type = f.qname.rsplit_once("::").map(|(t, _)| t).unwrap_or("");
+    for ev in body_events(&f.body) {
+        if ev.kind != EventKind::Call {
+            continue;
+        }
+        // std alloc/panic-shaped method calls are constructs, not edges
+        if ev.is_method
+            && (ALLOC_METHODS.contains(&ev.name.as_str())
+                || PANIC_METHODS.contains(&ev.name.as_str()))
+        {
+            continue;
+        }
+        if let Some(q) = &ev.qual {
+            let q = if q == "Self" { own_type } else { q.as_str() };
+            if let Some(tgts) = idx.by_qname.get(&format!("{q}::{}", ev.name)) {
+                for &t in tgts {
+                    out.push((t, ev.line));
+                }
+            }
+            continue;
+        }
+        if let Some(tgts) = idx.by_name.get(&ev.name) {
+            for &t in tgts {
+                out.push((t, ev.line));
+            }
+        }
+    }
+    // nested items run from the enclosing scope
+    for q in &f.nested {
+        if let Some(tgts) = idx.by_qname.get(q) {
+            for &t in tgts {
+                out.push((t, f.line));
+            }
+        }
+    }
+    out
+}
+
+fn file_matches(file: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| file.starts_with(p) || file == *p)
+}
+
+/// Functions reachable from `roots` (matched as full qname or `::`-suffix).
+/// `stop` names are not traversed through; `exempt_files` are never entered;
+/// `gate` (file -> allowed lines) drops edges launched from covered lines.
+pub fn reachable(
+    functions: &[FnItem],
+    idx: &Indexes,
+    roots: &[&str],
+    stop: &HashSet<&str>,
+    exempt_files: &[&str],
+    gate: Option<&HashMap<String, HashSet<u32>>>,
+) -> HashSet<usize> {
+    let mut seen: HashSet<usize> = HashSet::new();
+    let mut work: Vec<usize> = Vec::new();
+    for r in roots {
+        for (ix, f) in functions.iter().enumerate() {
+            if f.qname == *r || f.qname.ends_with(&format!("::{r}")) {
+                work.push(ix);
+            }
+        }
+    }
+    while let Some(ix) = work.pop() {
+        if !seen.insert(ix) {
+            continue;
+        }
+        let f = &functions[ix];
+        let empty = HashSet::new();
+        let gated = gate
+            .and_then(|g| g.get(&f.file))
+            .unwrap_or(&empty);
+        for (tgt, ln) in resolve_calls(f, idx) {
+            if gated.contains(&ln) {
+                continue;
+            }
+            let tf = &functions[tgt];
+            if tf.is_test
+                || stop.contains(tf.name.as_str())
+                || file_matches(&tf.file, exempt_files)
+            {
+                continue;
+            }
+            if !seen.contains(&tgt) {
+                work.push(tgt);
+            }
+        }
+    }
+    seen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::super::parser::parse_items;
+    use super::*;
+
+    fn build(src: &str) -> Vec<FnItem> {
+        let (toks, _) = lex(src);
+        let mut out = Vec::new();
+        parse_items(&toks, "demo/sample.rs", &mut out);
+        out
+    }
+
+    #[test]
+    fn events_distinguish_calls_macros_indexing() {
+        let fns = build("fn f(v: &[u32]) { g(); v.h(); vec![1]; let _ = v[0]; }");
+        let evs = body_events(&fns[0].body);
+        let kinds: Vec<EventKind> = evs.iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&EventKind::Call));
+        assert!(kinds.contains(&EventKind::Macro));
+        assert!(kinds.contains(&EventKind::Index));
+        assert!(evs.iter().any(|e| e.name == "h" && e.is_method));
+    }
+
+    #[test]
+    fn self_qualified_calls_resolve_to_own_type() {
+        let fns = build(
+            "struct T; impl T { fn a(&self) { Self::b(); } fn b() { Vec::<u8>::new(); } }",
+        );
+        let idx = index_functions(&fns);
+        let a = fns.iter().position(|f| f.qname == "T::a").unwrap();
+        let callees: Vec<&str> = resolve_calls(&fns[a], &idx)
+            .iter()
+            .map(|(t, _)| fns[*t].qname.as_str())
+            .collect();
+        assert!(callees.contains(&"T::b"), "{callees:?}");
+    }
+
+    #[test]
+    fn alloc_shaped_method_calls_do_not_create_edges() {
+        // `.to_string()` must not pull in an unrelated in-crate to_string
+        let fns = build(
+            "struct J; impl J { fn to_string(&self) -> String { String::new() } }\n\
+             fn hot(x: u32) { let _ = x.to_string(); }",
+        );
+        let idx = index_functions(&fns);
+        let hot = fns.iter().position(|f| f.name == "hot").unwrap();
+        assert!(resolve_calls(&fns[hot], &idx).is_empty());
+    }
+
+    #[test]
+    fn gated_lines_stop_traversal() {
+        let fns = build("fn root() { init(); }\nfn init() { work(); }\nfn work() {}");
+        let idx = index_functions(&fns);
+        let all = reachable(&fns, &idx, &["sample::root"], &HashSet::new(), &[], None);
+        assert_eq!(all.len(), 3);
+        let mut gate = HashMap::new();
+        let root_line = fns.iter().find(|f| f.name == "root").unwrap().line;
+        gate.insert(
+            "demo/sample.rs".to_string(),
+            [root_line].into_iter().collect::<HashSet<u32>>(),
+        );
+        let gated = reachable(&fns, &idx, &["sample::root"], &HashSet::new(), &[], Some(&gate));
+        assert_eq!(gated.len(), 1, "init edge launched from a covered line");
+    }
+}

@@ -1,0 +1,249 @@
+//! Minimal Rust lexer for the invariant analyzer: just enough structure to
+//! find items, calls, macros and indexing without a real grammar. Comments
+//! and string/char literals are collapsed (their contents can never create
+//! findings), lifetimes are dropped (so `'a` never reads as a char literal),
+//! and `// xtask: allow(...)` directives are captured with their lines.
+
+/// Token kinds the downstream passes distinguish.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Chr,
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is(&self, kind: TokKind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+
+    pub fn punct(&self, text: &str) -> bool {
+        self.is(TokKind::Punct, text)
+    }
+
+    pub fn ident(&self, text: &str) -> bool {
+        self.is(TokKind::Ident, text)
+    }
+}
+
+/// How far an `// xtask: allow(cat)` directive reaches (see `allow.rs`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AllowKind {
+    /// `allow(cat)` — its own line, the next line, a following statement,
+    /// or (placed over a signature) the whole function.
+    Line,
+    /// `allow(cat, begin)` — opens a region.
+    Begin,
+    /// `allow(cat, end)` — closes the innermost open region of `cat`.
+    End,
+}
+
+#[derive(Clone, Debug)]
+pub struct AllowDirective {
+    pub line: u32,
+    pub cat: String,
+    pub kind: AllowKind,
+    pub reason: String,
+}
+
+/// Parse the payload of a `//` comment into an allow directive, if any.
+/// Grammar: `xtask: allow(<cat>[, begin|end])[: <reason>]`.
+fn parse_allow(comment: &str, line: u32) -> Option<AllowDirective> {
+    let rest = comment.trim_start_matches('/').trim_start();
+    let rest = rest.strip_prefix("xtask:")?.trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let inner = &rest[..close];
+    let tail = &rest[close + 1..];
+    let mut parts = inner.splitn(2, ',');
+    let cat = parts.next()?.trim();
+    if cat.is_empty() || !cat.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+        return None;
+    }
+    let kind = match parts.next().map(|s| s.trim()) {
+        None => AllowKind::Line,
+        Some("begin") => AllowKind::Begin,
+        Some("end") => AllowKind::End,
+        Some(_) => return None,
+    };
+    let reason = tail.trim_start().strip_prefix(':').unwrap_or("").trim().to_string();
+    Some(AllowDirective { line, cat: cat.to_string(), kind, reason })
+}
+
+/// Lex `src` into tokens + allow directives.
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<AllowDirective>) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut allows = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let push = |toks: &mut Vec<Tok>, kind: TokKind, text: &str, line: u32| {
+        toks.push(Tok { kind, text: text.to_string(), line });
+    };
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+        } else if b[i..].starts_with(b"//") {
+            let j = src[i..].find('\n').map(|o| i + o).unwrap_or(n);
+            if let Some(d) = parse_allow(&src[i..j], line) {
+                allows.push(d);
+            }
+            i = j;
+        } else if b[i..].starts_with(b"/*") {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i..].starts_with(b"/*") {
+                    depth += 1;
+                    i += 2;
+                } else if b[i..].starts_with(b"*/") {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == b'"' || b[i..].starts_with(b"b\"") {
+            if c == b'b' {
+                i += 1;
+            }
+            i += 1;
+            while i < n {
+                if b[i] == b'\\' {
+                    i += 2;
+                } else if b[i] == b'"' {
+                    i += 1;
+                    break;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            push(&mut toks, TokKind::Str, "\"\"", line);
+        } else if b[i..].starts_with(b"r\"")
+            || b[i..].starts_with(b"r#")
+            || b[i..].starts_with(b"br\"")
+            || b[i..].starts_with(b"br#")
+        {
+            let mut j = i + if b[i] == b'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                j += 1;
+                let mut closer = String::from("\"");
+                closer.push_str(&"#".repeat(hashes));
+                let k = src[j..].find(&closer).map(|o| j + o).unwrap_or(n);
+                line += src[i..k].matches('\n').count() as u32;
+                i = (k + closer.len()).min(n);
+                push(&mut toks, TokKind::Str, "\"\"", line);
+            } else {
+                // plain ident that happens to start with r/br
+                let mut j = i;
+                while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+                push(&mut toks, TokKind::Ident, &src[i..j], line);
+                i = j;
+            }
+        } else if c == b'\'' {
+            // char literal vs lifetime
+            if i + 2 < n && b[i + 1] == b'\\' {
+                let j = src[i + 2..].find('\'').map(|o| i + 2 + o);
+                i = j.map(|j| j + 1).unwrap_or(n);
+                push(&mut toks, TokKind::Chr, "' '", line);
+            } else if i + 2 < n && b[i + 2] == b'\'' {
+                i += 3;
+                push(&mut toks, TokKind::Chr, "' '", line);
+            } else {
+                // lifetime: skip the tick and the label
+                let mut j = i + 1;
+                while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+                i = j;
+            }
+        } else if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i;
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            push(&mut toks, TokKind::Ident, &src[i..j], line);
+            i = j;
+        } else if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'.' || b[j] == b'_') {
+                // stop at `.` not followed by a digit: `1..n` and method
+                // calls on literals are separate tokens
+                if b[j] == b'.' && !(j + 1 < n && b[j + 1].is_ascii_digit()) {
+                    break;
+                }
+                j += 1;
+            }
+            push(&mut toks, TokKind::Num, &src[i..j], line);
+            i = j;
+        } else {
+            push(&mut toks, TokKind::Punct, &src[i..i + 1], line);
+            i += 1;
+        }
+    }
+    (toks, allows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_comments_lifetimes_collapse() {
+        let (toks, _) = lex("fn f<'a>(x: &'a str) { let c = 'x'; // \"not a string\"\n let s = \"a'b\"; }");
+        assert!(toks.iter().any(|t| t.ident("fn")));
+        assert!(toks.iter().filter(|t| t.kind == TokKind::Str).count() == 1);
+        assert!(toks.iter().filter(|t| t.kind == TokKind::Chr).count() == 1);
+        // the lifetime never lexes as an unterminated char literal
+        assert!(toks.iter().all(|t| t.text != "'a"));
+    }
+
+    #[test]
+    fn allow_directives_parse_all_forms() {
+        let (_, al) = lex(concat!(
+            "// xtask: allow(alloc): init only\n",
+            "// xtask: allow(panic, begin): region\n",
+            "// xtask: allow(panic, end)\n",
+            "// xtask: allow(nope, middle)\n", // bad kind: ignored
+        ));
+        assert_eq!(al.len(), 3);
+        assert_eq!((al[0].line, al[0].kind), (1, AllowKind::Line));
+        assert_eq!(al[0].reason, "init only");
+        assert_eq!((al[1].line, al[1].kind), (2, AllowKind::Begin));
+        assert_eq!((al[2].line, al[2].kind), (3, AllowKind::End));
+    }
+
+    #[test]
+    fn raw_strings_and_numbers() {
+        let (toks, _) = lex("let x = r#\"raw \" body\"#; let y = 1.5e3; let r2 = 0..n;");
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Str).count(), 1);
+        assert!(toks.iter().any(|t| t.kind == TokKind::Num && t.text == "0"));
+    }
+}

@@ -1,0 +1,250 @@
+//! In-repo invariant analyzer.
+//!
+//! Four passes over a hand-rolled token-level parse of the crate (no `syn`,
+//! no new dependencies — the container toolchain is frozen):
+//!
+//! 1. **hot_alloc** — nothing reachable from the registered hot-loop roots
+//!    may allocate (`vec!`, `Vec::new`, `.clone()`, ...), modulo counted
+//!    `// xtask: allow(alloc)` annotations;
+//! 2. **into_pairing** — every `<name>` with a `<name>_into` twin must be a
+//!    thin delegating wrapper;
+//! 3. **lock_order** — lock acquisition order must be acyclic in the
+//!    coordinator/plan-store, and no blocking call may run under a held
+//!    let-bound guard;
+//! 4. **panic_safety** — no unwrap/expect/panic-macros (or, in threading
+//!    files, slice indexing) reachable from worker-thread entry points.
+//!
+//! Run via `cargo run -p xtask -- analyze` (see `rust/xtask/`), which exits
+//! non-zero on findings and writes `ANALYSIS.json`.
+
+pub mod allow;
+pub mod graph;
+pub mod lexer;
+pub mod parser;
+pub mod passes;
+
+use std::collections::HashMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use allow::{build_cover, count_allows};
+use graph::index_functions;
+use lexer::AllowDirective;
+use parser::{parse_items, FnItem};
+use passes::{pass_hot_alloc, pass_into_pairing, pass_lock_order, pass_panic_safety, Finding};
+
+pub struct PassSummary {
+    pub name: &'static str,
+    pub findings: usize,
+    pub allowed: usize,
+    /// Pass-specific size: cone size for hot_alloc/panic_safety, pair count
+    /// for into_pairing, lock-edge count for lock_order.
+    pub meta: usize,
+}
+
+pub struct Report {
+    pub files_analyzed: usize,
+    pub functions: usize,
+    pub test_functions: usize,
+    pub findings: Vec<Finding>,
+    pub allowed: Vec<Finding>,
+    pub summaries: Vec<PassSummary>,
+    pub alloc_allows: usize,
+    pub panic_allows: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable rendering for terminal / CI logs.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "analyzed {} files, {} functions ({} test)\n",
+            self.files_analyzed, self.functions, self.test_functions
+        ));
+        for s in &self.summaries {
+            let what = match s.name {
+                "hot_alloc" | "panic_safety" => "cone",
+                "into_pairing" => "pairs",
+                _ => "edges",
+            };
+            out.push_str(&format!(
+                "  {:<13} {} findings, {} allowed, {} {}\n",
+                s.name, s.findings, s.allowed, s.meta, what
+            ));
+        }
+        out.push_str(&format!(
+            "  allow directives: {} alloc, {} panic\n",
+            self.alloc_allows, self.panic_allows
+        ));
+        if self.findings.is_empty() {
+            out.push_str("OK: no invariant violations\n");
+        } else {
+            out.push_str(&format!("\n{} violations:\n", self.findings.len()));
+            for f in &self.findings {
+                out.push_str(&format!(
+                    "  [{}] {}:{} in {}: {}\n",
+                    f.pass, f.file, f.line, f.function, f.message
+                ));
+            }
+        }
+        out
+    }
+
+    /// Machine-readable `ANALYSIS.json` (hand-rolled: no serde in-tree).
+    pub fn to_json(&self, root: &str) -> String {
+        fn esc(s: &str) -> String {
+            let mut o = String::with_capacity(s.len());
+            for c in s.chars() {
+                match c {
+                    '"' => o.push_str("\\\""),
+                    '\\' => o.push_str("\\\\"),
+                    '\n' => o.push_str("\\n"),
+                    '\t' => o.push_str("\\t"),
+                    c if (c as u32) < 0x20 => o.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => o.push(c),
+                }
+            }
+            o
+        }
+        fn items(list: &[Finding]) -> String {
+            list.iter()
+                .map(|f| {
+                    format!(
+                        "    {{\"pass\": \"{}\", \"file\": \"{}\", \"line\": {}, \"function\": \"{}\", \"message\": \"{}\"}}",
+                        f.pass,
+                        esc(&f.file),
+                        f.line,
+                        esc(&f.function),
+                        esc(&f.message)
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join(",\n")
+        }
+        let passes = self
+            .summaries
+            .iter()
+            .map(|s| {
+                format!(
+                    "    \"{}\": {{\"findings\": {}, \"allowed\": {}, \"meta\": {}}}",
+                    s.name, s.findings, s.allowed, s.meta
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n");
+        format!(
+            "{{\n  \"version\": 1,\n  \"root\": \"{}\",\n  \"files_analyzed\": {},\n  \"functions\": {},\n  \"test_functions\": {},\n  \"allow_directives\": {{\"alloc\": {}, \"panic\": {}}},\n  \"passes\": {{\n{}\n  }},\n  \"findings\": [\n{}\n  ],\n  \"allowed\": [\n{}\n  ]\n}}\n",
+            esc(root),
+            self.files_analyzed,
+            self.functions,
+            self.test_functions,
+            self.alloc_allows,
+            self.panic_allows,
+            passes,
+            items(&self.findings),
+            items(&self.allowed)
+        )
+    }
+}
+
+/// Analyze in-memory `(repo-relative path, source)` pairs. This is the core
+/// entry point; `analyze_crate` feeds it from disk, and the fixture tests
+/// feed it synthetic files.
+pub fn analyze_sources(files: &[(String, String)]) -> Report {
+    let mut functions: Vec<FnItem> = Vec::new();
+    let mut allows: HashMap<String, Vec<AllowDirective>> = HashMap::new();
+    for (path, src) in files {
+        let (toks, al) = lexer::lex(src);
+        parse_items(&toks, path, &mut functions);
+        if !al.is_empty() {
+            allows.insert(path.clone(), al);
+        }
+    }
+    let idx = index_functions(&functions);
+    let cover = build_cover(&functions, &allows);
+    let results = [
+        ("hot_alloc", pass_hot_alloc(&functions, &idx, &cover)),
+        ("into_pairing", pass_into_pairing(&functions, &idx, &cover)),
+        ("lock_order", pass_lock_order(&functions, &idx, &cover)),
+        ("panic_safety", pass_panic_safety(&functions, &idx, &cover)),
+    ];
+    let mut findings = Vec::new();
+    let mut allowed = Vec::new();
+    let mut summaries = Vec::new();
+    for (name, r) in results {
+        summaries.push(PassSummary {
+            name,
+            findings: r.findings.len(),
+            allowed: r.allowed.len(),
+            meta: r.meta,
+        });
+        findings.extend(r.findings);
+        allowed.extend(r.allowed);
+    }
+    let test_functions = functions.iter().filter(|f| f.is_test).count();
+    Report {
+        files_analyzed: files.len(),
+        functions: functions.len(),
+        test_functions,
+        findings,
+        allowed,
+        summaries,
+        alloc_allows: count_allows(&allows, "alloc"),
+        panic_allows: count_allows(&allows, "panic"),
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Analyze every `.rs` file under `src_dir` (paths reported relative to it).
+pub fn analyze_crate(src_dir: &Path) -> io::Result<Report> {
+    let mut paths = Vec::new();
+    collect_rs(src_dir, &mut paths)?;
+    let mut files = Vec::new();
+    for p in paths {
+        let rel = p
+            .strip_prefix(src_dir)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push((rel, fs::read_to_string(&p)?));
+    }
+    Ok(analyze_sources(&files))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes_and_renders() {
+        let files = vec![(
+            "demo/sample.rs".to_string(),
+            "fn f() { let s = \"x\"; }".to_string(),
+        )];
+        let r = analyze_sources(&files);
+        assert!(r.clean());
+        let j = r.to_json("rust/src");
+        assert!(j.contains("\"version\": 1"));
+        assert!(j.contains("\"hot_alloc\""));
+        assert!(r.render_text().contains("OK: no invariant violations"));
+    }
+}

@@ -1,0 +1,293 @@
+//! Item-level parse: walk the token stream recursively, collecting every
+//! `fn` with its qualified name (`Type::name` for impl/trait methods,
+//! `file_stem::name` for free functions), body tokens, and test/trait
+//! markers. `#[cfg(test)]` modules, `#[test]` functions and items nested in
+//! test scopes are marked so the passes can skip them.
+
+use super::lexer::{Tok, TokKind};
+
+const KEYWORDS: &[&str] = &[
+    "as", "break", "const", "continue", "crate", "dyn", "else", "enum", "extern",
+    "false", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod",
+    "move", "mut", "pub", "ref", "return", "self", "Self", "static", "struct",
+    "super", "trait", "true", "type", "unsafe", "use", "where", "while",
+];
+
+pub fn is_keyword(s: &str) -> bool {
+    KEYWORDS.contains(&s)
+}
+
+#[derive(Debug)]
+pub struct FnItem {
+    /// `Type::name` or `file_stem::name`.
+    pub qname: String,
+    /// Bare function name.
+    pub name: String,
+    /// Repo-relative file path.
+    pub file: String,
+    /// Line of the `fn` keyword.
+    pub line: u32,
+    /// Body tokens (between the braces, exclusive).
+    pub body: Vec<Tok>,
+    pub is_test: bool,
+    pub in_trait: bool,
+    /// Line of the body-opening `{` (the signature spans `line..=this`).
+    pub sig_open_line: u32,
+    /// Qualified names of items nested inside this body (guard structs
+    /// with Drop impls, local helper fns) — executed from this scope.
+    pub nested: Vec<String>,
+}
+
+/// `i` points at the opening delimiter; return the index just past its match.
+pub fn match_delim(toks: &[Tok], mut i: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0i32;
+    while i < toks.len() {
+        if toks[i].punct(open) {
+            depth += 1;
+        } else if toks[i].punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// If `toks[i]` is `<`, skip the balanced generic list (best effort: bail at
+/// a `{`, which means the `<` was a comparison).
+fn skip_generics(toks: &[Tok], mut i: usize) -> usize {
+    if i < toks.len() && toks[i].punct("<") {
+        let mut depth = 0i32;
+        let start = i;
+        while i < toks.len() {
+            if toks[i].punct("<") {
+                depth += 1;
+            } else if toks[i].punct(">") {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            } else if toks[i].punct("{") {
+                return start;
+            }
+            i += 1;
+        }
+    }
+    i
+}
+
+fn file_stem(file: &str) -> String {
+    let base = file.rsplit('/').next().unwrap_or(file);
+    base.strip_suffix(".rs").unwrap_or(base).to_string()
+}
+
+/// Parse all items in `toks`, appending found functions to `out`.
+pub fn parse_items(toks: &[Tok], file: &str, out: &mut Vec<FnItem>) {
+    parse_scope(toks, file, out, None, false, false);
+}
+
+fn parse_scope(
+    toks: &[Tok],
+    file: &str,
+    out: &mut Vec<FnItem>,
+    ctx: Option<&str>,
+    in_test: bool,
+    in_trait: bool,
+) {
+    let stem = file_stem(file);
+    let mut i = 0usize;
+    let mut pending_attrs: Vec<String> = Vec::new();
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.punct("#") {
+            // attribute: #[...] or #![...]
+            let mut j = i + 1;
+            if j < toks.len() && toks[j].punct("!") {
+                j += 1;
+            }
+            if j < toks.len() && toks[j].punct("[") {
+                let end = match_delim(toks, j, "[", "]");
+                let attr: Vec<&str> = toks[j + 1..end.saturating_sub(1)]
+                    .iter()
+                    .map(|t| t.text.as_str())
+                    .collect();
+                pending_attrs.push(attr.join(" "));
+                i = end;
+                continue;
+            }
+            i += 1;
+        } else if t.ident("mod") {
+            let j = i + 2;
+            let test_mod = pending_attrs.iter().any(|a| a.contains("cfg ( test"));
+            pending_attrs.clear();
+            if j < toks.len() && toks[j].punct("{") {
+                let end = match_delim(toks, j, "{", "}");
+                parse_scope(
+                    &toks[j + 1..end - 1],
+                    file,
+                    out,
+                    None,
+                    in_test || test_mod,
+                    false,
+                );
+                i = end;
+            } else {
+                i = j + 1;
+            }
+        } else if t.ident("impl") || t.ident("trait") {
+            let is_trait = t.ident("trait");
+            let mut j = skip_generics(toks, i + 1);
+            // the impl/trait type is the FIRST ident of the (post-`for`)
+            // head segment: `impl<'a, B: Backend> Pipeline<'a, B>` =>
+            // Pipeline, `impl Trait for Type<G>` => Type
+            let mut head: Vec<String> = Vec::new();
+            while j < toks.len() && !toks[j].punct("{") {
+                if toks[j].ident("for") {
+                    head.clear();
+                } else if toks[j].ident("where") {
+                    break;
+                } else if toks[j].kind == TokKind::Ident && !is_keyword(&toks[j].text) {
+                    head.push(toks[j].text.clone());
+                }
+                j += 1;
+            }
+            while j < toks.len() && !toks[j].punct("{") {
+                j += 1;
+            }
+            let type_name = head.first().cloned().unwrap_or_else(|| "?".to_string());
+            let test_blk = pending_attrs.iter().any(|a| a.contains("cfg ( test"));
+            pending_attrs.clear();
+            if j < toks.len() {
+                let end = match_delim(toks, j, "{", "}");
+                parse_scope(
+                    &toks[j + 1..end - 1],
+                    file,
+                    out,
+                    Some(&type_name),
+                    in_test || test_blk,
+                    is_trait,
+                );
+                i = end;
+            } else {
+                i = j;
+            }
+        } else if t.ident("fn") {
+            let name = toks
+                .get(i + 1)
+                .map(|t| t.text.clone())
+                .unwrap_or_else(|| "?".to_string());
+            let fn_line = t.line;
+            let mut j = skip_generics(toks, i + 2);
+            while j < toks.len() && !toks[j].punct("(") {
+                j += 1;
+            }
+            j = match_delim(toks, j, "(", ")");
+            // skip return type / where clause to the body `{` (or `;` for
+            // trait-signature-only fns), hopping over generic lists
+            while j < toks.len() {
+                if toks[j].punct("{") || toks[j].punct(";") {
+                    break;
+                }
+                if toks[j].punct("<") {
+                    j = skip_generics(toks, j);
+                    continue;
+                }
+                j += 1;
+            }
+            let is_test_fn = pending_attrs.iter().any(|a| a.trim() == "test");
+            let test_attr_cfg = pending_attrs.iter().any(|a| a.contains("cfg ( test"));
+            pending_attrs.clear();
+            let qual = ctx.map(str::to_string).unwrap_or_else(|| stem.clone());
+            let qname = format!("{qual}::{name}");
+            if j < toks.len() && toks[j].punct("{") {
+                let end = match_delim(toks, j, "{", "}");
+                let body = toks[j + 1..end - 1].to_vec();
+                let f = FnItem {
+                    qname: qname.clone(),
+                    name,
+                    file: file.to_string(),
+                    line: fn_line,
+                    body,
+                    is_test: in_test || is_test_fn || test_attr_cfg,
+                    in_trait,
+                    sig_open_line: toks[j].line,
+                    nested: Vec::new(),
+                };
+                let is_test = f.is_test;
+                out.push(f);
+                let idx = out.len() - 1;
+                // nested items inside the body execute from this scope
+                let body_toks = out[idx].body.clone();
+                let before = out.len();
+                parse_scope(&body_toks, file, out, None, is_test, false);
+                let nested: Vec<String> = out[before..].iter().map(|f| f.qname.clone()).collect();
+                out[idx].nested = nested;
+                i = end;
+            } else {
+                i = j + 1;
+            }
+        } else if t.punct("{") {
+            i = match_delim(toks, i, "{", "}");
+        } else {
+            if t.punct(";") {
+                pending_attrs.clear();
+            }
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn parse(src: &str) -> Vec<FnItem> {
+        let (toks, _) = lex(src);
+        let mut out = Vec::new();
+        parse_items(&toks, "demo/sample.rs", &mut out);
+        out
+    }
+
+    #[test]
+    fn impl_type_is_first_head_ident() {
+        let fns = parse(
+            "impl<'a, B: Backend> Pipeline<'a, B> { pub fn generate(&self) {} }\n\
+             impl Solver for Euler<G> { fn step(&mut self) {} }",
+        );
+        let names: Vec<&str> = fns.iter().map(|f| f.qname.as_str()).collect();
+        assert!(names.contains(&"Pipeline::generate"), "{names:?}");
+        assert!(names.contains(&"Euler::step"), "{names:?}");
+    }
+
+    #[test]
+    fn cfg_test_items_are_marked() {
+        let fns = parse(
+            "pub fn live() {}\n\
+             #[cfg(test)] mod tests { #[test] fn t() { live(); } }\n\
+             #[test] fn top_level_test() {}",
+        );
+        let by: std::collections::HashMap<&str, bool> =
+            fns.iter().map(|f| (f.name.as_str(), f.is_test)).collect();
+        assert_eq!(by["live"], false);
+        assert_eq!(by["t"], true);
+        assert_eq!(by["top_level_test"], true);
+    }
+
+    #[test]
+    fn nested_items_recorded_on_enclosing_fn() {
+        let fns = parse(
+            "fn outer() { struct G; impl Drop for G { fn drop(&mut self) {} } }",
+        );
+        let outer = fns.iter().find(|f| f.name == "outer").unwrap();
+        assert!(outer.nested.iter().any(|q| q == "G::drop"), "{:?}", outer.nested);
+    }
+
+    #[test]
+    fn free_fns_qualify_by_file_stem() {
+        let fns = parse("pub fn worker_loop() {}");
+        assert_eq!(fns[0].qname, "sample::worker_loop");
+    }
+}

@@ -1,0 +1,527 @@
+//! The four invariant passes and their crate-specific registries.
+//!
+//! Registries are name lists, not magic: when a new hot loop, worker entry
+//! point, or allocating wrapper is added to the crate, add it here (the
+//! fixture tests pin the behavior of each list).
+
+use std::collections::{HashMap, HashSet};
+
+use super::allow::{covered, Cover};
+use super::graph::{body_events, reachable, EventKind, Indexes};
+use super::parser::FnItem;
+
+/// Functions whose cones must stay allocation-free (the steady-state step
+/// loops of both pipelines and the mock backend's in-place execution path).
+pub const HOT_ROOTS: &[&str] = &[
+    "Pipeline::generate",
+    "Pipeline::generate_lanes",
+    "Pipeline::generate_lanes_mode",
+    "Pipeline::execute_planned_lanes",
+    "Pipeline::run_lane_single",
+    "Pipeline::run_lane_bucket",
+    "Pipeline::run_prune_into",
+    "GmBackend::run_into",
+];
+
+/// Per-run setup / allocating-wrapper names: the alloc cone stops at these.
+/// Each is either once-per-request (construction, reset, accounting) or an
+/// allocating wrapper separately guarded by the `_into` pairing pass.
+pub const COLD_BOUNDARIES: &[&str] = &[
+    // per-run construction / reset (outside the step loop)
+    "build_solver", "new", "with_default", "default", "reset", "begin_run",
+    "clone_fresh", "name", "with_capacity", "from_rng", "start", "finish",
+    "seeded", "for_steps", "with_schedule", "with_batch_buckets",
+    // end-of-run accounting
+    "outcome", "planned_degradations", "elapsed_ms", "request_key",
+    // allocating wrappers guarded by the `_into` pairing pass
+    "step", "x0_from_model", "model_out_from_x0", "gradient", "gradient_eps",
+    "extrapolate", "reconstruct_x0", "run", "eps_star", "am3", "d2y",
+    "reconstruct", "stack_rows", "unstack_rows", "token_dots", "token_scores",
+    "am3_from", "d2y_from", "lincomb2", "lincomb3", "lincomb4", "fdm3",
+];
+
+/// Worker-thread entry points: a panic below any of these kills an engine
+/// worker (or wedges the dispatcher), so their cones must not panic.
+pub const PANIC_ROOTS: &[&str] = &[
+    "server::worker_loop", "server::dispatch_loop", "server::execute_batch",
+    "Coordinator::submit", "Coordinator::metrics_text", "Coordinator::shutdown",
+];
+
+/// Offline / never-on-a-worker-thread modules: the name-based graph would
+/// otherwise pull them into the cones through collisions (`run`, `parse`,
+/// `load`, ...). `analysis/` itself only ever runs under xtask.
+pub const OFFLINE_FILES: &[&str] =
+    &["exp/", "workload/", "metrics/", "config/cli.rs", "analysis/"];
+
+/// Slice-indexing lint scope: threading code, where an out-of-bounds panic
+/// takes a worker down. Numeric kernels are exempt from the *indexing* lint
+/// (bounds-derived arithmetic, property-tested); unwrap/expect/panic! are
+/// still flagged everywhere reachable.
+pub const INDEX_LINT_FILES: &[&str] = &["coordinator/", "plancache/"];
+
+/// Files whose lock behavior the lock-order pass models.
+pub const LOCK_SCOPE_FILES: &[&str] = &["coordinator/", "plancache/store.rs"];
+/// Guard-returning acquirers (methods, plus the free-fn poison-tolerant
+/// helpers from `util::sync`).
+pub const LOCK_ACQUIRERS: &[&str] = &["lock", "lock_metrics", "shard", "lock_ignore_poison"];
+/// Condvar waits release the guard while blocked: not a held-across hazard.
+pub const CONDVAR_WAITS: &[&str] = &["wait", "wait_timeout", "wait_ignore_poison"];
+/// Calls that block on another thread or run a model.
+pub const BLOCKING_CALLS: &[&str] = &[
+    "send", "recv", "recv_timeout", "join", "run_into", "execute",
+    "generate", "generate_lanes", "generate_lanes_mode",
+];
+
+pub const ALLOC_MACROS: &[&str] = &["vec", "format"];
+pub const ALLOC_QUALIFIED: &[(&str, &str)] = &[
+    ("Vec", "new"), ("Vec", "with_capacity"), ("String", "new"), ("String", "from"),
+    ("Box", "new"), ("Arc", "new"), ("Rc", "new"),
+    ("Tensor", "zeros"), ("Tensor", "full"), ("Tensor", "new"),
+    ("Tensor", "from_rng"), ("HashMap", "new"), ("BTreeMap", "new"),
+    ("VecDeque", "new"),
+];
+/// Constructors that ARE the allocation boundary: call sites are flagged,
+/// scanning their own bodies is definitionally redundant.
+pub const ALLOC_SINK_FNS: &[&str] =
+    &["Tensor::zeros", "Tensor::full", "Tensor::new", "Tensor::from_rng"];
+pub const ALLOC_METHODS: &[&str] = &["to_vec", "to_string", "to_owned", "collect", "clone"];
+pub const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+pub const PANIC_METHODS: &[&str] = &["unwrap", "expect"];
+
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub pass: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub function: String,
+    pub message: String,
+}
+
+pub struct PassResult {
+    pub findings: Vec<Finding>,
+    pub allowed: Vec<Finding>,
+    /// Pass-specific size (cone size, pair count, lock-edge count).
+    pub meta: usize,
+}
+
+fn file_matches(file: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| file.starts_with(p) || file == *p)
+}
+
+/// Methods each impl type defines (for the bare-`self` carve-outs).
+fn type_methods(functions: &[FnItem]) -> HashMap<String, HashSet<String>> {
+    let mut out: HashMap<String, HashSet<String>> = HashMap::new();
+    for f in functions {
+        if f.is_test {
+            continue;
+        }
+        if let Some((ty, nm)) = f.qname.rsplit_once("::") {
+            out.entry(ty.to_string()).or_default().insert(nm.to_string());
+        }
+    }
+    out
+}
+
+/// `self.<name>(..)` with a bare `self` receiver somewhere on `line`.
+fn bare_self_call_on_line(f: &FnItem, name: &str, line: u32) -> bool {
+    let toks: Vec<_> = f.body.iter().filter(|t| t.kind != super::lexer::TokKind::Chr).collect();
+    toks.iter().enumerate().any(|(jx, t)| {
+        t.line == line
+            && t.ident(name)
+            && jx >= 2
+            && toks[jx - 1].punct(".")
+            && toks[jx - 2].ident("self")
+            && !(jx >= 4 && toks[jx - 3].punct("."))
+    })
+}
+
+/// Pass 1: no allocation in code reachable from the hot-loop roots.
+pub fn pass_hot_alloc(functions: &[FnItem], idx: &Indexes, cover: &Cover) -> PassResult {
+    let mut gate: HashMap<String, HashSet<u32>> = HashMap::new();
+    for ((file, cat), lines) in cover {
+        if cat == "alloc" {
+            gate.entry(file.clone()).or_default().extend(lines.iter().copied());
+        }
+    }
+    let stop: HashSet<&str> = COLD_BOUNDARIES.iter().copied().collect();
+    let seen = reachable(functions, idx, HOT_ROOTS, &stop, OFFLINE_FILES, Some(&gate));
+    let tm = type_methods(functions);
+    let mut findings = Vec::new();
+    let mut allowed = Vec::new();
+    let mut order: Vec<usize> = seen.iter().copied().collect();
+    order.sort_unstable();
+    for ix in order {
+        let f = &functions[ix];
+        if f.is_test || f.in_trait || ALLOC_SINK_FNS.contains(&f.qname.as_str()) {
+            continue;
+        }
+        let own_type = f.qname.rsplit_once("::").map(|(t, _)| t).unwrap_or("");
+        for ev in body_events(&f.body) {
+            let bad = match ev.kind {
+                EventKind::Macro if ALLOC_MACROS.contains(&ev.name.as_str()) => {
+                    Some(format!("{}! allocates", ev.name))
+                }
+                EventKind::Call => {
+                    if let Some(q) = &ev.qual {
+                        if ALLOC_QUALIFIED.contains(&(q.as_str(), ev.name.as_str())) {
+                            Some(format!("{q}::{} allocates", ev.name))
+                        } else {
+                            None
+                        }
+                    } else if ev.is_method && ALLOC_METHODS.contains(&ev.name.as_str()) {
+                        // bare `self.<name>(..)` on a type defining <name>
+                        // is an in-crate call, not the std construct
+                        let own = tm
+                            .get(own_type)
+                            .is_some_and(|m| m.contains(ev.name.as_str()));
+                        if own && bare_self_call_on_line(f, &ev.name, ev.line) {
+                            None
+                        } else {
+                            Some(format!(".{}() allocates", ev.name))
+                        }
+                    } else {
+                        None
+                    }
+                }
+                _ => None,
+            };
+            if let Some(msg) = bad {
+                let rec = Finding {
+                    pass: "hot_alloc",
+                    file: f.file.clone(),
+                    line: ev.line,
+                    function: f.qname.clone(),
+                    message: msg,
+                };
+                if covered(cover, &f.file, "alloc", ev.line) {
+                    allowed.push(rec);
+                } else {
+                    findings.push(rec);
+                }
+            }
+        }
+    }
+    PassResult { findings, allowed, meta: seen.len() }
+}
+
+/// Pass 2: every `<name>` with a `<name>_into` twin must be a thin
+/// delegating wrapper (direct, parallel, or shared-`_into`-core shape).
+pub fn pass_into_pairing(functions: &[FnItem], _idx: &Indexes, cover: &Cover) -> PassResult {
+    let mut byq: HashMap<&str, &FnItem> = HashMap::new();
+    for f in functions {
+        if !f.is_test && !f.in_trait {
+            byq.entry(f.qname.as_str()).or_insert(f);
+        }
+    }
+    let mut findings = Vec::new();
+    let mut allowed = Vec::new();
+    let mut pairs = 0usize;
+    let mut qnames: Vec<&&str> = byq.keys().collect();
+    qnames.sort_unstable();
+    for qname in qnames {
+        let f = byq[*qname];
+        let base = match f.name.strip_suffix("_into") {
+            Some(b) => b,
+            None => continue,
+        };
+        let scope = f.qname.rsplit_once("::").map(|(t, _)| t).unwrap_or("");
+        let w = match byq.get(format!("{scope}::{base}").as_str()) {
+            Some(w) => *w,
+            None => continue, // into-only kernel: nothing to pair
+        };
+        pairs += 1;
+        let calls: HashSet<String> = body_events(&w.body)
+            .into_iter()
+            .filter(|e| e.kind == EventKind::Call)
+            .map(|e| e.name)
+            .collect();
+        let twin_calls: HashSet<String> = body_events(&f.body)
+            .into_iter()
+            .filter(|e| e.kind == EventKind::Call)
+            .map(|e| e.name)
+            .collect();
+        let has_loop = w
+            .body
+            .iter()
+            .any(|t| t.ident("for") || t.ident("while") || t.ident("loop"));
+        // acceptable delegation shapes: direct (wrapper calls its twin),
+        // parallel (wrapper calls h where the twin calls h_into), or shared
+        // core (both route through the same *_into kernel)
+        let delegates = calls.contains(&f.name)
+            || calls.iter().any(|h| twin_calls.contains(&format!("{h}_into")))
+            || calls
+                .iter()
+                .any(|h| h.ends_with("_into") && twin_calls.contains(h));
+        let mut problems = Vec::new();
+        if !delegates {
+            problems.push(format!("wrapper {} does not delegate to {}", w.qname, f.name));
+        }
+        if has_loop {
+            problems.push(format!("wrapper {} contains a loop (not a thin delegate)", w.qname));
+        }
+        if w.body.len() > 120 {
+            problems.push(format!("wrapper {} body too large ({} tokens)", w.qname, w.body.len()));
+        }
+        for msg in problems {
+            let rec = Finding {
+                pass: "into_pairing",
+                file: w.file.clone(),
+                line: w.line,
+                function: w.qname.clone(),
+                message: msg,
+            };
+            if covered(cover, &w.file, "pairing", w.line) {
+                allowed.push(rec);
+            } else {
+                findings.push(rec);
+            }
+        }
+    }
+    PassResult { findings, allowed, meta: pairs }
+}
+
+/// Name the lock from receiver tokens before `.lock(` / `.shard(` etc.
+fn lock_name_recv(toks: &[&super::lexer::Tok], idx: usize) -> String {
+    let mut j = idx as i64 - 1;
+    let mut parts: Vec<String> = Vec::new();
+    while j >= 0 {
+        let t = toks[j as usize];
+        if t.punct("]") {
+            let mut depth = 0i32;
+            while j >= 0 {
+                if toks[j as usize].punct("]") {
+                    depth += 1;
+                } else if toks[j as usize].punct("[") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                j -= 1;
+            }
+            j -= 1;
+        } else if t.kind == super::lexer::TokKind::Ident {
+            parts.push(t.text.clone());
+            j -= 1;
+        } else if t.punct(".") {
+            j -= 1;
+        } else {
+            break;
+        }
+    }
+    if parts.is_empty() {
+        "?".to_string()
+    } else {
+        parts.reverse();
+        parts.join(".")
+    }
+}
+
+/// Name the lock from the first argument of a free-fn acquirer:
+/// `lock_ignore_poison(&self.shards[idx])` -> `self.shards`.
+fn lock_name_arg(toks: &[&super::lexer::Tok], open_idx: usize) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    let mut j = open_idx + 1;
+    while j < toks.len() {
+        let t = toks[j];
+        if t.punct("&") || t.punct("*") || t.ident("mut") {
+            j += 1;
+        } else if t.kind == super::lexer::TokKind::Ident {
+            parts.push(t.text.clone());
+            j += 1;
+            if j < toks.len() && toks[j].punct(".") {
+                j += 1;
+            } else {
+                break;
+            }
+        } else {
+            break;
+        }
+    }
+    if parts.is_empty() { "?".to_string() } else { parts.join(".") }
+}
+
+/// Pass 3: lock acquisition order + blocking calls under a held guard, in
+/// the coordinator and plan-store files.
+pub fn pass_lock_order(functions: &[FnItem], _idx: &Indexes, cover: &Cover) -> PassResult {
+    let mut findings = Vec::new();
+    let mut allowed = Vec::new();
+    // (from, to, file, line, fn)
+    let mut edges: HashSet<(String, String, String, u32, String)> = HashSet::new();
+    for f in functions {
+        if f.is_test || !file_matches(&f.file, LOCK_SCOPE_FILES) {
+            continue;
+        }
+        let toks: Vec<&super::lexer::Tok> =
+            f.body.iter().filter(|t| t.kind != super::lexer::TokKind::Chr).collect();
+        // (lock id, brace depth at acquire, let-bound)
+        let mut held: Vec<(String, i32, bool)> = Vec::new();
+        let mut depth = 0i32;
+        for (idx2, t) in toks.iter().enumerate() {
+            if t.punct("{") {
+                depth += 1;
+            } else if t.punct("}") {
+                depth -= 1;
+                held.retain(|h| h.1 < depth || !h.2);
+            } else if t.punct(";") {
+                // statement end: temporaries drop
+                held.retain(|h| h.2);
+            } else if t.punct("(") && idx2 > 0 && toks[idx2 - 1].kind == super::lexer::TokKind::Ident {
+                let name = toks[idx2 - 1].text.as_str();
+                let is_method = idx2 >= 2 && toks[idx2 - 2].punct(".");
+                if CONDVAR_WAITS.contains(&name) {
+                    continue; // the wait releases the guard while blocked
+                }
+                if LOCK_ACQUIRERS.contains(&name)
+                    && (is_method || name == "lock_metrics" || name == "lock_ignore_poison")
+                {
+                    let ln_name = if is_method {
+                        lock_name_recv(&toks, idx2 - 1)
+                    } else {
+                        lock_name_arg(&toks, idx2)
+                    };
+                    let scope = f.qname.rsplit_once("::").map(|(t, _)| t).unwrap_or("");
+                    let lock_id = if is_method {
+                        format!("{scope}:{ln_name}")
+                    } else {
+                        ln_name
+                    };
+                    let let_bound = (idx2.saturating_sub(10)..idx2)
+                        .any(|j| toks[j].ident("let"));
+                    for (h, _d, _lb) in &held {
+                        if *h != lock_id {
+                            edges.insert((
+                                h.clone(),
+                                lock_id.clone(),
+                                f.file.clone(),
+                                t.line,
+                                f.qname.clone(),
+                            ));
+                        }
+                    }
+                    held.push((lock_id, depth, let_bound));
+                } else if BLOCKING_CALLS.contains(&name) && is_method {
+                    for (h, _d, lb) in &held {
+                        if *lb {
+                            let rec = Finding {
+                                pass: "lock_order",
+                                file: f.file.clone(),
+                                line: t.line,
+                                function: f.qname.clone(),
+                                message: format!(
+                                    "blocking call .{name}() while holding lock {h}"
+                                ),
+                            };
+                            if covered(cover, &f.file, "lock_order", t.line) {
+                                allowed.push(rec);
+                            } else {
+                                findings.push(rec);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // cycle detection over the order edges
+    let mut adj: HashMap<&str, HashSet<&str>> = HashMap::new();
+    for (a, b, ..) in &edges {
+        adj.entry(a.as_str()).or_default().insert(b.as_str());
+    }
+    fn has_path<'a>(
+        adj: &HashMap<&'a str, HashSet<&'a str>>,
+        frm: &'a str,
+        to: &str,
+        seen: &mut HashSet<&'a str>,
+    ) -> bool {
+        if frm == to {
+            return true;
+        }
+        if !seen.insert(frm) {
+            return false;
+        }
+        adj.get(frm)
+            .into_iter()
+            .flatten()
+            .any(|x| has_path(adj, x, to, seen))
+    }
+    let mut sorted_edges: Vec<_> = edges.iter().collect();
+    sorted_edges.sort();
+    let mut reported: HashSet<(String, String)> = HashSet::new();
+    for (a, b, file, line, q) in sorted_edges {
+        let mut seen = HashSet::new();
+        if a != b
+            && has_path(&adj, b.as_str(), a.as_str(), &mut seen)
+            && !reported.contains(&(b.clone(), a.clone()))
+        {
+            reported.insert((a.clone(), b.clone()));
+            findings.push(Finding {
+                pass: "lock_order",
+                file: file.clone(),
+                line: *line,
+                function: q.clone(),
+                message: format!("lock-order cycle: {a} -> {b} and {b} -> {a}"),
+            });
+        }
+    }
+    PassResult { findings, allowed, meta: edges.len() }
+}
+
+/// Pass 4: no unwrap/expect/panic-macros (and, in threading files, no
+/// slice indexing) in non-test code reachable from worker entry points.
+pub fn pass_panic_safety(functions: &[FnItem], idx: &Indexes, cover: &Cover) -> PassResult {
+    let seen = reachable(functions, idx, PANIC_ROOTS, &HashSet::new(), OFFLINE_FILES, None);
+    let tm = type_methods(functions);
+    let mut findings = Vec::new();
+    let mut allowed = Vec::new();
+    let mut order: Vec<usize> = seen.iter().copied().collect();
+    order.sort_unstable();
+    for ix in order {
+        let f = &functions[ix];
+        if f.is_test {
+            continue;
+        }
+        let own_type = f.qname.rsplit_once("::").map(|(t, _)| t).unwrap_or("");
+        for ev in body_events(&f.body) {
+            let bad = match ev.kind {
+                EventKind::Macro if PANIC_MACROS.contains(&ev.name.as_str()) => {
+                    Some(format!("{}! in worker-reachable code", ev.name))
+                }
+                EventKind::Call
+                    if ev.is_method && PANIC_METHODS.contains(&ev.name.as_str()) =>
+                {
+                    // bare `self.expect(..)` where the impl type defines
+                    // `expect` is an in-crate call (the json parser), not
+                    // Option/Result::expect
+                    let own = tm
+                        .get(own_type)
+                        .is_some_and(|m| m.contains(ev.name.as_str()));
+                    if own && bare_self_call_on_line(f, &ev.name, ev.line) {
+                        None
+                    } else {
+                        Some(format!(".{}() in worker-reachable code", ev.name))
+                    }
+                }
+                EventKind::Index if file_matches(&f.file, INDEX_LINT_FILES) => {
+                    Some("slice indexing in worker-reachable coordinator/plancache code".to_string())
+                }
+                _ => None,
+            };
+            if let Some(msg) = bad {
+                let rec = Finding {
+                    pass: "panic_safety",
+                    file: f.file.clone(),
+                    line: ev.line,
+                    function: f.qname.clone(),
+                    message: msg,
+                };
+                if covered(cover, &f.file, "panic", ev.line) {
+                    allowed.push(rec);
+                } else {
+                    findings.push(rec);
+                }
+            }
+        }
+    }
+    PassResult { findings, allowed, meta: seen.len() }
+}

@@ -67,7 +67,13 @@ impl Accelerator for TeaCache {
     fn observe(&mut self, obs: &StepObs) {
         if obs.fresh {
             self.acc = 0.0;
-            self.last_fresh_x = Some(obs.x_prev.clone());
+            // recycle the anchor buffer: only the first fresh step of a run
+            // allocates, later anchors copy in place
+            match &mut self.last_fresh_x {
+                Some(p) if p.same_shape(obs.x_prev) => p.copy_from(obs.x_prev),
+                // xtask: allow(alloc): first fresh step of a run; steady state recycles
+                slot => *slot = Some(obs.x_prev.clone()),
+            }
         }
         if let Some(anchor) = &self.last_fresh_x {
             let delta = self.rescale(ops::rel_l1(obs.x_next, anchor));

@@ -107,6 +107,8 @@ impl DynamicBatcher {
     /// same-plan-signature requests first (they will share buckets every
     /// step of the run), then any compatible classmate. The head always
     /// leads and leftovers keep arrival order.
+    // xtask: allow(panic): chosen[k] is sized to drained.len() and k comes
+    // from enumerate; requests[0] is the head pushed unconditionally above
     pub fn poll(&mut self, now_ms: f64) -> Option<Batch> {
         let (head_t, head_sig, head) = self.queue.front()?;
         let head_sig = *head_sig;
@@ -131,7 +133,7 @@ impl DynamicBatcher {
         // replay affinity first, then class fallback — followed by one
         // partition pass that keeps both batch and leftovers in arrival
         // order. O(n) per pass.
-        let (_, _, head) = self.queue.pop_front().expect("nonempty");
+        let (_, _, head) = self.queue.pop_front()?;
         let mut requests = Vec::with_capacity(want);
         requests.push(head);
         let drained: Vec<(f64, u64, ServeRequest)> = self.queue.drain(..).collect();

@@ -48,6 +48,7 @@ impl Router {
     pub fn model_names(&self) -> Vec<String> {
         let mut names = vec![String::new(); self.models.len()];
         for (name, ix) in &self.models {
+            // xtask: allow(panic): queue indices are dense 0..models.len() by construction
             names[*ix] = name.clone();
         }
         names

@@ -34,6 +34,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::util::sync::{lock_ignore_poison, wait_ignore_poison};
+
 use super::batcher::DynamicBatcher;
 use super::metrics_log::{lock_metrics, MetricsLog};
 use super::request::{ServeRequest, ServeResponse};
@@ -126,7 +128,7 @@ impl WorkQueue {
 
     fn lock(&self) -> std::sync::MutexGuard<'_, WorkQueueState> {
         // a worker panicking mid-push/pop must not wedge its siblings
-        self.state.lock().unwrap_or_else(|p| p.into_inner())
+        lock_ignore_poison(&self.state)
     }
 
     /// Block until there is capacity, then enqueue. Pushing into a closed
@@ -134,7 +136,7 @@ impl WorkQueue {
     fn push(&self, item: WorkItem) {
         let mut st = self.lock();
         while st.items.len() >= self.cap && !st.closed {
-            st = self.cv_free.wait(st).unwrap_or_else(|p| p.into_inner());
+            st = wait_ignore_poison(&self.cv_free, st);
         }
         if st.closed {
             return;
@@ -170,7 +172,7 @@ impl WorkQueue {
             if st.closed {
                 return None;
             }
-            st = self.cv_ready.wait(st).unwrap_or_else(|p| p.into_inner());
+            st = wait_ignore_poison(&self.cv_ready, st);
         }
     }
 }
@@ -384,6 +386,7 @@ fn dispatch_loop(
             let mut ingest = |req: ServeRequest| match router.route(&req) {
                 Ok(q) => {
                     lock_metrics(&metrics).inc("requests_accepted", 1);
+                    // xtask: allow(panic): route() returns q < n_queues; batchers has n_queues entries
                     batchers[q].push(now_ms(start), req);
                 }
                 Err(e) => {
@@ -414,6 +417,7 @@ fn dispatch_loop(
             now_ms(start) + cfg.max_wait_ms + 1.0
         };
         for (q, model) in model_names.iter().enumerate() {
+            // xtask: allow(panic): model_names and batchers are both n_queues long
             while let Some(batch) = batchers[q].poll(t) {
                 queue.push(WorkItem {
                     model: model.clone(),
@@ -501,7 +505,9 @@ fn execute_batch(
     };
     let schedule = rt.manifest.schedule.to_schedule();
     let pipe = Pipeline::with_schedule(&backend, solver, schedule.clone());
+    // xtask: allow(panic): the batcher never emits an empty batch
     let steps = requests[0].steps;
+    // xtask: allow(panic): the batcher never emits an empty batch
     let key: AccelKey = (model.to_string(), requests[0].accel.clone(), steps);
     // the plan signature pins (solver, schedule): a plan recorded under a
     // different fingerprint can never replay
@@ -510,6 +516,7 @@ fn execute_batch(
         .map(|s| (s.clone(), schedule_fingerprint(solver.name(), &schedule)));
     let accel = accel_pool
         .entry(key)
+        // xtask: allow(panic): the batcher never emits an empty batch
         .or_insert_with(|| accel_for(&requests[0].accel, backend.info(), steps, cache));
     let gen_reqs: Vec<GenRequest> = requests
         .iter()
@@ -534,6 +541,7 @@ fn execute_batch(
     let results = if gen_reqs.len() > 1 {
         pipe.generate_lanes(&gen_reqs, accel.as_ref())?
     } else {
+        // xtask: allow(panic): single-request branch — gen_reqs.len() == 1 here
         vec![pipe.generate(&gen_reqs[0], accel.as_mut())?]
     };
     let bsz = requests.len();

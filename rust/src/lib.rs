@@ -21,6 +21,7 @@
 //! * [`workload`] — prompt bank + arrival-trace generators
 //! * [`exp`] — experiment harnesses regenerating every paper table/figure
 
+pub mod analysis;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

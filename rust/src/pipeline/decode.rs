@@ -6,6 +6,7 @@ use crate::tensor::Tensor;
 /// work directly in pixel space; see DESIGN.md SS1).
 pub fn finalize(image: &Tensor) -> Tensor {
     let data = image.data().iter().map(|v| v.clamp(-1.0, 1.0)).collect();
+    // xtask: allow(panic): data has exactly image.len() elements by construction
     Tensor::new(data, image.shape()).expect("same shape")
 }
 

@@ -302,8 +302,10 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         m_out: &mut Tensor,
         caches: &mut AuxSlot,
     ) -> Result<()> {
+        // xtask: allow(panic): persistent x slot — args.x is Some for the whole run (set at init)
         args.x.as_mut().expect("persistent x slot").copy_from(x);
         args.t = t_norm as f32;
+        // xtask: allow(alloc): Arc refcount bump, no heap allocation
         args.keep_idx = Some(mask.clone());
         args.caches = caches.take();
         let info = self.backend.info();
@@ -346,6 +348,9 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
     /// and results are bitwise-identical to the allocating formulation
     /// this replaced (the `_into` kernels are the same expressions).
     pub fn generate(&self, req: &GenRequest, accel: &mut dyn Accelerator) -> Result<GenResult> {
+        // xtask: allow(alloc, begin): per-run init — solver, step buffers, aux
+        // slots and the cloned cond/edge are allocated once before the step
+        // loop; the loop itself is the allocation-free region
         let info = self.backend.info().clone();
         let mut solver: Box<dyn Solver> = build_solver(self.solver_kind, &self.schedule, req.steps);
         solver.reset();
@@ -387,6 +392,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             ..Default::default()
         };
         let wants_obs = accel.wants_obs();
+        // xtask: allow(alloc, end)
 
         for i in 0..req.steps {
             let t_norm = solver.t_norm(i);
@@ -408,6 +414,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             let mut fresh = false;
             match &plan {
                 StepPlan::Full => {
+                    // xtask: allow(panic): persistent x slot — Some for the whole run
                     args.x.as_mut().expect("persistent x slot").copy_from(&x);
                     args.t = t_norm as f32;
                     self.backend.run_into(
@@ -432,6 +439,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                     solver.step_into(&x, &x0, i, &mut x_next);
                 }
                 StepPlan::Shallow => {
+                    // xtask: allow(panic): persistent x slot — Some for the whole run
                     args.x.as_mut().expect("persistent x slot").copy_from(&x);
                     args.t = t_norm as f32;
                     // move (not clone) the deep feature into the args and

@@ -139,12 +139,15 @@ impl SpeculativeAccel {
         self.key.as_ref()
     }
 
+    // xtask: allow(alloc): sign vector built once per lookup (at most a
+    // handful per run), not in the per-step path
     fn observed_signs(&self) -> Vec<(usize, bool)> {
         self.dots.iter().map(|(i, d)| (*i, *d >= 0.0)).collect()
     }
 
     fn lookup(&mut self, step: usize) {
         let key = match &self.key {
+            // xtask: allow(alloc): RequestKey clone once per lookup
             Some(k) => k.clone(),
             None => return,
         };
@@ -179,6 +182,7 @@ impl SpeculativeAccel {
 
     /// Insert the freshly observed plan on completion of a miss/diverged
     /// run (verified hits leave the stored plan untouched).
+    // xtask: allow(alloc): end-of-run plan recording (once per uncached run)
     fn finish(&mut self) {
         if !matches!(self.mode, Mode::Recording | Mode::Fallback) || self.dots.is_empty() {
             return;
@@ -228,6 +232,7 @@ impl Accelerator for SpeculativeAccel {
         // a SADA that has been planning (virtually) all along
         let inner_plan = self.inner.plan(ctx);
         let replay = match &self.mode {
+            // xtask: allow(alloc): Arc refcount bump on the recorded plan
             Mode::Replaying { plan } => Some(plan.clone()),
             _ => None,
         };
@@ -262,6 +267,7 @@ impl Accelerator for SpeculativeAccel {
                             StepPlan::Full
                         } else {
                             match plan.masks.get(mask as usize) {
+                                // xtask: allow(alloc): mask is Arc-backed — refcount bump
                                 Some(m) => StepPlan::Prune { mask: m.clone() },
                                 None => {
                                     // malformed entry: degrade, and count it
@@ -275,6 +281,8 @@ impl Accelerator for SpeculativeAccel {
             }
         };
         if self.key.is_some() {
+            // xtask: allow(alloc): push into a begin_run-reserved Vec; the
+            // StepPlan clone is a tag copy or Arc bump (Prune masks are Arc)
             self.planned.push(out.clone());
         }
         out
@@ -297,6 +305,7 @@ impl Accelerator for SpeculativeAccel {
         self.verdicts.push(verdict);
         let warming = matches!(self.mode, Mode::Warming);
         let replaying = match &self.mode {
+            // xtask: allow(alloc): Arc refcount bump on the recorded plan
             Mode::Replaying { plan } => Some(plan.clone()),
             _ => None,
         };
@@ -444,6 +453,8 @@ fn intern_mask(masks: &mut Vec<Arc<KeepMask>>, mask: &Arc<KeepMask>) -> Option<u
 /// [`Directive::Shallow`] — recorded from the pre-degradation intent, so a
 /// CacheWarm replay recovers the token-wise NFE savings even when the
 /// recording run's own prune steps were degraded by cold caches.
+// xtask: allow(panic): window/range indexing is bounds-derived (w[0]/w[1]
+// from windows(2); slice ranges clamped to n above)
 pub(crate) fn build_directives(
     n: usize,
     cfg: &SadaConfig,

@@ -250,6 +250,8 @@ impl Accelerator for Sada {
                         let [h, w, c] = self.img;
                         // err/d2y were left in the criterion scratch; the
                         // token scores land in their own reused scratch
+                        // xtask: allow(panic): scratch_err/scratch_d2y are Some —
+                        // this branch only runs after the criterion evaluated
                         criterion::token_scores_into(
                             self.scratch_err.as_ref().expect("criterion just ran"),
                             self.scratch_d2y.as_ref().expect("criterion just ran"),

@@ -36,6 +36,8 @@ pub enum TokenDecision {
 /// Choose the smallest bucket with n_keep >= number of unstable tokens.
 /// `full_threshold` is the unstable-fraction above which we don't bother.
 /// Buckets must be sorted by n_keep ascending.
+// xtask: allow(alloc): mask construction (order/keep vectors + Arc) happens
+// only on the handful of steps that actually choose a prune bucket
 pub fn select_bucket(
     scores: &[f64],
     buckets: &[PruneBucket],
@@ -55,7 +57,7 @@ pub fn select_bucket(
     };
     // order tokens by instability (descending score); keep the top n_keep
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|a, b| scores[*b].partial_cmp(&scores[*a]).unwrap());
+    order.sort_by(|a, b| scores[*b].total_cmp(&scores[*a]));
     let mut keep: Vec<i32> = order[..bucket.n_keep.min(n)]
         .iter()
         .map(|i| *i as i32)

@@ -76,9 +76,11 @@ impl Solver for FlowEuler {
         ops::lincomb2_into((1.0 / t) as f32, x, (-1.0 / t) as f32, x0, out);
     }
 
-    fn gradient(&self, _x: &Tensor, v: &Tensor, _i: usize) -> Tensor {
+    fn gradient(&self, x: &Tensor, v: &Tensor, i: usize) -> Tensor {
         // flow models predict dx/dt directly (paper Eq. 4)
-        v.clone()
+        let mut out = Tensor::zeros(v.shape());
+        self.gradient_into(x, v, i, &mut out);
+        out
     }
 
     fn gradient_into(&self, _x: &Tensor, v: &Tensor, _i: usize, out: &mut Tensor) {

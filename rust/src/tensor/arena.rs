@@ -67,6 +67,7 @@ impl TensorArena {
             }
         }
         stats.misses += 1;
+        // xtask: allow(alloc): pool miss — cold path; warm pools always hit above
         Tensor::zeros(shape)
     }
 
@@ -92,6 +93,7 @@ impl TensorArena {
             return;
         }
         // first release of this shape: the key allocation is one-time
+        // xtask: allow(alloc): first release of a shape allocates its pool key once
         pools.insert(t.shape().to_vec(), vec![t]);
         stats.released += 1;
     }

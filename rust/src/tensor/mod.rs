@@ -126,6 +126,7 @@ impl Tensor {
                 b.copy_from(src);
                 b
             }
+            // xtask: allow(alloc): first push / shape change only; steady state recycles
             _ => src.clone(),
         }
     }
@@ -137,8 +138,10 @@ impl Tensor {
     pub fn scratch_like<'s>(slot: &'s mut Option<Tensor>, like: &Tensor) -> &'s mut Tensor {
         let fits = matches!(slot, Some(t) if t.same_shape(like));
         if !fits {
+            // xtask: allow(alloc): lazy one-time sizing; warm scratch reuses in place
             *slot = Some(Tensor::zeros(like.shape()));
         }
+        // xtask: allow(panic): slot was just ensured Some above
         slot.as_mut().expect("scratch slot just ensured")
     }
 }

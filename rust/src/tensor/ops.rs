@@ -14,16 +14,13 @@ pub fn axpy(a: f32, x: &Tensor, y: &mut Tensor) {
     }
 }
 
-/// out = a*x + b*y (allocating)
+/// out = a*x + b*y (allocating; delegates to [`lincomb2_into`], so the two
+/// families share one arithmetic expression and stay bitwise-identical by
+/// construction)
 pub fn lincomb2(a: f32, x: &Tensor, b: f32, y: &Tensor) -> Tensor {
-    debug_assert!(x.same_shape(y));
-    let data = x
-        .data()
-        .iter()
-        .zip(y.data())
-        .map(|(xi, yi)| a * xi + b * yi)
-        .collect();
-    Tensor::new(data, x.shape()).expect("same shape")
+    let mut out = Tensor::zeros(x.shape());
+    lincomb2_into(a, x, b, y, &mut out);
+    out
 }
 
 /// out <- a*x + b*y, reusing `out`'s buffer (no allocation). `out` must
@@ -38,17 +35,11 @@ pub fn lincomb2_into(a: f32, x: &Tensor, b: f32, y: &Tensor, out: &mut Tensor) {
     }
 }
 
-/// out = a*x + b*y + c*z (allocating)
+/// out = a*x + b*y + c*z (allocating; delegates to [`lincomb3_into`])
 pub fn lincomb3(a: f32, x: &Tensor, b: f32, y: &Tensor, c: f32, z: &Tensor) -> Tensor {
-    debug_assert!(x.same_shape(y) && y.same_shape(z));
-    let data = x
-        .data()
-        .iter()
-        .zip(y.data())
-        .zip(z.data())
-        .map(|((xi, yi), zi)| a * xi + b * yi + c * zi)
-        .collect();
-    Tensor::new(data, x.shape()).expect("same shape")
+    let mut out = Tensor::zeros(x.shape());
+    lincomb3_into(a, x, b, y, c, z, &mut out);
+    out
 }
 
 /// out <- a*x + b*y + c*z, reusing `out`'s buffer (no allocation).
@@ -65,7 +56,8 @@ pub fn lincomb3_into(a: f32, x: &Tensor, b: f32, y: &Tensor, c: f32, z: &Tensor,
     }
 }
 
-/// out = a*w + b*x + c*y + d*z (allocating) — the AM-3 update shape.
+/// out = a*w + b*x + c*y + d*z (allocating; delegates to
+/// [`lincomb4_into`]) — the AM-3 update shape.
 pub fn lincomb4(
     a: f32,
     w: &Tensor,
@@ -76,15 +68,9 @@ pub fn lincomb4(
     d: f32,
     z: &Tensor,
 ) -> Tensor {
-    let data = w
-        .data()
-        .iter()
-        .zip(x.data())
-        .zip(y.data())
-        .zip(z.data())
-        .map(|(((wi, xi), yi), zi)| a * wi + b * xi + c * yi + d * zi)
-        .collect();
-    Tensor::new(data, w.shape()).expect("same shape")
+    let mut out = Tensor::zeros(w.shape());
+    lincomb4_into(a, w, b, x, c, y, d, z, &mut out);
+    out
 }
 
 /// out <- a*w + b*x + c*y + d*z, reusing `out`'s buffer (no allocation).

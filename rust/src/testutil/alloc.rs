@@ -1,0 +1,48 @@
+//! Shared thread-local counting allocator for allocation-regression tests.
+//!
+//! Each test binary that wants allocation counting installs the allocator
+//! itself (a `#[global_allocator]` must live in the final binary, not in a
+//! library):
+//!
+//! ```ignore
+//! use sada::testutil::alloc::CountingAlloc;
+//! #[global_allocator]
+//! static ALLOC: CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! The counter is per-thread — the cargo test harness runs tests on
+//! separate threads, so each test observes only its own allocations.
+//! `dealloc` is uncounted on purpose: the lints and tests care about
+//! acquisition (new heap traffic), and frees during teardown would make
+//! warm/steady comparisons noisy.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+pub struct CountingAlloc;
+
+thread_local! {
+    static LOCAL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        // try_with: never panic during TLS teardown
+        let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        unsafe { System.alloc(l) }
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        unsafe { System.realloc(p, l, new_size) }
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        unsafe { System.dealloc(p, l) }
+    }
+}
+
+/// Allocations counted on the calling thread since it started.
+pub fn thread_allocs() -> u64 {
+    LOCAL_ALLOCS.with(|c| c.get())
+}

@@ -6,6 +6,8 @@
 //! supports it (via [`Shrink`]). Used by coordinator/solver/sada invariant
 //! tests throughout the crate.
 
+pub mod alloc;
+
 use crate::rng::Rng;
 
 /// A generator of random test cases.

@@ -1,0 +1,42 @@
+//! Poison-tolerant locking helpers.
+//!
+//! The serving stack treats a poisoned mutex as survivable: every guarded
+//! structure (metrics registry, work-queue state, plan-cache shard) is
+//! valid after any partial update, so a panicking holder costs at most one
+//! lost update — it must not wedge the rest of the fleet. These helpers
+//! are the single spelling of that policy; the xtask lock-order pass
+//! recognizes them as acquisition sites, and the panic-safety pass stays
+//! clean because nothing here unwraps.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard from a poisoned mutex instead of
+/// propagating the panic to this thread.
+pub fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Wait on `cv` with `guard`, recovering the reacquired guard from a
+/// poisoned mutex (the condvar analogue of [`lock_ignore_poison`]).
+pub fn wait_ignore_poison<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_ignore_poison(&m), 7);
+    }
+}

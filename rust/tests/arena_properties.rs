@@ -11,6 +11,11 @@
 
 use std::sync::Arc;
 
+use sada::testutil::alloc::{thread_allocs, CountingAlloc};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
 use sada::baselines::{AdaptiveDiffusion, DeepCache, TeaCache};
 use sada::pipeline::lanes::FnFactory;
 use sada::pipeline::{Accelerator, GenRequest, KeepMask, NoAccel, Pipeline};
@@ -239,6 +244,37 @@ fn always_diverging_prune_heavy_plans_fall_back_bit_identically() {
         assert_eq!(lane.stats.nfe, solo.stats.nfe, "lane {k} NFE");
         assert_eq!(lane.stats.mode_trace(), solo.stats.mode_trace(), "lane {k} trace");
     }
+}
+
+#[test]
+fn warm_arena_checkout_release_cycles_allocate_nothing() {
+    // once a shape is pooled, checkout/release must be pure recycling —
+    // the zero-alloc lane loop depends on this
+    use sada::tensor::arena::{AuxSlot, TensorArena};
+    let arena = TensorArena::new();
+    let shapes: [&[usize]; 3] = [&[4, 16], &[1, 32], &[2, 8, 8]];
+    for s in shapes {
+        arena.release(arena.checkout(s)); // prime the pool for this shape
+    }
+    let mut aux = AuxSlot::new();
+    aux.ensure(&arena, &[4, 16]);
+    aux.retire(&arena); // pool the aux tensor too
+    let before = thread_allocs();
+    for _ in 0..64 {
+        for s in shapes {
+            let t = arena.checkout(s);
+            arena.release(t);
+        }
+        let z = arena.checkout_zeroed(&[4, 16]);
+        arena.release(z);
+        aux.ensure(&arena, &[4, 16]);
+        aux.retire(&arena);
+    }
+    assert_eq!(
+        thread_allocs() - before,
+        0,
+        "warm checkout/release cycles must not touch the heap"
+    );
 }
 
 #[test]

@@ -1,0 +1,97 @@
+//! Miri-targeted exercises of the unsafe-adjacent tensor machinery: row
+//! views and copies (`tensor/view.rs`) and the arena / AuxSlot buffer
+//! lifecycle (`tensor/arena.rs`). Everything here is deliberately tiny —
+//! miri executes ~100x slower than native — and also runs as a normal
+//! test, so the assertions are real invariants, not miri-only smoke.
+
+use sada::tensor::arena::{AuxSlot, TensorArena};
+use sada::tensor::view::{copy_from_row, copy_into_row, row_numel, RowsView};
+use sada::tensor::Tensor;
+
+fn filled(shape: &[usize], base: f32) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    for (i, v) in t.data_mut().iter_mut().enumerate() {
+        *v = base + i as f32;
+    }
+    t
+}
+
+#[test]
+fn rows_view_aliases_exact_rows() {
+    let t = filled(&[3, 4], 0.0);
+    let v = RowsView::of(&t);
+    assert_eq!(v.rows(), 3);
+    assert_eq!(v.row_len(), 4);
+    for r in 0..3 {
+        let row = v.row(r);
+        assert_eq!(row.len(), 4);
+        assert_eq!(row[0], (r * 4) as f32);
+        assert_eq!(row[3], (r * 4 + 3) as f32);
+    }
+    let d = v.row_dot(&v, 1);
+    let expect: f64 = (4..8).map(|x| (x * x) as f64).sum();
+    assert_eq!(d, expect);
+}
+
+#[test]
+fn row_copies_roundtrip_without_touching_neighbours() {
+    let mut batch = filled(&[3, 4], 100.0);
+    let single = filled(&[1, 4], 0.0);
+    assert_eq!(row_numel(&batch), 4);
+    copy_into_row(&mut batch, 1, &single);
+    // row 1 replaced, rows 0 and 2 untouched
+    assert_eq!(&batch.data()[0..4], &[100.0, 101.0, 102.0, 103.0]);
+    assert_eq!(&batch.data()[4..8], &[0.0, 1.0, 2.0, 3.0]);
+    assert_eq!(&batch.data()[8..12], &[108.0, 109.0, 110.0, 111.0]);
+    let mut out = Tensor::zeros(&[1, 4]);
+    copy_from_row(&mut out, &batch, 2);
+    assert_eq!(out.data(), &[108.0, 109.0, 110.0, 111.0]);
+}
+
+#[test]
+fn arena_checkout_release_recycles_buffers_soundly() {
+    let arena = TensorArena::new();
+    let a = arena.checkout_zeroed(&[2, 3]);
+    assert_eq!(a.data(), &[0.0; 6]);
+    let mut b = arena.checkout(&[4]);
+    for v in b.data_mut() {
+        *v = 9.0;
+    }
+    arena.release(a);
+    arena.release(b);
+    // recycled buffer comes back with the same shape; zeroed checkout
+    // must scrub the stale 9.0s
+    let c = arena.checkout_zeroed(&[4]);
+    assert_eq!(c.data(), &[0.0; 4]);
+    arena.release(c);
+    assert!(arena.pooled() >= 1);
+    arena.clear();
+    assert_eq!(arena.pooled(), 0);
+}
+
+#[test]
+fn aux_slot_lifecycle_keeps_buffers_valid() {
+    let arena = TensorArena::new();
+    let mut slot = AuxSlot::new();
+    assert!(!slot.is_valid());
+    slot.ensure(&arena, &[2, 2]);
+    assert!(!slot.is_valid(), "ensure leaves contents stale");
+    if let Some(t) = slot.slot().as_mut() {
+        for v in t.data_mut() {
+            *v = 5.0;
+        }
+    }
+    slot.mark_valid();
+    assert!(slot.is_valid());
+    // reshape releases the old buffer back to the arena, not to the void
+    slot.ensure(&arena, &[3, 1]);
+    assert!(!slot.is_valid());
+    assert_eq!(slot.slot().as_ref().map(|t| t.shape().to_vec()), Some(vec![3, 1]));
+    let taken = slot.take().expect("buffer present");
+    assert_eq!(taken.shape(), &[3, 1]);
+    slot.install(taken);
+    assert!(slot.is_valid());
+    slot.retire(&arena);
+    assert!(!slot.is_valid());
+    assert!(arena.pooled() >= 1, "retire must pool the buffer");
+}

@@ -11,42 +11,10 @@
 //! (the cargo test harness runs tests on separate threads), so each test
 //! observes only its own allocations.
 
-// the GlobalAlloc bodies call straight into `System`; keep them lint-clean
-// on every edition's unsafe-in-unsafe-fn rules
-#![allow(unsafe_op_in_unsafe_fn)]
-
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::cell::Cell;
-
-struct CountingAlloc;
-
-thread_local! {
-    static LOCAL_ALLOCS: Cell<u64> = const { Cell::new(0) };
-}
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
-        // try_with: never panic during TLS teardown
-        let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
-        System.alloc(l)
-    }
-
-    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
-        let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
-        System.realloc(p, l, new_size)
-    }
-
-    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
-        System.dealloc(p, l)
-    }
-}
+use sada::testutil::alloc::{thread_allocs, CountingAlloc};
 
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
-
-fn thread_allocs() -> u64 {
-    LOCAL_ALLOCS.with(|c| c.get())
-}
 
 use sada::pipeline::{Accelerator, GenRequest, NoAccel, Pipeline};
 use sada::runtime::mock::GmBackend;

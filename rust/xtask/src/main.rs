@@ -1,0 +1,68 @@
+//! Analyzer driver: `cargo run -p xtask -- analyze [--src DIR] [--json PATH]`.
+//!
+//! Includes the analyzer sources directly (`#[path]`) so the binary builds
+//! whether or not the main crate's workspace manifest is present; the same
+//! modules are also exported as `sada::analysis` for the in-crate tests.
+//!
+//! Exit codes: 0 = clean, 1 = invariant violations found, 2 = usage/IO error.
+
+#[path = "../../src/analysis/mod.rs"]
+mod analysis;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: xtask analyze [--src DIR] [--json PATH]");
+    eprintln!("  --src DIR    crate source root (default: ../src relative to xtask)");
+    eprintln!("  --json PATH  where to write the machine-readable report");
+    eprintln!("               (default: <repo>/ANALYSIS.json)");
+    ExitCode::from(2)
+}
+
+fn default_src() -> PathBuf {
+    // xtask lives at rust/xtask; the crate sources at rust/src
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../src")
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) != Some("analyze") {
+        return usage();
+    }
+    let mut src = default_src();
+    let mut json_path = src.join("../../ANALYSIS.json");
+    let mut it = args[1..].iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--src" => match it.next() {
+                Some(v) => src = PathBuf::from(v),
+                None => return usage(),
+            },
+            "--json" => match it.next() {
+                Some(v) => json_path = PathBuf::from(v),
+                None => return usage(),
+            },
+            _ => return usage(),
+        }
+    }
+    let report = match analysis::analyze_crate(&src) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("xtask analyze: cannot read {}: {e}", src.display());
+            return ExitCode::from(2);
+        }
+    };
+    print!("{}", report.render_text());
+    let json = report.to_json(&src.display().to_string());
+    if let Err(e) = std::fs::write(&json_path, json) {
+        eprintln!("xtask analyze: cannot write {}: {e}", json_path.display());
+        return ExitCode::from(2);
+    }
+    println!("wrote {}", json_path.display());
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
