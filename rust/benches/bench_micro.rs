@@ -177,6 +177,7 @@ fn main() {
                     steps: 50,
                     guidance: 3.0,
                     accel: "sada".into(),
+                    slo_ms: None,
                     submitted_at: std::time::Instant::now(),
                     reply: tx,
                 },

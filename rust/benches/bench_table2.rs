@@ -69,5 +69,12 @@ fn main() -> anyhow::Result<()> {
     // on a repeated-prompt trace (also refreshes BENCH_serving.json)
     println!();
     sada::exp::serving::run_plancache_sweep("artifacts", "sd2_tiny", 25, 32, 4)?;
+
+    // continuous batching: step-granularity admission vs run-to-completion
+    // on a saturated heterogeneous-steps queue + SLO attainment through a
+    // continuous-mode coordinator (self-checks occupancy >= 0.95 and the
+    // strict engine-step win; stamps the `continuous` BENCH section)
+    println!();
+    sada::exp::serving::run_continuous_sweep("artifacts", "sd2_tiny", 48, 4, 2)?;
     Ok(())
 }

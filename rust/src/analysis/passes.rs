@@ -16,6 +16,8 @@ pub const HOT_ROOTS: &[&str] = &[
     "Pipeline::generate",
     "Pipeline::generate_lanes",
     "Pipeline::generate_lanes_mode",
+    "Pipeline::generate_continuous",
+    "Pipeline::run_continuous",
     "Pipeline::execute_planned_lanes",
     "Pipeline::run_lane_single",
     "Pipeline::run_lane_bucket",
@@ -33,6 +35,10 @@ pub const COLD_BOUNDARIES: &[&str] = &[
     "seeded", "for_steps", "with_schedule", "with_batch_buckets",
     // end-of-run accounting
     "outcome", "planned_degradations", "elapsed_ms", "request_key",
+    // feeder handoffs: admission/completion are bounded per-event costs on
+    // the continuous engine's boundary, never per-step work (the engine's
+    // own allow(alloc) regions gate what happens around the calls)
+    "admit", "complete",
     // allocating wrappers guarded by the `_into` pairing pass
     "step", "x0_from_model", "model_out_from_x0", "gradient", "gradient_eps",
     "extrapolate", "reconstruct_x0", "run", "eps_star", "am3", "d2y",
@@ -44,6 +50,7 @@ pub const COLD_BOUNDARIES: &[&str] = &[
 /// worker (or wedges the dispatcher), so their cones must not panic.
 pub const PANIC_ROOTS: &[&str] = &[
     "server::worker_loop", "server::dispatch_loop", "server::execute_batch",
+    "server::execute_continuous",
     "Coordinator::submit", "Coordinator::metrics_text", "Coordinator::shutdown",
 ];
 
@@ -69,7 +76,7 @@ pub const CONDVAR_WAITS: &[&str] = &["wait", "wait_timeout", "wait_ignore_poison
 /// Calls that block on another thread or run a model.
 pub const BLOCKING_CALLS: &[&str] = &[
     "send", "recv", "recv_timeout", "join", "run_into", "execute",
-    "generate", "generate_lanes", "generate_lanes_mode",
+    "generate", "generate_lanes", "generate_lanes_mode", "generate_continuous",
 ];
 
 pub const ALLOC_MACROS: &[&str] = &["vec", "format"];

@@ -17,17 +17,123 @@
 //! rest of the run. Remaining slots fall back to any compatible request
 //! (today's class grouping), so affinity never delays batch formation.
 //!
+//! **SLO-aware earliest-deadline-first admission.** Every queued request
+//! carries a batch-formation deadline computed at push: `arrival +
+//! min(max_wait_ms, slo_ms * SLO_BATCH_FRACTION)` — a request with a tight
+//! SLO spends at most a fraction of its budget waiting to be batched. The
+//! poll head is the request with the *earliest deadline* (ties keep
+//! arrival order, so no-SLO traffic degenerates exactly to the old FIFO
+//! head behavior), and [`DynamicBatcher::next_deadline_in`] returns the
+//! true minimum deadline over the whole queue, so the dispatcher's ingest
+//! sleep can never over-sleep past a tight SLO hiding behind a patient
+//! head.
+//!
+//! **Divergence-adaptive guidance width.** The replay-affinity signature
+//! quantizes guidance through a [`DivergenceAdaptiveWidth`] shared with
+//! the workers: while replay divergence stays cheap the affinity bucket
+//! widens (more requests count as replay twins and co-schedule), and under
+//! fidelity pressure (divergence rate spikes) it narrows back to the plan
+//! cache's base width. Correctness is untouched either way — affinity only
+//! orders batch filling; every replay is still verified step by step.
+//!
 //! Invariants (property-tested): no request is dropped or duplicated, the
-//! head of the queue is always served first and FIFO order is preserved
-//! within a plan signature (affinity may only promote same-signature
-//! requests past *different-signature* classmates), and no request waits
-//! more than max_wait once the batcher is polled.
+//! earliest-deadline head is always served first and FIFO order is
+//! preserved within a plan signature (affinity may only promote
+//! same-signature requests past *different-signature* classmates), and no
+//! request waits more than its batch deadline once the batcher is polled.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
 
-use crate::plancache::signature::RequestKey;
+use crate::pipeline::CacheOutcome;
+use crate::plancache::signature::{RequestKey, GUIDANCE_BUCKET_WIDTH};
 
 use super::request::ServeRequest;
+
+/// Fraction of a request's SLO budget it may spend waiting for batch
+/// formation; the rest is reserved for queueing at the worker and
+/// execution.
+pub const SLO_BATCH_FRACTION: f64 = 0.25;
+
+/// Guidance-bucket width for replay affinity, adapted by the per-outcome
+/// divergence counters the workers record (PR 5's `CacheOutcome`): widen
+/// while replays keep verifying (cheap divergence ⇒ more co-scheduling),
+/// narrow under fidelity pressure. Shared `Arc` between the batchers
+/// (push-time signatures) and the workers (outcome recording); all state
+/// is relaxed atomics — this is a scheduling heuristic, never a
+/// correctness input.
+#[derive(Debug, Default)]
+pub struct DivergenceAdaptiveWidth {
+    /// Widening level: affinity guidance width = base * 2^level.
+    level: AtomicU32,
+    hits: AtomicU64,
+    divergences: AtomicU64,
+}
+
+impl DivergenceAdaptiveWidth {
+    /// Observations per adaptation window.
+    const WINDOW: u64 = 32;
+    /// Divergence rate at or below which the width widens.
+    const WIDEN_BELOW: f64 = 0.05;
+    /// Divergence rate at or above which the width narrows.
+    const NARROW_ABOVE: f64 = 0.20;
+    /// Maximum widening level (width caps at base * 2^3 = 2.0 guidance).
+    const MAX_LEVEL: u32 = 3;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current affinity quantization width in guidance units.
+    pub fn width(&self) -> f32 {
+        let lvl = self.level.load(Ordering::Relaxed).min(Self::MAX_LEVEL);
+        GUIDANCE_BUCKET_WIDTH * (1u32 << lvl) as f32
+    }
+
+    /// Snap a guidance scalar onto the current affinity grid. At level 0
+    /// this is the identity: the plan-cache signature already buckets at
+    /// the base width, so default behavior is bit-for-bit the old one.
+    fn snap(&self, gs: f32) -> f32 {
+        let lvl = self.level.load(Ordering::Relaxed).min(Self::MAX_LEVEL);
+        if lvl == 0 || !gs.is_finite() {
+            return gs;
+        }
+        let w = GUIDANCE_BUCKET_WIDTH * (1u32 << lvl) as f32;
+        (gs / w).floor() * w
+    }
+
+    /// Record one lane's replay outcome. Hits argue for widening (near
+    /// neighbours replay fine), divergences for narrowing; misses and
+    /// uncached runs carry no replay signal. Window bookkeeping is racy by
+    /// design — a lost observation shifts a heuristic window boundary,
+    /// nothing more.
+    pub fn record(&self, outcome: &CacheOutcome) {
+        match outcome {
+            CacheOutcome::Hit => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+            }
+            CacheOutcome::Diverged { .. } => {
+                self.divergences.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => return,
+        }
+        let h = self.hits.load(Ordering::Relaxed);
+        let d = self.divergences.load(Ordering::Relaxed);
+        if h + d < Self::WINDOW {
+            return;
+        }
+        self.hits.store(0, Ordering::Relaxed);
+        self.divergences.store(0, Ordering::Relaxed);
+        let rate = d as f64 / (h + d) as f64;
+        let lvl = self.level.load(Ordering::Relaxed);
+        if rate <= Self::WIDEN_BELOW && lvl < Self::MAX_LEVEL {
+            self.level.store(lvl + 1, Ordering::Relaxed);
+        } else if rate >= Self::NARROW_ABOVE && lvl > 0 {
+            self.level.store(lvl - 1, Ordering::Relaxed);
+        }
+    }
+}
 
 pub struct Batch {
     pub requests: Vec<ServeRequest>,
@@ -40,7 +146,13 @@ pub struct Batch {
 /// accelerator string is folded in because only same-accel requests can
 /// share a plan store entry (and they must share a batch anyway).
 fn plan_affinity(req: &ServeRequest) -> u64 {
-    let key = RequestKey::new(&req.model, 0, req.steps, req.guidance, req.cond.data());
+    plan_affinity_at(req, req.guidance)
+}
+
+/// [`plan_affinity`] with an explicit (possibly width-snapped) guidance
+/// value — the hook the adaptive bucket width quantizes through.
+fn plan_affinity_at(req: &ServeRequest, gs: f32) -> u64 {
+    let key = RequestKey::new(&req.model, 0, req.steps, gs, req.cond.data());
     // fold the accel in with the same FNV discipline as the key digest
     req.accel
         .bytes()
@@ -51,21 +163,49 @@ pub struct DynamicBatcher {
     /// Compiled batch sizes, ascending (1 implicitly allowed).
     buckets: Vec<usize>,
     pub max_wait_ms: f64,
-    /// (enqueue time ms, plan-affinity signature, request) — the signature
-    /// is computed once at push time, not per poll.
+    /// Adaptive guidance width for affinity signatures (shared with the
+    /// workers that record replay outcomes into it).
+    width: Arc<DivergenceAdaptiveWidth>,
+    /// (batch deadline ms, plan-affinity signature, request) — both
+    /// computed once at push time, not per poll. Arrival order is the
+    /// queue order; the deadline is `arrival + min(max_wait, slo/4)`.
     queue: VecDeque<(f64, u64, ServeRequest)>,
 }
 
 impl DynamicBatcher {
-    pub fn new(mut buckets: Vec<usize>, max_wait_ms: f64) -> Self {
+    pub fn new(buckets: Vec<usize>, max_wait_ms: f64) -> Self {
+        Self::with_width(buckets, max_wait_ms, Arc::new(DivergenceAdaptiveWidth::new()))
+    }
+
+    /// [`DynamicBatcher::new`] with a shared adaptive guidance width
+    /// (one per coordinator, recorded into by every worker).
+    pub fn with_width(
+        mut buckets: Vec<usize>,
+        max_wait_ms: f64,
+        width: Arc<DivergenceAdaptiveWidth>,
+    ) -> Self {
         buckets.retain(|b| *b > 1);
         buckets.sort_unstable();
-        Self { buckets, max_wait_ms, queue: VecDeque::new() }
+        Self { buckets, max_wait_ms, width, queue: VecDeque::new() }
+    }
+
+    /// Batch-formation deadline for a request arriving at `now_ms`: its
+    /// SLO reserves most of the budget for queueing + execution, so only
+    /// [`SLO_BATCH_FRACTION`] of it may be spent waiting here.
+    fn deadline_for(&self, now_ms: f64, req: &ServeRequest) -> f64 {
+        let wait = match req.slo_ms {
+            Some(slo) if slo.is_finite() && slo > 0.0 => {
+                self.max_wait_ms.min(slo * SLO_BATCH_FRACTION)
+            }
+            _ => self.max_wait_ms,
+        };
+        now_ms + wait
     }
 
     pub fn push(&mut self, now_ms: f64, req: ServeRequest) {
-        let sig = plan_affinity(&req);
-        self.queue.push_back((now_ms, sig, req));
+        let sig = plan_affinity_at(&req, self.width.snap(req.guidance));
+        let deadline = self.deadline_for(now_ms, &req);
+        self.queue.push_back((deadline, sig, req));
     }
 
     pub fn pending(&self) -> usize {
@@ -102,17 +242,32 @@ impl DynamicBatcher {
             && b.guidance.is_finite()
     }
 
-    /// Poll for a ready batch at `now_ms`. Head-of-line request defines the
-    /// compatibility class; only requests compatible with it are grouped,
+    /// Poll for a ready batch at `now_ms`. The *earliest-deadline* request
+    /// is the head (ties keep arrival order, so no-SLO queues behave
+    /// exactly like the old FIFO head) and defines the compatibility
+    /// class; only requests compatible with it are grouped,
     /// same-plan-signature requests first (they will share buckets every
     /// step of the run), then any compatible classmate. The head always
     /// leads and leftovers keep arrival order.
-    // xtask: allow(panic): chosen[k] is sized to drained.len() and k comes
-    // from enumerate; requests[0] is the head pushed unconditionally above
+    // Indexing safety: head_at comes from enumerate over the queue (and the
+    // queue is non-empty past the early return), chosen[k] is sized to
+    // drained.len() with k from enumerate, and requests[0] is the head
+    // pushed unconditionally above.
+    // xtask: allow(panic): bounds argued above
     pub fn poll(&mut self, now_ms: f64) -> Option<Batch> {
-        let (head_t, head_sig, head) = self.queue.front()?;
+        // earliest-deadline-first head selection: strict `<` keeps the
+        // first (oldest) of any tied deadlines
+        let mut head_at = 0usize;
+        let mut head_deadline = f64::INFINITY;
+        for (k, (d, _, _)) in self.queue.iter().enumerate() {
+            if *d < head_deadline {
+                head_deadline = *d;
+                head_at = k;
+            }
+        }
+        let (_, head_sig, head) = self.queue.get(head_at)?;
         let head_sig = *head_sig;
-        let deadline_hit = now_ms - head_t >= self.max_wait_ms;
+        let deadline_hit = now_ms >= head_deadline;
         // the head always counts as its own class even when self-comparison
         // fails (NaN guidance): a batch is never empty and the head always
         // exits, so a malformed request cannot livelock the queue
@@ -133,7 +288,7 @@ impl DynamicBatcher {
         // replay affinity first, then class fallback — followed by one
         // partition pass that keeps both batch and leftovers in arrival
         // order. O(n) per pass.
-        let (_, _, head) = self.queue.pop_front()?;
+        let (_, _, head) = self.queue.remove(head_at)?;
         let mut requests = Vec::with_capacity(want);
         requests.push(head);
         let drained: Vec<(f64, u64, ServeRequest)> = self.queue.drain(..).collect();
@@ -166,11 +321,19 @@ impl DynamicBatcher {
         Some(Batch { requests })
     }
 
-    /// Milliseconds until the head request hits its deadline (None if empty).
+    /// Milliseconds until the earliest pending batch deadline (None if
+    /// empty): the true minimum over *every* queued request, not the
+    /// head's, so an SLO-tightened deadline hiding behind a patient head
+    /// still bounds the dispatcher's ingest sleep.
     pub fn next_deadline_in(&self, now_ms: f64) -> Option<f64> {
-        self.queue
-            .front()
-            .map(|(t, _, _)| (t + self.max_wait_ms - now_ms).max(0.0))
+        let mut min: Option<f64> = None;
+        for (d, _, _) in self.queue.iter() {
+            min = Some(match min {
+                Some(m) if m <= *d => m,
+                _ => *d,
+            });
+        }
+        min.map(|d| (d - now_ms).max(0.0))
     }
 }
 
@@ -192,6 +355,7 @@ mod tests {
             steps,
             guidance: 2.0,
             accel: "sada".into(),
+            slo_ms: None,
             submitted_at: Instant::now(),
             reply: tx,
         }
@@ -443,5 +607,107 @@ mod tests {
         // the second (incompatible) head now has its own deadline
         let batch2 = b.poll(36.0).unwrap();
         assert_eq!(batch2.requests[0].id.0, 1);
+    }
+
+    #[test]
+    fn slo_deadline_overtakes_patient_fifo_head() {
+        // a tight-SLO arrival behind a patient no-SLO head becomes the EDF
+        // head: its batch forms at its own deadline, not the head's
+        let mut b = DynamicBatcher::new(vec![4], 50.0);
+        b.push(0.0, req(0, "m", 50)); // deadline 50
+        let mut tight = req(1, "other", 50);
+        tight.slo_ms = Some(20.0); // batch deadline 5 + 20*0.25 = 10
+        b.push(5.0, tight);
+        assert!(b.poll(8.0).is_none(), "no deadline hit yet");
+        let batch = b.poll(11.0).expect("SLO deadline flush");
+        assert_eq!(batch.requests[0].id.0, 1, "EDF head leads");
+        assert_eq!(b.pending(), 1);
+        // the patient head still exits at its own deadline
+        let batch = b.poll(51.0).expect("max_wait flush");
+        assert_eq!(batch.requests[0].id.0, 0);
+    }
+
+    #[test]
+    fn slo_deadline_never_exceeds_max_wait() {
+        // a loose SLO cannot extend the wait past max_wait_ms
+        let mut b = DynamicBatcher::new(vec![4], 30.0);
+        let mut loose = req(0, "m", 50);
+        loose.slo_ms = Some(100_000.0);
+        b.push(0.0, loose);
+        assert!(b.poll(29.0).is_none());
+        assert!(b.poll(31.0).is_some(), "max_wait still bounds the wait");
+    }
+
+    #[test]
+    fn next_deadline_in_returns_true_minimum_over_queue() {
+        // satellite fix: the ingest sleep must key off the earliest
+        // deadline anywhere in the queue, not the head's arrival
+        let mut b = DynamicBatcher::new(vec![4], 50.0);
+        b.push(0.0, req(0, "m", 50)); // deadline 50
+        assert!((b.next_deadline_in(10.0).unwrap() - 40.0).abs() < 1e-9);
+        let mut tight = req(1, "other", 50);
+        tight.slo_ms = Some(20.0); // deadline 5 + 5 = 10
+        b.push(5.0, tight);
+        assert!(
+            (b.next_deadline_in(6.0).unwrap() - 4.0).abs() < 1e-9,
+            "tight SLO behind the head must bound the sleep"
+        );
+        // past-due deadlines clamp to zero
+        assert_eq!(b.next_deadline_in(99.0), Some(0.0));
+        let empty = DynamicBatcher::new(vec![4], 50.0);
+        assert_eq!(empty.next_deadline_in(0.0), None);
+    }
+
+    #[test]
+    fn adaptive_width_widens_on_hits_and_narrows_on_divergence() {
+        use crate::pipeline::CacheOutcome;
+        let w = DivergenceAdaptiveWidth::new();
+        let base = w.width();
+        assert!((base - GUIDANCE_BUCKET_WIDTH).abs() < 1e-9);
+        // a clean window of hits widens the bucket
+        for _ in 0..32 {
+            w.record(&CacheOutcome::Hit);
+        }
+        assert!((w.width() - base * 2.0).abs() < 1e-9, "width must widen");
+        // misses/uncached carry no signal
+        for _ in 0..100 {
+            w.record(&CacheOutcome::Miss);
+            w.record(&CacheOutcome::Uncached);
+        }
+        assert!((w.width() - base * 2.0).abs() < 1e-9);
+        // a divergence-heavy window narrows back
+        for _ in 0..32 {
+            w.record(&CacheOutcome::Diverged { step: 3 });
+        }
+        assert!((w.width() - base).abs() < 1e-9, "width must narrow under pressure");
+        // and never narrows below the plan-cache base width
+        for _ in 0..64 {
+            w.record(&CacheOutcome::Diverged { step: 3 });
+        }
+        assert!((w.width() - base).abs() < 1e-9);
+    }
+
+    #[test]
+    fn widened_affinity_groups_neighbouring_guidance() {
+        use crate::pipeline::CacheOutcome;
+        // guidance 3.0 vs 3.3: different base buckets, same widened bucket
+        let width = Arc::new(DivergenceAdaptiveWidth::new());
+        for _ in 0..64 {
+            width.record(&CacheOutcome::Hit); // level 2: width 1.0
+        }
+        assert!((width.width() - GUIDANCE_BUCKET_WIDTH * 4.0).abs() < 1e-9);
+        let mut b = DynamicBatcher::with_width(vec![2], 50.0, width);
+        let mut r0 = req(0, "m", 50);
+        r0.guidance = 3.0;
+        let mut r1 = req(1, "m", 50);
+        r1.guidance = 7.0; // still a different widened bucket
+        let mut r2 = req(2, "m", 50);
+        r2.guidance = 3.3; // same widened bucket as the head
+        b.push(0.0, r0);
+        b.push(0.0, r1);
+        b.push(0.0, r2);
+        let batch = b.poll(0.0).expect("bucket fillable");
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![0, 2], "widened width must make 3.3 a replay twin of 3.0");
     }
 }

@@ -187,6 +187,32 @@ impl MetricsLog {
         }
     }
 
+    /// One continuous-engine run finished: fold its occupancy accounting
+    /// into pool-wide counters plus a latest-occupancy gauge. Mean
+    /// occupancy over the pool's lifetime is
+    /// `continuous_lane_steps / continuous_slot_steps`.
+    pub fn record_continuous(&mut self, stats: &crate::pipeline::ContinuousStats) {
+        self.inc("continuous_runs", 1);
+        self.inc("continuous_engine_steps", stats.steps as u64);
+        self.inc("continuous_lane_steps", stats.lane_steps as u64);
+        self.inc("continuous_slot_steps", stats.slot_steps as u64);
+        self.inc("lanes_admitted", stats.admitted as u64);
+        self.inc("lanes_completed", stats.completed as u64);
+        self.set_gauge("continuous_occupancy", stats.occupancy());
+    }
+
+    /// SLO attainment: one request finished `latency_ms` after submission
+    /// against an optional end-to-end target. No-SLO traffic records
+    /// nothing, so `slo_met / (slo_met + slo_missed)` is attainment over
+    /// exactly the requests that asked for a deadline.
+    pub fn record_slo(&mut self, latency_ms: f64, slo_ms: Option<f64>) {
+        match slo_ms {
+            Some(slo) if latency_ms <= slo => self.inc("slo_met", 1),
+            Some(_) => self.inc("slo_missed", 1),
+            None => {}
+        }
+    }
+
     pub fn histogram(&self, name: &str) -> Option<&Histogram> {
         self.histograms.get(name)
     }
@@ -327,6 +353,33 @@ mod tests {
         let text = m.render();
         assert!(text.contains("sada_steps_prune_hit_total 2"));
         assert!(text.contains("sada_steps_degraded_prune_total 1"));
+    }
+
+    #[test]
+    fn continuous_and_slo_metrics_accumulate() {
+        let mut m = MetricsLog::new();
+        let stats = crate::pipeline::ContinuousStats {
+            steps: 30,
+            lane_steps: 58,
+            slot_steps: 60,
+            admitted: 6,
+            completed: 6,
+            wall_ms: 12.0,
+        };
+        m.record_continuous(&stats);
+        m.record_continuous(&stats);
+        assert_eq!(m.counter("continuous_runs"), 2);
+        assert_eq!(m.counter("continuous_lane_steps"), 116);
+        assert_eq!(m.counter("continuous_slot_steps"), 120);
+        assert_eq!(m.counter("lanes_admitted"), 12);
+        m.record_slo(10.0, Some(20.0));
+        m.record_slo(30.0, Some(20.0));
+        m.record_slo(1e9, None); // no SLO: no signal either way
+        assert_eq!(m.counter("slo_met"), 1);
+        assert_eq!(m.counter("slo_missed"), 1);
+        let text = m.render();
+        assert!(text.contains("sada_continuous_occupancy"));
+        assert!(text.contains("sada_slo_met_total 1"));
     }
 
     #[test]

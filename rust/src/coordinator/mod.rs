@@ -8,6 +8,16 @@
 //! PJRT runtime handle — pulls ready batches off a shared work queue and
 //! executes each through the per-lane batched sampling engine (the only
 //! batched execution path; single requests run `Pipeline::generate`).
+//!
+//! With [`CoordinatorConfig::continuous`] set, workers serve through the
+//! continuous engine instead: the popped batch seeds a fixed-capacity
+//! lane set and every slot freed by a finishing lane is refilled at step
+//! granularity by stealing compatible queued requests mid-flight
+//! (`WorkQueue::steal_compatible`). Batch formation is SLO-aware either
+//! way — queued requests carry earliest-deadline-first batch deadlines —
+//! and replay-affinity grouping quantizes guidance through a shared
+//! [`batcher::DivergenceAdaptiveWidth`] the workers feed with replay
+//! outcomes.
 
 pub mod batcher;
 pub mod metrics_log;
@@ -15,7 +25,7 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use batcher::{Batch, DynamicBatcher};
+pub use batcher::{Batch, DivergenceAdaptiveWidth, DynamicBatcher};
 pub use metrics_log::MetricsLog;
 pub use request::{ServeRequest, ServeResponse};
 pub use router::Router;

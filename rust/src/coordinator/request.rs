@@ -17,6 +17,12 @@ pub struct ServeRequest {
     pub steps: usize,
     pub guidance: f32,
     pub accel: String, // "sada" | "baseline" | "adaptive" | ...
+    /// Optional end-to-end latency target (milliseconds from submission).
+    /// Tightens this request's batch-formation deadline to a fraction of
+    /// the SLO (earliest-deadline-first admission) and bounds the
+    /// dispatcher's ingest sleep; it is a scheduling target, not a kill
+    /// switch — the request is still served after the SLO lapses.
+    pub slo_ms: Option<f64>,
     pub submitted_at: Instant,
     /// Completion channel (one response per request).
     pub reply: Sender<ServeResponse>,

@@ -73,6 +73,7 @@ mod tests {
             steps,
             guidance: 1.0,
             accel: "sada".into(),
+            slo_ms: None,
             submitted_at: Instant::now(),
             reply: tx,
         }

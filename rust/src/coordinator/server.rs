@@ -36,12 +36,14 @@ use anyhow::{Context, Result};
 
 use crate::util::sync::{lock_ignore_poison, wait_ignore_poison};
 
-use super::batcher::DynamicBatcher;
+use super::batcher::{DivergenceAdaptiveWidth, DynamicBatcher};
 use super::metrics_log::{lock_metrics, MetricsLog};
 use super::request::{ServeRequest, ServeResponse};
 use super::router::Router;
 use crate::baselines::{AdaptiveDiffusion, DeepCache, TeaCache};
-use crate::pipeline::{Accelerator, GenRequest, NoAccel, Pipeline};
+use crate::pipeline::{
+    Accelerator, AdmittedLane, GenRequest, GenResult, LaneFeeder, NoAccel, Pipeline,
+};
 use crate::plancache::{schedule_fingerprint, PlanStore, SpeculativeAccel};
 use crate::runtime::{ModelBackend, Runtime};
 use crate::sada::Sada;
@@ -62,6 +64,12 @@ pub struct CoordinatorConfig {
     /// Total skip-plan cache entries per model (shared across the whole
     /// worker pool; "sada-cache" requests replay from it).
     pub plan_cache_capacity: usize,
+    /// Serve through the continuous (step-granularity) lane engine: a
+    /// worker refills freed lane slots from the shared work queue
+    /// mid-flight instead of running each batch to completion. Outputs are
+    /// bit-identical either way (admission never changes a lane's math);
+    /// this only changes when slots become available to new requests.
+    pub continuous: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -75,6 +83,7 @@ impl Default for CoordinatorConfig {
             queue_cap: 256,
             n_workers: 1,
             plan_cache_capacity: 256,
+            continuous: false,
         }
     }
 }
@@ -161,6 +170,39 @@ impl WorkQueue {
         st.alive == 0
     }
 
+    /// Non-blocking steal for the continuous engine: drain up to `free`
+    /// requests matching `(model, accel)` out of the *front-most*
+    /// compatible queued batch — the oldest waiting work a freed lane slot
+    /// can legally absorb (steps may differ; the engine runs heterogeneous
+    /// step counts). A partially-consumed batch goes back in its original
+    /// queue position so FIFO order and queue-wait accounting for the
+    /// remainder are untouched; a fully-consumed batch frees a capacity
+    /// slot, so the push side must be woken exactly as `pop` would.
+    fn steal_compatible(&self, model: &str, accel: &str, free: usize) -> Vec<ServeRequest> {
+        let mut out = Vec::new();
+        if free == 0 {
+            return out;
+        }
+        let mut st = self.lock();
+        let at = st.items.iter().position(|it| {
+            !it.requests.is_empty()
+                && it.model == model
+                && it.requests.iter().all(|r| r.accel == accel)
+        });
+        let Some(at) = at else { return out };
+        if let Some(mut item) = st.items.remove(at) {
+            let n = free.min(item.requests.len());
+            out.extend(item.requests.drain(..n));
+            if item.requests.is_empty() {
+                // the whole batch was absorbed: a queue slot opened up
+                self.cv_free.notify_one();
+            } else {
+                st.items.insert(at, item);
+            }
+        }
+        out
+    }
+
     /// Block until an item is available; `None` once closed and drained.
     fn pop(&self) -> Option<WorkItem> {
         let mut st = self.lock();
@@ -227,6 +269,10 @@ impl Coordinator {
         // one executing + one queued batch per worker keeps the pool busy
         // without letting in-flight work grow unboundedly
         let queue = Arc::new(WorkQueue::new(n_workers, 2 * n_workers));
+        // one adaptive guidance width per coordinator: the dispatcher's
+        // batchers quantize affinity signatures through it, the workers
+        // record replay outcomes into it
+        let width = Arc::new(DivergenceAdaptiveWidth::new());
         // one shared skip-plan cache per model, pool-wide
         let stores: PlanStores = Arc::new(
             cfg.models
@@ -245,9 +291,10 @@ impl Coordinator {
             let queue_i = queue.clone();
             let metrics_i = metrics.clone();
             let stores_i = stores.clone();
+            let width_i = width.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("sada-engine-{i}"))
-                .spawn(move || worker_loop(i, cfg_i, queue_i, metrics_i, stores_i));
+                .spawn(move || worker_loop(i, cfg_i, queue_i, metrics_i, stores_i, width_i));
             match spawned {
                 Ok(handle) => workers.push(handle),
                 Err(e) => {
@@ -259,9 +306,10 @@ impl Coordinator {
 
         let m2 = metrics.clone();
         let q2 = queue.clone();
+        let w2 = width.clone();
         let dispatcher = match std::thread::Builder::new()
             .name("sada-dispatch".into())
-            .spawn(move || dispatch_loop(cfg, rx, q2, m2))
+            .spawn(move || dispatch_loop(cfg, rx, q2, m2, w2))
         {
             Ok(handle) => handle,
             Err(e) => {
@@ -356,6 +404,7 @@ fn dispatch_loop(
     rx: Receiver<ServeRequest>,
     queue: Arc<WorkQueue>,
     metrics: Arc<Mutex<MetricsLog>>,
+    width: Arc<DivergenceAdaptiveWidth>,
 ) -> Result<()> {
     // close the queue on every exit path, including panic-unwind: workers
     // blocked in pop() must never outlive the dispatcher
@@ -369,7 +418,9 @@ fn dispatch_loop(
 
     let router = Router::new(&cfg.models);
     let mut batchers: Vec<DynamicBatcher> = (0..router.n_queues())
-        .map(|_| DynamicBatcher::new(cfg.batch_buckets.clone(), cfg.max_wait_ms))
+        .map(|_| {
+            DynamicBatcher::with_width(cfg.batch_buckets.clone(), cfg.max_wait_ms, width.clone())
+        })
         .collect();
     let model_names = router.model_names();
     let start = Instant::now();
@@ -439,6 +490,7 @@ fn worker_loop(
     queue: Arc<WorkQueue>,
     metrics: Arc<Mutex<MetricsLog>>,
     stores: PlanStores,
+    width: Arc<DivergenceAdaptiveWidth>,
 ) -> Result<()> {
     // fires on fatal Err return AND panic-unwind: the last worker to die
     // drains the queue (dropping items fails their requests fast via the
@@ -472,7 +524,12 @@ fn worker_loop(
     while let Some(item) = queue.pop() {
         lock_metrics(&metrics)
             .observe_queue_wait_ms(item.ready_at.elapsed().as_secs_f64() * 1e3);
-        match execute_batch(&rt, &cfg, worker, item, &metrics, &mut accel_pool, &stores) {
+        let run = if cfg.continuous {
+            execute_continuous(&rt, &cfg, worker, item, &queue, &metrics, &stores, &width)
+        } else {
+            execute_batch(&rt, &cfg, worker, item, &metrics, &mut accel_pool, &stores, &width)
+        };
+        match run {
             Ok(()) => {}
             Err(e) => {
                 eprintln!("[engine worker {worker}] batch failed: {e:#}");
@@ -492,6 +549,7 @@ fn execute_batch(
     metrics: &Arc<Mutex<MetricsLog>>,
     accel_pool: &mut HashMap<AccelKey, Box<dyn Accelerator>>,
     stores: &PlanStores,
+    width: &Arc<DivergenceAdaptiveWidth>,
 ) -> Result<()> {
     let WorkItem { model, requests, ready_at: _ } = item;
     let model = model.as_str();
@@ -557,14 +615,22 @@ fn execute_batch(
             // per-outcome step-mode histogram: replayed-prune vs degraded
             // is the token-wise replay health signal
             m.record_step_modes(&res.stats);
+            // feed the divergence-adaptive affinity width (scheduling
+            // heuristic only: hits widen it, divergences narrow it)
+            width.record(&res.stats.outcome);
         }
+        m.set_gauge("affinity_guidance_width", width.width() as f64);
         if let Some(store) = stores.get(model) {
             m.set_gauge(&format!("plancache_{model}_entries"), store.len() as f64);
         }
     }
     for (req, res) in requests.into_iter().zip(results) {
         let latency_ms = req.submitted_at.elapsed().as_secs_f64() * 1e3;
-        lock_metrics(metrics).observe_ms("e2e_latency", latency_ms);
+        {
+            let mut m = lock_metrics(metrics);
+            m.observe_ms("e2e_latency", latency_ms);
+            m.record_slo(latency_ms, req.slo_ms);
+        }
         let _ = req.reply.send(ServeResponse {
             id: req.id,
             image: res.image,
@@ -572,6 +638,155 @@ fn execute_batch(
             latency_ms,
             batch_size: bsz,
         });
+    }
+    Ok(())
+}
+
+/// [`LaneFeeder`] for the serving path: seeds the continuous engine with
+/// the popped batch, then refills freed slots by stealing compatible
+/// requests out of the shared work queue mid-flight. Replies are sent from
+/// `complete`, the moment a lane finishes — not when the whole wave drains.
+struct ServeFeeder<'a> {
+    queue: &'a WorkQueue,
+    metrics: &'a Arc<Mutex<MetricsLog>>,
+    width: &'a Arc<DivergenceAdaptiveWidth>,
+    model: String,
+    accel_name: String,
+    info: &'a crate::runtime::ModelInfo,
+    cache: Option<(Arc<PlanStore>, u64)>,
+    /// Lane slots the engine exposes (reported as `batch_size`).
+    capacity: usize,
+    /// The batch that opened this engine run, admitted before any steal.
+    seed: VecDeque<ServeRequest>,
+    /// tag -> request awaiting its lane's result.
+    inflight: Vec<Option<ServeRequest>>,
+    /// Requests pulled off the work queue into freed slots.
+    stolen: usize,
+}
+
+impl ServeFeeder<'_> {
+    fn lane_for(&mut self, r: ServeRequest) -> AdmittedLane {
+        let accel = accel_for(&self.accel_name, self.info, r.steps, self.cache.clone());
+        let req = GenRequest {
+            cond: r.cond.clone(),
+            seed: r.seed,
+            guidance: r.guidance,
+            steps: r.steps,
+            edge: None,
+        };
+        let tag = self.inflight.len() as u64;
+        self.inflight.push(Some(r));
+        AdmittedLane { req, accel, tag }
+    }
+}
+
+impl LaneFeeder for ServeFeeder<'_> {
+    fn admit(&mut self, free: usize) -> Vec<AdmittedLane> {
+        let mut out = Vec::with_capacity(free);
+        while out.len() < free {
+            let Some(r) = self.seed.pop_front() else { break };
+            out.push(self.lane_for(r));
+        }
+        if out.len() < free {
+            let extra =
+                self.queue
+                    .steal_compatible(&self.model, &self.accel_name, free - out.len());
+            self.stolen += extra.len();
+            for r in extra {
+                out.push(self.lane_for(r));
+            }
+        }
+        out
+    }
+
+    fn complete(&mut self, tag: u64, result: GenResult) {
+        let Some(slot) = self.inflight.get_mut(tag as usize) else { return };
+        let Some(req) = slot.take() else { return };
+        let latency_ms = req.submitted_at.elapsed().as_secs_f64() * 1e3;
+        self.width.record(&result.stats.outcome);
+        {
+            let mut m = lock_metrics(self.metrics);
+            m.observe_ms("e2e_latency", latency_ms);
+            m.record_cache_outcome(&result.stats.outcome);
+            m.record_step_modes(&result.stats);
+            m.record_slo(latency_ms, req.slo_ms);
+        }
+        let _ = req.reply.send(ServeResponse {
+            id: req.id,
+            image: result.image,
+            stats: result.stats,
+            latency_ms,
+            batch_size: self.capacity,
+        });
+    }
+}
+
+/// Continuous-serving worker entry: one popped batch opens an engine run
+/// sized to the largest compiled bucket, and the engine keeps its slots
+/// full by admitting queued compatible requests at step granularity until
+/// both the seed batch and the steal source run dry. Per-lane outputs are
+/// bit-identical to `execute_batch` (admission timing never enters lane
+/// math); only scheduling changes.
+fn execute_continuous(
+    rt: &Runtime,
+    cfg: &CoordinatorConfig,
+    worker: usize,
+    item: WorkItem,
+    queue: &Arc<WorkQueue>,
+    metrics: &Arc<Mutex<MetricsLog>>,
+    stores: &PlanStores,
+    width: &Arc<DivergenceAdaptiveWidth>,
+) -> Result<()> {
+    let WorkItem { model, requests, ready_at: _ } = item;
+    let Some(head) = requests.first() else {
+        anyhow::bail!("continuous engine popped an empty batch");
+    };
+    let accel_name = head.accel.clone();
+    let backend = rt.model_backend(&model)?;
+    // flow-matching models require the flow solver regardless of the
+    // configured default (the manifest's predict field is authoritative)
+    let solver = if backend.info().predict == "v" {
+        SolverKind::Flow
+    } else {
+        cfg.solver
+    };
+    let schedule = rt.manifest.schedule.to_schedule();
+    let pipe = Pipeline::with_schedule(&backend, solver, schedule.clone());
+    let cache = stores
+        .get(&model)
+        .map(|s| (s.clone(), schedule_fingerprint(solver.name(), &schedule)));
+    // slots: at least the seed batch, up to the largest compiled bucket
+    // (full-bucket launches stay reachable as steals refill the engine)
+    let capacity = cfg
+        .batch_buckets
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or(1)
+        .max(requests.len());
+    let mut feeder = ServeFeeder {
+        queue,
+        metrics,
+        width,
+        model: model.clone(),
+        accel_name,
+        info: backend.info(),
+        cache,
+        capacity,
+        seed: requests.into(),
+        inflight: Vec::new(),
+        stolen: 0,
+    };
+    let t0 = Instant::now();
+    let stats = pipe.generate_continuous(capacity, &mut feeder)?;
+    let mut m = lock_metrics(metrics);
+    m.observe_execute_ms(t0.elapsed().as_secs_f64() * 1e3);
+    m.record_worker_batch(worker);
+    m.record_continuous(&stats);
+    m.inc("lanes_admitted_midflight", feeder.stolen as u64);
+    m.set_gauge("affinity_guidance_width", width.width() as f64);
+    if let Some(store) = stores.get(&model) {
+        m.set_gauge(&format!("plancache_{model}_entries"), store.len() as f64);
     }
     Ok(())
 }
@@ -658,6 +873,79 @@ mod tests {
     fn default_config_is_single_worker() {
         assert_eq!(CoordinatorConfig::default().n_workers, 1);
         assert!(CoordinatorConfig::default().plan_cache_capacity > 0);
+        assert!(
+            !CoordinatorConfig::default().continuous,
+            "run-to-completion batching stays the default"
+        );
+    }
+
+    fn sreq(id: u64, accel: &str) -> ServeRequest {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        ServeRequest {
+            id: crate::coordinator::request::RequestId(id),
+            model: "m".into(),
+            cond: crate::tensor::Tensor::zeros(&[1, 4]),
+            seed: id,
+            steps: 10,
+            guidance: 2.0,
+            accel: accel.into(),
+            slo_ms: None,
+            submitted_at: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn steal_compatible_filters_and_preserves_queue_order() {
+        let q = WorkQueue::new(1, 8);
+        q.push(WorkItem {
+            model: "m".into(),
+            requests: vec![sreq(0, "baseline"), sreq(1, "baseline"), sreq(2, "baseline")],
+            ready_at: Instant::now(),
+        });
+        q.push(WorkItem {
+            model: "m".into(),
+            requests: vec![sreq(3, "sada")],
+            ready_at: Instant::now(),
+        });
+        let ids = |v: &[ServeRequest]| v.iter().map(|r| r.id.0).collect::<Vec<_>>();
+        // no free slots / no matching accel: nothing moves
+        assert!(q.steal_compatible("m", "baseline", 0).is_empty());
+        assert!(q.steal_compatible("m", "deepcache", 4).is_empty());
+        assert!(q.steal_compatible("other", "baseline", 4).is_empty());
+        // partial steal: remainder keeps its (front) queue position
+        assert_eq!(ids(&q.steal_compatible("m", "baseline", 2)), vec![0, 1]);
+        // accel filter skips past the front remainder to the sada batch
+        assert_eq!(ids(&q.steal_compatible("m", "sada", 4)), vec![3]);
+        assert_eq!(ids(&q.steal_compatible("m", "baseline", 4)), vec![2]);
+        q.close();
+        assert!(q.pop().is_none(), "fully-stolen batches leave the queue");
+    }
+
+    #[test]
+    fn stealing_a_whole_batch_unblocks_a_full_queue_pusher() {
+        // consuming the last request of a queued batch frees a capacity
+        // slot exactly like pop(): a blocked dispatcher push must wake
+        let q = Arc::new(WorkQueue::new(1, 1));
+        q.push(WorkItem {
+            model: "m".into(),
+            requests: vec![sreq(0, "baseline")],
+            ready_at: Instant::now(),
+        });
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || {
+            q2.push(WorkItem {
+                model: "m".into(),
+                requests: vec![sreq(1, "baseline")],
+                ready_at: Instant::now(),
+            });
+            true
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!pusher.is_finished(), "push past capacity must block");
+        assert_eq!(q.steal_compatible("m", "baseline", 4).len(), 1);
+        assert!(pusher.join().unwrap());
+        assert_eq!(q.pop().unwrap().requests.len(), 1);
     }
 
     #[test]

@@ -25,6 +25,11 @@ commands:
              hit rate + NFE/latency cut of speculative warm-start replay on a
              repeated/near-duplicate prompt trace (serve also takes accel
              sada-cache); writes BENCH_serving.json
+  continuous continuous-batching sweep (--model sd2_tiny --n 48 --capacity 4
+             --base 10): step-granularity admission vs run-to-completion on a
+             saturated heterogeneous-steps queue (occupancy + engine steps +
+             steps/s), plus SLO attainment through a continuous-mode
+             coordinator; writes BENCH_serving.json
   table1     main results table        (--samples 64 --steps 50)
   table2     few-step ablation         (--samples 32)
   ablate     SADA component ablation    (--samples 16 --steps 50)
@@ -84,6 +89,13 @@ fn main() -> Result<()> {
             steps,
             o.usize_or("n", 48),
             o.usize_or("unique", 6),
+        )?,
+        "continuous" => exp::serving::run_continuous_sweep(
+            &artifacts,
+            o.str_or("model", "sd2_tiny"),
+            o.usize_or("n", 48),
+            o.usize_or("capacity", 4),
+            o.usize_or("base", 10),
         )?,
         "serve" => exp::serving::run_with_load(
             &artifacts,

@@ -1,4 +1,5 @@
-//! Per-lane batched sampling engine.
+//! Per-lane batched sampling engine with step-granularity continuous
+//! admission.
 //!
 //! SADA's stability criterion is *per-trajectory* (Criterion 3.4): different
 //! prompts stabilize at different times, so a batched sampler that computes
@@ -15,9 +16,10 @@
 //!    buffers and executed through the largest fitting compiled
 //!    `full_b{n}` bucket
 //!    ([`crate::runtime::manifest::split_into_buckets`]), grouped by
-//!    guidance scalar (a compiled variant takes one `gs` input); oversized
-//!    gathers split across several bucket launches plus `full` singles, so
-//!    **no compiled bucket of the exact batch size is ever required**;
+//!    guidance scalar *and* timestep (a compiled variant takes one `gs`
+//!    and one `t` input); oversized gathers split across several bucket
+//!    launches plus `full` singles, so **no compiled bucket of the exact
+//!    batch size is ever required**;
 //! 3. model outputs are scattered back and every lane advances through its
 //!    own solver; skipping lanes extrapolate lane-locally (AM-3 /
 //!    Lagrange, Thm 3.5–3.7) at zero model cost — a skipping lane drops
@@ -32,6 +34,29 @@
 //! with no compiled buckets the lane engine is feature-equivalent — and
 //! bit-identical — to per-request sequential generation, while bucketed
 //! lanes trade the degraded-variant discount for gather throughput.
+//!
+//! **Continuous batching.** The engine core ([`Pipeline::generate_continuous`])
+//! runs a fixed number of *slots* rather than a fixed batch: lanes join and
+//! leave a running engine at step granularity. Every step the engine offers
+//! its free slots to a caller-supplied [`LaneFeeder`]; admitted requests
+//! start stepping on the very next engine step, and a lane's result is
+//! handed back through [`LaneFeeder::complete`] the step it finishes — the
+//! freed slot is offered for re-admission on the following step, so no slot
+//! idles while the feeder has queued work. Because every lane's state is
+//! private (own solver grid, own step index, own accelerator), admission
+//! timing cannot perturb any other lane, and each lane's output is
+//! **bit-identical to its solo [`Pipeline::generate`] run regardless of
+//! when it was admitted** (property-tested below and in
+//! `tests/arena_properties.rs`). Lanes need not share a step count: the
+//! fewest-launches bucket split is re-run over the *live* lane set each
+//! step, with the `(guidance, t)` group key keeping compiled-variant
+//! scalar inputs exact. Admission into a previously-used slot reuses every
+//! lane buffer in place (state re-drawn via [`Tensor::fill_from_rng`],
+//! aux slots re-ensured against the arena) — an O(1) per-event cost that
+//! never touches the steady-state zero-allocation discipline.
+//! [`Pipeline::generate_lanes`] is now a thin wrapper: a one-shot feeder
+//! that admits the whole batch into `reqs.len()` slots and collects
+//! results in request order.
 //!
 //! **CacheWarm lanes.** A lane replaying a verified cached plan with
 //! token-pruned (or shallow) directives signals the fresh step feeding
@@ -57,6 +82,8 @@
 //! the pipeline's [`crate::tensor::arena::TensorArena`] (released after
 //! the scatter); and the per-step bookkeeping (plans, guidance groups,
 //! bucket splits) lives in vectors allocated once before the loop.
+//! Admission and completion are bounded per-event costs (solver grid,
+//! stats vector, result assembly), never per-step ones.
 
 use anyhow::Result;
 
@@ -108,11 +135,67 @@ pub enum LaneMode {
     Lockstep,
 }
 
-/// One request's private slice of the batch, with its reusable step
-/// buffers (the zero-allocation discipline: buffers are written in place
-/// every step and swapped, never reallocated).
-struct Lane<'r> {
-    req: &'r GenRequest,
+/// One request admitted into the continuous engine: the request itself, a
+/// fresh accelerator instance for its lane, and a caller-chosen `tag`
+/// echoed back verbatim through [`LaneFeeder::complete`].
+pub struct AdmittedLane {
+    pub req: GenRequest,
+    pub accel: Box<dyn Accelerator>,
+    pub tag: u64,
+}
+
+/// The continuous engine's request source and result sink.
+///
+/// `admit(free)` is called once per engine step while `free > 0` slots are
+/// idle (including before the first step) and may return up to `free`
+/// lanes to admit; returning an empty vector leaves the slots idle for
+/// this step. The engine stops when every slot is idle and `admit` returns
+/// nothing. `complete(tag, result)` delivers a lane's result the step it
+/// finishes — its slot is offered back to `admit` on the next step.
+pub trait LaneFeeder {
+    fn admit(&mut self, free: usize) -> Vec<AdmittedLane>;
+    fn complete(&mut self, tag: u64, result: GenResult);
+}
+
+/// Occupancy accounting for one continuous-engine run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ContinuousStats {
+    /// Engine steps executed (each step advances every active lane once).
+    pub steps: usize,
+    /// Sum over steps of the number of active lanes (useful work).
+    pub lane_steps: usize,
+    /// Sum over steps of the slot count (`steps * capacity`).
+    pub slot_steps: usize,
+    /// Lanes admitted over the run.
+    pub admitted: usize,
+    /// Lanes completed over the run (equals `admitted` on clean exit).
+    pub completed: usize,
+    /// Wall-clock time of the whole engine run.
+    pub wall_ms: f64,
+}
+
+impl ContinuousStats {
+    /// Mean bucket occupancy: fraction of slot-steps that carried an
+    /// active lane. 1.0 means no slot ever idled while the engine ran.
+    pub fn occupancy(&self) -> f64 {
+        self.lane_steps as f64 / self.slot_steps.max(1) as f64
+    }
+}
+
+/// One slot's private lane state, with its reusable step buffers (the
+/// zero-allocation discipline: buffers are written in place every step and
+/// swapped, never reallocated; admission into a used slot refills them in
+/// place).
+struct Lane {
+    /// Whether this slot currently carries a live request.
+    active: bool,
+    /// Feeder-chosen identity of the current occupant.
+    tag: u64,
+    /// The occupant's own step index (lanes need not be step-aligned).
+    step: usize,
+    /// The occupant's total step count.
+    steps: usize,
+    req: GenRequest,
     solver: Box<dyn Solver>,
     accel: Box<dyn Accelerator>,
     wants_obs: bool,
@@ -127,8 +210,8 @@ struct Lane<'r> {
     executed: bool,
     x0: Tensor,
     y: Tensor,
-    /// Persistent model args: `x` slot copied in place per call, cond/edge
-    /// cloned once at lane init.
+    /// Persistent model args: `x` slot copied in place per call, cond
+    /// buffer reused across occupants when shapes match.
     args: ModelArgs,
     /// DeepCache deep feature from this lane's last *single* full run.
     /// Bucketed launches *invalidate* it (batched aux layouts are not
@@ -139,16 +222,21 @@ struct Lane<'r> {
     /// (same retained-slot discipline).
     caches: AuxSlot,
     stats: RunStats,
+    /// Started at admission: per-lane wall time, not engine wall time.
+    timer: crate::report::Timer,
 }
 
-/// Step-loop bookkeeping allocated once per `generate_lanes` call and
-/// reused every step (cleared, never reallocated at steady state).
+/// Step-loop bookkeeping allocated once per engine run and reused every
+/// step (cleared, never reallocated at steady state).
 struct LaneScratch {
-    /// Per-step plans, lane-indexed.
+    /// Per-step plans, slot-indexed (inactive slots hold an inert
+    /// placeholder that every consumer skips).
     plans: Vec<StepPlan>,
-    /// Guidance groups: parallel key/member vectors in first-appearance
-    /// order; member vectors are recycled across steps.
-    group_keys: Vec<u32>,
+    /// Full-execution groups keyed by `(guidance bits, t_norm bits)` — a
+    /// compiled variant takes one `gs` and one `t` input, so only lanes
+    /// sharing both may gather. Parallel key/member vectors in
+    /// first-appearance order; member vectors are recycled across steps.
+    group_keys: Vec<(u32, u64)>,
     group_members: Vec<Vec<usize>>,
     /// Per-group partition of members into edge-conditioned singles and
     /// batchable lanes.
@@ -159,6 +247,27 @@ struct LaneScratch {
     splits: Vec<Vec<usize>>,
     /// Compiled `full_b{n}` variant names, built once.
     bucket_variants: Vec<(usize, String)>,
+}
+
+/// One-shot feeder behind [`Pipeline::generate_lanes`]: admits the whole
+/// batch on the first offer and collects results by request index.
+struct CollectFeeder {
+    pending: Vec<AdmittedLane>,
+    results: Vec<Option<GenResult>>,
+}
+
+impl LaneFeeder for CollectFeeder {
+    fn admit(&mut self, free: usize) -> Vec<AdmittedLane> {
+        let n = free.min(self.pending.len());
+        // xtask: allow(alloc): per-batch admission handoff, not a step cost
+        self.pending.drain(..n).collect()
+    }
+
+    fn complete(&mut self, tag: u64, result: GenResult) {
+        if let Some(slot) = self.results.get_mut(tag as usize) {
+            *slot = Some(result);
+        }
+    }
 }
 
 impl<'a, B: ModelBackend> Pipeline<'a, B> {
@@ -186,86 +295,117 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             reqs.iter().all(|r| r.steps == steps),
             "lane batch must share step count"
         );
-        // xtask: allow(alloc, begin): per-batch init — lane state, step
-        // buffers, bucket-split tables and aux slots are allocated once
-        // here; the per-step loop below reuses them in place
+        // xtask: allow(alloc, begin): per-batch wrapper assembly — the
+        // one-shot feeder and its request copies are built once per call
+        let mut feeder = CollectFeeder {
+            pending: reqs
+                .iter()
+                .enumerate()
+                .map(|(li, req)| AdmittedLane {
+                    req: req.clone(),
+                    accel: factory.make(li),
+                    tag: li as u64,
+                })
+                .collect(),
+            results: (0..reqs.len()).map(|_| None).collect(),
+        };
+        // xtask: allow(alloc, end)
+        self.run_continuous(reqs.len(), &mut feeder, mode)?;
+        // xtask: allow(alloc): per-batch result assembly, once per call
+        feeder
+            .results
+            .into_iter()
+            .enumerate()
+            .map(|(k, r)| r.ok_or_else(|| anyhow::anyhow!("lane {k} produced no result")))
+            .collect()
+    }
+
+    /// Run the continuous-batching engine: `capacity` slots, fed at step
+    /// granularity by `feeder` (see [`LaneFeeder`] for the admission
+    /// contract). Returns occupancy accounting; per-lane results flow
+    /// through [`LaneFeeder::complete`] as lanes finish.
+    pub fn generate_continuous<F: LaneFeeder + ?Sized>(
+        &self,
+        capacity: usize,
+        feeder: &mut F,
+    ) -> Result<ContinuousStats> {
+        self.run_continuous(capacity, feeder, LaneMode::PerLane)
+    }
+
+    /// The engine core shared by [`Pipeline::generate_continuous`] and the
+    /// fixed-batch wrappers.
+    fn run_continuous<F: LaneFeeder + ?Sized>(
+        &self,
+        capacity: usize,
+        feeder: &mut F,
+        mode: LaneMode,
+    ) -> Result<ContinuousStats> {
+        anyhow::ensure!(capacity > 0, "continuous engine needs at least one slot");
+        // xtask: allow(alloc, begin): engine init — the slot vector, bucket
+        // split tables and step bookkeeping are allocated once here; the
+        // per-step loop below reuses them in place
         let info = self.backend.info().clone();
         let buckets = info.full_batch_buckets();
-        let [h, w, c] = info.img;
-        let shape = [1, h, w, c];
-
-        let mut lanes: Vec<Lane> = reqs
-            .iter()
-            .enumerate()
-            .map(|(li, req)| {
-                let mut solver = build_solver(self.solver_kind, self.schedule(), steps);
-                solver.reset();
-                let mut accel = factory.make(li);
-                accel.reset();
-                accel.begin_run(req);
-                let mut rng = crate::rng::Rng::new(req.seed);
-                let x = Tensor::from_rng(&mut rng, &shape);
-                let stats = RunStats::new(accel.name(), steps);
-                let wants_obs = accel.wants_obs();
-                // aux slots hold arena buffers for the whole run (retired
-                // at the end), so single captures refill in place
-                let mut deep = AuxSlot::new();
-                let mut caches = AuxSlot::new();
-                deep.ensure(&self.arena, &info.deep_shape());
-                caches.ensure(&self.arena, &info.caches_shape());
-                Lane {
-                    req,
-                    solver,
-                    wants_obs,
-                    accel,
-                    x,
-                    x_next: Tensor::zeros(&shape),
-                    m_out: Tensor::zeros(&shape),
-                    last_out: Tensor::zeros(&shape),
-                    has_last: false,
-                    executed: false,
-                    x0: Tensor::zeros(&shape),
-                    y: Tensor::zeros(&shape),
-                    args: ModelArgs {
-                        x: Some(Tensor::zeros(&shape)),
-                        t: 0.0,
-                        cond: Some(req.cond.clone()),
-                        gs: req.guidance,
-                        edge: req.edge.clone(),
-                        ..Default::default()
-                    },
-                    deep,
-                    caches,
-                    stats,
-                }
-            })
-            .collect();
-
-        // step-loop bookkeeping, allocated once (steady-state steps reuse)
+        let mut lanes: Vec<Lane> = Vec::with_capacity(capacity);
         let mut sc = LaneScratch {
-            plans: Vec::with_capacity(lanes.len()),
-            group_keys: Vec::with_capacity(lanes.len()),
+            plans: Vec::with_capacity(capacity),
+            group_keys: Vec::with_capacity(capacity),
             group_members: Vec::new(),
-            singles: Vec::with_capacity(lanes.len()),
-            batchable: Vec::with_capacity(lanes.len()),
-            splits: (0..=lanes.len()).map(|n| split_into_buckets(n, &buckets)).collect(),
+            singles: Vec::with_capacity(capacity),
+            batchable: Vec::with_capacity(capacity),
+            splits: (0..=capacity).map(|n| split_into_buckets(n, &buckets)).collect(),
             bucket_variants: buckets
                 .iter()
                 .map(|&n| (n, ModelInfo::full_variant_for(n)))
                 .collect(),
         };
+        let mut stats = ContinuousStats::default();
         // xtask: allow(alloc, end)
 
         let timer = crate::report::Timer::start();
-        for i in 0..steps {
-            // 1) every lane plans independently from its own history
+        loop {
+            // admission: every step with idle slots offers them to the
+            // feeder; admitted lanes step starting this engine step
+            let mut active = lanes.iter().filter(|l| l.active).count();
+            if active < capacity {
+                // xtask: allow(alloc, begin): admission event — bounded
+                // per-admitted-lane cost (solver grid, stats vector, feeder
+                // handoff), never a steady-state step cost
+                let admitted = feeder.admit(capacity - active);
+                anyhow::ensure!(
+                    admitted.len() <= capacity - active,
+                    "feeder admitted {} lanes into {} free slots",
+                    admitted.len(),
+                    capacity - active
+                );
+                for a in admitted {
+                    self.admit_lane(&mut lanes, capacity, &info, a)?;
+                    stats.admitted += 1;
+                    active += 1;
+                }
+                // xtask: allow(alloc, end)
+            }
+            if active == 0 {
+                break;
+            }
+            stats.steps += 1;
+            stats.lane_steps += active;
+            stats.slot_steps += capacity;
+
+            // 1) every active lane plans independently from its own history
             sc.plans.clear();
             for lane in lanes.iter_mut() {
+                if !lane.active {
+                    // inert placeholder keeps sc.plans slot-indexed; every
+                    // consumer below skips inactive slots
+                    sc.plans.push(StepPlan::Full);
+                    continue;
+                }
                 let ctx = StepCtx {
-                    i,
-                    n_steps: steps,
+                    i: lane.step,
+                    n_steps: lane.steps,
                     x: &lane.x,
-                    t_norm: lane.solver.t_norm(i),
+                    t_norm: lane.solver.t_norm(lane.step),
                     have_caches: lane.caches.is_valid(),
                     have_deep: lane.deep.is_valid(),
                 };
@@ -284,15 +424,20 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 sc.plans.push(plan);
             }
             if mode == LaneMode::Lockstep
-                && sc.plans.iter().any(|p| {
-                    !matches!(
-                        p,
-                        StepPlan::SkipReuse | StepPlan::SkipExtrapolate | StepPlan::SkipLagrange
-                    )
+                && lanes.iter().zip(sc.plans.iter()).any(|(lane, p)| {
+                    lane.active
+                        && !matches!(
+                            p,
+                            StepPlan::SkipReuse
+                                | StepPlan::SkipExtrapolate
+                                | StepPlan::SkipLagrange
+                        )
                 })
             {
-                for p in sc.plans.iter_mut() {
-                    *p = StepPlan::Full;
+                for (lane, p) in lanes.iter().zip(sc.plans.iter_mut()) {
+                    if lane.active {
+                        *p = StepPlan::Full;
+                    }
                 }
             }
 
@@ -301,14 +446,19 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             for lane in lanes.iter_mut() {
                 lane.executed = false;
             }
-            self.execute_planned_lanes(&mut lanes, i, &mut sc)?;
+            self.execute_planned_lanes(&mut lanes, &mut sc)?;
 
-            // 3) every lane advances through its own solver + accelerator.
-            // The arms below mirror Pipeline::generate's step body — keep
-            // the two in lockstep (the NoAccel/DeepCache bit-identity
-            // property tests pin the executed paths against drift).
+            // 3) every active lane advances through its own solver +
+            // accelerator. The arms below mirror Pipeline::generate's step
+            // body — keep the two in lockstep (the NoAccel/DeepCache
+            // bit-identity property tests pin the executed paths against
+            // drift).
             for (l, lane) in lanes.iter_mut().enumerate() {
+                if !lane.active {
+                    continue;
+                }
                 let plan = &sc.plans[l];
+                let i = lane.step;
                 let t_norm = lane.solver.t_norm(i);
                 let fresh = lane.executed;
                 match plan {
@@ -357,7 +507,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                     }
                     let obs = StepObs {
                         i,
-                        n_steps: steps,
+                        n_steps: lane.steps,
                         fresh,
                         x_prev: &lane.x,
                         x_next: &lane.x_next,
@@ -373,52 +523,177 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 std::mem::swap(&mut lane.m_out, &mut lane.last_out);
                 lane.has_last = true;
                 std::mem::swap(&mut lane.x, &mut lane.x_next);
+                lane.step += 1;
+                if lane.step == lane.steps {
+                    // completion: hand the result to the feeder and free
+                    // the slot — it is offered for re-admission on the
+                    // next engine step. Aux buffers stay retained for the
+                    // next occupant's in-place refill.
+                    // xtask: allow(alloc, begin): completion event —
+                    // result assembly is a per-run cost, not a step cost
+                    let mut st =
+                        std::mem::replace(&mut lane.stats, RunStats::new(String::new(), 0));
+                    st.wall_ms = lane.timer.elapsed_ms();
+                    st.nfe = st.fresh_steps;
+                    st.outcome = lane.accel.outcome();
+                    st.degraded.add(&lane.accel.planned_degradations());
+                    feeder.complete(lane.tag, GenResult { image: lane.x.clone(), stats: st });
+                    // xtask: allow(alloc, end)
+                    lane.active = false;
+                    stats.completed += 1;
+                }
             }
         }
 
-        let wall_ms = timer.elapsed_ms();
-        // aux buffers go back to the pool for the next batch's lanes
+        stats.wall_ms = timer.elapsed_ms();
+        // aux buffers go back to the pool for the next engine run's lanes
         for lane in lanes.iter_mut() {
             lane.deep.retire(&self.arena);
             lane.caches.retire(&self.arena);
         }
-        // xtask: allow(alloc, begin): end-of-run results assembly, not steady state
-        Ok(lanes
-            .into_iter()
-            .map(|mut lane| {
-                lane.stats.wall_ms = wall_ms;
-                lane.stats.nfe = lane.stats.fresh_steps;
-                lane.stats.outcome = lane.accel.outcome();
-                lane.stats.degraded.add(&lane.accel.planned_degradations());
-                GenResult { image: lane.x, stats: lane.stats }
-            })
-            .collect())
-        // xtask: allow(alloc, end)
+        Ok(stats)
     }
 
-    /// Execute every lane whose plan needs the model at step `i`, writing
-    /// outputs into each lane's `m_out` buffer (`executed` marks success).
-    /// Shallow/Prune lanes run as singles with lane-local aux features
-    /// (those variants are compiled at batch 1 only). Full lanes are
-    /// grouped by guidance scalar (one `gs` input per compiled variant),
-    /// edge-conditioned lanes run as singles (edge inputs are only
-    /// compiled for batch-1 variants), and each group is chunked across
-    /// the compiled `full_b{n}` buckets through arena-pooled gather
-    /// buffers.
-    fn execute_planned_lanes(&self, lanes: &mut [Lane], i: usize, sc: &mut LaneScratch) -> Result<()> {
+    /// Place an admitted request into a slot. The first inactive slot's
+    /// buffers are reused in place (state re-drawn from the request seed,
+    /// aux slots re-ensured against the arena — the O(1) admission
+    /// contract); while the engine holds fewer slots than `capacity`, a
+    /// fresh slot is allocated instead.
+    // Admission is a bounded per-event cost (solver grid, stats vector,
+    // cond clone on shape change, first-use slot allocation), never a
+    // per-step one.
+    // xtask: allow(alloc): per-admission-event cost, argued above
+    fn admit_lane(
+        &self,
+        lanes: &mut Vec<Lane>,
+        capacity: usize,
+        info: &ModelInfo,
+        a: AdmittedLane,
+    ) -> Result<()> {
+        let AdmittedLane { req, mut accel, tag } = a;
+        let steps = req.steps;
+        anyhow::ensure!(steps > 0, "admitted lane needs at least one step");
+        let [h, w, c] = info.img;
+        let shape = [1usize, h, w, c];
+        accel.reset();
+        accel.begin_run(&req);
+        let mut solver = build_solver(self.solver_kind, self.schedule(), steps);
+        solver.reset();
+        let wants_obs = accel.wants_obs();
+        let stats = RunStats::new(accel.name(), steps);
+        match lanes.iter_mut().position(|l| !l.active) {
+            Some(s) => {
+                // slot reuse: every tensor buffer is refilled in place
+                let lane = &mut lanes[s];
+                let mut rng = crate::rng::Rng::new(req.seed);
+                lane.x.fill_from_rng(&mut rng);
+                let cond = match lane.args.cond.take() {
+                    Some(mut cbuf) if cbuf.same_shape(&req.cond) => {
+                        cbuf.copy_from(&req.cond);
+                        Some(cbuf)
+                    }
+                    _ => Some(req.cond.clone()),
+                };
+                // rebuild args around the retained buffers so no stale
+                // per-occupant field (masks, aux handoffs) survives
+                lane.args = ModelArgs {
+                    x: lane.args.x.take(),
+                    t: 0.0,
+                    cond,
+                    gs: req.guidance,
+                    edge: req.edge.clone(),
+                    ..Default::default()
+                };
+                lane.deep.ensure(&self.arena, &info.deep_shape());
+                lane.caches.ensure(&self.arena, &info.caches_shape());
+                lane.deep.invalidate();
+                lane.caches.invalidate();
+                lane.solver = solver;
+                lane.accel = accel;
+                lane.wants_obs = wants_obs;
+                lane.stats = stats;
+                lane.has_last = false;
+                lane.executed = false;
+                lane.step = 0;
+                lane.steps = steps;
+                lane.tag = tag;
+                lane.active = true;
+                lane.timer = crate::report::Timer::start();
+                lane.req = req;
+            }
+            None => {
+                anyhow::ensure!(lanes.len() < capacity, "no free slot for admitted lane");
+                let mut rng = crate::rng::Rng::new(req.seed);
+                let x = Tensor::from_rng(&mut rng, &shape);
+                // aux slots hold arena buffers for the whole engine run
+                // (retired at the end), so single captures refill in place
+                let mut deep = AuxSlot::new();
+                let mut caches = AuxSlot::new();
+                deep.ensure(&self.arena, &info.deep_shape());
+                caches.ensure(&self.arena, &info.caches_shape());
+                lanes.push(Lane {
+                    active: true,
+                    tag,
+                    step: 0,
+                    steps,
+                    solver,
+                    accel,
+                    wants_obs,
+                    x,
+                    x_next: Tensor::zeros(&shape),
+                    m_out: Tensor::zeros(&shape),
+                    last_out: Tensor::zeros(&shape),
+                    has_last: false,
+                    executed: false,
+                    x0: Tensor::zeros(&shape),
+                    y: Tensor::zeros(&shape),
+                    args: ModelArgs {
+                        x: Some(Tensor::zeros(&shape)),
+                        t: 0.0,
+                        cond: Some(req.cond.clone()),
+                        gs: req.guidance,
+                        edge: req.edge.clone(),
+                        ..Default::default()
+                    },
+                    deep,
+                    caches,
+                    stats,
+                    timer: crate::report::Timer::start(),
+                    req,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute every active lane whose plan needs the model this engine
+    /// step, writing outputs into each lane's `m_out` buffer (`executed`
+    /// marks success). Shallow/Prune lanes run as singles with lane-local
+    /// aux features (those variants are compiled at batch 1 only). Full
+    /// lanes are grouped by `(guidance, t)` — one `gs` and one `t` input
+    /// per compiled variant, and continuous lanes need not be
+    /// step-aligned — edge-conditioned lanes run as singles (edge inputs
+    /// are only compiled for batch-1 variants), and each group is chunked
+    /// across the compiled `full_b{n}` buckets through arena-pooled
+    /// gather buffers.
+    fn execute_planned_lanes(&self, lanes: &mut [Lane], sc: &mut LaneScratch) -> Result<()> {
         // degraded variants: per-lane singles, mirroring Pipeline::generate
         for (l, plan) in sc.plans.iter().enumerate() {
+            if !lanes[l].active {
+                continue;
+            }
             match plan {
                 StepPlan::Shallow => {
                     let lane = &mut lanes[l];
-                    let t_norm = lane.solver.t_norm(i);
+                    let t_norm = lane.solver.t_norm(lane.step);
                     // xtask: allow(panic): persistent x slot — Some for the whole run
                     lane.args.x.as_mut().expect("persistent x slot").copy_from(&lane.x);
                     lane.args.t = t_norm as f32;
                     // move (not clone) the deep feature into the args and
                     // back: the shallow variant reads it but emits none
                     lane.args.deep = lane.deep.take();
-                    let run = self.backend.run_into("shallow", &lane.args, &mut lane.m_out, None, None);
+                    let run =
+                        self.backend.run_into("shallow", &lane.args, &mut lane.m_out, None, None);
                     if let Some(d) = lane.args.deep.take() {
                         lane.deep.install(d);
                     }
@@ -429,7 +704,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                     // shared prune discipline (arena-cycled caches refresh):
                     // the same single owner Pipeline::generate executes
                     let lane = &mut lanes[l];
-                    let t_norm = lane.solver.t_norm(i);
+                    let t_norm = lane.solver.t_norm(lane.step);
                     self.run_prune_into(
                         &mut lane.args,
                         mask,
@@ -443,25 +718,28 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 _ => {}
             }
         }
-        // Full lanes: group by guidance bits, preserving lane order
-        // (reused key/member vectors — no per-step allocation once every
-        // distinct guidance value has appeared)
+        // Full lanes: group by (guidance bits, t_norm bits), preserving
+        // lane order (reused key/member vectors — no per-step allocation
+        // once every distinct key has appeared)
         sc.group_keys.clear();
         for members in sc.group_members.iter_mut() {
             members.clear();
         }
         for (l, plan) in sc.plans.iter().enumerate() {
-            if *plan != StepPlan::Full {
+            if *plan != StepPlan::Full || !lanes[l].active {
                 continue;
             }
-            let key = lanes[l].req.guidance.to_bits();
+            let key = (
+                lanes[l].req.guidance.to_bits(),
+                lanes[l].solver.t_norm(lanes[l].step).to_bits(),
+            );
             let gi = match sc.group_keys.iter().position(|k| *k == key) {
                 Some(gi) => gi,
                 None => {
                     sc.group_keys.push(key);
                     if sc.group_members.len() < sc.group_keys.len() {
                         // xtask: allow(alloc): grows only when a new distinct
-                        // guidance value first appears, then is reused
+                        // (guidance, t) key first appears, then is reused
                         sc.group_members.push(Vec::new());
                     }
                     sc.group_keys.len() - 1
@@ -487,26 +765,27 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 // replay whose next fresh directive is token-pruned or
                 // shallow needs this execution's aux features, which
                 // bucketed launches cannot slice per lane
-                if lanes[l].req.edge.is_some() || lanes[l].accel.wants_aux_capture(i) {
+                if lanes[l].req.edge.is_some() || lanes[l].accel.wants_aux_capture(lanes[l].step)
+                {
                     sc.singles.push(l);
                 } else {
                     sc.batchable.push(l);
                 }
             }
             for &l in &sc.singles {
-                self.run_lane_single(&mut lanes[l], i)?;
+                self.run_lane_single(&mut lanes[l])?;
             }
             let mut at = 0usize;
             for &chunk in &sc.splits[sc.batchable.len()] {
                 if chunk == 1 {
                     let l = sc.batchable[at];
                     at += 1;
-                    self.run_lane_single(&mut lanes[l], i)?;
+                    self.run_lane_single(&mut lanes[l])?;
                     continue;
                 }
                 let lo = at;
                 at += chunk;
-                self.run_lane_bucket(lanes, &sc.batchable[lo..at], i, &sc.bucket_variants)?;
+                self.run_lane_bucket(lanes, &sc.batchable[lo..at], &sc.bucket_variants)?;
             }
         }
         Ok(())
@@ -515,8 +794,8 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
     /// Single-lane full execution: the same code path as the Full arm of
     /// [`Pipeline::generate`] (including deep/caches capture), so a lane
     /// executed alone is bit-identical to sequential generation.
-    fn run_lane_single(&self, lane: &mut Lane, i: usize) -> Result<()> {
-        let t_norm = lane.solver.t_norm(i);
+    fn run_lane_single(&self, lane: &mut Lane) -> Result<()> {
+        let t_norm = lane.solver.t_norm(lane.step);
         // xtask: allow(panic): persistent x slot — Some for the whole run
         lane.args.x.as_mut().expect("persistent x slot").copy_from(&lane.x);
         lane.args.t = t_norm as f32;
@@ -541,8 +820,8 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         Ok(())
     }
 
-    /// Bucketed full execution of `sub` (>= 2 lanes, one guidance value):
-    /// lane states and conds are gathered row-wise into arena-pooled
+    /// Bucketed full execution of `sub` (>= 2 lanes, one `(guidance, t)`
+    /// key): lane states and conds are gathered row-wise into arena-pooled
     /// `[chunk, ...]` buffers, the compiled `full_b{chunk}` variant runs
     /// into a pooled output buffer, and rows scatter back into each lane's
     /// `m_out` in place. All three buffers return to the arena, so the
@@ -551,13 +830,13 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         &self,
         lanes: &mut [Lane],
         sub: &[usize],
-        i: usize,
         bucket_variants: &[(usize, String)],
     ) -> Result<()> {
         let chunk = sub.len();
         let info = self.backend.info();
         let [h, w, c] = info.img;
-        let t_norm = lanes[sub[0]].solver.t_norm(i);
+        // every member shares the lead lane's (t, gs) by group construction
+        let t_norm = lanes[sub[0]].solver.t_norm(lanes[sub[0]].step);
         let gs = lanes[sub[0]].req.guidance;
         let variant = bucket_variants
             .iter()
@@ -627,6 +906,41 @@ mod tests {
                 steps,
                 edge: None,
             })
+            .collect()
+    }
+
+    /// Queue feeder for continuous-engine tests: admits at most
+    /// `max_per_event` queued lanes per offer, collects `(tag, result)`
+    /// pairs in completion order.
+    struct QueueFeeder {
+        queue: Vec<AdmittedLane>,
+        max_per_event: usize,
+        results: Vec<(u64, GenResult)>,
+    }
+
+    impl QueueFeeder {
+        fn new(queue: Vec<AdmittedLane>, max_per_event: usize) -> Self {
+            Self { queue, max_per_event, results: Vec::new() }
+        }
+    }
+
+    impl LaneFeeder for QueueFeeder {
+        fn admit(&mut self, free: usize) -> Vec<AdmittedLane> {
+            let n = free.min(self.max_per_event).min(self.queue.len());
+            self.queue.drain(..n).collect()
+        }
+        fn complete(&mut self, tag: u64, result: GenResult) {
+            self.results.push((tag, result));
+        }
+    }
+
+    fn admitted_for(
+        reqs: &[GenRequest],
+        make: impl Fn(usize) -> Box<dyn Accelerator>,
+    ) -> Vec<AdmittedLane> {
+        reqs.iter()
+            .enumerate()
+            .map(|(k, r)| AdmittedLane { req: r.clone(), accel: make(k), tag: k as u64 })
             .collect()
     }
 
@@ -846,5 +1160,101 @@ mod tests {
         assert_eq!(lanes[0].stats.accel, "baseline");
         assert_eq!(lanes[1].stats.accel, "sada");
         assert_eq!(lanes[0].stats.nfe, steps);
+    }
+
+    #[test]
+    fn continuous_staggered_admission_is_bit_identical_to_solo_runs() {
+        // trickle admission (one lane per offer) into 2 slots, mixed step
+        // counts: every result must match its solo run bitwise, proving
+        // admission timing and slot reuse cannot perturb a lane
+        let backend = GmBackend::with_batch_buckets(5, &[2]);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let mut reqs = reqs_for(5, 8, 63);
+        for (k, r) in reqs.iter_mut().enumerate() {
+            r.steps = [8, 11, 8, 14, 8][k];
+        }
+        let mut feeder =
+            QueueFeeder::new(admitted_for(&reqs, |_| Box::new(NoAccel)), 1);
+        let stats = pipe.generate_continuous(2, &mut feeder).unwrap();
+        assert_eq!(stats.admitted, 5);
+        assert_eq!(stats.completed, 5);
+        assert_eq!(feeder.results.len(), 5);
+        assert!(stats.occupancy() > 0.5, "stats: {stats:?}");
+        assert_eq!(stats.slot_steps, stats.steps * 2);
+        for (tag, res) in &feeder.results {
+            let solo = pipe.generate(&reqs[*tag as usize], &mut NoAccel).unwrap();
+            assert_eq!(
+                res.image.data(),
+                solo.image.data(),
+                "lane tag {tag} not bit-identical to its solo run"
+            );
+            assert_eq!(res.stats.nfe, solo.stats.nfe);
+        }
+    }
+
+    #[test]
+    fn continuous_slot_reuse_preserves_aux_dependent_accelerators() {
+        // unbucketed backend + DeepCache: shallow steps depend on the aux
+        // slots admission must invalidate-and-retain. Three waves through
+        // one slot: each occupant must match its solo run exactly.
+        let backend = GmBackend::new(17);
+        let pipe = Pipeline::new(&backend, SolverKind::Euler);
+        let reqs = reqs_for(3, 12, 29);
+        let mut feeder = QueueFeeder::new(
+            admitted_for(&reqs, |_| Box::new(crate::baselines::DeepCache::new(3))),
+            1,
+        );
+        let stats = pipe.generate_continuous(1, &mut feeder).unwrap();
+        assert_eq!(stats.completed, 3);
+        // one slot, always busy once the queue is non-empty
+        assert_eq!(stats.lane_steps, 12 * 3);
+        for (tag, res) in &feeder.results {
+            let solo = pipe
+                .generate(&reqs[*tag as usize], &mut crate::baselines::DeepCache::new(3))
+                .unwrap();
+            assert_eq!(res.image.data(), solo.image.data(), "occupant {tag}");
+            assert_eq!(res.stats.mode_trace(), solo.stats.mode_trace(), "occupant {tag}");
+            assert!(res.stats.count(crate::pipeline::StepMode::Shallow) > 4);
+        }
+    }
+
+    #[test]
+    fn continuous_keeps_slots_full_while_queue_is_nonempty() {
+        // saturated queue, uniform steps: after the fill ramp the engine
+        // must never idle a slot — occupancy equals the ideal packing
+        let backend = GmBackend::with_batch_buckets(4, &[2]);
+        let pipe = Pipeline::new(&backend, SolverKind::Euler);
+        let mut reqs = reqs_for(6, 10, 47);
+        for r in reqs.iter_mut() {
+            r.guidance = 3.0;
+        }
+        let mut feeder = QueueFeeder::new(admitted_for(&reqs, |_| Box::new(NoAccel)), 2);
+        let stats = pipe.generate_continuous(2, &mut feeder).unwrap();
+        // 6 lanes x 10 steps over 2 always-full slots: exactly 30 steps
+        assert_eq!(stats.steps, 30, "stats: {stats:?}");
+        assert_eq!(stats.lane_steps, 60);
+        assert!((stats.occupancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn continuous_engine_rejects_feeder_overfill_and_zero_capacity() {
+        let backend = GmBackend::new(6);
+        let pipe = Pipeline::new(&backend, SolverKind::Euler);
+        struct Greedy(Vec<AdmittedLane>);
+        impl LaneFeeder for Greedy {
+            fn admit(&mut self, _free: usize) -> Vec<AdmittedLane> {
+                std::mem::take(&mut self.0)
+            }
+            fn complete(&mut self, _tag: u64, _result: GenResult) {}
+        }
+        let reqs = reqs_for(3, 5, 9);
+        let mut greedy = Greedy(admitted_for(&reqs, |_| Box::new(NoAccel)));
+        assert!(pipe.generate_continuous(2, &mut greedy).is_err());
+        let mut empty = QueueFeeder::new(Vec::new(), 1);
+        assert!(pipe.generate_continuous(0, &mut empty).is_err());
+        // an empty feeder is a clean no-op run
+        let stats = pipe.generate_continuous(2, &mut empty).unwrap();
+        assert_eq!(stats.steps, 0);
+        assert_eq!(stats.completed, 0);
     }
 }

@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-pub use lanes::{AcceleratorFactory, LaneMode};
+pub use lanes::{AcceleratorFactory, AdmittedLane, ContinuousStats, LaneFeeder, LaneMode};
 pub use stats::{CacheOutcome, DegradedCounts, RunStats, StepMode};
 
 pub use crate::runtime::KeepMask;

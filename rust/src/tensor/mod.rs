@@ -117,6 +117,16 @@ impl Tensor {
         self.data.fill(v);
     }
 
+    /// Re-draw this tensor's contents from `rng` in place: the same value
+    /// sequence as [`Tensor::from_rng`] for the same rng state (element by
+    /// element `gaussian()`), with no allocation — the primitive behind
+    /// slot-reusing lane admission in the continuous engine.
+    pub fn fill_from_rng(&mut self, rng: &mut crate::rng::Rng) {
+        for v in self.data.iter_mut() {
+            *v = rng.gaussian() as f32;
+        }
+    }
+
     /// Recycle `buf` as a copy of `src` when the shapes match (no
     /// allocation); otherwise clone `src`. Used by rolling history buffers
     /// to reuse evicted entries instead of cloning every push.
@@ -178,6 +188,16 @@ mod tests {
         assert_eq!(dst.data(), src.data());
         dst.fill(-1.5);
         assert_eq!(dst.data(), &[-1.5, -1.5, -1.5]);
+    }
+
+    #[test]
+    fn fill_from_rng_matches_from_rng_bitwise() {
+        let mut r1 = crate::rng::Rng::new(42);
+        let mut r2 = crate::rng::Rng::new(42);
+        let fresh = Tensor::from_rng(&mut r1, &[2, 3, 4]);
+        let mut reused = Tensor::full(&[2, 3, 4], 9.0);
+        reused.fill_from_rng(&mut r2);
+        assert_eq!(fresh.data(), reused.data());
     }
 
     #[test]

@@ -247,6 +247,93 @@ fn always_diverging_prune_heavy_plans_fall_back_bit_identically() {
 }
 
 #[test]
+fn midflight_admitted_lanes_are_bit_identical_to_solo_runs() {
+    // Continuous engine: 5 requests stream through 2 slots, one admission
+    // per freed slot, so lanes 1..4 join a *running* engine at staggered
+    // steps (lane k starts while earlier lanes are mid-trajectory, in
+    // slots carrying another request's leftover state). Admission timing
+    // must be invisible in the output: every lane matches its sequential
+    // solo run bit for bit — image bytes, NFE, and mode trace — for every
+    // accelerator (aux-dependent ones on the unbucketed backend, the
+    // aux-independent set under bucketed gathers too).
+    use sada::pipeline::{AdmittedLane, GenResult, LaneFeeder};
+    use std::collections::VecDeque;
+
+    struct StaggerFeeder<'a> {
+        backend: &'a GmBackend,
+        accel: &'a str,
+        pending: VecDeque<GenRequest>,
+        results: Vec<Option<GenResult>>,
+        next_tag: u64,
+    }
+    impl LaneFeeder for StaggerFeeder<'_> {
+        fn admit(&mut self, free: usize) -> Vec<AdmittedLane> {
+            if free == 0 {
+                return Vec::new();
+            }
+            let Some(req) = self.pending.pop_front() else { return Vec::new() };
+            let steps = req.steps;
+            let tag = self.next_tag;
+            self.next_tag += 1;
+            vec![AdmittedLane { req, accel: accel_for(self.accel, self.backend, steps), tag }]
+        }
+        fn complete(&mut self, tag: u64, result: GenResult) {
+            if let Some(slot) = self.results.get_mut(tag as usize) {
+                *slot = Some(result);
+            }
+        }
+    }
+
+    for bucketed in [false, true] {
+        let backend = if bucketed {
+            GmBackend::with_batch_buckets(31, &[2, 4])
+        } else {
+            GmBackend::new(31)
+        };
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let steps = 18;
+        let reqs = reqs_for(5, steps, 311);
+        let accels = if bucketed { BUCKET_SAFE_ACCELS } else { ACCELS };
+        for accel in accels {
+            let ctx = format!("continuous {accel} (bucketed {bucketed})");
+            let mut feeder = StaggerFeeder {
+                backend: &backend,
+                accel,
+                pending: reqs.clone().into(),
+                results: (0..reqs.len()).map(|_| None).collect(),
+                next_tag: 0,
+            };
+            let stats = pipe.generate_continuous(2, &mut feeder).unwrap();
+            assert_eq!(stats.admitted, reqs.len(), "{ctx}: all requests admitted");
+            assert_eq!(stats.completed, reqs.len(), "{ctx}: all lanes completed");
+            assert!(
+                stats.steps > steps,
+                "{ctx}: admissions must stagger (engine ran only {} steps)",
+                stats.steps
+            );
+            for (k, req) in reqs.iter().enumerate() {
+                let res = feeder.results[k]
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("{ctx}: lane {k} produced no result"));
+                let mut solo = accel_for(accel, &backend, steps);
+                let seq = pipe.generate(req, solo.as_mut()).unwrap();
+                assert_eq!(
+                    res.image.data(),
+                    seq.image.data(),
+                    "{ctx}: lane {k} admitted mid-flight not bit-identical to solo"
+                );
+                assert_eq!(res.stats.nfe, seq.stats.nfe, "{ctx}: lane {k} NFE");
+                assert_eq!(
+                    res.stats.mode_trace(),
+                    seq.stats.mode_trace(),
+                    "{ctx}: lane {k} mode trace"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn warm_arena_checkout_release_cycles_allocate_nothing() {
     // once a shape is pooled, checkout/release must be pure recycling —
     // the zero-alloc lane loop depends on this

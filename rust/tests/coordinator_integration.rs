@@ -30,6 +30,7 @@ fn submit_n(coord: &Coordinator, n: usize, steps: usize, accel: &str) -> mpsc::R
                 steps,
                 guidance: 3.0,
                 accel: accel.into(),
+                slo_ms: None,
                 submitted_at: Instant::now(),
                 reply: tx.clone(),
             })
@@ -102,6 +103,7 @@ fn rejects_unknown_model_without_crashing() {
             steps: 10,
             guidance: 1.0,
             accel: "sada".into(),
+            slo_ms: None,
             submitted_at: Instant::now(),
             reply: tx,
         })
@@ -160,6 +162,7 @@ fn mixed_models_route_to_correct_solvers() {
                 steps: 10,
                 guidance: 2.0,
                 accel: "baseline".into(),
+                slo_ms: None,
                 submitted_at: Instant::now(),
                 reply: tx.clone(),
             })

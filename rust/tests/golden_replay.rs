@@ -116,6 +116,7 @@ fn serving_outputs_bit_identical_across_worker_counts() {
                     steps,
                     guidance: 3.0,
                     accel: "sada".into(),
+                    slo_ms: None,
                     submitted_at: Instant::now(),
                     reply: tx.clone(),
                 })

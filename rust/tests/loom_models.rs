@@ -1,6 +1,8 @@
-//! Loom models of the two concurrency kernels the serving path leans on:
-//! the bounded condvar work queue (`coordinator::server::WorkQueue`) and a
-//! plan-store shard (`plancache::store`). The models restate the algorithms
+//! Loom models of the concurrency kernels the serving path leans on: the
+//! bounded condvar work queue (`coordinator::server::WorkQueue`), its
+//! mid-flight steal extension for continuous batching
+//! (`WorkQueue::steal_compatible`), and a plan-store shard
+//! (`plancache::store`). The models restate the algorithms
 //! with loom primitives — loom then explores every interleaving and fails
 //! on deadlock, lost wakeup, or a violated assertion.
 //!
@@ -122,6 +124,124 @@ fn closed_queue_drops_late_pushes_and_unblocks_consumer() {
         p.join().unwrap(); // a late push must not deadlock on a full queue
         let n = c.join().unwrap();
         assert!(n <= 1, "more items than were pushed");
+    });
+}
+
+/// The continuous-serving extension of the WorkQueue: a worker with `free`
+/// lane slots steals requests out of the front queued batch mid-flight
+/// (`WorkQueue::steal_compatible`). The backpressure contract is that the
+/// slot-free signal (`cv_free`) fires exactly when a whole queued item is
+/// consumed — a partial steal reinserts the remainder and must NOT wake
+/// pushers (the slot is still held). Items model batches of request ids.
+struct StealQueue {
+    state: Mutex<(VecDeque<Vec<u32>>, bool)>,
+    cv_ready: Condvar,
+    cv_free: Condvar,
+    cap: usize,
+}
+
+impl StealQueue {
+    fn new(cap: usize) -> Self {
+        StealQueue {
+            state: Mutex::new((VecDeque::new(), false)),
+            cv_ready: Condvar::new(),
+            cv_free: Condvar::new(),
+            cap,
+        }
+    }
+
+    fn push(&self, batch: Vec<u32>) {
+        let mut st = self.state.lock().unwrap();
+        while st.0.len() >= self.cap && !st.1 {
+            st = self.cv_free.wait(st).unwrap();
+        }
+        if st.1 {
+            return; // closed: drop, reply channels fail fast
+        }
+        st.0.push_back(batch);
+        self.cv_ready.notify_one();
+    }
+
+    fn pop(&self) -> Option<Vec<u32>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.0.pop_front() {
+                self.cv_free.notify_one();
+                return Some(v);
+            }
+            if st.1 {
+                return None;
+            }
+            st = self.cv_ready.wait(st).unwrap();
+        }
+    }
+
+    /// `WorkQueue::steal_compatible` at model scale: take up to `free`
+    /// requests from the front batch; notify `cv_free` only when the batch
+    /// is fully consumed, otherwise reinsert the remainder in place.
+    fn steal(&self, free: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        if free == 0 {
+            return out;
+        }
+        let mut st = self.state.lock().unwrap();
+        if let Some(mut item) = st.0.pop_front() {
+            let n = free.min(item.len());
+            out.extend(item.drain(..n));
+            if item.is_empty() {
+                self.cv_free.notify_one();
+            } else {
+                st.0.push_front(item);
+            }
+        }
+        out
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().1 = true;
+        self.cv_ready.notify_all();
+        self.cv_free.notify_all();
+    }
+}
+
+#[test]
+fn freed_slot_steal_wakes_blocked_pusher_even_racing_close() {
+    loom::model(|| {
+        let q = Arc::new(StealQueue::new(1));
+        q.push(vec![1, 2]); // fills the single slot before any thread starts
+        let p = {
+            let q = q.clone();
+            thread::spawn(move || q.push(vec![3])) // blocks on cv_free
+        };
+        let s = {
+            let q = q.clone();
+            thread::spawn(move || {
+                // partial steal: remainder reinserted, slot still held, the
+                // blocked pusher must NOT be woken by this call
+                let mut got = q.steal(1);
+                // consuming steal: the batch empties, cv_free fires
+                got.extend(q.steal(1));
+                got
+            })
+        };
+        let c = {
+            let q = q.clone();
+            thread::spawn(move || q.close())
+        };
+        let got = s.join().unwrap();
+        c.join().unwrap();
+        // the hazard under test: the pusher must terminate in EVERY
+        // interleaving of {steal's free signal, close} — a lost wakeup here
+        // deadlocks and loom flags it
+        p.join().unwrap();
+        assert_eq!(got, vec![1, 2], "steal must drain the seed batch in order");
+        let mut rest = Vec::new();
+        while let Some(b) = q.pop() {
+            rest.extend(b);
+        }
+        // the late push either landed intact (woken by the free slot before
+        // close) or was dropped whole at close — never a torn batch
+        assert!(rest == vec![3] || rest.is_empty(), "torn batch: {rest:?}");
     });
 }
 

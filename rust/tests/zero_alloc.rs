@@ -147,6 +147,82 @@ fn prune_heavy_lane_steps_allocate_nothing_at_steady_state() {
 }
 
 #[test]
+fn midflight_admission_is_o1_and_steady_steps_allocate_nothing() {
+    // Continuous engine: 4 requests stream through 2 slots, the feeder
+    // admitting one lane per freed slot. Admission events (4 in both runs)
+    // are bounded per-event costs — solver grid, stats vector, accel box —
+    // whose allocation COUNTS are step-count-independent, so comparing the
+    // totals at 12 vs 32 steps isolates the per-step cost of the running
+    // engine, admissions included. Steady-state steps must allocate zero.
+    use sada::pipeline::{AdmittedLane, GenResult, LaneFeeder};
+    use std::collections::VecDeque;
+
+    struct StaggerFeeder {
+        pending: VecDeque<GenRequest>,
+        results: Vec<Option<GenResult>>,
+        next_tag: u64,
+    }
+    impl LaneFeeder for StaggerFeeder {
+        fn admit(&mut self, free: usize) -> Vec<AdmittedLane> {
+            if free == 0 {
+                return Vec::new();
+            }
+            let Some(req) = self.pending.pop_front() else { return Vec::new() };
+            let tag = self.next_tag;
+            self.next_tag += 1;
+            vec![AdmittedLane { req, accel: Box::new(NoAccel), tag }]
+        }
+        fn complete(&mut self, tag: u64, result: GenResult) {
+            if let Some(slot) = self.results.get_mut(tag as usize) {
+                *slot = Some(result);
+            }
+        }
+    }
+
+    let backend = GmBackend::with_batch_buckets(11, &[2, 4]);
+    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let feeder_for = |steps: usize| StaggerFeeder {
+        pending: reqs_for(4, steps, 901).into(),
+        results: (0..4).map(|_| None).collect(),
+        next_tag: 0,
+    };
+
+    // warm every pool, including the admission-reuse path for slots freed
+    // mid-flight (lanes 2 and 3 re-fill the slots lanes 0 and 1 vacate)
+    {
+        let mut f = feeder_for(12);
+        let stats = pipe.generate_continuous(2, &mut f).unwrap();
+        assert_eq!(stats.admitted, 4);
+        assert_eq!(stats.completed, 4);
+    }
+
+    let run = |steps: usize| -> u64 {
+        let mut f = feeder_for(steps);
+        let before = thread_allocs();
+        let stats = pipe.generate_continuous(2, &mut f).unwrap();
+        let after = thread_allocs();
+        assert_eq!(stats.admitted, 4, "feeder must stream all requests in");
+        assert_eq!(stats.completed, 4);
+        assert!(
+            f.results
+                .iter()
+                .all(|r| r.as_ref().is_some_and(|g| g.stats.nfe == steps)),
+            "every lane must run its full solo trajectory"
+        );
+        after - before
+    };
+    let short = run(12);
+    let long = run(32);
+    assert_eq!(
+        long,
+        short,
+        "continuous-engine steady state must allocate nothing: 20 extra steps across \
+         4 streamed lanes cost {} allocation(s)",
+        long.saturating_sub(short)
+    );
+}
+
+#[test]
 fn sada_lane_steps_allocate_o1_not_per_step() {
     // SADA's steady state — criterion scratch, AM-3 skips, pooled history,
     // multistep Lagrange reconstruction — through the same marginal-cost
