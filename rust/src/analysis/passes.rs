@@ -23,6 +23,13 @@ pub const HOT_ROOTS: &[&str] = &[
     "Pipeline::run_lane_bucket",
     "Pipeline::run_prune_into",
     "GmBackend::run_into",
+    // flight-recorder per-step record paths: called once per lane step in
+    // full-sampling mode, so they must stay alloc-free like the step loop
+    "TraceSession::record_admit",
+    "TraceSession::record_step",
+    "TraceSession::record_complete",
+    "TraceSession::flush_phases",
+    "EventRing::push",
 ];
 
 /// Per-run setup / allocating-wrapper names: the alloc cone stops at these.
@@ -39,6 +46,9 @@ pub const COLD_BOUNDARIES: &[&str] = &[
     // the continuous engine's boundary, never per-step work (the engine's
     // own allow(alloc) regions gate what happens around the calls)
     "admit", "complete",
+    // flight-recorder session boundary: ring preallocation at checkout and
+    // archival at end-of-run are once-per-run, outside the step loop
+    "begin_session", "end_session", "set_flight_recorder", "take_snapshot",
     // allocating wrappers guarded by the `_into` pairing pass
     "step", "x0_from_model", "model_out_from_x0", "gradient", "gradient_eps",
     "extrapolate", "reconstruct_x0", "run", "eps_star", "am3", "d2y",
@@ -52,6 +62,9 @@ pub const PANIC_ROOTS: &[&str] = &[
     "server::worker_loop", "server::dispatch_loop", "server::execute_batch",
     "server::execute_continuous",
     "Coordinator::submit", "Coordinator::metrics_text", "Coordinator::shutdown",
+    // recorder notes taken on the dispatcher/worker threads
+    "FlightRecorder::note_queue_wait", "FlightRecorder::note_batch_form",
+    "FlightRecorder::note_steal",
 ];
 
 /// Offline / never-on-a-worker-thread modules: the name-based graph would

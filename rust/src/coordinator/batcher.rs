@@ -139,6 +139,19 @@ pub struct Batch {
     pub requests: Vec<ServeRequest>,
 }
 
+impl Batch {
+    /// Formation wait of the batch's oldest member: submission to now
+    /// (called at poll time). This is the batch-form span the flight
+    /// recorder lays on the coordinator track — how long batching held
+    /// the head request before handing it to the pool.
+    pub fn formation_wait_ms(&self) -> f64 {
+        self.requests
+            .iter()
+            .map(|r| r.submitted_at.elapsed().as_secs_f64() * 1e3)
+            .fold(0.0, f64::max)
+    }
+}
+
 /// Replay-affinity signature of a request: the plan-cache key components
 /// known at batching time (model, steps, accel, guidance bucket, cond
 /// sketch). The solver/schedule fingerprint is per-model configuration —

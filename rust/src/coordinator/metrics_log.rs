@@ -13,14 +13,18 @@ pub fn lock_metrics(m: &Mutex<MetricsLog>) -> MutexGuard<'_, MetricsLog> {
     crate::util::sync::lock_ignore_poison(m)
 }
 
-/// Log-scaled latency histogram (bounded memory, ~8% bucket resolution).
+/// Bounded-memory histogram: log-scaled latency buckets by default, or
+/// linear unitless buckets via [`Histogram::linear`]. `unit` ("ms" or "")
+/// suffixes the rendered series names, so a unitless series never claims
+/// millisecond semantics in the exposition.
 #[derive(Clone, Debug)]
 pub struct Histogram {
-    /// bucket upper bounds in ms, ascending; last bucket is +inf
+    /// bucket upper bounds, ascending; last bucket is +inf
     bounds: Vec<f64>,
     counts: Vec<u64>,
     sum_ms: f64,
     n: u64,
+    unit: &'static str,
 }
 
 impl Histogram {
@@ -33,7 +37,18 @@ impl Histogram {
             b *= 1.5;
         }
         let n = bounds.len() + 1;
-        Self { bounds, counts: vec![0; n], sum_ms: 0.0, n: 0 }
+        Self { bounds, counts: vec![0; n], sum_ms: 0.0, n: 0, unit: "ms" }
+    }
+
+    /// Unitless linear histogram: `buckets` equal-width buckets spanning
+    /// `(0, max]` plus the +inf overflow. For small-integer samples (step
+    /// indices, counts) choose `buckets` so the width divides the range
+    /// evenly — e.g. `linear(100.0, 50)` resolves step indices to ±2.
+    pub fn linear(max: f64, buckets: usize) -> Self {
+        let n = buckets.max(1);
+        let bounds: Vec<f64> = (1..=n).map(|i| max * i as f64 / n as f64).collect();
+        let slots = bounds.len() + 1;
+        Self { bounds, counts: vec![0; slots], sum_ms: 0.0, n: 0, unit: "" }
     }
 
     pub fn record(&mut self, ms: f64) {
@@ -89,6 +104,9 @@ pub struct MetricsLog {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
     histograms: BTreeMap<String, Histogram>,
+    /// interned `worker_{i}_batches` keys so the per-batch hot path never
+    /// formats a key (one allocation per worker for the process lifetime)
+    worker_keys: Vec<String>,
 }
 
 impl MetricsLog {
@@ -96,19 +114,56 @@ impl MetricsLog {
         Self::default()
     }
 
+    /// Bump a counter. Existing series take a lookup-only fast path; the
+    /// key string is allocated exactly once, on first sight of a series.
     pub fn inc(&mut self, name: &str, by: u64) {
-        *self.counters.entry(name.to_string()).or_insert(0) += by;
+        if let Some(v) = self.counters.get_mut(name) {
+            *v += by;
+            return;
+        }
+        self.counters.insert(name.to_string(), by);
+    }
+
+    /// `inc` for compile-time metric names: the `'static` bound documents
+    /// (and enforces at the call site) that no per-record key formatting is
+    /// happening — steady-state cost is one map lookup.
+    pub fn inc_static(&mut self, name: &'static str, by: u64) {
+        self.inc(name, by);
     }
 
     pub fn set_gauge(&mut self, name: &str, v: f64) {
+        if let Some(g) = self.gauges.get_mut(name) {
+            *g = v;
+            return;
+        }
         self.gauges.insert(name.to_string(), v);
     }
 
     pub fn observe_ms(&mut self, name: &str, ms: f64) {
-        self.histograms
-            .entry(name.to_string())
-            .or_insert_with(Histogram::latency_default)
-            .record(ms);
+        if let Some(h) = self.histograms.get_mut(name) {
+            h.record(ms);
+            return;
+        }
+        let mut h = Histogram::latency_default();
+        h.record(ms);
+        self.histograms.insert(name.to_string(), h);
+    }
+
+    /// `observe_ms` for compile-time metric names; see [`Self::inc_static`].
+    pub fn observe_ms_static(&mut self, name: &'static str, ms: f64) {
+        self.observe_ms(name, ms);
+    }
+
+    /// Record into a unitless linear histogram (created on first use with
+    /// `Histogram::linear(max, buckets)`); renders without `_ms` suffixes.
+    pub fn observe_linear(&mut self, name: &str, v: f64, max: f64, buckets: usize) {
+        if let Some(h) = self.histograms.get_mut(name) {
+            h.record(v);
+            return;
+        }
+        let mut h = Histogram::linear(max, buckets);
+        h.record(v);
+        self.histograms.insert(name.to_string(), h);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -116,10 +171,41 @@ impl MetricsLog {
     }
 
     /// One engine worker finished one batch: bump its per-worker counter
-    /// (`worker_{i}_batches`) plus the pool-wide total.
+    /// (`worker_{i}_batches`) plus the pool-wide total. Keys are interned
+    /// on the worker's first batch; every later batch is allocation-free.
     pub fn record_worker_batch(&mut self, worker: usize) {
-        self.inc(&format!("worker_{worker}_batches"), 1);
-        self.inc("batches_executed", 1);
+        while self.worker_keys.len() <= worker {
+            self.worker_keys.push(format!("worker_{}_batches", self.worker_keys.len()));
+        }
+        if let Some(key) = self.worker_keys.get(worker) {
+            if let Some(v) = self.counters.get_mut(key.as_str()) {
+                *v += 1;
+            } else {
+                self.counters.insert(key.clone(), 1);
+            }
+        }
+        self.inc_static("batches_executed", 1);
+    }
+
+    /// Per-batch-size counter. Sizes up to the static table (well past any
+    /// realistic max batch width) use pre-baked keys; larger sizes fall
+    /// back to formatting, which is fine off the steady path.
+    pub fn record_batch_size(&mut self, bsz: usize) {
+        const KEYS: [&str; 9] = [
+            "batch_size_0",
+            "batch_size_1",
+            "batch_size_2",
+            "batch_size_3",
+            "batch_size_4",
+            "batch_size_5",
+            "batch_size_6",
+            "batch_size_7",
+            "batch_size_8",
+        ];
+        match KEYS.get(bsz) {
+            Some(k) => self.inc(k, 1),
+            None => self.inc(&format!("batch_size_{bsz}"), 1),
+        }
     }
 
     pub fn worker_batches(&self, worker: usize) -> u64 {
@@ -147,9 +233,8 @@ impl MetricsLog {
             CacheOutcome::Hit => self.inc("plancache_hit", 1),
             CacheOutcome::Diverged { step } => {
                 self.inc("plancache_diverged", 1);
-                // histogram units are nominally ms; for this series the
-                // sample is the divergence step index
-                self.observe_ms("plancache_divergence_step", *step as f64);
+                // unitless series: the sample is the divergence step index
+                self.observe_linear("plancache_divergence_step", *step as f64, 100.0, 50);
             }
         }
     }
@@ -227,11 +312,18 @@ impl MetricsLog {
             out.push_str(&format!("sada_{k} {v}\n"));
         }
         for (k, h) in &self.histograms {
+            // unit-suffix the stat series ("_ms" for latency histograms,
+            // bare for unitless ones) so names never lie about semantics
+            let suffix = if h.unit.is_empty() {
+                String::new()
+            } else {
+                format!("_{}", h.unit)
+            };
             out.push_str(&format!("sada_{k}_count {}\n", h.count()));
-            out.push_str(&format!("sada_{k}_mean_ms {:.3}\n", h.mean_ms()));
+            out.push_str(&format!("sada_{k}_mean{suffix} {:.3}\n", h.mean_ms()));
             for q in [0.5, 0.95, 0.99] {
                 out.push_str(&format!(
-                    "sada_{k}_p{:02.0}_ms {:.3}\n",
+                    "sada_{k}_p{:02.0}{suffix} {:.3}\n",
                     q * 100.0,
                     h.quantile_ms(q)
                 ));
@@ -280,6 +372,83 @@ mod tests {
         let h = Histogram::latency_default();
         assert_eq!(h.quantile_ms(0.5), 0.0);
         assert_eq!(h.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn linear_histogram_resolves_step_indices() {
+        let mut h = Histogram::linear(100.0, 50); // bucket width 2
+        h.record(3.0);
+        h.record(17.0);
+        h.record(250.0); // overflow tail
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile_ms(0.5), 18.0); // 17 lands in the (16, 18] bucket
+        assert!(h.quantile_ms(0.99).is_infinite());
+        // linear bounds, not log: bucket i upper bound is 2*(i+1)
+        let mut lo = Histogram::linear(10.0, 5);
+        lo.record(1.0);
+        assert_eq!(lo.quantile_ms(0.5), 2.0);
+    }
+
+    #[test]
+    fn exposition_round_trips_and_follows_naming_conventions() {
+        use crate::pipeline::CacheOutcome;
+        let mut m = MetricsLog::new();
+        m.inc("requests_accepted", 4);
+        m.inc_static("batches_executed", 1);
+        m.record_batch_size(3);
+        m.record_batch_size(99); // past the static key table
+        m.record_worker_batch(1);
+        m.set_gauge("queue_depth", 2.0);
+        m.observe_ms_static("e2e_latency", 12.5);
+        m.record_cache_outcome(&CacheOutcome::Diverged { step: 17 });
+        let text = m.render();
+        // every line parses as `name value` with a finite value
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            let name = it.next().expect("metric name");
+            let value = it.next().expect("metric value");
+            assert!(it.next().is_none(), "extra token in {line:?}");
+            assert!(name.starts_with("sada_"), "bad prefix in {line:?}");
+            let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+            assert!(v.is_finite(), "non-finite value in {line:?}");
+        }
+        // counters end in _total; latency histograms carry _ms stat suffixes
+        assert!(text.contains("sada_requests_accepted_total 4"));
+        assert!(text.contains("sada_batch_size_3_total 1"));
+        assert!(text.contains("sada_batch_size_99_total 1"));
+        assert!(text.contains("sada_worker_1_batches_total 1"));
+        assert!(text.contains("sada_e2e_latency_count 1"));
+        assert!(text.contains("sada_e2e_latency_mean_ms "));
+        assert!(text.contains("sada_e2e_latency_p95_ms "));
+        // the divergence-step series is unitless: no _ms anywhere on it
+        assert!(text.contains("sada_plancache_divergence_step_count 1"));
+        assert!(text.contains("sada_plancache_divergence_step_mean "));
+        assert!(text.contains("sada_plancache_divergence_step_p50 "));
+        assert!(!text.contains("sada_plancache_divergence_step_mean_ms"));
+        assert!(!text.contains("sada_plancache_divergence_step_p50_ms"));
+        // divergence step 17 stays exact to bucket resolution (width 2)
+        let p50_line = text
+            .lines()
+            .find(|l| l.starts_with("sada_plancache_divergence_step_p50 "))
+            .expect("p50 line");
+        let p50: f64 = p50_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        assert_eq!(p50, 18.0);
+    }
+
+    #[test]
+    fn repeat_records_hit_the_interned_fast_paths() {
+        let mut m = MetricsLog::new();
+        for _ in 0..100 {
+            m.record_worker_batch(3);
+            m.record_batch_size(4);
+            m.observe_queue_wait_ms(0.5);
+        }
+        assert_eq!(m.worker_batches(3), 100);
+        assert_eq!(m.counter("batches_executed"), 100);
+        assert_eq!(m.counter("batch_size_4"), 100);
+        // interning filled workers 0..=3 exactly once
+        assert_eq!(m.worker_keys.len(), 4);
+        assert_eq!(m.worker_keys[3], "worker_3_batches");
     }
 
     #[test]

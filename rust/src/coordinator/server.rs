@@ -41,6 +41,7 @@ use super::metrics_log::{lock_metrics, MetricsLog};
 use super::request::{ServeRequest, ServeResponse};
 use super::router::Router;
 use crate::baselines::{AdaptiveDiffusion, DeepCache, TeaCache};
+use crate::obs::{FlightRecorder, Sampling};
 use crate::pipeline::{
     Accelerator, AdmittedLane, GenRequest, GenResult, LaneFeeder, NoAccel, Pipeline,
 };
@@ -70,6 +71,11 @@ pub struct CoordinatorConfig {
     /// bit-identical either way (admission never changes a lane's math);
     /// this only changes when slots become available to new requests.
     pub continuous: bool,
+    /// Flight-recorder sampling ([`crate::obs`]): `Off` (default) spawns
+    /// no recorder at all; `Sampled(n)` records every n-th lane's step
+    /// decisions; `Full` records every lane. Phase/steal events on the
+    /// engine and coordinator tracks are recorded whenever enabled.
+    pub trace_sampling: Sampling,
 }
 
 impl Default for CoordinatorConfig {
@@ -84,6 +90,7 @@ impl Default for CoordinatorConfig {
             n_workers: 1,
             plan_cache_capacity: 256,
             continuous: false,
+            trace_sampling: Sampling::Off,
         }
     }
 }
@@ -224,6 +231,10 @@ pub struct Coordinator {
     dispatcher: Option<JoinHandle<Result<()>>>,
     workers: Vec<JoinHandle<Result<()>>>,
     metrics: Arc<Mutex<MetricsLog>>,
+    /// Shared flight recorder, present when `trace_sampling` is enabled.
+    /// Callers clone it before `shutdown()` to export the trace after the
+    /// workers drain.
+    recorder: Option<Arc<FlightRecorder>>,
 }
 
 /// Accelerator reuse-pool key: one recycled accelerator per compatibility
@@ -264,6 +275,11 @@ impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
         let n_workers = cfg.n_workers.max(1);
         let (tx, rx) = mpsc::sync_channel::<ServeRequest>(cfg.queue_cap);
+        let recorder = if cfg.trace_sampling.enabled() {
+            Some(FlightRecorder::new(cfg.trace_sampling))
+        } else {
+            None
+        };
         let metrics = Arc::new(Mutex::new(MetricsLog::new()));
         lock_metrics(&metrics).set_gauge("workers", n_workers as f64);
         // one executing + one queued batch per worker keeps the pool busy
@@ -292,9 +308,10 @@ impl Coordinator {
             let metrics_i = metrics.clone();
             let stores_i = stores.clone();
             let width_i = width.clone();
+            let rec_i = recorder.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("sada-engine-{i}"))
-                .spawn(move || worker_loop(i, cfg_i, queue_i, metrics_i, stores_i, width_i));
+                .spawn(move || worker_loop(i, cfg_i, queue_i, metrics_i, stores_i, width_i, rec_i));
             match spawned {
                 Ok(handle) => workers.push(handle),
                 Err(e) => {
@@ -307,9 +324,10 @@ impl Coordinator {
         let m2 = metrics.clone();
         let q2 = queue.clone();
         let w2 = width.clone();
+        let r2 = recorder.clone();
         let dispatcher = match std::thread::Builder::new()
             .name("sada-dispatch".into())
-            .spawn(move || dispatch_loop(cfg, rx, q2, m2, w2))
+            .spawn(move || dispatch_loop(cfg, rx, q2, m2, w2, r2))
         {
             Ok(handle) => handle,
             Err(e) => {
@@ -323,12 +341,21 @@ impl Coordinator {
             dispatcher: Some(dispatcher),
             workers,
             metrics,
+            recorder,
         })
     }
 
     /// Snapshot of the serving metrics in text exposition format.
     pub fn metrics_text(&self) -> String {
         lock_metrics(&self.metrics).render()
+    }
+
+    /// The shared flight recorder (when `trace_sampling` enabled it).
+    /// Clone the `Arc` before [`Coordinator::shutdown`] and snapshot it
+    /// after — the workers fold their final trace sessions in as they
+    /// drain, so a post-join snapshot sees every completed run.
+    pub fn recorder(&self) -> Option<Arc<FlightRecorder>> {
+        self.recorder.clone()
     }
 
     /// Submit a request (blocks only when the ingress queue is full —
@@ -405,6 +432,7 @@ fn dispatch_loop(
     queue: Arc<WorkQueue>,
     metrics: Arc<Mutex<MetricsLog>>,
     width: Arc<DivergenceAdaptiveWidth>,
+    recorder: Option<Arc<FlightRecorder>>,
 ) -> Result<()> {
     // close the queue on every exit path, including panic-unwind: workers
     // blocked in pop() must never outlive the dispatcher
@@ -470,6 +498,11 @@ fn dispatch_loop(
         for (q, model) in model_names.iter().enumerate() {
             // xtask: allow(panic): model_names and batchers are both n_queues long
             while let Some(batch) = batchers[q].poll(t) {
+                if let Some(rec) = recorder.as_ref() {
+                    // batch-form span: oldest member's wait from submission
+                    // to formation, on the coordinator track
+                    rec.note_batch_form(batch.formation_wait_ms(), batch.requests.len() as u32);
+                }
                 queue.push(WorkItem {
                     model: model.clone(),
                     requests: batch.requests,
@@ -491,6 +524,7 @@ fn worker_loop(
     metrics: Arc<Mutex<MetricsLog>>,
     stores: PlanStores,
     width: Arc<DivergenceAdaptiveWidth>,
+    recorder: Option<Arc<FlightRecorder>>,
 ) -> Result<()> {
     // fires on fatal Err return AND panic-unwind: the last worker to die
     // drains the queue (dropping items fails their requests fast via the
@@ -522,12 +556,20 @@ fn worker_loop(
         .with_context(|| format!("engine worker {worker}: opening runtime"))?;
     let mut accel_pool: HashMap<AccelKey, Box<dyn Accelerator>> = HashMap::new();
     while let Some(item) = queue.pop() {
-        lock_metrics(&metrics)
-            .observe_queue_wait_ms(item.ready_at.elapsed().as_secs_f64() * 1e3);
+        let wait_ms = item.ready_at.elapsed().as_secs_f64() * 1e3;
+        lock_metrics(&metrics).observe_queue_wait_ms(wait_ms);
+        // recorder note outside the metrics guard (its own internal lock)
+        if let Some(rec) = recorder.as_ref() {
+            rec.note_queue_wait(wait_ms);
+        }
         let run = if cfg.continuous {
-            execute_continuous(&rt, &cfg, worker, item, &queue, &metrics, &stores, &width)
+            execute_continuous(
+                &rt, &cfg, worker, item, &queue, &metrics, &stores, &width, &recorder,
+            )
         } else {
-            execute_batch(&rt, &cfg, worker, item, &metrics, &mut accel_pool, &stores, &width)
+            execute_batch(
+                &rt, &cfg, worker, item, &metrics, &mut accel_pool, &stores, &width, &recorder,
+            )
         };
         match run {
             Ok(()) => {}
@@ -541,6 +583,7 @@ fn worker_loop(
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn execute_batch(
     rt: &Runtime,
     cfg: &CoordinatorConfig,
@@ -550,6 +593,7 @@ fn execute_batch(
     accel_pool: &mut HashMap<AccelKey, Box<dyn Accelerator>>,
     stores: &PlanStores,
     width: &Arc<DivergenceAdaptiveWidth>,
+    recorder: &Option<Arc<FlightRecorder>>,
 ) -> Result<()> {
     let WorkItem { model, requests, ready_at: _ } = item;
     let model = model.as_str();
@@ -562,7 +606,10 @@ fn execute_batch(
         cfg.solver
     };
     let schedule = rt.manifest.schedule.to_schedule();
-    let pipe = Pipeline::with_schedule(&backend, solver, schedule.clone());
+    let mut pipe = Pipeline::with_schedule(&backend, solver, schedule.clone());
+    if let Some(rec) = recorder {
+        pipe.set_flight_recorder(rec.clone(), worker);
+    }
     // xtask: allow(panic): the batcher never emits an empty batch
     let steps = requests[0].steps;
     // xtask: allow(panic): the batcher never emits an empty batch
@@ -609,7 +656,7 @@ fn execute_batch(
         let mut m = lock_metrics(metrics);
         m.observe_execute_ms(t0.elapsed().as_secs_f64() * 1e3);
         m.record_worker_batch(worker);
-        m.inc(&format!("batch_size_{bsz}"), 1);
+        m.record_batch_size(bsz);
         for res in &results {
             m.record_cache_outcome(&res.stats.outcome);
             // per-outcome step-mode histogram: replayed-prune vs degraded
@@ -654,6 +701,8 @@ struct ServeFeeder<'a> {
     accel_name: String,
     info: &'a crate::runtime::ModelInfo,
     cache: Option<(Arc<PlanStore>, u64)>,
+    /// Steal events land on the recorder's coordinator track.
+    recorder: Option<Arc<FlightRecorder>>,
     /// Lane slots the engine exposes (reported as `batch_size`).
     capacity: usize,
     /// The batch that opened this engine run, admitted before any steal.
@@ -691,7 +740,12 @@ impl LaneFeeder for ServeFeeder<'_> {
             let extra =
                 self.queue
                     .steal_compatible(&self.model, &self.accel_name, free - out.len());
-            self.stolen += extra.len();
+            if !extra.is_empty() {
+                self.stolen += extra.len();
+                if let Some(rec) = self.recorder.as_ref() {
+                    rec.note_steal(extra.len() as u32);
+                }
+            }
             for r in extra {
                 out.push(self.lane_for(r));
             }
@@ -727,6 +781,7 @@ impl LaneFeeder for ServeFeeder<'_> {
 /// both the seed batch and the steal source run dry. Per-lane outputs are
 /// bit-identical to `execute_batch` (admission timing never enters lane
 /// math); only scheduling changes.
+#[allow(clippy::too_many_arguments)]
 fn execute_continuous(
     rt: &Runtime,
     cfg: &CoordinatorConfig,
@@ -736,6 +791,7 @@ fn execute_continuous(
     metrics: &Arc<Mutex<MetricsLog>>,
     stores: &PlanStores,
     width: &Arc<DivergenceAdaptiveWidth>,
+    recorder: &Option<Arc<FlightRecorder>>,
 ) -> Result<()> {
     let WorkItem { model, requests, ready_at: _ } = item;
     let Some(head) = requests.first() else {
@@ -751,7 +807,10 @@ fn execute_continuous(
         cfg.solver
     };
     let schedule = rt.manifest.schedule.to_schedule();
-    let pipe = Pipeline::with_schedule(&backend, solver, schedule.clone());
+    let mut pipe = Pipeline::with_schedule(&backend, solver, schedule.clone());
+    if let Some(rec) = recorder {
+        pipe.set_flight_recorder(rec.clone(), worker);
+    }
     let cache = stores
         .get(&model)
         .map(|s| (s.clone(), schedule_fingerprint(solver.name(), &schedule)));
@@ -772,6 +831,7 @@ fn execute_continuous(
         accel_name,
         info: backend.info(),
         cache,
+        recorder: recorder.clone(),
         capacity,
         seed: requests.into(),
         inflight: Vec::new(),

@@ -13,5 +13,6 @@ pub mod perf;
 pub mod serving;
 pub mod table1;
 pub mod table2;
+pub mod trace;
 
 pub use common::Harness;

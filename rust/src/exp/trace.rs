@@ -1,0 +1,302 @@
+//! `sada-serve trace`: flight-recorder demonstration + self-check.
+//!
+//! Drives a small mixed trace twice — once through the standalone
+//! continuous lane engine (full sampling, mixed accelerators and step
+//! counts), once through a continuous-mode coordinator — then verifies
+//! the recording reconstructs ground truth exactly: per-lane timelines
+//! are well-formed (monotone steps, admission ≤ first step ≤
+//! completion), lane-step totals match [`crate::pipeline::ContinuousStats`],
+//! and per-lane mode/NFE counts match each lane's `RunStats`. Emits a
+//! Perfetto-loadable Chrome trace (`TRACE_serving.json`, override with
+//! `SADA_TRACE_JSON`) and folds the aggregate summary into the `trace`
+//! section of `BENCH_serving.json`.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::request::RequestId;
+use crate::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
+use crate::obs::chrome::write_chrome_trace;
+use crate::obs::summary::{check_timeline, lane_timelines, summarize, summary_json};
+use crate::obs::{Event, FlightRecorder, PhaseKind, Sampling};
+use crate::pipeline::{
+    Accelerator, AdmittedLane, GenRequest, GenResult, LaneFeeder, NoAccel, Pipeline, RunStats,
+    StepMode,
+};
+use crate::report::table::f2;
+use crate::report::{BenchJson, Table};
+use crate::runtime::{ModelBackend, Runtime};
+use crate::sada::Sada;
+use crate::solvers::SolverKind;
+use crate::util::json::Json;
+use crate::workload::PromptBank;
+
+/// Saturated feeder over a fixed request list with per-lane accelerators,
+/// collecting every finished lane's `RunStats` keyed by admission tag —
+/// the ground truth the recorder's reconstruction is checked against.
+struct TraceFeeder {
+    pending: VecDeque<(GenRequest, Box<dyn Accelerator>)>,
+    next_tag: u64,
+    done: Vec<(u64, RunStats)>,
+}
+
+impl LaneFeeder for TraceFeeder {
+    fn admit(&mut self, free: usize) -> Vec<AdmittedLane> {
+        let take = free.min(self.pending.len());
+        let mut out = Vec::with_capacity(take);
+        for _ in 0..take {
+            let Some((req, accel)) = self.pending.pop_front() else { break };
+            out.push(AdmittedLane { req, accel, tag: self.next_tag });
+            self.next_tag += 1;
+        }
+        out
+    }
+
+    fn complete(&mut self, tag: u64, res: GenResult) {
+        self.done.push((tag, res.stats));
+    }
+}
+
+pub fn run_trace(
+    artifacts: &str,
+    model: &str,
+    n: usize,
+    capacity: usize,
+    steps_base: usize,
+) -> Result<()> {
+    anyhow::ensure!(capacity >= 2, "trace needs capacity >= 2");
+    anyhow::ensure!(n >= 4, "trace needs n >= 4 for a mixed workload");
+    anyhow::ensure!(steps_base >= 2, "steps_base must be >= 2");
+
+    // Stage 1: standalone continuous engine under full sampling. Mixed
+    // step counts exercise mid-flight admission; alternating SADA/NoAccel
+    // lanes exercise criterion-dot capture next to dot-free lanes.
+    let rt = Runtime::open(artifacts)?;
+    rt.preload_model(model)?;
+    let backend = rt.model_backend(model)?;
+    let solver = if backend.info().predict == "v" {
+        SolverKind::Flow
+    } else {
+        SolverKind::DpmPP
+    };
+    let mut pipe = Pipeline::with_schedule(&backend, solver, rt.manifest.schedule.to_schedule());
+    let rec = FlightRecorder::with_capacity(Sampling::Full, 4096, 4096);
+    pipe.set_flight_recorder(rec.clone(), 0);
+    let bank =
+        PromptBank::load_or_synthetic(std::path::Path::new(artifacts), rt.manifest.cond_dim);
+    let mut pending: VecDeque<(GenRequest, Box<dyn Accelerator>)> = VecDeque::new();
+    for i in 0..n {
+        let steps = [3, 4, 5][i % 3] * steps_base;
+        let req = GenRequest {
+            cond: bank.get(i).clone(),
+            seed: bank.seed_for(i),
+            guidance: 3.0,
+            steps,
+            edge: None,
+        };
+        let accel: Box<dyn Accelerator> = if i % 2 == 0 {
+            Box::new(Sada::with_default(backend.info(), steps))
+        } else {
+            Box::new(NoAccel)
+        };
+        pending.push_back((req, accel));
+    }
+    let mut feeder = TraceFeeder { pending, next_tag: 0, done: Vec::new() };
+    let stats = pipe.generate_continuous(capacity, &mut feeder)?;
+    anyhow::ensure!(
+        stats.completed == n && feeder.done.len() == n,
+        "engine completed {} of {n} lanes",
+        stats.completed
+    );
+
+    // Reconstruct and verify: the recording must match ground truth
+    // exactly, lane by lane and in total.
+    let mut snap = rec.take_snapshot();
+    anyhow::ensure!(snap.total_dropped() == 0, "ring overflow: timelines truncated");
+    let tls = lane_timelines(&snap);
+    anyhow::ensure!(tls.len() == n, "reconstructed {} timelines for {n} lanes", tls.len());
+    let mut lane_steps = 0usize;
+    for tl in &tls {
+        check_timeline(tl)?;
+        lane_steps += tl.steps.len();
+        let (_, st) = feeder
+            .done
+            .iter()
+            .find(|(t, _)| *t == tl.tag)
+            .ok_or_else(|| anyhow::anyhow!("no RunStats for recorded lane {}", tl.tag))?;
+        let counts = tl.mode_counts();
+        for (k, mode) in StepMode::ALL.iter().enumerate() {
+            anyhow::ensure!(
+                counts[k] == st.count(*mode),
+                "lane {}: {} recorded {:?} steps vs RunStats {}",
+                tl.tag,
+                mode.name(),
+                counts[k],
+                st.count(*mode)
+            );
+        }
+        anyhow::ensure!(
+            tl.steps.len() == st.modes.len() && tl.fresh_steps() == st.nfe,
+            "lane {}: recorded steps/nfe {}/{} vs RunStats {}/{}",
+            tl.tag,
+            tl.steps.len(),
+            tl.fresh_steps(),
+            st.modes.len(),
+            st.nfe
+        );
+    }
+    anyhow::ensure!(
+        lane_steps == stats.lane_steps,
+        "recorded {lane_steps} lane steps vs engine total {}",
+        stats.lane_steps
+    );
+    anyhow::ensure!(
+        tls.iter().filter(|t| t.admit_us.is_some()).count() == stats.admitted
+            && tls.iter().filter(|t| t.complete_us.is_some()).count() == stats.completed,
+        "admission/completion events disagree with ContinuousStats"
+    );
+    anyhow::ensure!(
+        tls.iter().any(|t| t.steps.iter().any(|s| s.dot.is_some())),
+        "no stability-criterion dot recorded on any SADA lane"
+    );
+
+    // Stage 2: the same shape through a continuous-mode coordinator, so
+    // the coordinator track (queue wait, batch formation, steals) is
+    // populated and cross-checked against the metrics registry.
+    let n_srv = n.min(16);
+    let cfg = CoordinatorConfig {
+        artifacts_dir: artifacts.to_string(),
+        models: vec![model.to_string()],
+        solver: SolverKind::DpmPP,
+        batch_buckets: vec![2, 4],
+        max_wait_ms: 10.0,
+        queue_cap: 256,
+        n_workers: 1,
+        continuous: true,
+        trace_sampling: Sampling::Full,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg)?;
+    let (reply_tx, reply_rx) = mpsc::channel();
+    for i in 0..n_srv {
+        coord.submit(ServeRequest {
+            id: RequestId(i as u64),
+            model: model.to_string(),
+            cond: bank.get(i).clone(),
+            seed: bank.seed_for(i),
+            steps: [3, 4, 5][i % 3] * steps_base,
+            guidance: 3.0,
+            accel: if i % 2 == 0 { "sada" } else { "baseline" }.to_string(),
+            slo_ms: None,
+            submitted_at: Instant::now(),
+            reply: reply_tx.clone(),
+        })?;
+    }
+    drop(reply_tx);
+    let mut got = 0usize;
+    while reply_rx.recv().is_ok() {
+        got += 1;
+    }
+    let metrics_text = coord.metrics_text();
+    let coord_rec = coord.recorder();
+    coord.shutdown()?;
+    anyhow::ensure!(got == n_srv, "coordinator returned {got} of {n_srv} replies");
+    let rec2 = coord_rec.ok_or_else(|| anyhow::anyhow!("trace_sampling=Full spawned no recorder"))?;
+    let snap2 = rec2.take_snapshot();
+    anyhow::ensure!(!snap2.sessions.is_empty(), "coordinator recorded no engine sessions");
+    let served: Vec<_> = lane_timelines(&snap2);
+    anyhow::ensure!(
+        served.iter().filter(|t| t.complete_us.is_some()).count() == n_srv,
+        "coordinator sessions recorded {} completions for {n_srv} requests",
+        served.iter().filter(|t| t.complete_us.is_some()).count()
+    );
+    anyhow::ensure!(
+        snap2
+            .coord
+            .iter()
+            .any(|e| matches!(e, Event::Phase { kind: PhaseKind::QueueWait, .. })),
+        "no queue-wait events on the coordinator track"
+    );
+    let grab = |prefix: &str| -> f64 {
+        metrics_text
+            .lines()
+            .find_map(|l| l.strip_prefix(prefix))
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(0.0)
+    };
+    let s2 = summarize(&snap2);
+    anyhow::ensure!(
+        s2.stolen as f64 == grab("sada_lanes_admitted_midflight_total "),
+        "recorded steals ({}) disagree with the midflight-admission counter ({})",
+        s2.stolen,
+        grab("sada_lanes_admitted_midflight_total ")
+    );
+
+    // Merge both stages into one artifact pair: the engine-level sessions
+    // next to the coordinator's, on the coordinator's event track.
+    snap.sessions.extend(snap2.sessions);
+    snap.coord = snap2.coord;
+    let summary = summarize(&snap);
+    let trace_path =
+        std::env::var("SADA_TRACE_JSON").unwrap_or_else(|_| "TRACE_serving.json".to_string());
+    write_chrome_trace(&snap, std::path::Path::new(&trace_path))?;
+
+    let step_us: f64 = summary.mode_share.iter().map(|m| m.total_us).sum();
+    let mut table = Table::new(
+        &format!(
+            "Flight recorder — {model}, {n} engine + {n_srv} served lanes, capacity {capacity}"
+        ),
+        &["Metric", "Value"],
+    );
+    table.row(vec!["sessions".into(), format!("{}", summary.sessions)]);
+    table.row(vec!["lanes".into(), format!("{}", summary.lanes)]);
+    table.row(vec!["lane steps".into(), format!("{}", summary.lane_steps)]);
+    table.row(vec!["criterion flips".into(), format!("{}", summary.flip_steps.len())]);
+    table.row(vec!["steals".into(), format!("{} ({} reqs)", summary.steals, summary.stolen)]);
+    table.row(vec![
+        "admission wait".into(),
+        format!(
+            "mean {} us over {} lanes",
+            f2(summary.admission_wait_us.iter().sum::<f64>()
+                / summary.admission_wait_us.len().max(1) as f64),
+            summary.admission_wait_us.len()
+        ),
+    ]);
+    for m in summary.mode_share.iter().filter(|m| m.steps > 0) {
+        table.row(vec![
+            format!("mode {}", m.mode.name()),
+            format!(
+                "{} steps, {}% of step time",
+                m.steps,
+                f2(if step_us > 0.0 { 100.0 * m.total_us / step_us } else { 0.0 })
+            ),
+        ]);
+    }
+    for p in summary.phase_share.iter().filter(|p| p.events > 0) {
+        table.row(vec![
+            format!("phase {}", p.kind.name()),
+            format!("{} events, {} ms total", p.events, f2(p.total_us / 1e3)),
+        ]);
+    }
+    table.print();
+    println!("trace written to {trace_path} (load in https://ui.perfetto.dev)");
+
+    let mut bench = BenchJson::open_default();
+    bench.set_section(
+        "trace",
+        Json::obj(vec![
+            ("model", Json::str(model)),
+            ("n", Json::num(n as f64)),
+            ("n_served", Json::num(n_srv as f64)),
+            ("capacity", Json::num(capacity as f64)),
+            ("steps_base", Json::num(steps_base as f64)),
+            ("trace_path", Json::str(&trace_path)),
+            ("summary", summary_json(&summary)),
+        ]),
+    );
+    bench.save_or_warn();
+    Ok(())
+}

@@ -27,6 +27,7 @@ pub mod config;
 pub mod coordinator;
 pub mod exp;
 pub mod metrics;
+pub mod obs;
 pub mod pipeline;
 pub mod plancache;
 pub mod report;

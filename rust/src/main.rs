@@ -30,6 +30,13 @@ commands:
              saturated heterogeneous-steps queue (occupancy + engine steps +
              steps/s), plus SLO attainment through a continuous-mode
              coordinator; writes BENCH_serving.json
+  trace      flight-recorder demo + self-check (--model sd2_tiny --n 12
+             --capacity 3 --base 4): runs a small mixed trace through the
+             continuous engine and a continuous-mode coordinator under full
+             sampling, verifies the reconstructed per-lane timelines against
+             engine/run stats, writes a Perfetto-loadable TRACE_serving.json
+             (override with SADA_TRACE_JSON) and a trace summary into
+             BENCH_serving.json
   table1     main results table        (--samples 64 --steps 50)
   table2     few-step ablation         (--samples 32)
   ablate     SADA component ablation    (--samples 16 --steps 50)
@@ -89,6 +96,13 @@ fn main() -> Result<()> {
             steps,
             o.usize_or("n", 48),
             o.usize_or("unique", 6),
+        )?,
+        "trace" => exp::trace::run_trace(
+            &artifacts,
+            o.str_or("model", "sd2_tiny"),
+            o.usize_or("n", 12),
+            o.usize_or("capacity", 3),
+            o.usize_or("base", 4),
         )?,
         "continuous" => exp::serving::run_continuous_sweep(
             &artifacts,

@@ -1,0 +1,365 @@
+//! Chrome trace-event JSON export (Perfetto-loadable).
+//!
+//! Maps a [`RecorderSnapshot`] onto the Chrome trace-event format
+//! (`{"traceEvents": [...]}`): one process (`pid` 1), one track (`tid`)
+//! per coordinator, per engine session (worker phase timings), and per
+//! recorded lane. Lane steps are duration (`"X"`) events named by their
+//! [`crate::pipeline::StepMode`]; admissions, completions and steals are
+//! instant (`"i"`) events; phase timings are duration events on the
+//! engine/coordinator tracks. Track names arrive via `"M"`
+//! (`thread_name`) metadata. Timestamps are microseconds; within each
+//! track they are forced strictly increasing (Perfetto renders
+//! out-of-order events on one track as overlaps), so ring-truncated
+//! sessions still load.
+//!
+//! Open the output at <https://ui.perfetto.dev> ("Open trace file") or
+//! `chrome://tracing`.
+
+use std::cmp::Ordering;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::pipeline::CacheOutcome;
+use crate::util::json::Json;
+
+use super::{Event, RecorderSnapshot};
+
+/// Minimum per-track timestamp increment (microseconds) enforced at
+/// export so every track is strictly ordered.
+const TRACK_TS_EPS: f64 = 1e-3;
+
+fn outcome_name(o: &CacheOutcome) -> &'static str {
+    match o {
+        CacheOutcome::Uncached => "uncached",
+        CacheOutcome::Miss => "miss",
+        CacheOutcome::Hit => "hit",
+        CacheOutcome::Diverged { .. } => "diverged",
+    }
+}
+
+struct RawEvent {
+    tid: u32,
+    ts: f64,
+    dur: Option<f64>,
+    ph: &'static str,
+    name: String,
+    args: Json,
+}
+
+fn lane_event(tid: u32, e: &Event) -> Option<RawEvent> {
+    match e {
+        Event::Admit { tag, t_us } => Some(RawEvent {
+            tid,
+            ts: *t_us,
+            dur: None,
+            ph: "i",
+            name: "admit".to_string(),
+            args: Json::obj(vec![("tag", Json::num(*tag as f64))]),
+        }),
+        Event::Step { tag, step, mode, fresh, dot, t_us, dur_us } => {
+            let mut args = vec![
+                ("tag", Json::num(*tag as f64)),
+                ("step", Json::num(*step as f64)),
+                ("fresh", Json::Bool(*fresh)),
+            ];
+            if dot.is_finite() {
+                args.push(("dot", Json::num(*dot)));
+            }
+            Some(RawEvent {
+                tid,
+                ts: *t_us,
+                dur: Some(dur_us.max(TRACK_TS_EPS)),
+                ph: "X",
+                name: mode.name().to_string(),
+                args: Json::obj(args),
+            })
+        }
+        Event::Complete { tag, outcome, nfe, steps, t_us } => {
+            let mut args = vec![
+                ("tag", Json::num(*tag as f64)),
+                ("outcome", Json::str(outcome_name(outcome))),
+                ("nfe", Json::num(*nfe as f64)),
+                ("steps", Json::num(*steps as f64)),
+            ];
+            if let CacheOutcome::Diverged { step } = outcome {
+                args.push(("div_step", Json::num(*step as f64)));
+            }
+            Some(RawEvent {
+                tid,
+                ts: *t_us,
+                dur: None,
+                ph: "i",
+                name: "complete".to_string(),
+                args: Json::obj(args),
+            })
+        }
+        _ => None,
+    }
+}
+
+fn track_event(tid: u32, e: &Event) -> Option<RawEvent> {
+    match e {
+        Event::Phase { kind, t_us, dur_us, lanes } => Some(RawEvent {
+            tid,
+            ts: t_us.max(0.0),
+            dur: Some(dur_us.max(TRACK_TS_EPS)),
+            ph: "X",
+            name: kind.name().to_string(),
+            args: Json::obj(vec![("lanes", Json::num(*lanes as f64))]),
+        }),
+        Event::Steal { n, t_us } => Some(RawEvent {
+            tid,
+            ts: *t_us,
+            dur: None,
+            ph: "i",
+            name: "steal".to_string(),
+            args: Json::obj(vec![("n", Json::num(*n as f64))]),
+        }),
+        _ => None,
+    }
+}
+
+fn thread_name(tid: u32, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str("thread_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+fn event_json(re: &RawEvent) -> Json {
+    let mut pairs = vec![
+        ("name", Json::str(&re.name)),
+        ("ph", Json::str(re.ph)),
+        ("ts", Json::num(re.ts)),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(re.tid as f64)),
+    ];
+    if let Some(d) = re.dur {
+        pairs.push(("dur", Json::num(d)));
+    }
+    if re.ph == "i" {
+        pairs.push(("s", Json::str("t")));
+    }
+    pairs.push(("args", re.args.clone()));
+    Json::obj(pairs)
+}
+
+/// Render a snapshot as a Chrome trace-event JSON document.
+pub fn chrome_trace(snap: &RecorderSnapshot) -> Json {
+    let mut meta: Vec<Json> = vec![Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(0.0)),
+        ("args", Json::obj(vec![("name", Json::str("sada-serve"))])),
+    ])];
+    let mut raws: Vec<RawEvent> = Vec::new();
+    let mut next_tid: u32 = 1;
+
+    if !snap.coord.is_empty() {
+        meta.push(thread_name(next_tid, "coordinator"));
+        raws.extend(snap.coord.iter().filter_map(|e| track_event(next_tid, e)));
+        next_tid += 1;
+    }
+
+    for sess in &snap.sessions {
+        let engine_tid = next_tid;
+        next_tid += 1;
+        meta.push(thread_name(
+            engine_tid,
+            &format!("worker {} run {} engine", sess.worker, sess.seq),
+        ));
+        raws.extend(sess.engine.iter().filter_map(|e| track_event(engine_tid, e)));
+        // one track per recorded lane, keyed by admission tag (a slot is
+        // reused by many lanes over a continuous run, so the slot index
+        // is not the track identity)
+        let mut tags: Vec<u64> = Vec::new();
+        for ring in &sess.lanes {
+            for e in ring.iter() {
+                let tag = match e {
+                    Event::Admit { tag, .. }
+                    | Event::Step { tag, .. }
+                    | Event::Complete { tag, .. } => *tag,
+                    _ => continue,
+                };
+                if !tags.contains(&tag) {
+                    tags.push(tag);
+                }
+            }
+        }
+        tags.sort_unstable();
+        let tid_of = |tag: u64| -> Option<u32> {
+            tags.iter()
+                .position(|t| *t == tag)
+                .map(|k| next_tid + k as u32)
+        };
+        for tag in &tags {
+            if let Some(tid) = tid_of(*tag) {
+                meta.push(thread_name(
+                    tid,
+                    &format!("worker {} run {} lane {}", sess.worker, sess.seq, tag),
+                ));
+            }
+        }
+        for ring in &sess.lanes {
+            for e in ring.iter() {
+                let tag = match e {
+                    Event::Admit { tag, .. }
+                    | Event::Step { tag, .. }
+                    | Event::Complete { tag, .. } => *tag,
+                    _ => continue,
+                };
+                if let Some(tid) = tid_of(tag) {
+                    if let Some(re) = lane_event(tid, e) {
+                        raws.push(re);
+                    }
+                }
+            }
+        }
+        next_tid += tags.len() as u32;
+    }
+
+    // per-track strict timestamp ordering: sort by (tid, ts), then clamp
+    // each track's timestamps to strictly increase
+    raws.sort_by(|a, b| {
+        a.tid
+            .cmp(&b.tid)
+            .then(a.ts.partial_cmp(&b.ts).unwrap_or(Ordering::Equal))
+    });
+    let mut last_tid = u32::MAX;
+    let mut last_ts = f64::NEG_INFINITY;
+    for re in raws.iter_mut() {
+        if re.tid != last_tid {
+            last_tid = re.tid;
+            last_ts = f64::NEG_INFINITY;
+        }
+        if re.ts <= last_ts {
+            re.ts = last_ts + TRACK_TS_EPS;
+        }
+        last_ts = re.ts;
+    }
+
+    let mut events = meta;
+    events.extend(raws.iter().map(event_json));
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Write the Chrome trace JSON for `snap` to `path`.
+pub fn write_chrome_trace(snap: &RecorderSnapshot, path: &Path) -> Result<()> {
+    std::fs::write(path, chrome_trace(snap).to_string())
+        .with_context(|| format!("writing chrome trace {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{FlightRecorder, Sampling};
+    use crate::pipeline::StepMode;
+
+    fn sample_snapshot() -> RecorderSnapshot {
+        let rec = FlightRecorder::with_capacity(Sampling::Full, 16, 16);
+        let mut sess = rec.begin_session(0, 2).expect("session");
+        sess.record_admit(0, 0, 10.0);
+        sess.record_step(0, 0, 0, StepMode::Full, true, Some(-0.25), 12.0, 3.0);
+        sess.record_step(0, 0, 1, StepMode::SkipAm3, false, None, 16.0, 1.0);
+        sess.record_complete(0, 0, CacheOutcome::Diverged { step: 1 }, 1, 2, 18.0);
+        let mut acc = crate::obs::PhaseAccum::for_session(true);
+        acc.model_us = 3.0;
+        acc.solver_us = 1.0;
+        sess.flush_phases(&mut acc, 1, 17.0);
+        rec.end_session(sess);
+        rec.note_queue_wait(0.005);
+        rec.note_steal(2);
+        rec.take_snapshot()
+    }
+
+    #[test]
+    fn trace_roundtrips_and_has_required_fields() {
+        let doc = chrome_trace(&sample_snapshot());
+        let parsed = Json::parse(&doc.to_string()).expect("export must be valid JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events.len() >= 8);
+        for e in events {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            assert!(e.get("name").is_ok());
+            assert!(e.get("pid").is_ok());
+            assert!(e.get("tid").is_ok());
+            match ph {
+                "M" => {}
+                "X" => {
+                    assert!(e.get("ts").is_ok());
+                    assert!(e.get("dur").unwrap().as_f64().unwrap() > 0.0);
+                }
+                "i" => assert!(e.get("ts").is_ok()),
+                other => panic!("unexpected phase {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn per_track_timestamps_strictly_increase() {
+        let doc = chrome_trace(&sample_snapshot());
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut last: std::collections::BTreeMap<u64, f64> = Default::default();
+        for e in events {
+            if e.get("ph").unwrap().as_str().unwrap() == "M" {
+                continue;
+            }
+            let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            if let Some(prev) = last.get(&tid) {
+                assert!(ts > *prev, "track {tid}: ts {ts} after {prev}");
+            }
+            last.insert(tid, ts);
+        }
+    }
+
+    fn ev_name(e: &Json) -> String {
+        e.get("name")
+            .ok()
+            .and_then(|n| n.as_str().ok())
+            .unwrap_or("")
+            .to_string()
+    }
+
+    #[test]
+    fn skipped_dot_is_omitted_not_nan() {
+        let doc = chrome_trace(&sample_snapshot()).to_string();
+        assert!(!doc.contains("NaN"), "NaN is not valid JSON");
+        let parsed = Json::parse(&doc).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let steps: Vec<&Json> = events
+            .iter()
+            .filter(|e| {
+                let n = ev_name(e);
+                n == "full" || n == "skip_am3"
+            })
+            .collect();
+        assert_eq!(steps.len(), 2);
+        let with_dot = steps
+            .iter()
+            .filter(|e| e.get("args").unwrap().opt("dot").is_some())
+            .count();
+        assert_eq!(with_dot, 1, "only the fresh criterion step carries a dot");
+    }
+
+    #[test]
+    fn diverged_outcome_carries_divergence_step() {
+        let doc = chrome_trace(&sample_snapshot());
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let complete = events
+            .iter()
+            .find(|e| ev_name(e) == "complete")
+            .expect("complete event");
+        let args = complete.get("args").unwrap();
+        assert_eq!(args.get("outcome").unwrap().as_str().unwrap(), "diverged");
+        assert_eq!(args.get("div_step").unwrap().as_usize().unwrap(), 1);
+    }
+}

@@ -1,0 +1,597 @@
+//! Flight recorder: zero-alloc per-step decision tracing.
+//!
+//! SADA's behavior is runtime data — stability-criterion signs, skip/token
+//! decisions, replay verdicts, mid-flight admissions — so aggregate
+//! counters cannot explain *which step* of *which lane* degraded or
+//! stalled. The recorder captures per-lane, per-step structured events
+//! plus engine/coordinator phase timings into preallocated ring buffers:
+//!
+//! - The engine checks a [`TraceSession`] out of the shared
+//!   [`FlightRecorder`] at run start ([`FlightRecorder::begin_session`],
+//!   allocating), owns it lock-free for the whole run, and folds it back
+//!   at run end ([`FlightRecorder::end_session`]). Every `record_*` call
+//!   in between is a fixed-size write into a preallocated
+//!   [`EventRing`] — no allocation, no locking, no panics — so the
+//!   steady-state lane step stays at 0 heap allocations with the
+//!   recorder in `full` mode (pinned by `tests/zero_alloc.rs`).
+//! - Coordinator-side events (queue wait, batch formation, steals) go
+//!   through `note_*` into a mutex-guarded ring: those paths are
+//!   per-batch, not per-step, and must stay panic-free (they are inside
+//!   the analyzer's `PANIC_ROOTS` cone).
+//!
+//! Two sinks consume a [`RecorderSnapshot`]: Chrome trace-event JSON for
+//! Perfetto ([`chrome`]) and an aggregated per-run summary folded into
+//! `BENCH_serving.json` ([`summary`]).
+
+pub mod chrome;
+pub mod summary;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::pipeline::{CacheOutcome, StepMode};
+use crate::util::sync::lock_ignore_poison;
+
+/// How much of the lane traffic the recorder captures.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Sampling {
+    /// Recorder disabled: `begin_session` returns `None`, the engine pays
+    /// one `Option` check per step.
+    #[default]
+    Off,
+    /// Record lanes whose admission tag is divisible by `n` (1-in-N);
+    /// phase timings are always recorded while a session is open.
+    Sampled(u32),
+    /// Record every lane.
+    Full,
+}
+
+impl Sampling {
+    pub fn enabled(self) -> bool {
+        self != Sampling::Off
+    }
+
+    /// Whether a lane with admission tag `tag` is recorded.
+    pub fn records(self, tag: u64) -> bool {
+        match self {
+            Sampling::Off => false,
+            Sampling::Sampled(n) => tag % u64::from(n.max(1)) == 0,
+            Sampling::Full => true,
+        }
+    }
+}
+
+/// Engine/coordinator phase a timing event attributes to, in request
+/// order: queue-wait → batch-form → gather → model → solver → scatter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseKind {
+    QueueWait,
+    BatchForm,
+    Gather,
+    Model,
+    Solver,
+    Scatter,
+}
+
+impl PhaseKind {
+    pub const ALL: [PhaseKind; 6] = [
+        PhaseKind::QueueWait,
+        PhaseKind::BatchForm,
+        PhaseKind::Gather,
+        PhaseKind::Model,
+        PhaseKind::Solver,
+        PhaseKind::Scatter,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PhaseKind::QueueWait => "queue_wait",
+            PhaseKind::BatchForm => "batch_form",
+            PhaseKind::Gather => "gather",
+            PhaseKind::Model => "model",
+            PhaseKind::Solver => "solver",
+            PhaseKind::Scatter => "scatter",
+        }
+    }
+}
+
+/// One recorded event. Plain `Copy` data — ring writes are fixed-size
+/// stores, never allocations. Times are microseconds relative to the
+/// owning [`FlightRecorder`]'s epoch.
+#[derive(Clone, Copy, Debug)]
+pub enum Event {
+    /// A lane took over a slot (`tag` is the feeder's admission tag).
+    Admit { tag: u64, t_us: f64 },
+    /// One lane step: the executed [`StepMode`], whether the model ran
+    /// fresh, and the stability-criterion inner product observed this
+    /// step (`f64::NAN` when the accelerator evaluated no criterion —
+    /// skipped steps, passthrough accelerators).
+    Step {
+        tag: u64,
+        step: u32,
+        mode: StepMode,
+        fresh: bool,
+        dot: f64,
+        t_us: f64,
+        dur_us: f64,
+    },
+    /// A lane finished: final cache outcome + NFE over `steps` steps.
+    Complete {
+        tag: u64,
+        outcome: CacheOutcome,
+        nfe: u32,
+        steps: u32,
+        t_us: f64,
+    },
+    /// Aggregated phase time over one engine step (`lanes` live lanes),
+    /// or one coordinator-side wait (queue-wait / batch-form).
+    Phase {
+        kind: PhaseKind,
+        t_us: f64,
+        dur_us: f64,
+        lanes: u32,
+    },
+    /// A worker stole `n` compatible queued requests into freed slots.
+    Steal { n: u32, t_us: f64 },
+}
+
+/// Fixed-capacity event ring. Preallocated once (cold), then every push
+/// is a wrapping store: when full, the oldest event is overwritten and
+/// counted in `dropped`. No operation past construction allocates,
+/// panics, or indexes unchecked.
+#[derive(Clone, Debug)]
+pub struct EventRing {
+    buf: Vec<Event>,
+    head: usize,
+    len: usize,
+    dropped: u64,
+}
+
+impl EventRing {
+    // xtask: allow(alloc): ring preallocation — sessions begin cold
+    pub fn with_capacity(cap: usize) -> EventRing {
+        EventRing {
+            buf: vec![Event::Steal { n: 0, t_us: 0.0 }; cap],
+            head: 0,
+            len: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn push(&mut self, e: Event) {
+        let cap = self.buf.len();
+        if cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        let pos = (self.head + self.len) % cap;
+        if let Some(slot) = self.buf.get_mut(pos) {
+            *slot = e;
+        }
+        if self.len < cap {
+            self.len += 1;
+        } else {
+            self.head = (self.head + 1) % cap;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Iterate the retained events oldest-first.
+    pub fn iter(&self) -> impl Iterator<Item = &Event> + '_ {
+        let cap = self.buf.len().max(1);
+        (0..self.len).filter_map(move |k| self.buf.get((self.head + k) % cap))
+    }
+}
+
+/// Per-engine-step phase-time accumulator, threaded through the bucket
+/// execution path by value (it lives in `LaneScratch`, so the borrow
+/// checker can split it from the plan/bucket fields). All methods are
+/// allocation-free; `mark`/`lap` cost one clock read when enabled and
+/// nothing otherwise.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseAccum {
+    pub enabled: bool,
+    pub gather_us: f64,
+    pub model_us: f64,
+    pub solver_us: f64,
+    pub scatter_us: f64,
+}
+
+impl PhaseAccum {
+    pub fn for_session(enabled: bool) -> PhaseAccum {
+        PhaseAccum { enabled, ..Default::default() }
+    }
+
+    /// Start (or restart) a lap timer; `None` when timing is off.
+    pub fn mark(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Microseconds since `t0`, advancing `t0` to now (so consecutive
+    /// laps partition one timeline). Zero when timing is off.
+    pub fn lap(t0: &mut Option<Instant>) -> f64 {
+        match t0 {
+            Some(s) => {
+                let now = Instant::now();
+                let d = now.duration_since(*s).as_secs_f64() * 1e6;
+                *t0 = Some(now);
+                d
+            }
+            None => 0.0,
+        }
+    }
+}
+
+/// A run-scoped recording handle, owned by the engine (no locks on any
+/// `record_*` path). One ring per lane slot plus one engine ring for
+/// phase events.
+pub struct TraceSession {
+    worker: usize,
+    seq: u64,
+    sampling: Sampling,
+    epoch: Instant,
+    lanes: Vec<EventRing>,
+    engine: EventRing,
+}
+
+impl TraceSession {
+    /// Microseconds since the recorder epoch.
+    pub fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Epoch-relative microseconds of an already-taken `Instant`.
+    pub fn rel_us(&self, t: Instant) -> f64 {
+        t.duration_since(self.epoch).as_secs_f64() * 1e6
+    }
+
+    pub fn records_lane(&self, tag: u64) -> bool {
+        self.sampling.records(tag)
+    }
+
+    pub fn record_admit(&mut self, slot: usize, tag: u64, t_us: f64) {
+        if let Some(ring) = self.lanes.get_mut(slot) {
+            ring.push(Event::Admit { tag, t_us });
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_step(
+        &mut self,
+        slot: usize,
+        tag: u64,
+        step: u32,
+        mode: StepMode,
+        fresh: bool,
+        dot: Option<f64>,
+        t_us: f64,
+        dur_us: f64,
+    ) {
+        if let Some(ring) = self.lanes.get_mut(slot) {
+            ring.push(Event::Step {
+                tag,
+                step,
+                mode,
+                fresh,
+                dot: dot.unwrap_or(f64::NAN),
+                t_us,
+                dur_us,
+            });
+        }
+    }
+
+    pub fn record_complete(
+        &mut self,
+        slot: usize,
+        tag: u64,
+        outcome: CacheOutcome,
+        nfe: u32,
+        steps: u32,
+        t_us: f64,
+    ) {
+        if let Some(ring) = self.lanes.get_mut(slot) {
+            ring.push(Event::Complete { tag, outcome, nfe, steps, t_us });
+        }
+    }
+
+    /// Fold one engine step's accumulated phase times into the engine
+    /// ring, laid out back-to-back ending at `end_us` (the phases of one
+    /// step partition its wall time, so consecutive laps tile cleanly),
+    /// and reset the accumulator for the next step.
+    pub fn flush_phases(&mut self, acc: &mut PhaseAccum, lanes: u32, end_us: f64) {
+        let total = acc.gather_us + acc.model_us + acc.solver_us + acc.scatter_us;
+        let mut cursor = end_us - total;
+        let laps = [
+            (PhaseKind::Gather, acc.gather_us),
+            (PhaseKind::Model, acc.model_us),
+            (PhaseKind::Solver, acc.solver_us),
+            (PhaseKind::Scatter, acc.scatter_us),
+        ];
+        for (kind, dur_us) in laps {
+            if dur_us > 0.0 {
+                self.engine.push(Event::Phase { kind, t_us: cursor, dur_us, lanes });
+                cursor += dur_us;
+            }
+        }
+        *acc = PhaseAccum::for_session(acc.enabled);
+    }
+}
+
+/// A folded [`TraceSession`]: everything one engine run recorded.
+#[derive(Clone, Debug)]
+pub struct FinishedSession {
+    pub worker: usize,
+    pub seq: u64,
+    pub lanes: Vec<EventRing>,
+    pub engine: EventRing,
+}
+
+/// Everything the recorder has captured so far; input to the export and
+/// summary sinks.
+#[derive(Clone, Debug)]
+pub struct RecorderSnapshot {
+    pub sessions: Vec<FinishedSession>,
+    pub coord: EventRing,
+}
+
+impl RecorderSnapshot {
+    /// Total ring-overflow drops across every session and the
+    /// coordinator ring. Nonzero drops mean timelines may be truncated.
+    pub fn total_dropped(&self) -> u64 {
+        let mut d = self.coord.dropped();
+        for s in &self.sessions {
+            d += s.engine.dropped();
+            for ring in &s.lanes {
+                d += ring.dropped();
+            }
+        }
+        d
+    }
+}
+
+/// Default per-lane ring capacity (events): a 1000-step lane fits with
+/// admit/complete headroom.
+pub const LANE_RING_CAP: usize = 2048;
+/// Default engine/coordinator ring capacity (phase events).
+pub const ENGINE_RING_CAP: usize = 8192;
+/// Finished sessions retained before the oldest is evicted.
+const MAX_ARCHIVE: usize = 512;
+
+/// Shared recorder: one per coordinator (or per standalone pipeline),
+/// handed to engines as an `Arc`. Sessions are checked out lock-free;
+/// only begin/end and the coordinator-side `note_*` paths touch locks.
+pub struct FlightRecorder {
+    sampling: Sampling,
+    lane_ring_cap: usize,
+    engine_ring_cap: usize,
+    epoch: Instant,
+    seq: AtomicU64,
+    finished: Mutex<Vec<FinishedSession>>,
+    coord: Mutex<EventRing>,
+}
+
+impl FlightRecorder {
+    pub fn new(sampling: Sampling) -> Arc<FlightRecorder> {
+        Self::with_capacity(sampling, LANE_RING_CAP, ENGINE_RING_CAP)
+    }
+
+    pub fn with_capacity(
+        sampling: Sampling,
+        lane_ring_cap: usize,
+        engine_ring_cap: usize,
+    ) -> Arc<FlightRecorder> {
+        Arc::new(FlightRecorder {
+            sampling,
+            lane_ring_cap,
+            engine_ring_cap,
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            finished: Mutex::new(Vec::new()),
+            coord: Mutex::new(EventRing::with_capacity(engine_ring_cap)),
+        })
+    }
+
+    pub fn sampling(&self) -> Sampling {
+        self.sampling
+    }
+
+    /// Microseconds since the recorder epoch (the timeline every session
+    /// and coordinator event shares).
+    pub fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Check a session out for an engine run over `capacity` lane slots.
+    /// `None` when sampling is off — the engine then pays one `Option`
+    /// check per step and nothing else. Allocates (ring preallocation):
+    /// call from run-init code, never from the step loop.
+    pub fn begin_session(&self, worker: usize, capacity: usize) -> Option<TraceSession> {
+        if !self.sampling.enabled() {
+            return None;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut lanes = Vec::with_capacity(capacity);
+        for _ in 0..capacity {
+            lanes.push(EventRing::with_capacity(self.lane_ring_cap));
+        }
+        Some(TraceSession {
+            worker,
+            seq,
+            sampling: self.sampling,
+            epoch: self.epoch,
+            lanes,
+            engine: EventRing::with_capacity(self.engine_ring_cap),
+        })
+    }
+
+    /// Fold a finished session into the archive (bounded: the oldest
+    /// session is evicted past [`MAX_ARCHIVE`]).
+    pub fn end_session(&self, sess: TraceSession) {
+        let done = FinishedSession {
+            worker: sess.worker,
+            seq: sess.seq,
+            lanes: sess.lanes,
+            engine: sess.engine,
+        };
+        let mut finished = lock_ignore_poison(&self.finished);
+        if finished.len() >= MAX_ARCHIVE {
+            finished.remove(0);
+        }
+        finished.push(done);
+    }
+
+    /// Record one request's queue wait (popped → executing) ending now.
+    pub fn note_queue_wait(&self, wait_ms: f64) {
+        let dur_us = wait_ms.max(0.0) * 1e3;
+        let t_us = self.now_us() - dur_us;
+        let mut ring = lock_ignore_poison(&self.coord);
+        ring.push(Event::Phase { kind: PhaseKind::QueueWait, t_us, dur_us, lanes: 1 });
+    }
+
+    /// Record one batch's formation wait (oldest member's submission →
+    /// batch emitted) ending now, over `n` requests.
+    pub fn note_batch_form(&self, wait_ms: f64, n: u32) {
+        let dur_us = wait_ms.max(0.0) * 1e3;
+        let t_us = self.now_us() - dur_us;
+        let mut ring = lock_ignore_poison(&self.coord);
+        ring.push(Event::Phase { kind: PhaseKind::BatchForm, t_us, dur_us, lanes: n });
+    }
+
+    /// Record a mid-flight steal of `n` compatible queued requests.
+    pub fn note_steal(&self, n: u32) {
+        let t_us = self.now_us();
+        let mut ring = lock_ignore_poison(&self.coord);
+        ring.push(Event::Steal { n, t_us });
+    }
+
+    /// Clone out everything recorded so far (finished sessions +
+    /// coordinator ring). Cold: export/summary input.
+    pub fn take_snapshot(&self) -> RecorderSnapshot {
+        let sessions = lock_ignore_poison(&self.finished).clone();
+        let coord = lock_ignore_poison(&self.coord).clone();
+        RecorderSnapshot { sessions, coord }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_selects_tags() {
+        assert!(!Sampling::Off.records(0));
+        assert!(Sampling::Full.records(7));
+        let s = Sampling::Sampled(4);
+        assert!(s.records(0));
+        assert!(!s.records(1));
+        assert!(s.records(8));
+        // degenerate 1-in-0 clamps to 1-in-1 instead of dividing by zero
+        assert!(Sampling::Sampled(0).records(3));
+    }
+
+    #[test]
+    fn ring_retains_newest_and_counts_drops() {
+        let mut r = EventRing::with_capacity(3);
+        for k in 0..5u32 {
+            r.push(Event::Steal { n: k, t_us: k as f64 });
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let kept: Vec<u32> = r
+            .iter()
+            .map(|e| match e {
+                Event::Steal { n, .. } => *n,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(kept, vec![2, 3, 4], "ring keeps the newest events in order");
+        // zero-capacity ring drops everything without touching memory
+        let mut z = EventRing::with_capacity(0);
+        z.push(Event::Steal { n: 1, t_us: 0.0 });
+        assert_eq!(z.len(), 0);
+        assert_eq!(z.dropped(), 1);
+    }
+
+    #[test]
+    fn session_checkout_records_and_folds() {
+        let rec = FlightRecorder::with_capacity(Sampling::Full, 16, 16);
+        let mut sess = rec.begin_session(3, 2).expect("full sampling opens sessions");
+        assert!(sess.records_lane(0) && sess.records_lane(1));
+        let t = sess.now_us();
+        sess.record_admit(0, 7, t);
+        sess.record_step(0, 7, 0, StepMode::Full, true, Some(-0.5), t + 1.0, 1.0);
+        sess.record_complete(0, 7, CacheOutcome::Uncached, 1, 1, t + 3.0);
+        // out-of-range slot is silently ignored, never a panic
+        sess.record_admit(9, 8, t);
+        rec.end_session(sess);
+        rec.note_queue_wait(2.0);
+        rec.note_steal(3);
+        let snap = rec.take_snapshot();
+        assert_eq!(snap.sessions.len(), 1);
+        assert_eq!(snap.sessions[0].worker, 3);
+        assert_eq!(snap.sessions[0].lanes[0].len(), 3);
+        assert_eq!(snap.sessions[0].lanes[1].len(), 0);
+        assert_eq!(snap.coord.len(), 2);
+        assert_eq!(snap.total_dropped(), 0);
+    }
+
+    #[test]
+    fn off_sampling_yields_no_session() {
+        let rec = FlightRecorder::new(Sampling::Off);
+        assert!(rec.begin_session(0, 4).is_none());
+    }
+
+    #[test]
+    fn phase_accum_tiles_back_to_back() {
+        let rec = FlightRecorder::with_capacity(Sampling::Full, 8, 8);
+        let mut sess = rec.begin_session(0, 1).expect("session");
+        let mut acc = PhaseAccum::for_session(true);
+        acc.gather_us = 10.0;
+        acc.model_us = 30.0;
+        acc.scatter_us = 5.0;
+        sess.flush_phases(&mut acc, 2, 100.0);
+        assert_eq!(acc.model_us, 0.0, "flush resets the accumulator");
+        assert!(acc.enabled, "flush keeps timing enabled");
+        let phases: Vec<(PhaseKind, f64, f64)> = sess
+            .engine
+            .iter()
+            .map(|e| match e {
+                Event::Phase { kind, t_us, dur_us, .. } => (*kind, *t_us, *dur_us),
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(phases.len(), 3, "zero-duration phases are elided");
+        assert_eq!(phases[0].0, PhaseKind::Gather);
+        assert!((phases[0].1 - 55.0).abs() < 1e-9);
+        // consecutive phases tile: each starts where the previous ended
+        assert!((phases[1].1 - (phases[0].1 + phases[0].2)).abs() < 1e-9);
+        assert!((phases[2].1 - (phases[1].1 + phases[1].2)).abs() < 1e-9);
+        assert!(((phases[2].1 + phases[2].2) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disabled_accum_timers_are_free() {
+        let acc = PhaseAccum::for_session(false);
+        let mut t = acc.mark();
+        assert!(t.is_none());
+        assert_eq!(PhaseAccum::lap(&mut t), 0.0);
+    }
+}

@@ -1,0 +1,453 @@
+//! Trace aggregation: per-lane timeline reconstruction + per-run summary.
+//!
+//! [`lane_timelines`] rebuilds every recorded lane's life (admission →
+//! steps → completion) from the raw rings, which is what the `sada-serve
+//! trace` self-checks and the regression tests compare against
+//! [`crate::pipeline::ContinuousStats`] / `RunStats`. [`summarize`]
+//! folds a snapshot into the aggregates that land in
+//! `BENCH_serving.json`: per-step-mode time shares, the
+//! criterion-sign-flip step distribution, phase time totals, and
+//! admission latency.
+
+use anyhow::Result;
+
+use crate::pipeline::{CacheOutcome, StepMode};
+use crate::util::json::Json;
+
+use super::{Event, PhaseKind, RecorderSnapshot};
+
+/// One recorded lane step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRec {
+    pub step: u32,
+    pub mode: StepMode,
+    pub fresh: bool,
+    /// Stability-criterion inner product, when one was evaluated.
+    pub dot: Option<f64>,
+    pub t_us: f64,
+    pub dur_us: f64,
+}
+
+/// A reconstructed lane life: admission → steps → completion.
+#[derive(Clone, Debug, Default)]
+pub struct LaneTimeline {
+    /// Index of the owning session in the snapshot.
+    pub session: usize,
+    pub worker: usize,
+    pub tag: u64,
+    pub admit_us: Option<f64>,
+    pub complete_us: Option<f64>,
+    pub steps: Vec<StepRec>,
+    pub outcome: Option<CacheOutcome>,
+    pub nfe: Option<u32>,
+    pub n_steps: Option<u32>,
+}
+
+impl LaneTimeline {
+    fn new(session: usize, worker: usize, tag: u64) -> LaneTimeline {
+        LaneTimeline { session, worker, tag, ..Default::default() }
+    }
+
+    pub fn first_step_us(&self) -> Option<f64> {
+        self.steps.first().map(|s| s.t_us)
+    }
+
+    /// Executed-step count per [`StepMode`], aligned with
+    /// [`StepMode::ALL`] — directly comparable to `RunStats::count`.
+    pub fn mode_counts(&self) -> [usize; 6] {
+        let mut counts = [0usize; 6];
+        for s in &self.steps {
+            for (k, m) in StepMode::ALL.iter().enumerate() {
+                if *m == s.mode {
+                    if let Some(c) = counts.get_mut(k) {
+                        *c += 1;
+                    }
+                }
+            }
+        }
+        counts
+    }
+
+    pub fn fresh_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.fresh).count()
+    }
+
+    /// Step indices where the stability criterion's sign flipped
+    /// relative to the previous evaluated step — the paper's
+    /// instability onsets, per lane.
+    pub fn flip_steps(&self) -> Vec<u32> {
+        let mut flips = Vec::new();
+        let mut prev: Option<f64> = None;
+        for s in &self.steps {
+            if let Some(d) = s.dot {
+                if let Some(p) = prev {
+                    if (p < 0.0) != (d < 0.0) {
+                        flips.push(s.step);
+                    }
+                }
+                prev = Some(d);
+            }
+        }
+        flips
+    }
+}
+
+/// Rebuild per-lane timelines from a snapshot, ordered by (session,
+/// tag). A slot ring interleaves the successive lanes that occupied the
+/// slot; events are re-grouped by admission tag, so slot reuse is
+/// invisible here.
+pub fn lane_timelines(snap: &RecorderSnapshot) -> Vec<LaneTimeline> {
+    let mut out: Vec<LaneTimeline> = Vec::new();
+    for (si, sess) in snap.sessions.iter().enumerate() {
+        let mut tls: Vec<LaneTimeline> = Vec::new();
+        let mut at = |tls: &mut Vec<LaneTimeline>, tag: u64| -> usize {
+            match tls.iter().position(|t| t.tag == tag) {
+                Some(k) => k,
+                None => {
+                    tls.push(LaneTimeline::new(si, sess.worker, tag));
+                    tls.len() - 1
+                }
+            }
+        };
+        for ring in &sess.lanes {
+            for e in ring.iter() {
+                match e {
+                    Event::Admit { tag, t_us } => {
+                        let k = at(&mut tls, *tag);
+                        if let Some(tl) = tls.get_mut(k) {
+                            tl.admit_us = Some(*t_us);
+                        }
+                    }
+                    Event::Step { tag, step, mode, fresh, dot, t_us, dur_us } => {
+                        let k = at(&mut tls, *tag);
+                        if let Some(tl) = tls.get_mut(k) {
+                            tl.steps.push(StepRec {
+                                step: *step,
+                                mode: *mode,
+                                fresh: *fresh,
+                                dot: if dot.is_finite() { Some(*dot) } else { None },
+                                t_us: *t_us,
+                                dur_us: *dur_us,
+                            });
+                        }
+                    }
+                    Event::Complete { tag, outcome, nfe, steps, t_us } => {
+                        let k = at(&mut tls, *tag);
+                        if let Some(tl) = tls.get_mut(k) {
+                            tl.complete_us = Some(*t_us);
+                            tl.outcome = Some(*outcome);
+                            tl.nfe = Some(*nfe);
+                            tl.n_steps = Some(*steps);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        tls.sort_by_key(|t| t.tag);
+        out.extend(tls);
+    }
+    out
+}
+
+/// Validate one reconstructed timeline: contiguous monotone steps from
+/// 0, admission before the first step, completion after the last, and
+/// step/NFE accounting consistent with the lane's recorded totals.
+/// Requires a drop-free recording (full sampling, rings large enough).
+pub fn check_timeline(tl: &LaneTimeline) -> Result<()> {
+    anyhow::ensure!(tl.admit_us.is_some(), "lane {}: no admission event", tl.tag);
+    anyhow::ensure!(tl.complete_us.is_some(), "lane {}: no completion event", tl.tag);
+    anyhow::ensure!(!tl.steps.is_empty(), "lane {}: no steps recorded", tl.tag);
+    for (k, s) in tl.steps.iter().enumerate() {
+        anyhow::ensure!(
+            s.step as usize == k,
+            "lane {}: step index {} at position {k} (not contiguous from 0)",
+            tl.tag,
+            s.step
+        );
+    }
+    let admit = tl.admit_us.unwrap_or(0.0);
+    let complete = tl.complete_us.unwrap_or(0.0);
+    let first = tl.first_step_us().unwrap_or(admit);
+    let last = tl.steps.last().map(|s| s.t_us).unwrap_or(first);
+    anyhow::ensure!(
+        admit <= first,
+        "lane {}: admitted at {admit:.1}us after first step {first:.1}us",
+        tl.tag
+    );
+    anyhow::ensure!(
+        first <= complete && last <= complete,
+        "lane {}: completion {complete:.1}us precedes a step",
+        tl.tag
+    );
+    let mut prev = f64::NEG_INFINITY;
+    for s in &tl.steps {
+        anyhow::ensure!(
+            s.t_us >= prev,
+            "lane {}: step {} timestamp moved backwards",
+            tl.tag,
+            s.step
+        );
+        prev = s.t_us;
+    }
+    if let Some(n) = tl.n_steps {
+        anyhow::ensure!(
+            tl.steps.len() == n as usize,
+            "lane {}: {} step events vs {} recorded total",
+            tl.tag,
+            tl.steps.len(),
+            n
+        );
+    }
+    if let Some(nfe) = tl.nfe {
+        anyhow::ensure!(
+            tl.fresh_steps() == nfe as usize,
+            "lane {}: {} fresh step events vs nfe {}",
+            tl.tag,
+            tl.fresh_steps(),
+            nfe
+        );
+    }
+    Ok(())
+}
+
+/// Per-mode aggregate over every recorded step.
+#[derive(Clone, Copy, Debug)]
+pub struct ModeShare {
+    pub mode: StepMode,
+    pub steps: usize,
+    pub total_us: f64,
+}
+
+/// Per-phase aggregate over every recorded phase event.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseShare {
+    pub kind: PhaseKind,
+    pub events: usize,
+    pub total_us: f64,
+}
+
+/// Aggregated per-run summary of a snapshot.
+#[derive(Clone, Debug)]
+pub struct TraceSummary {
+    pub sessions: usize,
+    pub lanes: usize,
+    pub admitted: usize,
+    pub completed: usize,
+    pub lane_steps: usize,
+    pub dropped: u64,
+    pub mode_share: Vec<ModeShare>,
+    pub phase_share: Vec<PhaseShare>,
+    /// Step indices of criterion sign flips, across all lanes.
+    pub flip_steps: Vec<u32>,
+    /// Admission → first-step latency per lane (microseconds).
+    pub admission_wait_us: Vec<f64>,
+    pub steals: usize,
+    pub stolen: u64,
+}
+
+pub fn summarize(snap: &RecorderSnapshot) -> TraceSummary {
+    let tls = lane_timelines(snap);
+    let mut mode_share: Vec<ModeShare> = StepMode::ALL
+        .iter()
+        .map(|m| ModeShare { mode: *m, steps: 0, total_us: 0.0 })
+        .collect();
+    let mut flip_steps = Vec::new();
+    let mut admission_wait_us = Vec::new();
+    let mut admitted = 0usize;
+    let mut completed = 0usize;
+    let mut lane_steps = 0usize;
+    for tl in &tls {
+        admitted += usize::from(tl.admit_us.is_some());
+        completed += usize::from(tl.complete_us.is_some());
+        lane_steps += tl.steps.len();
+        for s in &tl.steps {
+            if let Some(ms) = mode_share.iter_mut().find(|m| m.mode == s.mode) {
+                ms.steps += 1;
+                ms.total_us += s.dur_us;
+            }
+        }
+        flip_steps.extend(tl.flip_steps());
+        if let (Some(a), Some(f)) = (tl.admit_us, tl.first_step_us()) {
+            admission_wait_us.push((f - a).max(0.0));
+        }
+    }
+    let mut phase_share: Vec<PhaseShare> = PhaseKind::ALL
+        .iter()
+        .map(|k| PhaseShare { kind: *k, events: 0, total_us: 0.0 })
+        .collect();
+    let mut steals = 0usize;
+    let mut stolen = 0u64;
+    let coord_events = snap.coord.iter();
+    let engine_events = snap.sessions.iter().flat_map(|s| s.engine.iter());
+    for e in coord_events.chain(engine_events) {
+        match e {
+            Event::Phase { kind, dur_us, .. } => {
+                if let Some(ps) = phase_share.iter_mut().find(|p| p.kind == *kind) {
+                    ps.events += 1;
+                    ps.total_us += dur_us;
+                }
+            }
+            Event::Steal { n, .. } => {
+                steals += 1;
+                stolen += u64::from(*n);
+            }
+            _ => {}
+        }
+    }
+    flip_steps.sort_unstable();
+    TraceSummary {
+        sessions: snap.sessions.len(),
+        lanes: tls.len(),
+        admitted,
+        completed,
+        lane_steps,
+        dropped: snap.total_dropped(),
+        mode_share,
+        phase_share,
+        flip_steps,
+        admission_wait_us,
+        steals,
+        stolen,
+    }
+}
+
+fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().sum::<f64>() / v.len() as f64
+}
+
+/// Render a summary as the `trace` section of `BENCH_serving.json`.
+pub fn summary_json(s: &TraceSummary) -> Json {
+    let step_total_us: f64 = s.mode_share.iter().map(|m| m.total_us).sum();
+    let modes: Vec<Json> = s
+        .mode_share
+        .iter()
+        .filter(|m| m.steps > 0)
+        .map(|m| {
+            Json::obj(vec![
+                ("mode", Json::str(m.mode.name())),
+                ("steps", Json::num(m.steps as f64)),
+                ("total_us", Json::num(m.total_us)),
+                (
+                    "time_share",
+                    Json::num(if step_total_us > 0.0 { m.total_us / step_total_us } else { 0.0 }),
+                ),
+            ])
+        })
+        .collect();
+    let phases: Vec<Json> = s
+        .phase_share
+        .iter()
+        .filter(|p| p.events > 0)
+        .map(|p| {
+            Json::obj(vec![
+                ("phase", Json::str(p.kind.name())),
+                ("events", Json::num(p.events as f64)),
+                ("total_us", Json::num(p.total_us)),
+            ])
+        })
+        .collect();
+    let flips_f64: Vec<f64> = s.flip_steps.iter().map(|x| *x as f64).collect();
+    Json::obj(vec![
+        ("sessions", Json::num(s.sessions as f64)),
+        ("lanes", Json::num(s.lanes as f64)),
+        ("admitted", Json::num(s.admitted as f64)),
+        ("completed", Json::num(s.completed as f64)),
+        ("lane_steps", Json::num(s.lane_steps as f64)),
+        ("events_dropped", Json::num(s.dropped as f64)),
+        ("mode_share", Json::Arr(modes)),
+        ("phase_totals", Json::Arr(phases)),
+        ("criterion_flips", Json::num(s.flip_steps.len() as f64)),
+        ("criterion_flip_steps", Json::arr_f64(&flips_f64)),
+        ("admission_wait_mean_us", Json::num(mean(&s.admission_wait_us))),
+        (
+            "admission_wait_max_us",
+            Json::num(s.admission_wait_us.iter().cloned().fold(0.0, f64::max)),
+        ),
+        ("steal_events", Json::num(s.steals as f64)),
+        ("requests_stolen", Json::num(s.stolen as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{FlightRecorder, PhaseAccum, Sampling};
+
+    fn two_lane_snapshot() -> RecorderSnapshot {
+        let rec = FlightRecorder::with_capacity(Sampling::Full, 32, 32);
+        let mut sess = rec.begin_session(1, 2).expect("session");
+        // lane 0: three steps, criterion flips negative -> positive at 2
+        sess.record_admit(0, 0, 1.0);
+        sess.record_step(0, 0, 0, StepMode::Full, true, Some(-1.0), 2.0, 1.0);
+        sess.record_step(0, 0, 1, StepMode::SkipAm3, false, None, 4.0, 0.5);
+        sess.record_step(0, 0, 2, StepMode::Full, true, Some(0.5), 5.0, 1.0);
+        sess.record_complete(0, 0, CacheOutcome::Uncached, 2, 3, 7.0);
+        // lane 1 occupies slot 0 after lane 0 retires: slot reuse must be
+        // invisible in the reconstruction
+        sess.record_admit(0, 1, 8.0);
+        sess.record_step(0, 1, 0, StepMode::Full, true, None, 9.0, 1.0);
+        sess.record_complete(0, 1, CacheOutcome::Hit, 1, 1, 11.0);
+        let mut acc = PhaseAccum::for_session(true);
+        acc.model_us = 2.0;
+        sess.flush_phases(&mut acc, 2, 10.0);
+        rec.end_session(sess);
+        rec.take_snapshot()
+    }
+
+    #[test]
+    fn timelines_group_by_tag_across_slot_reuse() {
+        let tls = lane_timelines(&two_lane_snapshot());
+        assert_eq!(tls.len(), 2);
+        assert_eq!(tls[0].tag, 0);
+        assert_eq!(tls[0].steps.len(), 3);
+        assert_eq!(tls[0].fresh_steps(), 2);
+        assert_eq!(tls[0].mode_counts()[0], 2, "two Full steps");
+        assert_eq!(tls[1].tag, 1);
+        assert_eq!(tls[1].outcome, Some(CacheOutcome::Hit));
+        for tl in &tls {
+            check_timeline(tl).unwrap();
+        }
+    }
+
+    #[test]
+    fn flips_detected_on_sign_change_only() {
+        let tls = lane_timelines(&two_lane_snapshot());
+        assert_eq!(tls[0].flip_steps(), vec![2], "one flip, at the step that observed it");
+        assert!(tls[1].flip_steps().is_empty());
+    }
+
+    #[test]
+    fn check_timeline_rejects_gaps_and_order_violations() {
+        let rec = FlightRecorder::with_capacity(Sampling::Full, 8, 8);
+        let mut sess = rec.begin_session(0, 1).expect("session");
+        sess.record_admit(0, 5, 1.0);
+        sess.record_step(0, 5, 0, StepMode::Full, true, None, 2.0, 1.0);
+        sess.record_step(0, 5, 2, StepMode::Full, true, None, 3.0, 1.0); // gap!
+        sess.record_complete(0, 5, CacheOutcome::Uncached, 2, 2, 4.0);
+        rec.end_session(sess);
+        let tls = lane_timelines(&rec.take_snapshot());
+        assert!(check_timeline(&tls[0]).is_err(), "step-index gap must be caught");
+    }
+
+    #[test]
+    fn summary_aggregates_and_serializes() {
+        let snap = two_lane_snapshot();
+        let s = summarize(&snap);
+        assert_eq!(s.lanes, 2);
+        assert_eq!(s.admitted, 2);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.lane_steps, 4);
+        assert_eq!(s.flip_steps, vec![2]);
+        assert_eq!(s.admission_wait_us.len(), 2);
+        let j = summary_json(&s);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("lane_steps").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(parsed.get("criterion_flips").unwrap().as_usize().unwrap(), 1);
+        let modes = parsed.get("mode_share").unwrap().as_arr().unwrap();
+        assert!(modes.len() >= 2, "full + skip_am3 shares present");
+    }
+}

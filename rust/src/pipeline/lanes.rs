@@ -85,12 +85,15 @@
 //! Admission and completion are bounded per-event costs (solver grid,
 //! stats vector, result assembly), never per-step ones.
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use super::{
     apply_structural_fallbacks, Accelerator, GenRequest, GenResult, Pipeline, RunStats, StepCtx,
-    StepObs, StepPlan,
+    StepMode, StepObs, StepPlan,
 };
+use crate::obs::PhaseAccum;
 use crate::runtime::manifest::split_into_buckets;
 use crate::runtime::{ModelArgs, ModelBackend, ModelInfo};
 use crate::solvers::{build_solver, Solver};
@@ -247,6 +250,10 @@ struct LaneScratch {
     splits: Vec<Vec<usize>>,
     /// Compiled `full_b{n}` variant names, built once.
     bucket_variants: Vec<(usize, String)>,
+    /// Per-engine-step phase timers for the flight recorder
+    /// ([`crate::obs`]). Disabled (every mark a no-op) unless a trace
+    /// session is live, so untraced runs never touch the clock.
+    phase: PhaseAccum,
 }
 
 /// One-shot feeder behind [`Pipeline::generate_lanes`]: admits the whole
@@ -346,6 +353,14 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         // per-step loop below reuses them in place
         let info = self.backend.info().clone();
         let buckets = info.full_batch_buckets();
+        // trace session checkout: per-lane ring buffers are preallocated
+        // here so the step loop records without allocating (None when no
+        // recorder is attached or sampling is Off — every recording branch
+        // below is then dead)
+        let mut sess = self
+            .recorder
+            .as_ref()
+            .and_then(|(rec, worker)| rec.begin_session(*worker, capacity));
         let mut lanes: Vec<Lane> = Vec::with_capacity(capacity);
         let mut sc = LaneScratch {
             plans: Vec::with_capacity(capacity),
@@ -358,6 +373,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 .iter()
                 .map(|&n| (n, ModelInfo::full_variant_for(n)))
                 .collect(),
+            phase: PhaseAccum::for_session(sess.is_some()),
         };
         let mut stats = ContinuousStats::default();
         // xtask: allow(alloc, end)
@@ -379,7 +395,14 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                     capacity - active
                 );
                 for a in admitted {
-                    self.admit_lane(&mut lanes, capacity, &info, a)?;
+                    let tag = a.tag;
+                    let slot = self.admit_lane(&mut lanes, capacity, &info, a)?;
+                    if let Some(s) = sess.as_mut() {
+                        if s.records_lane(tag) {
+                            let t_us = s.now_us();
+                            s.record_admit(slot, tag, t_us);
+                        }
+                    }
                     stats.admitted += 1;
                     active += 1;
                 }
@@ -453,6 +476,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             // body — keep the two in lockstep (the NoAccel/DeepCache
             // bit-identity property tests pin the executed paths against
             // drift).
+            let mut t_solver = sc.phase.mark();
             for (l, lane) in lanes.iter_mut().enumerate() {
                 if !lane.active {
                     continue;
@@ -461,6 +485,10 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 let i = lane.step;
                 let t_norm = lane.solver.t_norm(i);
                 let fresh = lane.executed;
+                let step_t0 = match sess.as_ref() {
+                    Some(s) if s.records_lane(lane.tag) => Some(Instant::now()),
+                    _ => None,
+                };
                 match plan {
                     StepPlan::Full | StepPlan::Shallow | StepPlan::Prune { .. } => {
                         anyhow::ensure!(lane.executed, "executed lane lost its output");
@@ -520,6 +548,22 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                     lane.accel.observe(&obs);
                 }
                 lane.stats.record_step(plan, fresh);
+                if let (Some(s), Some(t0)) = (sess.as_mut(), step_t0) {
+                    // the decision record: what this lane did at step i and
+                    // what the criterion saw — ring push, no allocation
+                    let t_us = s.rel_us(t0);
+                    let dur_us = t0.elapsed().as_secs_f64() * 1e6;
+                    s.record_step(
+                        l,
+                        lane.tag,
+                        i as u32,
+                        StepMode::from_plan(plan),
+                        fresh,
+                        lane.accel.last_criterion_dot(),
+                        t_us,
+                        dur_us,
+                    );
+                }
                 std::mem::swap(&mut lane.m_out, &mut lane.last_out);
                 lane.has_last = true;
                 std::mem::swap(&mut lane.x, &mut lane.x_next);
@@ -537,15 +581,42 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                     st.nfe = st.fresh_steps;
                     st.outcome = lane.accel.outcome();
                     st.degraded.add(&lane.accel.planned_degradations());
+                    if let Some(s) = sess.as_mut() {
+                        if s.records_lane(lane.tag) {
+                            let t_us = s.now_us();
+                            s.record_complete(
+                                l,
+                                lane.tag,
+                                st.outcome,
+                                st.nfe as u32,
+                                st.modes.len() as u32,
+                                t_us,
+                            );
+                        }
+                    }
                     feeder.complete(lane.tag, GenResult { image: lane.x.clone(), stats: st });
                     // xtask: allow(alloc, end)
                     lane.active = false;
                     stats.completed += 1;
                 }
             }
+            sc.phase.solver_us += PhaseAccum::lap(&mut t_solver);
+            if let Some(s) = sess.as_mut() {
+                // lay this engine step's phase spans onto the engine track
+                // (ring pushes only) and reset the accumulators
+                let end_us = s.now_us();
+                s.flush_phases(&mut sc.phase, active as u32, end_us);
+            }
         }
 
         stats.wall_ms = timer.elapsed_ms();
+        // fold the finished trace session back into the recorder (a
+        // per-run cost: one archive push under the recorder lock)
+        if let Some(s) = sess.take() {
+            if let Some((rec, _)) = self.recorder.as_ref() {
+                rec.end_session(s);
+            }
+        }
         // aux buffers go back to the pool for the next engine run's lanes
         for lane in lanes.iter_mut() {
             lane.deep.retire(&self.arena);
@@ -554,11 +625,12 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         Ok(stats)
     }
 
-    /// Place an admitted request into a slot. The first inactive slot's
-    /// buffers are reused in place (state re-drawn from the request seed,
-    /// aux slots re-ensured against the arena — the O(1) admission
-    /// contract); while the engine holds fewer slots than `capacity`, a
-    /// fresh slot is allocated instead.
+    /// Place an admitted request into a slot, returning the slot index
+    /// (the flight recorder's ring index for this occupant). The first
+    /// inactive slot's buffers are reused in place (state re-drawn from
+    /// the request seed, aux slots re-ensured against the arena — the
+    /// O(1) admission contract); while the engine holds fewer slots than
+    /// `capacity`, a fresh slot is allocated instead.
     // Admission is a bounded per-event cost (solver grid, stats vector,
     // cond clone on shape change, first-use slot allocation), never a
     // per-step one.
@@ -569,7 +641,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         capacity: usize,
         info: &ModelInfo,
         a: AdmittedLane,
-    ) -> Result<()> {
+    ) -> Result<usize> {
         let AdmittedLane { req, mut accel, tag } = a;
         let steps = req.steps;
         anyhow::ensure!(steps > 0, "admitted lane needs at least one step");
@@ -620,6 +692,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 lane.active = true;
                 lane.timer = crate::report::Timer::start();
                 lane.req = req;
+                Ok(s)
             }
             None => {
                 anyhow::ensure!(lanes.len() < capacity, "no free slot for admitted lane");
@@ -661,9 +734,9 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                     timer: crate::report::Timer::start(),
                     req,
                 });
+                Ok(lanes.len() - 1)
             }
         }
-        Ok(())
     }
 
     /// Execute every active lane whose plan needs the model this engine
@@ -686,6 +759,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 StepPlan::Shallow => {
                     let lane = &mut lanes[l];
                     let t_norm = lane.solver.t_norm(lane.step);
+                    let mut t0 = sc.phase.mark();
                     // xtask: allow(panic): persistent x slot — Some for the whole run
                     lane.args.x.as_mut().expect("persistent x slot").copy_from(&lane.x);
                     lane.args.t = t_norm as f32;
@@ -698,6 +772,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                         lane.deep.install(d);
                     }
                     run?;
+                    sc.phase.model_us += PhaseAccum::lap(&mut t0);
                     lane.executed = true;
                 }
                 StepPlan::Prune { mask } => {
@@ -705,6 +780,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                     // the same single owner Pipeline::generate executes
                     let lane = &mut lanes[l];
                     let t_norm = lane.solver.t_norm(lane.step);
+                    let mut t0 = sc.phase.mark();
                     self.run_prune_into(
                         &mut lane.args,
                         mask,
@@ -713,6 +789,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                         &mut lane.m_out,
                         &mut lane.caches,
                     )?;
+                    sc.phase.model_us += PhaseAccum::lap(&mut t0);
                     lane.executed = true;
                 }
                 _ => {}
@@ -773,19 +850,24 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 }
             }
             for &l in &sc.singles {
-                self.run_lane_single(&mut lanes[l])?;
+                self.run_lane_single(&mut lanes[l], &mut sc.phase)?;
             }
             let mut at = 0usize;
             for &chunk in &sc.splits[sc.batchable.len()] {
                 if chunk == 1 {
                     let l = sc.batchable[at];
                     at += 1;
-                    self.run_lane_single(&mut lanes[l])?;
+                    self.run_lane_single(&mut lanes[l], &mut sc.phase)?;
                     continue;
                 }
                 let lo = at;
                 at += chunk;
-                self.run_lane_bucket(lanes, &sc.batchable[lo..at], &sc.bucket_variants)?;
+                self.run_lane_bucket(
+                    lanes,
+                    &sc.batchable[lo..at],
+                    &sc.bucket_variants,
+                    &mut sc.phase,
+                )?;
             }
         }
         Ok(())
@@ -794,8 +876,9 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
     /// Single-lane full execution: the same code path as the Full arm of
     /// [`Pipeline::generate`] (including deep/caches capture), so a lane
     /// executed alone is bit-identical to sequential generation.
-    fn run_lane_single(&self, lane: &mut Lane) -> Result<()> {
+    fn run_lane_single(&self, lane: &mut Lane, phase: &mut PhaseAccum) -> Result<()> {
         let t_norm = lane.solver.t_norm(lane.step);
+        let mut t0 = phase.mark();
         // xtask: allow(panic): persistent x slot — Some for the whole run
         lane.args.x.as_mut().expect("persistent x slot").copy_from(&lane.x);
         lane.args.t = t_norm as f32;
@@ -806,6 +889,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             Some(lane.deep.slot()),
             Some(lane.caches.slot()),
         )?;
+        phase.model_us += PhaseAccum::lap(&mut t0);
         // single full executions refresh the aux features their signature
         // declares (empty signatures follow the run_into contract: full
         // emits both); an unemitted slot keeps its previous validity
@@ -831,6 +915,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         lanes: &mut [Lane],
         sub: &[usize],
         bucket_variants: &[(usize, String)],
+        phase: &mut PhaseAccum,
     ) -> Result<()> {
         let chunk = sub.len();
         let info = self.backend.info();
@@ -846,6 +931,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             Some(v) => v,
             None => anyhow::bail!("no compiled bucket variant for a {chunk}-lane chunk"),
         };
+        let mut t0 = phase.mark();
         let mut xb = self.arena.checkout(&[chunk, h, w, c]);
         let mut cb = self.arena.checkout(&[chunk, info.cond_dim]);
         for (k, &l) in sub.iter().enumerate() {
@@ -860,7 +946,9 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             gs,
             ..Default::default()
         };
+        phase.gather_us += PhaseAccum::lap(&mut t0);
         let run = self.backend.run_into(variant, &args, &mut out_b, None, None);
+        phase.model_us += PhaseAccum::lap(&mut t0);
         // gather buffers go back to the pool whatever happened
         self.arena.release_opt(args.x.take());
         self.arena.release_opt(args.cond.take());
@@ -882,6 +970,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             lane.caches.invalidate();
         }
         self.arena.release(out_b);
+        phase.scatter_us += PhaseAccum::lap(&mut t0);
         Ok(())
     }
 }

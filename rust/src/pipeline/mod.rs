@@ -133,6 +133,15 @@ pub trait Accelerator {
         false
     }
 
+    /// The stability-criterion inner product ⟨err, d2y⟩ evaluated at the
+    /// most recent observed step, for the flight recorder
+    /// ([`crate::obs`]). SADA (and the plan cache's speculative wrapper)
+    /// override this from their diagnostic trail; criterion-free
+    /// accelerators report `None` and the trace omits the field.
+    fn last_criterion_dot(&self) -> Option<f64> {
+        None
+    }
+
     /// A fresh instance with the same configuration but no trajectory
     /// state. The lane engine ([`lanes`]) clones one per request so every
     /// lane plans from its *own* history — SADA's criterion is
@@ -255,6 +264,10 @@ pub struct Pipeline<'a, B: ModelBackend> {
     /// engine worker owns its own `Pipeline`, matching the coordinator's
     /// one-runtime-per-worker design.
     pub(crate) arena: crate::tensor::arena::TensorArena,
+    /// Flight recorder attached by the owner (coordinator worker or the
+    /// trace harness) plus this pipeline's worker id for track naming.
+    /// `None` (the default) keeps every recording branch dead.
+    pub(crate) recorder: Option<(Arc<crate::obs::FlightRecorder>, usize)>,
 }
 
 impl<'a, B: ModelBackend> Pipeline<'a, B> {
@@ -271,7 +284,15 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             solver_kind,
             schedule,
             arena: crate::tensor::arena::TensorArena::new(),
+            recorder: None,
         }
+    }
+
+    /// Attach a flight recorder: subsequent [`lanes`] runs check out a
+    /// trace session per `run_continuous`/batch call and record per-lane
+    /// step decisions into it. `worker` labels this pipeline's tracks.
+    pub fn set_flight_recorder(&mut self, rec: Arc<crate::obs::FlightRecorder>, worker: usize) {
+        self.recorder = Some((rec, worker));
     }
 
     pub(crate) fn schedule(&self) -> &Schedule {

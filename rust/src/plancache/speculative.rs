@@ -417,6 +417,12 @@ impl Accelerator for SpeculativeAccel {
         self.inner.reconstruct_x0_into(t_norm, out)
     }
 
+    fn last_criterion_dot(&self) -> Option<f64> {
+        // the inner SADA observes the actual trajectory in every mode
+        // (recording and replaying), so its diagnostic trail is live
+        self.inner.diags.last().and_then(|d| d.criterion_dot)
+    }
+
     fn clone_fresh(&self) -> Box<dyn Accelerator> {
         Box::new(SpeculativeAccel::new(
             self.inner.fresh(),

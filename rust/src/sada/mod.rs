@@ -320,6 +320,10 @@ impl Accelerator for Sada {
         self.x0_buf.reconstruct_into(t_norm, out)
     }
 
+    fn last_criterion_dot(&self) -> Option<f64> {
+        self.diags.last().and_then(|d| d.criterion_dot)
+    }
+
     fn clone_fresh(&self) -> Box<dyn Accelerator> {
         Box::new(self.fresh())
     }
@@ -369,6 +373,10 @@ impl Accelerator for SadaFdm {
 
     fn reconstruct_x0(&self, t_norm: f64) -> Option<Tensor> {
         self.inner.reconstruct_x0(t_norm)
+    }
+
+    fn last_criterion_dot(&self) -> Option<f64> {
+        self.inner.last_criterion_dot()
     }
 
     fn clone_fresh(&self) -> Box<dyn Accelerator> {

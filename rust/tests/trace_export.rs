@@ -1,0 +1,185 @@
+//! Trace-backed regression tests: the flight recorder's view of a
+//! continuous run must reconstruct ground truth exactly, and the Chrome
+//! trace export must be valid, strictly ordered Perfetto input.
+//!
+//! Everything runs on the `GmBackend` mock (no artifacts): the recorder
+//! observes whatever the engine actually did, so the checks compare its
+//! reconstruction against the engine's own `ContinuousStats` and each
+//! lane's `RunStats`.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use sada::obs::chrome::chrome_trace;
+use sada::obs::summary::{check_timeline, lane_timelines};
+use sada::obs::{FlightRecorder, Sampling};
+use sada::pipeline::{
+    Accelerator, AdmittedLane, ContinuousStats, GenRequest, GenResult, LaneFeeder, NoAccel,
+    Pipeline, RunStats, StepMode,
+};
+use sada::runtime::mock::GmBackend;
+use sada::sada::Sada;
+use sada::solvers::SolverKind;
+use sada::tensor::Tensor;
+use sada::util::json::Json;
+
+struct MixedFeeder {
+    pending: VecDeque<(GenRequest, Box<dyn Accelerator>)>,
+    next_tag: u64,
+    done: Vec<(u64, RunStats)>,
+}
+
+impl LaneFeeder for MixedFeeder {
+    fn admit(&mut self, free: usize) -> Vec<AdmittedLane> {
+        let take = free.min(self.pending.len());
+        let mut out = Vec::with_capacity(take);
+        for _ in 0..take {
+            let Some((req, accel)) = self.pending.pop_front() else { break };
+            out.push(AdmittedLane { req, accel, tag: self.next_tag });
+            self.next_tag += 1;
+        }
+        out
+    }
+
+    fn complete(&mut self, tag: u64, res: GenResult) {
+        self.done.push((tag, res.stats));
+    }
+}
+
+/// Stream `n` mixed lanes (heterogeneous steps, SADA on even tags) through
+/// a 3-slot continuous engine with the recorder attached.
+fn run_recorded(
+    sampling: Sampling,
+    n: usize,
+) -> (Arc<FlightRecorder>, ContinuousStats, Vec<(u64, RunStats)>) {
+    let backend = GmBackend::with_batch_buckets(21, &[2, 4]);
+    let mut pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let rec = FlightRecorder::with_capacity(sampling, 256, 1024);
+    pipe.set_flight_recorder(rec.clone(), 0);
+    let mut rng = sada::rng::Rng::new(4242);
+    let mut pending: VecDeque<(GenRequest, Box<dyn Accelerator>)> = VecDeque::new();
+    for i in 0..n {
+        let steps = [6, 8, 10][i % 3];
+        let req = GenRequest {
+            cond: Tensor::from_rng(&mut rng, &[1, 32]),
+            seed: rng.below(100_000),
+            guidance: 3.0,
+            steps,
+            edge: None,
+        };
+        let accel: Box<dyn Accelerator> = if i % 2 == 0 {
+            Box::new(Sada::with_default(backend.info(), steps))
+        } else {
+            Box::new(NoAccel)
+        };
+        pending.push_back((req, accel));
+    }
+    let mut feeder = MixedFeeder { pending, next_tag: 0, done: Vec::new() };
+    let stats = pipe.generate_continuous(3, &mut feeder).unwrap();
+    assert_eq!(stats.completed, n, "engine must drain the whole queue");
+    (rec, stats, feeder.done)
+}
+
+#[test]
+fn recorder_reconstructs_continuous_run_exactly() {
+    let (rec, stats, done) = run_recorded(Sampling::Full, 7);
+    let snap = rec.take_snapshot();
+    assert_eq!(snap.total_dropped(), 0, "rings must hold the whole run");
+    let tls = lane_timelines(&snap);
+    assert_eq!(tls.len(), 7, "one timeline per lane");
+    let mut lane_steps = 0usize;
+    for tl in &tls {
+        check_timeline(tl).unwrap();
+        lane_steps += tl.steps.len();
+        let (_, st) = done.iter().find(|(t, _)| *t == tl.tag).expect("RunStats for lane");
+        let counts = tl.mode_counts();
+        for (k, mode) in StepMode::ALL.iter().enumerate() {
+            assert_eq!(
+                counts[k],
+                st.count(*mode),
+                "lane {} mode {} count",
+                tl.tag,
+                mode.name()
+            );
+        }
+        assert_eq!(tl.steps.len(), st.modes.len(), "lane {} step total", tl.tag);
+        assert_eq!(tl.fresh_steps(), st.nfe, "lane {} nfe", tl.tag);
+    }
+    assert_eq!(lane_steps, stats.lane_steps, "recorded steps vs ContinuousStats");
+    assert_eq!(tls.iter().filter(|t| t.admit_us.is_some()).count(), stats.admitted);
+    assert_eq!(tls.iter().filter(|t| t.complete_us.is_some()).count(), stats.completed);
+    // SADA lanes (even tags) surface criterion dots; NoAccel lanes never do
+    assert!(
+        tls.iter()
+            .filter(|t| t.tag % 2 == 0)
+            .any(|t| t.steps.iter().any(|s| s.dot.is_some())),
+        "no criterion dot recorded on any SADA lane"
+    );
+    assert!(
+        tls.iter()
+            .filter(|t| t.tag % 2 == 1)
+            .all(|t| t.steps.iter().all(|s| s.dot.is_none())),
+        "passthrough lanes must not carry dots"
+    );
+}
+
+#[test]
+fn chrome_export_is_valid_ordered_perfetto_input() {
+    let (rec, _, _) = run_recorded(Sampling::Full, 5);
+    let doc = chrome_trace(&rec.take_snapshot());
+    let text = doc.to_string();
+    assert!(!text.contains("NaN"), "NaN is not valid JSON");
+    let parsed = Json::parse(&text).expect("export must round-trip through the parser");
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    // Perfetto-required fields on every event; strict per-track ordering
+    let mut last_ts: std::collections::BTreeMap<u64, f64> = Default::default();
+    let mut lane_tracks = 0usize;
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        assert!(e.get("name").is_ok() && e.get("pid").is_ok() && e.get("tid").is_ok());
+        if ph == "M" {
+            if let Ok(args) = e.get("args") {
+                if let Some(name) = args.opt("name").and_then(|n| n.as_str().ok()) {
+                    if name.contains("lane") {
+                        lane_tracks += 1;
+                    }
+                }
+            }
+            continue;
+        }
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        if ph == "X" {
+            assert!(e.get("dur").unwrap().as_f64().unwrap() > 0.0);
+        }
+        let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+        if let Some(prev) = last_ts.get(&tid) {
+            assert!(ts > *prev, "track {tid}: ts {ts} not after {prev}");
+        }
+        last_ts.insert(tid, ts);
+    }
+    assert_eq!(lane_tracks, 5, "one named track per recorded lane");
+}
+
+#[test]
+fn sampled_mode_records_only_matching_tags() {
+    let (rec, stats, _) = run_recorded(Sampling::Sampled(2), 6);
+    assert_eq!(stats.completed, 6, "sampling never changes execution");
+    let tls = lane_timelines(&rec.take_snapshot());
+    let tags: Vec<u64> = tls.iter().map(|t| t.tag).collect();
+    assert_eq!(tags, vec![0, 2, 4], "1-in-2 sampling keeps even tags only");
+    for tl in &tls {
+        check_timeline(tl).unwrap();
+    }
+}
+
+#[test]
+fn off_sampling_records_nothing_and_costs_no_session() {
+    let (rec, stats, done) = run_recorded(Sampling::Off, 4);
+    assert_eq!(stats.completed, 4);
+    assert_eq!(done.len(), 4);
+    let snap = rec.take_snapshot();
+    assert!(snap.sessions.is_empty(), "Off must open no sessions");
+    assert!(snap.coord.is_empty());
+    assert!(lane_timelines(&snap).is_empty());
+}

@@ -223,6 +223,92 @@ fn midflight_admission_is_o1_and_steady_steps_allocate_nothing() {
 }
 
 #[test]
+fn full_recorder_steady_steps_allocate_nothing() {
+    // The flight recorder in `full` mode rides the same continuous run as
+    // midflight_admission_is_o1...: every lane step now also records a
+    // Step event (plus per-engine-step phase flushes), and the totals at
+    // 12 vs 32 steps must still be identical — ring pushes are wrapping
+    // stores into preallocated buffers. Each measured run gets a fresh
+    // recorder, so the per-run session begin/end cost (ring preallocation,
+    // archive push) is identical by construction and cancels out.
+    use sada::obs::{summary, FlightRecorder, Sampling};
+    use sada::pipeline::{AdmittedLane, ContinuousStats, GenResult, LaneFeeder};
+    use std::collections::VecDeque;
+    use std::sync::Arc;
+
+    struct StreamFeeder {
+        pending: VecDeque<GenRequest>,
+        results: Vec<Option<GenResult>>,
+        next_tag: u64,
+    }
+    impl LaneFeeder for StreamFeeder {
+        fn admit(&mut self, free: usize) -> Vec<AdmittedLane> {
+            if free == 0 {
+                return Vec::new();
+            }
+            let Some(req) = self.pending.pop_front() else { return Vec::new() };
+            let tag = self.next_tag;
+            self.next_tag += 1;
+            vec![AdmittedLane { req, accel: Box::new(NoAccel), tag }]
+        }
+        fn complete(&mut self, tag: u64, result: GenResult) {
+            if let Some(slot) = self.results.get_mut(tag as usize) {
+                *slot = Some(result);
+            }
+        }
+    }
+
+    let backend = GmBackend::with_batch_buckets(13, &[2, 4]);
+    let mut pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let feeder_for = |steps: usize| StreamFeeder {
+        pending: reqs_for(4, steps, 901).into(),
+        results: (0..4).map(|_| None).collect(),
+        next_tag: 0,
+    };
+
+    // warm every pool with the recorder attached
+    {
+        let rec = FlightRecorder::with_capacity(Sampling::Full, 256, 512);
+        pipe.set_flight_recorder(rec, 0);
+        let mut f = feeder_for(12);
+        let stats = pipe.generate_continuous(2, &mut f).unwrap();
+        assert_eq!(stats.completed, 4);
+    }
+
+    let mut run = |steps: usize| -> (u64, Arc<FlightRecorder>, ContinuousStats) {
+        let rec = FlightRecorder::with_capacity(Sampling::Full, 256, 512);
+        pipe.set_flight_recorder(rec.clone(), 0);
+        let mut f = feeder_for(steps);
+        let before = thread_allocs();
+        let stats = pipe.generate_continuous(2, &mut f).unwrap();
+        let after = thread_allocs();
+        assert_eq!(stats.admitted, 4);
+        assert_eq!(stats.completed, 4);
+        (after - before, rec, stats)
+    };
+    let (short, _, _) = run(12);
+    let (long, rec, stats) = run(32);
+    assert_eq!(
+        long,
+        short,
+        "full-mode recording must stay zero-alloc per step: 20 extra steps across \
+         4 streamed lanes cost {} allocation(s)",
+        long.saturating_sub(short)
+    );
+    // and the recording is complete, not silently sampled away: the long
+    // run's timelines reconstruct the engine's own accounting exactly
+    let snap = rec.take_snapshot();
+    let tls = summary::lane_timelines(&snap);
+    assert_eq!(tls.len(), 4);
+    let mut lane_steps = 0usize;
+    for tl in &tls {
+        summary::check_timeline(tl).unwrap();
+        lane_steps += tl.steps.len();
+    }
+    assert_eq!(lane_steps, stats.lane_steps);
+}
+
+#[test]
 fn sada_lane_steps_allocate_o1_not_per_step() {
     // SADA's steady state — criterion scratch, AM-3 skips, pooled history,
     // multistep Lagrange reconstruction — through the same marginal-cost
