@@ -178,6 +178,7 @@ fn main() {
                     guidance: 3.0,
                     accel: "sada".into(),
                     slo_ms: None,
+                    variant_hint: None,
                     submitted_at: std::time::Instant::now(),
                     reply: tx,
                 },

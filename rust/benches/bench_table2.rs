@@ -76,5 +76,12 @@ fn main() -> anyhow::Result<()> {
     // strict engine-step win; stamps the `continuous` BENCH section)
     println!();
     sada::exp::serving::run_continuous_sweep("artifacts", "sd2_tiny", 48, 4, 2)?;
+
+    // degraded-variant buckets: batched prune{k}_b{n}/shallow_b{n} launches
+    // vs batch-1 singles on a prune-heavy replay trace (mock-backed so the
+    // launch counter is exact; self-checks bit-identity and the >= 2x
+    // launch cut; stamps the `degraded_buckets` BENCH section)
+    println!();
+    sada::exp::serving::run_degraded_buckets_sweep(8, 24)?;
     Ok(())
 }

@@ -21,6 +21,10 @@ pub const HOT_ROOTS: &[&str] = &[
     "Pipeline::execute_planned_lanes",
     "Pipeline::run_lane_single",
     "Pipeline::run_lane_bucket",
+    // degraded-variant gather/scatter hot paths: batched prune/shallow
+    // execution plus the per-lane fallback, per-step like the full bucket
+    "Pipeline::run_lane_degraded_single",
+    "Pipeline::run_degraded_bucket",
     "Pipeline::run_prune_into",
     "GmBackend::run_into",
     // flight-recorder per-step record paths: called once per lane step in
@@ -40,6 +44,7 @@ pub const COLD_BOUNDARIES: &[&str] = &[
     "build_solver", "new", "with_default", "default", "reset", "begin_run",
     "clone_fresh", "name", "with_capacity", "from_rng", "start", "finish",
     "seeded", "for_steps", "with_schedule", "with_batch_buckets",
+    "with_variant_buckets", "build",
     // end-of-run accounting
     "outcome", "planned_degradations", "elapsed_ms", "request_key",
     // feeder handoffs: admission/completion are bounded per-event costs on

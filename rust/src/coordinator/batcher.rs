@@ -154,10 +154,13 @@ impl Batch {
 
 /// Replay-affinity signature of a request: the plan-cache key components
 /// known at batching time (model, steps, accel, guidance bucket, cond
-/// sketch). The solver/schedule fingerprint is per-model configuration —
-/// constant within a compatibility class — so it is elided here; the
-/// accelerator string is folded in because only same-accel requests can
-/// share a plan store entry (and they must share a batch anyway).
+/// sketch), plus the degraded-variant hint when the submitter set one.
+/// The solver/schedule fingerprint is per-model configuration — constant
+/// within a compatibility class — so it is elided here; the accelerator
+/// string is folded in because only same-accel requests can share a plan
+/// store entry (and they must share a batch anyway); the variant hint is
+/// folded in because only same-variant lanes can gather into one compiled
+/// `prune{k}_b{n}` / `shallow_b{n}` bucket launch.
 fn plan_affinity(req: &ServeRequest) -> u64 {
     plan_affinity_at(req, req.guidance)
 }
@@ -167,9 +170,20 @@ fn plan_affinity(req: &ServeRequest) -> u64 {
 fn plan_affinity_at(req: &ServeRequest, gs: f32) -> u64 {
     let key = RequestKey::new(&req.model, 0, req.steps, gs, req.cond.data());
     // fold the accel in with the same FNV discipline as the key digest
-    req.accel
+    let h = req
+        .accel
         .bytes()
-        .fold(key.hash64(), |h, b| (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3))
+        .fold(key.hash64(), |h, b| (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3));
+    // fold the variant signature in behind a separator byte, so a hintless
+    // request never aliases one whose hint happens to extend its accel
+    match &req.variant_hint {
+        Some(v) => v
+            .bytes()
+            .fold((h ^ 0xff).wrapping_mul(0x0000_0100_0000_01b3), |h, b| {
+                (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3)
+            }),
+        None => h,
+    }
 }
 
 pub struct DynamicBatcher {
@@ -369,6 +383,7 @@ mod tests {
             guidance: 2.0,
             accel: "sada".into(),
             slo_ms: None,
+            variant_hint: None,
             submitted_at: Instant::now(),
             reply: tx,
         }
@@ -522,6 +537,38 @@ mod tests {
         let mut other_accel = with_cond(2, &cond_a);
         other_accel.accel = "baseline".into();
         assert_ne!(sig(&with_cond(0, &cond_a)), sig(&other_accel));
+    }
+
+    #[test]
+    fn variant_hint_extends_replay_affinity() {
+        // same plan-cache key components, different degraded-variant
+        // hints: the affinity signature splits so same-variant replays
+        // pair up and gather into the same compiled prune buckets
+        let hint = |id: u64, v: Option<&str>| {
+            let mut r = req(id, "m", 50);
+            r.variant_hint = v.map(|s| s.to_string());
+            r
+        };
+        let sig = |r: &ServeRequest| super::plan_affinity(r);
+        assert_eq!(sig(&hint(0, Some("prune50"))), sig(&hint(1, Some("prune50"))));
+        assert_ne!(sig(&hint(0, Some("prune50"))), sig(&hint(1, Some("prune75"))));
+        assert_ne!(sig(&hint(0, Some("prune50"))), sig(&hint(1, None)));
+        assert_ne!(sig(&hint(0, Some("shallow"))), sig(&hint(1, Some("prune50"))));
+
+        // head (prune50), an earlier prune75, a later prune50: the
+        // bucket-2 batch pairs the head with its variant twin — head
+        // first, FIFO within the signature — and the passed-over request
+        // is next in line, not lost
+        let mut b = DynamicBatcher::new(vec![2], 50.0);
+        b.push(0.0, hint(0, Some("prune50")));
+        b.push(0.0, hint(1, Some("prune75")));
+        b.push(0.0, hint(2, Some("prune50")));
+        let batch = b.poll(0.0).expect("bucket fillable");
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![0, 2], "same-variant-signature requests group first");
+        let batch = b.poll(60.0).expect("deadline flush");
+        assert_eq!(batch.requests[0].id.0, 1);
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

@@ -23,6 +23,15 @@ pub struct ServeRequest {
     /// dispatcher's ingest sleep; it is a scheduling target, not a kill
     /// switch — the request is still served after the SLO lapses.
     pub slo_ms: Option<f64>,
+    /// Expected degraded-variant signature of this request's cache-hot
+    /// steps ("prune50", "shallow", ...), when the submitter knows it —
+    /// e.g. replay traffic whose recorded plan is dominated by one prune
+    /// bucket. Folded into the batcher's plan-affinity signature so
+    /// same-variant replays land in the same worker batch, where the lane
+    /// engine gathers them into the same compiled `prune{k}_b{n}` /
+    /// `shallow_b{n}` buckets. `None` opts out (affinity falls back to
+    /// the plan-cache key components alone).
+    pub variant_hint: Option<String>,
     pub submitted_at: Instant,
     /// Completion channel (one response per request).
     pub reply: Sender<ServeResponse>,

@@ -74,6 +74,7 @@ mod tests {
             guidance: 1.0,
             accel: "sada".into(),
             slo_ms: None,
+            variant_hint: None,
             submitted_at: Instant::now(),
             reply: tx,
         }

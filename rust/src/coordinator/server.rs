@@ -950,6 +950,7 @@ mod tests {
             guidance: 2.0,
             accel: accel.into(),
             slo_ms: None,
+            variant_hint: None,
             submitted_at: Instant::now(),
             reply: tx,
         }

@@ -75,6 +75,7 @@ pub fn drive(
             guidance: 3.0,
             accel: accel.to_string(),
             slo_ms: None,
+            variant_hint: None,
             submitted_at: Instant::now(),
             reply: reply_tx.clone(),
         })?;
@@ -151,6 +152,7 @@ pub fn drive_mixed(
             guidance: 3.0,
             accel: "sada".to_string(),
             slo_ms: None,
+            variant_hint: None,
             submitted_at: Instant::now(),
             reply: reply_tx.clone(),
         })?;
@@ -729,6 +731,7 @@ pub fn run_continuous_sweep(
             guidance: 3.0,
             accel: "baseline".to_string(),
             slo_ms: Some(slo_for(i as u64)),
+            variant_hint: None,
             submitted_at: Instant::now(),
             reply: reply_tx.clone(),
         })?;
@@ -788,6 +791,183 @@ pub fn run_continuous_sweep(
                     ("slo_missed", Json::num(grab("sada_slo_missed_total "))),
                 ]),
             ),
+        ]),
+    );
+    bench.save_or_warn();
+    Ok(())
+}
+
+/// Degraded-variant bucket sweep: a prune-heavy replay trace (the
+/// cache-hot traffic shape — every lane alternating Full / `prune50` /
+/// `shallow` directives, >= 50% degraded steps) run through the lane
+/// engine twice over the mock backend: once with no compiled buckets
+/// (every step a batch-1 launch, the pre-bucket regime) and once with the
+/// full `prune{k}_b{n}` / `shallow_b{n}` / `full_b{n}` inventory. The
+/// mock backend is used deliberately: its launch counter is exact, its
+/// variant inventory is controlled by construction, and its rows are
+/// row-exact, so the sweep self-checks its acceptance bars — bit-identical
+/// images between the arms and a >= 2x launch-count reduction — without
+/// depending on what the artifact build happened to compile. Stamps the
+/// `degraded_buckets` BENCH section with launches, steps/s, and the
+/// batched-vs-single execution split per arm.
+pub fn run_degraded_buckets_sweep(lanes: usize, steps: usize) -> Result<()> {
+    use crate::pipeline::stats::ExecMix;
+    use crate::pipeline::{KeepMask, StepCtx, StepMode, StepObs, StepPlan};
+    use crate::runtime::mock::GmBackend;
+    use std::sync::Arc;
+
+    anyhow::ensure!(lanes >= 8, "degraded-bucket sweep needs >= 8 lanes (got {lanes})");
+    anyhow::ensure!(steps >= 8, "degraded-bucket sweep needs >= 8 steps (got {steps})");
+
+    /// Prune-heavy replay schedule: Full to seed the aux caches, then a
+    /// repeating Prune / Shallow / Prune / Full cycle (75% degraded once
+    /// warm). The shared keep mask makes every lane signature-compatible.
+    struct ScriptedDegraded {
+        mask: Arc<KeepMask>,
+    }
+    impl Accelerator for ScriptedDegraded {
+        fn name(&self) -> String {
+            "scripted-degraded".into()
+        }
+        fn plan(&mut self, ctx: &StepCtx) -> StepPlan {
+            match ctx.i % 4 {
+                // xtask: allow(alloc): Arc refcount bump, no heap allocation
+                1 | 3 if ctx.have_caches => StepPlan::Prune { mask: self.mask.clone() },
+                2 if ctx.have_deep => StepPlan::Shallow,
+                _ => StepPlan::Full,
+            }
+        }
+        fn observe(&mut self, _o: &StepObs) {}
+        fn wants_obs(&self) -> bool {
+            false
+        }
+        fn reset(&mut self) {}
+        fn clone_fresh(&self) -> Box<dyn Accelerator> {
+            Box::new(ScriptedDegraded { mask: self.mask.clone() })
+        }
+    }
+
+    let mut rng = crate::rng::Rng::new(4242);
+    let reqs: Vec<GenRequest> = (0..lanes)
+        .map(|_| GenRequest {
+            cond: Tensor::from_rng(&mut rng, &[1, 32]),
+            seed: rng.below(100_000),
+            guidance: 3.0,
+            steps,
+            edge: None,
+        })
+        .collect();
+    let mask = Arc::new(KeepMask { variant: "prune50".into(), keep_idx: (0..8).collect() });
+
+    let mut table = Table::new(
+        &format!("Degraded-variant buckets — {lanes} lanes, {steps} steps, prune-heavy replay"),
+        &["Arm", "Launches", "Fresh steps", "Batched", "Singles", "Steps/s", "Wall ms"],
+    );
+    let mut arms_json: Vec<Json> = Vec::new();
+    let mut images: Vec<Vec<Vec<f32>>> = Vec::new();
+    let mut traces: Vec<Vec<String>> = Vec::new();
+    let mut launch_counts = [0usize; 2];
+    for (a, (arm, buckets)) in
+        [("singles", &[][..]), ("degraded-buckets", &[2usize, 4, 8][..])].iter().enumerate()
+    {
+        let backend = if buckets.is_empty() {
+            GmBackend::new(21)
+        } else {
+            GmBackend::with_variant_buckets(21, buckets)
+        };
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let proto = ScriptedDegraded { mask: mask.clone() };
+        let proto: &dyn Accelerator = &proto;
+        backend.reset_nfe();
+        let res = pipe.generate_lanes(&reqs, proto)?;
+        let launches = backend.nfe();
+        launch_counts[a] = launches;
+        let fresh: usize = res.iter().map(|r| r.stats.nfe).sum();
+        let degraded: usize = res
+            .iter()
+            .map(|r| r.stats.count(StepMode::Prune) + r.stats.count(StepMode::Shallow))
+            .sum();
+        anyhow::ensure!(
+            2 * degraded >= fresh,
+            "{arm}: replay trace not prune-heavy ({degraded} of {fresh} steps degraded)"
+        );
+        anyhow::ensure!(
+            res.iter().all(|r| r.stats.degraded.prune == 0 && r.stats.degraded.shallow == 0),
+            "{arm}: directives must replay natively on this trace"
+        );
+        let mut mix = ExecMix::default();
+        for r in &res {
+            mix.add(&r.stats.mix);
+        }
+        anyhow::ensure!(mix.total() == fresh, "{arm}: every fresh step classified exactly once");
+        let wall_ms = res[0].stats.wall_ms;
+        let steps_per_s = fresh as f64 / (wall_ms / 1e3).max(1e-9);
+        images.push(res.iter().map(|r| r.image.data().to_vec()).collect());
+        traces.push(res.iter().map(|r| r.stats.mode_trace()).collect());
+        table.row(vec![
+            (*arm).into(),
+            format!("{launches}"),
+            format!("{fresh}"),
+            format!("{}", mix.batched),
+            format!("{}", mix.singles()),
+            f2(steps_per_s),
+            f2(wall_ms),
+        ]);
+        arms_json.push(Json::obj(vec![
+            ("arm", Json::str(arm)),
+            ("launches", Json::num(launches as f64)),
+            ("fresh_steps", Json::num(fresh as f64)),
+            ("degraded_steps", Json::num(degraded as f64)),
+            ("steps_per_s", Json::num(steps_per_s)),
+            ("wall_ms", Json::num(wall_ms)),
+            (
+                "mix",
+                Json::obj(vec![
+                    ("batched", Json::num(mix.batched as f64)),
+                    ("single_edge", Json::num(mix.single_edge as f64)),
+                    ("single_capture", Json::num(mix.single_capture as f64)),
+                    ("single_residue", Json::num(mix.single_residue as f64)),
+                ]),
+            ),
+        ]));
+    }
+    table.print();
+
+    // acceptance bars: the bucketed arm must be a pure launch-count
+    // optimization — bit-identical lanes, >= 2x fewer launches
+    for k in 0..lanes {
+        anyhow::ensure!(
+            images[0][k] == images[1][k] && traces[0][k] == traces[1][k],
+            "lane {k}: bucketed execution not bit-identical to singles \
+             (trace {} vs {})",
+            traces[0][k],
+            traces[1][k]
+        );
+    }
+    let reduction = launch_counts[0] as f64 / (launch_counts[1] as f64).max(1e-9);
+    anyhow::ensure!(
+        reduction >= 2.0,
+        "degraded buckets must cut launches >= 2x (got {} -> {}, {:.2}x)",
+        launch_counts[0],
+        launch_counts[1],
+        reduction
+    );
+    println!(
+        "Degraded buckets: {} -> {} launches ({}), bit-identical lanes",
+        launch_counts[0],
+        launch_counts[1],
+        speedup(reduction)
+    );
+
+    let mut bench = BenchJson::open_default();
+    bench.set_section(
+        "degraded_buckets",
+        Json::obj(vec![
+            ("lanes", Json::num(lanes as f64)),
+            ("steps", Json::num(steps as f64)),
+            ("launch_reduction", Json::num(reduction)),
+            ("bit_identical", Json::Bool(true)),
+            ("arms", Json::Arr(arms_json)),
         ]),
     );
     bench.save_or_warn();

@@ -191,6 +191,7 @@ pub fn run_trace(
             guidance: 3.0,
             accel: if i % 2 == 0 { "sada" } else { "baseline" }.to_string(),
             slo_ms: None,
+            variant_hint: None,
             submitted_at: Instant::now(),
             reply: reply_tx.clone(),
         })?;

@@ -30,6 +30,10 @@ commands:
              saturated heterogeneous-steps queue (occupancy + engine steps +
              steps/s), plus SLO attainment through a continuous-mode
              coordinator; writes BENCH_serving.json
+  degraded   degraded-variant bucket sweep (--lanes 8 --steps 50): batched
+             prune{k}_b{n} / shallow_b{n} execution vs batch-1 launches on a
+             prune-heavy replay trace (mock backend; self-checks bit-identity
+             and the >= 2x launch-count cut); writes BENCH_serving.json
   trace      flight-recorder demo + self-check (--model sd2_tiny --n 12
              --capacity 3 --base 4): runs a small mixed trace through the
              continuous engine and a continuous-mode coordinator under full
@@ -104,6 +108,7 @@ fn main() -> Result<()> {
             o.usize_or("capacity", 3),
             o.usize_or("base", 4),
         )?,
+        "degraded" => exp::serving::run_degraded_buckets_sweep(o.usize_or("lanes", 8), steps)?,
         "continuous" => exp::serving::run_continuous_sweep(
             &artifacts,
             o.str_or("model", "sd2_tiny"),

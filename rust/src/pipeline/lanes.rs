@@ -11,29 +11,33 @@
 //! multistep history, and its own [`RunStats`]. Every step:
 //!
 //! 1. each lane plans independently;
-//! 2. lanes planning [`StepPlan::Full`] are gathered row-wise
-//!    ([`crate::tensor::view::copy_into_row`]) into arena-pooled bucket
-//!    buffers and executed through the largest fitting compiled
-//!    `full_b{n}` bucket
+//! 2. lanes planning a model-executing mode (Full, Shallow, Prune) are
+//!    gathered row-wise ([`crate::tensor::view::copy_into_row`]) into
+//!    arena-pooled bucket buffers and executed through the largest
+//!    fitting compiled `{base}_b{n}` bucket
 //!    ([`crate::runtime::manifest::split_into_buckets`]), grouped by
-//!    guidance scalar *and* timestep (a compiled variant takes one `gs`
-//!    and one `t` input); oversized gathers split across several bucket
-//!    launches plus `full` singles, so **no compiled bucket of the exact
-//!    batch size is ever required**;
+//!    *variant signature*: kind, guidance scalar, timestep and — for
+//!    Prune — the keep mask (a compiled variant takes one `gs`, one `t`
+//!    and one mask input); oversized gathers split across several bucket
+//!    launches plus batch-1 singles, so **no compiled bucket of the
+//!    exact batch size is ever required**;
 //! 3. model outputs are scattered back and every lane advances through its
 //!    own solver; skipping lanes extrapolate lane-locally (AM-3 /
 //!    Lagrange, Thm 3.5–3.7) at zero model cost — a skipping lane drops
 //!    out of the model call entirely, shrinking the executed batch.
 //!
-//! Degraded variants (Shallow/Prune) are compiled at batch 1 only, so
-//! lanes planning them execute as per-lane singles with lane-local
-//! deep/cache features — batching keeps their per-step discount instead of
-//! forcing Full. Aux features are captured only from *single* full
-//! executions (bucketed `full_b{n}` launches invalidate them: the batched
-//! artifacts' aux layouts are not per-lane sliceable), so on a backend
-//! with no compiled buckets the lane engine is feature-equivalent — and
-//! bit-identical — to per-request sequential generation, while bucketed
-//! lanes trade the degraded-variant discount for gather throughput.
+//! **Degraded-variant buckets.** Shallow and Prune lanes batch exactly
+//! like Full lanes: each variant-signature group chunks across its base
+//! variant's compiled `shallow_b{n}` / `prune{k}_b{n}` buckets. Batched
+//! aux layouts are batch-major and per-lane sliceable — a bucketed
+//! launch gathers each lane's deep/cache features row-wise from its
+//! retained [`crate::tensor::arena::AuxSlot`]s and scatters any
+//! refreshed aux rows (and, for Full, the captured features) straight
+//! back into them — so row k of every bucketed launch is bit-identical
+//! to the lane's single launch and no per-step discount or capture is
+//! traded away for batching. On a backend with no compiled buckets every
+//! group degenerates to singles and the engine is feature-equivalent —
+//! and bit-identical — to per-request sequential generation.
 //!
 //! **Continuous batching.** The engine core ([`Pipeline::generate_continuous`])
 //! runs a fixed number of *slots* rather than a fixed batch: lanes join and
@@ -60,14 +64,15 @@
 //!
 //! **CacheWarm lanes.** A lane replaying a verified cached plan with
 //! token-pruned (or shallow) directives signals the fresh step feeding
-//! those directives via [`Accelerator::wants_aux_capture`]; the engine
-//! runs that execution as a *single* so the attention caches land in the
-//! lane's retained [`crate::tensor::arena::AuxSlot`]s, after which Prune
-//! directives replay natively — no `caches`-missing degradation — with
-//! each pruned step refreshing its own caches through an arena-pooled
-//! buffer. Every other full step of the replay still gathers into
-//! buckets, so warm replays keep both the NFE cut *and* the co-scheduled
-//! bucket throughput.
+//! those directives via [`Accelerator::wants_aux_capture`]. Capture
+//! steps gather like any other full step: a bucketed full launch
+//! scatters each row's captured aux features into that lane's own
+//! retained [`crate::tensor::arena::AuxSlot`]s (multi-row capture),
+//! after which Prune directives replay natively — no `caches`-missing
+//! degradation — with each pruned step refreshing its caches row through
+//! the batched `prune{k}_b{n}` scatter (or an arena-pooled single).
+//! Warm replays keep the NFE cut, the co-scheduled bucket throughput
+//! *and* batched capture.
 //!
 //! With [`super::NoAccel`] the engine is bit-identical to sequential
 //! [`Pipeline::generate`] per request (property-tested below): single-lane
@@ -216,17 +221,58 @@ struct Lane {
     /// Persistent model args: `x` slot copied in place per call, cond
     /// buffer reused across occupants when shapes match.
     args: ModelArgs,
-    /// DeepCache deep feature from this lane's last *single* full run.
-    /// Bucketed launches *invalidate* it (batched aux layouts are not
-    /// per-lane sliceable) but retain the buffer — sourced from the
-    /// pipeline arena — for in-place refill by the next single.
+    /// DeepCache deep feature from this lane's last full run — filled in
+    /// place by a single, or scattered per row from a bucketed launch's
+    /// batch-major aux output into this retained, arena-sourced buffer.
     deep: AuxSlot,
-    /// Attention caches from this lane's last single full/prune run
-    /// (same retained-slot discipline).
+    /// Attention caches from this lane's last full/prune run (same
+    /// retained-slot discipline, same single-or-scattered refresh).
     caches: AuxSlot,
     stats: RunStats,
     /// Started at admission: per-lane wall time, not engine wall time.
     timer: crate::report::Timer,
+}
+
+/// Compiled-bucket planning state for one batchable base variant, built
+/// once per engine run: the `{base}_b{n}` bucket sizes resolved through
+/// [`ModelInfo::variant_buckets`], the fewest-launches split for every
+/// possible gather size, and the bucket variant names.
+struct VariantTable {
+    /// Batch-1 base variant this table batches ("full", "shallow", or a
+    /// prune bucket variant like "prune50").
+    base: String,
+    /// `splits[n]` = fewest-launches chunk plan for an n-lane gather
+    /// (all-singles when the base has no compiled buckets).
+    splits: Vec<Vec<usize>>,
+    /// Compiled `{base}_b{n}` variant names per bucket size, built once.
+    variants: Vec<(usize, String)>,
+}
+
+impl VariantTable {
+    fn build(info: &ModelInfo, base: &str, capacity: usize) -> Self {
+        let buckets = info.variant_buckets(base);
+        Self {
+            base: base.to_string(),
+            splits: (0..=capacity).map(|n| split_into_buckets(n, &buckets)).collect(),
+            variants: buckets
+                .iter()
+                .map(|&n| (n, ModelInfo::variant_for(base, n)))
+                .collect(),
+        }
+    }
+}
+
+/// Collision guard for the fingerprint-keyed Prune groups: two plans may
+/// share a bucket launch only when their keep masks are actually *equal*,
+/// not merely hash-equal. Non-Prune plans trivially agree (their group
+/// key carries no mask).
+fn same_mask(a: &StepPlan, b: &StepPlan) -> bool {
+    match (a, b) {
+        (StepPlan::Prune { mask: ma }, StepPlan::Prune { mask: mb }) => {
+            std::sync::Arc::ptr_eq(ma, mb) || **ma == **mb
+        }
+        _ => true,
+    }
 }
 
 /// Step-loop bookkeeping allocated once per engine run and reused every
@@ -235,21 +281,23 @@ struct LaneScratch {
     /// Per-step plans, slot-indexed (inactive slots hold an inert
     /// placeholder that every consumer skips).
     plans: Vec<StepPlan>,
-    /// Full-execution groups keyed by `(guidance bits, t_norm bits)` — a
-    /// compiled variant takes one `gs` and one `t` input, so only lanes
-    /// sharing both may gather. Parallel key/member vectors in
-    /// first-appearance order; member vectors are recycled across steps.
-    group_keys: Vec<(u32, u64)>,
+    /// Execution groups keyed by variant signature: `(kind, guidance
+    /// bits, t_norm bits, keep-mask fingerprint)` — a compiled variant
+    /// takes one `gs`, one `t` (and, for prune buckets, one mask) input,
+    /// so only lanes agreeing on all of them may gather. Parallel
+    /// key/member vectors in first-appearance order; member vectors are
+    /// recycled across steps.
+    group_keys: Vec<(u8, u32, u64, u64)>,
     group_members: Vec<Vec<usize>>,
-    /// Per-group partition of members into edge-conditioned singles and
-    /// batchable lanes.
+    /// Per-group partition of members into forced singles
+    /// (edge-conditioned lanes, mask-collision stragglers) and batchable
+    /// lanes.
     singles: Vec<usize>,
     batchable: Vec<usize>,
-    /// `splits[n]` = fewest-launches chunk plan for an n-lane gather
-    /// (precomputed for every possible gather size).
-    splits: Vec<Vec<usize>>,
-    /// Compiled `full_b{n}` variant names, built once.
-    bucket_variants: Vec<(usize, String)>,
+    /// One bucket table per batchable base variant — "full", "shallow"
+    /// and each compiled prune bucket. The variant-signature groups in
+    /// [`Pipeline::execute_planned_lanes`] resolve into these.
+    tables: Vec<VariantTable>,
     /// Per-engine-step phase timers for the flight recorder
     /// ([`crate::obs`]). Disabled (every mark a no-op) unless a trace
     /// session is live, so untraced runs never touch the clock.
@@ -352,7 +400,16 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         // split tables and step bookkeeping are allocated once here; the
         // per-step loop below reuses them in place
         let info = self.backend.info().clone();
-        let buckets = info.full_batch_buckets();
+        // one bucket table per batchable base variant: full, shallow and
+        // each compiled prune bucket (kind + keep-count bucket is the
+        // variant signature the execution groups key on)
+        let mut tables: Vec<VariantTable> =
+            Vec::with_capacity(2 + info.prune_variants().len());
+        tables.push(VariantTable::build(&info, "full", capacity));
+        tables.push(VariantTable::build(&info, "shallow", capacity));
+        for (base, _) in info.prune_variants() {
+            tables.push(VariantTable::build(&info, base, capacity));
+        }
         // trace session checkout: per-lane ring buffers are preallocated
         // here so the step loop records without allocating (None when no
         // recorder is attached or sampling is Off — every recording branch
@@ -368,11 +425,7 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             group_members: Vec::new(),
             singles: Vec::with_capacity(capacity),
             batchable: Vec::with_capacity(capacity),
-            splits: (0..=capacity).map(|n| split_into_buckets(n, &buckets)).collect(),
-            bucket_variants: buckets
-                .iter()
-                .map(|&n| (n, ModelInfo::full_variant_for(n)))
-                .collect(),
+            tables,
             phase: PhaseAccum::for_session(sess.is_some()),
         };
         let mut stats = ContinuousStats::default();
@@ -464,8 +517,9 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                 }
             }
 
-            // 2) execute: degraded variants as per-lane singles, Full lanes
-            //    gathered bucket-aware into arena buffers
+            // 2) execute: every model-executing lane gathered bucket-aware
+            //    into arena buffers by variant signature (full, shallow and
+            //    prune buckets alike)
             for lane in lanes.iter_mut() {
                 lane.executed = false;
             }
@@ -741,134 +795,200 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
 
     /// Execute every active lane whose plan needs the model this engine
     /// step, writing outputs into each lane's `m_out` buffer (`executed`
-    /// marks success). Shallow/Prune lanes run as singles with lane-local
-    /// aux features (those variants are compiled at batch 1 only). Full
-    /// lanes are grouped by `(guidance, t)` — one `gs` and one `t` input
-    /// per compiled variant, and continuous lanes need not be
-    /// step-aligned — edge-conditioned lanes run as singles (edge inputs
-    /// are only compiled for batch-1 variants), and each group is chunked
-    /// across the compiled `full_b{n}` buckets through arena-pooled
-    /// gather buffers.
+    /// marks success). Lanes are grouped by *variant signature* — kind
+    /// (Full/Shallow/Prune), guidance, timestep and keep mask: a compiled
+    /// variant takes one `gs`, one `t` (and one mask) input, and
+    /// continuous lanes need not be step-aligned. Each group chunks
+    /// across its base variant's compiled `{base}_b{n}` buckets through
+    /// arena-pooled gather buffers; edge-conditioned lanes run as singles
+    /// (edge inputs are only compiled for batch-1 variants). Every
+    /// execution is classified into the lane's
+    /// [`crate::pipeline::stats::ExecMix`], so the batched-vs-single
+    /// split (and *why* a step ran single) is visible per run.
     fn execute_planned_lanes(&self, lanes: &mut [Lane], sc: &mut LaneScratch) -> Result<()> {
-        // degraded variants: per-lane singles, mirroring Pipeline::generate
-        for (l, plan) in sc.plans.iter().enumerate() {
+        let LaneScratch { plans, group_keys, group_members, singles, batchable, tables, phase } =
+            sc;
+        // group by variant signature, preserving lane order (reused
+        // key/member vectors — no per-step allocation once every distinct
+        // key has appeared)
+        group_keys.clear();
+        for members in group_members.iter_mut() {
+            members.clear();
+        }
+        for (l, plan) in plans.iter().enumerate() {
             if !lanes[l].active {
                 continue;
             }
-            match plan {
-                StepPlan::Shallow => {
-                    let lane = &mut lanes[l];
-                    let t_norm = lane.solver.t_norm(lane.step);
-                    let mut t0 = sc.phase.mark();
-                    // xtask: allow(panic): persistent x slot — Some for the whole run
-                    lane.args.x.as_mut().expect("persistent x slot").copy_from(&lane.x);
-                    lane.args.t = t_norm as f32;
-                    // move (not clone) the deep feature into the args and
-                    // back: the shallow variant reads it but emits none
-                    lane.args.deep = lane.deep.take();
-                    let run =
-                        self.backend.run_into("shallow", &lane.args, &mut lane.m_out, None, None);
-                    if let Some(d) = lane.args.deep.take() {
-                        lane.deep.install(d);
-                    }
-                    run?;
-                    sc.phase.model_us += PhaseAccum::lap(&mut t0);
-                    lane.executed = true;
-                }
-                StepPlan::Prune { mask } => {
-                    // shared prune discipline (arena-cycled caches refresh):
-                    // the same single owner Pipeline::generate executes
-                    let lane = &mut lanes[l];
-                    let t_norm = lane.solver.t_norm(lane.step);
-                    let mut t0 = sc.phase.mark();
-                    self.run_prune_into(
-                        &mut lane.args,
-                        mask,
-                        &lane.x,
-                        t_norm,
-                        &mut lane.m_out,
-                        &mut lane.caches,
-                    )?;
-                    sc.phase.model_us += PhaseAccum::lap(&mut t0);
-                    lane.executed = true;
-                }
-                _ => {}
-            }
-        }
-        // Full lanes: group by (guidance bits, t_norm bits), preserving
-        // lane order (reused key/member vectors — no per-step allocation
-        // once every distinct key has appeared)
-        sc.group_keys.clear();
-        for members in sc.group_members.iter_mut() {
-            members.clear();
-        }
-        for (l, plan) in sc.plans.iter().enumerate() {
-            if *plan != StepPlan::Full || !lanes[l].active {
-                continue;
-            }
+            let (kind, mask_fp) = match plan {
+                StepPlan::Full => (0u8, 0u64),
+                StepPlan::Shallow => (1, 0),
+                StepPlan::Prune { mask } => (2, mask.fingerprint()),
+                _ => continue, // skip modes execute nothing
+            };
             let key = (
+                kind,
                 lanes[l].req.guidance.to_bits(),
                 lanes[l].solver.t_norm(lanes[l].step).to_bits(),
+                mask_fp,
             );
-            let gi = match sc.group_keys.iter().position(|k| *k == key) {
+            let gi = match group_keys.iter().position(|k| *k == key) {
                 Some(gi) => gi,
                 None => {
-                    sc.group_keys.push(key);
-                    if sc.group_members.len() < sc.group_keys.len() {
+                    group_keys.push(key);
+                    if group_members.len() < group_keys.len() {
                         // xtask: allow(alloc): grows only when a new distinct
-                        // (guidance, t) key first appears, then is reused
-                        sc.group_members.push(Vec::new());
+                        // variant-signature key first appears, then is reused
+                        group_members.push(Vec::new());
                     }
-                    sc.group_keys.len() - 1
+                    group_keys.len() - 1
                 }
             };
-            sc.group_members[gi].push(l);
+            group_members[gi].push(l);
         }
-        for gi in 0..sc.group_keys.len() {
+        for gi in 0..group_keys.len() {
+            let kind = group_keys[gi].0;
             // co-schedule lanes replaying the same verified cached plan
             // into the same bucket chunk: their fresh steps coincide for
             // the rest of the run, so keeping them adjacent maximizes
             // full-bucket gathers on later steps. Stable sort: unkeyed
             // lanes keep lane order (slices this short sort in place).
-            sc.group_members[gi].sort_by_key(|l| match lanes[*l].accel.plan_key() {
+            group_members[gi].sort_by_key(|l| match lanes[*l].accel.plan_key() {
                 Some(k) => (0u8, k),
                 None => (1u8, 0),
             });
-            sc.singles.clear();
-            sc.batchable.clear();
-            for &l in &sc.group_members[gi] {
-                // singles: edge-conditioned lanes (edge inputs are only
-                // compiled at batch 1) and CacheWarm capture lanes — a
-                // replay whose next fresh directive is token-pruned or
-                // shallow needs this execution's aux features, which
-                // bucketed launches cannot slice per lane
-                if lanes[l].req.edge.is_some() || lanes[l].accel.wants_aux_capture(lanes[l].step)
-                {
-                    sc.singles.push(l);
+            let lead = group_members[gi][0];
+            singles.clear();
+            batchable.clear();
+            for &l in group_members[gi].iter() {
+                // forced singles: edge-conditioned lanes (edge inputs are
+                // only compiled at batch 1), plus — fingerprints must never
+                // merge different masks — Prune lanes whose mask is not
+                // *equal* to the group lead's (collision guard; equal masks
+                // are the overwhelmingly common case)
+                if lanes[l].req.edge.is_some() || !same_mask(&plans[l], &plans[lead]) {
+                    singles.push(l);
                 } else {
-                    sc.batchable.push(l);
+                    batchable.push(l);
                 }
             }
-            for &l in &sc.singles {
-                self.run_lane_single(&mut lanes[l], &mut sc.phase)?;
+            for &l in singles.iter() {
+                if kind == 0 {
+                    self.run_lane_single(&mut lanes[l], phase)?;
+                } else {
+                    self.run_lane_degraded_single(&mut lanes[l], &plans[l], phase)?;
+                }
+                let lane = &mut lanes[l];
+                if lane.req.edge.is_some() {
+                    lane.stats.mix.single_edge += 1;
+                } else {
+                    lane.stats.mix.single_residue += 1;
+                }
             }
+            // resolve the group's bucket table: Full and Shallow tables
+            // exist for every backend; a Prune group uses its mask
+            // variant's table
+            let ti = match kind {
+                0 => tables.iter().position(|t| t.base == "full"),
+                1 => tables.iter().position(|t| t.base == "shallow"),
+                _ => match &plans[lead] {
+                    StepPlan::Prune { mask } => {
+                        tables.iter().position(|t| t.base == mask.variant)
+                    }
+                    _ => None,
+                },
+            };
+            let table = match ti {
+                Some(ti) => &tables[ti],
+                None => {
+                    // a mask variant with no bucket table: all singles
+                    for &l in batchable.iter() {
+                        self.run_lane_degraded_single(&mut lanes[l], &plans[l], phase)?;
+                        lanes[l].stats.mix.single_residue += 1;
+                    }
+                    continue;
+                }
+            };
             let mut at = 0usize;
-            for &chunk in &sc.splits[sc.batchable.len()] {
+            for &chunk in &table.splits[batchable.len()] {
                 if chunk == 1 {
-                    let l = sc.batchable[at];
+                    let l = batchable[at];
                     at += 1;
-                    self.run_lane_single(&mut lanes[l], &mut sc.phase)?;
+                    if kind == 0 {
+                        self.run_lane_single(&mut lanes[l], phase)?;
+                    } else {
+                        self.run_lane_degraded_single(&mut lanes[l], &plans[l], phase)?;
+                    }
+                    let lane = &mut lanes[l];
+                    if kind == 0 && lane.accel.wants_aux_capture(lane.step) {
+                        lane.stats.mix.single_capture += 1;
+                    } else {
+                        lane.stats.mix.single_residue += 1;
+                    }
                     continue;
                 }
                 let lo = at;
                 at += chunk;
-                self.run_lane_bucket(
-                    lanes,
-                    &sc.batchable[lo..at],
-                    &sc.bucket_variants,
-                    &mut sc.phase,
-                )?;
+                if kind == 0 {
+                    self.run_lane_bucket(lanes, &batchable[lo..at], &table.variants, phase)?;
+                } else {
+                    self.run_degraded_bucket(
+                        lanes,
+                        &batchable[lo..at],
+                        &plans[lead],
+                        &table.variants,
+                        phase,
+                    )?;
+                }
             }
+        }
+        Ok(())
+    }
+
+    /// Single-lane Shallow/Prune execution — the same per-lane discipline
+    /// [`Pipeline::generate`] uses (deep handoff by move, arena-cycled
+    /// caches refresh), so a degraded lane executed alone is bit-identical
+    /// to sequential generation.
+    fn run_lane_degraded_single(
+        &self,
+        lane: &mut Lane,
+        plan: &StepPlan,
+        phase: &mut PhaseAccum,
+    ) -> Result<()> {
+        let t_norm = lane.solver.t_norm(lane.step);
+        match plan {
+            StepPlan::Shallow => {
+                let mut t0 = phase.mark();
+                // xtask: allow(panic): persistent x slot — Some for the whole run
+                lane.args.x.as_mut().expect("persistent x slot").copy_from(&lane.x);
+                lane.args.t = t_norm as f32;
+                // move (not clone) the deep feature into the args and
+                // back: the shallow variant reads it but emits none
+                lane.args.deep = lane.deep.take();
+                let run =
+                    self.backend.run_into("shallow", &lane.args, &mut lane.m_out, None, None);
+                if let Some(d) = lane.args.deep.take() {
+                    lane.deep.install(d);
+                }
+                run?;
+                phase.model_us += PhaseAccum::lap(&mut t0);
+                lane.executed = true;
+            }
+            StepPlan::Prune { mask } => {
+                // shared prune discipline (arena-cycled caches refresh):
+                // the same single owner Pipeline::generate executes
+                let mut t0 = phase.mark();
+                self.run_prune_into(
+                    &mut lane.args,
+                    mask,
+                    &lane.x,
+                    t_norm,
+                    &mut lane.m_out,
+                    &mut lane.caches,
+                )?;
+                phase.model_us += PhaseAccum::lap(&mut t0);
+                lane.executed = true;
+            }
+            _ => anyhow::bail!("degraded single called with a non-degraded plan"),
         }
         Ok(())
     }
@@ -904,12 +1024,15 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
         Ok(())
     }
 
-    /// Bucketed full execution of `sub` (>= 2 lanes, one `(guidance, t)`
-    /// key): lane states and conds are gathered row-wise into arena-pooled
-    /// `[chunk, ...]` buffers, the compiled `full_b{chunk}` variant runs
-    /// into a pooled output buffer, and rows scatter back into each lane's
-    /// `m_out` in place. All three buffers return to the arena, so the
-    /// steady state allocates nothing.
+    /// Bucketed full execution of `sub` (>= 2 lanes, one variant
+    /// signature): lane states and conds are gathered row-wise into
+    /// arena-pooled `[chunk, ...]` buffers, the compiled `full_b{chunk}`
+    /// variant runs into a pooled output buffer, and rows scatter back
+    /// into each lane's `m_out` in place. Aux outputs the signature emits
+    /// come back batch-major — row k is exactly what lane k's solo single
+    /// would have captured — and scatter into each lane's retained
+    /// [`AuxSlot`]s (the multi-row CacheWarm capture). Every buffer
+    /// returns to the arena, so the steady state allocates nothing.
     fn run_lane_bucket(
         &self,
         lanes: &mut [Lane],
@@ -946,8 +1069,30 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             gs,
             ..Default::default()
         };
+        // batch-major aux capture buffers, only for what the bucket's
+        // signature (== its batch-1 twin's) emits
+        let ds = info.deep_shape();
+        let cs = info.caches_shape();
+        let mut deep_b = if info.emits_output(variant, "deep") {
+            Some(self.arena.checkout(&[chunk, ds[0], ds[1], ds[2]]))
+        } else {
+            None
+        };
+        let mut caches_b = if info.emits_output(variant, "caches") {
+            Some(self.arena.checkout(&[chunk, cs[0], cs[1], cs[2], cs[3]]))
+        } else {
+            None
+        };
         phase.gather_us += PhaseAccum::lap(&mut t0);
-        let run = self.backend.run_into(variant, &args, &mut out_b, None, None);
+        let want_deep = deep_b.is_some();
+        let want_caches = caches_b.is_some();
+        let run = self.backend.run_into(
+            variant,
+            &args,
+            &mut out_b,
+            if want_deep { Some(&mut deep_b) } else { None },
+            if want_caches { Some(&mut caches_b) } else { None },
+        );
         phase.model_us += PhaseAccum::lap(&mut t0);
         // gather buffers go back to the pool whatever happened
         self.arena.release_opt(args.x.take());
@@ -956,6 +1101,8 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             Ok(()) => {}
             Err(e) => {
                 self.arena.release(out_b);
+                self.arena.release_opt(deep_b.take());
+                self.arena.release_opt(caches_b.take());
                 return Err(e);
             }
         }
@@ -963,13 +1110,153 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             let lane = &mut lanes[l];
             view::copy_from_row(&mut lane.m_out, &out_b, k);
             lane.executed = true;
-            // batched aux layouts are not per-lane sliceable: mark the
-            // features stale rather than feed them to Shallow/Prune — the
-            // buffers stay retained for the next single's in-place refill
-            lane.deep.invalidate();
-            lane.caches.invalidate();
+            lane.stats.mix.batched += 1;
+            // scatter each lane's captured aux rows into its retained
+            // slots and mark them fresh — the same refresh its solo
+            // single performs, so CacheWarm capture steps batch too
+            if let Some(db) = deep_b.as_ref() {
+                if let Some(slot) = lane.deep.slot().as_mut() {
+                    view::copy_from_row(slot, db, k);
+                }
+                lane.deep.mark_valid();
+            }
+            if let Some(cbuf) = caches_b.as_ref() {
+                if let Some(slot) = lane.caches.slot().as_mut() {
+                    view::copy_from_row(slot, cbuf, k);
+                }
+                lane.caches.mark_valid();
+            }
         }
         self.arena.release(out_b);
+        self.arena.release_opt(deep_b.take());
+        self.arena.release_opt(caches_b.take());
+        phase.scatter_us += PhaseAccum::lap(&mut t0);
+        Ok(())
+    }
+
+    /// Bucketed degraded execution of `sub` (>= 2 lanes, one variant
+    /// signature): like [`Pipeline::run_lane_bucket`], plus the per-lane
+    /// aux features the variant *consumes* are gathered row-wise into
+    /// arena-pooled batch-major buffers — Shallow reads each lane's deep
+    /// feature, Prune reads each lane's attention caches and, when the
+    /// signature emits `caches`, refreshes them through a pooled buffer
+    /// scattered back per row (the batched twin of
+    /// [`Pipeline::run_prune_into`]'s install). Every buffer returns to
+    /// the arena, so the steady state allocates nothing.
+    fn run_degraded_bucket(
+        &self,
+        lanes: &mut [Lane],
+        sub: &[usize],
+        plan: &StepPlan,
+        bucket_variants: &[(usize, String)],
+        phase: &mut PhaseAccum,
+    ) -> Result<()> {
+        let chunk = sub.len();
+        let info = self.backend.info();
+        let [h, w, c] = info.img;
+        // every member shares the lead lane's (t, gs, mask) by group
+        // construction + the mask-equality guard
+        let t_norm = lanes[sub[0]].solver.t_norm(lanes[sub[0]].step);
+        let gs = lanes[sub[0]].req.guidance;
+        let variant = bucket_variants
+            .iter()
+            .find(|(n, _)| *n == chunk)
+            .map(|(_, v)| v.as_str());
+        let variant = match variant {
+            Some(v) => v,
+            None => anyhow::bail!("no compiled bucket variant for a {chunk}-lane chunk"),
+        };
+        let mut t0 = phase.mark();
+        let mut xb = self.arena.checkout(&[chunk, h, w, c]);
+        let mut cb = self.arena.checkout(&[chunk, info.cond_dim]);
+        for (k, &l) in sub.iter().enumerate() {
+            view::copy_into_row(&mut xb, k, &lanes[l].x);
+            view::copy_into_row(&mut cb, k, &lanes[l].req.cond);
+        }
+        let mut args = ModelArgs {
+            x: Some(xb),
+            t: t_norm as f32,
+            cond: Some(cb),
+            gs,
+            ..Default::default()
+        };
+        // gather the aux inputs the variant consumes, batch-major: the
+        // structural fallback guarantees every gathered lane's slot holds
+        // a valid feature
+        let mut refresh_caches = false;
+        match plan {
+            StepPlan::Shallow => {
+                let ds = info.deep_shape();
+                let mut db = self.arena.checkout(&[chunk, ds[0], ds[1], ds[2]]);
+                for (k, &l) in sub.iter().enumerate() {
+                    match lanes[l].deep.slot().as_ref() {
+                        Some(d) => view::copy_into_row(&mut db, k, d),
+                        None => anyhow::bail!("batched Shallow lane lost its deep slot"),
+                    }
+                }
+                args.deep = Some(db);
+            }
+            StepPlan::Prune { mask } => {
+                let cs = info.caches_shape();
+                let mut kb = self.arena.checkout(&[chunk, cs[0], cs[1], cs[2], cs[3]]);
+                for (k, &l) in sub.iter().enumerate() {
+                    match lanes[l].caches.slot().as_ref() {
+                        Some(cc) => view::copy_into_row(&mut kb, k, cc),
+                        None => anyhow::bail!("batched Prune lane lost its caches slot"),
+                    }
+                }
+                args.caches = Some(kb);
+                // xtask: allow(alloc): Arc refcount bump, no heap allocation
+                args.keep_idx = Some(mask.clone());
+                refresh_caches = info.emits_output(variant, "caches");
+            }
+            _ => anyhow::bail!("degraded bucket called with a non-degraded plan"),
+        }
+        let mut out_b = self.arena.checkout(&[chunk, h, w, c]);
+        let cs = info.caches_shape();
+        let mut refreshed = if refresh_caches {
+            Some(self.arena.checkout(&[chunk, cs[0], cs[1], cs[2], cs[3]]))
+        } else {
+            None
+        };
+        phase.gather_us += PhaseAccum::lap(&mut t0);
+        let run = self.backend.run_into(
+            variant,
+            &args,
+            &mut out_b,
+            None,
+            if refresh_caches { Some(&mut refreshed) } else { None },
+        );
+        phase.model_us += PhaseAccum::lap(&mut t0);
+        // gather buffers go back to the pool whatever happened
+        self.arena.release_opt(args.x.take());
+        self.arena.release_opt(args.cond.take());
+        self.arena.release_opt(args.deep.take());
+        self.arena.release_opt(args.caches.take());
+        args.keep_idx = None;
+        match run {
+            Ok(()) => {}
+            Err(e) => {
+                self.arena.release(out_b);
+                self.arena.release_opt(refreshed.take());
+                return Err(e);
+            }
+        }
+        for (k, &l) in sub.iter().enumerate() {
+            let lane = &mut lanes[l];
+            view::copy_from_row(&mut lane.m_out, &out_b, k);
+            lane.executed = true;
+            lane.stats.mix.batched += 1;
+            // scatter each lane's refreshed caches row into its retained
+            // slot (still valid — the gathered input was)
+            if let Some(rb) = refreshed.as_ref() {
+                if let Some(cc) = lane.caches.slot().as_mut() {
+                    view::copy_from_row(cc, rb, k);
+                }
+            }
+        }
+        self.arena.release(out_b);
+        self.arena.release_opt(refreshed.take());
         phase.scatter_us += PhaseAccum::lap(&mut t0);
         Ok(())
     }

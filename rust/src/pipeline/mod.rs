@@ -122,13 +122,17 @@ pub trait Accelerator {
 
     /// Whether the full execution planned for step `i` must capture aux
     /// features (attention caches / deep feature) for a later directive of
-    /// a verified replay — the *CacheWarm* signal. The lane engine
-    /// excludes such executions from bucketed gathers (batched aux layouts
-    /// are not per-lane sliceable), so the features land in the lane's
-    /// retained [`crate::tensor::arena::AuxSlot`]s and the upcoming
-    /// token-pruned / shallow directive replays without degradation.
-    /// Sequential [`Pipeline::generate`] captures on every single full
-    /// execution and ignores this.
+    /// a verified replay — the *CacheWarm* signal. Capture steps gather
+    /// into bucketed launches like any other full step: batched aux
+    /// layouts are batch-major and per-lane sliceable, so a bucketed full
+    /// launch scatters each row's captured features into that lane's
+    /// retained [`crate::tensor::arena::AuxSlot`]s (multi-row capture)
+    /// and the upcoming token-pruned / shallow directive replays without
+    /// degradation. The lane engine keeps the signal for accounting: a
+    /// capture step that found no fitting bucket is counted as
+    /// `single_capture` in [`stats::ExecMix`]. Sequential
+    /// [`Pipeline::generate`] captures on every single full execution and
+    /// ignores this.
     fn wants_aux_capture(&self, _i: usize) -> bool {
         false
     }

@@ -86,6 +86,45 @@ impl DegradedCounts {
     }
 }
 
+/// How each *fresh* (model-executing) step of a lane actually launched —
+/// the batched-vs-single split the serving benches report per run.
+/// Without this, `BENCH_serving.json` could not tell a step that is
+/// genuinely unbatchable (edge conditioning compiles at batch 1) from one
+/// that merely fell out of the fewest-launches bucket DP as a residue
+/// chunk, or from a CacheWarm capture step.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecMix {
+    /// Fresh steps executed inside a >= 2-lane compiled bucket (full or
+    /// degraded variant).
+    pub batched: usize,
+    /// Singles forced by edge conditioning.
+    pub single_edge: usize,
+    /// CacheWarm capture steps that executed as singles (no fitting
+    /// bucket); captures that gathered count under `batched`.
+    pub single_capture: usize,
+    /// Singles left over by the bucket split (1-chunks of the DP, groups
+    /// of one, or no compiled bucket for the variant signature).
+    pub single_residue: usize,
+}
+
+impl ExecMix {
+    pub fn total(&self) -> usize {
+        self.batched + self.single_edge + self.single_capture + self.single_residue
+    }
+
+    pub fn singles(&self) -> usize {
+        self.single_edge + self.single_capture + self.single_residue
+    }
+
+    /// Fold another mix in (sweeps aggregate per-lane mixes per arm).
+    pub fn add(&mut self, other: &ExecMix) {
+        self.batched += other.batched;
+        self.single_edge += other.single_edge;
+        self.single_capture += other.single_capture;
+        self.single_residue += other.single_residue;
+    }
+}
+
 /// Per-request plan-cache outcome, stamped by the pipelines from
 /// [`super::Accelerator::outcome`] — NFE counters alone cannot tell a warm
 /// replay from a cold run, so the serving stack carries this alongside.
@@ -118,6 +157,10 @@ pub struct RunStats {
     /// Structural degradations of this run (planned mode → Full), recorded
     /// by the shared fallback rule in both execution paths.
     pub degraded: DegradedCounts,
+    /// Batched-vs-single launch split of this run's fresh steps (the lane
+    /// engine classifies each execution; solo [`super::Pipeline::generate`]
+    /// runs leave it all singles-residue-free at zero).
+    pub mix: ExecMix,
 }
 
 impl RunStats {
@@ -131,6 +174,7 @@ impl RunStats {
             wall_ms: 0.0,
             outcome: CacheOutcome::default(),
             degraded: DegradedCounts::default(),
+            mix: ExecMix::default(),
         }
     }
 
@@ -213,6 +257,19 @@ mod tests {
         }
         assert_eq!(StepMode::ALL.len(), 6);
         assert_eq!(StepMode::Prune.name(), "prune");
+    }
+
+    #[test]
+    fn exec_mix_totals_and_folds() {
+        let mut a = ExecMix { batched: 4, single_edge: 1, single_capture: 2, single_residue: 3 };
+        assert_eq!(a.total(), 10);
+        assert_eq!(a.singles(), 6);
+        let b = ExecMix { batched: 1, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.batched, 5);
+        assert_eq!(a.total(), 11);
+        let s = RunStats::new("sada".into(), 4);
+        assert_eq!(s.mix, ExecMix::default());
     }
 
     #[test]

@@ -30,9 +30,13 @@
 //! executes Full instead (a safe local substitute — unlike a wrongly
 //! honored skip, a refused prune costs one NFE, not trajectory
 //! corruption, so the rest of the plan keeps replaying). The lane engine's
-//! *CacheWarm* machinery ([`Accelerator::wants_aux_capture`]) routes the
-//! fresh step feeding a token directive to a single execution so the
-//! attention caches are captured into the lane's retained aux slots.
+//! *CacheWarm* machinery ([`Accelerator::wants_aux_capture`]) flags the
+//! fresh step feeding a token directive; such steps gather into bucketed
+//! full launches like any other (the batch-major aux output is scattered
+//! per row — multi-row capture) or run as arena-pooled singles, either
+//! way landing the attention caches in the lane's retained aux slots.
+//! The directives themselves then batch through compiled `prune{k}_b{n}`
+//! / `shallow_b{n}` buckets with same-signature lanes.
 //!
 //! Replay is where the NFE saving comes from: a cold SADA run pays the
 //! detection pattern — fresh/skip alternation plus the multistep streak
@@ -390,8 +394,8 @@ impl Accelerator for SpeculativeAccel {
 
     fn wants_aux_capture(&self, i: usize) -> bool {
         // CacheWarm: the fresh step feeding a token-pruned (or shallow)
-        // directive must run as a single so its aux features land in the
-        // lane's retained slots
+        // directive must land its aux features in the lane's retained
+        // slots — via a bucketed launch's per-row scatter or a single
         match &self.mode {
             Mode::Replaying { plan } => matches!(
                 next_fresh_directive(&plan.directives, i),

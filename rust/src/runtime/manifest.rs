@@ -98,32 +98,53 @@ impl ModelInfo {
     /// with a declared signature that omits the feature is known not to
     /// emit it, so the pipelines keep their aux-slot validity honest
     /// instead of marking a never-written buffer live.
+    ///
+    /// Signature-aware for batched bucket variants: when `variant` is a
+    /// `{base}_b{n}` name with no manifest entry of its own (older
+    /// manifests declare only the batch-1 signatures), the lookup falls
+    /// back to `base` — a compiled bucket emits exactly what its batch-1
+    /// twin emits, row-replicated.
     pub fn emits_output(&self, variant: &str, name: &str) -> bool {
-        match self.variants.get(variant) {
+        let v = match self.variants.get(variant) {
+            Some(v) => Some(v),
+            None => self.variants.get(base_variant(variant)),
+        };
+        match v {
             Some(v) if !v.outputs.is_empty() => v.outputs.iter().any(|o| o.name == name),
             _ => true,
         }
     }
 
-    /// Keep-count for a prune bucket variant name like "prune50".
+    /// Keep-count per batch-1 prune variant name, e.g. `("prune50", 8)`.
+    /// Batched `prune{k}_b{n}` buckets are excluded: the token planner
+    /// picks a *mask* bucket here, and the lane engine separately maps the
+    /// chosen mask's variant onto a compiled batch bucket via
+    /// [`Self::variant_buckets`].
     pub fn prune_variants(&self) -> Vec<(&str, usize)> {
         self.variants
             .iter()
-            .filter(|(_, v)| v.kind == "prune")
+            .filter(|(k, v)| v.kind == "prune" && base_variant(k) == k.as_str())
             .map(|(k, v)| (k.as_str(), v.n_keep))
             .collect()
     }
 
-    /// Compiled full-batch bucket sizes, ascending and deduplicated:
-    /// every `full_b{n}` variant of kind "full" with n > 1. The lane engine
-    /// gathers executing lanes into the largest fitting bucket from this
-    /// list (see [`split_into_buckets`]).
-    pub fn full_batch_buckets(&self) -> Vec<usize> {
+    /// Compiled batch-bucket sizes for a batch-1 variant `base`, ascending
+    /// and deduplicated: every `{base}_b{n}` variant of the same kind as
+    /// `base` with n > 1. The lane engine gathers same-signature lanes into
+    /// the largest fitting bucket from this list (see
+    /// [`split_into_buckets`]). Unknown bases (or bases with no compiled
+    /// buckets) return an empty list — lanes then execute as singles.
+    pub fn variant_buckets(&self, base: &str) -> Vec<usize> {
+        let kind = match self.variants.get(base) {
+            Some(v) => v.kind.as_str(),
+            None => return Vec::new(),
+        };
+        let prefix = format!("{base}_b");
         let mut out: Vec<usize> = self
             .variants
             .iter()
-            .filter(|(_, v)| v.kind == "full")
-            .filter_map(|(name, _)| name.strip_prefix("full_b"))
+            .filter(|(_, v)| v.kind == kind)
+            .filter_map(|(name, _)| name.strip_prefix(prefix.as_str()))
             .filter_map(|n| n.parse::<usize>().ok())
             .filter(|n| *n > 1)
             .collect();
@@ -132,14 +153,35 @@ impl ModelInfo {
         out
     }
 
-    /// Name of the compiled variant executing a sub-batch of `n` lanes:
-    /// `full` for singles, `full_b{n}` otherwise.
-    pub fn full_variant_for(n: usize) -> String {
+    /// Compiled full-batch bucket sizes ([`Self::variant_buckets`] of
+    /// `"full"`).
+    pub fn full_batch_buckets(&self) -> Vec<usize> {
+        self.variant_buckets("full")
+    }
+
+    /// Name of the compiled variant executing a sub-batch of `n` lanes of
+    /// batch-1 variant `base`: `base` for singles, `{base}_b{n}` otherwise.
+    pub fn variant_for(base: &str, n: usize) -> String {
         if n <= 1 {
-            "full".to_string()
+            base.to_string()
         } else {
-            format!("full_b{n}")
+            format!("{base}_b{n}")
         }
+    }
+
+    /// Name of the compiled variant executing a sub-batch of `n` full
+    /// lanes ([`Self::variant_for`] with base `"full"`).
+    pub fn full_variant_for(n: usize) -> String {
+        Self::variant_for("full", n)
+    }
+}
+
+/// Batch-1 twin of a variant name: strips a `_b{n}` bucket suffix
+/// (`"prune75_b4"` → `"prune75"`); names without one pass through.
+pub fn base_variant(name: &str) -> &str {
+    match name.rfind("_b") {
+        Some(at) if name[at + 2..].parse::<usize>().is_ok() => &name[..at],
+        _ => name,
     }
 }
 
@@ -431,6 +473,53 @@ mod tests {
         assert_eq!(mi.full_batch_buckets(), vec![2, 4, 8]);
         assert_eq!(ModelInfo::full_variant_for(1), "full");
         assert_eq!(ModelInfo::full_variant_for(4), "full_b4");
+    }
+
+    #[test]
+    fn variant_buckets_enumerates_per_base_and_prune_variants_stay_batch1() {
+        let mut mi = test_manifest().model("mock_eps").unwrap().clone();
+        assert!(mi.variant_buckets("shallow").is_empty());
+        assert!(mi.variant_buckets("prune75").is_empty());
+        assert!(mi.variant_buckets("nope").is_empty(), "unknown base has no buckets");
+        for (base, ns) in [("shallow", vec![2usize, 4]), ("prune75", vec![2]), ("prune50", vec![4])]
+        {
+            let proto = mi.variant(base).unwrap().clone();
+            for n in ns {
+                let mut v = proto.clone();
+                v.batch = n;
+                mi.variants.insert(format!("{base}_b{n}"), v);
+            }
+        }
+        assert_eq!(mi.variant_buckets("shallow"), vec![2, 4]);
+        assert_eq!(mi.variant_buckets("prune75"), vec![2]);
+        assert_eq!(mi.variant_buckets("prune50"), vec![4]);
+        assert_eq!(mi.variant_buckets("full"), Vec::<usize>::new());
+        assert_eq!(ModelInfo::variant_for("shallow", 1), "shallow");
+        assert_eq!(ModelInfo::variant_for("prune75", 4), "prune75_b4");
+        // the token planner still sees exactly the batch-1 prune variants
+        let mut pv = mi.prune_variants();
+        pv.sort();
+        assert_eq!(pv, vec![("prune50", 8), ("prune75", 12)]);
+    }
+
+    #[test]
+    fn base_variant_strips_bucket_suffixes_only() {
+        assert_eq!(base_variant("full_b8"), "full");
+        assert_eq!(base_variant("prune75_b2"), "prune75");
+        assert_eq!(base_variant("shallow"), "shallow");
+        assert_eq!(base_variant("full_bx"), "full_bx");
+        assert_eq!(base_variant("a_b2_b4"), "a_b2");
+    }
+
+    #[test]
+    fn emits_output_falls_back_to_the_base_signature() {
+        let m = test_manifest();
+        let mi = m.model("mock_eps").unwrap();
+        // unregistered bucket names inherit the batch-1 twin's signature
+        assert!(mi.emits_output("prune75_b4", "caches"));
+        assert!(!mi.emits_output("prune75_b4", "deep"));
+        assert!(!mi.emits_output("shallow_b2", "caches"));
+        assert!(mi.emits_output("full_b8", "deep"));
     }
 
     #[test]

@@ -12,7 +12,7 @@ use std::cell::RefCell;
 
 use anyhow::{bail, Result};
 
-use super::manifest::{Manifest, ModelInfo};
+use super::manifest::{base_variant, Manifest, ModelInfo};
 use super::{ModelArgs, ModelBackend, ModelOut};
 use crate::rng::Rng;
 use crate::solvers::Schedule;
@@ -183,16 +183,46 @@ impl GmBackend {
     /// property the lane-engine tests rely on.
     pub fn with_batch_buckets(seed: u64, buckets: &[usize]) -> Self {
         let mut b = Self::new(seed);
-        let proto = b.info.variants.get("full").unwrap().clone();
+        Self::register_buckets(&mut b.info, "full", buckets);
+        b
+    }
+
+    /// Like [`GmBackend::with_batch_buckets`], but with compiled
+    /// `{base}_b{n}` bucket variants registered for *every* batch-1
+    /// variant — full, shallow and each prune bucket — i.e. the
+    /// degraded-variant bucket backend the lane engine's gather path
+    /// compiles against. Row-exact like the full buckets: the degraded
+    /// noise stream restarts per row (see `eps_into`), so a batched
+    /// degraded launch is bit-identical to the equivalent singles.
+    pub fn with_variant_buckets(seed: u64, buckets: &[usize]) -> Self {
+        let mut b = Self::new(seed);
+        // xtask: allow(alloc): once-per-backend variant registration
+        let bases: Vec<String> = b
+            .info
+            .variants
+            .keys()
+            .filter(|k| base_variant(k) == k.as_str())
+            .cloned()
+            .collect();
+        for base in &bases {
+            Self::register_buckets(&mut b.info, base, buckets);
+        }
+        b
+    }
+
+    fn register_buckets(info: &mut ModelInfo, base: &str, buckets: &[usize]) {
+        let proto = match info.variants.get(base) {
+            Some(v) => v.clone(),
+            None => return,
+        };
         for &n in buckets {
             if n <= 1 {
                 continue;
             }
             let mut v = proto.clone();
             v.batch = n;
-            b.info.variants.insert(format!("full_b{n}"), v);
+            info.variants.insert(format!("{base}_b{n}"), v);
         }
-        b
     }
 
     /// Deterministic projection of the cond vector into pixel space,
@@ -236,6 +266,7 @@ impl GmBackend {
             bail!("mock: out has {} elements, x has {}", out.len(), x.len());
         }
         let b = x.len() / dim;
+        let degraded = !variant.starts_with("full");
         let mut scratch = self.scratch.borrow_mut();
         let GmScratch { logp, resp, score, shift } = &mut *scratch;
         for bi in 0..b {
@@ -252,12 +283,15 @@ impl GmBackend {
             let xr = &x.data()[bi * dim..(bi + 1) * dim];
             let or = &mut out[bi * dim..(bi + 1) * dim];
             self.gm.eps_star_into(xr, a, s.max(1e-6), shift, or, logp, resp, score);
-        }
-        if !variant.starts_with("full") {
-            // simulate the (small) approximation error of degraded variants
-            let mut rng = Rng::new(j as u64 * 7 + 13);
-            for e in out.iter_mut() {
-                *e += self.variant_noise * rng.gaussian() as f32;
+            if degraded {
+                // simulate the (small) approximation error of degraded
+                // variants; the noise stream restarts per row, so row k of
+                // a batched `shallow_b{n}` / `prune{k}_b{n}` launch is
+                // bit-identical to its single-launch twin
+                let mut rng = Rng::new(j as u64 * 7 + 13);
+                for e in or.iter_mut() {
+                    *e += self.variant_noise * rng.gaussian() as f32;
+                }
             }
         }
         Ok(())
@@ -281,17 +315,26 @@ impl ModelBackend for GmBackend {
     }
 
     fn run(&self, variant: &str, args: &ModelArgs) -> Result<ModelOut> {
-        let shape = match &args.x {
-            Some(x) => x.shape().to_vec(),
+        let (shape, numel) = match &args.x {
+            Some(x) => (x.shape().to_vec(), x.len()),
             None => bail!("mock: args.x required"),
         };
         let mut out = Tensor::zeros(&shape);
         self.eps_into(variant, args, out.data_mut())?;
-        Ok(ModelOut {
-            out,
-            deep: Some(Tensor::zeros(&self.info.deep_shape())),
-            caches: Some(Tensor::zeros(&self.info.caches_shape())),
-        })
+        // aux outputs are per-lane-sliceable: batched launches emit
+        // batch-major aux tensors whose row k equals the single-launch aux
+        let b = (numel / self.info.img_numel().max(1)).max(1);
+        let ds = self.info.deep_shape();
+        let cs = self.info.caches_shape();
+        let (deep, caches) = if b > 1 {
+            (
+                Tensor::zeros(&[b, ds[0], ds[1], ds[2]]),
+                Tensor::zeros(&[b, cs[0], cs[1], cs[2], cs[3]]),
+            )
+        } else {
+            (Tensor::zeros(&ds), Tensor::zeros(&cs))
+        };
+        Ok(ModelOut { out, deep: Some(deep), caches: Some(caches) })
     }
 
     /// Zero-allocation execution path: eps is written straight into the
@@ -316,11 +359,26 @@ impl ModelBackend for GmBackend {
             }
         }
         self.eps_into(variant, args, out.data_mut())?;
+        let b = match &args.x {
+            Some(x) => (x.len() / self.info.img_numel().max(1)).max(1),
+            None => 1,
+        };
+        // fixed-size shape arrays: batched aux fills stay allocation-free
+        let ds = self.info.deep_shape();
+        let cs = self.info.caches_shape();
         if let Some(slot) = deep {
-            Self::aux_zeros_into(slot, &self.info.deep_shape());
+            if b > 1 {
+                Self::aux_zeros_into(slot, &[b, ds[0], ds[1], ds[2]]);
+            } else {
+                Self::aux_zeros_into(slot, &ds);
+            }
         }
         if let Some(slot) = caches {
-            Self::aux_zeros_into(slot, &self.info.caches_shape());
+            if b > 1 {
+                Self::aux_zeros_into(slot, &[b, cs[0], cs[1], cs[2], cs[3]]);
+            } else {
+                Self::aux_zeros_into(slot, &cs);
+            }
         }
         Ok(())
     }
@@ -389,6 +447,46 @@ mod tests {
         assert_eq!(rows[0].data(), s0.out.data());
         assert_eq!(rows[1].data(), s1.out.data());
         assert_eq!(b.nfe(), 3);
+    }
+
+    #[test]
+    fn batched_degraded_rows_bit_identical_to_singles() {
+        let b = GmBackend::with_variant_buckets(3, &[2]);
+        let mut rng = Rng::new(9);
+        let x0 = Tensor::from_rng(&mut rng, &[1, 8, 8, 1]);
+        let x1 = Tensor::from_rng(&mut rng, &[1, 8, 8, 1]);
+        let c0 = Tensor::from_rng(&mut rng, &[1, 32]);
+        let c1 = Tensor::from_rng(&mut rng, &[1, 32]);
+        let args = |x: Tensor, c: Tensor| ModelArgs {
+            x: Some(x),
+            t: 0.5,
+            cond: Some(c),
+            gs: 3.0,
+            ..Default::default()
+        };
+        for base in ["shallow", "prune75", "prune50"] {
+            let bname = format!("{base}_b2");
+            assert!(b.info.variants.contains_key(&bname), "{bname} registered");
+            let xb = crate::tensor::ops::stack_rows(&[&x0, &x1]);
+            let cb = crate::tensor::ops::stack_rows(&[&c0, &c1]);
+            let batched = b.run(&bname, &args(xb, cb)).unwrap();
+            let s0 = b.run(base, &args(x0.clone(), c0.clone())).unwrap();
+            let s1 = b.run(base, &args(x1.clone(), c1.clone())).unwrap();
+            let rows = crate::tensor::ops::unstack_rows(&batched.out);
+            assert_eq!(rows[0].data(), s0.out.data(), "{base} row 0");
+            assert_eq!(rows[1].data(), s1.out.data(), "{base} row 1");
+            // the degraded noise is actually applied (differs from full)
+            let full = b.run("full", &args(x0.clone(), c0.clone())).unwrap();
+            assert_ne!(rows[0].data(), full.out.data(), "{base} noise");
+        }
+        // batched prune caches come back batch-major and sliceable per row
+        let xb = crate::tensor::ops::stack_rows(&[&x0, &x1]);
+        let cb = crate::tensor::ops::stack_rows(&[&c0, &c1]);
+        let a = args(xb, cb);
+        let mut out = Tensor::zeros(&[2, 8, 8, 1]);
+        let mut caches: Option<Tensor> = None;
+        b.run_into("prune50_b2", &a, &mut out, None, Some(&mut caches)).unwrap();
+        assert_eq!(caches.unwrap().shape(), &[2, 3, 2, 16, 16]);
     }
 
     #[test]

@@ -17,6 +17,33 @@ use std::sync::Arc;
 
 pub use crate::runtime::KeepMask;
 
+impl KeepMask {
+    /// Stable 64-bit signature of this mask (variant name + kept token
+    /// indices, FNV-1a). The lane engine groups same-signature Prune lanes
+    /// into one compiled `prune{k}_b{n}` launch and the batcher folds it
+    /// into plan affinity. Equal masks hash equal; callers that merge work
+    /// must still compare the masks themselves — a hash collision must
+    /// never batch two different masks into one launch.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for b in self.variant.as_bytes() {
+            eat(*b);
+        }
+        // separator so ("prune5", [0..]) never aliases ("prune50", [..])
+        eat(0xff);
+        for i in &self.keep_idx {
+            for b in i.to_le_bytes() {
+                eat(b);
+            }
+        }
+        h
+    }
+}
+
 /// A compiled prune bucket: variant name + its keep count.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PruneBucket {
@@ -124,6 +151,17 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn fingerprints_split_variants_and_index_sets() {
+        let a = KeepMask { variant: "prune50".into(), keep_idx: (0..8).collect() };
+        let b = KeepMask { variant: "prune50".into(), keep_idx: (0..8).collect() };
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = KeepMask { variant: "prune75".into(), keep_idx: (0..8).collect() };
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let d = KeepMask { variant: "prune50".into(), keep_idx: (1..9).collect() };
+        assert_ne!(a.fingerprint(), d.fingerprint());
     }
 
     #[test]

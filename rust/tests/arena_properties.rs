@@ -28,17 +28,27 @@ use sada::sada::Sada;
 use sada::solvers::{Schedule, SolverKind};
 use sada::tensor::Tensor;
 
-/// Every accelerator: bit-identical on unbucketed backends, where all
-/// full executions are singles and aux features (deep/caches) survive.
+/// Every accelerator, bit-identical on every backend flavor: unbucketed
+/// (all singles), full-bucket, and degraded-variant-bucket backends.
+/// Bucketed full launches capture aux batch-major and scatter row k into
+/// lane k's retained slots (exactly what its solo single would have
+/// captured), and Shallow/Prune lanes batch through compiled
+/// `shallow_b{n}` / `prune{k}_b{n}` buckets with per-lane-sliceable aux
+/// gathers — so aux-dependent accelerators (DeepCache's shallow path,
+/// SADA's token pruning, cache-warm replays) no longer trade their
+/// degraded-variant discount for gather throughput.
 const ACCELS: &[&str] = &["baseline", "sada", "sada-cache", "deepcache", "adaptive", "teacache"];
 
-/// Aux-independent accelerators (plan only Full/skip modes): bit-identical
-/// under bucketed execution too. Aux-dependent ones (DeepCache's shallow
-/// path, SADA's token pruning) intentionally trade their degraded-variant
-/// discount for gather throughput when bucketed launches clear lane aux
-/// features, so bucketed runs legitimately diverge from sequential for
-/// them (see the lane-engine module docs).
-const BUCKET_SAFE_ACCELS: &[&str] = &["baseline", "adaptive", "teacache"];
+/// Backend flavors every bit-identity property runs against.
+const BACKENDS: &[&str] = &["plain", "full_buckets", "variant_buckets"];
+
+fn backend_for(kind: &str, seed: u64) -> GmBackend {
+    match kind {
+        "full_buckets" => GmBackend::with_batch_buckets(seed, &[2, 4]),
+        "variant_buckets" => GmBackend::with_variant_buckets(seed, &[2, 4]),
+        _ => GmBackend::new(seed),
+    }
+}
 
 fn accel_for(name: &str, backend: &GmBackend, steps: usize) -> Box<dyn Accelerator> {
     match name {
@@ -119,17 +129,12 @@ fn property_every_accel_lane_batch_is_bit_identical_to_sequential() {
     .iter()
     .enumerate()
     {
-        for bucketed in [false, true] {
-            let backend = if bucketed {
-                GmBackend::with_batch_buckets(seed, &[2, 4])
-            } else {
-                GmBackend::new(seed)
-            };
+        for kind in BACKENDS {
+            let backend = backend_for(kind, seed);
             let reqs = reqs_for(batch, steps, seed * 17 + round as u64);
-            let accels = if bucketed { BUCKET_SAFE_ACCELS } else { ACCELS };
-            for accel in accels {
+            for accel in ACCELS {
                 let ctx = format!(
-                    "round {round} (seed {seed}, steps {steps}, b {batch}, bucketed {bucketed})"
+                    "round {round} (seed {seed}, steps {steps}, b {batch}, backend {kind})"
                 );
                 assert_lanes_match_sequential(&backend, accel, &reqs, &ctx);
             }
@@ -254,8 +259,8 @@ fn midflight_admitted_lanes_are_bit_identical_to_solo_runs() {
     // slots carrying another request's leftover state). Admission timing
     // must be invisible in the output: every lane matches its sequential
     // solo run bit for bit — image bytes, NFE, and mode trace — for every
-    // accelerator (aux-dependent ones on the unbucketed backend, the
-    // aux-independent set under bucketed gathers too).
+    // accelerator on every backend flavor, degraded-variant buckets
+    // included.
     use sada::pipeline::{AdmittedLane, GenResult, LaneFeeder};
     use std::collections::VecDeque;
 
@@ -284,18 +289,13 @@ fn midflight_admitted_lanes_are_bit_identical_to_solo_runs() {
         }
     }
 
-    for bucketed in [false, true] {
-        let backend = if bucketed {
-            GmBackend::with_batch_buckets(31, &[2, 4])
-        } else {
-            GmBackend::new(31)
-        };
+    for kind in BACKENDS {
+        let backend = backend_for(kind, 31);
         let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
         let steps = 18;
         let reqs = reqs_for(5, steps, 311);
-        let accels = if bucketed { BUCKET_SAFE_ACCELS } else { ACCELS };
-        for accel in accels {
-            let ctx = format!("continuous {accel} (bucketed {bucketed})");
+        for accel in ACCELS {
+            let ctx = format!("continuous {accel} (backend {kind})");
             let mut feeder = StaggerFeeder {
                 backend: &backend,
                 accel,
@@ -330,6 +330,101 @@ fn midflight_admitted_lanes_are_bit_identical_to_solo_runs() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn batched_prune_and_shallow_buckets_are_bit_identical_to_singles() {
+    // The degraded-variant bucket path end-to-end: mixed lane sets where
+    // Full, Prune (one shared keep mask) and Shallow groups coexist in the
+    // same engine step, over compiled `prune50_b{n}` / `shallow_b{n}` /
+    // `full_b{n}` buckets. Every lane must match its solo sequential run
+    // bit for bit — same image bytes, same mode trace, no structural
+    // degradations — while the backend's launch counter proves the
+    // gathering actually happened (launches < fresh steps).
+    use sada::pipeline::{StepCtx, StepObs, StepPlan};
+
+    struct ScriptedPrune {
+        mask: Arc<KeepMask>,
+    }
+    impl Accelerator for ScriptedPrune {
+        fn name(&self) -> String {
+            "scripted-prune".into()
+        }
+        fn plan(&mut self, ctx: &StepCtx) -> StepPlan {
+            if ctx.have_caches && ctx.i % 2 == 1 {
+                StepPlan::Prune { mask: self.mask.clone() }
+            } else {
+                StepPlan::Full
+            }
+        }
+        fn observe(&mut self, _o: &StepObs) {}
+        fn wants_obs(&self) -> bool {
+            false
+        }
+        fn reset(&mut self) {}
+        fn clone_fresh(&self) -> Box<dyn Accelerator> {
+            Box::new(ScriptedPrune { mask: self.mask.clone() })
+        }
+    }
+
+    for (round, &(seed, steps, batch)) in
+        [(3u64, 10usize, 2usize), (19, 17, 4), (41, 24, 6)].iter().enumerate()
+    {
+        let backend = GmBackend::with_variant_buckets(seed, &[2, 4]);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let mut reqs = reqs_for(batch, steps, 1000 + round as u64);
+        for r in reqs.iter_mut() {
+            r.guidance = 3.0; // one guidance group: maximal gathering
+        }
+        let mask = Arc::new(KeepMask { variant: "prune50".into(), keep_idx: (0..8).collect() });
+        // mixed lane set: even lanes run the scripted prune schedule, odd
+        // lanes a shallow-heavy DeepCache
+        let m2 = mask.clone();
+        let factory = FnFactory(move |lane: usize| -> Box<dyn Accelerator> {
+            if lane % 2 == 0 {
+                Box::new(ScriptedPrune { mask: m2.clone() })
+            } else {
+                Box::new(DeepCache::new(3))
+            }
+        });
+        backend.reset_nfe();
+        let lanes = pipe.generate_lanes(&reqs, &factory).unwrap();
+        let launches = backend.nfe();
+        let mut fresh_total = 0usize;
+        for (k, (lane, req)) in lanes.iter().zip(&reqs).enumerate() {
+            let mut solo: Box<dyn Accelerator> = if k % 2 == 0 {
+                Box::new(ScriptedPrune { mask: mask.clone() })
+            } else {
+                Box::new(DeepCache::new(3))
+            };
+            let seq = pipe.generate(req, solo.as_mut()).unwrap();
+            assert_eq!(
+                lane.image.data(),
+                seq.image.data(),
+                "round {round}: lane {k} not bit-identical under degraded buckets"
+            );
+            assert_eq!(lane.stats.mode_trace(), seq.stats.mode_trace(), "round {round} lane {k}");
+            assert_eq!(
+                lane.stats.degraded.prune, 0,
+                "round {round} lane {k}: batched prune must never degrade"
+            );
+            // every fresh step classified exactly once; solo runs classify
+            // nothing (the lane engine owns the batched-vs-single split)
+            assert_eq!(lane.stats.mix.total(), lane.stats.nfe, "round {round} lane {k} mix");
+            assert_eq!(seq.stats.mix.total(), 0, "solo runs leave ExecMix at zero");
+            assert!(
+                lane.stats.mix.batched > 0,
+                "round {round} lane {k}: never gathered (mix {:?})",
+                lane.stats.mix
+            );
+            fresh_total += lane.stats.nfe;
+        }
+        assert!(
+            launches < fresh_total,
+            "round {round}: {fresh_total} fresh steps took {launches} launches — \
+             degraded buckets saved nothing"
+        );
     }
 }
 

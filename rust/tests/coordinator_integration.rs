@@ -31,6 +31,7 @@ fn submit_n(coord: &Coordinator, n: usize, steps: usize, accel: &str) -> mpsc::R
                 guidance: 3.0,
                 accel: accel.into(),
                 slo_ms: None,
+                variant_hint: None,
                 submitted_at: Instant::now(),
                 reply: tx.clone(),
             })
@@ -104,6 +105,7 @@ fn rejects_unknown_model_without_crashing() {
             guidance: 1.0,
             accel: "sada".into(),
             slo_ms: None,
+            variant_hint: None,
             submitted_at: Instant::now(),
             reply: tx,
         })
@@ -163,6 +165,7 @@ fn mixed_models_route_to_correct_solvers() {
                 guidance: 2.0,
                 accel: "baseline".into(),
                 slo_ms: None,
+                variant_hint: None,
                 submitted_at: Instant::now(),
                 reply: tx.clone(),
             })

@@ -117,6 +117,7 @@ fn serving_outputs_bit_identical_across_worker_counts() {
                     guidance: 3.0,
                     accel: "sada".into(),
                     slo_ms: None,
+                    variant_hint: None,
                     submitted_at: Instant::now(),
                     reply: tx.clone(),
                 })
