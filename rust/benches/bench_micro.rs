@@ -179,6 +179,7 @@ fn main() {
                     accel: "sada".into(),
                     slo_ms: None,
                     variant_hint: None,
+                    step_budget: None,
                     submitted_at: std::time::Instant::now(),
                     reply: tx,
                 },

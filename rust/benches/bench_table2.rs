@@ -83,5 +83,12 @@ fn main() -> anyhow::Result<()> {
     // launch cut; stamps the `degraded_buckets` BENCH section)
     println!();
     sada::exp::serving::run_degraded_buckets_sweep(8, 24)?;
+
+    // slack-aware scheduling: FIFO-steal vs slack-ranked vs slack+preempt
+    // arms over a saturated cache-hot/cold queue with calibrated bimodal
+    // SLOs (self-checks the strict attainment win, >= 1 preempt-and-resume
+    // and bit-identity to solo runs; stamps the `scheduler` BENCH section)
+    println!();
+    sada::exp::serving::run_scheduler_sweep("artifacts", "sd2_tiny", 16, 4)?;
     Ok(())
 }

@@ -34,6 +34,13 @@ pub const HOT_ROOTS: &[&str] = &[
     "TraceSession::record_complete",
     "TraceSession::flush_phases",
     "EventRing::push",
+    // preemption checkpoint/restore ride the engine loop: per-event (not
+    // per-step) costs are gated by explicit allow(alloc) regions, and the
+    // recorder's preempt/resume instants must stay ring pushes
+    "Pipeline::checkpoint_lane",
+    "Pipeline::restore_lane",
+    "TraceSession::record_preempt",
+    "TraceSession::record_resume",
 ];
 
 /// Per-run setup / allocating-wrapper names: the alloc cone stops at these.
@@ -47,10 +54,11 @@ pub const COLD_BOUNDARIES: &[&str] = &[
     "with_variant_buckets", "build",
     // end-of-run accounting
     "outcome", "planned_degradations", "elapsed_ms", "request_key",
-    // feeder handoffs: admission/completion are bounded per-event costs on
-    // the continuous engine's boundary, never per-step work (the engine's
-    // own allow(alloc) regions gate what happens around the calls)
-    "admit", "complete",
+    // feeder handoffs: admission/completion/preemption hooks are bounded
+    // per-event costs on the continuous engine's boundary, never per-step
+    // work (the engine's own allow(alloc) regions gate what happens
+    // around the calls)
+    "admit", "complete", "plan_preemptions", "preempted", "resume",
     // flight-recorder session boundary: ring preallocation at checkout and
     // archival at end-of-run are once-per-run, outside the step loop
     "begin_session", "end_session", "set_flight_recorder", "take_snapshot",
@@ -69,7 +77,11 @@ pub const PANIC_ROOTS: &[&str] = &[
     "Coordinator::submit", "Coordinator::metrics_text", "Coordinator::shutdown",
     // recorder notes taken on the dispatcher/worker threads
     "FlightRecorder::note_queue_wait", "FlightRecorder::note_batch_form",
-    "FlightRecorder::note_steal",
+    "FlightRecorder::note_steal", "FlightRecorder::note_steal_scan",
+    // slack estimation runs on both the dispatcher (admission ranking)
+    // and the workers (steal ranking, preemption planning)
+    "SlackScheduler::slack_ms", "SlackScheduler::slack_with_nfe",
+    "SlackScheduler::expected_nfe", "SlackScheduler::observe_cost",
 ];
 
 /// Offline / never-on-a-worker-thread modules: the name-based graph would

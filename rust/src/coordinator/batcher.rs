@@ -28,6 +28,15 @@
 //! sleep can never over-sleep past a tight SLO hiding behind a patient
 //! head.
 //!
+//! **Slack-ranked admission.** With a [`SlackScheduler`] attached
+//! (`with_slack`, wired when [`super::server::SchedPolicy`] is a slack
+//! policy), head selection ranks by *deadline slack* instead of the bare
+//! deadline: `rank = deadline − estimated_cost`, where the cost estimate
+//! comes from the plan cache's expected NFE (cache-hot and step-budgeted
+//! requests are cheap, so they can afford to wait; expensive cold requests
+//! are promoted). With no scheduler attached every cost is zero and the
+//! rank *is* the deadline — bit-for-bit the EDF behavior above.
+//!
 //! **Divergence-adaptive guidance width.** The replay-affinity signature
 //! quantizes guidance through a [`DivergenceAdaptiveWidth`] shared with
 //! the workers: while replay divergence stays cheap the affinity bucket
@@ -50,6 +59,7 @@ use crate::pipeline::CacheOutcome;
 use crate::plancache::signature::{RequestKey, GUIDANCE_BUCKET_WIDTH};
 
 use super::request::ServeRequest;
+use super::slack::SlackScheduler;
 
 /// Fraction of a request's SLO budget it may spend waiting for batch
 /// formation; the rest is reserved for queueing at the worker and
@@ -168,7 +178,7 @@ fn plan_affinity(req: &ServeRequest) -> u64 {
 /// [`plan_affinity`] with an explicit (possibly width-snapped) guidance
 /// value — the hook the adaptive bucket width quantizes through.
 fn plan_affinity_at(req: &ServeRequest, gs: f32) -> u64 {
-    let key = RequestKey::new(&req.model, 0, req.steps, gs, req.cond.data());
+    let key = RequestKey::new(&req.model, 0, req.effective_steps(), gs, req.cond.data());
     // fold the accel in with the same FNV discipline as the key digest
     let h = req
         .accel
@@ -186,6 +196,21 @@ fn plan_affinity_at(req: &ServeRequest, gs: f32) -> u64 {
     }
 }
 
+/// One queued request with its push-time scheduling scores. All three
+/// scores are computed once at push, never per poll.
+struct Queued {
+    /// Batch-formation deadline (ms on the dispatcher clock):
+    /// `arrival + min(max_wait, slo * SLO_BATCH_FRACTION)`.
+    deadline: f64,
+    /// Head-selection rank: `deadline − estimated_cost_ms`. Equal to the
+    /// deadline when no slack scheduler is attached, so the default policy
+    /// is exactly EDF with FIFO ties.
+    rank: f64,
+    /// Plan-affinity signature.
+    sig: u64,
+    req: ServeRequest,
+}
+
 pub struct DynamicBatcher {
     /// Compiled batch sizes, ascending (1 implicitly allowed).
     buckets: Vec<usize>,
@@ -193,10 +218,10 @@ pub struct DynamicBatcher {
     /// Adaptive guidance width for affinity signatures (shared with the
     /// workers that record replay outcomes into it).
     width: Arc<DivergenceAdaptiveWidth>,
-    /// (batch deadline ms, plan-affinity signature, request) — both
-    /// computed once at push time, not per poll. Arrival order is the
-    /// queue order; the deadline is `arrival + min(max_wait, slo/4)`.
-    queue: VecDeque<(f64, u64, ServeRequest)>,
+    /// Cost estimator for slack-ranked head selection; `None` = pure EDF.
+    slack: Option<Arc<SlackScheduler>>,
+    /// Arrival order is the queue order.
+    queue: VecDeque<Queued>,
 }
 
 impl DynamicBatcher {
@@ -213,7 +238,14 @@ impl DynamicBatcher {
     ) -> Self {
         buckets.retain(|b| *b > 1);
         buckets.sort_unstable();
-        Self { buckets, max_wait_ms, width, queue: VecDeque::new() }
+        Self { buckets, max_wait_ms, width, slack: None, queue: VecDeque::new() }
+    }
+
+    /// Attach a slack scheduler: head selection becomes slack-ranked
+    /// (`deadline − estimated_cost`) instead of earliest-deadline.
+    pub fn with_slack(mut self, slack: Arc<SlackScheduler>) -> Self {
+        self.slack = Some(slack);
+        self
     }
 
     /// Batch-formation deadline for a request arriving at `now_ms`: its
@@ -232,7 +264,8 @@ impl DynamicBatcher {
     pub fn push(&mut self, now_ms: f64, req: ServeRequest) {
         let sig = plan_affinity_at(&req, self.width.snap(req.guidance));
         let deadline = self.deadline_for(now_ms, &req);
-        self.queue.push_back((deadline, sig, req));
+        let cost = self.slack.as_ref().map_or(0.0, |s| s.est_cost_ms(&req));
+        self.queue.push_back(Queued { deadline, rank: deadline - cost, sig, req });
     }
 
     pub fn pending(&self) -> usize {
@@ -263,45 +296,48 @@ impl DynamicBatcher {
     /// flushes alone at its deadline instead of contaminating a batch.
     fn compatible(a: &ServeRequest, b: &ServeRequest) -> bool {
         a.model == b.model
-            && a.steps == b.steps
+            && a.effective_steps() == b.effective_steps()
             && a.accel == b.accel
             && a.guidance.is_finite()
             && b.guidance.is_finite()
     }
 
-    /// Poll for a ready batch at `now_ms`. The *earliest-deadline* request
-    /// is the head (ties keep arrival order, so no-SLO queues behave
-    /// exactly like the old FIFO head) and defines the compatibility
-    /// class; only requests compatible with it are grouped,
-    /// same-plan-signature requests first (they will share buckets every
-    /// step of the run), then any compatible classmate. The head always
-    /// leads and leftovers keep arrival order.
+    /// Poll for a ready batch at `now_ms`. The *lowest-rank* request is
+    /// the head (rank == deadline without a slack scheduler, so ties keep
+    /// arrival order and no-SLO queues behave exactly like the old FIFO
+    /// head) and defines the compatibility class; only requests compatible
+    /// with it are grouped, same-plan-signature requests first (they will
+    /// share buckets every step of the run), then any compatible
+    /// classmate. The head always leads and leftovers keep arrival order.
     // Indexing safety: head_at comes from enumerate over the queue (and the
     // queue is non-empty past the early return), chosen[k] is sized to
     // drained.len() with k from enumerate, and requests[0] is the head
     // pushed unconditionally above.
     // xtask: allow(panic): bounds argued above
     pub fn poll(&mut self, now_ms: f64) -> Option<Batch> {
-        // earliest-deadline-first head selection: strict `<` keeps the
-        // first (oldest) of any tied deadlines
+        // lowest-rank head selection: strict `<` keeps the first (oldest)
+        // of any tied ranks
         let mut head_at = 0usize;
-        let mut head_deadline = f64::INFINITY;
-        for (k, (d, _, _)) in self.queue.iter().enumerate() {
-            if *d < head_deadline {
-                head_deadline = *d;
+        let mut head_rank = f64::INFINITY;
+        for (k, q) in self.queue.iter().enumerate() {
+            if q.rank < head_rank {
+                head_rank = q.rank;
                 head_at = k;
             }
         }
-        let (_, head_sig, head) = self.queue.get(head_at)?;
-        let head_sig = *head_sig;
-        let deadline_hit = now_ms >= head_deadline;
+        let q_head = self.queue.get(head_at)?;
+        let head_sig = q_head.sig;
+        // formation timing stays deadline-driven: the slack rank reorders
+        // *who* leads, never *when* a partial batch may flush
+        let deadline_hit = now_ms >= q_head.deadline;
+        let head = &q_head.req;
         // the head always counts as its own class even when self-comparison
         // fails (NaN guidance): a batch is never empty and the head always
         // exits, so a malformed request cannot livelock the queue
         let n_compat = self
             .queue
             .iter()
-            .filter(|(_, _, r)| Self::compatible(r, head))
+            .filter(|q| Self::compatible(&q.req, head))
             .count()
             .max(1);
         let want = if n_compat >= self.max_bucket() {
@@ -315,20 +351,20 @@ impl DynamicBatcher {
         // replay affinity first, then class fallback — followed by one
         // partition pass that keeps both batch and leftovers in arrival
         // order. O(n) per pass.
-        let (_, _, head) = self.queue.remove(head_at)?;
+        let head = self.queue.remove(head_at)?.req;
         let mut requests = Vec::with_capacity(want);
         requests.push(head);
-        let drained: Vec<(f64, u64, ServeRequest)> = self.queue.drain(..).collect();
+        let drained: Vec<Queued> = self.queue.drain(..).collect();
         let mut chosen = vec![false; drained.len()];
         let mut n_chosen = 0usize; // excludes the head
         for same_sig_pass in [true, false] {
-            for (k, (_, sig, r)) in drained.iter().enumerate() {
+            for (k, q) in drained.iter().enumerate() {
                 if n_chosen + 1 >= want {
                     break;
                 }
                 if chosen[k]
-                    || (same_sig_pass && *sig != head_sig)
-                    || !Self::compatible(r, &requests[0])
+                    || (same_sig_pass && q.sig != head_sig)
+                    || !Self::compatible(&q.req, &requests[0])
                 {
                     continue;
                 }
@@ -339,7 +375,7 @@ impl DynamicBatcher {
         let mut rest = VecDeque::with_capacity(drained.len());
         for (k, item) in drained.into_iter().enumerate() {
             if chosen[k] {
-                requests.push(item.2);
+                requests.push(item.req);
             } else {
                 rest.push_back(item);
             }
@@ -354,10 +390,10 @@ impl DynamicBatcher {
     /// still bounds the dispatcher's ingest sleep.
     pub fn next_deadline_in(&self, now_ms: f64) -> Option<f64> {
         let mut min: Option<f64> = None;
-        for (d, _, _) in self.queue.iter() {
+        for q in self.queue.iter() {
             min = Some(match min {
-                Some(m) if m <= *d => m,
-                _ => *d,
+                Some(m) if m <= q.deadline => m,
+                _ => q.deadline,
             });
         }
         min.map(|d| (d - now_ms).max(0.0))
@@ -384,6 +420,7 @@ mod tests {
             accel: "sada".into(),
             slo_ms: None,
             variant_hint: None,
+            step_budget: None,
             submitted_at: Instant::now(),
             reply: tx,
         }
@@ -716,6 +753,69 @@ mod tests {
         assert_eq!(b.next_deadline_in(99.0), Some(0.0));
         let empty = DynamicBatcher::new(vec![4], 50.0);
         assert_eq!(empty.next_deadline_in(0.0), None);
+    }
+
+    #[test]
+    fn slack_rank_promotes_expensive_requests_past_cheap_deadline_peers() {
+        // two requests with the same batch deadline but very different
+        // estimated costs: the step-budgeted (cheap) one can afford to
+        // wait, so the expensive cold one must lead under slack ranking —
+        // while plain EDF would keep arrival order
+        use crate::coordinator::slack::SlackScheduler;
+        use crate::plancache::PlanStore;
+        use std::collections::HashMap;
+        let mut stores = HashMap::new();
+        stores.insert("m".to_string(), Arc::new(PlanStore::new(8)));
+        let sched = Arc::new(SlackScheduler::new(&stores));
+
+        let mut edf = DynamicBatcher::new(vec![2], 50.0);
+        let mut ranked = DynamicBatcher::new(vec![2], 50.0).with_slack(sched);
+        for b in [&mut edf, &mut ranked] {
+            let mut cheap = req(0, "m", 50);
+            cheap.step_budget = Some(2); // ~2 NFE: huge slack
+            b.push(0.0, cheap);
+            b.push(0.0, req(1, "m", 50)); // cold: full 50 NFE
+        }
+        // different effective step counts => different classes, so each
+        // head flushes alone at the deadline; only the ORDER differs
+        let lead = |b: &mut DynamicBatcher| b.poll(60.0).unwrap().requests[0].id.0;
+        assert_eq!(lead(&mut edf), 0, "EDF keeps arrival order on tied deadlines");
+        assert_eq!(lead(&mut ranked), 1, "slack rank promotes the expensive request");
+        // both batchers still drain completely
+        assert_eq!(lead(&mut edf), 1);
+        assert_eq!(lead(&mut ranked), 0);
+    }
+
+    #[test]
+    fn step_budget_splits_compatibility_and_tightens_affinity() {
+        // a budgeted request runs fewer steps than its nominal schedule, so
+        // it can neither share a batch nor a plan signature with the
+        // unbudgeted twin
+        let mut b = DynamicBatcher::new(vec![2], 50.0);
+        let mut budgeted = req(0, "m", 50);
+        budgeted.step_budget = Some(10);
+        b.push(0.0, budgeted);
+        b.push(0.0, req(1, "m", 50));
+        let batch = b.poll(60.0).expect("deadline flush");
+        assert_eq!(batch.requests.len(), 1, "budgeted request is its own class");
+        // equal budgets restore compatibility
+        let mut b = DynamicBatcher::new(vec![2], 50.0);
+        for id in 0..2 {
+            let mut r = req(id, "m", 50);
+            r.step_budget = Some(10);
+            b.push(0.0, r);
+        }
+        assert_eq!(b.poll(0.0).expect("same budget groups").requests.len(), 2);
+        // affinity signature follows effective steps, not nominal steps
+        let mut a = req(0, "m", 50);
+        a.step_budget = Some(10);
+        let sig = |r: &ServeRequest| super::plan_affinity(r);
+        assert_ne!(sig(&a), sig(&req(1, "m", 50)));
+        assert_eq!(sig(&a), sig(&{
+            let mut r = req(1, "m", 50);
+            r.step_budget = Some(10);
+            r
+        }));
     }
 
     #[test]

@@ -401,6 +401,13 @@ mod tests {
         m.set_gauge("queue_depth", 2.0);
         m.observe_ms_static("e2e_latency", 12.5);
         m.record_cache_outcome(&CacheOutcome::Diverged { step: 17 });
+        // scheduler counters + the admission-time queue-slack histogram
+        // (slack shifted non-negative, unitless linear buckets — never on
+        // the ms-latency path)
+        m.inc("lanes_preempted", 2);
+        m.inc("lanes_resumed", 2);
+        m.inc("steal_multi_admitted", 3);
+        m.observe_linear("queue_slack_shifted", 250.0, 2000.0, 40);
         let text = m.render();
         // every line parses as `name value` with a finite value
         for line in text.lines() {
@@ -426,6 +433,15 @@ mod tests {
         assert!(text.contains("sada_plancache_divergence_step_p50 "));
         assert!(!text.contains("sada_plancache_divergence_step_mean_ms"));
         assert!(!text.contains("sada_plancache_divergence_step_p50_ms"));
+        // scheduler counters follow the _total convention; queue slack is
+        // unitless like the divergence-step series
+        assert!(text.contains("sada_lanes_preempted_total 2"));
+        assert!(text.contains("sada_lanes_resumed_total 2"));
+        assert!(text.contains("sada_steal_multi_admitted_total 3"));
+        assert!(text.contains("sada_queue_slack_shifted_count 1"));
+        assert!(text.contains("sada_queue_slack_shifted_mean "));
+        assert!(!text.contains("sada_queue_slack_shifted_mean_ms"));
+        assert!(!text.contains("sada_queue_slack_shifted_p50_ms"));
         // divergence step 17 stays exact to bucket resolution (width 2)
         let p50_line = text
             .lines()

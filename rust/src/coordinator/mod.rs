@@ -24,9 +24,11 @@ pub mod metrics_log;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod slack;
 
 pub use batcher::{Batch, DivergenceAdaptiveWidth, DynamicBatcher};
 pub use metrics_log::MetricsLog;
 pub use request::{ServeRequest, ServeResponse};
 pub use router::Router;
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, SchedPolicy};
+pub use slack::SlackScheduler;

@@ -32,9 +32,30 @@ pub struct ServeRequest {
     /// `shallow_b{n}` buckets. `None` opts out (affinity falls back to
     /// the plan-cache key components alone).
     pub variant_hint: Option<String>,
+    /// AdaDiff-style per-request step budget: an upper bound on the number
+    /// of solver steps this request is willing to pay for, independent of
+    /// the nominal `steps` schedule. The engine runs
+    /// [`ServeRequest::effective_steps`] steps, and the slack scheduler uses
+    /// the budget to tighten the remaining-cost estimate (a budgeted
+    /// request is cheaper than its nominal schedule suggests, so it fits
+    /// into tighter slack windows). `None` keeps the nominal schedule.
+    pub step_budget: Option<usize>,
     pub submitted_at: Instant,
     /// Completion channel (one response per request).
     pub reply: Sender<ServeResponse>,
+}
+
+impl ServeRequest {
+    /// The step count actually scheduled: the nominal `steps` clamped by
+    /// the AdaDiff-style `step_budget` (never below 1). Every consumer of
+    /// a request's step count — batch compatibility, plan keys, cost
+    /// estimates, the engine itself — goes through this.
+    pub fn effective_steps(&self) -> usize {
+        match self.step_budget {
+            Some(b) => self.steps.min(b).max(1),
+            None => self.steps.max(1),
+        }
+    }
 }
 
 pub struct ServeResponse {

@@ -75,6 +75,7 @@ mod tests {
             accel: "sada".into(),
             slo_ms: None,
             variant_hint: None,
+            step_budget: None,
             submitted_at: Instant::now(),
             reply: tx,
         }

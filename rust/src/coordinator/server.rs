@@ -40,15 +40,40 @@ use super::batcher::{DivergenceAdaptiveWidth, DynamicBatcher};
 use super::metrics_log::{lock_metrics, MetricsLog};
 use super::request::{ServeRequest, ServeResponse};
 use super::router::Router;
+use super::slack::SlackScheduler;
 use crate::baselines::{AdaptiveDiffusion, DeepCache, TeaCache};
 use crate::obs::{FlightRecorder, Sampling};
 use crate::pipeline::{
-    Accelerator, AdmittedLane, GenRequest, GenResult, LaneFeeder, NoAccel, Pipeline,
+    Accelerator, AdmittedLane, GenRequest, GenResult, LaneCheckpoint, LaneFeeder, LaneStatus,
+    NoAccel, Pipeline,
 };
 use crate::plancache::{schedule_fingerprint, PlanStore, SpeculativeAccel};
 use crate::runtime::{ModelBackend, Runtime};
 use crate::sada::Sada;
 use crate::solvers::SolverKind;
+
+/// Scheduling policy for admission, mid-flight slot filling and (in the
+/// strongest arm) lane preemption. The three arms are the `sada-serve
+/// scheduler` sweep's comparison axis; results are bit-identical across
+/// all of them — policy only changes *when* a request runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// PR-7 behavior, bit-for-bit: earliest-deadline-first batch heads
+    /// with FIFO ties, and freed lane slots steal from the front-most
+    /// compatible queued batch only.
+    #[default]
+    FifoSteal,
+    /// Slack-ranked admission (`deadline − estimated_remaining_cost`
+    /// orders batch heads; plan-cache hits and step budgets tighten the
+    /// estimate) plus multi-item steals that scan the whole work queue,
+    /// filling every free slot in one pass, lowest slack first.
+    Slack,
+    /// [`SchedPolicy::Slack`] plus lane preemption: when a queued
+    /// request's slack goes negative and every slot is busy, a cache-hot
+    /// slack-positive lane is checkpointed to make room and resumed —
+    /// bit-identically — once a slot frees up.
+    SlackPreempt,
+}
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -76,6 +101,10 @@ pub struct CoordinatorConfig {
     /// decisions; `Full` records every lane. Phase/steal events on the
     /// engine and coordinator tracks are recorded whenever enabled.
     pub trace_sampling: Sampling,
+    /// Scheduling policy (admission ranking, steal discipline, lane
+    /// preemption). Default [`SchedPolicy::FifoSteal`] preserves the
+    /// pre-slack behavior exactly.
+    pub sched_policy: SchedPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -91,6 +120,7 @@ impl Default for CoordinatorConfig {
             plan_cache_capacity: 256,
             continuous: false,
             trace_sampling: Sampling::Off,
+            sched_policy: SchedPolicy::default(),
         }
     }
 }
@@ -210,6 +240,111 @@ impl WorkQueue {
         out
     }
 
+    /// Multi-item steal for the slack policies: scan **every** queued
+    /// batch — not just the front-most compatible one — and pull up to
+    /// `free` requests matching `(model, accel)`, lowest `rank` first
+    /// when a ranking is given (stable: ties keep queue order; `None`
+    /// ranks by queue order, which makes this a strict generalization of
+    /// [`WorkQueue::steal_compatible`] across batches). Three free slots
+    /// and three compatible singletons scattered through the queue all
+    /// admit in one pass. Remainders keep their queue positions; every
+    /// fully-consumed batch frees a capacity slot and wakes the push
+    /// side exactly as `pop` would. Returns the stolen requests plus the
+    /// number of queued batches scanned (the `StealScan` trace arg).
+    #[allow(clippy::type_complexity)]
+    fn steal_scan(
+        &self,
+        model: &str,
+        accel: &str,
+        free: usize,
+        rank: Option<&dyn Fn(&ServeRequest) -> f64>,
+    ) -> (Vec<ServeRequest>, usize) {
+        let mut out = Vec::new();
+        if free == 0 {
+            return (out, 0);
+        }
+        let mut st = self.lock();
+        let scanned = st.items.len();
+        // candidate (batch, request) coordinates with their rank score
+        let mut cands: Vec<(usize, usize, f64)> = Vec::new();
+        for (i, it) in st.items.iter().enumerate() {
+            if it.requests.is_empty()
+                || it.model != model
+                || !it.requests.iter().all(|r| r.accel == accel)
+            {
+                continue;
+            }
+            for (j, r) in it.requests.iter().enumerate() {
+                cands.push((i, j, rank.map_or(0.0, |f| f(r))));
+            }
+        }
+        if rank.is_some() {
+            // stable: equal slack preserves FIFO queue order
+            cands.sort_by(|a, b| a.2.total_cmp(&b.2));
+        }
+        cands.truncate(free);
+        // pluck in descending (batch, index) order so indices stay valid,
+        // then emit in rank order
+        let order: Vec<(usize, usize)> = cands.iter().map(|&(i, j, _)| (i, j)).collect();
+        let mut removal = order.clone();
+        removal.sort_unstable_by(|a, b| b.cmp(a));
+        let mut plucked: Vec<((usize, usize), ServeRequest)> =
+            Vec::with_capacity(removal.len());
+        for (i, j) in removal {
+            if let Some(it) = st.items.get_mut(i) {
+                if j < it.requests.len() {
+                    plucked.push(((i, j), it.requests.remove(j)));
+                }
+            }
+        }
+        for key in order {
+            if let Some(pos) = plucked.iter().position(|(k, _)| *k == key) {
+                out.push(plucked.remove(pos).1);
+            }
+        }
+        // drop the batches this pass emptied (descending: indices stay
+        // valid), waking one blocked pusher per freed capacity slot
+        let mut emptied: Vec<usize> = cands.iter().map(|c| c.0).collect();
+        emptied.sort_unstable();
+        emptied.dedup();
+        for &i in emptied.iter().rev() {
+            if st.items.get(i).is_some_and(|it| it.requests.is_empty()) {
+                st.items.remove(i);
+                self.cv_free.notify_one();
+            }
+        }
+        (out, scanned)
+    }
+
+    /// Preemption demand probe: over the queued batches compatible with
+    /// `(model, accel)`, count requests whose slack (per `slack_of`) is
+    /// negative and report the most negative slack seen. Read-only — the
+    /// feeder calls this once per saturated engine step, and only acts
+    /// when the count is nonzero.
+    fn urgent_compatible(
+        &self,
+        model: &str,
+        accel: &str,
+        slack_of: &dyn Fn(&ServeRequest) -> f64,
+    ) -> (usize, f64) {
+        let st = self.lock();
+        let mut n = 0usize;
+        let mut worst = f64::INFINITY;
+        for it in st.items.iter() {
+            if it.model != model || !it.requests.iter().all(|r| r.accel == accel) {
+                continue;
+            }
+            for r in it.requests.iter() {
+                let s = slack_of(r);
+                if s < 0.0 {
+                    n += 1;
+                    worst = worst.min(s);
+                }
+            }
+        }
+        (n, worst)
+    }
+
     /// Block until an item is available; `None` once closed and drained.
     fn pop(&self) -> Option<WorkItem> {
         let mut st = self.lock();
@@ -298,6 +433,11 @@ impl Coordinator {
                 })
                 .collect(),
         );
+        // one slack estimator per coordinator: the dispatcher ranks its
+        // queues through it, workers feed it cost observations and
+        // schedule fingerprints. Created unconditionally (cheap) so the
+        // cost EWMA is warm if the policy is flipped between runs.
+        let sched = Arc::new(SlackScheduler::new(&stores));
 
         // on any spawn failure, close the queue before returning so
         // already-spawned workers exit instead of blocking in pop() forever
@@ -309,9 +449,12 @@ impl Coordinator {
             let stores_i = stores.clone();
             let width_i = width.clone();
             let rec_i = recorder.clone();
+            let sched_i = sched.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("sada-engine-{i}"))
-                .spawn(move || worker_loop(i, cfg_i, queue_i, metrics_i, stores_i, width_i, rec_i));
+                .spawn(move || {
+                    worker_loop(i, cfg_i, queue_i, metrics_i, stores_i, width_i, rec_i, sched_i)
+                });
             match spawned {
                 Ok(handle) => workers.push(handle),
                 Err(e) => {
@@ -325,9 +468,10 @@ impl Coordinator {
         let q2 = queue.clone();
         let w2 = width.clone();
         let r2 = recorder.clone();
+        let s2 = sched.clone();
         let dispatcher = match std::thread::Builder::new()
             .name("sada-dispatch".into())
-            .spawn(move || dispatch_loop(cfg, rx, q2, m2, w2, r2))
+            .spawn(move || dispatch_loop(cfg, rx, q2, m2, w2, r2, s2))
         {
             Ok(handle) => handle,
             Err(e) => {
@@ -433,6 +577,7 @@ fn dispatch_loop(
     metrics: Arc<Mutex<MetricsLog>>,
     width: Arc<DivergenceAdaptiveWidth>,
     recorder: Option<Arc<FlightRecorder>>,
+    sched: Arc<SlackScheduler>,
 ) -> Result<()> {
     // close the queue on every exit path, including panic-unwind: workers
     // blocked in pop() must never outlive the dispatcher
@@ -447,7 +592,18 @@ fn dispatch_loop(
     let router = Router::new(&cfg.models);
     let mut batchers: Vec<DynamicBatcher> = (0..router.n_queues())
         .map(|_| {
-            DynamicBatcher::with_width(cfg.batch_buckets.clone(), cfg.max_wait_ms, width.clone())
+            let b = DynamicBatcher::with_width(
+                cfg.batch_buckets.clone(),
+                cfg.max_wait_ms,
+                width.clone(),
+            );
+            // slack policies rank each batcher queue by estimated slack;
+            // FifoSteal keeps the EDF order bit-for-bit
+            if cfg.sched_policy == SchedPolicy::FifoSteal {
+                b
+            } else {
+                b.with_slack(sched.clone())
+            }
         })
         .collect();
     let model_names = router.model_names();
@@ -517,6 +673,7 @@ fn dispatch_loop(
 /// One engine worker: exclusive owner of its `Runtime`, recycling
 /// accelerators per compatibility class. A failed batch drops its reply
 /// channels (the per-request error signal) but never kills the worker.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker: usize,
     cfg: CoordinatorConfig,
@@ -525,6 +682,7 @@ fn worker_loop(
     stores: PlanStores,
     width: Arc<DivergenceAdaptiveWidth>,
     recorder: Option<Arc<FlightRecorder>>,
+    sched: Arc<SlackScheduler>,
 ) -> Result<()> {
     // fires on fatal Err return AND panic-unwind: the last worker to die
     // drains the queue (dropping items fails their requests fast via the
@@ -564,11 +722,12 @@ fn worker_loop(
         }
         let run = if cfg.continuous {
             execute_continuous(
-                &rt, &cfg, worker, item, &queue, &metrics, &stores, &width, &recorder,
+                &rt, &cfg, worker, item, &queue, &metrics, &stores, &width, &recorder, &sched,
             )
         } else {
             execute_batch(
                 &rt, &cfg, worker, item, &metrics, &mut accel_pool, &stores, &width, &recorder,
+                &sched,
             )
         };
         match run {
@@ -594,6 +753,7 @@ fn execute_batch(
     stores: &PlanStores,
     width: &Arc<DivergenceAdaptiveWidth>,
     recorder: &Option<Arc<FlightRecorder>>,
+    sched: &Arc<SlackScheduler>,
 ) -> Result<()> {
     let WorkItem { model, requests, ready_at: _ } = item;
     let model = model.as_str();
@@ -611,7 +771,7 @@ fn execute_batch(
         pipe.set_flight_recorder(rec.clone(), worker);
     }
     // xtask: allow(panic): the batcher never emits an empty batch
-    let steps = requests[0].steps;
+    let steps = requests[0].effective_steps();
     // xtask: allow(panic): the batcher never emits an empty batch
     let key: AccelKey = (model.to_string(), requests[0].accel.clone(), steps);
     // the plan signature pins (solver, schedule): a plan recorded under a
@@ -619,6 +779,9 @@ fn execute_batch(
     let cache = stores
         .get(model)
         .map(|s| (s.clone(), schedule_fingerprint(solver.name(), &schedule)));
+    if let Some((_, fp)) = &cache {
+        sched.note_fp(model, *fp);
+    }
     let accel = accel_pool
         .entry(key)
         // xtask: allow(panic): the batcher never emits an empty batch
@@ -629,7 +792,7 @@ fn execute_batch(
             cond: r.cond.clone(),
             seed: r.seed,
             guidance: r.guidance,
-            steps: r.steps,
+            steps: r.effective_steps(),
             edge: None,
         })
         .collect();
@@ -665,6 +828,8 @@ fn execute_batch(
             // feed the divergence-adaptive affinity width (scheduling
             // heuristic only: hits widen it, divergences narrow it)
             width.record(&res.stats.outcome);
+            // feed the slack estimator's per-NFE cost EWMA
+            sched.observe_cost(res.stats.wall_ms, res.stats.nfe);
         }
         m.set_gauge("affinity_guidance_width", width.width() as f64);
         if let Some(store) = stores.get(model) {
@@ -689,6 +854,11 @@ fn execute_batch(
     Ok(())
 }
 
+/// Half-width of the admission-time queue-slack histogram: slack is
+/// clamped to ±this and shifted non-negative, so the linear buckets split
+/// evenly between late (left half) and early (right half) admissions.
+const QUEUE_SLACK_HALF_MS: f64 = 1000.0;
+
 /// [`LaneFeeder`] for the serving path: seeds the continuous engine with
 /// the popped batch, then refills freed slots by stealing compatible
 /// requests out of the shared work queue mid-flight. Replies are sent from
@@ -711,18 +881,41 @@ struct ServeFeeder<'a> {
     inflight: Vec<Option<ServeRequest>>,
     /// Requests pulled off the work queue into freed slots.
     stolen: usize,
+    /// Active scheduling policy: `FifoSteal` keeps the PR-7 single-batch
+    /// steal path bit-for-bit; the slack arms use multi-item scans, and
+    /// `SlackPreempt` additionally checkpoints cache-hot lanes.
+    policy: SchedPolicy,
+    /// Shared slack estimator (ranking steals, judging preemption).
+    sched: Arc<SlackScheduler>,
+    /// Checkpointed lanes parked by preemption, resumed FIFO as slots
+    /// free. Always drained: `resume` re-offers every parked checkpoint,
+    /// so an engine run never exits with work still parked.
+    parked: Vec<LaneCheckpoint>,
+    /// Tags already preempted once this run — a lane is never preempted
+    /// twice, which bounds checkpoint traffic per request.
+    preempted_tags: Vec<u64>,
 }
 
 impl ServeFeeder<'_> {
     fn lane_for(&mut self, r: ServeRequest) -> AdmittedLane {
-        let accel = accel_for(&self.accel_name, self.info, r.steps, self.cache.clone());
+        let steps = r.effective_steps();
+        let accel = accel_for(&self.accel_name, self.info, steps, self.cache.clone());
         let req = GenRequest {
             cond: r.cond.clone(),
             seed: r.seed,
             guidance: r.guidance,
-            steps: r.steps,
+            steps,
             edge: None,
         };
+        // admission-time queue slack, shifted into a unitless linear
+        // histogram (negative slack = left half; the clamp bounds ±inf)
+        let slack = self.sched.slack_ms(&r, Instant::now());
+        lock_metrics(self.metrics).observe_linear(
+            "queue_slack_shifted",
+            slack.clamp(-QUEUE_SLACK_HALF_MS, QUEUE_SLACK_HALF_MS) + QUEUE_SLACK_HALF_MS,
+            2.0 * QUEUE_SLACK_HALF_MS,
+            40,
+        );
         let tag = self.inflight.len() as u64;
         self.inflight.push(Some(r));
         AdmittedLane { req, accel, tag }
@@ -737,9 +930,27 @@ impl LaneFeeder for ServeFeeder<'_> {
             out.push(self.lane_for(r));
         }
         if out.len() < free {
-            let extra =
-                self.queue
-                    .steal_compatible(&self.model, &self.accel_name, free - out.len());
+            let want = free - out.len();
+            let extra = match self.policy {
+                SchedPolicy::FifoSteal => {
+                    self.queue.steal_compatible(&self.model, &self.accel_name, want)
+                }
+                SchedPolicy::Slack | SchedPolicy::SlackPreempt => {
+                    let now = Instant::now();
+                    let sched = &self.sched;
+                    let rank = move |r: &ServeRequest| sched.slack_ms(r, now);
+                    let (extra, scanned) =
+                        self.queue.steal_scan(&self.model, &self.accel_name, want, Some(&rank));
+                    if let Some(rec) = self.recorder.as_ref() {
+                        rec.note_steal_scan(scanned as u32, extra.len() as u32);
+                    }
+                    if extra.len() > 1 {
+                        lock_metrics(self.metrics)
+                            .inc("steal_multi_admitted", extra.len() as u64);
+                    }
+                    extra
+                }
+            };
             if !extra.is_empty() {
                 self.stolen += extra.len();
                 if let Some(rec) = self.recorder.as_ref() {
@@ -753,11 +964,84 @@ impl LaneFeeder for ServeFeeder<'_> {
         out
     }
 
+    /// Preemption planning (SlackPreempt only): when the engine is
+    /// saturated and the queue holds a compatible request whose slack has
+    /// gone negative, nominate cache-hot (verified-plan-replaying),
+    /// slack-positive lanes for checkpointing — at most one nomination
+    /// per urgent queued request, and no lane twice per run.
+    fn plan_preemptions(&mut self, lanes: &[LaneStatus]) -> Vec<(u64, f64)> {
+        if self.policy != SchedPolicy::SlackPreempt
+            || !self.seed.is_empty()
+            || lanes.len() < self.capacity
+        {
+            return Vec::new();
+        }
+        let now = Instant::now();
+        let sched = self.sched.clone();
+        let slack_of = move |r: &ServeRequest| sched.slack_ms(r, now);
+        let (urgent, worst_slack) =
+            self.queue.urgent_compatible(&self.model, &self.accel_name, &slack_of);
+        if urgent == 0 {
+            return Vec::new();
+        }
+        let mut victims = Vec::new();
+        for ls in lanes {
+            if victims.len() >= urgent {
+                break;
+            }
+            if !ls.replaying || self.preempted_tags.contains(&ls.tag) {
+                continue;
+            }
+            // the victim itself must stay meetable after parking: its
+            // remaining steps are known exactly, costed conservatively
+            // as all-fresh
+            let pausable = self
+                .inflight
+                .get(ls.tag as usize)
+                .and_then(|s| s.as_ref())
+                .is_some_and(|req| {
+                    self.sched.slack_with_nfe(req, ls.steps - ls.step, now) > 0.0
+                });
+            if pausable {
+                victims.push((ls.tag, worst_slack));
+            }
+        }
+        victims
+    }
+
+    fn preempted(&mut self, ckpt: LaneCheckpoint) {
+        self.preempted_tags.push(ckpt.tag());
+        lock_metrics(self.metrics).inc("lanes_preempted", 1);
+        self.parked.push(ckpt);
+    }
+
+    fn resume(&mut self, mut free: usize) -> Vec<(LaneCheckpoint, f64)> {
+        // seed/steal admission gets first claim on freed slots (that is
+        // what the preemption bought); leftovers resume parked lanes FIFO
+        let mut out = Vec::new();
+        while free > 0 && !self.parked.is_empty() {
+            let ckpt = self.parked.remove(0);
+            let now = Instant::now();
+            let slack = self
+                .inflight
+                .get(ckpt.tag() as usize)
+                .and_then(|s| s.as_ref())
+                .map_or(f64::INFINITY, |req| {
+                    self.sched.slack_with_nfe(req, ckpt.steps() - ckpt.step(), now)
+                });
+            lock_metrics(self.metrics).inc("lanes_resumed", 1);
+            out.push((ckpt, slack));
+            free -= 1;
+        }
+        out
+    }
+
     fn complete(&mut self, tag: u64, result: GenResult) {
         let Some(slot) = self.inflight.get_mut(tag as usize) else { return };
         let Some(req) = slot.take() else { return };
         let latency_ms = req.submitted_at.elapsed().as_secs_f64() * 1e3;
         self.width.record(&result.stats.outcome);
+        self.sched.observe_cost(result.stats.wall_ms, result.stats.nfe);
         {
             let mut m = lock_metrics(self.metrics);
             m.observe_ms("e2e_latency", latency_ms);
@@ -792,6 +1076,7 @@ fn execute_continuous(
     stores: &PlanStores,
     width: &Arc<DivergenceAdaptiveWidth>,
     recorder: &Option<Arc<FlightRecorder>>,
+    sched: &Arc<SlackScheduler>,
 ) -> Result<()> {
     let WorkItem { model, requests, ready_at: _ } = item;
     let Some(head) = requests.first() else {
@@ -814,6 +1099,9 @@ fn execute_continuous(
     let cache = stores
         .get(&model)
         .map(|s| (s.clone(), schedule_fingerprint(solver.name(), &schedule)));
+    if let Some((_, fp)) = &cache {
+        sched.note_fp(&model, *fp);
+    }
     // slots: at least the seed batch, up to the largest compiled bucket
     // (full-bucket launches stay reachable as steals refill the engine)
     let capacity = cfg
@@ -836,6 +1124,10 @@ fn execute_continuous(
         seed: requests.into(),
         inflight: Vec::new(),
         stolen: 0,
+        policy: cfg.sched_policy,
+        sched: sched.clone(),
+        parked: Vec::new(),
+        preempted_tags: Vec::new(),
     };
     let t0 = Instant::now();
     let stats = pipe.generate_continuous(capacity, &mut feeder)?;
@@ -951,6 +1243,7 @@ mod tests {
             accel: accel.into(),
             slo_ms: None,
             variant_hint: None,
+            step_budget: None,
             submitted_at: Instant::now(),
             reply: tx,
         }
@@ -1007,6 +1300,87 @@ mod tests {
         assert_eq!(q.steal_compatible("m", "baseline", 4).len(), 1);
         assert!(pusher.join().unwrap());
         assert_eq!(q.pop().unwrap().requests.len(), 1);
+    }
+
+    fn item_of(reqs: Vec<ServeRequest>) -> WorkItem {
+        WorkItem { model: "m".into(), requests: reqs, ready_at: Instant::now() }
+    }
+
+    #[test]
+    fn steal_scan_fills_all_free_slots_across_batches() {
+        let q = WorkQueue::new(1, 8);
+        q.push(item_of(vec![sreq(0, "baseline"), sreq(1, "baseline")]));
+        q.push(item_of(vec![sreq(2, "sada")]));
+        q.push(item_of(vec![sreq(3, "baseline"), sreq(4, "baseline")]));
+        // unranked: queue order past the front batch, skipping the
+        // incompatible sada batch, filling every free slot in one pass
+        let (got, scanned) = q.steal_scan("m", "baseline", 3, None);
+        assert_eq!(got.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![0, 1, 3]);
+        assert_eq!(scanned, 3, "every queued batch is scanned");
+        // the remainder keeps its position; the emptied batches are gone
+        let (rest, scanned) = q.steal_scan("m", "baseline", 4, None);
+        assert_eq!(rest.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![4]);
+        assert_eq!(scanned, 2, "emptied batches left the queue");
+        assert_eq!(q.steal_scan("m", "sada", 4, None).0.len(), 1);
+        assert!(q.steal_scan("m", "baseline", 0, None).0.is_empty());
+        q.close();
+        assert!(q.pop().is_none(), "fully-stolen batches leave the queue");
+    }
+
+    #[test]
+    fn steal_scan_rank_overrides_queue_order_and_stays_stable_on_ties() {
+        let q = WorkQueue::new(1, 8);
+        q.push(item_of(vec![sreq(0, "baseline"), sreq(1, "baseline")]));
+        q.push(item_of(vec![sreq(2, "baseline")]));
+        // lowest score first: rank by descending id => steal order 2, 1, 0
+        let rank = |r: &ServeRequest| -(r.id.0 as f64);
+        let (got, _) = q.steal_scan("m", "baseline", 2, Some(&rank));
+        assert_eq!(got.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![2, 1]);
+        // ties keep FIFO queue order (stable sort)
+        let q = WorkQueue::new(1, 8);
+        q.push(item_of(vec![sreq(5, "baseline")]));
+        q.push(item_of(vec![sreq(6, "baseline")]));
+        let flat = |_: &ServeRequest| 1.0;
+        let (got, _) = q.steal_scan("m", "baseline", 2, Some(&flat));
+        assert_eq!(got.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![5, 6]);
+    }
+
+    #[test]
+    fn steal_scan_wakes_a_blocked_pusher_per_emptied_batch() {
+        let q = Arc::new(WorkQueue::new(1, 1));
+        q.push(item_of(vec![sreq(0, "baseline")]));
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || {
+            q2.push(item_of(vec![sreq(1, "baseline")]));
+            true
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!pusher.is_finished(), "push past capacity must block");
+        let (got, _) = q.steal_scan("m", "baseline", 4, None);
+        assert_eq!(got.len(), 1);
+        assert!(pusher.join().unwrap(), "emptied batch must wake the pusher");
+        assert_eq!(q.pop().unwrap().requests.len(), 1);
+    }
+
+    #[test]
+    fn urgent_compatible_counts_negative_slack_and_reports_the_worst() {
+        let q = WorkQueue::new(1, 8);
+        q.push(item_of(vec![sreq(0, "baseline"), sreq(1, "baseline")]));
+        q.push(item_of(vec![sreq(2, "sada")]));
+        q.push(item_of(vec![sreq(3, "baseline")]));
+        let slack = |r: &ServeRequest| match r.id.0 {
+            0 => -5.0,
+            3 => -2.0,
+            _ => 40.0,
+        };
+        let (n, worst) = q.urgent_compatible("m", "baseline", &slack);
+        assert_eq!(n, 2, "only negative-slack compatible requests count");
+        assert_eq!(worst, -5.0);
+        // read-only: nothing moved
+        assert_eq!(q.steal_scan("m", "baseline", 8, None).0.len(), 3);
+        let (n, worst) = q.urgent_compatible("m", "deepcache", &slack);
+        assert_eq!(n, 0);
+        assert_eq!(worst, f64::INFINITY);
     }
 
     #[test]

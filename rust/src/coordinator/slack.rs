@@ -1,0 +1,232 @@
+//! Deadline-slack estimation for admission and preemption.
+//!
+//! Every scheduling decision in the slack-aware policies reduces to one
+//! score: `slack = deadline − now − estimated_remaining_cost`. The deadline
+//! comes from the request's SLO; the remaining cost is the expected number
+//! of *fresh* model evaluations (NFE) times a learned per-evaluation cost:
+//!
+//! * a request whose plan-cache signature has a recorded plan is expected
+//!   to pay that plan's fresh NFE (cache-hot traffic is cheap, so it fits
+//!   into tight slack windows);
+//! * a cold request conservatively assumes the full step count;
+//! * an AdaDiff-style [`ServeRequest::step_budget`] caps both (a budgeted
+//!   request never pays more steps than its budget).
+//!
+//! The per-NFE cost is an EWMA over completed lanes (`observe_cost`), fed
+//! by every worker and shared coordinator-wide, so the estimate tracks the
+//! actual hardware without configuration. Until the first completion a
+//! conservative prior applies; until a worker reports its (solver,
+//! schedule) fingerprint (`note_fp`), signature probes miss and every
+//! request is costed cold — both failure modes only make slack estimates
+//! pessimistic, never wrong-sided enough to starve a request (scheduling
+//! is a policy layer; execution order never changes results).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::request::ServeRequest;
+use crate::plancache::{PlanStore, RequestKey};
+
+/// Cost prior (ms per fresh model evaluation) before any completion has
+/// been observed. Deliberately modest: on the tiny test models a step is
+/// well under a millisecond, and an overestimate only makes the scheduler
+/// treat requests as more urgent than they are.
+const PRIOR_MS_PER_NFE: f64 = 1.0;
+/// EWMA weight of each new cost observation.
+const COST_ALPHA: f64 = 0.2;
+
+pub struct SlackScheduler {
+    /// Per-model plan stores (shared with the workers) for expected-NFE
+    /// probes on plan-signature hits.
+    stores: HashMap<String, Arc<PlanStore>>,
+    /// Per-model (solver, schedule) fingerprint, reported by the first
+    /// worker to open the model's backend. 0 = not yet known (probes miss,
+    /// requests are costed cold — conservative).
+    fps: HashMap<String, AtomicU64>,
+    /// EWMA milliseconds per fresh model evaluation, stored as f64 bits.
+    cost_ms_bits: AtomicU64,
+}
+
+impl SlackScheduler {
+    pub fn new(stores: &HashMap<String, Arc<PlanStore>>) -> Self {
+        Self {
+            stores: stores.clone(),
+            fps: stores.keys().map(|m| (m.clone(), AtomicU64::new(0))).collect(),
+            cost_ms_bits: AtomicU64::new(PRIOR_MS_PER_NFE.to_bits()),
+        }
+    }
+
+    /// A worker learned `model`'s (solver, schedule) fingerprint. Until
+    /// this is called, plan-signature probes for the model miss and its
+    /// requests are costed at full NFE.
+    pub fn note_fp(&self, model: &str, fp: u64) {
+        if let Some(slot) = self.fps.get(model) {
+            slot.store(fp, Ordering::Relaxed);
+        }
+    }
+
+    /// Fold a completed lane's measured cost into the per-NFE EWMA.
+    pub fn observe_cost(&self, wall_ms: f64, nfe: usize) {
+        if nfe == 0 || !wall_ms.is_finite() || wall_ms <= 0.0 {
+            return;
+        }
+        let sample = wall_ms / nfe as f64;
+        // racy read-modify-write is fine: this is a smoothing estimate, a
+        // lost update just weights one observation less
+        let prev = f64::from_bits(self.cost_ms_bits.load(Ordering::Relaxed));
+        let next = prev + COST_ALPHA * (sample - prev);
+        self.cost_ms_bits.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn ms_per_nfe(&self) -> f64 {
+        f64::from_bits(self.cost_ms_bits.load(Ordering::Relaxed))
+    }
+
+    /// Expected fresh model evaluations for `req`: the recorded plan's NFE
+    /// on a plan-signature hit, the full (budget-capped) step count
+    /// otherwise.
+    pub fn expected_nfe(&self, req: &ServeRequest) -> usize {
+        let steps = req.effective_steps();
+        let cached = self.stores.get(&req.model).and_then(|store| {
+            let fp = self.fps.get(&req.model)?.load(Ordering::Relaxed);
+            if fp == 0 {
+                return None;
+            }
+            let key =
+                RequestKey::new(&req.model, fp, steps, req.guidance, req.cond.data());
+            store.expected_nfe(&key)
+        });
+        match cached {
+            Some(nfe) => nfe.min(steps),
+            None => steps,
+        }
+    }
+
+    /// Estimated remaining execution cost of `req` in milliseconds.
+    pub fn est_cost_ms(&self, req: &ServeRequest) -> f64 {
+        self.expected_nfe(req) as f64 * self.ms_per_nfe()
+    }
+
+    /// Deadline slack in milliseconds: time remaining until the SLO
+    /// deadline minus the estimated cost of serving the request. Negative
+    /// = the request is already expected to miss unless it runs now;
+    /// `+inf` = no SLO (patient work never preempts anything).
+    pub fn slack_ms(&self, req: &ServeRequest, now: Instant) -> f64 {
+        let Some(slo) = req.slo_ms else { return f64::INFINITY };
+        let elapsed_ms = now.duration_since(req.submitted_at).as_secs_f64() * 1e3;
+        slo - elapsed_ms - self.est_cost_ms(req)
+    }
+
+    /// [`SlackScheduler::slack_ms`] with an explicit remaining-evaluation
+    /// count — the mid-flight form used to judge preemption victims, where
+    /// the remaining steps are known exactly (costed conservatively as all
+    /// fresh: a victim judged pausable under the worst case stays
+    /// pausable under replay skips).
+    pub fn slack_with_nfe(&self, req: &ServeRequest, nfe_remaining: usize, now: Instant) -> f64 {
+        let Some(slo) = req.slo_ms else { return f64::INFINITY };
+        let elapsed_ms = now.duration_since(req.submitted_at).as_secs_f64() * 1e3;
+        slo - elapsed_ms - nfe_remaining as f64 * self.ms_per_nfe()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestId;
+    use crate::plancache::store::{Directive, RecordedPlan};
+    use crate::tensor::Tensor;
+    use std::sync::mpsc;
+
+    fn sched_with(model: &str, cap: usize) -> (SlackScheduler, Arc<PlanStore>) {
+        let store = Arc::new(PlanStore::new(cap));
+        let mut stores = HashMap::new();
+        stores.insert(model.to_string(), store.clone());
+        (SlackScheduler::new(&stores), store)
+    }
+
+    fn req(model: &str, steps: usize, slo_ms: Option<f64>) -> ServeRequest {
+        let (tx, _rx) = mpsc::channel();
+        ServeRequest {
+            id: RequestId(0),
+            model: model.into(),
+            cond: Tensor::zeros(&[1, 4]),
+            seed: 0,
+            steps,
+            guidance: 2.0,
+            accel: "sada-cache".into(),
+            slo_ms,
+            variant_hint: None,
+            step_budget: None,
+            submitted_at: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn cold_requests_cost_full_steps_and_budgets_tighten() {
+        let (s, _) = sched_with("m", 8);
+        let r = req("m", 40, None);
+        assert_eq!(s.expected_nfe(&r), 40);
+        let mut b = req("m", 40, None);
+        b.step_budget = Some(12);
+        assert_eq!(b.effective_steps(), 12);
+        assert_eq!(s.expected_nfe(&b), 12);
+        let mut z = req("m", 40, None);
+        z.step_budget = Some(0);
+        assert_eq!(z.effective_steps(), 1, "budget floors at one step");
+    }
+
+    #[test]
+    fn plan_hits_tighten_the_estimate_once_fp_is_known() {
+        let (s, store) = sched_with("m", 8);
+        let r = req("m", 20, None);
+        let key = RequestKey::new("m", 77, 20, r.guidance, r.cond.data());
+        store.insert(
+            key,
+            RecordedPlan {
+                n_steps: 20,
+                directives: vec![Directive::Full; 20],
+                masks: Vec::new(),
+                verdicts: Vec::new(),
+                early_signs: Vec::new(),
+                nfe: 7,
+            },
+        );
+        // fingerprint unknown: probe misses, cold estimate
+        assert_eq!(s.expected_nfe(&r), 20);
+        s.note_fp("m", 77);
+        assert_eq!(s.expected_nfe(&r), 7);
+        // unknown models stay cold-costed rather than panicking
+        assert_eq!(s.expected_nfe(&req("other", 15, None)), 15);
+    }
+
+    #[test]
+    fn slack_orders_by_deadline_minus_cost() {
+        let (s, _) = sched_with("m", 8);
+        // same SLO, cheaper request => more slack
+        let a = req("m", 30, Some(100.0));
+        let mut b = req("m", 30, Some(100.0));
+        b.step_budget = Some(5);
+        assert!(s.slack_ms(&b, Instant::now()) > s.slack_ms(&a, Instant::now()));
+        // no SLO => infinite slack (never urgent)
+        assert_eq!(s.slack_ms(&req("m", 30, None), Instant::now()), f64::INFINITY);
+        // unmeetable SLO => negative slack
+        assert!(s.slack_ms(&req("m", 30, Some(0.001)), Instant::now()) < 0.0);
+    }
+
+    #[test]
+    fn cost_ewma_tracks_observations() {
+        let (s, _) = sched_with("m", 8);
+        let prior = s.ms_per_nfe();
+        for _ in 0..64 {
+            s.observe_cost(50.0, 10); // 5 ms per evaluation
+        }
+        assert!((s.ms_per_nfe() - 5.0).abs() < 0.1, "EWMA converges to 5ms");
+        s.observe_cost(f64::NAN, 10);
+        s.observe_cost(10.0, 0);
+        assert!((s.ms_per_nfe() - 5.0).abs() < 0.1, "bad samples are ignored");
+        assert!(prior > 0.0);
+    }
+}

@@ -6,7 +6,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
+use crate::coordinator::{Coordinator, CoordinatorConfig, SchedPolicy, ServeRequest};
 use crate::coordinator::request::RequestId;
 use crate::pipeline::lanes::LaneMode;
 use crate::pipeline::{Accelerator, CacheOutcome, GenRequest, Pipeline};
@@ -76,6 +76,7 @@ pub fn drive(
             accel: accel.to_string(),
             slo_ms: None,
             variant_hint: None,
+            step_budget: None,
             submitted_at: Instant::now(),
             reply: reply_tx.clone(),
         })?;
@@ -153,6 +154,7 @@ pub fn drive_mixed(
             accel: "sada".to_string(),
             slo_ms: None,
             variant_hint: None,
+            step_budget: None,
             submitted_at: Instant::now(),
             reply: reply_tx.clone(),
         })?;
@@ -732,6 +734,7 @@ pub fn run_continuous_sweep(
             accel: "baseline".to_string(),
             slo_ms: Some(slo_for(i as u64)),
             variant_hint: None,
+            step_budget: None,
             submitted_at: Instant::now(),
             reply: reply_tx.clone(),
         })?;
@@ -1010,5 +1013,370 @@ pub fn run_scaling(
         }
     }
     table.print();
+    Ok(())
+}
+
+/// Submit one request into a scheduler-sweep coordinator pass.
+#[allow(clippy::too_many_arguments)]
+fn submit_sched(
+    coord: &Coordinator,
+    tx: &mpsc::Sender<crate::coordinator::ServeResponse>,
+    model: &str,
+    bank: &PromptBank,
+    id: u64,
+    uniq: usize,
+    steps: usize,
+    slo_ms: Option<f64>,
+) -> Result<()> {
+    coord.submit(ServeRequest {
+        id: RequestId(id),
+        model: model.to_string(),
+        cond: bank.get(uniq).clone(),
+        seed: bank.seed_for(uniq),
+        steps,
+        guidance: 3.0,
+        accel: "sada-cache".to_string(),
+        slo_ms,
+        variant_hint: None,
+        step_budget: None,
+        submitted_at: Instant::now(),
+        reply: tx.clone(),
+    })
+}
+
+/// Scheduler-policy sweep: the same saturated, heterogeneous, bimodal-SLO
+/// workload driven through a continuous-mode coordinator once per
+/// [`SchedPolicy`] arm — FIFO-steal vs slack-ranked vs slack+preemption.
+///
+/// Workload shape, per arm:
+///   * phase 1: `n_exp` expensive cold "sada-cache" requests (8x
+///     `steps_base`), drained to completion — this records every skip
+///     plan and warms the slack scheduler's cost estimator;
+///   * phase 2: the same `n_exp` requests resubmitted (cache-hot verified
+///     replays — the preemption victims), then, once the replay wave is
+///     mid-flight, 4 tight-deadline requests and 2 urgent ones
+///     (`steps_base` steps, cache-cold) land behind them in the queue.
+///
+/// Tight deadlines are calibrated from a measured FIFO pass (a fraction
+/// of the observed FIFO latency), so the bars self-adapt to machine
+/// speed: FIFO serves the late arrivals last and misses, slack ranking
+/// steals them into the first freed slots and meets, and the preemption
+/// arm additionally checkpoints cache-hot lanes the moment the urgent
+/// deadlines' slack goes negative (their SLO is unmeetable by
+/// construction, the same trick the continuous sweep uses, so the
+/// trigger itself is machine-independent). The sweep enforces its own
+/// acceptance bars — strict SLO-attainment win for slack+preemption over
+/// FIFO-steal, at least one preemption with every checkpointed lane
+/// resumed, multi-item steals observed, a strict urgent-latency win, and
+/// every response (preempted-and-resumed lanes included) bit-identical
+/// to a solo `Pipeline::generate` run — and stamps the `scheduler`
+/// section of BENCH_serving.json.
+pub fn run_scheduler_sweep(
+    artifacts: &str,
+    model: &str,
+    n_exp: usize,
+    steps_base: usize,
+) -> Result<()> {
+    const N_MID: usize = 4;
+    const N_URG: usize = 2;
+    /// Tight ("mid") deadlines sit at this fraction of the calibrated
+    /// FIFO latency: low enough that FIFO's last-in-line service misses
+    /// with margin, high enough that first-freed-slot service meets.
+    const MID_SLO_FRAC: f64 = 0.75;
+    /// Urgent deadline: unmeetable by construction, so queue slack is
+    /// negative from the moment the request is visible — a
+    /// machine-independent preemption trigger.
+    const URG_SLO_MS: f64 = 0.01;
+
+    anyhow::ensure!(
+        (16..=512).contains(&n_exp) && n_exp % 8 == 0,
+        "scheduler sweep needs n_exp in 16..=512 and divisible by 8 \
+         (two workers x bucket-4 waves), got {n_exp}"
+    );
+    anyhow::ensure!(steps_base >= 4, "steps_base must be >= 4, got {steps_base}");
+    let steps_exp = 8 * steps_base;
+
+    let rt = Runtime::open(artifacts)?;
+    rt.preload_model(model)?;
+    let backend = rt.model_backend(model)?;
+    let solver = if backend.info().predict == "v" {
+        SolverKind::Flow
+    } else {
+        SolverKind::DpmPP
+    };
+    let pipe = Pipeline::with_schedule(&backend, solver, rt.manifest.schedule.to_schedule());
+    let bank =
+        PromptBank::load_or_synthetic(std::path::Path::new(artifacts), rt.manifest.cond_dim);
+
+    // Solo references: plain SADA is the bit-identity referee for every
+    // "sada-cache" serving path (cold runs record plain-SADA decisions,
+    // warm runs replay them verified — the plancache sweep's invariant).
+    // Unique requests: 0..n_exp expensive, then N_MID tight, then N_URG
+    // urgent (distinct conds, so phase 1 is fully cache-cold).
+    let n_uniq = n_exp + N_MID + N_URG;
+    let steps_of = |u: usize| if u < n_exp { steps_exp } else { steps_base };
+    let mut refs: Vec<Vec<f32>> = Vec::with_capacity(n_uniq);
+    for u in 0..n_uniq {
+        let req = GenRequest {
+            cond: bank.get(u).clone(),
+            seed: bank.seed_for(u),
+            guidance: 3.0,
+            steps: steps_of(u),
+            edge: None,
+        };
+        let mut accel = Sada::with_default(backend.info(), steps_of(u));
+        refs.push(pipe.generate(&req, &mut accel)?.image.data().to_vec());
+    }
+    // Request-id map: phase-1 expensive = u, phase-2 replay = 1000+u,
+    // tight = 2000+j, urgent = 3000+k (n_exp <= 512 keeps bands disjoint).
+    let uniq_of = |id: u64| -> usize {
+        match id {
+            0..=999 => id as usize,
+            1000..=1999 => (id - 1000) as usize,
+            2000..=2999 => n_exp + (id - 2000) as usize,
+            _ => n_exp + N_MID + (id - 3000) as usize,
+        }
+    };
+
+    struct ArmOut {
+        mid_lat: Vec<f64>,
+        urg_lat: Vec<f64>,
+        /// Fastest phase-2 replay latency: ~one warm wave (the calibration
+        /// pass uses it to size the tight-arrival injection delay).
+        warm_first_exp_ms: f64,
+        wall_ms: f64,
+        preempted: f64,
+        resumed: f64,
+        steal_multi: f64,
+        occupancy: f64,
+    }
+
+    let run_arm = |policy: SchedPolicy,
+                   slo_mid: Option<f64>,
+                   inject_after_ms: f64|
+     -> Result<ArmOut> {
+        let cfg = CoordinatorConfig {
+            artifacts_dir: artifacts.to_string(),
+            models: vec![model.to_string()],
+            solver: SolverKind::DpmPP,
+            // one bucket: engine capacity 4 per worker, and exactly
+            // n_exp/4 expensive work items so the late arrivals stay
+            // visible in the bounded work queue (2 popped + 2 queued)
+            batch_buckets: vec![4],
+            max_wait_ms: 20.0,
+            queue_cap: 512,
+            n_workers: 2,
+            continuous: true,
+            sched_policy: policy,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(cfg)?;
+        let (tx, rx) = mpsc::channel();
+        let verify = |resp: &crate::coordinator::ServeResponse| -> Result<()> {
+            let u = uniq_of(resp.id.0);
+            anyhow::ensure!(
+                resp.image.data() == refs[u].as_slice(),
+                "request {} ({policy:?}) not bit-identical to its solo run",
+                resp.id.0
+            );
+            Ok(())
+        };
+        let t0 = Instant::now();
+        // phase 1: cold expensive wave — records plans, warms cost EWMA
+        for u in 0..n_exp {
+            submit_sched(&coord, &tx, model, &bank, u as u64, u, steps_exp, None)?;
+        }
+        for _ in 0..n_exp {
+            verify(&rx.recv()?)?;
+        }
+        // phase 2: cache-hot replay wave, then late tight/urgent arrivals
+        // once the replays are mid-flight
+        for u in 0..n_exp {
+            submit_sched(&coord, &tx, model, &bank, 1000 + u as u64, u, steps_exp, None)?;
+        }
+        std::thread::sleep(Duration::from_secs_f64(inject_after_ms / 1e3));
+        for j in 0..N_MID {
+            let id = 2000 + j as u64;
+            submit_sched(&coord, &tx, model, &bank, id, n_exp + j, steps_base, slo_mid)?;
+        }
+        for k in 0..N_URG {
+            submit_sched(
+                &coord,
+                &tx,
+                model,
+                &bank,
+                3000 + k as u64,
+                n_exp + N_MID + k,
+                steps_base,
+                Some(URG_SLO_MS),
+            )?;
+        }
+        drop(tx);
+        let (mut mid_lat, mut urg_lat) = (Vec::new(), Vec::new());
+        let mut warm_first = f64::INFINITY;
+        let mut got = 0usize;
+        while let Ok(resp) = rx.recv() {
+            verify(&resp)?;
+            match resp.id.0 {
+                1000..=1999 => warm_first = warm_first.min(resp.latency_ms),
+                2000..=2999 => mid_lat.push(resp.latency_ms),
+                3000.. => urg_lat.push(resp.latency_ms),
+                _ => {}
+            }
+            got += 1;
+        }
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let metrics_text = coord.metrics_text();
+        coord.shutdown()?;
+        anyhow::ensure!(
+            got == n_exp + N_MID + N_URG,
+            "{policy:?}: phase 2 returned {got} of {} replies",
+            n_exp + N_MID + N_URG
+        );
+        anyhow::ensure!(
+            mid_lat.len() == N_MID && urg_lat.len() == N_URG && warm_first.is_finite(),
+            "{policy:?}: reply classes incomplete"
+        );
+        let grab = |prefix: &str| -> f64 {
+            metrics_text
+                .lines()
+                .find_map(|l| l.strip_prefix(prefix))
+                .and_then(|v| v.trim().parse().ok())
+                .unwrap_or(0.0)
+        };
+        Ok(ArmOut {
+            mid_lat,
+            urg_lat,
+            warm_first_exp_ms: warm_first,
+            wall_ms,
+            preempted: grab("sada_lanes_preempted_total "),
+            resumed: grab("sada_lanes_resumed_total "),
+            steal_multi: grab("sada_steal_multi_admitted_total "),
+            occupancy: grab("sada_continuous_occupancy "),
+        })
+    };
+
+    // Calibration pass (FIFO, no deadline pressure): measures what
+    // last-in-line service costs on this machine, which sizes the tight
+    // SLO and the injection delay for the scored arms.
+    let cal = run_arm(SchedPolicy::FifoSteal, None, 2.0)?;
+    let fifo_mid_min = cal.mid_lat.iter().copied().fold(f64::INFINITY, f64::min);
+    let slo_mid = MID_SLO_FRAC * fifo_mid_min;
+    let inject_after_ms = (0.2 * cal.warm_first_exp_ms).clamp(2.0, 25.0);
+    anyhow::ensure!(
+        slo_mid.is_finite() && slo_mid > 0.0,
+        "calibration produced an unusable tight SLO ({slo_mid} ms)"
+    );
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let mut table = Table::new(
+        &format!(
+            "Slack-aware scheduling — {model}, {n_exp} cache-hot replays + {N_MID} tight \
+             (SLO {:.1} ms) + {N_URG} urgent, steps {steps_exp}/{steps_base}",
+            slo_mid
+        ),
+        &["Arm", "Tight met", "Tight mean ms", "Urgent mean ms", "Preempted", "Multi-steals", "Occupancy", "Wall ms"],
+    );
+    let mut arms_json: Vec<Json> = Vec::new();
+    let mut outs: Vec<(&str, ArmOut)> = Vec::new();
+    for (policy, name) in [
+        (SchedPolicy::FifoSteal, "fifo-steal"),
+        (SchedPolicy::Slack, "slack"),
+        (SchedPolicy::SlackPreempt, "slack+preempt"),
+    ] {
+        let out = run_arm(policy, Some(slo_mid), inject_after_ms)?;
+        let met = out.mid_lat.iter().filter(|&&l| l <= slo_mid).count();
+        table.row(vec![
+            name.into(),
+            format!("{met}/{N_MID}"),
+            f2(mean(&out.mid_lat)),
+            f2(mean(&out.urg_lat)),
+            format!("{}", out.preempted as u64),
+            format!("{}", out.steal_multi as u64),
+            f3(out.occupancy),
+            f2(out.wall_ms),
+        ]);
+        arms_json.push(Json::obj(vec![
+            ("arm", Json::str(name)),
+            ("tight_met", Json::num(met as f64)),
+            ("attainment", Json::num(met as f64 / (N_MID + N_URG) as f64)),
+            ("tight_mean_ms", Json::num(mean(&out.mid_lat))),
+            ("urgent_mean_ms", Json::num(mean(&out.urg_lat))),
+            ("first_warm_replay_ms", Json::num(out.warm_first_exp_ms)),
+            ("preempted", Json::num(out.preempted)),
+            ("resumed", Json::num(out.resumed)),
+            ("steal_multi_admitted", Json::num(out.steal_multi)),
+            ("occupancy", Json::num(out.occupancy)),
+            ("wall_ms", Json::num(out.wall_ms)),
+        ]));
+        outs.push((name, out));
+    }
+    table.print();
+
+    // acceptance bars — the sweep is self-checking
+    let met_of = |o: &ArmOut| o.mid_lat.iter().filter(|&&l| l <= slo_mid).count();
+    let (fifo, slack, pre) = (&outs[0].1, &outs[1].1, &outs[2].1);
+    anyhow::ensure!(
+        met_of(pre) > met_of(fifo),
+        "slack+preempt must strictly beat fifo-steal on SLO attainment \
+         ({} vs {} of {N_MID} tight deadlines met)",
+        met_of(pre),
+        met_of(fifo)
+    );
+    anyhow::ensure!(
+        met_of(slack) >= met_of(fifo),
+        "slack ranking must not lose deadlines to fifo-steal ({} vs {})",
+        met_of(slack),
+        met_of(fifo)
+    );
+    anyhow::ensure!(
+        pre.preempted >= 1.0 && pre.resumed == pre.preempted,
+        "preemption arm must checkpoint at least one lane and resume every \
+         one (preempted {}, resumed {})",
+        pre.preempted,
+        pre.resumed
+    );
+    anyhow::ensure!(
+        fifo.preempted == 0.0 && slack.preempted == 0.0,
+        "only the SlackPreempt arm may preempt"
+    );
+    anyhow::ensure!(
+        slack.steal_multi >= 1.0 && pre.steal_multi >= 1.0,
+        "slack arms must fill multiple slots in one steal scan at least once"
+    );
+    anyhow::ensure!(
+        mean(&pre.urg_lat) < mean(&fifo.urg_lat),
+        "preemption must strictly cut urgent latency ({:.2} vs {:.2} ms)",
+        mean(&pre.urg_lat),
+        mean(&fifo.urg_lat)
+    );
+
+    println!(
+        "Scheduler sweep: tight deadlines met {}/{N_MID} (fifo) -> {}/{N_MID} (slack) -> \
+         {}/{N_MID} (slack+preempt); {} preemption(s), all resumed, every reply \
+         bit-identical to its solo run",
+        met_of(fifo),
+        met_of(slack),
+        met_of(pre),
+        pre.preempted as u64
+    );
+
+    let mut bench = BenchJson::open_default();
+    bench.set_section(
+        "scheduler",
+        Json::obj(vec![
+            ("model", Json::str(model)),
+            ("n_expensive", Json::num(n_exp as f64)),
+            ("n_tight", Json::num(N_MID as f64)),
+            ("n_urgent", Json::num(N_URG as f64)),
+            ("steps_base", Json::num(steps_base as f64)),
+            ("slo_tight_ms", Json::num(slo_mid)),
+            ("slo_urgent_ms", Json::num(URG_SLO_MS)),
+            ("inject_after_ms", Json::num(inject_after_ms)),
+            ("bit_identical", Json::Bool(true)),
+            ("arms", Json::Arr(arms_json)),
+        ]),
+    );
+    bench.save_or_warn();
     Ok(())
 }

@@ -192,6 +192,7 @@ pub fn run_trace(
             accel: if i % 2 == 0 { "sada" } else { "baseline" }.to_string(),
             slo_ms: None,
             variant_hint: None,
+            step_budget: None,
             submitted_at: Instant::now(),
             reply: reply_tx.clone(),
         })?;

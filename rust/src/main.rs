@@ -34,6 +34,11 @@ commands:
              prune{k}_b{n} / shallow_b{n} execution vs batch-1 launches on a
              prune-heavy replay trace (mock backend; self-checks bit-identity
              and the >= 2x launch-count cut); writes BENCH_serving.json
+  scheduler  slack-aware scheduling sweep (--model sd2_tiny --n 16 --base 6):
+             FIFO-steal vs slack-ranked vs slack+preemption arms over a
+             saturated cache-hot/cold queue with calibrated bimodal SLOs;
+             self-checks the attainment win, >= 1 preempt-and-resume and
+             bit-identity to solo runs; writes BENCH_serving.json
   trace      flight-recorder demo + self-check (--model sd2_tiny --n 12
              --capacity 3 --base 4): runs a small mixed trace through the
              continuous engine and a continuous-mode coordinator under full
@@ -115,6 +120,12 @@ fn main() -> Result<()> {
             o.usize_or("n", 48),
             o.usize_or("capacity", 4),
             o.usize_or("base", 10),
+        )?,
+        "scheduler" => exp::serving::run_scheduler_sweep(
+            &artifacts,
+            o.str_or("model", "sd2_tiny"),
+            o.usize_or("n", 16),
+            o.usize_or("base", 6),
         )?,
         "serve" => exp::serving::run_with_load(
             &artifacts,

@@ -75,6 +75,30 @@ fn lane_event(tid: u32, e: &Event) -> Option<RawEvent> {
                 args: Json::obj(args),
             })
         }
+        Event::Preempt { tag, step, slack_ms, t_us } => Some(RawEvent {
+            tid,
+            ts: *t_us,
+            dur: None,
+            ph: "i",
+            name: "preempt".to_string(),
+            args: Json::obj(vec![
+                ("tag", Json::num(*tag as f64)),
+                ("step", Json::num(*step as f64)),
+                ("slack_ms", Json::num(finite_or_cap(*slack_ms))),
+            ]),
+        }),
+        Event::Resume { tag, step, slack_ms, t_us } => Some(RawEvent {
+            tid,
+            ts: *t_us,
+            dur: None,
+            ph: "i",
+            name: "resume".to_string(),
+            args: Json::obj(vec![
+                ("tag", Json::num(*tag as f64)),
+                ("step", Json::num(*step as f64)),
+                ("slack_ms", Json::num(finite_or_cap(*slack_ms))),
+            ]),
+        }),
         Event::Complete { tag, outcome, nfe, steps, t_us } => {
             let mut args = vec![
                 ("tag", Json::num(*tag as f64)),
@@ -116,7 +140,30 @@ fn track_event(tid: u32, e: &Event) -> Option<RawEvent> {
             name: "steal".to_string(),
             args: Json::obj(vec![("n", Json::num(*n as f64))]),
         }),
+        Event::StealScan { scanned, admitted, t_us } => Some(RawEvent {
+            tid,
+            ts: *t_us,
+            dur: None,
+            ph: "i",
+            name: "steal_scan".to_string(),
+            args: Json::obj(vec![
+                ("scanned", Json::num(*scanned as f64)),
+                ("admitted", Json::num(*admitted as f64)),
+            ]),
+        }),
         _ => None,
+    }
+}
+
+/// Slack values can be `+inf` (no SLO); JSON has no infinity, so cap at a
+/// sentinel well outside any real deadline.
+fn finite_or_cap(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else if v > 0.0 {
+        1e12
+    } else {
+        -1e12
     }
 }
 
@@ -183,6 +230,8 @@ pub fn chrome_trace(snap: &RecorderSnapshot) -> Json {
                 let tag = match e {
                     Event::Admit { tag, .. }
                     | Event::Step { tag, .. }
+                    | Event::Preempt { tag, .. }
+                    | Event::Resume { tag, .. }
                     | Event::Complete { tag, .. } => *tag,
                     _ => continue,
                 };
@@ -210,6 +259,8 @@ pub fn chrome_trace(snap: &RecorderSnapshot) -> Json {
                 let tag = match e {
                     Event::Admit { tag, .. }
                     | Event::Step { tag, .. }
+                    | Event::Preempt { tag, .. }
+                    | Event::Resume { tag, .. }
                     | Event::Complete { tag, .. } => *tag,
                     _ => continue,
                 };

@@ -134,6 +134,17 @@ pub enum Event {
     },
     /// A worker stole `n` compatible queued requests into freed slots.
     Steal { n: u32, t_us: f64 },
+    /// A lane was checkpointed mid-run at step `step` to make room for
+    /// more urgent queued work; `slack_ms` is the queued work's deadline
+    /// slack that justified the preemption.
+    Preempt { tag: u64, step: u32, slack_ms: f64, t_us: f64 },
+    /// A checkpointed lane re-took a slot, resuming at step `step` (its
+    /// timeline gap is `Preempt.t_us → Resume.t_us`); `slack_ms` is the
+    /// occupant's remaining slack at resume.
+    Resume { tag: u64, step: u32, slack_ms: f64, t_us: f64 },
+    /// A slack-ranked multi-item steal pass: `scanned` queued batches
+    /// examined, `admitted` requests pulled into free slots.
+    StealScan { scanned: u32, admitted: u32, t_us: f64 },
 }
 
 /// Fixed-capacity event ring. Preallocated once (cold), then every push
@@ -312,6 +323,35 @@ impl TraceSession {
         }
     }
 
+    /// A lane slot's occupant was checkpointed out (preemption).
+    pub fn record_preempt(
+        &mut self,
+        slot: usize,
+        tag: u64,
+        step: u32,
+        slack_ms: f64,
+        t_us: f64,
+    ) {
+        if let Some(ring) = self.lanes.get_mut(slot) {
+            ring.push(Event::Preempt { tag, step, slack_ms, t_us });
+        }
+    }
+
+    /// A checkpointed lane resumed into `slot` (possibly a different slot
+    /// than it was preempted from — timelines group by tag).
+    pub fn record_resume(
+        &mut self,
+        slot: usize,
+        tag: u64,
+        step: u32,
+        slack_ms: f64,
+        t_us: f64,
+    ) {
+        if let Some(ring) = self.lanes.get_mut(slot) {
+            ring.push(Event::Resume { tag, step, slack_ms, t_us });
+        }
+    }
+
     /// Fold one engine step's accumulated phase times into the engine
     /// ring, laid out back-to-back ending at `end_us` (the phases of one
     /// step partition its wall time, so consecutive laps tile cleanly),
@@ -480,6 +520,13 @@ impl FlightRecorder {
         let t_us = self.now_us();
         let mut ring = lock_ignore_poison(&self.coord);
         ring.push(Event::Steal { n, t_us });
+    }
+
+    /// Record a slack-ranked multi-item steal pass over the work queue.
+    pub fn note_steal_scan(&self, scanned: u32, admitted: u32) {
+        let t_us = self.now_us();
+        let mut ring = lock_ignore_poison(&self.coord);
+        ring.push(Event::StealScan { scanned, admitted, t_us });
     }
 
     /// Clone out everything recorded so far (finished sessions +

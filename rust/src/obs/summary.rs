@@ -41,6 +41,14 @@ pub struct LaneTimeline {
     pub outcome: Option<CacheOutcome>,
     pub nfe: Option<u32>,
     pub n_steps: Option<u32>,
+    /// Preemption instants: `(step the lane will resume at, t_us,
+    /// slack_ms of the work that displaced it)`.
+    pub preempts: Vec<(u32, f64, f64)>,
+    /// Resume instants: `(step resumed at, t_us, occupant slack_ms)`.
+    /// Preempt/resume may land in different slot rings (a lane can resume
+    /// into another slot), so pairing is by time via
+    /// [`LaneTimeline::gaps`], not by ring order.
+    pub resumes: Vec<(u32, f64, f64)>,
 }
 
 impl LaneTimeline {
@@ -70,6 +78,20 @@ impl LaneTimeline {
 
     pub fn fresh_steps(&self) -> usize {
         self.steps.iter().filter(|s| s.fresh).count()
+    }
+
+    /// Time-paired preemption gaps: `(step, preempt_us, resume_us)`,
+    /// earliest first. A still-parked preemption (no matching resume)
+    /// pairs with `f64::INFINITY`.
+    pub fn gaps(&self) -> Vec<(u32, f64, f64)> {
+        let mut pre = self.preempts.clone();
+        let mut res = self.resumes.clone();
+        pre.sort_by(|a, b| a.1.total_cmp(&b.1));
+        res.sort_by(|a, b| a.1.total_cmp(&b.1));
+        pre.iter()
+            .enumerate()
+            .map(|(k, p)| (p.0, p.1, res.get(k).map_or(f64::INFINITY, |r| r.1)))
+            .collect()
     }
 
     /// Step indices where the stability criterion's sign flipped
@@ -140,6 +162,18 @@ pub fn lane_timelines(snap: &RecorderSnapshot) -> Vec<LaneTimeline> {
                             tl.n_steps = Some(*steps);
                         }
                     }
+                    Event::Preempt { tag, step, slack_ms, t_us } => {
+                        let k = at(&mut tls, *tag);
+                        if let Some(tl) = tls.get_mut(k) {
+                            tl.preempts.push((*step, *t_us, *slack_ms));
+                        }
+                    }
+                    Event::Resume { tag, step, slack_ms, t_us } => {
+                        let k = at(&mut tls, *tag);
+                        if let Some(tl) = tls.get_mut(k) {
+                            tl.resumes.push((*step, *t_us, *slack_ms));
+                        }
+                    }
                     _ => {}
                 }
             }
@@ -208,6 +242,38 @@ pub fn check_timeline(tl: &LaneTimeline) -> Result<()> {
             nfe
         );
     }
+    // preemption gaps: a completed lane resumed every preemption, each
+    // resume follows its preemption at the same step index, and the lane
+    // executed no step inside the gap (the timeline must *show* the pause)
+    anyhow::ensure!(
+        tl.preempts.len() == tl.resumes.len(),
+        "lane {}: {} preemptions vs {} resumes",
+        tl.tag,
+        tl.preempts.len(),
+        tl.resumes.len()
+    );
+    for (step, p_us, r_us) in tl.gaps() {
+        anyhow::ensure!(
+            r_us > p_us,
+            "lane {}: resume at {r_us:.1}us precedes preempt at {p_us:.1}us",
+            tl.tag
+        );
+        let resumed_at = tl
+            .resumes
+            .iter()
+            .find(|r| (r.1 - r_us).abs() < f64::EPSILON)
+            .map_or(step, |r| r.0);
+        anyhow::ensure!(
+            resumed_at == step,
+            "lane {}: preempted at step {step}, resumed at step {resumed_at}",
+            tl.tag
+        );
+        anyhow::ensure!(
+            !tl.steps.iter().any(|s| s.t_us > p_us && s.t_us < r_us),
+            "lane {}: step executed inside the preemption gap {p_us:.1}..{r_us:.1}us",
+            tl.tag
+        );
+    }
     Ok(())
 }
 
@@ -244,6 +310,14 @@ pub struct TraceSummary {
     pub admission_wait_us: Vec<f64>,
     pub steals: usize,
     pub stolen: u64,
+    /// Lane preemption checkpoints across all sessions.
+    pub preempts: usize,
+    /// Checkpoint resumes across all sessions.
+    pub resumes: usize,
+    /// Slack-ranked multi-item steal passes on the coordinator track.
+    pub steal_scans: usize,
+    /// Requests admitted by those passes.
+    pub scan_admitted: u64,
 }
 
 pub fn summarize(snap: &RecorderSnapshot) -> TraceSummary {
@@ -278,6 +352,8 @@ pub fn summarize(snap: &RecorderSnapshot) -> TraceSummary {
         .collect();
     let mut steals = 0usize;
     let mut stolen = 0u64;
+    let mut steal_scans = 0usize;
+    let mut scan_admitted = 0u64;
     let coord_events = snap.coord.iter();
     let engine_events = snap.sessions.iter().flat_map(|s| s.engine.iter());
     for e in coord_events.chain(engine_events) {
@@ -291,6 +367,10 @@ pub fn summarize(snap: &RecorderSnapshot) -> TraceSummary {
             Event::Steal { n, .. } => {
                 steals += 1;
                 stolen += u64::from(*n);
+            }
+            Event::StealScan { admitted, .. } => {
+                steal_scans += 1;
+                scan_admitted += u64::from(*admitted);
             }
             _ => {}
         }
@@ -309,6 +389,10 @@ pub fn summarize(snap: &RecorderSnapshot) -> TraceSummary {
         admission_wait_us,
         steals,
         stolen,
+        preempts: tls.iter().map(|t| t.preempts.len()).sum(),
+        resumes: tls.iter().map(|t| t.resumes.len()).sum(),
+        steal_scans,
+        scan_admitted,
     }
 }
 
@@ -369,6 +453,10 @@ pub fn summary_json(s: &TraceSummary) -> Json {
         ),
         ("steal_events", Json::num(s.steals as f64)),
         ("requests_stolen", Json::num(s.stolen as f64)),
+        ("lane_preemptions", Json::num(s.preempts as f64)),
+        ("lane_resumes", Json::num(s.resumes as f64)),
+        ("steal_scan_events", Json::num(s.steal_scans as f64)),
+        ("steal_scan_admitted", Json::num(s.scan_admitted as f64)),
     ])
 }
 
@@ -431,6 +519,61 @@ mod tests {
         rec.end_session(sess);
         let tls = lane_timelines(&rec.take_snapshot());
         assert!(check_timeline(&tls[0]).is_err(), "step-index gap must be caught");
+    }
+
+    #[test]
+    fn preemption_gap_reconstructs_and_is_validated() {
+        let rec = FlightRecorder::with_capacity(Sampling::Full, 32, 32);
+        let mut sess = rec.begin_session(0, 2).expect("session");
+        // lane 7: two steps in slot 0, preempted, resumed into slot 1
+        sess.record_admit(0, 7, 1.0);
+        sess.record_step(0, 7, 0, StepMode::Full, true, None, 2.0, 1.0);
+        sess.record_step(0, 7, 1, StepMode::Full, true, None, 3.0, 1.0);
+        sess.record_preempt(0, 7, 2, -4.5, 4.0);
+        sess.record_resume(1, 7, 2, 10.0, 9.0);
+        sess.record_step(1, 7, 2, StepMode::Full, true, None, 10.0, 1.0);
+        sess.record_complete(1, 7, CacheOutcome::Uncached, 3, 3, 12.0);
+        rec.end_session(sess);
+        let snap = rec.take_snapshot();
+        let tls = lane_timelines(&snap);
+        assert_eq!(tls.len(), 1, "one lane across two slots");
+        assert_eq!(tls[0].preempts, vec![(2, 4.0, -4.5)]);
+        assert_eq!(tls[0].resumes, vec![(2, 9.0, 10.0)]);
+        assert_eq!(tls[0].gaps(), vec![(2, 4.0, 9.0)]);
+        check_timeline(&tls[0]).expect("gap timeline is valid");
+        let s = summarize(&snap);
+        assert_eq!((s.preempts, s.resumes), (1, 1));
+        let j = summary_json(&s);
+        assert_eq!(j.get("lane_preemptions").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn check_timeline_rejects_steps_inside_a_gap_and_unbalanced_pairs() {
+        let mk = |step_in_gap: bool, drop_resume: bool| {
+            let rec = FlightRecorder::with_capacity(Sampling::Full, 32, 32);
+            let mut sess = rec.begin_session(0, 1).expect("session");
+            sess.record_admit(0, 3, 1.0);
+            sess.record_step(0, 3, 0, StepMode::Full, true, None, 2.0, 1.0);
+            sess.record_preempt(0, 3, 1, 0.0, 3.0);
+            if step_in_gap {
+                sess.record_step(0, 3, 1, StepMode::Full, true, None, 4.0, 1.0);
+                sess.record_resume(0, 3, 2, 0.0, 6.0);
+                sess.record_step(0, 3, 2, StepMode::Full, true, None, 7.0, 1.0);
+                sess.record_complete(0, 3, CacheOutcome::Uncached, 3, 3, 8.0);
+            } else if !drop_resume {
+                sess.record_resume(0, 3, 1, 0.0, 6.0);
+                sess.record_step(0, 3, 1, StepMode::Full, true, None, 7.0, 1.0);
+                sess.record_complete(0, 3, CacheOutcome::Uncached, 2, 2, 8.0);
+            } else {
+                sess.record_step(0, 3, 1, StepMode::Full, true, None, 7.0, 1.0);
+                sess.record_complete(0, 3, CacheOutcome::Uncached, 2, 2, 8.0);
+            }
+            rec.end_session(sess);
+            lane_timelines(&rec.take_snapshot()).remove(0)
+        };
+        assert!(check_timeline(&mk(true, false)).is_err(), "step inside gap");
+        assert!(check_timeline(&mk(false, true)).is_err(), "preempt without resume");
+        assert!(check_timeline(&mk(false, false)).is_ok());
     }
 
     #[test]

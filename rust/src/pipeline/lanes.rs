@@ -152,6 +152,61 @@ pub struct AdmittedLane {
     pub tag: u64,
 }
 
+/// Live-lane snapshot offered to [`LaneFeeder::plan_preemptions`] each
+/// engine step: enough to rank preemption victims without touching lane
+/// internals.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneStatus {
+    pub tag: u64,
+    /// The occupant's own step index (progress so far).
+    pub step: usize,
+    pub steps: usize,
+    /// Whether the lane is replaying a verified cached plan
+    /// ([`Accelerator::plan_key`] is `Some`) — the cheap-to-pause signal:
+    /// a replaying lane's remaining cost is known and it re-verifies every
+    /// replayed decision, so pausing it can never change its output.
+    pub replaying: bool,
+}
+
+/// A preempted lane, frozen mid-run: everything needed to resume it —
+/// possibly into a different slot, possibly many engine steps later —
+/// with bit-identical results. The live tensors (`x`, `last_out`) move
+/// into arena-checked-out buffers and the solver/accelerator state moves
+/// wholesale, so a checkpoint is a bounded per-event cost, never a copy
+/// of the whole lane history. Opaque by design: feeders park and return
+/// checkpoints, only the engine opens them.
+pub struct LaneCheckpoint {
+    tag: u64,
+    step: usize,
+    steps: usize,
+    req: GenRequest,
+    solver: Box<dyn Solver>,
+    accel: Box<dyn Accelerator>,
+    wants_obs: bool,
+    x: Tensor,
+    last_out: Tensor,
+    has_last: bool,
+    deep: AuxSlot,
+    caches: AuxSlot,
+    stats: RunStats,
+    timer: crate::report::Timer,
+}
+
+impl LaneCheckpoint {
+    pub fn tag(&self) -> u64 {
+        self.tag
+    }
+
+    /// Step index the lane will resume at.
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+}
+
 /// The continuous engine's request source and result sink.
 ///
 /// `admit(free)` is called once per engine step while `free > 0` slots are
@@ -160,9 +215,35 @@ pub struct AdmittedLane {
 /// this step. The engine stops when every slot is idle and `admit` returns
 /// nothing. `complete(tag, result)` delivers a lane's result the step it
 /// finishes — its slot is offered back to `admit` on the next step.
+///
+/// The three preemption hooks are optional (defaults make the engine
+/// preemption-free). Each engine step, before admission, the feeder sees
+/// every active lane through `plan_preemptions` and may name victims by
+/// tag; each victim is checkpointed ([`LaneCheckpoint`]) and handed back
+/// through `preempted`, and its freed slot is offered to `admit` in the
+/// same step. `resume(free)` runs after `admit` each step — urgent new
+/// work outranks parked work — and may return previously-parked
+/// checkpoints to re-install. A feeder must eventually return every
+/// checkpoint it parked: the engine stops when all slots are idle and
+/// both `admit` and `resume` come back empty, and any checkpoint still
+/// parked at that point never completes.
 pub trait LaneFeeder {
     fn admit(&mut self, free: usize) -> Vec<AdmittedLane>;
     fn complete(&mut self, tag: u64, result: GenResult);
+    /// Name lanes to checkpoint this step as `(tag, slack_ms)` — the
+    /// slack is echoed into the flight-recorder `Preempt` event. Unknown
+    /// tags are ignored. Default: never preempt (and `Vec::new()` does
+    /// not allocate, so the default keeps steady-state steps alloc-free).
+    fn plan_preemptions(&mut self, _lanes: &[LaneStatus]) -> Vec<(u64, f64)> {
+        Vec::new()
+    }
+    /// Take ownership of a checkpoint produced by `plan_preemptions`.
+    fn preempted(&mut self, _ckpt: LaneCheckpoint) {}
+    /// Return up to `free` parked checkpoints to resume, each with the
+    /// slack to echo into the `Resume` event.
+    fn resume(&mut self, _free: usize) -> Vec<(LaneCheckpoint, f64)> {
+        Vec::new()
+    }
 }
 
 /// Occupancy accounting for one continuous-engine run.
@@ -176,8 +257,13 @@ pub struct ContinuousStats {
     pub slot_steps: usize,
     /// Lanes admitted over the run.
     pub admitted: usize,
-    /// Lanes completed over the run (equals `admitted` on clean exit).
+    /// Lanes completed over the run (equals `admitted` on clean exit —
+    /// a preempt/resume cycle completes its lane exactly once).
     pub completed: usize,
+    /// Preemption checkpoints taken over the run.
+    pub preempted: usize,
+    /// Checkpoints resumed back into slots over the run.
+    pub resumed: usize,
     /// Wall-clock time of the whole engine run.
     pub wall_ms: f64,
 }
@@ -429,13 +515,54 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
             phase: PhaseAccum::for_session(sess.is_some()),
         };
         let mut stats = ContinuousStats::default();
+        let mut statuses: Vec<LaneStatus> = Vec::with_capacity(capacity);
         // xtask: allow(alloc, end)
 
         let timer = crate::report::Timer::start();
         loop {
+            let mut active = lanes.iter().filter(|l| l.active).count();
+            // preemption: before admission, the feeder sees every live
+            // lane and may checkpoint victims — their slots are offered to
+            // `admit` immediately below, so an urgent queued request takes
+            // over a preempted slot within the same engine step. The
+            // status scan reuses its scratch vector and the default hook
+            // returns an unallocated empty Vec, so a preemption-free run
+            // pays nothing here at steady state.
+            if active > 0 {
+                statuses.clear();
+                for lane in lanes.iter() {
+                    if lane.active {
+                        statuses.push(LaneStatus {
+                            tag: lane.tag,
+                            step: lane.step,
+                            steps: lane.steps,
+                            replaying: lane.accel.plan_key().is_some(),
+                        });
+                    }
+                }
+                // xtask: allow(alloc, begin): preemption event — bounded
+                // per-victim cost (checkpoint assembly, feeder handoff),
+                // never a steady-state step cost
+                for (tag, slack_ms) in feeder.plan_preemptions(&statuses) {
+                    let Some(s) = lanes.iter().position(|l| l.active && l.tag == tag)
+                    else {
+                        continue;
+                    };
+                    if let Some(sess) = sess.as_mut() {
+                        if sess.records_lane(tag) {
+                            let t_us = sess.now_us();
+                            sess.record_preempt(s, tag, lanes[s].step as u32, slack_ms, t_us);
+                        }
+                    }
+                    let ckpt = self.checkpoint_lane(&mut lanes[s]);
+                    feeder.preempted(ckpt);
+                    stats.preempted += 1;
+                    active -= 1;
+                }
+                // xtask: allow(alloc, end)
+            }
             // admission: every step with idle slots offers them to the
             // feeder; admitted lanes step starting this engine step
-            let mut active = lanes.iter().filter(|l| l.active).count();
             if active < capacity {
                 // xtask: allow(alloc, begin): admission event — bounded
                 // per-admitted-lane cost (solver grid, stats vector, feeder
@@ -457,6 +584,32 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                         }
                     }
                     stats.admitted += 1;
+                    active += 1;
+                }
+                // xtask: allow(alloc, end)
+            }
+            // resume: parked checkpoints fill whatever slots fresh
+            // admission left idle (new urgent work outranks parked work)
+            if active < capacity {
+                // xtask: allow(alloc, begin): resume event — bounded
+                // per-checkpoint cost mirroring admission
+                let resumed = feeder.resume(capacity - active);
+                anyhow::ensure!(
+                    resumed.len() <= capacity - active,
+                    "feeder resumed {} lanes into {} free slots",
+                    resumed.len(),
+                    capacity - active
+                );
+                for (c, slack_ms) in resumed {
+                    let (tag, step) = (c.tag, c.step);
+                    let slot = self.restore_lane(&mut lanes, capacity, c)?;
+                    if let Some(s) = sess.as_mut() {
+                        if s.records_lane(tag) {
+                            let t_us = s.now_us();
+                            s.record_resume(slot, tag, step as u32, slack_ms, t_us);
+                        }
+                    }
+                    stats.resumed += 1;
                     active += 1;
                 }
                 // xtask: allow(alloc, end)
@@ -786,6 +939,169 @@ impl<'a, B: ModelBackend> Pipeline<'a, B> {
                     caches,
                     stats,
                     timer: crate::report::Timer::start(),
+                    req,
+                });
+                Ok(lanes.len() - 1)
+            }
+        }
+    }
+
+    /// Freeze an active lane into a [`LaneCheckpoint`] and free its slot.
+    ///
+    /// Called between solver steps, a lane's live state is exactly: the
+    /// current `x`, the previous model output (`last_out`/`has_last`), the
+    /// solver's multistep history, the accelerator's run state, the
+    /// retained aux slots, and the accumulated stats. The two live tensors
+    /// are *swapped* with arena checkouts (no copies: the checkpoint keeps
+    /// the originals, the slot gets standby buffers its next occupant
+    /// fully overwrites) and everything else moves; scratch buffers
+    /// (`x_next`, `m_out`, `x0`, `y`) are written before read every step
+    /// and stay with the slot. Restoring the checkpoint therefore resumes
+    /// the trajectory bit-identically — preemption can change *when* a
+    /// lane steps, never *what* it computes.
+    // Bounded per-preemption-event cost (one dummy solver grid + request,
+    // two warm arena checkouts), never a per-step one.
+    // xtask: allow(alloc): per-preemption-event cost, argued above
+    fn checkpoint_lane(&self, lane: &mut Lane) -> LaneCheckpoint {
+        let standby_x = self.arena.checkout(lane.x.shape());
+        let standby_out = self.arena.checkout(lane.last_out.shape());
+        let ckpt = LaneCheckpoint {
+            tag: lane.tag,
+            step: lane.step,
+            steps: lane.steps,
+            req: std::mem::replace(
+                &mut lane.req,
+                GenRequest {
+                    cond: Tensor::zeros(&[1]),
+                    seed: 0,
+                    guidance: 0.0,
+                    steps: 0,
+                    edge: None,
+                },
+            ),
+            solver: std::mem::replace(
+                &mut lane.solver,
+                build_solver(self.solver_kind, self.schedule(), 1),
+            ),
+            accel: std::mem::replace(&mut lane.accel, Box::new(super::NoAccel)),
+            wants_obs: lane.wants_obs,
+            x: std::mem::replace(&mut lane.x, standby_x),
+            last_out: std::mem::replace(&mut lane.last_out, standby_out),
+            has_last: lane.has_last,
+            deep: std::mem::replace(&mut lane.deep, AuxSlot::new()),
+            caches: std::mem::replace(&mut lane.caches, AuxSlot::new()),
+            stats: std::mem::replace(&mut lane.stats, RunStats::new(String::new(), 0)),
+            timer: lane.timer,
+        };
+        lane.active = false;
+        lane.has_last = false;
+        lane.executed = false;
+        ckpt
+    }
+
+    /// Re-install a checkpointed lane into a free slot (the admission
+    /// counterpart of [`Pipeline::checkpoint_lane`]): the checkpoint's
+    /// live tensors swap back in, the slot's standby buffers return to the
+    /// arena, and the moved solver/accelerator/aux state is installed
+    /// untouched — no RNG re-draw, no accelerator reset, no aux
+    /// invalidation, so the resumed lane continues exactly where it froze.
+    // Bounded per-resume-event cost mirroring admission (cond clone on
+    // shape change at worst), never a per-step one.
+    // xtask: allow(alloc): per-resume-event cost, argued above
+    fn restore_lane(
+        &self,
+        lanes: &mut Vec<Lane>,
+        capacity: usize,
+        c: LaneCheckpoint,
+    ) -> Result<usize> {
+        let LaneCheckpoint {
+            tag,
+            step,
+            steps,
+            req,
+            solver,
+            accel,
+            wants_obs,
+            x,
+            last_out,
+            has_last,
+            deep,
+            caches,
+            stats,
+            timer,
+        } = c;
+        match lanes.iter_mut().position(|l| !l.active) {
+            Some(s) => {
+                let lane = &mut lanes[s];
+                // live tensors swap in; the slot's standby buffers pool
+                self.arena.release(std::mem::replace(&mut lane.x, x));
+                self.arena.release(std::mem::replace(&mut lane.last_out, last_out));
+                // the slot's retained aux buffers go back to the pool and
+                // the checkpoint's (validity bits intact) take their place
+                let mut old_deep = std::mem::replace(&mut lane.deep, deep);
+                let mut old_caches = std::mem::replace(&mut lane.caches, caches);
+                old_deep.retire(&self.arena);
+                old_caches.retire(&self.arena);
+                let cond = match lane.args.cond.take() {
+                    Some(mut cbuf) if cbuf.same_shape(&req.cond) => {
+                        cbuf.copy_from(&req.cond);
+                        Some(cbuf)
+                    }
+                    _ => Some(req.cond.clone()),
+                };
+                lane.args = ModelArgs {
+                    x: lane.args.x.take(),
+                    t: 0.0,
+                    cond,
+                    gs: req.guidance,
+                    edge: req.edge.clone(),
+                    ..Default::default()
+                };
+                lane.solver = solver;
+                lane.accel = accel;
+                lane.wants_obs = wants_obs;
+                lane.stats = stats;
+                lane.has_last = has_last;
+                lane.executed = false;
+                lane.step = step;
+                lane.steps = steps;
+                lane.tag = tag;
+                lane.active = true;
+                lane.timer = timer;
+                lane.req = req;
+                Ok(s)
+            }
+            None => {
+                anyhow::ensure!(lanes.len() < capacity, "no free slot for resumed lane");
+                let shape = x.shape().to_vec();
+                lanes.push(Lane {
+                    active: true,
+                    tag,
+                    step,
+                    steps,
+                    solver,
+                    accel,
+                    wants_obs,
+                    x,
+                    x_next: Tensor::zeros(&shape),
+                    m_out: Tensor::zeros(&shape),
+                    last_out,
+                    has_last,
+                    executed: false,
+                    x0: Tensor::zeros(&shape),
+                    y: Tensor::zeros(&shape),
+                    args: ModelArgs {
+                        x: Some(Tensor::zeros(&shape)),
+                        t: 0.0,
+                        cond: Some(req.cond.clone()),
+                        gs: req.guidance,
+                        edge: req.edge.clone(),
+                        ..Default::default()
+                    },
+                    deep,
+                    caches,
+                    stats,
+                    timer,
                     req,
                 });
                 Ok(lanes.len() - 1)

@@ -15,7 +15,10 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-pub use lanes::{AcceleratorFactory, AdmittedLane, ContinuousStats, LaneFeeder, LaneMode};
+pub use lanes::{
+    AcceleratorFactory, AdmittedLane, ContinuousStats, LaneCheckpoint, LaneFeeder, LaneMode,
+    LaneStatus,
+};
 pub use stats::{CacheOutcome, DegradedCounts, RunStats, StepMode};
 
 pub use crate::runtime::KeepMask;

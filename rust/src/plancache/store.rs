@@ -234,6 +234,16 @@ impl PlanStore {
         self.shard(key).map.get(key).map(|e| e.plan.clone())
     }
 
+    /// Expected fresh NFE of a request whose signature matches `key`: the
+    /// recorded plan's fresh-step count if one is stored, `None` otherwise
+    /// (cold request — the caller assumes the full step count). Read-only
+    /// probe: no LRU touch, no hit/miss accounting, so the slack
+    /// scheduler's cost estimates never perturb cache statistics or
+    /// eviction order.
+    pub fn expected_nfe(&self, key: &RequestKey) -> Option<usize> {
+        self.shard(key).map.get(key).map(|e| e.plan.nfe)
+    }
+
     /// (hits, divergences) recorded against `key`'s current entry.
     pub fn entry_stats(&self, key: &RequestKey) -> Option<(u64, u64)> {
         self.shard(key).map.get(key).map(|e| (e.hits, e.divergences))

@@ -2,6 +2,7 @@
 
 use std::time::{Duration, Instant};
 
+#[derive(Clone, Copy, Debug)]
 pub struct Timer {
     start: Instant,
 }

@@ -429,6 +429,129 @@ fn batched_prune_and_shallow_buckets_are_bit_identical_to_singles() {
 }
 
 #[test]
+fn preempted_and_resumed_lanes_are_bit_identical_to_solo_runs() {
+    // Lane preemption end-to-end: a lane is checkpointed out of a running
+    // engine at a scripted step (its slot handed to the next pending
+    // request), parked for several engine steps, then restored into
+    // whatever slot frees next — possibly a different slot carrying
+    // another request's leftover state. The preempt/park/resume cycle
+    // must be invisible in the output: every lane (the victim included)
+    // matches its sequential solo run bit for bit — image bytes, NFE and
+    // mode trace — for every accelerator on every backend flavor.
+    use sada::pipeline::{AdmittedLane, GenResult, LaneCheckpoint, LaneFeeder, LaneStatus};
+    use std::collections::VecDeque;
+
+    struct PreemptFeeder<'a> {
+        backend: &'a GmBackend,
+        accel: &'a str,
+        pending: VecDeque<GenRequest>,
+        results: Vec<Option<GenResult>>,
+        next_tag: u64,
+        /// Lane tag to preempt, the engine-step count to preempt at, and
+        /// how many engine steps the checkpoint stays parked.
+        victim: u64,
+        preempt_at: usize,
+        park_for: usize,
+        calls: usize,
+        parked: Option<(LaneCheckpoint, usize)>,
+        fired: bool,
+    }
+    impl LaneFeeder for PreemptFeeder<'_> {
+        fn admit(&mut self, free: usize) -> Vec<AdmittedLane> {
+            if free == 0 {
+                return Vec::new();
+            }
+            let Some(req) = self.pending.pop_front() else { return Vec::new() };
+            let steps = req.steps;
+            let tag = self.next_tag;
+            self.next_tag += 1;
+            vec![AdmittedLane { req, accel: accel_for(self.accel, self.backend, steps), tag }]
+        }
+        fn plan_preemptions(&mut self, lanes: &[LaneStatus]) -> Vec<(u64, f64)> {
+            self.calls += 1;
+            if !self.fired
+                && self.calls >= self.preempt_at
+                && lanes.iter().any(|l| l.tag == self.victim && l.step > 0)
+            {
+                self.fired = true;
+                return vec![(self.victim, -1.0)];
+            }
+            Vec::new()
+        }
+        fn preempted(&mut self, ckpt: LaneCheckpoint) {
+            assert_eq!(ckpt.tag(), self.victim, "only the nominated lane is preempted");
+            assert!(ckpt.step() > 0 && ckpt.step() < ckpt.steps(), "mid-flight checkpoint");
+            self.parked = Some((ckpt, self.calls));
+        }
+        fn resume(&mut self, free: usize) -> Vec<(LaneCheckpoint, f64)> {
+            if free == 0 {
+                return Vec::new();
+            }
+            if let Some((ckpt, at)) = self.parked.take() {
+                if self.calls >= at + self.park_for || self.pending.is_empty() {
+                    return vec![(ckpt, 5.0)];
+                }
+                self.parked = Some((ckpt, at));
+            }
+            Vec::new()
+        }
+        fn complete(&mut self, tag: u64, result: GenResult) {
+            if let Some(slot) = self.results.get_mut(tag as usize) {
+                *slot = Some(result);
+            }
+        }
+    }
+
+    for kind in BACKENDS {
+        let backend = backend_for(kind, 47);
+        let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+        let steps = 18;
+        let reqs = reqs_for(5, steps, 477);
+        for (round, accel) in ACCELS.iter().enumerate() {
+            let ctx = format!("preempt {accel} (backend {kind})");
+            let mut feeder = PreemptFeeder {
+                backend: &backend,
+                accel,
+                pending: reqs.clone().into(),
+                results: (0..reqs.len()).map(|_| None).collect(),
+                next_tag: 0,
+                victim: (round as u64) % 2, // alternate which seed lane suffers
+                preempt_at: 4 + round,      // vary the checkpointed step
+                park_for: 5,
+                calls: 0,
+                parked: None,
+                fired: false,
+            };
+            let stats = pipe.generate_continuous(2, &mut feeder).unwrap();
+            assert!(feeder.fired, "{ctx}: the scripted preemption never fired");
+            assert!(feeder.parked.is_none(), "{ctx}: parked checkpoint never resumed");
+            assert_eq!(stats.preempted, 1, "{ctx}: ContinuousStats.preempted");
+            assert_eq!(stats.resumed, 1, "{ctx}: ContinuousStats.resumed");
+            assert_eq!(stats.admitted, reqs.len(), "{ctx}: all requests admitted");
+            assert_eq!(stats.completed, reqs.len(), "{ctx}: all lanes completed");
+            for (k, req) in reqs.iter().enumerate() {
+                let res = feeder.results[k]
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("{ctx}: lane {k} produced no result"));
+                let mut solo = accel_for(accel, &backend, steps);
+                let seq = pipe.generate(req, solo.as_mut()).unwrap();
+                assert_eq!(
+                    res.image.data(),
+                    seq.image.data(),
+                    "{ctx}: lane {k} not bit-identical to solo across preemption"
+                );
+                assert_eq!(res.stats.nfe, seq.stats.nfe, "{ctx}: lane {k} NFE");
+                assert_eq!(
+                    res.stats.mode_trace(),
+                    seq.stats.mode_trace(),
+                    "{ctx}: lane {k} mode trace"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn warm_arena_checkout_release_cycles_allocate_nothing() {
     // once a shape is pooled, checkout/release must be pure recycling —
     // the zero-alloc lane loop depends on this

@@ -32,6 +32,7 @@ fn submit_n(coord: &Coordinator, n: usize, steps: usize, accel: &str) -> mpsc::R
                 accel: accel.into(),
                 slo_ms: None,
                 variant_hint: None,
+                step_budget: None,
                 submitted_at: Instant::now(),
                 reply: tx.clone(),
             })
@@ -106,6 +107,7 @@ fn rejects_unknown_model_without_crashing() {
             accel: "sada".into(),
             slo_ms: None,
             variant_hint: None,
+            step_budget: None,
             submitted_at: Instant::now(),
             reply: tx,
         })
@@ -166,6 +168,7 @@ fn mixed_models_route_to_correct_solvers() {
                 accel: "baseline".into(),
                 slo_ms: None,
                 variant_hint: None,
+                step_budget: None,
                 submitted_at: Instant::now(),
                 reply: tx.clone(),
             })

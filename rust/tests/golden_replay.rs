@@ -118,6 +118,7 @@ fn serving_outputs_bit_identical_across_worker_counts() {
                     accel: "sada".into(),
                     slo_ms: None,
                     variant_hint: None,
+                    step_budget: None,
                     submitted_at: Instant::now(),
                     reply: tx.clone(),
                 })

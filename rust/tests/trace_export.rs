@@ -162,6 +162,146 @@ fn chrome_export_is_valid_ordered_perfetto_input() {
 }
 
 #[test]
+fn preempted_lane_timeline_shows_the_gap_and_reconciles_exactly() {
+    // A preempting feeder rides the recorded engine: lane 0 is
+    // checkpointed mid-flight, parked, and resumed into a freed slot.
+    // The reconstruction must pair the Preempt with the Resume on lane
+    // 0's timeline (same step index, resume strictly later), show NO
+    // step events inside the gap, still validate via check_timeline, and
+    // agree with ContinuousStats' preempted/resumed accounting. The
+    // Chrome export stays strictly ordered with the new instant events.
+    use sada::pipeline::{LaneCheckpoint, LaneStatus};
+
+    struct PreemptingFeeder {
+        pending: VecDeque<(GenRequest, Box<dyn Accelerator>)>,
+        next_tag: u64,
+        done: Vec<(u64, RunStats)>,
+        calls: usize,
+        parked: Option<(LaneCheckpoint, usize)>,
+        fired: bool,
+    }
+    impl LaneFeeder for PreemptingFeeder {
+        fn admit(&mut self, free: usize) -> Vec<AdmittedLane> {
+            if free == 0 {
+                return Vec::new();
+            }
+            let Some((req, accel)) = self.pending.pop_front() else { return Vec::new() };
+            let tag = self.next_tag;
+            self.next_tag += 1;
+            vec![AdmittedLane { req, accel, tag }]
+        }
+        fn plan_preemptions(&mut self, lanes: &[LaneStatus]) -> Vec<(u64, f64)> {
+            self.calls += 1;
+            if !self.fired && self.calls >= 3 && lanes.iter().any(|l| l.tag == 0 && l.step > 0)
+            {
+                self.fired = true;
+                return vec![(0, -2.5)];
+            }
+            Vec::new()
+        }
+        fn preempted(&mut self, ckpt: LaneCheckpoint) {
+            self.parked = Some((ckpt, self.calls));
+        }
+        fn resume(&mut self, free: usize) -> Vec<(LaneCheckpoint, f64)> {
+            if free == 0 {
+                return Vec::new();
+            }
+            if let Some((ckpt, at)) = self.parked.take() {
+                if self.calls >= at + 3 || self.pending.is_empty() {
+                    return vec![(ckpt, 7.5)];
+                }
+                self.parked = Some((ckpt, at));
+            }
+            Vec::new()
+        }
+        fn complete(&mut self, tag: u64, res: GenResult) {
+            self.done.push((tag, res.stats));
+        }
+    }
+
+    let backend = GmBackend::with_batch_buckets(33, &[2, 4]);
+    let mut pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let rec = FlightRecorder::with_capacity(Sampling::Full, 256, 1024);
+    pipe.set_flight_recorder(rec.clone(), 0);
+    let mut rng = sada::rng::Rng::new(777);
+    let mut pending: VecDeque<(GenRequest, Box<dyn Accelerator>)> = VecDeque::new();
+    for _ in 0..4 {
+        let req = GenRequest {
+            cond: Tensor::from_rng(&mut rng, &[1, 32]),
+            seed: rng.below(100_000),
+            guidance: 3.0,
+            steps: 10,
+            edge: None,
+        };
+        pending.push_back((req, Box::new(NoAccel)));
+    }
+    let mut feeder =
+        PreemptingFeeder { pending, next_tag: 0, done: Vec::new(), calls: 0, parked: None, fired: false };
+    let stats = pipe.generate_continuous(2, &mut feeder).unwrap();
+    assert!(feeder.fired, "the scripted preemption never fired");
+    assert_eq!(stats.preempted, 1);
+    assert_eq!(stats.resumed, 1);
+    assert_eq!(stats.completed, 4);
+
+    let snap = rec.take_snapshot();
+    let tls = lane_timelines(&snap);
+    assert_eq!(tls.len(), 4, "cross-slot resume must still yield one timeline per tag");
+    let mut preempts = 0usize;
+    let mut resumes = 0usize;
+    for tl in &tls {
+        check_timeline(tl).unwrap();
+        preempts += tl.preempts.len();
+        resumes += tl.resumes.len();
+        let (_, st) = feeder.done.iter().find(|(t, _)| *t == tl.tag).unwrap();
+        assert_eq!(tl.steps.len(), st.modes.len(), "lane {} ran every step", tl.tag);
+        if tl.tag == 0 {
+            assert_eq!(tl.preempts.len(), 1, "victim carries the Preempt event");
+            assert_eq!(tl.resumes.len(), 1, "victim carries the Resume event");
+            let (p_step, p_us, p_slack) = tl.preempts[0];
+            let (r_step, r_us, r_slack) = tl.resumes[0];
+            assert_eq!(p_step, r_step, "resume picks up at the checkpointed step");
+            assert!(r_us > p_us, "the gap has positive width");
+            assert_eq!(p_slack, -2.5, "queued-urgency slack rides the Preempt event");
+            assert_eq!(r_slack, 7.5, "victim slack rides the Resume event");
+            let gaps = tl.gaps();
+            assert_eq!(gaps.len(), 1);
+            assert!(
+                !tl.steps.iter().any(|s| s.t_us > p_us && s.t_us < r_us),
+                "no step may execute inside the preemption gap"
+            );
+        } else {
+            assert!(tl.preempts.is_empty() && tl.resumes.is_empty());
+        }
+    }
+    assert_eq!(preempts, stats.preempted, "timeline preempts vs ContinuousStats");
+    assert_eq!(resumes, stats.resumed, "timeline resumes vs ContinuousStats");
+
+    // the export stays valid, NaN/Inf-free, strictly ordered per track
+    let doc = chrome_trace(&snap);
+    let text = doc.to_string();
+    assert!(!text.contains("NaN") && !text.contains("inf"), "non-finite JSON");
+    let parsed = Json::parse(&text).expect("export must round-trip");
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut names = Vec::new();
+    let mut last_ts: std::collections::BTreeMap<u64, f64> = Default::default();
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        if ph == "M" {
+            continue;
+        }
+        names.push(e.get("name").unwrap().as_str().unwrap().to_string());
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+        if let Some(prev) = last_ts.get(&tid) {
+            assert!(ts > *prev, "track {tid}: ts {ts} not after {prev}");
+        }
+        last_ts.insert(tid, ts);
+    }
+    assert!(names.iter().any(|n| n == "preempt"), "export carries the preempt instant");
+    assert!(names.iter().any(|n| n == "resume"), "export carries the resume instant");
+}
+
+#[test]
 fn sampled_mode_records_only_matching_tags() {
     let (rec, stats, _) = run_recorded(Sampling::Sampled(2), 6);
     assert_eq!(stats.completed, 6, "sampling never changes execution");

@@ -274,6 +274,116 @@ fn midflight_admission_is_o1_and_steady_steps_allocate_nothing() {
 }
 
 #[test]
+fn preempt_resume_cycle_is_o1_and_steady_steps_allocate_nothing() {
+    // Lane preemption rides the same 4-requests-through-2-slots stream as
+    // midflight_admission_is_o1...: each measured run preempts lane 0
+    // mid-flight, parks its checkpoint for a few engine steps, and
+    // resumes it into the next freed slot. The checkpoint/restore pair is
+    // a bounded per-event cost (standby buffers check out of the warmed
+    // arena, dummy solver/req swap-ins) whose allocation COUNT is
+    // step-count-independent — identical in both runs, so comparing
+    // totals at 12 vs 32 steps isolates the per-step cost. Steady-state
+    // steps with preemption enabled must allocate zero.
+    use sada::pipeline::{AdmittedLane, GenResult, LaneCheckpoint, LaneFeeder, LaneStatus};
+    use std::collections::VecDeque;
+
+    struct PreemptFeeder {
+        pending: VecDeque<GenRequest>,
+        results: Vec<Option<GenResult>>,
+        next_tag: u64,
+        calls: usize,
+        parked: Option<(LaneCheckpoint, usize)>,
+        fired: bool,
+    }
+    impl LaneFeeder for PreemptFeeder {
+        fn admit(&mut self, free: usize) -> Vec<AdmittedLane> {
+            if free == 0 {
+                return Vec::new();
+            }
+            let Some(req) = self.pending.pop_front() else { return Vec::new() };
+            let tag = self.next_tag;
+            self.next_tag += 1;
+            vec![AdmittedLane { req, accel: Box::new(NoAccel), tag }]
+        }
+        fn plan_preemptions(&mut self, lanes: &[LaneStatus]) -> Vec<(u64, f64)> {
+            self.calls += 1;
+            if !self.fired && self.calls >= 4 && lanes.iter().any(|l| l.tag == 0 && l.step > 0)
+            {
+                self.fired = true;
+                return vec![(0, -1.0)];
+            }
+            Vec::new()
+        }
+        fn preempted(&mut self, ckpt: LaneCheckpoint) {
+            self.parked = Some((ckpt, self.calls));
+        }
+        fn resume(&mut self, free: usize) -> Vec<(LaneCheckpoint, f64)> {
+            if free == 0 {
+                return Vec::new();
+            }
+            if let Some((ckpt, at)) = self.parked.take() {
+                if self.calls >= at + 3 || self.pending.is_empty() {
+                    return vec![(ckpt, 1.0)];
+                }
+                self.parked = Some((ckpt, at));
+            }
+            Vec::new()
+        }
+        fn complete(&mut self, tag: u64, result: GenResult) {
+            if let Some(slot) = self.results.get_mut(tag as usize) {
+                *slot = Some(result);
+            }
+        }
+    }
+
+    let backend = GmBackend::with_batch_buckets(17, &[2, 4]);
+    let pipe = Pipeline::new(&backend, SolverKind::DpmPP);
+    let feeder_for = |steps: usize| PreemptFeeder {
+        pending: reqs_for(4, steps, 907).into(),
+        results: (0..4).map(|_| None).collect(),
+        next_tag: 0,
+        calls: 0,
+        parked: None,
+        fired: false,
+    };
+
+    // warm every pool, the checkpoint standby-buffer shapes included
+    {
+        let mut f = feeder_for(12);
+        let stats = pipe.generate_continuous(2, &mut f).unwrap();
+        assert_eq!(stats.preempted, 1);
+        assert_eq!(stats.resumed, 1);
+    }
+
+    let run = |steps: usize| -> u64 {
+        let mut f = feeder_for(steps);
+        let before = thread_allocs();
+        let stats = pipe.generate_continuous(2, &mut f).unwrap();
+        let after = thread_allocs();
+        assert_eq!(stats.admitted, 4, "feeder must stream all requests in");
+        assert_eq!(stats.completed, 4);
+        assert_eq!(stats.preempted, 1, "the scripted preemption must fire");
+        assert_eq!(stats.resumed, 1, "the parked checkpoint must resume");
+        assert!(
+            f.results
+                .iter()
+                .all(|r| r.as_ref().is_some_and(|g| g.stats.nfe == steps)),
+            "every lane must run its full solo trajectory"
+        );
+        after - before
+    };
+    let short = run(12);
+    let long = run(32);
+    assert_eq!(
+        long,
+        short,
+        "preemption-enabled steady state must allocate nothing: 20 extra steps \
+         cost {} allocation(s)",
+        long.saturating_sub(short)
+    );
+}
+
+#[test]
 fn full_recorder_steady_steps_allocate_nothing() {
     // The flight recorder in `full` mode rides the same continuous run as
     // midflight_admission_is_o1...: every lane step now also records a
